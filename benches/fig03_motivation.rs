@@ -1,0 +1,92 @@
+//! Fig. 3 reproduction: bandwidth utilization of state-of-the-art
+//! stencil libraries on GPU (A100) and this CPU across the eight
+//! Table-I kernels.
+//!
+//! The GPU series are the utilizations the paper's motivation experiment
+//! reports (we have no A100; DESIGN.md §3 keeps them as the reference
+//! series).  The CPU series — compiler baseline, hand-SIMD, MMStencil —
+//! come from our simulated platform model.  The claims this figure
+//! carries: (1) tensor-core libraries do not beat CUDA-core libraries,
+//! (2) every library degrades on 3D high-order patterns (compiler 2.25×,
+//! SIMD 1.80×, BrickLib 1.70×, EBISU 1.65× from r1→r4 3D star),
+//! (3) MMStencil holds utilization flat where others fall.
+//!
+//! Run with: `cargo bench --bench fig03_motivation`
+
+use mmstencil::simulator::roofline::{engine_cfg, predict, Engine, MemKind};
+use mmstencil::simulator::Platform;
+use mmstencil::stencil::StencilSpec;
+use mmstencil::util::table::{f, Table};
+
+/// Paper-reported Fig. 3 utilizations (fractions of peak BW) on A100.
+/// Tensor-core libraries (TCStencil half precision, ConvStencil,
+/// LoRAStencil) vs CUDA-core (BrickLib, EBISU).  3DStarR2 entries use
+/// the libraries' 3DStarR1 kernels (paper: "we evaluate 3DStarR1 in
+/// place of 3DStarR2").
+fn gpu_reference(kernel: &str) -> [(&'static str, f64); 5] {
+    let (tc, conv, lora, brick, ebisu) = match kernel {
+        "2DStarR2" => (0.38, 0.33, 0.52, 0.60, 0.72),
+        "2DStarR4" => (0.32, 0.30, 0.48, 0.55, 0.68),
+        "2DBoxR2" => (0.35, 0.28, 0.50, 0.58, 0.66),
+        "2DBoxR3" => (0.30, 0.24, 0.44, 0.52, 0.60),
+        "3DStarR2" => (0.22, 0.20, 0.25, 0.58, 0.62),
+        "3DStarR4" => (0.15, 0.14, 0.16, 0.34, 0.38),
+        "3DBoxR1" => (0.20, 0.18, 0.22, 0.48, 0.52),
+        "3DBoxR2" => (0.12, 0.10, 0.13, 0.26, 0.30),
+        _ => (0.0, 0.0, 0.0, 0.0, 0.0),
+    };
+    [
+        ("TCStencil", tc),
+        ("ConvStencil", conv),
+        ("LoRAStencil", lora),
+        ("BrickLib", brick),
+        ("EBISU", ebisu),
+    ]
+}
+
+fn main() {
+    let p = Platform::paper();
+    println!("Fig. 3 — Bandwidth Utilization of State-of-the-arts\n");
+    let mut t = Table::new(&[
+        "kernel", "TCStencil*", "ConvStencil*", "LoRAStencil*", "BrickLib*", "EBISU*",
+        "CPU compiler", "CPU SIMD", "MMStencil",
+    ]);
+    for (name, spec) in StencilSpec::benchmark_suite() {
+        let n = if spec.ndim == 3 { 512usize.pow(3) } else { 8192usize.pow(2) };
+        let gpu = gpu_reference(name);
+        let cpu: Vec<f64> = [Engine::Compiler, Engine::Simd, Engine::MMStencil]
+            .iter()
+            .map(|&e| predict(&spec, n, e, engine_cfg(e, MemKind::OnPkg), &p).bandwidth_util)
+            .collect();
+        t.row(&[
+            name.to_string(),
+            f(gpu[0].1, 2), f(gpu[1].1, 2), f(gpu[2].1, 2), f(gpu[3].1, 2), f(gpu[4].1, 2),
+            f(cpu[0], 2), f(cpu[1], 2), f(cpu[2], 2),
+        ]);
+    }
+    t.print();
+    println!("\n* GPU columns: paper-reported reference series (no A100 in this testbed)");
+
+    // ---- the three motivation claims, asserted --------------------------
+    let util = |name: &str, e: Engine| {
+        let spec = StencilSpec::by_name(name).unwrap();
+        let n = if spec.ndim == 3 { 512usize.pow(3) } else { 8192usize.pow(2) };
+        predict(&spec, n, e, engine_cfg(e, MemKind::OnPkg), &p).bandwidth_util
+    };
+    // (1) tensor-core libs below CUDA-core libs everywhere (reference data)
+    for (name, _) in StencilSpec::benchmark_suite() {
+        let g = gpu_reference(name);
+        assert!(g[0].1.max(g[1].1).max(g[2].1) <= g[3].1.max(g[4].1), "{name}: TC beats CUDA?");
+    }
+    // (2) high-order degradation of the scalar CPU engines (proxy for the
+    //     r1→r4 slowdowns; we compare r2→r4 3D star)
+    let comp_drop = util("3DStarR2", Engine::Compiler) / util("3DStarR4", Engine::Compiler);
+    let simd_drop = util("3DStarR2", Engine::Simd) / util("3DStarR4", Engine::Simd);
+    println!("compiler util drop 3DStar r2→r4: {comp_drop:.2}× (paper r1→r4: 2.25×)");
+    println!("SIMD util drop 3DStar r2→r4: {simd_drop:.2}× (paper r1→r4: 1.80×)");
+    assert!(comp_drop > simd_drop, "compiler must degrade faster than SIMD");
+    // (3) MMStencil holds utilization on high-order patterns
+    let mm_drop = util("3DStarR2", Engine::MMStencil) / util("3DStarR4", Engine::MMStencil);
+    println!("MMStencil util drop 3DStar r2→r4: {mm_drop:.2}× (paper: high-order is FASTER)");
+    assert!(mm_drop <= 1.0, "MMStencil must not degrade at high order");
+}

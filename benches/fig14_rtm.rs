@@ -1,0 +1,101 @@
+//! Fig. 14 reproduction: RTM performance on VTI and TTI media, single
+//! NUMA node, vs the industrially-optimized SIMD CPU baseline and the
+//! A100 GPU implementation.
+//!
+//! REAL layer: complete (small) RTM shots run on this host — forward +
+//! backward + imaging — for both media, checked for stability and a
+//! non-trivial image.  SIM layer: the paper-grid (512×512×256 CPU,
+//! 512³ GPU) projection.
+//!
+//! Paper anchors asserted: VTI 47% bandwidth utilization and 2.00× vs
+//! SIMD; TTI 27.35% utilization (intermediate spill) and 2.06× vs SIMD;
+//! VTI beats the A100's bandwidth efficiency by ~23%.
+//!
+//! Run with: `cargo bench --bench fig14_rtm`
+
+use mmstencil::rtm::driver::{run_shot, simulate_step, Medium, RtmConfig};
+use mmstencil::simulator::roofline::Engine;
+use mmstencil::simulator::Platform;
+use mmstencil::util::table::{f, Table};
+
+/// A100 RTM reference: the industrial CUDA kernels sustain ~38% of
+/// 1955 GB/s on the VTI propagator (derived from the paper's "23.2%
+/// better bandwidth efficiency" at our 47%), ~27% on TTI (paper: "on
+/// par with CUDA").
+fn a100_step_time(cells: usize, medium: Medium) -> f64 {
+    let eff = match medium {
+        Medium::Vti => 0.47 / 1.232,
+        Medium::Tti => 0.2735,
+    };
+    let sweeps = mmstencil::rtm::driver::equiv_sweeps(medium);
+    cells as f64 * 8.0 * sweeps / (eff * Platform::a100_bw())
+}
+
+fn main() {
+    let p = Platform::paper();
+
+    // ---- REAL shots -------------------------------------------------------
+    println!("real RTM shots on this host (32³, 60 steps):");
+    for medium in [Medium::Vti, Medium::Tti] {
+        let mut cfg = RtmConfig::small(medium);
+        cfg.nz = 32;
+        cfg.nx = 32;
+        cfg.ny = 32;
+        cfg.steps = 60;
+        cfg.threads = 2;
+        let (image, rep) = run_shot(&cfg, &p);
+        println!(
+            "  {medium:?}: fwd {:.2}s bwd {:.2}s, {:.0} Mpoint/s, image energy {:.2e} ({} correlations)",
+            rep.forward_s, rep.backward_s, rep.gpoints_per_s / 1e6, rep.image_energy, image.correlations
+        );
+        assert!(rep.energy_trace.iter().all(|e| e.is_finite()), "{medium:?} unstable");
+        assert!(rep.image_energy > 0.0, "{medium:?}: no image");
+    }
+
+    // ---- SIM at paper scale ------------------------------------------------
+    // paper grids: CPU (512,512,256) — on-package capacity bound; one NUMA
+    println!("\nFig. 14 — RTM on the paper platform, single NUMA (sim, 512×512×256):");
+    let mut t = Table::new(&[
+        "medium", "MMStencil step ms", "SIMD step ms", "speedup", "(paper)",
+        "util %", "(paper)", "A100 step ms*", "vs A100 util",
+    ]);
+    for medium in [Medium::Vti, Medium::Tti] {
+        let mut cfg = RtmConfig::small(medium);
+        cfg.nz = 256;
+        cfg.nx = 512;
+        cfg.ny = 512;
+        let (mm_t, mm_u) = simulate_step(&cfg, Engine::MMStencil, &p);
+        let (simd_t, _) = simulate_step(&cfg, Engine::Simd, &p);
+        let speedup = simd_t / mm_t;
+        let (paper_speedup, paper_util) = match medium {
+            Medium::Vti => (2.00, 0.47),
+            Medium::Tti => (2.06, 0.2735),
+        };
+        // A100 runs 512³ (paper) — compare per-cell efficiency
+        let a100 = a100_step_time(512 * 512 * 512, medium);
+        let a100_util = match medium {
+            Medium::Vti => 0.47 / 1.232,
+            Medium::Tti => 0.2735,
+        };
+        t.row(&[
+            format!("{medium:?}"),
+            f(mm_t * 1e3, 2), f(simd_t * 1e3, 2),
+            format!("{speedup:.2}x"), format!("{paper_speedup:.2}x"),
+            f(mm_u * 100.0, 1), f(paper_util * 100.0, 1),
+            f(a100 * 1e3, 2),
+            format!("{:+.1}%", (mm_u / a100_util - 1.0) * 100.0),
+        ]);
+        assert!((speedup / paper_speedup - 1.0).abs() < 0.25, "{medium:?}: speedup {speedup:.2} vs paper {paper_speedup}");
+        match medium {
+            Medium::Vti => {
+                assert!((0.35..0.70).contains(&mm_u), "VTI util {mm_u:.2} (paper 0.47)");
+                assert!(mm_u > a100_util, "VTI must beat A100 bandwidth efficiency");
+            }
+            Medium::Tti => {
+                assert!((0.2..0.62).contains(&mm_u), "TTI util {mm_u:.2} (paper 0.2735)");
+            }
+        }
+    }
+    t.print();
+    println!("\n* A100 grid is 512³ (80 GB on-package fits the full model; paper setup)");
+}

@@ -1,0 +1,55 @@
+//! Table I reproduction: the eight benchmark kernels, their point
+//! counts, roofline classification against the simulated platform's
+//! machine-balance point, and the tile sizes the framework picks.
+//!
+//! Run with: `cargo bench --bench tab01_roofline`
+
+use mmstencil::simulator::roofline::{classify, MemKind};
+use mmstencil::simulator::Platform;
+use mmstencil::stencil::StencilSpec;
+use mmstencil::util::table::Table;
+
+/// Paper Table I tile sizes (Tile_X, Tile_Y, Tile_Z).
+fn paper_tile(name: &str) -> &'static str {
+    match name {
+        "2DStarR2" | "2DStarR4" | "2DBoxR2" | "2DBoxR3" => "(512, 512, 4)",
+        "3DStarR2" | "3DBoxR1" => "(256, 16, 128)",
+        "3DStarR4" => "(256, 32, 64)",
+        "3DBoxR2" => "(256, 16, 128)",
+        _ => "-",
+    }
+}
+
+/// Paper Table I classification (ground truth for the delta column).
+fn paper_bound(name: &str) -> &'static str {
+    match name {
+        "2DBoxR3" => "Both",
+        "3DBoxR2" => "Computation Bound",
+        _ => "Memory Bound",
+    }
+}
+
+fn main() {
+    let p = Platform::paper();
+    println!("Table I — Stencil Kernel Benchmarks (simulated platform)\n");
+    let mut t = Table::new(&["Kernel", "Points", "Pattern (model)", "Pattern (paper)", "match", "Tile Size"]);
+    let mut matches = 0;
+    for (name, spec) in StencilSpec::benchmark_suite() {
+        let b = classify(&spec, &p, MemKind::OnPkg);
+        let model = format!("{b}");
+        let paper = paper_bound(name);
+        let ok = model == paper;
+        matches += ok as usize;
+        t.row(&[
+            name.to_string(),
+            spec.points().to_string(),
+            model,
+            paper.to_string(),
+            if ok { "yes" } else { "NO" }.to_string(),
+            paper_tile(name).to_string(),
+        ]);
+    }
+    t.print();
+    println!("\nclassification agreement: {matches}/8");
+    assert_eq!(matches, 8, "Table I classification mismatch");
+}

@@ -1,0 +1,134 @@
+//! Multi-NUMA scaling experiment (paper §V-E, Fig. 13).
+//!
+//! Decomposes a periodic 3DStarR4 sweep across simulated NUMA-domain
+//! ranks, runs the REAL data path (scatter → halo exchange → per-rank
+//! sweep → gather) on this host, and attaches the simulated platform's
+//! timing for MPI vs SDMA vs SDMA+pipeline — then prints the strong and
+//! weak scaling tables with the A100/BrickLib reference series.
+//!
+//! Run with: `cargo run --release --example multi_numa_scaling`
+
+use mmstencil::coordinator::driver::multirank_sweep;
+use mmstencil::coordinator::exchange::Backend;
+use mmstencil::grid::{CartDecomp, Grid3};
+use mmstencil::simulator::roofline::{self, Engine, MemKind, SweepConfig};
+use mmstencil::simulator::Platform;
+use mmstencil::stencil::{naive, StencilSpec};
+use mmstencil::util::table::{f, Table};
+
+/// A100/BrickLib reference: elapsed time for one 3DStarR4 sweep of
+/// `cells` points.  BrickLib sustains ~46% of the A100's 1955 GB/s on
+/// this kernel (paper Fig. 3) → ~0.9 TB/s effective.
+fn bricklib_a100_time(cells: usize) -> f64 {
+    let eff_bw = 0.46 * Platform::a100_bw();
+    cells as f64 * 8.0 / eff_bw
+}
+
+fn main() {
+    let spec = StencilSpec::star3d(4);
+    let p = Platform::paper();
+    let threads = 4;
+    let n = 48; // host-side verification grid (sim numbers scale to 512³)
+
+    // verification run: decomposed result must equal the naive sweep
+    let g = Grid3::random(n, n, n, 11);
+    let want = naive::apply3(&spec, &g);
+    let d = CartDecomp::new(2, 2, 2);
+    let (got, _) = multirank_sweep(&spec, &g, &d, &Backend::sdma(), 1, threads, &p);
+    let err = got.max_abs_diff(&want);
+    println!("8-rank decomposed sweep vs naive @ {n}³: max|Δ| = {err:.2e}");
+    assert!(err < 1e-3);
+
+    // ---- strong scaling: fixed 512³ global grid --------------------------
+    let global = 512usize * 512 * 512;
+    println!("\nSTRONG scaling, 3DStarR4, 512³ global (simulated platform):");
+    let mut t = Table::new(&["ranks", "MPI ms", "SDMA ms", "SDMA+pipe ms", "speedup vs 1", "A100 BrickLib ms"]);
+    let base = sim_step(&spec, global, 1, &p).0;
+    for ranks in [1usize, 2, 4, 8] {
+        let (mpi, sdma, pipe) = sim_step(&spec, global, ranks, &p);
+        t.row(&[
+            ranks.to_string(),
+            f(mpi * 1e3, 2),
+            f(sdma * 1e3, 2),
+            f(pipe * 1e3, 2),
+            format!("{:.2}×", base / pipe),
+            f(bricklib_a100_time(global) * 1e3, 2),
+        ]);
+    }
+    t.print();
+
+    // ---- weak scaling: 512³ per rank --------------------------------------
+    println!("\nWEAK scaling, 3DStarR4, 512³ per rank (simulated platform):");
+    let mut t = Table::new(&["ranks", "MPI ms", "SDMA ms", "SDMA+pipe ms", "efficiency", "A100/rank ms"]);
+    let per_rank = 512usize * 512 * 512;
+    let base_pipe = sim_step(&spec, per_rank, 1, &p).2;
+    for ranks in [1usize, 2, 4, 8, 16] {
+        let (mpi, sdma, pipe) = sim_step_weak(&spec, per_rank, ranks, &p);
+        t.row(&[
+            ranks.to_string(),
+            f(mpi * 1e3, 2),
+            f(sdma * 1e3, 2),
+            f(pipe * 1e3, 2),
+            format!("{:.0}%", base_pipe / pipe * 100.0),
+            f(bricklib_a100_time(per_rank) * 1e3, 2),
+        ]);
+    }
+    t.print();
+    println!("\n(paper: SDMA near-ideal to 4 ranks; x-direction comm stalls 8-rank\n strong scaling unless pipelined; ≥1.2–2.1× over BrickLib/A100 weak.)");
+}
+
+/// Simulated per-step times (MPI, SDMA, SDMA+pipeline) for `ranks`
+/// partitions of a `global`-point grid (strong scaling).
+fn sim_step(spec: &StencilSpec, global: usize, ranks: usize, p: &Platform) -> (f64, f64, f64) {
+    scaled_step(spec, global / ranks, ranks, 512, p)
+}
+
+fn sim_step_weak(spec: &StencilSpec, per_rank: usize, ranks: usize, p: &Platform) -> (f64, f64, f64) {
+    scaled_step(spec, per_rank, ranks, 512, p)
+}
+
+/// Analytic per-step model mirroring `coordinator::driver::multirank_sweep`
+/// accounting at paper scale: per-rank compute from the roofline and face
+/// traffic through the two transport models, pipelined over 8 z-layers.
+fn scaled_step(spec: &StencilSpec, rank_cells: usize, ranks: usize, edge: usize, p: &Platform) -> (f64, f64, f64) {
+    use mmstencil::coordinator::pipeline::{equal_layers, step_time, Overlap};
+    use mmstencil::simulator::{mpi::MpiModel, sdma::Sdma};
+
+    let est = roofline::predict(spec, rank_cells, Engine::MMStencil, SweepConfig::best(MemKind::OnPkg), p);
+    // Cartesian split: count cut planes; each rank exchanges 2 faces per
+    // cut axis of edge² cells × radius depth
+    let cuts = match ranks {
+        1 => (0, 0, 0),
+        2 => (1, 0, 0),        // z only (contiguous)
+        4 => (1, 1, 0),        // z + x
+        8 => (1, 1, 1),        // all three (incl. strided y/X-direction)
+        16 => (2, 1, 1),
+        _ => (1, 1, 1),
+    };
+    let face_cells = edge * edge * spec.radius;
+    let bytes = |n_faces: usize| (n_faces * 2 * face_cells * 4) as u64;
+    let total_faces = cuts.0 + cuts.1 + cuts.2;
+    if total_faces == 0 {
+        return (est.time_s, est.time_s, est.time_s);
+    }
+    // run lengths by axis (z faces contiguous slabs, x faces row-runs,
+    // y faces element-runs — the paper's X-direction worst case)
+    let sdma = Sdma::default();
+    let mpi = MpiModel::default();
+    let runs = [edge * edge * 4, edge * 4, spec.radius * 4];
+    let mut sdma_s = 0.0;
+    let mut mpi_s = 0.0;
+    for (i, &c) in [cuts.0, cuts.1, cuts.2].iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        let b = bytes(c);
+        let desc = mmstencil::simulator::sdma::CopyDesc { bytes: b, run_bytes: runs[i] as u64 };
+        sdma_s += b as f64 / sdma.bandwidth(desc);
+        mpi_s += mpi.transfer_time_s(b, runs[i] as u64);
+    }
+    let (comp_l, comm_l) = equal_layers(est.time_s, sdma_s, 8);
+    let (sdma_step, pipe_step) = step_time(&comp_l, &comm_l, Overlap::Concurrent);
+    let _ = sdma_step;
+    (est.time_s + mpi_s, est.time_s + sdma_s, pipe_step)
+}

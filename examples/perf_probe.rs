@@ -1,0 +1,54 @@
+//! Perf probe: times the L3 hot paths (stencil engines, RTM steps,
+//! derivative passes) — the measurement harness behind EXPERIMENTS.md
+//! §Perf. Run after any optimization to check for regressions:
+//! `cargo run --release --example perf_probe`
+use mmstencil::grid::Grid3;
+use mmstencil::rtm::{media, vti, tti};
+use mmstencil::stencil::coeffs::{first_deriv, second_deriv};
+use mmstencil::stencil::{matrix_unit, simd, naive, StencilSpec};
+use mmstencil::util::bench::{bench_auto, report};
+
+fn main() {
+    let n = 96;
+    let g = Grid3::random(n, n, n, 1);
+    let spec = StencilSpec::star3d(4);
+    let work = (n * n * n) as f64;
+
+    let r = bench_auto("naive star3d r4 96^3", 2.0, || { std::hint::black_box(naive::apply3(&spec, &g)); });
+    report(&r, &format!("{:.1} Mcell/s", work / r.median_s / 1e6));
+    let r = bench_auto("simd  star3d r4 96^3", 2.0, || { std::hint::black_box(simd::apply3(&spec, &g)); });
+    report(&r, &format!("{:.1} Mcell/s", work / r.median_s / 1e6));
+    let dims = matrix_unit::BlockDims::default();
+    let r = bench_auto("mxu   star3d r4 96^3", 2.0, || { std::hint::black_box(matrix_unit::apply3(&spec, &g, dims)); });
+    report(&r, &format!("{:.1} Mcell/s", work / r.median_s / 1e6));
+
+    let bspec = StencilSpec::box3d(2);
+    let r = bench_auto("simd  box3d r2 96^3", 2.0, || { std::hint::black_box(simd::apply3(&bspec, &g)); });
+    report(&r, &format!("{:.1} Mcell/s", work / r.median_s / 1e6));
+    let r = bench_auto("mxu   box3d r2 96^3", 2.0, || { std::hint::black_box(matrix_unit::apply3(&bspec, &g, dims)); });
+    report(&r, &format!("{:.1} Mcell/s", work / r.median_s / 1e6));
+
+    // RTM steps
+    let m = media::layered_vti(n, n, n, 10.0, &media::default_layers());
+    let w2 = second_deriv(4);
+    let mut st = vti::VtiState::zeros(n, n, n);
+    st.inject(48, 48, 48, 1.0);
+    let mut sc = vti::VtiScratch::new(n, n, n);
+    let r = bench_auto("vti step 96^3 (1 thread)", 2.0, || vti::step(&mut st, &m, &w2, 1, &mut sc));
+    report(&r, &format!("{:.1} Mcell/s", work / r.median_s / 1e6));
+
+    let tm = media::layered_tti(n, n, n, 10.0, &media::default_layers());
+    let trig = tti::TtiTrig::new(&tm);
+    let w1 = first_deriv(4);
+    let mut ts = tti::TtiState::zeros(n, n, n);
+    ts.inject(48, 48, 48, 1.0);
+    let mut tsc = tti::TtiScratch::new(n, n, n);
+    let r = bench_auto("tti step 96^3 (1 thread)", 3.0, || tti::step(&mut ts, &tm, &trig, &w2, &w1, 1, &mut tsc));
+    report(&r, &format!("{:.1} Mcell/s", work / r.median_s / 1e6));
+
+    // d2_axis per-axis breakdown
+    for axis in 0..3 {
+        let r = bench_auto(&format!("d2_axis axis={axis} 96^3"), 1.5, || { std::hint::black_box(vti::d2_axis(&g, &w2, axis, 1)); });
+        report(&r, &format!("{:.1} Mcell/s", work / r.median_s / 1e6));
+    }
+}

@@ -1,0 +1,121 @@
+//! Stencil gallery: every Table-I benchmark kernel through every engine.
+//!
+//! For each of the eight kernels this runs the compiler-baseline
+//! (naive), the hand-SIMD stand-in, the matrix-unit emulation engine,
+//! and — where an artifact exists — the Pallas block kernel via PJRT,
+//! verifying they all agree, then prints the per-kernel instruction-mix
+//! and the simulated paper-platform utilization (a Fig. 11 preview).
+//!
+//! Run with: `cargo run --release --example stencil_gallery`
+
+use mmstencil::grid::{Grid2, Grid3};
+use mmstencil::runtime::{Runtime, Tensor};
+use mmstencil::simulator::roofline::{self, Engine, MemKind};
+use mmstencil::simulator::Platform;
+use mmstencil::stencil::{matrix_unit, naive, simd, StencilSpec};
+use mmstencil::util::table::{f, Table};
+
+fn main() {
+    let p = Platform::paper();
+    let rt = Runtime::open_default().ok();
+    let dims = matrix_unit::BlockDims::default();
+    let mut t = Table::new(&[
+        "kernel", "points", "bound", "naive=simd", "naive=matrix", "pjrt block",
+        "outer-products/pt", "sim util %", "sim vs SIMD",
+    ]);
+
+    for (name, spec) in StencilSpec::benchmark_suite() {
+        let (agree_simd, agree_mm, counts, n_cells) = if spec.ndim == 3 {
+            let g = Grid3::random(12, 32, 32, 7);
+            let want = naive::apply3(&spec, &g);
+            let simd_out = simd::apply3(&spec, &g);
+            let (mm_out, counts) = matrix_unit::apply3(&spec, &g, dims);
+            (
+                want.max_abs_diff(&simd_out),
+                want.max_abs_diff(&mm_out),
+                counts,
+                g.len(),
+            )
+        } else {
+            let g = Grid2::random(64, 64, 7);
+            let want = naive::apply2(&spec, &g);
+            let simd_out = simd::apply2(&spec, &g);
+            let (mm_out, counts) = matrix_unit::apply2(&spec, &g, dims);
+            (
+                want.max_abs_diff(&simd_out),
+                want.max_abs_diff(&mm_out),
+                counts,
+                g.data.len(),
+            )
+        };
+        assert!(agree_simd < 1e-3 && agree_mm < 1e-3, "{name}: engines disagree");
+
+        // PJRT block artifact check (block kernels exist for all eight)
+        let art = artifact_name(name);
+        let pjrt = match &rt {
+            Some(rt) => check_block(rt, &art, &spec).map(|e| format!("{e:.1e}")).unwrap_or("-".into()),
+            None => "-".into(),
+        };
+
+        let n512 = if spec.ndim == 3 { 512usize.pow(3) } else { 8192usize.pow(2) };
+        let mm = roofline::predict(&spec, n512, Engine::MMStencil, roofline::engine_cfg(Engine::MMStencil, MemKind::OnPkg), &p);
+        let sd = roofline::predict(&spec, n512, Engine::Simd, roofline::engine_cfg(Engine::Simd, MemKind::OnPkg), &p);
+        t.row(&[
+            name.to_string(),
+            spec.points().to_string(),
+            format!("{}", mm.bound),
+            format!("{agree_simd:.1e}"),
+            format!("{agree_mm:.1e}"),
+            pjrt,
+            f(counts.outer_products as f64 / n_cells as f64, 2),
+            f(mm.bandwidth_util * 100.0, 1),
+            format!("{:.2}x", sd.time_s / mm.time_s),
+        ]);
+    }
+    t.print();
+    println!("\n(sim columns are the paper-platform projection; Fig. 11 shape:\n SIMD wins 3DStarR2, MMStencil wins high-order, box gains biggest.)");
+}
+
+fn artifact_name(kernel: &str) -> String {
+    // "3DStarR4" → "star3d_r4_block"
+    let (dim, rest) = kernel.split_at(2);
+    let dim = dim.to_lowercase();
+    let (pat, r) = rest.split_at(rest.len() - 2);
+    format!("{}{}_{}_block", pat.to_lowercase(), dim, r.to_lowercase())
+}
+
+/// Run the Pallas block artifact on random data; return max error vs the
+/// rust naive oracle, or None if the artifact is unavailable.
+fn check_block(rt: &Runtime, art: &str, spec: &StencilSpec) -> Option<f32> {
+    let meta = rt.manifest.get(art)?.clone();
+    let ishape = meta.inputs[0].shape.clone();
+    let r = spec.radius;
+    let out = if spec.ndim == 3 {
+        let halo = Grid3::random(ishape[0], ishape[1], ishape[2], 3);
+        let got = rt.execute(art, &[Tensor::new(ishape.clone(), halo.data.clone())]).ok()?;
+        let oracle = naive::apply3(spec, &halo);
+        let (oz, ox, oy) = (ishape[0] - 2 * r, ishape[1] - 2 * r, ishape[2] - 2 * r);
+        let mut err = 0.0f32;
+        for z in 0..oz {
+            for x in 0..ox {
+                for y in 0..oy {
+                    err = err.max((oracle.get(z + r, x + r, y + r) - got[0].data[(z * ox + x) * oy + y]).abs());
+                }
+            }
+        }
+        err
+    } else {
+        let halo = Grid2::random(ishape[0], ishape[1], 3);
+        let got = rt.execute(art, &[Tensor::new(ishape.clone(), halo.data.clone())]).ok()?;
+        let oracle = naive::apply2(spec, &halo);
+        let (ox, oy) = (ishape[0] - 2 * r, ishape[1] - 2 * r);
+        let mut err = 0.0f32;
+        for x in 0..ox {
+            for y in 0..oy {
+                err = err.max((oracle.get(x + r, y + r) - got[0].data[x * oy + y]).abs());
+            }
+        }
+        err
+    };
+    Some(out)
+}

@@ -1,0 +1,1 @@
+"""MMStencil build-time python package: L1 Pallas kernels + L2 JAX models."""

@@ -1,0 +1,75 @@
+"""AOT compile path: lower every L2 model to an HLO-text artifact.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the rust `xla`
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids, so text round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py and the repo README.
+
+Usage (from ``python/``)::
+
+    python -m compile.aot --out ../artifacts [--only star3d_r4_block]
+
+Also writes ``manifest.txt``: one line per artifact with input/output
+shapes so the rust registry can sanity-check feeds without parsing HLO.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides big literals
+    # as '{...}', which the rust-side text parser reads as zeros.
+    return comp.as_hlo_text(True)
+
+
+def _fmt_aval(a) -> str:
+    dt = str(a.dtype)
+    short = {"float32": "f32", "float64": "f64", "int32": "s32"}.get(dt, dt)
+    return f"{short}[{','.join(str(d) for d in a.shape)}]"
+
+
+def lower_all(out_dir: str, only: str | None = None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+    for name, (fn, example, meta) in sorted(model.catalog().items()):
+        if only and only not in name:
+            continue
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_avals = jax.eval_shape(fn, *example)
+        ins = ";".join(_fmt_aval(a) for a in example)
+        outs = ";".join(_fmt_aval(a) for a in out_avals)
+        metas = ",".join(f"{k}:{v}" for k, v in meta.items())
+        manifest.append(f"{name}|{name}.hlo.txt|in={ins}|out={outs}|meta={metas}")
+        print(f"  {name:28s} {len(text) / 1024:8.1f} KiB  in={ins}")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest)} artifacts to {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter")
+    args = ap.parse_args()
+    lower_all(args.out, args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Finite-difference coefficient tables and banded-matrix builders.
+
+MMStencil maps 1D stencils onto the matrix unit as outer-product
+accumulations; a sequence of ``V + 2r`` rank-1 updates into a tile
+accumulator is exactly the contraction ``X @ C`` (or ``C @ X``) with a
+*banded* coefficient matrix ``C``.  This module builds those banded
+matrices, and holds the standard central-difference coefficient tables used
+by the stencil benchmarks and the RTM application (radius 1..4, i.e. up to
+8th-order spatial accuracy — the paper's headline configuration).
+
+These tables are mirrored in ``rust/src/stencil/coeffs.rs``; the pytest
+suite and the rust integration tests cross-check the two through the AOT
+artifacts.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Central-difference coefficient tables (unit grid spacing).
+# ---------------------------------------------------------------------------
+
+#: Second-derivative central coefficients, index k = -r..r at offset k+r.
+#: Order of accuracy is 2r ("radius-4 stencil, 8-order spatial accuracy").
+SECOND_DERIV = {
+    1: np.array([1.0, -2.0, 1.0]),
+    2: np.array([-1 / 12, 4 / 3, -5 / 2, 4 / 3, -1 / 12]),
+    3: np.array([1 / 90, -3 / 20, 3 / 2, -49 / 18, 3 / 2, -3 / 20, 1 / 90]),
+    4: np.array(
+        [-1 / 560, 8 / 315, -1 / 5, 8 / 5, -205 / 72, 8 / 5, -1 / 5, 8 / 315, -1 / 560]
+    ),
+}
+
+#: First-derivative central coefficients (antisymmetric band).
+FIRST_DERIV = {
+    1: np.array([-1 / 2, 0.0, 1 / 2]),
+    2: np.array([1 / 12, -2 / 3, 0.0, 2 / 3, -1 / 12]),
+    3: np.array([-1 / 60, 3 / 20, -3 / 4, 0.0, 3 / 4, -3 / 20, 1 / 60]),
+    4: np.array(
+        [1 / 280, -4 / 105, 1 / 5, -4 / 5, 0.0, 4 / 5, -1 / 5, 4 / 105, -1 / 280]
+    ),
+}
+
+
+def star_weights(ndim: int, radius: int, dtype=np.float32):
+    """Per-axis weight vectors for the benchmark star stencils.
+
+    Returns ``(w_center, [w_axis0, ..])`` where each ``w_axis`` has length
+    ``2r+1`` with a zero center; the full center coefficient is returned
+    separately (the 3D star has ``2*ndim*r + 1`` distinct points).
+    The benchmark stencils are the heat-equation style Laplacian weights.
+    """
+    if radius not in SECOND_DERIV:
+        raise ValueError(f"unsupported radius {radius}")
+    base = SECOND_DERIV[radius].astype(dtype)
+    center = dtype(ndim * base[radius])
+    axis = base.copy()
+    axis[radius] = 0.0
+    return center, [axis.copy() for _ in range(ndim)]
+
+
+def box_weights(ndim: int, radius: int, dtype=np.float32):
+    """Dense weight tensor ``(2r+1,)*ndim`` for the benchmark box stencils.
+
+    A normalized Gaussian-times-ripple pattern: generic (non-separable,
+    fully dense — exercising the complete decomposition), deterministic,
+    and analytically defined so the rust mirror
+    (``rust/src/stencil/coeffs.rs``) reproduces it bit-for-bit from the
+    same f64 formula.
+    """
+    n = 2 * radius + 1
+    w = np.empty((n,) * ndim, dtype=np.float64)
+    for idx in np.ndindex(w.shape):
+        g = 1.0
+        for d, i in enumerate(idx):
+            g *= np.exp(-0.5 * (i - radius) ** 2 / max(radius, 1) ** 2)
+        flat = 0
+        for i in idx:
+            flat = flat * n + i
+        w[idx] = g * (1.0 + 0.3 * np.sin(1.7 * flat + 0.4))
+    w = w / np.abs(w).sum()
+    return w.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Banded-matrix builders: the outer-product → matmul mapping.
+# ---------------------------------------------------------------------------
+
+
+def band_matrix(weights, v: int, dtype=np.float32) -> np.ndarray:
+    """Build the ``(v + 2r, v)`` banded matrix ``C`` with
+    ``C[j + k, j] = weights[k + r]`` for ``k`` in ``[-r, r]``.
+
+    For an input row ``x`` of length ``v + 2r`` (halo included),
+    ``x @ C`` computes the radius-``r`` 1D stencil at all ``v`` interior
+    points.  Each of the ``v + 2r`` input elements contributes one
+    rank-1 (outer-product) update — this is the paper's Fig. 4 mapping.
+    """
+    weights = np.asarray(weights, dtype=dtype)
+    r = (len(weights) - 1) // 2
+    c = np.zeros((v + 2 * r, v), dtype=dtype)
+    for j in range(v):
+        c[j : j + 2 * r + 1, j] = weights
+    return c
+
+
+def band_matrix_t(weights, v: int, dtype=np.float32) -> np.ndarray:
+    """Transposed band ``(v, v + 2r)``: ``C_t @ x`` applies the stencil
+    along the *leading* axis of ``x`` (the x-axis mapping, where the paper
+    scatters column vectors across output columns)."""
+    return band_matrix(weights, v, dtype=dtype).T.copy()

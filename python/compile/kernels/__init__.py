@@ -1,0 +1,2 @@
+"""L1 Pallas kernels (build-time only) and their pure-jnp oracles."""
+from . import axis, box, ref, rtm, star, transpose  # noqa: F401

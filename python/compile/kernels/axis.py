@@ -1,0 +1,149 @@
+"""L1 Pallas kernels: 1D axis stencils as banded-matrix contractions.
+
+This is the heart of the MMStencil → matrix-unit mapping (paper §IV-A).
+The paper's outer-product loop
+
+    for i in range(V + 2r):            # one vertical strip of A / row of B
+        acc += outer(col_i(A), row_i(B))
+
+is exactly the rank-1-update decomposition of the matmul ``A @ B``; the
+MXU systolic array performs the same contraction.  We therefore express a
+radius-``r`` 1D stencil over a ``V``-point output as a matmul with a banded
+coefficient matrix ``C`` (built in :mod:`compile.coeffs`):
+
+  * y-axis (contiguous axis):  ``out = X @ C``      with ``C: (V+2r, V)``
+  * x-axis (strided axis):     ``out = C_t @ X``    with ``C_t: (V, V+2r)``
+    — contraction over the leading axis replaces the paper's
+    Tile-Assisted Vector Transpose: no gather of strided column vectors.
+  * z-axis (slowest axis):     ``out = C_t @ X.reshape(VZ+2r, -1)``
+
+Tile-Based ILP (paper §IV-C.a): the 3D blocks carry a VZ batch dimension;
+each z-layer is an independent 16×16 tile contraction, expressed as a
+batched ``dot_general`` so the backend can interleave tiles exactly the way
+the paper interleaves matrix-tile accumulators.
+
+All kernels run with ``interpret=True`` — real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _acc_dtype(dtype):
+    """MXU accumulation dtype: fp32 for fp32/bf16 inputs, fp64 stays fp64."""
+    return jnp.float64 if dtype == jnp.float64 else jnp.float32
+
+
+def _dot(a, b):
+    """2D matmul with MXU-idiom accumulation."""
+    return jax.lax.dot_general(
+        a, b, (((a.ndim - 1,), (0,)), ((), ())), preferred_element_type=_acc_dtype(a.dtype)
+    ).astype(a.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies (operate on whole refs: one (VX, VY[, VZ]) block per call)
+# ---------------------------------------------------------------------------
+
+
+def _axis_y_2d_kernel(x_ref, c_ref, o_ref):
+    # x: (VX, VY + 2r) @ C (VY + 2r, VY) → (VX, VY)
+    o_ref[...] = _dot(x_ref[...], c_ref[...])
+
+
+def _axis_x_2d_kernel(x_ref, ct_ref, o_ref):
+    # C_t (VX, VX + 2r) @ x (VX + 2r, VY) → (VX, VY)
+    o_ref[...] = _dot(ct_ref[...], x_ref[...])
+
+
+def _axis_y_3d_kernel(x_ref, c_ref, o_ref):
+    # batched over z: (VZ, VX, VY + 2r) @ (VY + 2r, VY)
+    x = x_ref[...]
+    vz = x.shape[0]
+    out = jax.lax.dot_general(
+        x,
+        c_ref[...],
+        (((2,), (0,)), ((), ())),
+        preferred_element_type=_acc_dtype(x.dtype),
+    )
+    o_ref[...] = out.astype(x.dtype)
+
+
+def _axis_x_3d_kernel(x_ref, ct_ref, o_ref):
+    # per z-layer: C_t (VX, VX+2r) @ x[z] (VX+2r, VY) — tile-based ILP:
+    # each layer is an independent tile contraction.
+    x = x_ref[...]
+    ct = ct_ref[...]
+    out = jax.lax.dot_general(
+        x,
+        ct,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=_acc_dtype(x.dtype),
+    )  # (VZ, VY, VX)
+    o_ref[...] = jnp.swapaxes(out, 1, 2).astype(x.dtype)
+
+
+def _axis_z_3d_kernel(x_ref, ct_ref, o_ref):
+    # C_t (VZ, VZ+2r) @ x.reshape(VZ+2r, VX*VY)
+    x = x_ref[...]
+    vzh, vx, vy = x.shape
+    out = _dot(ct_ref[...], x.reshape(vzh, vx * vy))
+    o_ref[...] = out.reshape(-1, vx, vy)
+
+
+# ---------------------------------------------------------------------------
+# Public block operators
+# ---------------------------------------------------------------------------
+
+
+def _call(kernel, out_shape, dtype, *args):
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(out_shape, dtype),
+        interpret=INTERPRET,
+    )(*args)
+
+
+def axis_y_2d(x, c):
+    """y-axis 1D stencil on a ``(VX, VY + 2r)`` block; ``c`` from
+    :func:`compile.coeffs.band_matrix`."""
+    vx = x.shape[0]
+    vy = c.shape[1]
+    return _call(_axis_y_2d_kernel, (vx, vy), x.dtype, x, c)
+
+
+def axis_x_2d(x, ct):
+    """x-axis 1D stencil on a ``(VX + 2r, VY)`` block; ``ct`` from
+    :func:`compile.coeffs.band_matrix_t`."""
+    vx = ct.shape[0]
+    vy = x.shape[1]
+    return _call(_axis_x_2d_kernel, (vx, vy), x.dtype, x, ct)
+
+
+def axis_y_3d(x, c):
+    """y-axis stencil on a ``(VZ, VX, VY + 2r)`` block."""
+    vz, vx = x.shape[0], x.shape[1]
+    vy = c.shape[1]
+    return _call(_axis_y_3d_kernel, (vz, vx, vy), x.dtype, x, c)
+
+
+def axis_x_3d(x, ct):
+    """x-axis stencil on a ``(VZ, VX + 2r, VY)`` block."""
+    vz, vy = x.shape[0], x.shape[2]
+    vx = ct.shape[0]
+    return _call(_axis_x_3d_kernel, (vz, vx, vy), x.dtype, x, ct)
+
+
+def axis_z_3d(x, ct):
+    """z-axis stencil on a ``(VZ + 2r, VX, VY)`` block."""
+    vx, vy = x.shape[1], x.shape[2]
+    vz = ct.shape[0]
+    return _call(_axis_z_3d_kernel, (vz, vx, vy), x.dtype, x, ct)

@@ -1,0 +1,122 @@
+"""L1 Pallas kernels: box stencil block operators via the
+Redundant-Access Zeroing decomposition (paper §IV-C.d).
+
+A 2D box of radius ``r`` is decomposed into ``2r+1`` y-axis 1D stencils;
+the j-th sub-stencil reads rows shifted by ``j - r`` in x.  Executed
+naively each sub-stencil re-loads almost the same cache lines ("redundant
+accesses") and is unaligned.  The paper's fix: iterate the y-axis
+sub-stencils in the *inner* loop over a shared, halo-extended block held
+in the tile/VMEM scope, splicing the shifted rows out of registers.  In
+the Pallas formulation the shared block is the kernel input ref (one
+VMEM-resident brick); every shifted slice is a static in-register view,
+and each sub-stencil is one banded-matrix contraction:
+
+    out = sum_a  X[a : a + VX, :] @ C(W[a])          (2D)
+    out = sum_{c,a}  X[c:c+VZ, a:a+VX, :] @ C(W[c,a])  (3D)
+
+so no element of ``X`` is fetched from memory more than once per kernel
+invocation — the decomposition's redundancy is "zeroed".
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .axis import INTERPRET, _acc_dtype
+
+
+def _box2d_kernel(r: int, x_ref, cbands_ref, o_ref):
+    # x: (VX + 2r, VY + 2r); cbands: (2r+1, VY+2r, VY) — one banded matrix
+    # per x-offset row of the weight tensor.
+    x = x_ref[...]
+    n = 2 * r + 1
+    vx = x.shape[0] - 2 * r
+    vy = cbands_ref.shape[2]
+    acc = jnp.zeros((vx, vy), _acc_dtype(x.dtype))
+    for a in range(n):
+        acc += jax.lax.dot_general(
+            x[a : a + vx, :], cbands_ref[a], (((1,), (0,)), ((), ())),
+            preferred_element_type=_acc_dtype(x.dtype),
+        )
+    o_ref[...] = acc.astype(x.dtype)
+
+
+def _box3d_kernel(r: int, x_ref, cbands_ref, o_ref):
+    # x: (VZ+2r, VX+2r, VY+2r); cbands: (2r+1, 2r+1, VY+2r, VY) indexed
+    # [dz, dx] — the 3D box as (2r+1)^2 y-axis banded contractions.
+    x = x_ref[...]
+    n = 2 * r + 1
+    vz = x.shape[0] - 2 * r
+    vx = x.shape[1] - 2 * r
+    vy = cbands_ref.shape[3]
+    acc = jnp.zeros((vz, vx, vy), _acc_dtype(x.dtype))
+    for c in range(n):
+        for a in range(n):
+            acc += jax.lax.dot_general(
+                x[c : c + vz, a : a + vx, :],
+                cbands_ref[c, a],
+                (((2,), (0,)), ((), ())),
+                preferred_element_type=_acc_dtype(x.dtype),
+            )
+    o_ref[...] = acc.astype(x.dtype)
+
+
+def box2d(x, cbands):
+    """2D box block operator.
+
+    ``cbands[a] = band_matrix(W[a], VY)`` for each x-offset row ``a`` of
+    the ``(2r+1, 2r+1)`` weight tensor ``W``.
+    """
+    n = cbands.shape[0]
+    r = (n - 1) // 2
+    vx = x.shape[0] - 2 * r
+    vy = cbands.shape[2]
+    return pl.pallas_call(
+        functools.partial(_box2d_kernel, r),
+        out_shape=jax.ShapeDtypeStruct((vx, vy), x.dtype),
+        interpret=INTERPRET,
+    )(x, cbands)
+
+
+def box3d(x, cbands):
+    """3D box block operator; ``cbands[c, a] = band_matrix(W[c, a], VY)``."""
+    n = cbands.shape[0]
+    r = (n - 1) // 2
+    vz = x.shape[0] - 2 * r
+    vx = x.shape[1] - 2 * r
+    vy = cbands.shape[3]
+    return pl.pallas_call(
+        functools.partial(_box3d_kernel, r),
+        out_shape=jax.ShapeDtypeStruct((vz, vx, vy), x.dtype),
+        interpret=INTERPRET,
+    )(x, cbands)
+
+
+def box_bands(w, v: int):
+    """Stack banded matrices for every leading index of weight tensor ``w``.
+
+    2D weights ``(n, n)`` → ``(n, v+2r, v)``;
+    3D weights ``(n, n, n)`` → ``(n, n, v+2r, v)``.
+    """
+    import numpy as np
+
+    from .. import coeffs
+
+    w = np.asarray(w)
+    n = w.shape[0]
+    if w.ndim == 2:
+        return np.stack([coeffs.band_matrix(w[a], v, dtype=w.dtype) for a in range(n)])
+    if w.ndim == 3:
+        return np.stack(
+            [
+                np.stack(
+                    [coeffs.band_matrix(w[c, a], v, dtype=w.dtype) for a in range(n)]
+                )
+                for c in range(n)
+            ]
+        )
+    raise ValueError("box weights must be 2D or 3D")

@@ -1,0 +1,371 @@
+"""Pure-jnp correctness oracles for every MMStencil kernel.
+
+Everything here is the *semantic* definition: direct neighbour sums with
+explicit halo slicing, no matrix-unit tricks.  The Pallas kernels, the
+whole-grid L2 models, and (through the AOT artifacts) the rust-native
+kernels are all checked against these.
+
+Array conventions (mirrors the rust ``Grid3`` layout):
+  * 2D block: shape ``(X, Y)``      — y contiguous
+  * 3D block: shape ``(Z, X, Y)``   — z slowest, y contiguous
+  * halo blocks extend every stencilled axis by ``r`` on both sides
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# 1D axis stencils on halo blocks
+# ---------------------------------------------------------------------------
+
+
+def axis_y_2d(x, w):
+    """y-axis stencil: ``x`` is ``(VX, VY + 2r)`` → ``(VX, VY)``."""
+    r = (w.shape[0] - 1) // 2
+    vy = x.shape[1] - 2 * r
+    out = jnp.zeros(x.shape[:1] + (vy,), x.dtype)
+    for k in range(2 * r + 1):
+        out = out + w[k] * x[:, k : k + vy]
+    return out
+
+
+def axis_x_2d(x, w):
+    """x-axis stencil: ``x`` is ``(VX + 2r, VY)`` → ``(VX, VY)``."""
+    r = (w.shape[0] - 1) // 2
+    vx = x.shape[0] - 2 * r
+    out = jnp.zeros((vx,) + x.shape[1:], x.dtype)
+    for k in range(2 * r + 1):
+        out = out + w[k] * x[k : k + vx, :]
+    return out
+
+
+def axis_y_3d(x, w):
+    """y-axis stencil: ``x`` is ``(VZ, VX, VY + 2r)`` → ``(VZ, VX, VY)``."""
+    r = (w.shape[0] - 1) // 2
+    vy = x.shape[2] - 2 * r
+    out = jnp.zeros(x.shape[:2] + (vy,), x.dtype)
+    for k in range(2 * r + 1):
+        out = out + w[k] * x[:, :, k : k + vy]
+    return out
+
+
+def axis_x_3d(x, w):
+    """x-axis stencil: ``x`` is ``(VZ, VX + 2r, VY)`` → ``(VZ, VX, VY)``."""
+    r = (w.shape[0] - 1) // 2
+    vx = x.shape[1] - 2 * r
+    out = jnp.zeros((x.shape[0], vx, x.shape[2]), x.dtype)
+    for k in range(2 * r + 1):
+        out = out + w[k] * x[:, k : k + vx, :]
+    return out
+
+
+def axis_z_3d(x, w):
+    """z-axis stencil: ``x`` is ``(VZ + 2r, VX, VY)`` → ``(VZ, VX, VY)``."""
+    r = (w.shape[0] - 1) // 2
+    vz = x.shape[0] - 2 * r
+    out = jnp.zeros((vz,) + x.shape[1:], x.dtype)
+    for k in range(2 * r + 1):
+        out = out + w[k] * x[k : k + vz, :, :]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Star stencils (center + per-axis bands, center folded in separately)
+# ---------------------------------------------------------------------------
+
+
+def star2d(x, w_center, wx, wy):
+    """2D star on a full-halo block ``(VX + 2r, VY + 2r)`` → ``(VX, VY)``."""
+    r = (wx.shape[0] - 1) // 2
+    vx, vy = x.shape[0] - 2 * r, x.shape[1] - 2 * r
+    out = w_center * x[r : r + vx, r : r + vy]
+    out = out + axis_x_2d(x[:, r : r + vy], wx)
+    out = out + axis_y_2d(x[r : r + vx, :], wy)
+    return out
+
+
+def star3d(x, w_center, wx, wy, wz):
+    """3D star on a full-halo block ``(VZ+2r, VX+2r, VY+2r)`` → ``(VZ,VX,VY)``."""
+    r = (wx.shape[0] - 1) // 2
+    vz = x.shape[0] - 2 * r
+    vx = x.shape[1] - 2 * r
+    vy = x.shape[2] - 2 * r
+    ctr = x[r : r + vz, r : r + vx, r : r + vy]
+    out = w_center * ctr
+    out = out + axis_z_3d(x[:, r : r + vx, r : r + vy], wz)
+    out = out + axis_x_3d(x[r : r + vz, :, r : r + vy], wx)
+    out = out + axis_y_3d(x[r : r + vz, r : r + vx, :], wy)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Box stencils (dense weight tensors)
+# ---------------------------------------------------------------------------
+
+
+def box2d(x, w):
+    """2D box: ``x`` is ``(VX + 2r, VY + 2r)``, ``w`` is ``(2r+1, 2r+1)``."""
+    n = w.shape[0]
+    r = (n - 1) // 2
+    vx, vy = x.shape[0] - 2 * r, x.shape[1] - 2 * r
+    out = jnp.zeros((vx, vy), x.dtype)
+    for a in range(n):
+        for b in range(n):
+            out = out + w[a, b] * x[a : a + vx, b : b + vy]
+    return out
+
+
+def box3d(x, w):
+    """3D box: ``x`` is ``(VZ+2r, VX+2r, VY+2r)``, ``w`` is ``(2r+1,)*3``
+    indexed ``w[dz, dx, dy]``."""
+    n = w.shape[0]
+    r = (n - 1) // 2
+    vz, vx, vy = (s - 2 * r for s in x.shape)
+    out = jnp.zeros((vz, vx, vy), x.dtype)
+    for c in range(n):
+        for a in range(n):
+            for b in range(n):
+                out = out + w[c, a, b] * x[c : c + vz, a : a + vx, b : b + vy]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Whole-grid sweeps with periodic boundary (used by the L2 grid models)
+# ---------------------------------------------------------------------------
+
+
+def star3d_grid(x, w_center, wx, wy, wz):
+    """Full-grid 3D star with periodic wrap (jnp.roll) — grid ``(Z, X, Y)``."""
+    out = w_center * x
+    r = (wx.shape[0] - 1) // 2
+    for k in range(-r, r + 1):
+        if k == 0:
+            continue
+        out = out + wz[k + r] * jnp.roll(x, -k, axis=0)
+        out = out + wx[k + r] * jnp.roll(x, -k, axis=1)
+        out = out + wy[k + r] * jnp.roll(x, -k, axis=2)
+    return out
+
+
+def star2d_grid(x, w_center, wx, wy):
+    out = w_center * x
+    r = (wx.shape[0] - 1) // 2
+    for k in range(-r, r + 1):
+        if k == 0:
+            continue
+        out = out + wx[k + r] * jnp.roll(x, -k, axis=0)
+        out = out + wy[k + r] * jnp.roll(x, -k, axis=1)
+    return out
+
+
+def box2d_grid(x, w):
+    n = w.shape[0]
+    r = (n - 1) // 2
+    out = jnp.zeros_like(x)
+    for a in range(n):
+        for b in range(n):
+            out = out + w[a, b] * jnp.roll(x, (r - a, r - b), axis=(0, 1))
+    return out
+
+
+def box3d_grid(x, w):
+    n = w.shape[0]
+    r = (n - 1) // 2
+    out = jnp.zeros_like(x)
+    for c in range(n):
+        for a in range(n):
+            for b in range(n):
+                out = out + w[c, a, b] * jnp.roll(
+                    x, (r - c, r - a, r - b), axis=(0, 1, 2)
+                )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RTM second-derivative helpers and VTI / TTI updates (whole grid, periodic)
+# ---------------------------------------------------------------------------
+
+
+def d2_axis(x, w2, axis):
+    """Second derivative along ``axis`` with periodic wrap."""
+    r = (w2.shape[0] - 1) // 2
+    out = w2[r] * x
+    for k in range(1, r + 1):
+        out = out + w2[r + k] * (jnp.roll(x, -k, axis=axis) + jnp.roll(x, k, axis=axis))
+    return out
+
+
+def d1_axis(x, w1, axis):
+    """First derivative along ``axis`` with periodic wrap (antisymmetric)."""
+    r = (w1.shape[0] - 1) // 2
+    out = jnp.zeros_like(x)
+    for k in range(1, r + 1):
+        out = out + w1[r + k] * (jnp.roll(x, -k, axis=axis) - jnp.roll(x, k, axis=axis))
+    return out
+
+
+def vti_step(sh, sv, sh_prev, sv_prev, vp2dt2, eps, delta, w2):
+    """One leapfrog step of the VTI coupled system (paper §II-A).
+
+    Grid axes ``(Z, X, Y)``; ``vp2dt2 = Vp^2 * dt^2`` per cell.
+
+    Uses the standard Duveneck–Bakker/Zhou pseudo-acoustic VTI system
+    (stable for eps >= delta); the coupling printed in the paper has an
+    unconditionally unstable z-branch and is assumed to be a typo — see
+    DESIGN.md §Substitutions:
+
+        d2 sH/dt2 = Vp^2 { (1+2eps)(dxx sH + dyy sH) + sqrt(1+2delta) dzz sV }
+        d2 sV/dt2 = Vp^2 { sqrt(1+2delta)(dxx sH + dyy sH) + dzz sV }
+    """
+    lap_h_xy = d2_axis(sh, w2, 1) + d2_axis(sh, w2, 2)
+    dzz_v = d2_axis(sv, w2, 0)
+    sq = jnp.sqrt(1.0 + 2.0 * delta)
+    rhs_h = (1.0 + 2.0 * eps) * lap_h_xy + sq * dzz_v
+    rhs_v = sq * lap_h_xy + dzz_v
+    sh_new = 2.0 * sh - sh_prev + vp2dt2 * rhs_h
+    sv_new = 2.0 * sv - sv_prev + vp2dt2 * rhs_v
+    return sh_new, sv_new
+
+
+def tti_h1(f, theta, phi, w2, w1):
+    """The TTI H1 operator (paper §II-A): all six second derivatives
+    weighted by the tilt/azimuth trig factors.  Mixed derivatives are
+    composed from two first-derivative 1D stencils (the paper's §IV-G
+    commutative-composition scheme).  Axes ``(Z, X, Y)``."""
+    st2 = jnp.sin(theta) ** 2
+    ct2 = jnp.cos(theta) ** 2
+    s2t = jnp.sin(2.0 * theta)
+    cp2 = jnp.cos(phi) ** 2
+    sp2 = jnp.sin(phi) ** 2
+    s2p = jnp.sin(2.0 * phi)
+
+    dxx = d2_axis(f, w2, 1)
+    dyy = d2_axis(f, w2, 2)
+    dzz = d2_axis(f, w2, 0)
+    dx = d1_axis(f, w1, 1)
+    dz = d1_axis(f, w1, 0)
+    dxy = d1_axis(dx, w1, 2)
+    dyz = d1_axis(dz, w1, 2)
+    dxz = d1_axis(dz, w1, 1)
+
+    return (
+        st2 * cp2 * dxx
+        + st2 * sp2 * dyy
+        + ct2 * dzz
+        + st2 * s2p * dxy
+        + s2t * jnp.sin(phi) * dyz
+        + s2t * jnp.cos(phi) * dxz
+    )
+
+
+def tti_h2(f, theta, phi, w2, w1):
+    """H2 = laplacian - H1."""
+    lap = d2_axis(f, w2, 0) + d2_axis(f, w2, 1) + d2_axis(f, w2, 2)
+    return lap - tti_h1(f, theta, phi, w2, w1)
+
+
+def tti_step(
+    p, q, p_prev, q_prev, vpx2, vpz2, vpn2, vsz2, alpha, theta, phi, dt2, w2, w1
+):
+    """One leapfrog step of the TTI coupled system (paper §II-A)."""
+    h1p = tti_h1(p, theta, phi, w2, w1)
+    h2p = tti_h2(p, theta, phi, w2, w1)
+    h1q = tti_h1(q, theta, phi, w2, w1)
+    h2q = tti_h2(q, theta, phi, w2, w1)
+    rhs_p = vpx2 * h2p + alpha * vpz2 * h1q + vsz2 * (h1p - alpha * h1q)
+    rhs_q = (vpn2 / alpha) * h2p + vpz2 * h1q - vsz2 * (h2p / alpha - h2q)
+    p_new = 2.0 * p - p_prev + dt2 * rhs_p
+    q_new = 2.0 * q - q_prev + dt2 * rhs_q
+    return p_new, q_new
+
+
+# ---------------------------------------------------------------------------
+# Block-level RTM oracles (halo-cube in, center-block out) — these define
+# the semantics the Pallas block kernels must match exactly.
+# ---------------------------------------------------------------------------
+
+
+def _full_band_axis_x(f, w):
+    """x-axis full-band stencil on ``(VZ, VX + 2r, VY*)`` keeping y size."""
+    return axis_x_3d(f, w)
+
+
+def vti_step_block(sh, sv, sh_prev, sv_prev, vp2dt2, eps, delta, w2):
+    """Block-level VTI leapfrog: ``sh, sv`` are halo cubes
+    ``(VZ+2r, VX+2r, VY+2r)``; everything else center blocks."""
+    r = (w2.shape[0] - 1) // 2
+    vz, vx, vy = (s - 2 * r for s in sh.shape)
+
+    def lap_xy(f):
+        dyy = axis_y_3d(f[r : r + vz, r : r + vx, :], w2)
+        dxx = axis_x_3d(f[r : r + vz, :, r : r + vy], w2)
+        return dxx + dyy
+
+    def dzz(f):
+        return axis_z_3d(f[:, r : r + vx, r : r + vy], w2)
+
+    sq = jnp.sqrt(1.0 + 2.0 * delta)
+    lap_h = lap_xy(sh)
+    dzz_v = dzz(sv)
+    rhs_h = (1.0 + 2.0 * eps) * lap_h + sq * dzz_v
+    rhs_v = sq * lap_h + dzz_v
+    ctr_h = sh[r : r + vz, r : r + vx, r : r + vy]
+    ctr_v = sv[r : r + vz, r : r + vx, r : r + vy]
+    return (
+        2.0 * ctr_h - sh_prev + vp2dt2 * rhs_h,
+        2.0 * ctr_v - sv_prev + vp2dt2 * rhs_v,
+    )
+
+
+def tti_derivs_block(f, w2, w1):
+    """All six second derivatives of a halo cube, center-block shaped.
+    Mixed derivatives composed from two first-derivative passes."""
+    r = (w2.shape[0] - 1) // 2
+    vz, vx, vy = (s - 2 * r for s in f.shape)
+    dyy = axis_y_3d(f[r : r + vz, r : r + vx, :], w2)
+    dxx = axis_x_3d(f[r : r + vz, :, r : r + vy], w2)
+    dzz = axis_z_3d(f[:, r : r + vx, r : r + vy], w2)
+    dz = axis_z_3d(f, w1)                      # (VZ, VX+2r, VY+2r)
+    dxz = axis_x_3d(dz[:, :, r : r + vy], w1)  # (VZ, VX, VY)
+    dyz = axis_y_3d(dz[:, r : r + vx, :], w1)
+    dx = axis_x_3d(f[r : r + vz, :, :], w1)    # (VZ, VX, VY+2r)
+    dxy = axis_y_3d(dx, w1)
+    return dxx, dyy, dzz, dxy, dyz, dxz
+
+
+def tti_step_block(
+    p, q, p_prev, q_prev, vpx2, vpz2, vpn2, vsz2, alpha, theta, phi, dt2, w2, w1
+):
+    """Block-level TTI leapfrog matching :func:`compile.kernels.rtm.tti_block`."""
+    r = (w2.shape[0] - 1) // 2
+    vz, vx, vy = (s - 2 * r for s in p.shape)
+
+    st2 = jnp.sin(theta) ** 2
+    ct2 = jnp.cos(theta) ** 2
+    s2t = jnp.sin(2.0 * theta)
+    cp2 = jnp.cos(phi) ** 2
+    sp2 = jnp.sin(phi) ** 2
+    s2p = jnp.sin(2.0 * phi)
+
+    def h1h2(f):
+        dxx, dyy, dzz, dxy, dyz, dxz = tti_derivs_block(f, w2, w1)
+        h1 = (
+            st2 * cp2 * dxx
+            + st2 * sp2 * dyy
+            + ct2 * dzz
+            + st2 * s2p * dxy
+            + s2t * jnp.sin(phi) * dyz
+            + s2t * jnp.cos(phi) * dxz
+        )
+        h2 = (dxx + dyy + dzz) - h1
+        return h1, h2
+
+    h1p, h2p = h1h2(p)
+    h1q, h2q = h1h2(q)
+    rhs_p = vpx2 * h2p + alpha * vpz2 * h1q + vsz2 * (h1p - alpha * h1q)
+    rhs_q = (vpn2 / alpha) * h2p + vpz2 * h1q - vsz2 * (h2p / alpha - h2q)
+    ctr_p = p[r : r + vz, r : r + vx, r : r + vy]
+    ctr_q = q[r : r + vz, r : r + vx, r : r + vy]
+    return 2.0 * ctr_p - p_prev + dt2 * rhs_p, 2.0 * ctr_q - q_prev + dt2 * rhs_q

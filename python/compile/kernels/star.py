@@ -1,0 +1,108 @@
+"""L1 Pallas kernels: star stencil block operators.
+
+A 3D star stencil is composed from the three axis contractions of
+:mod:`compile.kernels.axis` *inside a single kernel* so that the x/y
+partial result never leaves the accumulator scope — this mirrors the
+paper's "Cache Pollution Avoiding Intermediate Result Placement"
+(§IV-C.c): the intermediate lives in a temporary (VMEM/register tile)
+buffer instead of round-tripping through the destination grid.
+
+Inputs are full-halo blocks (the brick scheme loads whole bricks whenever
+the halo intersects them, §IV-D.a), outputs are interior blocks:
+
+  * 2D: ``(VX + 2r, VY + 2r)`` → ``(VX, VY)``
+  * 3D: ``(VZ + 2r, VX + 2r, VY + 2r)`` → ``(VZ, VX, VY)``
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .axis import INTERPRET, _acc_dtype
+
+
+def _star2d_kernel(r: int, x_ref, cy_ref, cxt_ref, wc_ref, o_ref):
+    x = x_ref[...]
+    vx = x.shape[0] - 2 * r
+    vy = x.shape[1] - 2 * r
+    ctr = x[r : r + vx, r : r + vy]
+    # y-axis: rows of the centered-in-x slab against the banded C_y
+    acc = jax.lax.dot_general(
+        x[r : r + vx, :], cy_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=_acc_dtype(x.dtype),
+    )
+    # x-axis: transposed band against the centered-in-y slab — contraction
+    # over the leading axis, no strided gather (Tile-Assisted Transpose).
+    acc += jax.lax.dot_general(
+        cxt_ref[...], x[:, r : r + vy], (((1,), (0,)), ((), ())),
+        preferred_element_type=_acc_dtype(x.dtype),
+    )
+    acc += wc_ref[0] * ctr
+    o_ref[...] = acc.astype(x.dtype)
+
+
+def _star3d_kernel(r: int, x_ref, cy_ref, cxt_ref, czt_ref, wc_ref, o_ref):
+    x = x_ref[...]
+    vz = x.shape[0] - 2 * r
+    vx = x.shape[1] - 2 * r
+    vy = x.shape[2] - 2 * r
+    ctr = x[r : r + vz, r : r + vx, r : r + vy]
+
+    # y-axis on (VZ, VX, VY+2r): batched tile contraction (Tile-Based ILP —
+    # every z-layer is an independent 16x16 tile).
+    acc = jax.lax.dot_general(
+        x[r : r + vz, r : r + vx, :],
+        cy_ref[...],
+        (((2,), (0,)), ((), ())),
+        preferred_element_type=_acc_dtype(x.dtype),
+    )  # (VZ, VX, VY)
+
+    # x-axis on (VZ, VX+2r, VY): contract the strided axis against C_x^T.
+    xs = x[r : r + vz, :, r : r + vy]
+    xpart = jax.lax.dot_general(
+        xs, cxt_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=_acc_dtype(x.dtype),
+    )  # (VZ, VY, VX)
+    acc += jnp.swapaxes(xpart, 1, 2)
+
+    # z-axis on (VZ+2r, VX, VY): single contraction over the slow axis —
+    # each matrix tile holds a (VX, 1, VZ) slice in the paper; here the
+    # (VZ, VZ+2r) band contracts the layer axis in one shot.
+    zs = x[:, r : r + vx, r : r + vy].reshape(vz + 2 * r, vx * vy)
+    zpart = jax.lax.dot_general(
+        czt_ref[...], zs, (((1,), (0,)), ((), ())),
+        preferred_element_type=_acc_dtype(x.dtype),
+    )
+    acc += zpart.reshape(vz, vx, vy)
+
+    acc += wc_ref[0] * ctr
+    o_ref[...] = acc.astype(x.dtype)
+
+
+def star2d(x, cy, cxt, w_center):
+    """2D star block operator.  ``cy = band(wy, VY)``,
+    ``cxt = band_t(wx, VX)``, ``w_center`` scalar array ``(1,)``."""
+    r = (cy.shape[0] - cy.shape[1]) // 2
+    vx, vy = cxt.shape[0], cy.shape[1]
+    import functools
+
+    return pl.pallas_call(
+        functools.partial(_star2d_kernel, r),
+        out_shape=jax.ShapeDtypeStruct((vx, vy), x.dtype),
+        interpret=INTERPRET,
+    )(x, cy, cxt, w_center)
+
+
+def star3d(x, cy, cxt, czt, w_center):
+    """3D star block operator on a full-halo cube."""
+    r = (cy.shape[0] - cy.shape[1]) // 2
+    vz, vx, vy = czt.shape[0], cxt.shape[0], cy.shape[1]
+    import functools
+
+    return pl.pallas_call(
+        functools.partial(_star3d_kernel, r),
+        out_shape=jax.ShapeDtypeStruct((vz, vx, vy), x.dtype),
+        interpret=INTERPRET,
+    )(x, cy, cxt, czt, w_center)

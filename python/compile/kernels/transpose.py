@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: Tile-Assisted Vector Transpose (paper §IV-C.b).
+
+On the paper's platform, gathering a strided ``(1, VY)`` column vector
+costs up to 8 cycles per vector; a SIMD permutation-network transpose of a
+16×16 fp32 tile costs ``V log2 V = 64`` permutes plus loads/stores.  The
+matrix tile can instead ingest *horizontal* slices and emit *vertical*
+slices, transposing a 16×16 tile in 32 instructions (16 horizontal loads +
+16 vertical stores).
+
+On the MXU the same trick is a contraction against the identity:
+``X^T = (X^T I)`` — the systolic array streams rows in and columns out.
+We expose both the plain data-movement transpose and the identity-matmul
+formulation; both must agree with ``x.T`` (tested), and the rust-side
+instruction model (`stencil/matrix_unit.rs`) charges 2·V tile-slice
+instructions for it, reproducing the paper's 64-vs-32 argument.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .axis import INTERPRET, _acc_dtype
+
+
+def _transpose_kernel(x_ref, o_ref):
+    # Horizontal-slice load / vertical-slice store, expressed densely.
+    o_ref[...] = x_ref[...].T
+
+
+def _transpose_mxu_kernel(x_ref, eye_ref, o_ref):
+    # Identity contraction over the leading axis: out[j, i] = x[i, j].
+    x = x_ref[...]
+    out = jax.lax.dot_general(
+        x, eye_ref[...], (((0,), (0,)), ((), ())),
+        preferred_element_type=_acc_dtype(x.dtype),
+    )
+    o_ref[...] = out.astype(x.dtype)
+
+
+def tile_transpose(x):
+    """Transpose a 2D tile (any rectangular shape)."""
+    vx, vy = x.shape
+    return pl.pallas_call(
+        _transpose_kernel,
+        out_shape=jax.ShapeDtypeStruct((vy, vx), x.dtype),
+        interpret=INTERPRET,
+    )(x)
+
+
+def tile_transpose_mxu(x):
+    """Transpose via identity contraction (the matrix-unit formulation)."""
+    vx, vy = x.shape
+    eye = jnp.eye(vx, dtype=x.dtype)
+    return pl.pallas_call(
+        _transpose_mxu_kernel,
+        out_shape=jax.ShapeDtypeStruct((vy, vx), x.dtype),
+        interpret=INTERPRET,
+    )(x, eye)

@@ -1,0 +1,249 @@
+"""L2: whole-computation JAX models built on the L1 kernels.
+
+Two granularities are exported (see DESIGN.md §1):
+
+* **Block operators** — thin jit wrappers around the Pallas block kernels
+  with the benchmark coefficient bands *baked in* as constants, so the
+  rust coordinator only feeds grid data.  These carry the matrix-unit
+  algorithm into the artifacts.
+* **Grid steps** — full-grid periodic sweeps / RTM leapfrog timesteps in
+  pure jnp (semantically identical to the ref oracles) used by the rust
+  end-to-end driver for fast multi-step runs.
+
+Every function here is shape-monomorphic once wrapped by
+:mod:`compile.aot`, which lowers each to an HLO-text artifact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import coeffs
+from .kernels import axis, box, ref, rtm, star, transpose
+
+# Paper tile defaults: VL = 16 fp32 lanes on the 512-bit platform, 4 matrix
+# tiles per accumulator → VX = VY = 16, VZ = 4.
+VX = 16
+VY = 16
+VZ = 4
+DTYPE = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Block operators (pallas) with baked benchmark weights
+# ---------------------------------------------------------------------------
+
+
+def make_star2d_block(radius: int, vx: int = VX, vy: int = VY):
+    wc, (wx, wy) = coeffs.star_weights(2, radius)
+    cy = jnp.asarray(coeffs.band_matrix(wy, vy))
+    cxt = jnp.asarray(coeffs.band_matrix_t(wx, vx))
+    wcv = jnp.asarray(np.array([wc], dtype=np.float32))
+
+    def f(x):
+        return (star.star2d(x, cy, cxt, wcv),)
+
+    f.__name__ = f"star2d_r{radius}_block"
+    example = jnp.zeros((vx + 2 * radius, vy + 2 * radius), DTYPE)
+    return f, (example,)
+
+
+def make_star3d_block(radius: int, vx: int = VX, vy: int = VY, vz: int = VZ):
+    wc, (wx, wy, wz) = coeffs.star_weights(3, radius)
+    cy = jnp.asarray(coeffs.band_matrix(wy, vy))
+    cxt = jnp.asarray(coeffs.band_matrix_t(wx, vx))
+    czt = jnp.asarray(coeffs.band_matrix_t(wz, vz))
+    wcv = jnp.asarray(np.array([wc], dtype=np.float32))
+
+    def f(x):
+        return (star.star3d(x, cy, cxt, czt, wcv),)
+
+    f.__name__ = f"star3d_r{radius}_block"
+    example = jnp.zeros((vz + 2 * radius, vx + 2 * radius, vy + 2 * radius), DTYPE)
+    return f, (example,)
+
+
+def make_box2d_block(radius: int, vx: int = VX, vy: int = VY):
+    w = coeffs.box_weights(2, radius)
+    cbands = jnp.asarray(box.box_bands(w, vy))
+
+    def f(x):
+        return (box.box2d(x, cbands),)
+
+    f.__name__ = f"box2d_r{radius}_block"
+    example = jnp.zeros((vx + 2 * radius, vy + 2 * radius), DTYPE)
+    return f, (example,)
+
+
+def make_box3d_block(radius: int, vx: int = VX, vy: int = VY, vz: int = VZ):
+    w = coeffs.box_weights(3, radius)
+    cbands = jnp.asarray(box.box_bands(w, vy))
+
+    def f(x):
+        return (box.box3d(x, cbands),)
+
+    f.__name__ = f"box3d_r{radius}_block"
+    example = jnp.zeros((vz + 2 * radius, vx + 2 * radius, vy + 2 * radius), DTYPE)
+    return f, (example,)
+
+
+def make_transpose_block(v: int = VX):
+    def f(x):
+        return (transpose.tile_transpose_mxu(x),)
+
+    f.__name__ = f"transpose{v}_block"
+    example = jnp.zeros((v, v), DTYPE)
+    return f, (example,)
+
+
+def make_rtm_vti_block(radius: int = 4, vx: int = VX, vy: int = VY, vz: int = VZ):
+    w2 = coeffs.SECOND_DERIV[radius].astype(np.float32)
+    c2y = jnp.asarray(coeffs.band_matrix(w2, vy))
+    c2xt = jnp.asarray(coeffs.band_matrix_t(w2, vx))
+    c2zt = jnp.asarray(coeffs.band_matrix_t(w2, vz))
+
+    def f(sh, sv, sh_prev, sv_prev, vp2dt2, eps, delta):
+        return rtm.vti_block(
+            sh, sv, sh_prev, sv_prev, vp2dt2, eps, delta, c2y, c2xt, c2zt
+        )
+
+    f.__name__ = f"rtm_vti_r{radius}_block"
+    halo = jnp.zeros((vz + 2 * radius, vx + 2 * radius, vy + 2 * radius), DTYPE)
+    ctr = jnp.zeros((vz, vx, vy), DTYPE)
+    return f, (halo, halo, ctr, ctr, ctr, ctr, ctr)
+
+
+def make_rtm_tti_block(radius: int = 4, vx: int = VX, vy: int = VY, vz: int = VZ,
+                       dt2: float = 1.0):
+    w2 = coeffs.SECOND_DERIV[radius].astype(np.float32)
+    w1 = coeffs.FIRST_DERIV[radius].astype(np.float32)
+    c2y = jnp.asarray(coeffs.band_matrix(w2, vy))
+    c2xt = jnp.asarray(coeffs.band_matrix_t(w2, vx))
+    c2zt = jnp.asarray(coeffs.band_matrix_t(w2, vz))
+    c1zt = jnp.asarray(coeffs.band_matrix_t(w1, vz))
+    c1xt = jnp.asarray(coeffs.band_matrix_t(w1, vx))
+    c1y = jnp.asarray(coeffs.band_matrix(w1, vy))
+    dt2v = jnp.asarray(np.array([dt2], dtype=np.float32))
+
+    def f(p, q, p_prev, q_prev, vpx2, vpz2, vpn2, vsz2, alpha, theta, phi):
+        return rtm.tti_block(
+            p, q, p_prev, q_prev,
+            vpx2, vpz2, vpn2, vsz2, alpha, theta, phi,
+            dt2v, c2y, c2xt, c2zt, c1zt, c1xt, c1y,
+        )
+
+    f.__name__ = f"rtm_tti_r{radius}_block"
+    halo = jnp.zeros((vz + 2 * radius, vx + 2 * radius, vy + 2 * radius), DTYPE)
+    ctr = jnp.zeros((vz, vx, vy), DTYPE)
+    return f, (halo, halo, ctr, ctr, ctr, ctr, ctr, ctr, ctr, ctr, ctr)
+
+
+# ---------------------------------------------------------------------------
+# Whole-grid steps (pure jnp, periodic)
+# ---------------------------------------------------------------------------
+
+
+def make_star_grid(ndim: int, radius: int, shape):
+    wc, ws = coeffs.star_weights(ndim, radius)
+    ws = [jnp.asarray(w) for w in ws]
+    wcv = jnp.float32(wc)
+
+    if ndim == 2:
+        def f(x):
+            return (ref.star2d_grid(x, wcv, ws[0], ws[1]),)
+    else:
+        def f(x):
+            return (ref.star3d_grid(x, wcv, ws[1], ws[2], ws[0]),)
+
+    f.__name__ = f"star{ndim}d_r{radius}_grid{shape[0]}"
+    example = jnp.zeros(shape, DTYPE)
+    return f, (example,)
+
+
+def make_box_grid(ndim: int, radius: int, shape):
+    w = jnp.asarray(coeffs.box_weights(ndim, radius))
+
+    if ndim == 2:
+        def f(x):
+            return (ref.box2d_grid(x, w),)
+    else:
+        def f(x):
+            return (ref.box3d_grid(x, w),)
+
+    f.__name__ = f"box{ndim}d_r{radius}_grid{shape[0]}"
+    example = jnp.zeros(shape, DTYPE)
+    return f, (example,)
+
+
+def make_rtm_vti_grid(shape, radius: int = 4):
+    w2 = jnp.asarray(coeffs.SECOND_DERIV[radius].astype(np.float32))
+
+    def f(sh, sv, sh_prev, sv_prev, vp2dt2, eps, delta):
+        return ref.vti_step(sh, sv, sh_prev, sv_prev, vp2dt2, eps, delta, w2)
+
+    f.__name__ = f"rtm_vti_r{radius}_grid{shape[0]}"
+    g = jnp.zeros(shape, DTYPE)
+    return f, (g, g, g, g, g, g, g)
+
+
+def make_rtm_tti_grid(shape, radius: int = 4, dt2: float = 1.0):
+    w2 = jnp.asarray(coeffs.SECOND_DERIV[radius].astype(np.float32))
+    w1 = jnp.asarray(coeffs.FIRST_DERIV[radius].astype(np.float32))
+    dt2v = jnp.float32(dt2)
+
+    def f(p, q, p_prev, q_prev, vpx2, vpz2, vpn2, vsz2, alpha, theta, phi):
+        return ref.tti_step(
+            p, q, p_prev, q_prev, vpx2, vpz2, vpn2, vsz2, alpha, theta, phi,
+            dt2v, w2, w1,
+        )
+
+    f.__name__ = f"rtm_tti_r{radius}_grid{shape[0]}"
+    g = jnp.zeros(shape, DTYPE)
+    return f, (g,) * 11
+
+
+# ---------------------------------------------------------------------------
+# The artifact catalog: name → (fn, example_args, metadata)
+# ---------------------------------------------------------------------------
+
+
+def catalog():
+    """All AOT artifacts.  Returns ``{name: (fn, example_args, meta)}``."""
+    arts = {}
+
+    def add(maker, *args, **meta_extra):
+        f, ex = maker(*args)
+        meta = {"kind": maker.__name__.removeprefix("make_")}
+        meta.update(meta_extra)
+        arts[f.__name__] = (f, ex, meta)
+
+    # -- block operators (pallas / matrix-unit algorithm)
+    add(make_star2d_block, 2, radius=2)
+    add(make_star2d_block, 4, radius=4)
+    add(make_star3d_block, 2, radius=2)
+    add(make_star3d_block, 4, radius=4)
+    add(make_box2d_block, 2, radius=2)
+    add(make_box2d_block, 3, radius=3)
+    add(make_box3d_block, 1, radius=1)
+    add(make_box3d_block, 2, radius=2)
+    add(make_transpose_block, 16)
+    add(make_rtm_vti_block, 4, radius=4)
+    add(make_rtm_tti_block, 4, radius=4)
+
+    # -- whole-grid steps (small grids for the end-to-end drivers)
+    add(make_star_grid, 3, 2, (32, 32, 32), radius=2)
+    add(make_star_grid, 3, 4, (32, 32, 32), radius=4)
+    add(make_box_grid, 3, 1, (32, 32, 32), radius=1)
+    add(make_box_grid, 3, 2, (32, 32, 32), radius=2)
+    add(make_star_grid, 2, 2, (128, 128), radius=2)
+    add(make_star_grid, 2, 4, (128, 128), radius=4)
+    add(make_box_grid, 2, 2, (128, 128), radius=2)
+    add(make_box_grid, 2, 3, (128, 128), radius=3)
+    add(make_rtm_vti_grid, (64, 64, 64), radius=4)
+    add(make_rtm_tti_grid, (32, 32, 32), radius=4)
+
+    return arts

@@ -1,0 +1,9 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+import jax
+
+# f64 test sweeps need real float64 semantics
+jax.config.update("jax_enable_x64", True)

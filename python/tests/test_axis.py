@@ -1,0 +1,134 @@
+"""Pallas axis-stencil kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps block shapes, radii and dtypes — the L1 correctness
+signal for the banded-contraction (outer-product) mapping.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import coeffs
+from compile.kernels import axis, ref
+
+RTOL = {np.float32: 2e-4, np.float64: 1e-10}
+ATOL = {np.float32: 2e-5, np.float64: 1e-12}
+
+
+def rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape).astype(dtype))
+
+
+def check(got, want, dtype):
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=RTOL[dtype], atol=ATOL[dtype]
+    )
+
+
+def rand_weights(r, dtype, seed):
+    rng = np.random.default_rng(seed + 1000)
+    return rng.standard_normal(2 * r + 1).astype(dtype)
+
+
+shape_st = st.integers(min_value=1, max_value=24)
+radius_st = st.integers(min_value=1, max_value=4)
+dtype_st = st.sampled_from([np.float32, np.float64])
+
+
+class TestAxis2D:
+    @given(vx=shape_st, vy=shape_st, r=radius_st, dtype=dtype_st, seed=st.integers(0, 99))
+    @settings(max_examples=20, deadline=None)
+    def test_axis_y_2d(self, vx, vy, r, dtype, seed):
+        w = rand_weights(r, dtype, seed)
+        x = rand((vx, vy + 2 * r), dtype, seed)
+        c = jnp.asarray(coeffs.band_matrix(w, vy, dtype=dtype))
+        check(axis.axis_y_2d(x, c), ref.axis_y_2d(x, jnp.asarray(w)), dtype)
+
+    @given(vx=shape_st, vy=shape_st, r=radius_st, dtype=dtype_st, seed=st.integers(0, 99))
+    @settings(max_examples=20, deadline=None)
+    def test_axis_x_2d(self, vx, vy, r, dtype, seed):
+        w = rand_weights(r, dtype, seed)
+        x = rand((vx + 2 * r, vy), dtype, seed)
+        ct = jnp.asarray(coeffs.band_matrix_t(w, vx, dtype=dtype))
+        check(axis.axis_x_2d(x, ct), ref.axis_x_2d(x, jnp.asarray(w)), dtype)
+
+    def test_xy_commute_on_separable_input(self):
+        # y-then-x == x-then-y for 1D stencils (they act on different axes)
+        r, vx, vy = 2, 8, 8
+        w = rand_weights(r, np.float32, 3)
+        x = rand((vx + 2 * r, vy + 2 * r), np.float32, 4)
+        cy = jnp.asarray(coeffs.band_matrix(w, vy))
+        cxt = jnp.asarray(coeffs.band_matrix_t(w, vx))
+        yx = axis.axis_x_2d(axis.axis_y_2d(x, cy), cxt)
+        xy = axis.axis_y_2d(axis.axis_x_2d(x, cxt), cy)
+        check(yx, xy, np.float32)
+
+
+class TestAxis3D:
+    @given(
+        vz=st.integers(1, 8), vx=st.integers(1, 16), vy=st.integers(1, 16),
+        r=radius_st, dtype=dtype_st, seed=st.integers(0, 99),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_axis_y_3d(self, vz, vx, vy, r, dtype, seed):
+        w = rand_weights(r, dtype, seed)
+        x = rand((vz, vx, vy + 2 * r), dtype, seed)
+        c = jnp.asarray(coeffs.band_matrix(w, vy, dtype=dtype))
+        check(axis.axis_y_3d(x, c), ref.axis_y_3d(x, jnp.asarray(w)), dtype)
+
+    @given(
+        vz=st.integers(1, 8), vx=st.integers(1, 16), vy=st.integers(1, 16),
+        r=radius_st, dtype=dtype_st, seed=st.integers(0, 99),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_axis_x_3d(self, vz, vx, vy, r, dtype, seed):
+        w = rand_weights(r, dtype, seed)
+        x = rand((vz, vx + 2 * r, vy), dtype, seed)
+        ct = jnp.asarray(coeffs.band_matrix_t(w, vx, dtype=dtype))
+        check(axis.axis_x_3d(x, ct), ref.axis_x_3d(x, jnp.asarray(w)), dtype)
+
+    @given(
+        vz=st.integers(1, 8), vx=st.integers(1, 16), vy=st.integers(1, 16),
+        r=radius_st, dtype=dtype_st, seed=st.integers(0, 99),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_axis_z_3d(self, vz, vx, vy, r, dtype, seed):
+        w = rand_weights(r, dtype, seed)
+        x = rand((vz + 2 * r, vx, vy), dtype, seed)
+        ct = jnp.asarray(coeffs.band_matrix_t(w, vz, dtype=dtype))
+        check(axis.axis_z_3d(x, ct), ref.axis_z_3d(x, jnp.asarray(w)), dtype)
+
+
+class TestAxisProperties:
+    @pytest.mark.parametrize("r", [1, 2, 4])
+    def test_linearity(self, r):
+        vx, vy = 8, 8
+        w = rand_weights(r, np.float32, 5)
+        c = jnp.asarray(coeffs.band_matrix(w, vy))
+        a = rand((vx, vy + 2 * r), np.float32, 6)
+        b = rand((vx, vy + 2 * r), np.float32, 7)
+        lhs = axis.axis_y_2d(2.0 * a + 3.0 * b, c)
+        rhs = 2.0 * axis.axis_y_2d(a, c) + 3.0 * axis.axis_y_2d(b, c)
+        check(lhs, rhs, np.float32)
+
+    @pytest.mark.parametrize("r", [1, 2, 4])
+    def test_second_deriv_kills_linear_ramp(self, r):
+        # fp32: absolute error scales with the ramp magnitude; keep it small
+        vy = 16
+        w = coeffs.SECOND_DERIV[r].astype(np.float32)
+        c = jnp.asarray(coeffs.band_matrix(w, vy))
+        ramp = jnp.arange(vy + 2 * r, dtype=jnp.float32)[None, :].repeat(4, 0) * 0.1
+        out = axis.axis_y_2d(ramp, c)
+        assert np.abs(np.asarray(out)).max() < 1e-4
+
+    def test_translation_equivariance(self):
+        r, vy = 2, 12
+        w = rand_weights(r, np.float32, 8)
+        c = jnp.asarray(coeffs.band_matrix(w, vy))
+        x = rand((4, vy + 2 * r + 1), np.float32, 9)
+        a = axis.axis_y_2d(x[:, :-1], c)
+        b = axis.axis_y_2d(x[:, 1:], c)
+        # shifted input → shifted output on the overlap
+        check(a[:, 1:], b[:, :-1], np.float32)

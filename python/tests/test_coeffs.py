@@ -1,0 +1,119 @@
+"""Coefficient-table and banded-matrix invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import coeffs
+
+
+class TestDerivTables:
+    @pytest.mark.parametrize("r", [1, 2, 3, 4])
+    def test_second_deriv_annihilates_constants(self, r):
+        # sum of second-derivative weights is 0 (constants → 0)
+        assert abs(coeffs.SECOND_DERIV[r].sum()) < 1e-12
+
+    @pytest.mark.parametrize("r", [1, 2, 3, 4])
+    def test_second_deriv_annihilates_linear(self, r):
+        w = coeffs.SECOND_DERIV[r]
+        k = np.arange(-r, r + 1)
+        assert abs((w * k).sum()) < 1e-12
+
+    @pytest.mark.parametrize("r", [1, 2, 3, 4])
+    def test_second_deriv_curvature_is_two(self, r):
+        # applied to x^2 the stencil returns exactly 2
+        w = coeffs.SECOND_DERIV[r]
+        k = np.arange(-r, r + 1)
+        assert abs((w * k**2).sum() - 2.0) < 1e-10
+
+    @pytest.mark.parametrize("r", [1, 2, 3, 4])
+    def test_second_deriv_order_of_accuracy(self, r):
+        # exact for all monomials up to degree 2r+1
+        w = coeffs.SECOND_DERIV[r]
+        k = np.arange(-r, r + 1, dtype=np.float64)
+        for p in range(3, 2 * r + 2):
+            expect = 0.0 if p != 2 else 2.0
+            assert abs((w * k**p).sum() - expect) < 1e-8, f"degree {p}"
+
+    @pytest.mark.parametrize("r", [1, 2, 3, 4])
+    def test_first_deriv_antisymmetric(self, r):
+        w = coeffs.FIRST_DERIV[r]
+        assert np.allclose(w, -w[::-1])
+        assert w[r] == 0.0
+
+    @pytest.mark.parametrize("r", [1, 2, 3, 4])
+    def test_first_deriv_slope_is_one(self, r):
+        w = coeffs.FIRST_DERIV[r]
+        k = np.arange(-r, r + 1)
+        assert abs((w * k).sum() - 1.0) < 1e-10
+
+
+class TestStarWeights:
+    @pytest.mark.parametrize("ndim", [2, 3])
+    @pytest.mark.parametrize("r", [1, 2, 3, 4])
+    def test_center_matches_laplacian(self, ndim, r):
+        wc, axes = coeffs.star_weights(ndim, r)
+        assert len(axes) == ndim
+        for w in axes:
+            assert w[r] == 0.0
+        # center = ndim * (second-derivative center)
+        assert np.isclose(wc, ndim * coeffs.SECOND_DERIV[r][r], rtol=1e-6)
+
+    def test_star_point_count(self):
+        # 3D star radius-4 has 25 points (paper Table I)
+        wc, axes = coeffs.star_weights(3, 4)
+        pts = 1 + sum(int(np.count_nonzero(w)) for w in axes)
+        assert pts == 25
+
+
+class TestBoxWeights:
+    @pytest.mark.parametrize("ndim,r,n", [(2, 2, 25), (2, 3, 49), (3, 1, 27), (3, 2, 125)])
+    def test_point_counts_match_table1(self, ndim, r, n):
+        w = coeffs.box_weights(ndim, r)
+        assert w.size == n
+        assert np.count_nonzero(w) == n  # dense: exercises full decomposition
+
+    @pytest.mark.parametrize("ndim", [2, 3])
+    @pytest.mark.parametrize("r", [1, 2, 3])
+    def test_normalized_and_deterministic(self, ndim, r):
+        w1 = coeffs.box_weights(ndim, r)
+        w2 = coeffs.box_weights(ndim, r)
+        assert np.array_equal(w1, w2)
+        assert np.isclose(np.abs(w1).sum(), 1.0, rtol=1e-5)
+
+
+class TestBandMatrix:
+    @given(
+        v=st.integers(min_value=1, max_value=40),
+        r=st.integers(min_value=1, max_value=4),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_band_structure(self, v, r):
+        w = np.arange(1, 2 * r + 2, dtype=np.float32)
+        c = coeffs.band_matrix(w, v)
+        assert c.shape == (v + 2 * r, v)
+        for j in range(v):
+            col = c[:, j]
+            assert np.array_equal(col[j : j + 2 * r + 1], w)
+            assert np.count_nonzero(col) == 2 * r + 1
+
+    @given(
+        v=st.integers(min_value=1, max_value=32),
+        r=st.integers(min_value=1, max_value=4),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_matmul_equals_direct_stencil(self, v, r):
+        rng = np.random.default_rng(v * 10 + r)
+        w = rng.standard_normal(2 * r + 1).astype(np.float32)
+        x = rng.standard_normal((3, v + 2 * r)).astype(np.float32)
+        got = x @ coeffs.band_matrix(w, v)
+        want = np.zeros((3, v))
+        for k in range(2 * r + 1):
+            want += w[k] * x[:, k : k + v]
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_band_t_is_transpose(self):
+        w = np.array([1.0, 2.0, 3.0], dtype=np.float32)
+        assert np.array_equal(
+            coeffs.band_matrix_t(w, 8), coeffs.band_matrix(w, 8).T
+        )

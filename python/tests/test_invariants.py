@@ -1,0 +1,138 @@
+"""Cross-cutting invariants of the L1/L2 kernels.
+
+These go beyond pointwise oracle agreement: linearity, shift
+equivariance, transpose involution, and leapfrog stability — the
+properties any correct stencil/propagator implementation must satisfy
+regardless of its internal (matrix-unit) formulation.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import coeffs, model
+from compile.kernels import ref, transpose
+
+seed_st = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+class TestLinearity:
+    """f(a·x + b·y) == a·f(x) + b·f(y) for every stencil kernel."""
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=seed_st)
+    def test_star3d_block_linear(self, seed):
+        f, (ex,) = model.make_star3d_block(4)
+        x, y = rand(ex.shape, seed), rand(ex.shape, seed + 1)
+        a, b = 1.7, -0.3
+        got = f(a * x + b * y)[0]
+        want = a * f(x)[0] + b * f(y)[0]
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=seed_st)
+    def test_box2d_block_linear(self, seed):
+        f, (ex,) = model.make_box2d_block(3)
+        x, y = rand(ex.shape, seed), rand(ex.shape, seed + 1)
+        got = f(2.0 * x - y)[0]
+        want = 2.0 * f(x)[0] - f(y)[0]
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+class TestShiftEquivariance:
+    """Periodic grid sweeps commute with jnp.roll."""
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=seed_st, shift=st.integers(min_value=-5, max_value=5))
+    def test_star3d_grid_shift(self, seed, shift):
+        wc, (wx, wy, wz) = coeffs.star_weights(3, 4)
+        x = rand((16, 16, 16), seed)
+        f = lambda g: ref.star3d_grid(g, jnp.float32(wc), jnp.asarray(wx), jnp.asarray(wy), jnp.asarray(wz))
+        got = f(jnp.roll(x, shift, axis=1))
+        want = jnp.roll(f(x), shift, axis=1)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=seed_st, shift=st.integers(min_value=-4, max_value=4))
+    def test_box3d_grid_shift(self, seed, shift):
+        w = jnp.asarray(coeffs.box_weights(3, 2))
+        x = rand((12, 12, 12), seed)
+        got = ref.box3d_grid(jnp.roll(x, shift, axis=0), w)
+        want = jnp.roll(ref.box3d_grid(x, w), shift, axis=0)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+class TestTranspose:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=seed_st)
+    def test_involution(self, seed):
+        x = rand((16, 16), seed)
+        tt = transpose.tile_transpose(transpose.tile_transpose(x))
+        np.testing.assert_allclose(tt, x, rtol=0, atol=0)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=seed_st)
+    def test_mxu_equals_data_movement(self, seed):
+        x = rand((16, 16), seed)
+        np.testing.assert_allclose(
+            transpose.tile_transpose_mxu(x), transpose.tile_transpose(x),
+            rtol=1e-6, atol=1e-6,
+        )
+
+
+class TestLeapfrogStability:
+    """CFL-respecting leapfrog stays bounded; violating it explodes."""
+
+    def _run(self, scale, steps=120):
+        n = 12
+        w2 = jnp.asarray(coeffs.SECOND_DERIV[4].astype(np.float32))
+        rngk = np.random.default_rng(7)
+        sh = sv = jnp.zeros((n, n, n), jnp.float32)
+        imp = np.zeros((n, n, n), np.float32)
+        imp[6, 6, 6] = 1.0
+        sh = sh + jnp.asarray(imp)
+        sv = sv + jnp.asarray(imp)
+        shp, svp = sh, sv
+        s_abs = float(np.abs(np.asarray(w2)).sum())
+        # stability limit: vp2dt2 * 3 * sum|w2| < 4 (periodic worst case)
+        vp2dt2 = jnp.full((n, n, n), scale * 4.0 / (3.0 * s_abs), jnp.float32)
+        eps = jnp.full((n, n, n), 0.1, jnp.float32)
+        delta = jnp.full((n, n, n), 0.05, jnp.float32)
+        del rngk
+        for _ in range(steps):
+            sh_new, sv_new = ref.vti_step(sh, sv, shp, svp, vp2dt2, eps, delta, w2)
+            shp, svp, sh, sv = sh, sv, sh_new, sv_new
+        return float(jnp.sum(sh * sh) + jnp.sum(sv * sv))
+
+    def test_stable_below_cfl(self):
+        e = self._run(scale=0.5)
+        assert np.isfinite(e) and e < 1e8
+
+    def test_unstable_above_cfl(self):
+        e = self._run(scale=1.8)
+        assert (not np.isfinite(e)) or e > 1e10
+
+
+class TestEnergyConservation:
+    def test_tti_h1_h2_sum_to_laplacian(self):
+        w2 = jnp.asarray(coeffs.SECOND_DERIV[4].astype(np.float32))
+        w1 = jnp.asarray(coeffs.FIRST_DERIV[4].astype(np.float32))
+        x = rand((10, 10, 10), 3)
+        th = rand((10, 10, 10), 4) * 0.3
+        ph = rand((10, 10, 10), 5) * 0.3
+        h1 = ref.tti_h1(x, th, ph, w2, w1)
+        h2 = ref.tti_h2(x, th, ph, w2, w1)
+        lap = (
+            ref.d2_axis(x, w2, 0) + ref.d2_axis(x, w2, 1) + ref.d2_axis(x, w2, 2)
+        )
+        np.testing.assert_allclose(h1 + h2, lap, rtol=1e-4, atol=1e-5)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

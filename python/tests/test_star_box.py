@@ -1,0 +1,165 @@
+"""Star and box block kernels vs oracles, plus grid/block consistency."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import coeffs
+from compile.kernels import box, ref, star
+
+RTOL, ATOL = 2e-4, 2e-5
+
+
+def rand(shape, seed, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape).astype(dtype))
+
+
+def check(got, want):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=RTOL, atol=ATOL)
+
+
+def star2d_args(r, vx, vy):
+    wc, (wx, wy) = coeffs.star_weights(2, r)
+    cy = jnp.asarray(coeffs.band_matrix(wy, vy))
+    cxt = jnp.asarray(coeffs.band_matrix_t(wx, vx))
+    return wc, wx, wy, cy, cxt
+
+
+class TestStar2D:
+    @given(
+        vx=st.integers(2, 20), vy=st.integers(2, 20), r=st.integers(1, 4),
+        seed=st.integers(0, 99),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_vs_ref(self, vx, vy, r, seed):
+        wc, wx, wy, cy, cxt = star2d_args(r, vx, vy)
+        x = rand((vx + 2 * r, vy + 2 * r), seed)
+        got = star.star2d(x, cy, cxt, jnp.asarray(np.array([wc], np.float32)))
+        want = ref.star2d(x, wc, jnp.asarray(wx), jnp.asarray(wy))
+        check(got, want)
+
+    def test_constant_field_annihilated(self):
+        # Laplacian star on a constant field = 0
+        r, v = 4, 16
+        wc, wx, wy, cy, cxt = star2d_args(r, v, v)
+        x = jnp.full((v + 2 * r, v + 2 * r), 3.25, jnp.float32)
+        got = star.star2d(x, cy, cxt, jnp.asarray(np.array([wc], np.float32)))
+        assert np.abs(np.asarray(got)).max() < 1e-4
+
+
+class TestStar3D:
+    @given(
+        vz=st.integers(1, 6), vx=st.integers(2, 16), vy=st.integers(2, 16),
+        r=st.integers(1, 4), seed=st.integers(0, 99),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_vs_ref(self, vz, vx, vy, r, seed):
+        wc, (wx, wy, wz) = coeffs.star_weights(3, r)
+        cy = jnp.asarray(coeffs.band_matrix(wy, vy))
+        cxt = jnp.asarray(coeffs.band_matrix_t(wx, vx))
+        czt = jnp.asarray(coeffs.band_matrix_t(wz, vz))
+        x = rand((vz + 2 * r, vx + 2 * r, vy + 2 * r), seed)
+        got = star.star3d(x, cy, cxt, czt, jnp.asarray(np.array([wc], np.float32)))
+        want = ref.star3d(x, wc, jnp.asarray(wx), jnp.asarray(wy), jnp.asarray(wz))
+        check(got, want)
+
+    @pytest.mark.parametrize("r", [2, 4])
+    def test_block_matches_periodic_grid_interior(self, r):
+        """Extract a halo cube from a periodic grid: block kernel must equal
+        the grid sweep at the corresponding interior points."""
+        n, vz, vx, vy = 24, 4, 8, 8
+        g = rand((n, n, n), 42)
+        wc, (wx, wy, wz) = coeffs.star_weights(3, r)
+        want_grid = ref.star3d_grid(
+            g, wc, jnp.asarray(wx), jnp.asarray(wy), jnp.asarray(wz)
+        )
+        # block at offset (z0,x0,y0)
+        z0, x0, y0 = 5, 6, 7
+        idx_z = (np.arange(z0 - r, z0 + vz + r)) % n
+        idx_x = (np.arange(x0 - r, x0 + vx + r)) % n
+        idx_y = (np.arange(y0 - r, y0 + vy + r)) % n
+        halo = jnp.asarray(np.asarray(g)[np.ix_(idx_z, idx_x, idx_y)])
+        cy = jnp.asarray(coeffs.band_matrix(wy, vy))
+        cxt = jnp.asarray(coeffs.band_matrix_t(wx, vx))
+        czt = jnp.asarray(coeffs.band_matrix_t(wz, vz))
+        got = star.star3d(halo, cy, cxt, czt, jnp.asarray(np.array([wc], np.float32)))
+        want = want_grid[z0 : z0 + vz, x0 : x0 + vx, y0 : y0 + vy]
+        check(got, want)
+
+
+class TestBox2D:
+    @given(
+        vx=st.integers(2, 20), vy=st.integers(2, 20), r=st.integers(1, 3),
+        seed=st.integers(0, 99),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_vs_ref_random_weights(self, vx, vy, r, seed):
+        rng = np.random.default_rng(seed + 500)
+        w = rng.standard_normal((2 * r + 1, 2 * r + 1)).astype(np.float32)
+        x = rand((vx + 2 * r, vy + 2 * r), seed)
+        got = box.box2d(x, jnp.asarray(box.box_bands(w, vy)))
+        want = ref.box2d(x, jnp.asarray(w))
+        check(got, want)
+
+    def test_benchmark_weights(self):
+        r, v = 3, 16
+        w = coeffs.box_weights(2, r)
+        x = rand((v + 2 * r, v + 2 * r), 7)
+        got = box.box2d(x, jnp.asarray(box.box_bands(w, v)))
+        check(got, ref.box2d(x, jnp.asarray(w)))
+
+    def test_separable_box_equals_axis_composition(self):
+        """A rank-1 (separable) box must equal y-stencil ∘ x-stencil —
+        the LoRAStencil decomposition identity."""
+        from compile.kernels import axis
+
+        r, v = 2, 10
+        rng = np.random.default_rng(11)
+        a = rng.standard_normal(2 * r + 1).astype(np.float32)
+        b = rng.standard_normal(2 * r + 1).astype(np.float32)
+        w = np.outer(a, b)
+        x = rand((v + 2 * r, v + 2 * r), 12)
+        got = box.box2d(x, jnp.asarray(box.box_bands(w, v)))
+        cy = jnp.asarray(coeffs.band_matrix(b, v))
+        cxt = jnp.asarray(coeffs.band_matrix_t(a, v))
+        want = axis.axis_x_2d(axis.axis_y_2d(x, cy), cxt)
+        check(got, want)
+
+
+class TestBox3D:
+    @given(
+        vz=st.integers(1, 5), vx=st.integers(2, 12), vy=st.integers(2, 12),
+        r=st.integers(1, 2), seed=st.integers(0, 99),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_vs_ref_random_weights(self, vz, vx, vy, r, seed):
+        rng = np.random.default_rng(seed + 900)
+        n = 2 * r + 1
+        w = rng.standard_normal((n, n, n)).astype(np.float32)
+        x = rand((vz + 2 * r, vx + 2 * r, vy + 2 * r), seed)
+        got = box.box3d(x, jnp.asarray(box.box_bands(w, vy)))
+        want = ref.box3d(x, jnp.asarray(w))
+        check(got, want)
+
+    @pytest.mark.parametrize("r", [1, 2])
+    def test_block_matches_periodic_grid_interior(self, r):
+        n, vz, vx, vy = 16, 4, 6, 6
+        g = rand((n, n, n), 77)
+        w = coeffs.box_weights(3, r)
+        want_grid = ref.box3d_grid(g, jnp.asarray(w))
+        z0, x0, y0 = 3, 4, 5
+        idx_z = (np.arange(z0 - r, z0 + vz + r)) % n
+        idx_x = (np.arange(x0 - r, x0 + vx + r)) % n
+        idx_y = (np.arange(y0 - r, y0 + vy + r)) % n
+        halo = jnp.asarray(np.asarray(g)[np.ix_(idx_z, idx_x, idx_y)])
+        got = box.box3d(halo, jnp.asarray(box.box_bands(w, vy)))
+        want = want_grid[z0 : z0 + vz, x0 : x0 + vx, y0 : y0 + vy]
+        check(got, want)
+
+    def test_box_r0_is_identity_scale(self):
+        w = np.array([[[2.5]]], dtype=np.float32)
+        x = rand((4, 6, 6), 13)
+        got = box.box3d(x, jnp.asarray(box.box_bands(w, 6)))
+        check(got, 2.5 * x)

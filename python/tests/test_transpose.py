@@ -1,0 +1,51 @@
+"""Tile-Assisted Vector Transpose kernel (paper §IV-C.b)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import transpose
+
+
+def rand(shape, seed, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape).astype(dtype))
+
+
+class TestTileTranspose:
+    @given(
+        vx=st.integers(1, 32), vy=st.integers(1, 32), seed=st.integers(0, 99),
+        dtype=st.sampled_from([np.float32, np.float64]),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_plain(self, vx, vy, seed, dtype):
+        x = rand((vx, vy), seed, dtype)
+        np.testing.assert_array_equal(
+            np.asarray(transpose.tile_transpose(x)), np.asarray(x).T
+        )
+
+    @given(vx=st.integers(1, 32), vy=st.integers(1, 32), seed=st.integers(0, 99))
+    @settings(max_examples=25, deadline=None)
+    def test_mxu_formulation(self, vx, vy, seed):
+        x = rand((vx, vy), seed)
+        np.testing.assert_allclose(
+            np.asarray(transpose.tile_transpose_mxu(x)),
+            np.asarray(x).T,
+            rtol=1e-6,
+            atol=1e-6,
+        )
+
+    def test_involution(self):
+        x = rand((16, 16), 5)
+        np.testing.assert_array_equal(
+            np.asarray(transpose.tile_transpose(transpose.tile_transpose(x))),
+            np.asarray(x),
+        )
+
+    def test_formulations_agree(self):
+        x = rand((16, 16), 6)
+        np.testing.assert_allclose(
+            np.asarray(transpose.tile_transpose(x)),
+            np.asarray(transpose.tile_transpose_mxu(x)),
+            rtol=1e-6,
+        )

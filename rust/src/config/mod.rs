@@ -1,0 +1,164 @@
+//! Typed experiment configuration loaded from `configs/*.toml`
+//! (hand-rolled TOML subset in [`toml`]; serde is unavailable offline).
+
+pub mod toml;
+
+use crate::coordinator::tiles::Strategy;
+use crate::rtm::driver::{Medium, RtmConfig};
+use crate::stencil::StencilSpec;
+
+/// A stencil-sweep experiment description.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    /// Table-I kernel name, e.g. "3DStarR4"
+    pub kernel: String,
+    pub nz: usize,
+    pub nx: usize,
+    pub ny: usize,
+    pub steps: usize,
+    pub threads: usize,
+    pub strategy: Strategy,
+    /// Cartesian ranks (pz, px, py) for multi-NUMA runs
+    pub ranks: (usize, usize, usize),
+    /// "sdma" | "mpi"
+    pub backend: String,
+}
+
+impl Default for SweepSpec {
+    fn default() -> Self {
+        Self {
+            kernel: "3DStarR4".into(),
+            nz: 64,
+            nx: 64,
+            ny: 64,
+            steps: 1,
+            threads: 4,
+            strategy: Strategy::SnoopAware,
+            ranks: (1, 1, 1),
+            backend: "sdma".into(),
+        }
+    }
+}
+
+impl SweepSpec {
+    pub fn stencil(&self) -> Option<StencilSpec> {
+        StencilSpec::by_name(&self.kernel)
+    }
+}
+
+/// Full config file: a sweep and/or an RTM run.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub title: String,
+    pub sweep: SweepSpec,
+    pub rtm: RtmConfig,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            title: "default".into(),
+            sweep: SweepSpec::default(),
+            rtm: RtmConfig::small(Medium::Vti),
+        }
+    }
+}
+
+/// Parse an experiment config from TOML text.
+pub fn from_text(text: &str) -> Result<ExperimentConfig, toml::ParseError> {
+    let doc = toml::parse(text)?;
+    let mut cfg = ExperimentConfig { title: doc.str_or("", "title", "experiment").into(), ..Default::default() };
+
+    let s = &mut cfg.sweep;
+    s.kernel = doc.str_or("sweep", "kernel", &s.kernel.clone()).to_string();
+    s.nz = doc.usize_or("sweep", "nz", s.nz);
+    s.nx = doc.usize_or("sweep", "nx", s.nx);
+    s.ny = doc.usize_or("sweep", "ny", s.ny);
+    s.steps = doc.usize_or("sweep", "steps", s.steps);
+    s.threads = doc.usize_or("sweep", "threads", s.threads);
+    s.strategy = match doc.str_or("sweep", "strategy", "snoop") {
+        "square" => Strategy::Square,
+        _ => Strategy::SnoopAware,
+    };
+    if let Some(arr) = doc.get("sweep", "ranks").and_then(toml::Value::as_array) {
+        if arr.len() == 3 {
+            s.ranks = (
+                arr[0].as_usize().unwrap_or(1),
+                arr[1].as_usize().unwrap_or(1),
+                arr[2].as_usize().unwrap_or(1),
+            );
+        }
+    }
+    s.backend = doc.str_or("sweep", "backend", &s.backend.clone()).to_string();
+
+    let r = &mut cfg.rtm;
+    r.medium = match doc.str_or("rtm", "medium", "vti") {
+        "tti" => Medium::Tti,
+        _ => Medium::Vti,
+    };
+    r.nz = doc.usize_or("rtm", "nz", r.nz);
+    r.nx = doc.usize_or("rtm", "nx", r.nx);
+    r.ny = doc.usize_or("rtm", "ny", r.ny);
+    r.dx = doc.float_or("rtm", "dx", r.dx);
+    r.steps = doc.usize_or("rtm", "steps", r.steps);
+    r.f0 = doc.float_or("rtm", "f0", r.f0);
+    r.threads = doc.usize_or("rtm", "threads", r.threads);
+    r.snap_every = doc.usize_or("rtm", "snap_every", r.snap_every);
+    r.sponge_width = doc.usize_or("rtm", "sponge_width", r.sponge_width);
+    r.receiver_z = doc.usize_or("rtm", "receiver_z", r.receiver_z);
+    Ok(cfg)
+}
+
+/// Load an experiment config from a file path.
+pub fn load(path: &str) -> Result<ExperimentConfig, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    from_text(&text).map_err(|e| format!("{path}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrip() {
+        let cfg = from_text("").unwrap();
+        assert_eq!(cfg.sweep.kernel, "3DStarR4");
+        assert!(cfg.sweep.stencil().is_some());
+    }
+
+    #[test]
+    fn full_file_parses() {
+        let cfg = from_text(
+            r#"
+title = "fig13 strong scaling"
+[sweep]
+kernel = "3DStarR4"
+nz = 128
+nx = 128
+ny = 128
+steps = 4
+threads = 8
+strategy = "snoop"
+ranks = [2, 2, 2]
+backend = "sdma"
+[rtm]
+medium = "tti"
+nz = 64
+steps = 100
+dx = 12.5
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.title, "fig13 strong scaling");
+        assert_eq!(cfg.sweep.ranks, (2, 2, 2));
+        assert_eq!(cfg.rtm.medium, crate::rtm::driver::Medium::Tti);
+        assert_eq!(cfg.rtm.nz, 64);
+        assert!((cfg.rtm.dx - 12.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unknown_kernel_is_detectable() {
+        let cfg = from_text("[sweep]\nkernel = \"9DStarR9\"\n").unwrap();
+        assert!(cfg.sweep.stencil().is_none());
+    }
+}

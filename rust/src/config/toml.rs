@@ -1,0 +1,229 @@
+//! Minimal TOML-subset parser (serde/toml are unavailable offline).
+//!
+//! Supported: `[section]` headers, `key = value` pairs with string,
+//! integer, float, boolean, and flat-array values, `#` comments.  That
+//! covers everything in `configs/*.toml`.
+
+use std::collections::BTreeMap;
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_int().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `section -> key -> value`; top-level keys live in
+/// the "" section.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Doc {
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|m| m.get(key))
+    }
+
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key).and_then(Value::as_usize).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+}
+
+/// Parse error with a line number.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+fn parse_scalar(s: &str, line: usize) -> Result<Value, ParseError> {
+    let s = s.trim();
+    if let Some(rest) = s.strip_prefix('"') {
+        let Some(inner) = rest.strip_suffix('"') else {
+            return Err(ParseError { line, msg: format!("unterminated string: {s}") });
+        };
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        let Some(inner) = s.strip_prefix('[').and_then(|t| t.strip_suffix(']')) else {
+            return Err(ParseError { line, msg: format!("unterminated array: {s}") });
+        };
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(parse_scalar(part, line)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(ParseError { line, msg: format!("cannot parse value: {s}") })
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Doc, ParseError> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    doc.sections.entry(section.clone()).or_default();
+    for (i, raw) in text.lines().enumerate() {
+        let line_no = i + 1;
+        // strip comments outside of strings (no '#' in our string values)
+        let line = match raw.split_once('#') {
+            Some((head, _)) if !head.contains('"') || head.matches('"').count() % 2 == 0 => head,
+            _ => raw,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            section = name.trim().to_string();
+            doc.sections.entry(section.clone()).or_default();
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            return Err(ParseError { line: line_no, msg: format!("expected key = value: {line}") });
+        };
+        let key = k.trim().to_string();
+        let value = parse_scalar(v, line_no)?;
+        doc.sections.get_mut(&section).unwrap().insert(key, value);
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_scalars_and_arrays() {
+        let doc = parse(
+            r#"
+# top comment
+title = "sweep"
+[grid]
+nz = 128
+dx = 10.5       # trailing comment
+periodic = true
+dims = [2, 2, 2]
+names = ["a", "b"]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "title").unwrap().as_str(), Some("sweep"));
+        assert_eq!(doc.usize_or("grid", "nz", 0), 128);
+        assert!((doc.float_or("grid", "dx", 0.0) - 10.5).abs() < 1e-12);
+        assert!(doc.bool_or("grid", "periodic", false));
+        let dims: Vec<usize> =
+            doc.get("grid", "dims").unwrap().as_array().unwrap().iter().map(|v| v.as_usize().unwrap()).collect();
+        assert_eq!(dims, vec![2, 2, 2]);
+        assert_eq!(
+            doc.get("grid", "names").unwrap().as_array().unwrap()[1].as_str(),
+            Some("b")
+        );
+    }
+
+    #[test]
+    fn defaults_fill_missing_keys() {
+        let doc = parse("[a]\nx = 1\n").unwrap();
+        assert_eq!(doc.usize_or("a", "y", 7), 7);
+        assert_eq!(doc.str_or("b", "z", "d"), "d");
+    }
+
+    #[test]
+    fn error_carries_line_number() {
+        let err = parse("ok = 1\nbroken line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = parse("x = 3\n").unwrap();
+        assert_eq!(doc.float_or("", "x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn rejects_garbage_value() {
+        assert!(parse("x = what\n").is_err());
+        assert!(parse("x = \"unterminated\n").is_err());
+    }
+}

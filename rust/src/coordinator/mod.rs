@@ -1,0 +1,17 @@
+//! The L3 coordinator: MMStencil's parallelism contribution.
+//!
+//! * [`tiles`]    — per-core tile partitioning, including the snoop-aware
+//!   narrow-Y adjacent assignment (paper §IV-E);
+//! * [`pool`]     — scoped thread pool executing tile tasks on real data;
+//! * [`exchange`] — halo exchange between rank subdomains, with both the
+//!   SDMA and the MPI cost paths (paper §IV-F, Table II);
+//! * [`pipeline`] — z-layer pipeline overlapping compute with exchange
+//!   (paper Fig. 9);
+//! * [`driver`]   — whole-sweep orchestration: grid → bricks → tiles →
+//!   threads → engine (rust-native or PJRT block artifacts) → metrics.
+
+pub mod driver;
+pub mod exchange;
+pub mod pipeline;
+pub mod pool;
+pub mod tiles;

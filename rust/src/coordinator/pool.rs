@@ -1,0 +1,127 @@
+//! Scoped thread pool for tile tasks (std threads + crossbeam scope;
+//! tokio is unavailable offline and the workload is CPU-bound).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Run `task(i)` for every index in `0..n` across `threads` workers.
+/// Work is claimed dynamically from a shared counter (no per-thread
+/// imbalance for ragged tiles).
+pub fn parallel_for(threads: usize, n: usize, task: impl Fn(usize) + Sync) {
+    if threads <= 1 || n <= 1 {
+        for i in 0..n {
+            task(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    crossbeam_utils::thread::scope(|s| {
+        for _ in 0..threads.min(n) {
+            s.spawn(|_| {
+                // workers inherit a fresh MXCSR; keep the FTZ/DAZ policy
+                // of the numeric kernels (see util::enable_flush_to_zero)
+                crate::util::enable_flush_to_zero();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    task(i);
+                }
+            });
+        }
+    })
+    .expect("worker panicked");
+}
+
+/// Run `task(chunk_index, lo, hi)` over `0..n` split into `chunks`
+/// contiguous ranges — the static assignment used by the snoop-aware
+/// schedule (adjacency requires deterministic placement).
+pub fn parallel_chunks(
+    threads: usize,
+    n: usize,
+    chunks: usize,
+    task: impl Fn(usize, usize, usize) + Sync,
+) {
+    let base = n / chunks;
+    let rem = n % chunks;
+    let bounds: Vec<(usize, usize)> = (0..chunks)
+        .scan(0usize, |lo, i| {
+            let len = base + usize::from(i < rem);
+            let out = (*lo, *lo + len);
+            *lo += len;
+            Some(out)
+        })
+        .collect();
+    parallel_for(threads, chunks, |i| {
+        let (lo, hi) = bounds[i];
+        task(i, lo, hi);
+    });
+}
+
+/// Map over indices in parallel collecting results (order preserved).
+pub fn parallel_map<T: Send>(threads: usize, n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        let slots: Vec<std::sync::Mutex<&mut Option<T>>> =
+            out.iter_mut().map(std::sync::Mutex::new).collect();
+        parallel_for(threads, n, |i| {
+            **slots[i].lock().unwrap() = Some(f(i));
+        });
+    }
+    out.into_iter().map(|v| v.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn covers_every_index_once() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(8, 1000, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let sum = AtomicU64::new(0);
+        parallel_for(1, 10, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    fn chunks_partition_range() {
+        let seen = std::sync::Mutex::new(vec![0u8; 103]);
+        parallel_chunks(4, 103, 7, |_, lo, hi| {
+            let mut s = seen.lock().unwrap();
+            for i in lo..hi {
+                s[i] += 1;
+            }
+        });
+        assert!(seen.lock().unwrap().iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let v = parallel_map(4, 64, |i| i * i);
+        assert_eq!(v[10], 100);
+        assert_eq!(v.len(), 64);
+    }
+
+    #[test]
+    fn parallel_sum_matches_serial() {
+        let data: Vec<f64> = (0..10_000).map(|i| (i as f64).sin()).collect();
+        let serial: f64 = data.iter().sum();
+        let partials = parallel_map(8, 8, |c| {
+            let lo = c * 1250;
+            data[lo..lo + 1250].iter().sum::<f64>()
+        });
+        let par: f64 = partials.iter().sum();
+        assert!((serial - par).abs() < 1e-9);
+    }
+}

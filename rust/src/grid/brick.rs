@@ -1,0 +1,188 @@
+//! SIMD-Friendly Memory Reorder (paper §IV-D.a): brick layout.
+//!
+//! The grid is reordered into `(BZ, BX, BY)` bricks stored contiguously,
+//! so a tiled stencil sweep touches few long memory streams instead of
+//! hundreds of short strided ones (the paper counts 226 distinct streams
+//! for the row layout on 3DStarR4).  The paper picks `BX = VL`, and
+//! `BY = BZ = 4` — 4 being the largest radius in typical HPC stencils and
+//! a divisor of the tile dims.
+//!
+//! Internally a bricked grid is `bricks[brick_index][bz*BX*BY + bx*BY + by]`
+//! flattened into one contiguous buffer; brick order is row-major over the
+//! brick grid `(z, x, y)` so neighbouring bricks along y are adjacent.
+
+use super::Grid3;
+
+/// Brick dimensions. Paper default: (4, 16, 4) in (z, x, y) order
+/// (`BX = VL = 16`, `BY = BZ = 4`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BrickDims {
+    pub bz: usize,
+    pub bx: usize,
+    pub by: usize,
+}
+
+impl Default for BrickDims {
+    fn default() -> Self {
+        Self { bz: 4, bx: 16, by: 4 }
+    }
+}
+
+impl BrickDims {
+    pub fn volume(&self) -> usize {
+        self.bz * self.bx * self.by
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.volume() * 4
+    }
+}
+
+/// A grid stored in brick layout.
+#[derive(Clone, Debug)]
+pub struct BrickLayout {
+    pub dims: BrickDims,
+    /// Brick-grid shape (number of bricks per axis).
+    pub gz: usize,
+    pub gx: usize,
+    pub gy: usize,
+    /// Original grid shape.
+    pub nz: usize,
+    pub nx: usize,
+    pub ny: usize,
+    pub data: Vec<f32>,
+}
+
+impl BrickLayout {
+    /// Reorder `g` into bricks.  Grid dims must be divisible by the brick
+    /// dims (the coordinator pads domains to brick multiples).
+    pub fn from_grid(g: &Grid3, dims: BrickDims) -> Self {
+        assert_eq!(g.nz % dims.bz, 0, "nz {} % bz {}", g.nz, dims.bz);
+        assert_eq!(g.nx % dims.bx, 0, "nx {} % bx {}", g.nx, dims.bx);
+        assert_eq!(g.ny % dims.by, 0, "ny {} % by {}", g.ny, dims.by);
+        let (gz, gx, gy) = (g.nz / dims.bz, g.nx / dims.bx, g.ny / dims.by);
+        let mut data = vec![0.0f32; g.len()];
+        let vol = dims.volume();
+        for bz in 0..gz {
+            for bx in 0..gx {
+                for by in 0..gy {
+                    let base = ((bz * gx + bx) * gy + by) * vol;
+                    for iz in 0..dims.bz {
+                        for ix in 0..dims.bx {
+                            let src = g.idx(bz * dims.bz + iz, bx * dims.bx + ix, by * dims.by);
+                            let dst = base + (iz * dims.bx + ix) * dims.by;
+                            data[dst..dst + dims.by]
+                                .copy_from_slice(&g.data[src..src + dims.by]);
+                        }
+                    }
+                }
+            }
+        }
+        Self { dims, gz, gx, gy, nz: g.nz, nx: g.nx, ny: g.ny, data }
+    }
+
+    /// Inverse transform back to a row-major grid.
+    pub fn to_grid(&self) -> Grid3 {
+        let mut g = Grid3::zeros(self.nz, self.nx, self.ny);
+        let vol = self.dims.volume();
+        for bz in 0..self.gz {
+            for bx in 0..self.gx {
+                for by in 0..self.gy {
+                    let base = ((bz * self.gx + bx) * self.gy + by) * vol;
+                    for iz in 0..self.dims.bz {
+                        for ix in 0..self.dims.bx {
+                            let dst = g.idx(
+                                bz * self.dims.bz + iz,
+                                bx * self.dims.bx + ix,
+                                by * self.dims.by,
+                            );
+                            let src = base + (iz * self.dims.bx + ix) * self.dims.by;
+                            g.data[dst..dst + self.dims.by]
+                                .copy_from_slice(&self.data[src..src + self.dims.by]);
+                        }
+                    }
+                }
+            }
+        }
+        g
+    }
+
+    /// Flat index of the brick containing grid point `(z, x, y)`.
+    #[inline]
+    pub fn brick_of(&self, z: usize, x: usize, y: usize) -> usize {
+        ((z / self.dims.bz) * self.gx + x / self.dims.bx) * self.gy + y / self.dims.by
+    }
+
+    /// Element access through the brick layout (for verification).
+    pub fn get(&self, z: usize, x: usize, y: usize) -> f32 {
+        let b = self.brick_of(z, x, y);
+        let (iz, ix, iy) = (z % self.dims.bz, x % self.dims.bx, y % self.dims.by);
+        self.data[b * self.dims.volume() + (iz * self.dims.bx + ix) * self.dims.by + iy]
+    }
+
+    /// Number of bricks a halo-extended block `(bz..+lz, bx..+lx, by..+ly)`
+    /// (in grid coords, may be unaligned) intersects — the brick scheme
+    /// loads whole bricks whenever the halo intersects them.
+    pub fn bricks_touched(&self, z0: usize, x0: usize, y0: usize, lz: usize, lx: usize, ly: usize) -> usize {
+        let zb = (z0 + lz).div_ceil(self.dims.bz) - z0 / self.dims.bz;
+        let xb = (x0 + lx).div_ceil(self.dims.bx) - x0 / self.dims.bx;
+        let yb = (y0 + ly).div_ceil(self.dims.by) - y0 / self.dims.by;
+        zb * xb * yb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_preserves_grid() {
+        let g = Grid3::random(8, 32, 8, 5);
+        let b = BrickLayout::from_grid(&g, BrickDims::default());
+        assert_eq!(b.to_grid(), g);
+    }
+
+    #[test]
+    fn get_matches_grid() {
+        let g = Grid3::random(4, 16, 8, 6);
+        let b = BrickLayout::from_grid(&g, BrickDims::default());
+        for z in 0..4 {
+            for x in 0..16 {
+                for y in 0..8 {
+                    assert_eq!(b.get(z, x, y), g.get(z, x, y));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn brick_is_contiguous() {
+        // all elements of brick 0 occupy data[0..vol]
+        let g = Grid3::from_fn(4, 16, 4, |z, x, y| (z * 64 + x * 4 + y) as f32);
+        let b = BrickLayout::from_grid(&g, BrickDims::default());
+        let vol = b.dims.volume();
+        let first: Vec<f32> = b.data[..vol].to_vec();
+        // brick 0 holds exactly the whole (4,16,4) grid here
+        assert_eq!(first.len(), g.len());
+        assert_eq!(b.gz * b.gx * b.gy, 1);
+    }
+
+    #[test]
+    fn bricks_touched_counts_halo_overlap() {
+        let g = Grid3::zeros(8, 32, 8);
+        let b = BrickLayout::from_grid(&g, BrickDims::default());
+        // aligned block exactly one brick
+        assert_eq!(b.bricks_touched(0, 0, 0, 4, 16, 4), 1);
+        // halo of 4 on each side of y pulls in neighbours
+        assert_eq!(b.bricks_touched(0, 0, 0, 4, 16, 8), 2);
+        // unaligned in z
+        assert_eq!(b.bricks_touched(2, 0, 0, 4, 16, 4), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "% bx")]
+    fn rejects_non_divisible() {
+        let g = Grid3::zeros(4, 17, 4);
+        BrickLayout::from_grid(&g, BrickDims::default());
+    }
+}

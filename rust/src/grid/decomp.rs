@@ -1,0 +1,175 @@
+//! Cartesian domain decomposition across ranks (simulated NUMA processes).
+//!
+//! The multi-process experiments (paper §V-E) partition a global grid
+//! `(1,1,1) → (2,2,2) → (2,2,4)` over NUMA domains; each rank owns an
+//! interior block plus halos, and exchanges faces with up to 6 neighbours.
+
+use super::halo::{Axis, Side};
+
+/// A Cartesian process decomposition `(pz, px, py)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CartDecomp {
+    pub pz: usize,
+    pub px: usize,
+    pub py: usize,
+}
+
+/// One rank's block of the global domain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RankBlock {
+    pub rank: usize,
+    /// Coordinates in the process grid.
+    pub cz: usize,
+    pub cx: usize,
+    pub cy: usize,
+    /// Owned global index ranges (half-open).
+    pub z0: usize,
+    pub z1: usize,
+    pub x0: usize,
+    pub x1: usize,
+    pub y0: usize,
+    pub y1: usize,
+}
+
+impl RankBlock {
+    pub fn dims(&self) -> (usize, usize, usize) {
+        (self.z1 - self.z0, self.x1 - self.x0, self.y1 - self.y0)
+    }
+
+    pub fn cells(&self) -> usize {
+        let (a, b, c) = self.dims();
+        a * b * c
+    }
+}
+
+impl CartDecomp {
+    pub fn new(pz: usize, px: usize, py: usize) -> Self {
+        assert!(pz >= 1 && px >= 1 && py >= 1);
+        Self { pz, px, py }
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.pz * self.px * self.py
+    }
+
+    pub fn coords(&self, rank: usize) -> (usize, usize, usize) {
+        assert!(rank < self.ranks());
+        let cy = rank % self.py;
+        let cx = (rank / self.py) % self.px;
+        let cz = rank / (self.py * self.px);
+        (cz, cx, cy)
+    }
+
+    pub fn rank_of(&self, cz: usize, cx: usize, cy: usize) -> usize {
+        (cz * self.px + cx) * self.py + cy
+    }
+
+    /// Split `n` cells into `p` near-equal chunks; chunk `i` gets range.
+    fn split(n: usize, p: usize, i: usize) -> (usize, usize) {
+        let base = n / p;
+        let rem = n % p;
+        let lo = i * base + i.min(rem);
+        let hi = lo + base + usize::from(i < rem);
+        (lo, hi)
+    }
+
+    /// The block owned by `rank` for a global `(nz, nx, ny)` grid.
+    pub fn block(&self, rank: usize, nz: usize, nx: usize, ny: usize) -> RankBlock {
+        let (cz, cx, cy) = self.coords(rank);
+        let (z0, z1) = Self::split(nz, self.pz, cz);
+        let (x0, x1) = Self::split(nx, self.px, cx);
+        let (y0, y1) = Self::split(ny, self.py, cy);
+        RankBlock { rank, cz, cx, cy, z0, z1, x0, x1, y0, y1 }
+    }
+
+    /// Neighbour rank of `rank` on (`axis`, `side`), if inside the grid
+    /// (no periodic process topology — matches the paper's halo setup).
+    pub fn neighbor(&self, rank: usize, axis: Axis, side: Side) -> Option<usize> {
+        let (cz, cx, cy) = self.coords(rank);
+        let step = |c: usize, p: usize| -> Option<usize> {
+            match side {
+                Side::Low => c.checked_sub(1),
+                Side::High => (c + 1 < p).then_some(c + 1),
+            }
+        };
+        match axis {
+            Axis::Z => step(cz, self.pz).map(|c| self.rank_of(c, cx, cy)),
+            Axis::X => step(cx, self.px).map(|c| self.rank_of(cz, c, cy)),
+            Axis::Y => step(cy, self.py).map(|c| self.rank_of(cz, cx, c)),
+        }
+    }
+
+    /// All (rank, axis, side, neighbor) exchange pairs, each listed once
+    /// from the lower rank's perspective.
+    pub fn exchange_pairs(&self) -> Vec<(usize, Axis, usize)> {
+        let mut out = Vec::new();
+        for rank in 0..self.ranks() {
+            for axis in [Axis::Z, Axis::X, Axis::Y] {
+                if let Some(nb) = self.neighbor(rank, axis, Side::High) {
+                    out.push((rank, axis, nb));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn coords_roundtrip() {
+        let d = CartDecomp::new(2, 2, 4);
+        for r in 0..d.ranks() {
+            let (cz, cx, cy) = d.coords(r);
+            assert_eq!(d.rank_of(cz, cx, cy), r);
+        }
+    }
+
+    #[test]
+    fn blocks_tile_the_domain_exactly() {
+        forall(50, 0xD1CE, |rng| {
+            let d = CartDecomp::new(rng.range(1, 3), rng.range(1, 3), rng.range(1, 4));
+            let (nz, nx, ny) = (rng.range(4, 40), rng.range(4, 40), rng.range(4, 40));
+            let mut covered = 0usize;
+            for r in 0..d.ranks() {
+                let b = d.block(r, nz, nx, ny);
+                assert!(b.z1 <= nz && b.x1 <= nx && b.y1 <= ny);
+                assert!(b.z0 < b.z1 && b.x0 < b.x1 && b.y0 < b.y1);
+                covered += b.cells();
+            }
+            assert_eq!(covered, nz * nx * ny, "blocks must partition the grid");
+        });
+    }
+
+    #[test]
+    fn neighbors_are_symmetric() {
+        let d = CartDecomp::new(2, 2, 2);
+        for r in 0..d.ranks() {
+            for axis in [Axis::Z, Axis::X, Axis::Y] {
+                if let Some(nb) = d.neighbor(r, axis, Side::High) {
+                    assert_eq!(d.neighbor(nb, axis, Side::Low), Some(r));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn boundary_ranks_have_no_outside_neighbor() {
+        let d = CartDecomp::new(1, 1, 4);
+        assert_eq!(d.neighbor(0, Axis::Y, Side::Low), None);
+        assert_eq!(d.neighbor(3, Axis::Y, Side::High), None);
+        assert_eq!(d.neighbor(0, Axis::Z, Side::Low), None);
+        assert_eq!(d.neighbor(0, Axis::Z, Side::High), None);
+    }
+
+    #[test]
+    fn exchange_pairs_count() {
+        // (2,2,2): 12 internal faces
+        assert_eq!(CartDecomp::new(2, 2, 2).exchange_pairs().len(), 12);
+        // (1,1,2): 1
+        assert_eq!(CartDecomp::new(1, 1, 2).exchange_pairs().len(), 1);
+    }
+}

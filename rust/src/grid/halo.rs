@@ -1,0 +1,223 @@
+//! Halo regions and face extraction for domain decomposition.
+//!
+//! A subdomain owns an interior `(nz, nx, ny)` region stored with a halo
+//! of width `h` on every face (allocated `(nz+2h, nx+2h, ny+2h)`).
+//! Face pack/unpack is the data path of the SDMA / MPI halo exchange
+//! (paper §IV-F, Table II).
+
+use super::Grid3;
+
+/// Axis of a halo face.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Axis {
+    Z,
+    X,
+    Y,
+}
+
+/// Side of a face on its axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Side {
+    Low,
+    High,
+}
+
+/// A grid with halo storage.
+#[derive(Clone, Debug)]
+pub struct HaloGrid {
+    /// Interior dims.
+    pub nz: usize,
+    pub nx: usize,
+    pub ny: usize,
+    /// Halo width.
+    pub h: usize,
+    /// Backing storage, shape (nz+2h, nx+2h, ny+2h).
+    pub grid: Grid3,
+}
+
+impl HaloGrid {
+    pub fn zeros(nz: usize, nx: usize, ny: usize, h: usize) -> Self {
+        Self { nz, nx, ny, h, grid: Grid3::zeros(nz + 2 * h, nx + 2 * h, ny + 2 * h) }
+    }
+
+    /// Interior accessor (interior coordinates, halo-offset applied).
+    #[inline(always)]
+    pub fn get(&self, z: usize, x: usize, y: usize) -> f32 {
+        self.grid.get(z + self.h, x + self.h, y + self.h)
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, z: usize, x: usize, y: usize, v: f32) {
+        self.grid.set(z + self.h, x + self.h, y + self.h, v);
+    }
+
+    /// Fill the interior from a packed (z,x,y) buffer.
+    pub fn fill_interior(&mut self, src: &[f32]) {
+        assert_eq!(src.len(), self.nz * self.nx * self.ny);
+        for z in 0..self.nz {
+            for x in 0..self.nx {
+                let s = (z * self.nx + x) * self.ny;
+                let d = self.grid.idx(z + self.h, x + self.h, self.h);
+                self.grid.data[d..d + self.ny].copy_from_slice(&src[s..s + self.ny]);
+            }
+        }
+    }
+
+    /// Extract the interior as a packed buffer.
+    pub fn interior(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.nz * self.nx * self.ny);
+        for z in 0..self.nz {
+            for x in 0..self.nx {
+                let s = self.grid.idx(z + self.h, x + self.h, self.h);
+                out.extend_from_slice(&self.grid.data[s..s + self.ny]);
+            }
+        }
+        out
+    }
+
+    /// Shape (in elements) of the face slab on `axis`: `h` deep, full
+    /// *storage* cross-section (incl. halos) of the other axes — full
+    /// extents let an axis-ordered exchange (Z, X, Y) propagate edge and
+    /// corner halos through shared neighbours.
+    pub fn face_len(&self, axis: Axis) -> usize {
+        let (sz, sx, sy) = (self.nz + 2 * self.h, self.nx + 2 * self.h, self.ny + 2 * self.h);
+        match axis {
+            Axis::Z => self.h * sx * sy,
+            Axis::X => sz * self.h * sy,
+            Axis::Y => sz * sx * self.h,
+        }
+    }
+
+    /// Pack the *interior-boundary* slab that a neighbour on (`axis`,
+    /// `side`) needs for its halo: the first/last `h` interior layers,
+    /// full storage extent in the other axes (incl. their halos — filled
+    /// or not; axis-ordered exchange makes corners correct).
+    pub fn pack_face(&self, axis: Axis, side: Side) -> Vec<f32> {
+        let h = self.h;
+        let (sz, sx, sy) = (self.nz + 2 * h, self.nx + 2 * h, self.ny + 2 * h);
+        // storage-coordinate ranges
+        let (z0, z1, x0, x1, y0, y1) = match (axis, side) {
+            (Axis::Z, Side::Low) => (h, 2 * h, 0, sx, 0, sy),
+            (Axis::Z, Side::High) => (self.nz, self.nz + h, 0, sx, 0, sy),
+            (Axis::X, Side::Low) => (0, sz, h, 2 * h, 0, sy),
+            (Axis::X, Side::High) => (0, sz, self.nx, self.nx + h, 0, sy),
+            (Axis::Y, Side::Low) => (0, sz, 0, sx, h, 2 * h),
+            (Axis::Y, Side::High) => (0, sz, 0, sx, self.ny, self.ny + h),
+        };
+        let mut out = Vec::with_capacity((z1 - z0) * (x1 - x0) * (y1 - y0));
+        for z in z0..z1 {
+            for x in x0..x1 {
+                for y in y0..y1 {
+                    out.push(self.grid.get(z, x, y));
+                }
+            }
+        }
+        out
+    }
+
+    /// Unpack a received face slab into the halo on (`axis`, `side`)
+    /// (full storage extent in the other axes, mirroring [`pack_face`]).
+    pub fn unpack_halo(&mut self, axis: Axis, side: Side, buf: &[f32]) {
+        assert_eq!(buf.len(), self.face_len(axis));
+        let h = self.h;
+        let (sz, sx, sy) = (self.nz + 2 * h, self.nx + 2 * h, self.ny + 2 * h);
+        let (z0, z1, x0, x1, y0, y1) = match (axis, side) {
+            (Axis::Z, Side::Low) => (0, h, 0, sx, 0, sy),
+            (Axis::Z, Side::High) => (self.nz + h, sz, 0, sx, 0, sy),
+            (Axis::X, Side::Low) => (0, sz, 0, h, 0, sy),
+            (Axis::X, Side::High) => (0, sz, self.nx + h, sx, 0, sy),
+            (Axis::Y, Side::Low) => (0, sz, 0, sx, 0, h),
+            (Axis::Y, Side::High) => (0, sz, 0, sx, self.ny + h, sy),
+        };
+        let mut it = buf.iter();
+        for z in z0..z1 {
+            for x in x0..x1 {
+                for y in y0..y1 {
+                    self.grid.set(z, x, y, *it.next().unwrap());
+                }
+            }
+        }
+    }
+
+    /// Bytes moved by one exchange of this face (both pack directions).
+    pub fn face_bytes(&self, axis: Axis) -> usize {
+        self.face_len(axis) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(nz: usize, nx: usize, ny: usize, h: usize) -> HaloGrid {
+        let mut g = HaloGrid::zeros(nz, nx, ny, h);
+        for z in 0..nz {
+            for x in 0..nx {
+                for y in 0..ny {
+                    g.set(z, x, y, (z * 10000 + x * 100 + y) as f32);
+                }
+            }
+        }
+        g
+    }
+
+    #[test]
+    fn interior_roundtrip() {
+        let g = filled(3, 4, 5, 2);
+        let mut h = HaloGrid::zeros(3, 4, 5, 2);
+        h.fill_interior(&g.interior());
+        assert_eq!(h.interior(), g.interior());
+    }
+
+    #[test]
+    fn face_lens() {
+        let g = HaloGrid::zeros(6, 8, 10, 2);
+        assert_eq!(g.face_len(Axis::Z), 2 * 12 * 14);
+        assert_eq!(g.face_len(Axis::X), 10 * 2 * 14);
+        assert_eq!(g.face_len(Axis::Y), 10 * 12 * 2);
+    }
+
+    #[test]
+    fn exchange_between_neighbours_matches_global() {
+        // two subdomains split along Y of a conceptual (2,2,8) global grid
+        let h = 1;
+        let mut a = HaloGrid::zeros(2, 2, 4, h);
+        let mut b = HaloGrid::zeros(2, 2, 4, h);
+        for z in 0..2 {
+            for x in 0..2 {
+                for y in 0..4 {
+                    a.set(z, x, y, (100 + z * 20 + x * 10 + y) as f32);
+                    b.set(z, x, y, (200 + z * 20 + x * 10 + y) as f32);
+                }
+            }
+        }
+        // a's high-Y halo ← b's low-Y interior; b's low-Y halo ← a's high-Y
+        let to_a = b.pack_face(Axis::Y, Side::Low);
+        let to_b = a.pack_face(Axis::Y, Side::High);
+        a.unpack_halo(Axis::Y, Side::High, &to_a);
+        b.unpack_halo(Axis::Y, Side::Low, &to_b);
+        // a's halo column y = ny (storage y = h + ny) equals b(z, x, 0)
+        for z in 0..2 {
+            for x in 0..2 {
+                assert_eq!(
+                    a.grid.get(z + h, x + h, h + 4),
+                    b.get(z, x, 0),
+                    "z={z} x={x}"
+                );
+                assert_eq!(b.grid.get(z + h, x + h, 0), a.get(z, x, 3));
+            }
+        }
+    }
+
+    #[test]
+    fn pack_unpack_all_faces_consistent_sizes() {
+        let mut g = filled(4, 5, 6, 2);
+        for axis in [Axis::Z, Axis::X, Axis::Y] {
+            for side in [Side::Low, Side::High] {
+                let buf = g.pack_face(axis, side);
+                assert_eq!(buf.len(), g.face_len(axis));
+                g.unpack_halo(axis, side, &buf); // must not panic
+            }
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! Grid containers and layout transforms.
+//!
+//! Layout convention (mirrors the python oracles): 3D grids are indexed
+//! `(z, x, y)` with z slowest and y contiguous; 2D grids are `(x, y)` with
+//! y contiguous.
+
+pub mod brick;
+pub mod decomp;
+pub mod halo;
+
+pub use brick::BrickLayout;
+pub use decomp::CartDecomp;
+
+/// Dense 3D grid of f32, row-major `(z, x, y)`, y contiguous.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Grid3 {
+    pub nz: usize,
+    pub nx: usize,
+    pub ny: usize,
+    pub data: Vec<f32>,
+}
+
+impl Grid3 {
+    pub fn zeros(nz: usize, nx: usize, ny: usize) -> Self {
+        Self { nz, nx, ny, data: vec![0.0; nz * nx * ny] }
+    }
+
+    pub fn from_fn(nz: usize, nx: usize, ny: usize, mut f: impl FnMut(usize, usize, usize) -> f32) -> Self {
+        let mut g = Self::zeros(nz, nx, ny);
+        for z in 0..nz {
+            for x in 0..nx {
+                for y in 0..ny {
+                    let i = g.idx(z, x, y);
+                    g.data[i] = f(z, x, y);
+                }
+            }
+        }
+        g
+    }
+
+    pub fn random(nz: usize, nx: usize, ny: usize, seed: u64) -> Self {
+        let mut rng = crate::util::XorShift::new(seed);
+        let mut g = Self::zeros(nz, nx, ny);
+        rng.fill_normal(&mut g.data);
+        g
+    }
+
+    #[inline(always)]
+    pub fn idx(&self, z: usize, x: usize, y: usize) -> usize {
+        debug_assert!(z < self.nz && x < self.nx && y < self.ny);
+        (z * self.nx + x) * self.ny + y
+    }
+
+    #[inline(always)]
+    pub fn get(&self, z: usize, x: usize, y: usize) -> f32 {
+        self.data[self.idx(z, x, y)]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, z: usize, x: usize, y: usize, v: f32) {
+        let i = self.idx(z, x, y);
+        self.data[i] = v;
+    }
+
+    /// Periodic (wrapped) access — matches the jnp.roll oracles.
+    #[inline]
+    pub fn get_wrap(&self, z: isize, x: isize, y: isize) -> f32 {
+        let z = z.rem_euclid(self.nz as isize) as usize;
+        let x = x.rem_euclid(self.nx as isize) as usize;
+        let y = y.rem_euclid(self.ny as isize) as usize;
+        self.get(z, x, y)
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.nz, self.nx, self.ny)
+    }
+
+    /// Extract a sub-block `(z0..z0+bz, x0..x0+bx, y0..y0+by)` with
+    /// periodic wrap into a packed buffer (z,x,y order).
+    pub fn extract_wrap(&self, z0: isize, x0: isize, y0: isize, bz: usize, bx: usize, by: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(bz * bx * by);
+        for dz in 0..bz as isize {
+            for dx in 0..bx as isize {
+                for dy in 0..by as isize {
+                    out.push(self.get_wrap(z0 + dz, x0 + dx, y0 + dy));
+                }
+            }
+        }
+        out
+    }
+
+    /// Copy a packed (z,x,y) block into the grid at `(z0, x0, y0)`
+    /// (no wrap; caller must stay in bounds).
+    pub fn insert_block(&mut self, z0: usize, x0: usize, y0: usize, bz: usize, bx: usize, by: usize, block: &[f32]) {
+        assert_eq!(block.len(), bz * bx * by);
+        for dz in 0..bz {
+            for dx in 0..bx {
+                let src = (dz * bx + dx) * by;
+                let dst = self.idx(z0 + dz, x0 + dx, y0);
+                self.data[dst..dst + by].copy_from_slice(&block[src..src + by]);
+            }
+        }
+    }
+
+    /// Max |a - b| over two equal-shaped grids.
+    pub fn max_abs_diff(&self, other: &Self) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Sum of squares (energy) — used by the RTM driver's trace log.
+    pub fn energy(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+}
+
+/// Dense 2D grid of f32, row-major `(x, y)`, y contiguous.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Grid2 {
+    pub nx: usize,
+    pub ny: usize,
+    pub data: Vec<f32>,
+}
+
+impl Grid2 {
+    pub fn zeros(nx: usize, ny: usize) -> Self {
+        Self { nx, ny, data: vec![0.0; nx * ny] }
+    }
+
+    pub fn random(nx: usize, ny: usize, seed: u64) -> Self {
+        let mut rng = crate::util::XorShift::new(seed);
+        let mut g = Self::zeros(nx, ny);
+        rng.fill_normal(&mut g.data);
+        g
+    }
+
+    #[inline(always)]
+    pub fn idx(&self, x: usize, y: usize) -> usize {
+        debug_assert!(x < self.nx && y < self.ny);
+        x * self.ny + y
+    }
+
+    #[inline(always)]
+    pub fn get(&self, x: usize, y: usize) -> f32 {
+        self.data[self.idx(x, y)]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, x: usize, y: usize, v: f32) {
+        let i = self.idx(x, y);
+        self.data[i] = v;
+    }
+
+    #[inline]
+    pub fn get_wrap(&self, x: isize, y: isize) -> f32 {
+        let x = x.rem_euclid(self.nx as isize) as usize;
+        let y = y.rem_euclid(self.ny as isize) as usize;
+        self.get(x, y)
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.nx, self.ny)
+    }
+
+    pub fn max_abs_diff(&self, other: &Self) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idx_is_y_contiguous() {
+        let g = Grid3::zeros(2, 3, 4);
+        assert_eq!(g.idx(0, 0, 0), 0);
+        assert_eq!(g.idx(0, 0, 1), 1);
+        assert_eq!(g.idx(0, 1, 0), 4);
+        assert_eq!(g.idx(1, 0, 0), 12);
+    }
+
+    #[test]
+    fn wrap_access() {
+        let g = Grid3::from_fn(2, 2, 2, |z, x, y| (z * 4 + x * 2 + y) as f32);
+        assert_eq!(g.get_wrap(-1, 0, 0), g.get(1, 0, 0));
+        assert_eq!(g.get_wrap(2, 3, -2), g.get(0, 1, 0));
+    }
+
+    #[test]
+    fn extract_insert_roundtrip() {
+        let g = Grid3::random(4, 6, 8, 3);
+        let block = g.extract_wrap(1, 2, 3, 2, 3, 4);
+        let mut h = Grid3::zeros(4, 6, 8);
+        h.insert_block(1, 2, 3, 2, 3, 4, &block);
+        for z in 1..3 {
+            for x in 2..5 {
+                for y in 3..7 {
+                    assert_eq!(h.get(z, x, y), g.get(z, x, y));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn energy_of_unit_impulse() {
+        let mut g = Grid3::zeros(3, 3, 3);
+        g.set(1, 1, 1, 2.0);
+        assert_eq!(g.energy(), 4.0);
+    }
+}

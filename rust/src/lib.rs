@@ -1,0 +1,25 @@
+//! # MMStencil
+//!
+//! A reproduction of *MMStencil: Optimizing High-order Stencils on
+//! Multicore CPU using Matrix Unit* (CS.DC 2025) as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * **L1** (`python/compile/kernels/`) — the matrix-unit stencil
+//!   algorithm as Pallas banded-matrix contractions, AOT-lowered;
+//! * **L2** (`python/compile/model.py`) — whole-grid JAX models;
+//! * **L3** (this crate) — the coordinator: domain decomposition, brick
+//!   layout, cache-snoop-aware multi-thread scheduling, SDMA/MPI halo
+//!   exchange with pipeline overlap, the RTM application driver, and a
+//!   parametric simulator of the paper's (confidential) multicore SoC.
+//!
+//! See DESIGN.md for the system inventory and per-experiment index.
+
+pub mod config;
+pub mod coordinator;
+pub mod grid;
+pub mod metrics;
+pub mod rtm;
+pub mod runtime;
+pub mod simulator;
+pub mod stencil;
+pub mod util;

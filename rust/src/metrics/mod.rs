@@ -1,0 +1,213 @@
+//! Run records and the paper's reporting metrics: GStencil/s,
+//! bandwidth utilization, speedups, plus CSV/markdown export for the
+//! bench harness (criterion is unavailable offline — `util::bench` does
+//! the timing, this module does the bookkeeping).
+
+use crate::stencil::StencilSpec;
+
+/// The paper's bandwidth-utilization metric (§III-B d):
+/// `2 · sizeof(datatype) · stencils_per_s / peak_bandwidth`.
+pub fn bandwidth_utilization(stencils_per_s: f64, elem_bytes: usize, peak_bw: f64) -> f64 {
+    2.0 * elem_bytes as f64 * stencils_per_s / peak_bw
+}
+
+/// GStencil/s from a cell count and elapsed seconds.
+pub fn gstencils_per_s(cells: usize, secs: f64) -> f64 {
+    cells as f64 / secs / 1e9
+}
+
+/// Effective GFLOP/s of a sweep.
+pub fn gflops_per_s(spec: &StencilSpec, cells: usize, secs: f64) -> f64 {
+    spec.flops_per_point() as f64 * cells as f64 / secs / 1e9
+}
+
+/// One experiment measurement, as reported in EXPERIMENTS.md.
+#[derive(Clone, Debug)]
+pub struct RunRecord {
+    /// experiment id, e.g. "fig11" / "tab02"
+    pub experiment: String,
+    /// series within the experiment, e.g. "MMStencil" / "SIMD"
+    pub series: String,
+    /// workload label, e.g. "3DStarR4" or "X-direction"
+    pub workload: String,
+    /// metric name, e.g. "bandwidth_util" / "GB/s" / "time_s"
+    pub metric: String,
+    pub value: f64,
+    /// paper's value for the same cell, if stated (for the delta column)
+    pub paper_value: Option<f64>,
+}
+
+impl RunRecord {
+    pub fn new(
+        experiment: &str,
+        series: &str,
+        workload: &str,
+        metric: &str,
+        value: f64,
+    ) -> Self {
+        Self {
+            experiment: experiment.into(),
+            series: series.into(),
+            workload: workload.into(),
+            metric: metric.into(),
+            value,
+            paper_value: None,
+        }
+    }
+
+    pub fn with_paper(mut self, v: f64) -> Self {
+        self.paper_value = Some(v);
+        self
+    }
+
+    /// measured / paper ratio (1.0 = exact match), if paper value known.
+    pub fn ratio_to_paper(&self) -> Option<f64> {
+        self.paper_value.map(|p| self.value / p)
+    }
+}
+
+/// A set of run records with export helpers.
+#[derive(Clone, Debug, Default)]
+pub struct RecordSet {
+    pub records: Vec<RunRecord>,
+}
+
+impl RecordSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, r: RunRecord) {
+        self.records.push(r);
+    }
+
+    pub fn add(
+        &mut self,
+        experiment: &str,
+        series: &str,
+        workload: &str,
+        metric: &str,
+        value: f64,
+    ) {
+        self.push(RunRecord::new(experiment, series, workload, metric, value));
+    }
+
+    /// CSV with a fixed header; `paper` column empty when unknown.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("experiment,series,workload,metric,value,paper\n");
+        for r in &self.records {
+            s.push_str(&format!(
+                "{},{},{},{},{:.6e},{}\n",
+                r.experiment,
+                r.series,
+                r.workload,
+                r.metric,
+                r.value,
+                r.paper_value.map(|v| format!("{v:.6e}")).unwrap_or_default()
+            ));
+        }
+        s
+    }
+
+    /// Markdown table (series × workload) for one metric.
+    pub fn to_markdown(&self, metric: &str, prec: usize) -> String {
+        let mut workloads: Vec<&str> = Vec::new();
+        let mut series: Vec<&str> = Vec::new();
+        for r in self.records.iter().filter(|r| r.metric == metric) {
+            if !workloads.contains(&r.workload.as_str()) {
+                workloads.push(&r.workload);
+            }
+            if !series.contains(&r.series.as_str()) {
+                series.push(&r.series);
+            }
+        }
+        let mut out = String::from("| series |");
+        for w in &workloads {
+            out.push_str(&format!(" {w} |"));
+        }
+        out.push('\n');
+        out.push_str("|---|");
+        for _ in &workloads {
+            out.push_str("---|");
+        }
+        out.push('\n');
+        for s in &series {
+            out.push_str(&format!("| {s} |"));
+            for w in &workloads {
+                let v = self
+                    .records
+                    .iter()
+                    .find(|r| r.metric == metric && &r.series == s && &r.workload == w)
+                    .map(|r| format!("{:.*}", prec, r.value))
+                    .unwrap_or_else(|| "—".into());
+                out.push_str(&format!(" {v} |"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Geometric-mean ratio to the paper over records that carry one.
+    pub fn geomean_ratio_to_paper(&self) -> Option<f64> {
+        let ratios: Vec<f64> = self.records.iter().filter_map(|r| r.ratio_to_paper()).collect();
+        if ratios.is_empty() {
+            return None;
+        }
+        Some(crate::util::stats::geomean(&ratios))
+    }
+
+    /// Write CSV next to the bench outputs (best effort).
+    pub fn save_csv(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_metric_matches_paper_definition() {
+        // 512³ sweep at 1 GStencil/s on 400 GB/s: 8 GB/s of 400 = 2%
+        let u = bandwidth_utilization(1e9, 4, 400e9);
+        assert!((u - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gstencil_rate() {
+        assert!((gstencils_per_s(512 * 512 * 512, 1.0) - 0.134217728).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_roundtrip_columns() {
+        let mut rs = RecordSet::new();
+        rs.push(RunRecord::new("fig11", "MMStencil", "3DStarR4", "util", 0.57).with_paper(0.57));
+        rs.add("fig11", "SIMD", "3DStarR4", "util", 0.4);
+        let csv = rs.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.lines().nth(1).unwrap().ends_with(",5.700000e-1"));
+        assert!(csv.lines().nth(2).unwrap().ends_with(","));
+    }
+
+    #[test]
+    fn markdown_grid_is_complete() {
+        let mut rs = RecordSet::new();
+        for s in ["A", "B"] {
+            for w in ["w1", "w2"] {
+                rs.add("x", s, w, "m", 1.0);
+            }
+        }
+        let md = rs.to_markdown("m", 2);
+        assert_eq!(md.lines().count(), 4);
+        assert!(md.contains("| A | 1.00 | 1.00 |"));
+    }
+
+    #[test]
+    fn ratio_and_geomean() {
+        let mut rs = RecordSet::new();
+        rs.push(RunRecord::new("e", "s", "w", "m", 2.0).with_paper(1.0));
+        rs.push(RunRecord::new("e", "s", "w2", "m", 0.5).with_paper(1.0));
+        let g = rs.geomean_ratio_to_paper().unwrap();
+        assert!((g - 1.0).abs() < 1e-12);
+    }
+}

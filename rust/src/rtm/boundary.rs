@@ -1,0 +1,89 @@
+//! Sponge absorbing boundary (Cerjan-style exponential damping).
+//!
+//! Real-world RTM cannot use periodic boundaries; a damping ramp of
+//! `width` cells multiplies the wavefield near every face, absorbing
+//! outgoing energy.  This is also why "boundary-condition handling often
+//! constrains the depth of temporal blocking" (paper §III-B) — each step
+//! must apply the sponge before the next stencil.
+
+use crate::grid::Grid3;
+
+/// Precomputed per-cell damping factors.
+pub struct Sponge {
+    pub width: usize,
+    factors: Vec<f32>,
+    nz: usize,
+    nx: usize,
+    ny: usize,
+}
+
+impl Sponge {
+    /// Build for a grid of `(nz, nx, ny)` with ramp `width` and strength
+    /// `alpha` (typical 0.0053 per Cerjan).
+    pub fn new(nz: usize, nx: usize, ny: usize, width: usize, alpha: f64) -> Self {
+        let ramp = |i: usize, n: usize| -> f64 {
+            let d = i.min(n - 1 - i);
+            if d >= width {
+                1.0
+            } else {
+                let u = (width - d) as f64;
+                (-alpha * alpha * u * u).exp()
+            }
+        };
+        let mut factors = vec![0.0f32; nz * nx * ny];
+        for z in 0..nz {
+            let fz = ramp(z, nz);
+            for x in 0..nx {
+                let fx = ramp(x, nx);
+                for y in 0..ny {
+                    let fy = ramp(y, ny);
+                    factors[(z * nx + x) * ny + y] = (fz * fx * fy) as f32;
+                }
+            }
+        }
+        Self { width, factors, nz, nx, ny }
+    }
+
+    /// Apply the damping in place.
+    pub fn apply(&self, g: &mut Grid3) {
+        assert_eq!((g.nz, g.nx, g.ny), (self.nz, self.nx, self.ny));
+        for (v, &f) in g.data.iter_mut().zip(&self.factors) {
+            *v *= f;
+        }
+    }
+
+    /// Damping factor at a cell (for tests).
+    pub fn factor(&self, z: usize, x: usize, y: usize) -> f32 {
+        self.factors[(z * self.nx + x) * self.ny + y]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interior_undamped_boundary_damped() {
+        let s = Sponge::new(32, 32, 32, 8, 0.0053);
+        assert_eq!(s.factor(16, 16, 16), 1.0);
+        assert!(s.factor(0, 16, 16) < 1.0);
+        assert!(s.factor(0, 0, 0) < s.factor(0, 16, 16));
+    }
+
+    #[test]
+    fn monotone_ramp() {
+        let s = Sponge::new(40, 40, 40, 10, 0.0053);
+        for d in 0..9 {
+            assert!(s.factor(d, 20, 20) <= s.factor(d + 1, 20, 20) + 1e-9);
+        }
+    }
+
+    #[test]
+    fn absorbs_energy() {
+        let s = Sponge::new(16, 16, 16, 6, 0.02);
+        let mut g = Grid3::random(16, 16, 16, 4);
+        let before = g.energy();
+        s.apply(&mut g);
+        assert!(g.energy() < before);
+    }
+}

@@ -1,0 +1,163 @@
+//! Synthetic earth models: layered media with VTI / TTI anisotropy.
+//!
+//! Stands in for the proprietary velocity models of the industrial RTM
+//! baselines (DESIGN.md §3): horizontally layered sediments with
+//! increasing velocity, per-layer Thomsen parameters (ε ≥ δ for
+//! pseudo-acoustic stability), and — for TTI — tilt/azimuth fields.
+
+use crate::grid::Grid3;
+
+/// VTI medium: Vp²·dt², ε, δ per cell (axes (Z, X, Y), z = depth).
+pub struct VtiMedia {
+    pub vp2dt2: Grid3,
+    pub eps: Grid3,
+    pub delta: Grid3,
+    pub dt: f64,
+    pub dx: f64,
+}
+
+/// One sediment layer.
+#[derive(Clone, Copy, Debug)]
+pub struct Layer {
+    /// fraction of depth where the layer starts (0..1)
+    pub top: f64,
+    /// P velocity (m/s)
+    pub vp: f64,
+    pub eps: f64,
+    pub delta: f64,
+}
+
+/// Default 3-layer model (sediment / chalk / salt-ish).
+pub fn default_layers() -> Vec<Layer> {
+    vec![
+        Layer { top: 0.0, vp: 2000.0, eps: 0.10, delta: 0.05 },
+        Layer { top: 0.4, vp: 3000.0, eps: 0.15, delta: 0.08 },
+        Layer { top: 0.75, vp: 4200.0, eps: 0.05, delta: 0.02 },
+    ]
+}
+
+fn layer_at(layers: &[Layer], frac: f64) -> &Layer {
+    layers
+        .iter()
+        .rev()
+        .find(|l| frac >= l.top)
+        .unwrap_or(&layers[0])
+}
+
+/// CFL-safe timestep for the radius-4 second-derivative stencil:
+/// `dt ≤ cfl · dx / (vmax · sqrt(3 · Σ|w2|))`.
+pub fn stable_dt(dx: f64, vmax: f64, cfl: f64) -> f64 {
+    let w2 = crate::stencil::coeffs::second_deriv(4);
+    let s: f64 = w2.iter().map(|&w| (w as f64).abs()).sum();
+    cfl * 2.0 * dx / (vmax * (3.0 * s).sqrt())
+}
+
+/// Build a VTI layered model over `(nz, nx, ny)` cells of spacing `dx`.
+pub fn layered_vti(nz: usize, nx: usize, ny: usize, dx: f64, layers: &[Layer]) -> VtiMedia {
+    let vmax = layers.iter().map(|l| l.vp).fold(0.0, f64::max);
+    let dt = stable_dt(dx, vmax, 0.45);
+    let mut vp2dt2 = Grid3::zeros(nz, nx, ny);
+    let mut eps = Grid3::zeros(nz, nx, ny);
+    let mut delta = Grid3::zeros(nz, nx, ny);
+    for z in 0..nz {
+        let l = layer_at(layers, z as f64 / nz as f64);
+        let v = (l.vp * dt / dx).powi(2) as f32;
+        for x in 0..nx {
+            for y in 0..ny {
+                vp2dt2.set(z, x, y, v);
+                eps.set(z, x, y, l.eps as f32);
+                delta.set(z, x, y, l.delta as f32);
+            }
+        }
+    }
+    VtiMedia { vp2dt2, eps, delta, dt, dx }
+}
+
+/// TTI medium: squared velocities (scaled by dt²/dx²), shear term,
+/// anellipticity α, and tilt/azimuth angle fields.
+pub struct TtiMedia {
+    pub vpx2: Grid3,
+    pub vpz2: Grid3,
+    pub vpn2: Grid3,
+    pub vsz2: Grid3,
+    pub alpha: Grid3,
+    pub theta: Grid3,
+    pub phi: Grid3,
+    pub dt: f64,
+    pub dx: f64,
+}
+
+/// Build a TTI layered model: same layering as VTI plus a smoothly
+/// dipping tilt field (thrust-belt flavour).
+pub fn layered_tti(nz: usize, nx: usize, ny: usize, dx: f64, layers: &[Layer]) -> TtiMedia {
+    let vmax = layers.iter().map(|l| l.vp).fold(0.0, f64::max);
+    // TTI couples more derivatives: keep an extra stability margin
+    let dt = stable_dt(dx, vmax, 0.30);
+    let mk = || Grid3::zeros(nz, nx, ny);
+    let (mut vpx2, mut vpz2, mut vpn2, mut vsz2) = (mk(), mk(), mk(), mk());
+    let (mut alpha, mut theta, mut phi) = (mk(), mk(), mk());
+    for z in 0..nz {
+        let l = layer_at(layers, z as f64 / nz as f64);
+        let c = (dt / dx).powi(2);
+        let vpz = l.vp;
+        let vx2 = (vpz * vpz * (1.0 + 2.0 * l.eps) * c) as f32;
+        let vz2 = (vpz * vpz * c) as f32;
+        let vn2 = (vpz * vpz * (1.0 + 2.0 * l.delta) * c) as f32;
+        let vs2 = (0.3 * vpz * 0.3 * vpz * c) as f32;
+        for x in 0..nx {
+            for y in 0..ny {
+                vpx2.set(z, x, y, vx2);
+                vpz2.set(z, x, y, vz2);
+                vpn2.set(z, x, y, vn2);
+                vsz2.set(z, x, y, vs2);
+                alpha.set(z, x, y, 1.0);
+                // gentle dip increasing with depth and x
+                let th = 0.35 * (z as f32 / nz as f32) * (x as f32 / nx as f32);
+                theta.set(z, x, y, th);
+                phi.set(z, x, y, 0.2);
+            }
+        }
+    }
+    TtiMedia { vpx2, vpz2, vpn2, vsz2, alpha, theta, phi, dt, dx }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layers_ordered_by_depth() {
+        let m = layered_vti(40, 8, 8, 10.0, &default_layers());
+        // deeper layers are faster
+        assert!(m.vp2dt2.get(39, 0, 0) > m.vp2dt2.get(0, 0, 0));
+    }
+
+    #[test]
+    fn cfl_number_is_safe() {
+        let m = layered_vti(32, 8, 8, 10.0, &default_layers());
+        // vp·dt/dx for vmax must satisfy the r=4 stability bound with the
+        // coupled-system amplification (1+2ε ≤ 1.3): vp2dt2·Σ|w2|·3·1.3 < 4
+        let w2 = crate::stencil::coeffs::second_deriv(4);
+        let s: f32 = w2.iter().map(|w| w.abs()).sum();
+        let worst = m.vp2dt2.data.iter().cloned().fold(0.0f32, f32::max);
+        assert!(worst * s * 3.0 * 1.3 < 4.0, "CFL violated: {}", worst * s * 3.0);
+    }
+
+    #[test]
+    fn eps_ge_delta_everywhere() {
+        // pseudo-acoustic stability requirement
+        let m = layered_vti(32, 8, 8, 10.0, &default_layers());
+        for (e, d) in m.eps.data.iter().zip(&m.delta.data) {
+            assert!(e >= d);
+        }
+    }
+
+    #[test]
+    fn tti_angles_bounded() {
+        let m = layered_tti(24, 24, 8, 10.0, &default_layers());
+        for &t in &m.theta.data {
+            assert!((0.0..0.4).contains(&t));
+        }
+        assert!(m.dt > 0.0);
+    }
+}

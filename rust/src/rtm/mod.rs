@@ -1,0 +1,21 @@
+//! Reverse Time Migration (paper §IV-G, §V-F): the real-world HPC
+//! application MMStencil integrates into.
+//!
+//! * [`media`]    — synthetic layered earth models (VTI/TTI parameters);
+//! * [`wavelet`]  — Ricker source wavelet;
+//! * [`boundary`] — sponge absorbing boundary;
+//! * [`vti`]      — pseudo-acoustic VTI leapfrog propagator;
+//! * [`tti`]      — TTI propagator (six second derivatives incl. mixed,
+//!   composed from 1D first-derivative stencils);
+//! * [`image`]    — zero-lag cross-correlation imaging condition;
+//! * [`driver`]   — shot loop: forward + backward propagation, imaging,
+//!   metrics, and PJRT artifact cross-checks.
+
+pub mod boundary;
+pub mod driver;
+pub mod image;
+pub mod media;
+pub mod pjrt_prop;
+pub mod tti;
+pub mod vti;
+pub mod wavelet;

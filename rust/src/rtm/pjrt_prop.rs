@@ -1,0 +1,231 @@
+//! PJRT-backed VTI propagation engine: the L2 JAX grid step
+//! (`rtm_vti_r4_grid64.hlo.txt`, lowered once at build time) executed
+//! from the rust request path — the architecture's proof that the
+//! *entire compute* can run through the AOT XLA artifacts with Python
+//! nowhere in sight.
+//!
+//! Used by the end-to-end example and the integration tests to
+//! cross-validate the rust-native propagator (`rtm::vti`) over many
+//! steps, not just one.
+
+use anyhow::{anyhow, Result};
+
+use super::media::VtiMedia;
+use super::vti::VtiState;
+use crate::grid::Grid3;
+use crate::runtime::{Runtime, Tensor};
+
+/// A compiled whole-grid VTI stepper bound to one artifact.
+pub struct PjrtVtiStepper<'rt> {
+    rt: &'rt Runtime,
+    artifact: String,
+    shape: Vec<usize>,
+    media: [Tensor; 3],
+}
+
+impl<'rt> PjrtVtiStepper<'rt> {
+    /// Bind to `artifact` (e.g. `"rtm_vti_r4_grid64"`); the media grids
+    /// are uploaded once and reused every step.
+    pub fn new(rt: &'rt Runtime, artifact: &str, m: &VtiMedia) -> Result<Self> {
+        let meta = rt
+            .manifest
+            .get(artifact)
+            .ok_or_else(|| anyhow!("{artifact} not in manifest (run `make artifacts`)"))?;
+        let shape = meta.inputs[0].shape.clone();
+        let (nz, nx, ny) = (shape[0], shape[1], shape[2]);
+        if m.vp2dt2.shape() != (nz, nx, ny) {
+            return Err(anyhow!(
+                "media shape {:?} != artifact grid {:?}",
+                m.vp2dt2.shape(),
+                shape
+            ));
+        }
+        let t = |g: &Grid3| Tensor::new(shape.clone(), g.data.clone());
+        let media = [t(&m.vp2dt2), t(&m.eps), t(&m.delta)];
+        Ok(Self { rt, artifact: artifact.to_string(), shape, media })
+    }
+
+    pub fn grid_shape(&self) -> (usize, usize, usize) {
+        (self.shape[0], self.shape[1], self.shape[2])
+    }
+
+    /// Advance `state` one leapfrog step through the PJRT executable.
+    pub fn step(&self, state: &mut VtiState) -> Result<()> {
+        let t = |g: &Grid3| Tensor::new(self.shape.clone(), g.data.clone());
+        let outs = self.rt.execute(
+            &self.artifact,
+            &[
+                t(&state.sh),
+                t(&state.sv),
+                t(&state.sh_prev),
+                t(&state.sv_prev),
+                self.media[0].clone(),
+                self.media[1].clone(),
+                self.media[2].clone(),
+            ],
+        )?;
+        // leapfrog rotation: (new, cur) ← (f(cur, prev), cur)
+        std::mem::swap(&mut state.sh_prev, &mut state.sh);
+        std::mem::swap(&mut state.sv_prev, &mut state.sv);
+        state.sh.data.copy_from_slice(&outs[0].data);
+        state.sv.data.copy_from_slice(&outs[1].data);
+        Ok(())
+    }
+
+    /// Run `steps` steps injecting `source[i]` at `(z, x, y)` each step.
+    pub fn propagate(
+        &self,
+        state: &mut VtiState,
+        source: &[f32],
+        z: usize,
+        x: usize,
+        y: usize,
+    ) -> Result<Vec<f64>> {
+        let mut energies = Vec::with_capacity(source.len());
+        for &amp in source {
+            state.inject(z, x, y, amp);
+            self.step(state)?;
+            energies.push(state.energy());
+        }
+        Ok(energies)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rtm::{media, vti, wavelet};
+    use crate::stencil::coeffs::second_deriv;
+    use crate::util::prop::assert_allclose;
+
+    fn runtime() -> Option<Runtime> {
+        match Runtime::open_default() {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                eprintln!("skipping PJRT propagation test: {e:#}");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn pjrt_propagation_tracks_native_for_ten_steps() {
+        let Some(rt) = runtime() else { return };
+        let n = 64;
+        let m = media::layered_vti(n, n, n, 10.0, &media::default_layers());
+        let stepper = PjrtVtiStepper::new(&rt, "rtm_vti_r4_grid64", &m).unwrap();
+        assert_eq!(stepper.grid_shape(), (n, n, n));
+
+        let w2 = second_deriv(4);
+        let src = wavelet::ricker_series(10, m.dt, 15.0);
+        let mut a = VtiState::zeros(n, n, n);
+        let mut b = VtiState::zeros(n, n, n);
+        let mut sc = vti::VtiScratch::new(n, n, n);
+        for &amp in &src {
+            a.inject(32, 32, 32, amp);
+            b.inject(32, 32, 32, amp);
+            stepper.step(&mut a).unwrap();
+            vti::step(&mut b, &m, &w2, 1, &mut sc);
+        }
+        assert_allclose(&a.sh.data, &b.sh.data, 1e-3, 1e-5);
+        assert_allclose(&a.sv.data, &b.sv.data, 1e-3, 1e-5);
+    }
+
+    #[test]
+    fn stepper_rejects_mismatched_media() {
+        let Some(rt) = runtime() else { return };
+        let m = media::layered_vti(16, 16, 16, 10.0, &media::default_layers());
+        assert!(PjrtVtiStepper::new(&rt, "rtm_vti_r4_grid64", &m).is_err());
+    }
+
+    #[test]
+    fn propagate_reports_energies() {
+        let Some(rt) = runtime() else { return };
+        let n = 64;
+        let m = media::layered_vti(n, n, n, 10.0, &media::default_layers());
+        let stepper = PjrtVtiStepper::new(&rt, "rtm_vti_r4_grid64", &m).unwrap();
+        let mut st = VtiState::zeros(n, n, n);
+        let src = wavelet::ricker_series(5, m.dt, 15.0);
+        let e = stepper.propagate(&mut st, &src, 32, 32, 32).unwrap();
+        assert_eq!(e.len(), 5);
+        assert!(e.iter().all(|v| v.is_finite()));
+        assert!(e[4] > 0.0);
+    }
+}
+
+/// TTI analog of [`PjrtVtiStepper`]: the 11-input whole-grid TTI step
+/// (`rtm_tti_r4_grid32`), media + angle fields uploaded once.
+pub struct PjrtTtiStepper<'rt> {
+    rt: &'rt Runtime,
+    artifact: String,
+    shape: Vec<usize>,
+    media: Vec<Tensor>,
+}
+
+impl<'rt> PjrtTtiStepper<'rt> {
+    pub fn new(rt: &'rt Runtime, artifact: &str, m: &super::media::TtiMedia) -> Result<Self> {
+        let meta = rt
+            .manifest
+            .get(artifact)
+            .ok_or_else(|| anyhow!("{artifact} not in manifest (run `make artifacts`)"))?;
+        let shape = meta.inputs[0].shape.clone();
+        if m.vpx2.shape() != (shape[0], shape[1], shape[2]) {
+            return Err(anyhow!("media shape {:?} != artifact grid {:?}", m.vpx2.shape(), shape));
+        }
+        let t = |g: &Grid3| Tensor::new(shape.clone(), g.data.clone());
+        let media = vec![
+            t(&m.vpx2), t(&m.vpz2), t(&m.vpn2), t(&m.vsz2), t(&m.alpha), t(&m.theta), t(&m.phi),
+        ];
+        Ok(Self { rt, artifact: artifact.to_string(), shape, media })
+    }
+
+    /// Advance the TTI field pair one leapfrog step through PJRT.
+    pub fn step(&self, state: &mut super::tti::TtiState) -> Result<()> {
+        let t = |g: &Grid3| Tensor::new(self.shape.clone(), g.data.clone());
+        let mut inputs = vec![t(&state.p), t(&state.q), t(&state.p_prev), t(&state.q_prev)];
+        inputs.extend(self.media.iter().cloned());
+        let outs = self.rt.execute(&self.artifact, &inputs)?;
+        std::mem::swap(&mut state.p_prev, &mut state.p);
+        std::mem::swap(&mut state.q_prev, &mut state.q);
+        state.p.data.copy_from_slice(&outs[0].data);
+        state.q.data.copy_from_slice(&outs[1].data);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tti_tests {
+    use super::*;
+    use crate::rtm::{media, tti, wavelet};
+    use crate::stencil::coeffs::{first_deriv, second_deriv};
+    use crate::util::prop::assert_allclose;
+
+    #[test]
+    fn pjrt_tti_tracks_native() {
+        let Ok(rt) = Runtime::open_default() else { return };
+        let n = 32;
+        let m = media::layered_tti(n, n, n, 10.0, &media::default_layers());
+        let stepper = PjrtTtiStepper::new(&rt, "rtm_tti_r4_grid32", &m).unwrap();
+        let trig = tti::TtiTrig::new(&m);
+        let (w2, w1) = (second_deriv(4), first_deriv(4));
+        let src = wavelet::ricker_series(6, m.dt, 15.0);
+        let mut a = tti::TtiState::zeros(n, n, n);
+        let mut b = tti::TtiState::zeros(n, n, n);
+        let mut sc = tti::TtiScratch::new(n, n, n);
+        for &amp in &src {
+            a.inject(16, 16, 16, amp);
+            b.inject(16, 16, 16, amp);
+            stepper.step(&mut a).unwrap();
+            tti::step(&mut b, &m, &trig, &w2, &w1, 1, &mut sc);
+        }
+        assert_allclose(&a.p.data, &b.p.data, 1e-3, 1e-5);
+        assert_allclose(&a.q.data, &b.q.data, 1e-3, 1e-5);
+    }
+
+    #[test]
+    fn tti_stepper_rejects_mismatched_media() {
+        let Ok(rt) = Runtime::open_default() else { return };
+        let m = media::layered_tti(16, 16, 16, 10.0, &media::default_layers());
+        assert!(PjrtTtiStepper::new(&rt, "rtm_tti_r4_grid32", &m).is_err());
+    }
+}

@@ -1,0 +1,315 @@
+//! TTI (Tilted Transverse Isotropic) leapfrog propagator (paper §II-A).
+//!
+//! Mirrors `python/compile/kernels/ref.py::tti_step`: the H1/H2 operators
+//! need all six second derivatives; the mixed ones (∂xy, ∂yz, ∂xz) are
+//! composed from two first-derivative 1D passes — the paper's §IV-G
+//! commutative-composition scheme.  Periodic boundaries, axes (Z, X, Y).
+
+use super::media::TtiMedia;
+use super::vti::{d1_axis_into, d2_axis_into, par_mut_chunks};
+use crate::grid::Grid3;
+
+/// Leapfrog time levels of the TTI field pair (p, q).
+pub struct TtiState {
+    pub p: Grid3,
+    pub q: Grid3,
+    pub p_prev: Grid3,
+    pub q_prev: Grid3,
+}
+
+impl TtiState {
+    pub fn zeros(nz: usize, nx: usize, ny: usize) -> Self {
+        Self {
+            p: Grid3::zeros(nz, nx, ny),
+            q: Grid3::zeros(nz, nx, ny),
+            p_prev: Grid3::zeros(nz, nx, ny),
+            q_prev: Grid3::zeros(nz, nx, ny),
+        }
+    }
+
+    pub fn inject(&mut self, z: usize, x: usize, y: usize, amp: f32) {
+        let i = self.p.idx(z, x, y);
+        self.p.data[i] += amp;
+        self.q.data[i] += amp;
+    }
+
+    pub fn energy(&self) -> f64 {
+        self.p.energy() + self.q.energy()
+    }
+}
+
+/// Precomputed per-cell trig weights of the H1 operator — computing
+/// sin/cos per cell per step would dominate the pointwise stage.
+pub struct TtiTrig {
+    pub st2cp2: Vec<f32>,
+    pub st2sp2: Vec<f32>,
+    pub ct2: Vec<f32>,
+    pub st2s2p: Vec<f32>,
+    pub s2t_sp: Vec<f32>,
+    pub s2t_cp: Vec<f32>,
+}
+
+impl TtiTrig {
+    pub fn new(m: &TtiMedia) -> Self {
+        let n = m.theta.len();
+        let mut t = Self {
+            st2cp2: vec![0.0; n],
+            st2sp2: vec![0.0; n],
+            ct2: vec![0.0; n],
+            st2s2p: vec![0.0; n],
+            s2t_sp: vec![0.0; n],
+            s2t_cp: vec![0.0; n],
+        };
+        for i in 0..n {
+            let th = m.theta.data[i];
+            let ph = m.phi.data[i];
+            let (st, ct) = th.sin_cos();
+            let (sp, cp) = ph.sin_cos();
+            let st2 = st * st;
+            let s2t = (2.0 * th).sin();
+            t.st2cp2[i] = st2 * cp * cp;
+            t.st2sp2[i] = st2 * sp * sp;
+            t.ct2[i] = ct * ct;
+            t.st2s2p[i] = st2 * (2.0 * ph).sin();
+            t.s2t_sp[i] = s2t * sp;
+            t.s2t_cp[i] = s2t * cp;
+        }
+        t
+    }
+}
+
+/// The six second derivatives of one field, reused as scratch per step.
+pub struct Derivs {
+    pub dxx: Grid3,
+    pub dyy: Grid3,
+    pub dzz: Grid3,
+    pub dxy: Grid3,
+    pub dyz: Grid3,
+    pub dxz: Grid3,
+    d1: Grid3,
+    d1b: Grid3,
+}
+
+impl Derivs {
+    pub fn new(nz: usize, nx: usize, ny: usize) -> Self {
+        let mk = || Grid3::zeros(nz, nx, ny);
+        Self { dxx: mk(), dyy: mk(), dzz: mk(), dxy: mk(), dyz: mk(), dxz: mk(), d1: mk(), d1b: mk() }
+    }
+
+    /// Fill all six derivative grids of `f` (mirror of
+    /// `ref.py::tti_h1`'s derivative set).
+    pub fn compute(&mut self, f: &Grid3, w2: &[f32], w1: &[f32], threads: usize) {
+        d2_axis_into(f, w2, 1, &mut self.dxx, threads);
+        d2_axis_into(f, w2, 2, &mut self.dyy, threads);
+        d2_axis_into(f, w2, 0, &mut self.dzz, threads);
+        // ∂z then ∂x / ∂y of it
+        d1_axis_into(f, w1, 0, &mut self.d1, threads);
+        d1_axis_into(&self.d1, w1, 1, &mut self.dxz, threads);
+        d1_axis_into(&self.d1, w1, 2, &mut self.dyz, threads);
+        // ∂x then ∂y of it
+        d1_axis_into(f, w1, 1, &mut self.d1b, threads);
+        d1_axis_into(&self.d1b, w1, 2, &mut self.dxy, threads);
+    }
+
+    /// h1 = Σ trig-weighted derivatives; h2 = laplacian − h1; written
+    /// into the two output slices.
+    pub fn h1h2(&self, trig: &TtiTrig, h1: &mut [f32], h2: &mut [f32], threads: usize) {
+        let (dxx, dyy, dzz) = (&self.dxx.data, &self.dyy.data, &self.dzz.data);
+        let (dxy, dyz, dxz) = (&self.dxy.data, &self.dyz.data, &self.dxz.data);
+        let h2ptr = SyncSlice(h2.as_mut_ptr());
+        let h2ref = &h2ptr;
+        par_mut_chunks(threads, h1, |off, chunk| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                let j = off + i;
+                let a = trig.st2cp2[j] * dxx[j]
+                    + trig.st2sp2[j] * dyy[j]
+                    + trig.ct2[j] * dzz[j]
+                    + trig.st2s2p[j] * dxy[j]
+                    + trig.s2t_sp[j] * dyz[j]
+                    + trig.s2t_cp[j] * dxz[j];
+                *v = a;
+                // SAFETY: j indexes are disjoint across chunks
+                unsafe { *h2ref.0.add(j) = dxx[j] + dyy[j] + dzz[j] - a };
+            }
+        });
+    }
+}
+
+struct SyncSlice(*mut f32);
+unsafe impl Send for SyncSlice {}
+unsafe impl Sync for SyncSlice {}
+
+/// Whole-step scratch: derivative workspaces + the four operator grids.
+pub struct TtiScratch {
+    dv: Derivs,
+    h1p: Vec<f32>,
+    h2p: Vec<f32>,
+    h1q: Vec<f32>,
+    h2q: Vec<f32>,
+}
+
+impl TtiScratch {
+    pub fn new(nz: usize, nx: usize, ny: usize) -> Self {
+        let n = nz * nx * ny;
+        Self {
+            dv: Derivs::new(nz, nx, ny),
+            h1p: vec![0.0; n],
+            h2p: vec![0.0; n],
+            h1q: vec![0.0; n],
+            h2q: vec![0.0; n],
+        }
+    }
+}
+
+/// One TTI leapfrog step (velocity-squared fields in `m` already carry
+/// the dt²/dx² factor, matching `media::layered_tti`).
+pub fn step(
+    state: &mut TtiState,
+    m: &TtiMedia,
+    trig: &TtiTrig,
+    w2: &[f32],
+    w1: &[f32],
+    threads: usize,
+    s: &mut TtiScratch,
+) {
+    // decaying wavefields hit the x86 denormal cliff without FTZ
+    crate::util::enable_flush_to_zero();
+    s.dv.compute(&state.p, w2, w1, threads);
+    s.dv.h1h2(trig, &mut s.h1p, &mut s.h2p, threads);
+    s.dv.compute(&state.q, w2, w1, threads);
+    s.dv.h1h2(trig, &mut s.h1q, &mut s.h2q, threads);
+
+    let (h1p, h2p, h1q, h2q) = (&s.h1p, &s.h2p, &s.h1q, &s.h2q);
+    let (p, q) = (&state.p.data, &state.q.data);
+    let (vpx2, vpz2, vpn2, vsz2, alpha) =
+        (&m.vpx2.data, &m.vpz2.data, &m.vpn2.data, &m.vsz2.data, &m.alpha.data);
+    {
+        let pp = &mut state.p_prev.data;
+        par_mut_chunks(threads, pp, |off, chunk| {
+            for (i, out) in chunk.iter_mut().enumerate() {
+                let j = off + i;
+                let rhs = vpx2[j] * h2p[j] + alpha[j] * vpz2[j] * h1q[j]
+                    + vsz2[j] * (h1p[j] - alpha[j] * h1q[j]);
+                *out = 2.0 * p[j] - *out + rhs;
+            }
+        });
+    }
+    {
+        let qp = &mut state.q_prev.data;
+        par_mut_chunks(threads, qp, |off, chunk| {
+            for (i, out) in chunk.iter_mut().enumerate() {
+                let j = off + i;
+                let rhs = (vpn2[j] / alpha[j]) * h2p[j] + vpz2[j] * h1q[j]
+                    - vsz2[j] * (h2p[j] / alpha[j] - h2q[j]);
+                *out = 2.0 * q[j] - *out + rhs;
+            }
+        });
+    }
+    std::mem::swap(&mut state.p, &mut state.p_prev);
+    std::mem::swap(&mut state.q, &mut state.q_prev);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rtm::media;
+    use crate::stencil::coeffs::{first_deriv, second_deriv};
+    use crate::util::prop::assert_allclose;
+
+    #[test]
+    fn mixed_derivatives_commute() {
+        // ∂x∂z f == ∂z∂x f when composed from the same bands
+        let g = Grid3::random(8, 8, 8, 3);
+        let w1 = first_deriv(4);
+        let a = super::super::vti::d1_axis(&super::super::vti::d1_axis(&g, &w1, 0, 2), &w1, 1, 2);
+        let b = super::super::vti::d1_axis(&super::super::vti::d1_axis(&g, &w1, 1, 2), &w1, 0, 2);
+        assert_allclose(&a.data, &b.data, 1e-4, 1e-5);
+    }
+
+    #[test]
+    fn zero_tilt_h1_is_dzz() {
+        // θ = 0 → H1 = ∂zz, H2 = ∂xx + ∂yy
+        let (nz, nx, ny) = (8, 8, 8);
+        let mut m = media::layered_tti(nz, nx, ny, 10.0, &media::default_layers());
+        m.theta = Grid3::zeros(nz, nx, ny);
+        m.phi = Grid3::zeros(nz, nx, ny);
+        let trig = TtiTrig::new(&m);
+        let g = Grid3::random(nz, nx, ny, 5);
+        let w2 = second_deriv(4);
+        let w1 = first_deriv(4);
+        let mut dv = Derivs::new(nz, nx, ny);
+        dv.compute(&g, &w2, &w1, 2);
+        let n = nz * nx * ny;
+        let (mut h1, mut h2) = (vec![0.0; n], vec![0.0; n]);
+        dv.h1h2(&trig, &mut h1, &mut h2, 2);
+        let dzz = super::super::vti::d2_axis(&g, &w2, 0, 2);
+        let dxx = super::super::vti::d2_axis(&g, &w2, 1, 2);
+        let dyy = super::super::vti::d2_axis(&g, &w2, 2, 2);
+        assert_allclose(&h1, &dzz.data, 1e-4, 1e-5);
+        let want: Vec<f32> = dxx.data.iter().zip(&dyy.data).map(|(a, b)| a + b).collect();
+        assert_allclose(&h2, &want, 1e-4, 1e-5);
+    }
+
+    #[test]
+    fn h1_plus_h2_is_laplacian_any_tilt() {
+        let (nz, nx, ny) = (6, 10, 7);
+        let m = media::layered_tti(nz, nx, ny, 10.0, &media::default_layers());
+        let trig = TtiTrig::new(&m);
+        let g = Grid3::random(nz, nx, ny, 9);
+        let w2 = second_deriv(3);
+        let w1 = first_deriv(3);
+        let mut dv = Derivs::new(nz, nx, ny);
+        dv.compute(&g, &w2, &w1, 3);
+        let n = nz * nx * ny;
+        let (mut h1, mut h2) = (vec![0.0; n], vec![0.0; n]);
+        dv.h1h2(&trig, &mut h1, &mut h2, 3);
+        let lap: Vec<f32> = dv
+            .dxx
+            .data
+            .iter()
+            .zip(&dv.dyy.data)
+            .zip(&dv.dzz.data)
+            .map(|((a, b), c)| a + b + c)
+            .collect();
+        let got: Vec<f32> = h1.iter().zip(&h2).map(|(a, b)| a + b).collect();
+        assert_allclose(&got, &lap, 1e-4, 1e-5);
+    }
+
+    #[test]
+    fn impulse_stays_bounded() {
+        let (nz, nx, ny) = (20, 20, 20);
+        let m = media::layered_tti(nz, nx, ny, 10.0, &media::default_layers());
+        let trig = TtiTrig::new(&m);
+        let mut st = TtiState::zeros(nz, nx, ny);
+        let mut sc = TtiScratch::new(nz, nx, ny);
+        st.inject(10, 10, 10, 1.0);
+        let w2 = second_deriv(4);
+        let w1 = first_deriv(4);
+        for _ in 0..120 {
+            step(&mut st, &m, &trig, &w2, &w1, 4, &mut sc);
+        }
+        let e = st.energy();
+        assert!(e.is_finite() && e < 1e6, "unstable: energy {e}");
+    }
+
+    #[test]
+    fn threads_do_not_change_step() {
+        let (nz, nx, ny) = (10, 10, 10);
+        let m = media::layered_tti(nz, nx, ny, 10.0, &media::default_layers());
+        let trig = TtiTrig::new(&m);
+        let w2 = second_deriv(2);
+        let w1 = first_deriv(2);
+        let run = |threads: usize| {
+            let mut st = TtiState::zeros(nz, nx, ny);
+            let mut sc = TtiScratch::new(nz, nx, ny);
+            st.inject(5, 5, 5, 1.0);
+            for _ in 0..5 {
+                step(&mut st, &m, &trig, &w2, &w1, threads, &mut sc);
+            }
+            st.p
+        };
+        let a = run(1);
+        let b = run(6);
+        assert_eq!(a.data, b.data);
+    }
+}

@@ -1,0 +1,458 @@
+//! Pseudo-acoustic VTI leapfrog propagator (paper §II-A, §V-F).
+//!
+//! Semantics mirror `python/compile/kernels/ref.py::vti_step` exactly
+//! (periodic boundaries, Duveneck–Bakker/Zhou coupling — see DESIGN.md
+//! §Substitutions for why the paper's printed z-branch is replaced):
+//!
+//! ```text
+//! d²σH/dt² = Vp²{ (1+2ε)(∂xx σH + ∂yy σH) + √(1+2δ) ∂zz σV }
+//! d²σV/dt² = Vp²{ √(1+2δ)(∂xx σH + ∂yy σH) + ∂zz σV }
+//! ```
+//!
+//! The derivative passes are decomposed into 1D axis stencils — exactly
+//! the §IV-G scheme the block artifacts (`rtm_vti_block.hlo.txt`)
+//! implement — and parallelized over z-slabs with the coordinator pool.
+
+use super::media::VtiMedia;
+use crate::coordinator::pool;
+use crate::grid::Grid3;
+
+/// The two leapfrog time levels of both stress components.
+pub struct VtiState {
+    pub sh: Grid3,
+    pub sv: Grid3,
+    pub sh_prev: Grid3,
+    pub sv_prev: Grid3,
+}
+
+impl VtiState {
+    pub fn zeros(nz: usize, nx: usize, ny: usize) -> Self {
+        Self {
+            sh: Grid3::zeros(nz, nx, ny),
+            sv: Grid3::zeros(nz, nx, ny),
+            sh_prev: Grid3::zeros(nz, nx, ny),
+            sv_prev: Grid3::zeros(nz, nx, ny),
+        }
+    }
+
+    /// Add a point source sample to both stress components.
+    pub fn inject(&mut self, z: usize, x: usize, y: usize, amp: f32) {
+        let i = self.sh.idx(z, x, y);
+        self.sh.data[i] += amp;
+        self.sv.data[i] += amp;
+    }
+
+    pub fn energy(&self) -> f64 {
+        self.sh.energy() + self.sv.energy()
+    }
+}
+
+/// Second derivative along `axis` (0 = z, 1 = x, 2 = y) with periodic
+/// wrap — mirror of `ref.py::d2_axis`.  Parallel over z-slabs.
+pub fn d2_axis(g: &Grid3, w2: &[f32], axis: usize, threads: usize) -> Grid3 {
+    let mut out = Grid3::zeros(g.nz, g.nx, g.ny);
+    d2_axis_into(g, w2, axis, &mut out, threads);
+    out
+}
+
+/// In-place variant of [`d2_axis`]: `out` is fully overwritten.
+pub fn d2_axis_into(g: &Grid3, w2: &[f32], axis: usize, out: &mut Grid3, threads: usize) {
+    assert_eq!(g.shape(), out.shape());
+    let r = (w2.len() - 1) / 2;
+    let (nz, nx, ny) = g.shape();
+    let plane = nx * ny;
+    let out_ptr = SendPtr(out.data.as_mut_ptr());
+    let out_ptr = &out_ptr;
+    match axis {
+        0 => {
+            // z: per output slab, accumulate whole shifted planes
+            pool::parallel_for(threads, nz, |z| {
+                let dst = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(z * plane), plane) };
+                dst.copy_from_slice(&g.data[z * plane..(z + 1) * plane]);
+                for v in dst.iter_mut() {
+                    *v *= w2[r];
+                }
+                for k in 1..=r {
+                    let zp = (z + k) % nz;
+                    let zm = (z + nz - k) % nz;
+                    let (a, b) = (&g.data[zp * plane..(zp + 1) * plane], &g.data[zm * plane..(zm + 1) * plane]);
+                    let w = w2[r + k];
+                    for ((d, &p), &m) in dst.iter_mut().zip(a).zip(b) {
+                        *d += w * (p + m);
+                    }
+                }
+            });
+        }
+        1 => {
+            // x: per z-slab, accumulate shifted y-rows
+            pool::parallel_for(threads, nz, |z| {
+                let base = z * plane;
+                let dst = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(base), plane) };
+                for x in 0..nx {
+                    let row = &mut dst[x * ny..(x + 1) * ny];
+                    let src = &g.data[base + x * ny..base + (x + 1) * ny];
+                    for (d, &s) in row.iter_mut().zip(src) {
+                        *d = w2[r] * s;
+                    }
+                    for k in 1..=r {
+                        let xp = (x + k) % nx;
+                        let xm = (x + nx - k) % nx;
+                        let a = &g.data[base + xp * ny..base + xp * ny + ny];
+                        let b = &g.data[base + xm * ny..base + xm * ny + ny];
+                        let w = w2[r + k];
+                        for ((d, &p), &m) in row.iter_mut().zip(a).zip(b) {
+                            *d += w * (p + m);
+                        }
+                    }
+                }
+            });
+        }
+        2 => {
+            // y: contiguous rows; vectorizable shifted-slice interior,
+            // wrapped scalar edges
+            pool::parallel_for(threads, nz, |z| {
+                let base = z * plane;
+                let dst = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(base), plane) };
+                for x in 0..nx {
+                    let row = &mut dst[x * ny..(x + 1) * ny];
+                    let src = &g.data[base + x * ny..base + (x + 1) * ny];
+                    if ny >= 2 * r + 1 {
+                        // interior: row[y] = Σ w2[k+r]·src[y+k], y ∈ [r, ny-r)
+                        let inner = ny - 2 * r;
+                        for (d, &s) in row[r..r + inner].iter_mut().zip(&src[r..r + inner]) {
+                            *d = w2[r] * s;
+                        }
+                        for k in 1..=r {
+                            let w = w2[r + k];
+                            let (p, m) = (&src[r + k..r + k + inner], &src[r - k..r - k + inner]);
+                            for ((d, &a), &b) in row[r..r + inner].iter_mut().zip(p).zip(m) {
+                                *d += w * (a + b);
+                            }
+                        }
+                        // wrapped edges
+                        for y in (0..r).chain(ny - r..ny) {
+                            let mut acc = w2[r] * src[y];
+                            for k in 1..=r {
+                                acc += w2[r + k] * (src[(y + k) % ny] + src[(y + ny - k) % ny]);
+                            }
+                            row[y] = acc;
+                        }
+                    } else {
+                        for y in 0..ny {
+                            let mut acc = w2[r] * src[y];
+                            for k in 1..=r {
+                                acc += w2[r + k] * (src[(y + k) % ny] + src[(y + ny - k) % ny]);
+                            }
+                            row[y] = acc;
+                        }
+                    }
+                }
+            });
+        }
+        _ => panic!("axis must be 0, 1, or 2"),
+    }
+}
+
+/// First derivative along `axis` with periodic wrap (antisymmetric
+/// band) — mirror of `ref.py::d1_axis`.
+pub fn d1_axis(g: &Grid3, w1: &[f32], axis: usize, threads: usize) -> Grid3 {
+    let mut out = Grid3::zeros(g.nz, g.nx, g.ny);
+    d1_axis_into(g, w1, axis, &mut out, threads);
+    out
+}
+
+/// In-place variant of [`d1_axis`]: `out` is fully overwritten.
+pub fn d1_axis_into(g: &Grid3, w1: &[f32], axis: usize, out: &mut Grid3, threads: usize) {
+    assert_eq!(g.shape(), out.shape());
+    let r = (w1.len() - 1) / 2;
+    let (nz, nx, ny) = g.shape();
+    let plane = nx * ny;
+    let out_ptr = SendPtr(out.data.as_mut_ptr());
+    let out_ptr = &out_ptr;
+    match axis {
+        0 => {
+            pool::parallel_for(threads, nz, |z| {
+                let dst = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(z * plane), plane) };
+                dst.fill(0.0);
+                for k in 1..=r {
+                    let zp = (z + k) % nz;
+                    let zm = (z + nz - k) % nz;
+                    let (a, b) = (&g.data[zp * plane..(zp + 1) * plane], &g.data[zm * plane..(zm + 1) * plane]);
+                    let w = w1[r + k];
+                    for ((d, &p), &m) in dst.iter_mut().zip(a).zip(b) {
+                        *d += w * (p - m);
+                    }
+                }
+            });
+        }
+        1 => {
+            pool::parallel_for(threads, nz, |z| {
+                let base = z * plane;
+                let dst = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(base), plane) };
+                for x in 0..nx {
+                    let row = &mut dst[x * ny..(x + 1) * ny];
+                    row.fill(0.0);
+                    for k in 1..=r {
+                        let xp = (x + k) % nx;
+                        let xm = (x + nx - k) % nx;
+                        let a = &g.data[base + xp * ny..base + xp * ny + ny];
+                        let b = &g.data[base + xm * ny..base + xm * ny + ny];
+                        let w = w1[r + k];
+                        for ((d, &p), &m) in row.iter_mut().zip(a).zip(b) {
+                            *d += w * (p - m);
+                        }
+                    }
+                }
+            });
+        }
+        2 => {
+            pool::parallel_for(threads, nz, |z| {
+                let base = z * plane;
+                let dst = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(base), plane) };
+                for x in 0..nx {
+                    let row = &mut dst[x * ny..(x + 1) * ny];
+                    let src = &g.data[base + x * ny..base + (x + 1) * ny];
+                    if ny >= 2 * r + 1 {
+                        let inner = ny - 2 * r;
+                        row[r..r + inner].fill(0.0);
+                        for k in 1..=r {
+                            let w = w1[r + k];
+                            let (p, m) = (&src[r + k..r + k + inner], &src[r - k..r - k + inner]);
+                            for ((d, &a), &b) in row[r..r + inner].iter_mut().zip(p).zip(m) {
+                                *d += w * (a - b);
+                            }
+                        }
+                        for y in (0..r).chain(ny - r..ny) {
+                            let mut acc = 0.0f32;
+                            for k in 1..=r {
+                                acc += w1[r + k] * (src[(y + k) % ny] - src[(y + ny - k) % ny]);
+                            }
+                            row[y] = acc;
+                        }
+                    } else {
+                        for y in 0..ny {
+                            let mut acc = 0.0f32;
+                            for k in 1..=r {
+                                acc += w1[r + k] * (src[(y + k) % ny] - src[(y + ny - k) % ny]);
+                            }
+                            row[y] = acc;
+                        }
+                    }
+                }
+            });
+        }
+        _ => panic!("axis must be 0, 1, or 2"),
+    }
+}
+
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Apply `f(offset, chunk)` over disjoint chunks of `data` in parallel.
+pub(crate) fn par_mut_chunks(
+    threads: usize,
+    data: &mut [f32],
+    f: impl Fn(usize, &mut [f32]) + Sync,
+) {
+    let n = data.len();
+    if n == 0 {
+        return;
+    }
+    let ptr = SendPtr(data.as_mut_ptr());
+    let ptr = &ptr;
+    pool::parallel_chunks(threads, n, (threads.max(1) * 4).min(n), |_, lo, hi| {
+        // SAFETY: chunk ranges from parallel_chunks are disjoint
+        let chunk = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(lo), hi - lo) };
+        f(lo, chunk);
+    });
+}
+
+/// Scratch buffers reused across steps (avoids per-step allocation of
+/// three whole-grid temporaries — see EXPERIMENTS.md §Perf).
+pub struct VtiScratch {
+    lap: Grid3,
+    tmp: Grid3,
+    dzz: Grid3,
+}
+
+impl VtiScratch {
+    pub fn new(nz: usize, nx: usize, ny: usize) -> Self {
+        Self {
+            lap: Grid3::zeros(nz, nx, ny),
+            tmp: Grid3::zeros(nz, nx, ny),
+            dzz: Grid3::zeros(nz, nx, ny),
+        }
+    }
+}
+
+/// One leapfrog step; rotates `state` in place.
+pub fn step(state: &mut VtiState, m: &VtiMedia, w2: &[f32], threads: usize, s: &mut VtiScratch) {
+    // decaying wavefields hit the x86 denormal cliff without FTZ
+    crate::util::enable_flush_to_zero();
+    let (nz, nx, ny) = state.sh.shape();
+    assert_eq!(m.vp2dt2.shape(), (nz, nx, ny));
+
+    // xy-laplacian of σH and ∂zz of σV, each as 1D axis passes
+    d2_axis_into(&state.sh, w2, 1, &mut s.lap, threads);
+    d2_axis_into(&state.sh, w2, 2, &mut s.tmp, threads);
+    d2_axis_into(&state.sv, w2, 0, &mut s.dzz, threads);
+    {
+        let lap = &mut s.lap.data;
+        let tmp = &s.tmp.data;
+        par_mut_chunks(threads, lap, |off, chunk| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v += tmp[off + i];
+            }
+        });
+    }
+
+    // pointwise leapfrog update; prev arrays become the new time level
+    let lap = &s.lap.data;
+    let dzz = &s.dzz.data;
+    let sh = &state.sh.data;
+    let sv = &state.sv.data;
+    let v2 = &m.vp2dt2.data;
+    let eps = &m.eps.data;
+    let del = &m.delta.data;
+    {
+        let shp = &mut state.sh_prev.data;
+        par_mut_chunks(threads, shp, |off, chunk| {
+            for (i, out) in chunk.iter_mut().enumerate() {
+                let j = off + i;
+                let sq = (1.0 + 2.0 * del[j]).sqrt();
+                let rhs = (1.0 + 2.0 * eps[j]) * lap[j] + sq * dzz[j];
+                *out = 2.0 * sh[j] - *out + v2[j] * rhs;
+            }
+        });
+    }
+    {
+        let svp = &mut state.sv_prev.data;
+        par_mut_chunks(threads, svp, |off, chunk| {
+            for (i, out) in chunk.iter_mut().enumerate() {
+                let j = off + i;
+                let sq = (1.0 + 2.0 * del[j]).sqrt();
+                let rhs = sq * lap[j] + dzz[j];
+                *out = 2.0 * sv[j] - *out + v2[j] * rhs;
+            }
+        });
+    }
+    std::mem::swap(&mut state.sh, &mut state.sh_prev);
+    std::mem::swap(&mut state.sv, &mut state.sv_prev);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rtm::media;
+    use crate::stencil::coeffs::second_deriv;
+    use crate::util::prop::assert_allclose;
+
+    fn quadratic_grid(n: usize) -> Grid3 {
+        // f = cos(2πz/n): d2/dz2 with the exact band ≈ -(2π/n)² f
+        Grid3::from_fn(n, n, n, |z, _, _| {
+            (2.0 * std::f32::consts::PI * z as f32 / n as f32).cos()
+        })
+    }
+
+    #[test]
+    fn d2_axis_matches_direct_loop() {
+        let g = Grid3::random(6, 7, 9, 11);
+        let w2 = second_deriv(3);
+        let r = 3isize;
+        for axis in 0..3 {
+            let got = d2_axis(&g, &w2, axis, 3);
+            let want = Grid3::from_fn(6, 7, 9, |z, x, y| {
+                let mut acc = 0.0;
+                for k in -r..=r {
+                    let (mut zz, mut xx, mut yy) = (z as isize, x as isize, y as isize);
+                    match axis {
+                        0 => zz += k,
+                        1 => xx += k,
+                        _ => yy += k,
+                    }
+                    acc += w2[(k + r) as usize] * g.get_wrap(zz, xx, yy);
+                }
+                acc
+            });
+            assert_allclose(&got.data, &want.data, 1e-5, 1e-6);
+        }
+    }
+
+    #[test]
+    fn d1_axis_matches_direct_loop() {
+        let g = Grid3::random(5, 8, 6, 13);
+        let w1 = crate::stencil::coeffs::first_deriv(4);
+        let r = 4isize;
+        for axis in 0..3 {
+            let got = d1_axis(&g, &w1, axis, 2);
+            let want = Grid3::from_fn(5, 8, 6, |z, x, y| {
+                let mut acc = 0.0;
+                for k in -r..=r {
+                    let (mut zz, mut xx, mut yy) = (z as isize, x as isize, y as isize);
+                    match axis {
+                        0 => zz += k,
+                        1 => xx += k,
+                        _ => yy += k,
+                    }
+                    acc += w1[(k + r) as usize] * g.get_wrap(zz, xx, yy);
+                }
+                acc
+            });
+            assert_allclose(&got.data, &want.data, 1e-5, 1e-6);
+        }
+    }
+
+    #[test]
+    fn d2_of_cosine_has_right_eigenvalue() {
+        let n = 32;
+        let g = quadratic_grid(n);
+        let w2 = second_deriv(4);
+        let d = d2_axis(&g, &w2, 0, 4);
+        let lam = -(2.0 * std::f32::consts::PI / n as f32).powi(2);
+        for (got, f) in d.data.iter().zip(&g.data) {
+            assert!((got - lam * f).abs() < 1e-4, "{got} vs {}", lam * f);
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let g = Grid3::random(8, 8, 8, 17);
+        let w2 = second_deriv(2);
+        let a = d2_axis(&g, &w2, 1, 1);
+        let b = d2_axis(&g, &w2, 1, 7);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn impulse_stays_bounded_many_steps() {
+        let (nz, nx, ny) = (24, 24, 24);
+        let m = media::layered_vti(nz, nx, ny, 10.0, &media::default_layers());
+        let mut st = VtiState::zeros(nz, nx, ny);
+        let mut sc = VtiScratch::new(nz, nx, ny);
+        st.inject(12, 12, 12, 1.0);
+        let w2 = second_deriv(4);
+        for _ in 0..200 {
+            step(&mut st, &m, &w2, 4, &mut sc);
+        }
+        let e = st.energy();
+        assert!(e.is_finite() && e < 1e6, "unstable: energy {e}");
+    }
+
+    #[test]
+    fn wave_spreads_from_source() {
+        let (nz, nx, ny) = (32, 32, 32);
+        let m = media::layered_vti(nz, nx, ny, 10.0, &media::default_layers());
+        let mut st = VtiState::zeros(nz, nx, ny);
+        let mut sc = VtiScratch::new(nz, nx, ny);
+        let w2 = second_deriv(4);
+        for i in 0..40 {
+            st.inject(16, 16, 16, super::super::wavelet::ricker(i as f64 * m.dt, 15.0));
+            step(&mut st, &m, &w2, 4, &mut sc);
+        }
+        // energy must have propagated away from the source cell
+        let far = st.sh.get(16, 16, 26).abs() + st.sh.get(26, 16, 16).abs();
+        assert!(far > 0.0, "no propagation");
+        assert!(st.energy() > 0.0);
+    }
+}

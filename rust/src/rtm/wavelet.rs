@@ -1,0 +1,47 @@
+//! Ricker source wavelet — the standard seismic source.
+
+use std::f64::consts::PI;
+
+/// Ricker wavelet value at time `t` (seconds) for peak frequency `f0`,
+/// delayed so the wavelet starts near zero.
+pub fn ricker(t: f64, f0: f64) -> f32 {
+    let t0 = 1.2 / f0;
+    let arg = PI * f0 * (t - t0);
+    let a2 = arg * arg;
+    ((1.0 - 2.0 * a2) * (-a2).exp()) as f32
+}
+
+/// Sampled wavelet for `n` steps of `dt`.
+pub fn ricker_series(n: usize, dt: f64, f0: f64) -> Vec<f32> {
+    (0..n).map(|i| ricker(i as f64 * dt, f0)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_at_delay() {
+        let f0 = 15.0;
+        let t0 = 1.2 / f0;
+        let peak = ricker(t0, f0);
+        assert!((peak - 1.0).abs() < 1e-6);
+        assert!(ricker(t0 + 0.01, f0) < peak);
+        assert!(ricker(t0 - 0.01, f0) < peak);
+    }
+
+    #[test]
+    fn starts_and_ends_near_zero() {
+        let f0 = 15.0;
+        assert!(ricker(0.0, f0).abs() < 0.02);
+        assert!(ricker(1.0, f0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn series_has_zero_mean_tail() {
+        // integral of a Ricker wavelet is ~0
+        let s = ricker_series(4000, 0.0005, 15.0);
+        let sum: f64 = s.iter().map(|&v| v as f64).sum();
+        assert!(sum.abs() < 0.05, "sum {sum}");
+    }
+}

@@ -1,0 +1,173 @@
+//! Parser for `artifacts/manifest.txt` written by `python/compile/aot.py`.
+//!
+//! Line format:
+//! `name|file.hlo.txt|in=f32[4,16,16];f32[12,24,24]|out=f32[4,16,16]|meta=k:v,...`
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Shape + dtype of one tensor.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Parse `f32[4,16,16]`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let open = s.find('[').ok_or_else(|| anyhow!("missing '[' in {s:?}"))?;
+        if !s.ends_with(']') {
+            bail!("missing ']' in {s:?}");
+        }
+        let dtype = s[..open].to_string();
+        let body = &s[open + 1..s.len() - 1];
+        let shape = if body.is_empty() {
+            Vec::new()
+        } else {
+            body.split(',')
+                .map(|d| d.trim().parse::<usize>().context("bad dim"))
+                .collect::<Result<_>>()?
+        };
+        Ok(Self { dtype, shape })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: HashMap<String, String>,
+}
+
+/// The full artifact manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    entries: HashMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split('|').collect();
+            if parts.len() != 5 {
+                bail!("manifest line {} has {} fields, want 5", lineno + 1, parts.len());
+            }
+            let name = parts[0].to_string();
+            let file = parts[1].to_string();
+            let inputs = parse_specs(parts[2].strip_prefix("in=").context("missing in=")?)?;
+            let outputs = parse_specs(parts[3].strip_prefix("out=").context("missing out=")?)?;
+            let meta = parts[4]
+                .strip_prefix("meta=")
+                .context("missing meta=")?
+                .split(',')
+                .filter(|kv| !kv.is_empty())
+                .map(|kv| {
+                    let (k, v) = kv.split_once(':').unwrap_or((kv, ""));
+                    (k.to_string(), v.to_string())
+                })
+                .collect();
+            entries.insert(name.clone(), ArtifactMeta { name, file, inputs, outputs, meta });
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.entries.get(name)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.entries.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+fn parse_specs(s: &str) -> Result<Vec<TensorSpec>> {
+    if s.is_empty() {
+        return Ok(Vec::new());
+    }
+    s.split(';').map(TensorSpec::parse).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const LINE: &str = "star3d_r4_block|star3d_r4_block.hlo.txt|in=f32[12,24,24]|out=f32[4,16,16]|meta=kind:star3d_block,radius:4";
+
+    #[test]
+    fn parses_tensor_spec() {
+        let t = TensorSpec::parse("f32[12,24,24]").unwrap();
+        assert_eq!(t.dtype, "f32");
+        assert_eq!(t.shape, vec![12, 24, 24]);
+        assert_eq!(t.elements(), 12 * 24 * 24);
+    }
+
+    #[test]
+    fn parses_scalar_spec() {
+        let t = TensorSpec::parse("f32[]").unwrap();
+        assert!(t.shape.is_empty());
+        assert_eq!(t.elements(), 1);
+    }
+
+    #[test]
+    fn parses_manifest_line() {
+        let m = Manifest::parse(LINE).unwrap();
+        assert_eq!(m.len(), 1);
+        let a = m.get("star3d_r4_block").unwrap();
+        assert_eq!(a.file, "star3d_r4_block.hlo.txt");
+        assert_eq!(a.inputs.len(), 1);
+        assert_eq!(a.outputs[0].shape, vec![4, 16, 16]);
+        assert_eq!(a.meta["radius"], "4");
+    }
+
+    #[test]
+    fn multi_input_line() {
+        let line = "rtm|rtm.hlo.txt|in=f32[2,2];f32[2,2]|out=f32[2,2];f32[2,2]|meta=";
+        let m = Manifest::parse(line).unwrap();
+        let a = m.get("rtm").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.outputs.len(), 2);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("only|three|fields").is_err());
+        assert!(TensorSpec::parse("f32 12,24").is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let text = format!("# comment\n\n{LINE}\n");
+        assert_eq!(Manifest::parse(&text).unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,28 @@
+//! Parametric simulator of the paper's (confidential) multicore SoC.
+//!
+//! The paper's platform cannot be named or bought; its *mechanisms* are
+//! fully described, so we rebuild them (DESIGN.md §3):
+//!
+//! * [`soc`]       — the platform parameter set (cores, NUMA, frequencies,
+//!   CPI figures, memory bandwidths) reverse-engineered from the paper's
+//!   published absolute numbers and peak percentages;
+//! * [`cache`]     — set-associative LRU private caches;
+//! * [`stream`]    — distinct-access-stream counting and the on-package
+//!   1024-bit-port efficiency model (brick layout rationale);
+//! * [`directory`] — NUMA root directory / cache-snoop data sharing;
+//! * [`noc`]       — intra-NUMA ring interconnect;
+//! * [`sdma`]      — the per-die SDMA engine (160 channels, strided
+//!   copies), calibrated to Table II;
+//! * [`mpi`]       — the lock-serialized MPI runtime cost model;
+//! * [`roofline`]  — the §IV-B performance model tying it together.
+
+pub mod cache;
+pub mod directory;
+pub mod mpi;
+pub mod noc;
+pub mod roofline;
+pub mod sdma;
+pub mod soc;
+pub mod stream;
+
+pub use soc::Platform;

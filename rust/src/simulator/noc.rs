@@ -1,0 +1,69 @@
+//! Intra-NUMA ring interconnect model (paper §II-B: ">32 cores connected
+//! in a ring topology" per NUMA domain).
+//!
+//! Used by the snoop analysis to cost peer-cache transfers: latency grows
+//! with hop distance on the ring, which is why the adjacent-tile
+//! assignment matters (neighbouring tiles land on neighbouring cores).
+
+/// A unidirectional-shortest-path ring of `n` stations.
+#[derive(Clone, Copy, Debug)]
+pub struct Ring {
+    pub stations: usize,
+    pub hop_latency_ns: f64,
+    /// per-station injection overhead
+    pub injection_ns: f64,
+}
+
+impl Ring {
+    pub fn new(stations: usize) -> Self {
+        Self { stations, hop_latency_ns: 1.2, injection_ns: 6.0 }
+    }
+
+    /// Shortest hop distance between two stations.
+    pub fn hops(&self, a: usize, b: usize) -> usize {
+        assert!(a < self.stations && b < self.stations);
+        let d = a.abs_diff(b);
+        d.min(self.stations - d)
+    }
+
+    /// One-way message latency between stations.
+    pub fn latency_ns(&self, a: usize, b: usize) -> f64 {
+        self.injection_ns + self.hops(a, b) as f64 * self.hop_latency_ns
+    }
+
+    /// Average latency from `a` to every other station (directory
+    /// broadcast cost proxy).
+    pub fn mean_latency_ns(&self, a: usize) -> f64 {
+        let sum: f64 = (0..self.stations)
+            .filter(|&b| b != a)
+            .map(|b| self.latency_ns(a, b))
+            .sum();
+        sum / (self.stations - 1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hops_shortest_path() {
+        let r = Ring::new(8);
+        assert_eq!(r.hops(0, 1), 1);
+        assert_eq!(r.hops(0, 7), 1); // wraps
+        assert_eq!(r.hops(0, 4), 4);
+        assert_eq!(r.hops(2, 2), 0);
+    }
+
+    #[test]
+    fn adjacent_cores_cheapest() {
+        let r = Ring::new(38);
+        assert!(r.latency_ns(5, 6) < r.latency_ns(5, 20));
+    }
+
+    #[test]
+    fn mean_latency_symmetric() {
+        let r = Ring::new(16);
+        assert!((r.mean_latency_ns(0) - r.mean_latency_ns(9)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,166 @@
+//! SDMA engine model (paper §IV-F, Table II).
+//!
+//! Each compute die carries an SDMA engine with 160 channels performing
+//! asynchronous strided copies between / within NUMA domains, without
+//! occupying cores or polluting caches.  Achieved bandwidth depends
+//! sharply on the contiguous run length of the strided pattern; the model
+//! interpolates a calibration table anchored to the paper's Table II:
+//!
+//! | direction | block (z,x,y)  | run bytes | GB/s  |
+//! |-----------|----------------|-----------|-------|
+//! | X         | (16, 512, 512) | 64        | 57.9  |
+//! | Y         | (512, 4, 512)  | 8192      | 144.1 |
+//! | Z         | (512, 512, 4)  | 4 MiB     | 285.1 |
+//!
+//! (Layout (z, y, x), x contiguous, in the paper's Table II coordinates;
+//! in this repo's (z, x, y) layout the same run lengths arise for the
+//! corresponding face orientations.)
+
+/// An asynchronous SDMA copy descriptor.
+#[derive(Clone, Copy, Debug)]
+pub struct CopyDesc {
+    /// total payload bytes
+    pub bytes: u64,
+    /// contiguous run length of the strided pattern
+    pub run_bytes: u64,
+}
+
+impl CopyDesc {
+    /// Face exchange descriptor for a halo slab of `(depth, a, b)` f32
+    /// elements where `b` spans the contiguous axis and runs merge when
+    /// the slab is contiguous across `a` too.
+    pub fn face(depth: usize, a: usize, b: usize, full_a: bool) -> Self {
+        let bytes = (depth * a * b * 4) as u64;
+        let run = if full_a { (a * b * 4) as u64 } else { (b * 4) as u64 };
+        Self { bytes, run_bytes: run }
+    }
+}
+
+/// The SDMA engine model.
+#[derive(Clone, Copy, Debug)]
+pub struct Sdma {
+    pub channels: usize,
+    pub peak_bw: f64,
+    /// per-descriptor setup latency
+    pub setup_us: f64,
+}
+
+impl Default for Sdma {
+    fn default() -> Self {
+        Self { channels: 160, peak_bw: 300e9, setup_us: 2.0 }
+    }
+}
+
+/// Calibration anchors: (run_bytes, efficiency = achieved / peak),
+/// log-linear interpolated.  Anchored to Table II with peak = 300 GB/s.
+const CAL: [(f64, f64); 4] = [
+    (64.0, 0.193),      // X-direction: 57.9 GB/s
+    (8192.0, 0.480),    // Y-direction: 144.1 GB/s
+    (4194304.0, 0.950), // Z-direction: 285.1 GB/s
+    (1e9, 0.97),
+];
+
+impl Sdma {
+    /// Efficiency for a given contiguous run length.
+    pub fn efficiency(&self, run_bytes: u64) -> f64 {
+        let x = (run_bytes.max(1) as f64).ln();
+        if x <= CAL[0].0.ln() {
+            return CAL[0].1;
+        }
+        for w in CAL.windows(2) {
+            let (x0, y0) = (w[0].0.ln(), w[0].1);
+            let (x1, y1) = (w[1].0.ln(), w[1].1);
+            if x <= x1 {
+                return y0 + (y1 - y0) * (x - x0) / (x1 - x0);
+            }
+        }
+        CAL[CAL.len() - 1].1
+    }
+
+    /// Achieved bandwidth for a copy.
+    pub fn bandwidth(&self, c: CopyDesc) -> f64 {
+        self.peak_bw * self.efficiency(c.run_bytes)
+    }
+
+    /// Simulated transfer time (seconds) for a batch of copies executed
+    /// across the channel pool (channels process descriptors in parallel;
+    /// the link itself is shared).
+    pub fn batch_time_s(&self, copies: &[CopyDesc]) -> f64 {
+        if copies.is_empty() {
+            return 0.0;
+        }
+        let setup_waves = copies.len().div_ceil(self.channels) as f64;
+        let setup = setup_waves * self.setup_us * 1e-6;
+        let transfer: f64 =
+            copies.iter().map(|&c| c.bytes as f64 / self.bandwidth(c)).sum();
+        setup + transfer
+    }
+
+    /// Non-intrusiveness: SDMA does not occupy cores (paper §IV-F), so a
+    /// compute phase of `compute_s` overlapped with `comm_s` of SDMA
+    /// finishes in `max` rather than `sum`.
+    pub fn overlapped_time_s(compute_s: f64, comm_s: f64) -> f64 {
+        compute_s.max(comm_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gbs(bw: f64) -> f64 {
+        bw / 1e9
+    }
+
+    #[test]
+    fn table2_x_direction() {
+        let s = Sdma::default();
+        // X halo of a 512³ grid: runs of 16 f32 = 64 B
+        let c = CopyDesc { bytes: 16 * 512 * 512 * 4, run_bytes: 64 };
+        let bw = gbs(s.bandwidth(c));
+        assert!((bw - 57.9).abs() / 57.9 < 0.05, "X: {bw:.1} GB/s");
+    }
+
+    #[test]
+    fn table2_y_direction() {
+        let s = Sdma::default();
+        let c = CopyDesc { bytes: 512 * 4 * 512 * 4, run_bytes: 8192 };
+        let bw = gbs(s.bandwidth(c));
+        assert!((bw - 144.1).abs() / 144.1 < 0.05, "Y: {bw:.1} GB/s");
+    }
+
+    #[test]
+    fn table2_z_direction() {
+        let s = Sdma::default();
+        let c = CopyDesc { bytes: 512 * 512 * 4 * 4, run_bytes: 4 << 20 };
+        let bw = gbs(s.bandwidth(c));
+        assert!((bw - 285.1).abs() / 285.1 < 0.05, "Z: {bw:.1} GB/s");
+    }
+
+    #[test]
+    fn efficiency_monotone_in_run_length() {
+        let s = Sdma::default();
+        let mut last = 0.0;
+        for run in [64u64, 256, 1024, 8192, 65536, 1 << 22] {
+            let e = s.efficiency(run);
+            assert!(e >= last, "run {run}: {e}");
+            last = e;
+        }
+    }
+
+    #[test]
+    fn batch_amortizes_setup_across_channels() {
+        let s = Sdma::default();
+        let one = CopyDesc { bytes: 1 << 20, run_bytes: 1 << 20 };
+        let t160 = s.batch_time_s(&vec![one; 160]);
+        let t1 = s.batch_time_s(&[one]);
+        // 160 descriptors pay one setup wave, not 160
+        assert!(t160 < 160.0 * t1);
+    }
+
+    #[test]
+    fn overlap_is_max_not_sum() {
+        assert_eq!(Sdma::overlapped_time_s(2.0, 1.5), 2.0);
+        assert_eq!(Sdma::overlapped_time_s(1.0, 3.0), 3.0);
+    }
+}

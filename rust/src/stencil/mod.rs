@@ -1,0 +1,165 @@
+//! Stencil specifications and compute engines.
+//!
+//! Engines (all semantically identical, checked against each other and —
+//! through the AOT artifacts — against the Pallas kernels):
+//!
+//! * [`naive`] — straight loops; the paper's "compiler baseline".
+//! * [`simd`] — 2.5D-blocked, unroll-friendly inner loops; stands in for
+//!   the paper's hand-tuned SIMD-intrinsic baseline.
+//! * [`matrix_unit`] — the MMStencil algorithm: per-(VX,VY,VZ)-block
+//!   outer-product accumulation into 16×16 tiles, with instruction
+//!   counters feeding the microarchitectural performance model.
+//! * [`box_zeroing`] — the Redundant-Access Zeroing box decomposition.
+
+pub mod box_zeroing;
+pub mod coeffs;
+pub mod matrix_unit;
+pub mod naive;
+pub mod simd;
+
+pub use coeffs::{box_weights, first_deriv, second_deriv, star_weights};
+
+/// Stencil pattern class (paper Fig. 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Pattern {
+    Star,
+    Box,
+}
+
+/// A stencil benchmark kernel specification.
+#[derive(Clone, Debug)]
+pub struct StencilSpec {
+    pub pattern: Pattern,
+    pub ndim: usize,
+    pub radius: usize,
+    /// Star: per-axis weights (len 2r+1, zero centre) in axis order
+    /// `[x, y]` (2D) or `[z, x, y]` (3D), plus the centre weight.
+    /// Box: dense weight tensor, row-major over `(x,y)` / `(z,x,y)`.
+    pub star_center: f32,
+    pub star_axes: Vec<Vec<f32>>,
+    pub box_w: Vec<f32>,
+}
+
+impl StencilSpec {
+    pub fn star2d(radius: usize) -> Self {
+        let (c, axes) = star_weights(2, radius);
+        Self {
+            pattern: Pattern::Star,
+            ndim: 2,
+            radius,
+            star_center: c,
+            star_axes: axes,
+            box_w: Vec::new(),
+        }
+    }
+
+    pub fn star3d(radius: usize) -> Self {
+        let (c, axes) = star_weights(3, radius);
+        Self {
+            pattern: Pattern::Star,
+            ndim: 3,
+            radius,
+            star_center: c,
+            star_axes: axes,
+            box_w: Vec::new(),
+        }
+    }
+
+    pub fn box2d(radius: usize) -> Self {
+        Self {
+            pattern: Pattern::Box,
+            ndim: 2,
+            radius,
+            star_center: 0.0,
+            star_axes: Vec::new(),
+            box_w: box_weights(2, radius),
+        }
+    }
+
+    pub fn box3d(radius: usize) -> Self {
+        Self {
+            pattern: Pattern::Box,
+            ndim: 3,
+            radius,
+            star_center: 0.0,
+            star_axes: Vec::new(),
+            box_w: box_weights(3, radius),
+        }
+    }
+
+    /// Benchmark kernel by Table-I name (e.g. "3DStarR4").
+    pub fn by_name(name: &str) -> Option<Self> {
+        Some(match name {
+            "2DStarR2" => Self::star2d(2),
+            "2DStarR4" => Self::star2d(4),
+            "2DBoxR2" => Self::box2d(2),
+            "2DBoxR3" => Self::box2d(3),
+            "3DStarR2" => Self::star3d(2),
+            "3DStarR4" => Self::star3d(4),
+            "3DBoxR1" => Self::box3d(1),
+            "3DBoxR2" => Self::box3d(2),
+            _ => return None,
+        })
+    }
+
+    /// All eight Table-I benchmark kernels.
+    pub fn benchmark_suite() -> Vec<(&'static str, Self)> {
+        [
+            "2DStarR2", "2DStarR4", "2DBoxR2", "2DBoxR3",
+            "3DStarR2", "3DStarR4", "3DBoxR1", "3DBoxR2",
+        ]
+        .iter()
+        .map(|&n| (n, Self::by_name(n).unwrap()))
+        .collect()
+    }
+
+    /// Number of stencil points (Table I "Points" column).
+    pub fn points(&self) -> usize {
+        match self.pattern {
+            Pattern::Star => 1 + 2 * self.ndim * self.radius,
+            Pattern::Box => (2 * self.radius + 1).pow(self.ndim as u32),
+        }
+    }
+
+    /// Flops per output point (mul+add per neighbour).
+    pub fn flops_per_point(&self) -> usize {
+        2 * self.points()
+    }
+
+    /// Minimum bytes moved per output point (read + write, perfect reuse):
+    /// the denominator of the paper's bandwidth-utilization metric.
+    pub fn min_bytes_per_point(&self) -> usize {
+        2 * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_point_counts() {
+        for (name, pts) in [
+            ("2DStarR2", 9),
+            ("2DStarR4", 17),
+            ("2DBoxR2", 25),
+            ("2DBoxR3", 49),
+            ("3DStarR2", 13),
+            ("3DStarR4", 25),
+            ("3DBoxR1", 27),
+            ("3DBoxR2", 125),
+        ] {
+            assert_eq!(StencilSpec::by_name(name).unwrap().points(), pts, "{name}");
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(StencilSpec::by_name("4DStarR9").is_none());
+    }
+
+    #[test]
+    fn suite_has_eight_kernels() {
+        assert_eq!(StencilSpec::benchmark_suite().len(), 8);
+    }
+}

@@ -1,0 +1,176 @@
+//! Naive direct-loop engines — the paper's "compiler baseline" and the
+//! semantic reference for every other rust engine.  Periodic boundaries,
+//! matching the jnp.roll grid oracles in `python/compile/kernels/ref.py`.
+
+use super::{Pattern, StencilSpec};
+use crate::grid::{Grid2, Grid3};
+
+/// Apply a 3D spec to a periodic grid.
+pub fn apply3(spec: &StencilSpec, g: &Grid3) -> Grid3 {
+    assert_eq!(spec.ndim, 3);
+    match spec.pattern {
+        Pattern::Star => star3(spec, g),
+        Pattern::Box => box3(spec, g),
+    }
+}
+
+/// Apply a 2D spec to a periodic grid.
+pub fn apply2(spec: &StencilSpec, g: &Grid2) -> Grid2 {
+    assert_eq!(spec.ndim, 2);
+    match spec.pattern {
+        Pattern::Star => star2(spec, g),
+        Pattern::Box => box2(spec, g),
+    }
+}
+
+fn star3(spec: &StencilSpec, g: &Grid3) -> Grid3 {
+    let r = spec.radius as isize;
+    let (wz, wx, wy) = (&spec.star_axes[0], &spec.star_axes[1], &spec.star_axes[2]);
+    let mut out = Grid3::zeros(g.nz, g.nx, g.ny);
+    for z in 0..g.nz as isize {
+        for x in 0..g.nx as isize {
+            for y in 0..g.ny as isize {
+                let mut acc = spec.star_center * g.get_wrap(z, x, y);
+                for k in -r..=r {
+                    if k == 0 {
+                        continue;
+                    }
+                    let i = (k + r) as usize;
+                    acc += wz[i] * g.get_wrap(z + k, x, y);
+                    acc += wx[i] * g.get_wrap(z, x + k, y);
+                    acc += wy[i] * g.get_wrap(z, x, y + k);
+                }
+                out.set(z as usize, x as usize, y as usize, acc);
+            }
+        }
+    }
+    out
+}
+
+fn box3(spec: &StencilSpec, g: &Grid3) -> Grid3 {
+    let r = spec.radius as isize;
+    let n = (2 * spec.radius + 1) as isize;
+    let mut out = Grid3::zeros(g.nz, g.nx, g.ny);
+    for z in 0..g.nz as isize {
+        for x in 0..g.nx as isize {
+            for y in 0..g.ny as isize {
+                let mut acc = 0.0f32;
+                for c in 0..n {
+                    for a in 0..n {
+                        for b in 0..n {
+                            let w = spec.box_w[((c * n + a) * n + b) as usize];
+                            acc += w * g.get_wrap(z + c - r, x + a - r, y + b - r);
+                        }
+                    }
+                }
+                out.set(z as usize, x as usize, y as usize, acc);
+            }
+        }
+    }
+    out
+}
+
+fn star2(spec: &StencilSpec, g: &Grid2) -> Grid2 {
+    let r = spec.radius as isize;
+    let (wx, wy) = (&spec.star_axes[0], &spec.star_axes[1]);
+    let mut out = Grid2::zeros(g.nx, g.ny);
+    for x in 0..g.nx as isize {
+        for y in 0..g.ny as isize {
+            let mut acc = spec.star_center * g.get_wrap(x, y);
+            for k in -r..=r {
+                if k == 0 {
+                    continue;
+                }
+                let i = (k + r) as usize;
+                acc += wx[i] * g.get_wrap(x + k, y);
+                acc += wy[i] * g.get_wrap(x, y + k);
+            }
+            out.set(x as usize, y as usize, acc);
+        }
+    }
+    out
+}
+
+fn box2(spec: &StencilSpec, g: &Grid2) -> Grid2 {
+    let r = spec.radius as isize;
+    let n = (2 * spec.radius + 1) as isize;
+    let mut out = Grid2::zeros(g.nx, g.ny);
+    for x in 0..g.nx as isize {
+        for y in 0..g.ny as isize {
+            let mut acc = 0.0f32;
+            for a in 0..n {
+                for b in 0..n {
+                    let w = spec.box_w[(a * n + b) as usize];
+                    acc += w * g.get_wrap(x + a - r, y + b - r);
+                }
+            }
+            out.set(x as usize, y as usize, acc);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn star3_constant_field_annihilated() {
+        // Laplacian weights sum to zero → constant input maps to ~0
+        let spec = StencilSpec::star3d(4);
+        let g = Grid3::from_fn(8, 8, 8, |_, _, _| 7.5);
+        let out = apply3(&spec, &g);
+        for &v in &out.data {
+            assert!(v.abs() < 1e-4, "{v}");
+        }
+    }
+
+    #[test]
+    fn star3_impulse_spreads_cross_shape() {
+        let spec = StencilSpec::star3d(2);
+        let mut g = Grid3::zeros(9, 9, 9);
+        g.set(4, 4, 4, 1.0);
+        let out = apply3(&spec, &g);
+        // out at (4,4,4±k) = wy[k+r]; off-axis neighbours see nothing
+        assert!((out.get(4, 4, 6) - spec.star_axes[2][4]).abs() < 1e-7);
+        assert_eq!(out.get(3, 3, 4), 0.0);
+        assert!((out.get(4, 4, 4) - spec.star_center).abs() < 1e-6);
+    }
+
+    #[test]
+    fn box2_matches_manual_sum() {
+        let spec = StencilSpec::box2d(1);
+        let g = Grid2::random(6, 6, 9);
+        let out = apply2(&spec, &g);
+        // hand-compute one point
+        let (x, y) = (3, 4);
+        let mut want = 0.0f32;
+        for a in 0..3 {
+            for b in 0..3 {
+                want += spec.box_w[a * 3 + b]
+                    * g.get_wrap(x as isize + a as isize - 1, y as isize + b as isize - 1);
+            }
+        }
+        assert!((out.get(x, y) - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn periodic_wrap_consistency() {
+        // shifting the input cyclically shifts the output
+        let spec = StencilSpec::star2d(2);
+        let g = Grid2::random(8, 8, 10);
+        let mut gs = Grid2::zeros(8, 8);
+        for x in 0..8 {
+            for y in 0..8 {
+                gs.set(x, y, g.get_wrap(x as isize + 1, y as isize));
+            }
+        }
+        let a = apply2(&spec, &g);
+        let b = apply2(&spec, &gs);
+        for x in 0..8 {
+            for y in 0..8 {
+                assert!((b.get(x, y) - a.get_wrap(x as isize + 1, y as isize)).abs() < 1e-6);
+            }
+        }
+    }
+}

@@ -1,0 +1,391 @@
+//! Blocked, vectorization-friendly engine — stands in for the paper's
+//! hand-tuned SIMD-intrinsic baseline (2.5D blocking + a 16×4×2-style
+//! layout-friendly sweep; see paper §V-A).
+//!
+//! The interior is computed with wrap-free, y-contiguous inner loops that
+//! LLVM auto-vectorizes; the periodic boundary shell falls back to the
+//! wrap path so results are bit-comparable with [`super::naive`] up to
+//! fp reassociation.
+
+use super::{Pattern, StencilSpec};
+use crate::grid::{Grid2, Grid3};
+
+/// 2.5D tile used for the blocked sweep (paper's SIMD baseline uses a
+/// 16×4×2 brick; the tile here is the per-core working set).
+#[derive(Clone, Copy, Debug)]
+pub struct Tile {
+    pub tz: usize,
+    pub tx: usize,
+    pub ty: usize,
+}
+
+impl Default for Tile {
+    fn default() -> Self {
+        // swept in the §Perf pass (EXPERIMENTS.md): wider x-tiles keep
+        // the 2r+1 x-neighbour rows resident across the y sweep
+        Self { tz: 2, tx: 16, ty: 256 }
+    }
+}
+
+/// Apply a 3D spec with blocked interior + wrapped boundary.
+pub fn apply3(spec: &StencilSpec, g: &Grid3) -> Grid3 {
+    apply3_tiled(spec, g, Tile::default())
+}
+
+pub fn apply3_tiled(spec: &StencilSpec, g: &Grid3, tile: Tile) -> Grid3 {
+    assert_eq!(spec.ndim, 3);
+    let r = spec.radius;
+    let mut out = Grid3::zeros(g.nz, g.nx, g.ny);
+    // interior: wrap-free fast path, tiled
+    if g.nz > 2 * r && g.nx > 2 * r && g.ny > 2 * r {
+        let (z0, z1) = (r, g.nz - r);
+        let (x0, x1) = (r, g.nx - r);
+        let (y0, y1) = (r, g.ny - r);
+        let mut z = z0;
+        while z < z1 {
+            let ze = (z + tile.tz).min(z1);
+            let mut x = x0;
+            while x < x1 {
+                let xe = (x + tile.tx).min(x1);
+                let mut y = y0;
+                while y < y1 {
+                    let ye = (y + tile.ty).min(y1);
+                    match spec.pattern {
+                        Pattern::Star => star3_block(spec, g, &mut out, z, ze, x, xe, y, ye),
+                        Pattern::Box => box3_block(spec, g, &mut out, z, ze, x, xe, y, ye),
+                    }
+                    y = ye;
+                }
+                x = xe;
+            }
+            z = ze;
+        }
+    }
+    // boundary shell: wrap path
+    let rb = r.min(g.nz).min(g.nx).min(g.ny);
+    let inside = |z: usize, x: usize, y: usize| {
+        g.nz > 2 * r
+            && g.nx > 2 * r
+            && g.ny > 2 * r
+            && (r..g.nz - r).contains(&z)
+            && (r..g.nx - r).contains(&x)
+            && (r..g.ny - r).contains(&y)
+    };
+    let _ = rb;
+    for z in 0..g.nz {
+        for x in 0..g.nx {
+            for y in 0..g.ny {
+                if !inside(z, x, y) {
+                    out.set(z, x, y, point3_wrap(spec, g, z as isize, x as isize, y as isize));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[inline]
+pub(crate) fn point3_wrap(spec: &StencilSpec, g: &Grid3, z: isize, x: isize, y: isize) -> f32 {
+    let r = spec.radius as isize;
+    match spec.pattern {
+        Pattern::Star => {
+            let (wz, wx, wy) = (&spec.star_axes[0], &spec.star_axes[1], &spec.star_axes[2]);
+            let mut acc = spec.star_center * g.get_wrap(z, x, y);
+            for k in -r..=r {
+                if k == 0 {
+                    continue;
+                }
+                let i = (k + r) as usize;
+                acc += wz[i] * g.get_wrap(z + k, x, y);
+                acc += wx[i] * g.get_wrap(z, x + k, y);
+                acc += wy[i] * g.get_wrap(z, x, y + k);
+            }
+            acc
+        }
+        Pattern::Box => {
+            let n = 2 * r + 1;
+            let mut acc = 0.0;
+            for c in 0..n {
+                for a in 0..n {
+                    for b in 0..n {
+                        acc += spec.box_w[((c * n + a) * n + b) as usize]
+                            * g.get_wrap(z + c - r, x + a - r, y + b - r);
+                    }
+                }
+            }
+            acc
+        }
+    }
+}
+
+/// Wrap-free star on one tile: per (z,x) row, accumulate the 2·ndim·r+1
+/// contributions as shifted y-contiguous slices (auto-vectorizes).
+#[inline]
+fn star3_block(
+    spec: &StencilSpec, g: &Grid3, out: &mut Grid3,
+    z0: usize, z1: usize, x0: usize, x1: usize, y0: usize, y1: usize,
+) {
+    let r = spec.radius;
+    let ny = y1 - y0;
+    debug_assert!(ny <= 512, "tile.ty must be <= 512");
+    let (wz, wx, wy) = (&spec.star_axes[0], &spec.star_axes[1], &spec.star_axes[2]);
+    for z in z0..z1 {
+        for x in x0..x1 {
+            let ob = out.idx(z, x, y0);
+            let cb = g.idx(z, x, y0);
+            // centre + y-axis from the same row
+            {
+                let (src, dst) = (&g.data, &mut out.data);
+                let row = &src[cb - r..cb + ny + r];
+                let o = &mut dst[ob..ob + ny];
+                for i in 0..ny {
+                    o[i] = spec.star_center * row[r + i];
+                }
+                for k in 0..2 * r + 1 {
+                    if k == r {
+                        continue;
+                    }
+                    let w = wy[k];
+                    for i in 0..ny {
+                        o[i] += w * row[k + i];
+                    }
+                }
+            }
+            // x- and z-axis rows: accumulate into a stack buffer so the
+            // compiler keeps the accumulator in registers across rows
+            // (repeated out.data round-trips defeat vectorization)
+            let mut acc = [0.0f32; 512];
+            let acc = &mut acc[..ny];
+            for k in 0..2 * r + 1 {
+                if k == r {
+                    continue;
+                }
+                let zb = g.idx(z + k - r, x, y0);
+                let xb = g.idx(z, x + k - r, y0);
+                let (wzk, wxk) = (wz[k], wx[k]);
+                let (zr, xr) = (&g.data[zb..zb + ny], &g.data[xb..xb + ny]);
+                for ((a, &zv), &xv) in acc.iter_mut().zip(zr).zip(xr) {
+                    *a += wzk * zv + wxk * xv;
+                }
+            }
+            for (o, &a) in out.data[ob..ob + ny].iter_mut().zip(acc.iter()) {
+                *o += a;
+            }
+        }
+    }
+}
+
+#[inline]
+fn box3_block(
+    spec: &StencilSpec, g: &Grid3, out: &mut Grid3,
+    z0: usize, z1: usize, x0: usize, x1: usize, y0: usize, y1: usize,
+) {
+    let r = spec.radius;
+    let n = 2 * r + 1;
+    let ny = y1 - y0;
+    for z in z0..z1 {
+        for x in x0..x1 {
+            let ob = out.idx(z, x, y0);
+            out.data[ob..ob + ny].fill(0.0);
+            for c in 0..n {
+                for a in 0..n {
+                    let sb = g.idx(z + c - r, x + a - r, y0) - r;
+                    for b in 0..n {
+                        let w = spec.box_w[(c * n + a) * n + b];
+                        for i in 0..ny {
+                            out.data[ob + i] += w * g.data[sb + b + i];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Compute an arbitrary sub-region `[z0,z1)×[x0,x1)×[y0,y1)` of the
+/// periodic sweep into `out` — the per-tile entry point of the parallel
+/// coordinator (`coordinator::driver`).  Interior rows take the fast
+/// wrap-free path; boundary rows fall back to wrapped points.
+pub fn apply3_region(
+    spec: &StencilSpec, g: &Grid3, out: &mut Grid3,
+    z0: usize, z1: usize, x0: usize, x1: usize, y0: usize, y1: usize,
+) {
+    assert_eq!(spec.ndim, 3);
+    let r = spec.radius;
+    let interior_possible = g.nz > 2 * r && g.nx > 2 * r && g.ny > 2 * r;
+    for z in z0..z1 {
+        for x in x0..x1 {
+            let zx_interior =
+                interior_possible && (r..g.nz - r).contains(&z) && (r..g.nx - r).contains(&x);
+            if zx_interior {
+                let ylo = y0.max(r);
+                let yhi = y1.min(g.ny - r);
+                if ylo < yhi {
+                    match spec.pattern {
+                        Pattern::Star => star3_block(spec, g, out, z, z + 1, x, x + 1, ylo, yhi),
+                        Pattern::Box => box3_block(spec, g, out, z, z + 1, x, x + 1, ylo, yhi),
+                    }
+                }
+                for y in y0..ylo.min(y1) {
+                    out.set(z, x, y, point3_wrap(spec, g, z as isize, x as isize, y as isize));
+                }
+                for y in yhi.max(y0)..y1 {
+                    out.set(z, x, y, point3_wrap(spec, g, z as isize, x as isize, y as isize));
+                }
+            } else {
+                for y in y0..y1 {
+                    out.set(z, x, y, point3_wrap(spec, g, z as isize, x as isize, y as isize));
+                }
+            }
+        }
+    }
+}
+
+/// 2D variant (blocked rows, wrapped boundary shell).
+pub fn apply2(spec: &StencilSpec, g: &Grid2) -> Grid2 {
+    assert_eq!(spec.ndim, 2);
+    let r = spec.radius;
+    let mut out = Grid2::zeros(g.nx, g.ny);
+    if g.nx > 2 * r && g.ny > 2 * r {
+        for x in r..g.nx - r {
+            let ny = g.ny - 2 * r;
+            let ob = out.idx(x, r);
+            match spec.pattern {
+                Pattern::Star => {
+                    let (wx, wy) = (&spec.star_axes[0], &spec.star_axes[1]);
+                    let cb = g.idx(x, r);
+                    for i in 0..ny {
+                        out.data[ob + i] = spec.star_center * g.data[cb + i];
+                    }
+                    for k in 0..2 * r + 1 {
+                        if k == r {
+                            continue;
+                        }
+                        let yb = g.idx(x, 0);
+                        let xb = g.idx(x + k - r, r);
+                        let (wyk, wxk) = (wy[k], wx[k]);
+                        for i in 0..ny {
+                            out.data[ob + i] += wyk * g.data[yb + k + i] + wxk * g.data[xb + i];
+                        }
+                    }
+                }
+                Pattern::Box => {
+                    let n = 2 * r + 1;
+                    out.data[ob..ob + ny].fill(0.0);
+                    for a in 0..n {
+                        let sb = g.idx(x + a - r, 0);
+                        for b in 0..n {
+                            let w = spec.box_w[a * n + b];
+                            for i in 0..ny {
+                                out.data[ob + i] += w * g.data[sb + b + i];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for x in 0..g.nx {
+        for y in 0..g.ny {
+            let interior = g.nx > 2 * r
+                && g.ny > 2 * r
+                && (r..g.nx - r).contains(&x)
+                && (r..g.ny - r).contains(&y);
+            if !interior {
+                out.set(x, y, point2_wrap(spec, g, x as isize, y as isize));
+            }
+        }
+    }
+    out
+}
+
+#[inline]
+fn point2_wrap(spec: &StencilSpec, g: &Grid2, x: isize, y: isize) -> f32 {
+    let r = spec.radius as isize;
+    match spec.pattern {
+        Pattern::Star => {
+            let (wx, wy) = (&spec.star_axes[0], &spec.star_axes[1]);
+            let mut acc = spec.star_center * g.get_wrap(x, y);
+            for k in -r..=r {
+                if k == 0 {
+                    continue;
+                }
+                let i = (k + r) as usize;
+                acc += wx[i] * g.get_wrap(x + k, y);
+                acc += wy[i] * g.get_wrap(x, y + k);
+            }
+            acc
+        }
+        Pattern::Box => {
+            let n = 2 * r + 1;
+            let mut acc = 0.0;
+            for a in 0..n {
+                for b in 0..n {
+                    acc += spec.box_w[(a * n + b) as usize]
+                        * g.get_wrap(x + a - r, y + b - r);
+                }
+            }
+            acc
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::naive;
+    use crate::util::prop::{assert_allclose, forall};
+
+    #[test]
+    fn matches_naive_on_all_benchmarks_3d() {
+        for (name, spec) in StencilSpec::benchmark_suite() {
+            if spec.ndim != 3 {
+                continue;
+            }
+            let g = Grid3::random(12, 20, 24, 1);
+            let want = naive::apply3(&spec, &g);
+            let got = apply3(&spec, &g);
+            assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
+            let _ = name;
+        }
+    }
+
+    #[test]
+    fn matches_naive_on_all_benchmarks_2d() {
+        for (_, spec) in StencilSpec::benchmark_suite() {
+            if spec.ndim != 2 {
+                continue;
+            }
+            let g = Grid2::random(24, 40, 2);
+            let want = naive::apply2(&spec, &g);
+            let got = apply2(&spec, &g);
+            assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
+        }
+    }
+
+    #[test]
+    fn random_tile_shapes_agree() {
+        forall(15, 0x51D, |rng| {
+            let spec = StencilSpec::star3d(rng.range(1, 4));
+            let g = Grid3::random(10, 12, 16, rng.next_u64());
+            let tile = Tile {
+                tz: rng.range(1, 4),
+                tx: rng.range(1, 6),
+                ty: rng.range(4, 16),
+            };
+            let want = naive::apply3(&spec, &g);
+            let got = apply3_tiled(&spec, &g, tile);
+            assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
+        });
+    }
+
+    #[test]
+    fn small_grid_all_boundary() {
+        // grid smaller than 2r+1: everything goes through the wrap path
+        let spec = StencilSpec::star3d(4);
+        let g = Grid3::random(4, 4, 4, 3);
+        let want = naive::apply3(&spec, &g);
+        let got = apply3(&spec, &g);
+        assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
+    }
+}

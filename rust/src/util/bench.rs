@@ -1,0 +1,96 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Warmup + N timed reps, reporting median/MAD.  Used by `benches/*`
+//! (declared `harness = false`) and the perf pass.
+
+use super::{stats, timer::Timer};
+
+/// One measured benchmark result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Median seconds per iteration.
+    pub median_s: f64,
+    /// Median absolute deviation of the per-iteration seconds.
+    pub mad_s: f64,
+    pub reps: usize,
+}
+
+impl BenchResult {
+    /// Derived throughput given `work` units per iteration (e.g. stencil
+    /// points); returns units/second.
+    pub fn throughput(&self, work: f64) -> f64 {
+        work / self.median_s
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs then `reps` timed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) -> BenchResult {
+    assert!(reps >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Timer::start();
+        f();
+        samples.push(t.secs());
+    }
+    BenchResult {
+        name: name.to_string(),
+        median_s: stats::median(&samples),
+        mad_s: stats::mad(&samples),
+        reps,
+    }
+}
+
+/// Auto-scaling variant: picks a rep count so total time ≈ `budget_s`,
+/// bounded to [3, 200] reps.
+pub fn bench_auto<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> BenchResult {
+    let t = Timer::start();
+    f(); // warmup + pilot
+    let pilot = t.secs().max(1e-9);
+    let reps = ((budget_s / pilot) as usize).clamp(3, 200);
+    bench(name, 1, reps, f)
+}
+
+/// Pretty-print a result line (`name  median ± mad  [extra]`).
+pub fn report(r: &BenchResult, extra: &str) {
+    println!(
+        "{:40} {:>12.6} ms ± {:>9.6} ms  ({} reps){}{}",
+        r.name,
+        r.median_s * 1e3,
+        r.mad_s * 1e3,
+        r.reps,
+        if extra.is_empty() { "" } else { "  " },
+        extra
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_runs() {
+        let mut n = 0;
+        let r = bench("t", 2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(r.reps, 5);
+        assert!(r.median_s >= 0.0);
+    }
+
+    #[test]
+    fn throughput_inverse_of_time() {
+        let r = BenchResult { name: "x".into(), median_s: 0.5, mad_s: 0.0, reps: 1 };
+        assert!((r.throughput(1.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_auto_runs_at_least_once() {
+        let mut n = 0;
+        let r = bench_auto("t", 0.001, || n += 1);
+        assert!(n >= 4); // pilot + warmup + >=3 reps
+        assert!(r.reps >= 3);
+    }
+}

@@ -1,0 +1,32 @@
+//! Small self-contained utilities: RNG, property-test harness, timing,
+//! benchmarking, statistics, and table rendering.
+//!
+//! Criterion and proptest are unavailable in the offline vendor set (see
+//! DESIGN.md §7), so `bench` and `prop` provide minimal, dependency-free
+//! equivalents used by `benches/*` and the test suites.
+
+pub mod bench;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timer;
+
+pub use rng::XorShift;
+pub use timer::Timer;
+
+/// Enable flush-to-zero / denormals-are-zero on x86_64 (no-op elsewhere).
+///
+/// Wave propagation decays fields toward the denormal range where x86
+/// FP units fall off a 10–100× performance cliff; seismic codes run FTZ
+/// as standard practice (the paper's platform has no denormal penalty).
+/// Call once per worker thread before a long propagation.
+pub fn enable_flush_to_zero() {
+    #[cfg(target_arch = "x86_64")]
+    #[allow(deprecated)]
+    unsafe {
+        use std::arch::x86_64::{_mm_getcsr, _mm_setcsr};
+        // bit 15 = FTZ, bit 6 = DAZ
+        _mm_setcsr(_mm_getcsr() | (1 << 15) | (1 << 6));
+    }
+}

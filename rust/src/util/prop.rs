@@ -1,0 +1,95 @@
+//! Minimal property-testing harness (proptest is unavailable offline).
+//!
+//! Runs a property against `n` randomly generated cases; on failure it
+//! reports the seed and case index so the exact case can be replayed:
+//!
+//! ```no_run
+//! # // no_run: doctest binaries lack the libxla rpath in this image
+//! use mmstencil::util::prop::forall;
+//! forall(100, 0xBEEF, |rng| {
+//!     let v = rng.range(0, 1000);
+//!     assert!(v <= 1000);
+//! });
+//! ```
+
+use super::rng::XorShift;
+
+/// Run `property` against `cases` generated inputs.  Panics with the seed
+/// and case index on the first failing case.
+pub fn forall<F>(cases: usize, seed: u64, mut property: F)
+where
+    F: FnMut(&mut XorShift),
+{
+    for case in 0..cases {
+        let case_seed = seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9);
+        let mut rng = XorShift::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut rng)
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| err.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property failed at case {case}/{cases} (replay seed: {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are element-wise close.
+#[track_caller]
+pub fn assert_allclose(got: &[f32], want: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(got.len(), want.len(), "length mismatch");
+    let mut worst = (0usize, 0.0f32, 0.0f32, 0.0f32);
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        let err = (g - w).abs();
+        let bound = atol + rtol * w.abs();
+        if err > bound && err - bound > worst.1 - (atol + rtol * worst.3.abs()) {
+            worst = (i, err, g, w);
+        }
+    }
+    let (i, err, g, w) = worst;
+    if err > atol + rtol * w.abs() {
+        panic!(
+            "allclose failed at index {i}: got {g}, want {w} (|err| = {err:.3e}, \
+             bound = {:.3e})",
+            atol + rtol * w.abs()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(50, 1, |rng| {
+            let a = rng.range(0, 10);
+            let b = rng.range(0, 10);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(50, 2, |rng| {
+            assert!(rng.range(0, 100) < 90, "drew a large value");
+        });
+    }
+
+    #[test]
+    fn allclose_accepts_close() {
+        assert_allclose(&[1.0, 2.0], &[1.0 + 1e-7, 2.0 - 1e-7], 1e-5, 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "allclose failed")]
+    fn allclose_rejects_far() {
+        assert_allclose(&[1.0], &[1.1], 1e-5, 1e-6);
+    }
+}

@@ -1,0 +1,102 @@
+//! ASCII / markdown table rendering for bench reports (the paper-figure
+//! benches print the same rows/series the paper reports).
+
+/// A simple table builder.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.headers.len()
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Render as a markdown table.
+    pub fn to_markdown(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], w: &[usize]| -> String {
+            let body: Vec<String> = cells
+                .iter()
+                .zip(w)
+                .map(|(c, &wi)| format!("{:width$}", c, width = wi))
+                .collect();
+            format!("| {} |", body.join(" | "))
+        };
+        out.push_str(&fmt_row(&self.headers, &w));
+        out.push('\n');
+        let sep: Vec<String> = w.iter().map(|&wi| "-".repeat(wi)).collect();
+        out.push_str(&format!("|-{}-|", sep.join("-|-")));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &w));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.to_markdown());
+    }
+}
+
+/// Format a float with fixed precision as String (helper for rows).
+pub fn f(v: f64, prec: usize) -> String {
+    format!("{:.*}", prec, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let mut t = Table::new(&["kernel", "GB/s"]);
+        t.row(&["star3d".into(), "285.1".into()]);
+        t.row(&["x".into(), "3.6".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| kernel | GB/s  |"));
+        assert!(md.lines().count() == 4);
+        let lens: Vec<usize> = md.lines().map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "uneven rows: {md}");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn f_formats() {
+        assert_eq!(f(3.14159, 2), "3.14");
+    }
+}

@@ -1,0 +1,57 @@
+//! Wall-clock timing helpers.
+
+use std::time::Instant;
+
+/// A simple stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    /// Elapsed seconds since start.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed milliseconds since start.
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+
+    pub fn restart(&mut self) -> f64 {
+        let t = self.secs();
+        self.start = Instant::now();
+        t
+    }
+}
+
+/// Time a closure, returning (seconds, result).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (f64, T) {
+    let t = Timer::start();
+    let out = f();
+    (t.secs(), out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        let a = t.secs();
+        let b = t.secs();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn time_it_returns_result() {
+        let (secs, v) = time_it(|| 40 + 2);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

@@ -1,0 +1,242 @@
+//! Integration: PJRT artifacts (Pallas L1 / jnp L2, AOT-lowered) must
+//! agree with the rust-native stencil engines — the cross-layer
+//! correctness contract of the whole stack.
+//!
+//! Requires `make artifacts`; tests skip (with a message) if the artifact
+//! directory is absent so `cargo test` stays runnable pre-build.
+
+use mmstencil::grid::{Grid2, Grid3};
+use mmstencil::runtime::{Runtime, Tensor};
+use mmstencil::stencil::{matrix_unit, naive, StencilSpec};
+use mmstencil::util::prop::assert_allclose;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::open_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping artifact test (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+/// Extract a periodic halo cube around block (z0,x0,y0) as a Tensor.
+fn halo_cube(g: &Grid3, z0: isize, x0: isize, y0: isize, bz: usize, bx: usize, by: usize, r: usize) -> Tensor {
+    let data = g.extract_wrap(
+        z0 - r as isize,
+        x0 - r as isize,
+        y0 - r as isize,
+        bz + 2 * r,
+        bx + 2 * r,
+        by + 2 * r,
+    );
+    Tensor::new(vec![bz + 2 * r, bx + 2 * r, by + 2 * r], data)
+}
+
+#[test]
+fn star3d_r4_block_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let spec = StencilSpec::star3d(4);
+    let g = Grid3::random(8, 32, 32, 42);
+    let want = naive::apply3(&spec, &g);
+    // run the Pallas block operator at block (4..8, 16..32, 0..16)
+    let (z0, x0, y0) = (4usize, 16usize, 0usize);
+    let input = halo_cube(&g, z0 as isize, x0 as isize, y0 as isize, 4, 16, 16, 4);
+    let out = rt.execute("star3d_r4_block", &[input]).unwrap();
+    assert_eq!(out[0].shape, vec![4, 16, 16]);
+    let mut expect = Vec::new();
+    for z in 0..4 {
+        for x in 0..16 {
+            for y in 0..16 {
+                expect.push(want.get(z0 + z, x0 + x, y0 + y));
+            }
+        }
+    }
+    assert_allclose(&out[0].data, &expect, 2e-4, 2e-5);
+}
+
+#[test]
+fn star3d_r2_block_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let spec = StencilSpec::star3d(2);
+    let g = Grid3::random(8, 32, 32, 43);
+    let want = naive::apply3(&spec, &g);
+    let input = halo_cube(&g, 0, 0, 0, 4, 16, 16, 2);
+    let out = rt.execute("star3d_r2_block", &[input]).unwrap();
+    let mut expect = Vec::new();
+    for z in 0..4 {
+        for x in 0..16 {
+            for y in 0..16 {
+                expect.push(want.get(z, x, y));
+            }
+        }
+    }
+    assert_allclose(&out[0].data, &expect, 2e-4, 2e-5);
+}
+
+#[test]
+fn box3d_blocks_match_native() {
+    let Some(rt) = runtime() else { return };
+    for r in [1usize, 2] {
+        let spec = StencilSpec::box3d(r);
+        let g = Grid3::random(8, 32, 32, 44 + r as u64);
+        let want = naive::apply3(&spec, &g);
+        let input = halo_cube(&g, 0, 0, 0, 4, 16, 16, r);
+        let out = rt.execute(&format!("box3d_r{r}_block"), &[input]).unwrap();
+        let mut expect = Vec::new();
+        for z in 0..4 {
+            for x in 0..16 {
+                for y in 0..16 {
+                    expect.push(want.get(z, x, y));
+                }
+            }
+        }
+        assert_allclose(&out[0].data, &expect, 2e-4, 2e-5);
+    }
+}
+
+#[test]
+fn star2d_and_box2d_blocks_match_native() {
+    let Some(rt) = runtime() else { return };
+    for (name, spec) in [
+        ("star2d_r2_block", StencilSpec::star2d(2)),
+        ("star2d_r4_block", StencilSpec::star2d(4)),
+        ("box2d_r2_block", StencilSpec::box2d(2)),
+        ("box2d_r3_block", StencilSpec::box2d(3)),
+    ] {
+        let r = spec.radius;
+        let g = Grid2::random(32, 32, 50 + r as u64);
+        let want = naive::apply2(&spec, &g);
+        let mut data = Vec::new();
+        for dx in 0..16 + 2 * r {
+            for dy in 0..16 + 2 * r {
+                data.push(g.get_wrap(dx as isize - r as isize, dy as isize - r as isize));
+            }
+        }
+        let input = Tensor::new(vec![16 + 2 * r, 16 + 2 * r], data);
+        let out = rt.execute(name, &[input]).unwrap();
+        let mut expect = Vec::new();
+        for x in 0..16 {
+            for y in 0..16 {
+                expect.push(want.get(x, y));
+            }
+        }
+        assert_allclose(&out[0].data, &expect, 2e-4, 2e-5);
+    }
+}
+
+#[test]
+fn grid_artifact_matches_native_sweep() {
+    let Some(rt) = runtime() else { return };
+    let spec = StencilSpec::star3d(4);
+    let g = Grid3::random(32, 32, 32, 60);
+    let want = naive::apply3(&spec, &g);
+    let input = Tensor::new(vec![32, 32, 32], g.data.clone());
+    let out = rt.execute("star3d_r4_grid32", &[input]).unwrap();
+    assert_allclose(&out[0].data, &want.data, 2e-4, 2e-5);
+}
+
+#[test]
+fn matrix_unit_engine_matches_pallas_block() {
+    // the rust emulation and the Pallas kernel implement the same
+    // algorithm; both must agree with each other through the artifact
+    let Some(rt) = runtime() else { return };
+    let spec = StencilSpec::star3d(4);
+    let g = Grid3::random(4, 16, 16, 61);
+    let (mu, _) = matrix_unit::apply3(&spec, &g, matrix_unit::BlockDims::default());
+    let input = halo_cube(&g, 0, 0, 0, 4, 16, 16, 4);
+    let out = rt.execute("star3d_r4_block", &[input]).unwrap();
+    assert_allclose(&out[0].data, &mu.data, 2e-4, 2e-5);
+}
+
+#[test]
+fn transpose_block_roundtrip() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = mmstencil::util::XorShift::new(7);
+    let data = rng.normal_vec(256);
+    let t = Tensor::new(vec![16, 16], data.clone());
+    let out = rt.execute("transpose16_block", &[t]).unwrap();
+    for i in 0..16 {
+        for j in 0..16 {
+            assert!((out[0].data[j * 16 + i] - data[i * 16 + j]).abs() < 1e-5);
+        }
+    }
+}
+
+#[test]
+fn manifest_covers_all_table1_kernels() {
+    let Some(rt) = runtime() else { return };
+    let names = rt.artifact_names();
+    for base in [
+        "star2d_r2", "star2d_r4", "box2d_r2", "box2d_r3",
+        "star3d_r2", "star3d_r4", "box3d_r1", "box3d_r2",
+    ] {
+        assert!(
+            names.iter().any(|n| n.starts_with(base) && n.ends_with("_block")),
+            "missing block artifact for {base}"
+        );
+    }
+    assert!(names.contains(&"rtm_vti_r4_block".to_string()));
+    assert!(names.contains(&"rtm_tti_r4_block".to_string()));
+}
+
+#[test]
+fn execute_rejects_wrong_shape() {
+    let Some(rt) = runtime() else { return };
+    let bad = Tensor::new(vec![4, 4], vec![0.0; 16]);
+    assert!(rt.execute("star3d_r4_block", &[bad]).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Failure injection: the runtime must reject malformed feeds loudly, and
+// the registry must surface missing artifacts as errors (not panics).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn execute_rejects_wrong_input_count() {
+    let Some(rt) = runtime() else { return };
+    let err = rt.execute("star3d_r4_block", &[]).unwrap_err();
+    assert!(err.to_string().contains("expected 1 inputs"), "{err}");
+}
+
+#[test]
+fn unknown_artifact_is_an_error() {
+    let Some(rt) = runtime() else { return };
+    let err = rt.execute("no_such_kernel", &[]).unwrap_err();
+    assert!(err.to_string().contains("not in manifest"), "{err}");
+}
+
+#[test]
+fn manifest_rejects_corrupt_lines() {
+    use mmstencil::runtime::Manifest;
+    assert!(Manifest::parse("garbage line with no pipes").is_err());
+    assert!(Manifest::parse("a|b|in=bogus|out=f32[1]|meta=").is_err());
+}
+
+#[test]
+fn zero_input_still_roundtrips() {
+    // all-zero input → all-zero output (stencils are linear)
+    let Some(rt) = runtime() else { return };
+    let meta = rt.manifest.get("box3d_r2_block").unwrap().clone();
+    let shape = meta.inputs[0].shape.clone();
+    let n: usize = shape.iter().product();
+    let out = rt.execute("box3d_r2_block", &[Tensor::new(shape, vec![0.0; n])]).unwrap();
+    assert!(out[0].data.iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn block_artifact_is_linear() {
+    // f(ax + by) = a f(x) + b f(y) — catches any affine contamination
+    let Some(rt) = runtime() else { return };
+    let meta = rt.manifest.get("star3d_r2_block").unwrap().clone();
+    let shape = meta.inputs[0].shape.clone();
+    let g1 = Grid3::random(shape[0], shape[1], shape[2], 101);
+    let g2 = Grid3::random(shape[0], shape[1], shape[2], 202);
+    let (a, b) = (2.5f32, -0.75f32);
+    let mix: Vec<f32> = g1.data.iter().zip(&g2.data).map(|(x, y)| a * x + b * y).collect();
+    let o1 = rt.execute("star3d_r2_block", &[Tensor::new(shape.clone(), g1.data.clone())]).unwrap();
+    let o2 = rt.execute("star3d_r2_block", &[Tensor::new(shape.clone(), g2.data.clone())]).unwrap();
+    let om = rt.execute("star3d_r2_block", &[Tensor::new(shape.clone(), mix)]).unwrap();
+    let want: Vec<f32> = o1[0].data.iter().zip(&o2[0].data).map(|(x, y)| a * x + b * y).collect();
+    assert_allclose(&om[0].data, &want, 1e-4, 1e-5);
+}

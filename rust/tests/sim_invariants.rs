@@ -1,0 +1,186 @@
+//! Property tests over the simulator substrate: cache, directory, NoC,
+//! stream model, SDMA/MPI transports, roofline — the invariants any
+//! reasonable implementation of the paper's platform must satisfy.
+
+use mmstencil::grid::brick::{BrickDims, BrickLayout};
+use mmstencil::grid::Grid3;
+use mmstencil::simulator::cache::Cache;
+use mmstencil::simulator::mpi::MpiModel;
+use mmstencil::simulator::roofline::{engine_cfg, predict, Engine, MemKind, SweepConfig};
+use mmstencil::simulator::sdma::{CopyDesc, Sdma};
+use mmstencil::simulator::{stream, Platform};
+use mmstencil::stencil::StencilSpec;
+use mmstencil::util::prop;
+
+#[test]
+fn cache_lru_hit_rate_monotone_in_size() {
+    // bigger cache never hurts on any access trace
+    prop::forall(20, 0xCACE, |rng| {
+        let line = 64;
+        let trace: Vec<u64> = (0..2000).map(|_| (rng.range(0, 256) * line) as u64).collect();
+        let mut small = Cache::new(8 << 10, 4, line);
+        let mut big = Cache::new(32 << 10, 4, line);
+        let mut hits_small = 0;
+        let mut hits_big = 0;
+        for &a in &trace {
+            hits_small += small.access(a, false) as usize;
+            hits_big += big.access(a, false) as usize;
+        }
+        assert!(hits_big >= hits_small, "big {hits_big} < small {hits_small}");
+    });
+}
+
+#[test]
+fn cache_sequential_streaming_hits_within_lines() {
+    let mut c = Cache::new(32 << 10, 8, 64);
+    let mut hits = 0;
+    for b in 0..4096u64 {
+        hits += c.access(b, false) as usize; // byte stream: 63/64 hit
+    }
+    assert!(hits >= 4096 - 4096 / 64 - 8);
+}
+
+#[test]
+fn brick_roundtrip_any_shape() {
+    prop::forall(20, 0xB41C, |rng| {
+        let dims = BrickDims::default();
+        // shapes that are multiples of the brick dims
+        let nz = dims.bz * rng.range(1, 6);
+        let nx = dims.bx * rng.range(1, 4);
+        let ny = dims.by * rng.range(1, 8);
+        let g = Grid3::random(nz, nx, ny, rng.next_u64());
+        let bl = BrickLayout::from_grid(&g, dims);
+        assert_eq!(bl.to_grid(), g);
+        // point access agrees too
+        for _ in 0..50 {
+            let (z, x, y) = (rng.range(0, nz - 1), rng.range(0, nx - 1), rng.range(0, ny - 1));
+            assert_eq!(bl.get(z, x, y), g.get(z, x, y));
+        }
+    });
+}
+
+#[test]
+fn sdma_efficiency_monotone_in_run_length() {
+    let s = Sdma::default();
+    let mut last = 0.0;
+    for run in [16u64, 64, 256, 1024, 8192, 65536, 1 << 22] {
+        let e = s.efficiency(run);
+        assert!(e >= last, "efficiency must be monotone: {run} gives {e}");
+        assert!((0.0..=1.0).contains(&e));
+        last = e;
+    }
+}
+
+#[test]
+fn sdma_beats_mpi_on_every_face_shape() {
+    // Table II generalized: any face of a 3D halo exchange
+    let s = Sdma::default();
+    let m = MpiModel::default();
+    prop::forall(30, 0x5D3A, |rng| {
+        let depth = rng.range(1, 8);
+        let a = rng.range(16, 512);
+        let b = rng.range(16, 512);
+        let bytes = (depth * a * b * 4) as u64;
+        let run = (b * 4) as u64;
+        let sdma_bw = s.bandwidth(CopyDesc { bytes, run_bytes: run });
+        let mpi_bw = m.bandwidth(bytes, run);
+        assert!(sdma_bw > 3.0 * mpi_bw, "SDMA {sdma_bw:.2e} vs MPI {mpi_bw:.2e}");
+    });
+}
+
+#[test]
+fn mpi_bandwidth_capped_by_copy_bw() {
+    let m = MpiModel::default();
+    prop::forall(30, 0x3141, |rng| {
+        let bytes = rng.range(1 << 10, 1 << 26) as u64;
+        let run = rng.range(16, 1 << 20) as u64;
+        assert!(m.bandwidth(bytes, run) <= m.copy_bw * 1.001);
+    });
+}
+
+#[test]
+fn stream_efficiency_bounded_and_monotone() {
+    prop::forall(40, 0x57E4, |rng| {
+        let port = 128;
+        let run = rng.range(16, 1 << 16);
+        let streams = rng.range(1, 400);
+        let e = stream::onpkg_efficiency(run, streams, port);
+        assert!((0.0..=1.0).contains(&e));
+        // more streams never help
+        let e2 = stream::onpkg_efficiency(run, streams + 50, port);
+        assert!(e2 <= e + 1e-12);
+        // longer runs never hurt
+        let e3 = stream::onpkg_efficiency(run * 2, streams, port);
+        assert!(e3 >= e - 1e-12);
+    });
+}
+
+#[test]
+fn roofline_time_decomposes_and_scales() {
+    let p = Platform::paper();
+    prop::forall(25, 0x800F, |rng| {
+        let (name, _) = StencilSpec::benchmark_suite()[rng.range(0, 7)].clone();
+        let spec = StencilSpec::by_name(name).unwrap();
+        let n = rng.range(1 << 18, 1 << 24);
+        for mem in [MemKind::Ddr, MemKind::OnPkg] {
+            for engine in [Engine::Compiler, Engine::Simd, Engine::MMStencil] {
+                let cfg = engine_cfg(engine, mem);
+                let e1 = predict(&spec, n, engine, cfg, &p);
+                let e2 = predict(&spec, 2 * n, engine, cfg, &p);
+                // linear in n
+                assert!((e2.time_s / e1.time_s - 2.0).abs() < 0.02, "{name} {engine:?}");
+                // time ≥ max(compute, memory) components
+                assert!(e1.time_s >= e1.compute_s.max(e1.memory_s) * 0.999);
+                // utilization in (0, 1]
+                assert!(e1.bandwidth_util > 0.0 && e1.bandwidth_util <= 1.0, "{name} {engine:?} {mem:?}: {}", e1.bandwidth_util);
+            }
+        }
+    });
+}
+
+#[test]
+fn roofline_best_config_is_fastest() {
+    // enabling any optimization must never slow a kernel down
+    let p = Platform::paper();
+    for (name, spec) in StencilSpec::benchmark_suite() {
+        for mem in [MemKind::Ddr, MemKind::OnPkg] {
+            let best = predict(&spec, 1 << 22, Engine::MMStencil, SweepConfig::best(mem), &p);
+            for brick in [false, true] {
+                for snoop in [false, true] {
+                    for prefetch in [false, true] {
+                        let cfg = SweepConfig { mem, brick, snoop, prefetch };
+                        let e = predict(&spec, 1 << 22, Engine::MMStencil, cfg, &p);
+                        assert!(
+                            best.time_s <= e.time_s * 1.001,
+                            "{name} {mem:?} brick={brick} snoop={snoop} pf={prefetch}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn onpkg_always_at_least_as_fast_as_ddr() {
+    let p = Platform::paper();
+    for (name, spec) in StencilSpec::benchmark_suite() {
+        let on = predict(&spec, 1 << 22, Engine::MMStencil, SweepConfig::best(MemKind::OnPkg), &p);
+        let dd = predict(&spec, 1 << 22, Engine::MMStencil, SweepConfig::best(MemKind::Ddr), &p);
+        assert!(on.time_s <= dd.time_s, "{name}: on-package slower than DDR?");
+    }
+}
+
+#[test]
+fn iv_b_speedup_model_monotone_and_anchored() {
+    let p = Platform::paper();
+    let mut last = 0.0;
+    for r in 1..=4 {
+        let s = p.mmstencil_speedup(r);
+        assert!(s > last);
+        last = s;
+    }
+    // §IV-B: "at r = 4 ... theoretical 1.5× speedup" (before freq ratio)
+    let raw: f64 = 16.0 * 9.0 * 0.5 / (24.0 * 2.0);
+    assert!((raw - 1.5).abs() < 1e-12);
+}
