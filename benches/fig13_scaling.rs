@@ -17,6 +17,8 @@
 use mmstencil::coordinator::driver::multirank_sweep;
 use mmstencil::coordinator::exchange::Backend;
 use mmstencil::coordinator::pipeline::{equal_layers, step_time, Overlap};
+use mmstencil::coordinator::runtime;
+use mmstencil::metrics::RecordSet;
 use mmstencil::grid::{CartDecomp, Grid3};
 use mmstencil::simulator::mpi::MpiModel;
 use mmstencil::simulator::roofline::{predict, Engine, MemKind, SweepConfig};
@@ -84,16 +86,62 @@ fn main() {
     let spec = StencilSpec::star3d(4);
     let p = Platform::paper();
 
-    // ---- REAL verification at host scale ---------------------------------
+    // ---- REAL verification at host scale, on the persistent runtime ------
+    let rt = runtime::global();
+    let spawned = rt.spawn_count();
     let g = Grid3::random(48, 48, 48, 23);
     let want = naive::apply3(&spec, &g);
+    // start the utilization clock after the serial reference sweep so
+    // busy/wall reflects only the parallel phase being attributed
+    rt.reset_stats();
+    let wall = mmstencil::util::Timer::start();
+    let mut last_pool = None;
     for ranks in [2usize, 4, 8] {
         let d = decomp_for(ranks);
-        let (got, _) = multirank_sweep(&spec, &g, &d, &Backend::sdma(), 1, 2, &p);
+        let (got, stats) = multirank_sweep(&spec, &g, &d, &Backend::sdma(), 1, 2, &p);
         let err = got.max_abs_diff(&want);
         assert!(err < 1e-3, "{ranks} ranks: decomposed sweep wrong by {err}");
+        last_pool = Some(stats.pool);
     }
     println!("real decomposed sweeps (2/4/8 ranks) verified against single-grid sweep\n");
+
+    // ---- runtime attribution: per-worker utilization + steals ------------
+    let wall_s = wall.secs();
+    let pool_stats = rt.stats();
+    assert_eq!(
+        rt.spawn_count(),
+        spawned,
+        "workers must be spawned once per runtime, never per sweep"
+    );
+    println!("persistent runtime ({} workers, spawned once):", rt.workers());
+    let mut wt = Table::new(&["worker", "slot", "tasks", "steals", "busy ms", "util %"]);
+    for (i, w) in pool_stats.workers.iter().enumerate() {
+        wt.row(&[
+            format!("w{i}"),
+            format!("numa{}/core{}", w.slot.numa, w.slot.core),
+            w.tasks.to_string(),
+            w.steals.to_string(),
+            f(w.busy_s * 1e3, 2),
+            f(w.busy_s / wall_s * 100.0, 1),
+        ]);
+    }
+    wt.print();
+    let pool = last_pool.expect("at least one sweep ran");
+    println!(
+        "last sweep: {} tasks, {} steals, mean utilization {:.0}%",
+        pool.tasks,
+        pool.steals,
+        pool.utilization * 100.0
+    );
+    println!(
+        "spawn overhead: {:.3} ms once (persistent) vs {:.3} ms/dispatch modeled for a scoped pool of {} paper cores\n",
+        pool_stats.spawn_overhead_s * 1e3,
+        p.thread_spawn_overhead_s(p.cores_per_numa) * 1e3,
+        p.cores_per_numa,
+    );
+    let mut records = RecordSet::new();
+    records.extend(pool_stats.to_records("fig13", "runtime", wall_s));
+    let _ = records.save_csv("fig13_runtime_workers.csv");
 
     // ---- STRONG scaling: 512³ global --------------------------------------
     println!("Fig. 13a — strong scaling, 3DStarR4, 512³ global (sim):");

@@ -15,8 +15,9 @@ use mmstencil::grid::Grid3;
 use mmstencil::runtime::{Runtime, Tensor};
 use mmstencil::simulator::Platform;
 use mmstencil::stencil::{naive, simd, StencilSpec};
+use mmstencil::util::err::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     // ---- 1. the AOT artifact runtime --------------------------------------
     let rt = Runtime::open_default()?;
     println!("PJRT platform: {} ({} artifacts)", rt.platform(), rt.artifact_names().len());

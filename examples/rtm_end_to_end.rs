@@ -20,9 +20,10 @@ use mmstencil::rtm::{media, vti};
 use mmstencil::runtime::{Runtime, Tensor};
 use mmstencil::simulator::Platform;
 use mmstencil::stencil::coeffs::second_deriv;
+use mmstencil::util::err::Result;
 use mmstencil::util::Timer;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     // ---- 1. cross-check one VTI step against the PJRT artifact ------------
     let rt = Runtime::open_default()?;
     let n = 64usize;

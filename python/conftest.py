@@ -1,9 +1,53 @@
+"""Pytest bootstrap for the python/ tree.
+
+Puts ``python/`` on ``sys.path`` so ``compile.*`` imports resolve, and
+gates tests on their optional dependencies: on hosts (and CI runners)
+without ``jax`` or ``hypothesis`` installed, the dependent test modules
+are skipped at collection time instead of erroring on import.  The
+numpy-only tests (``tests/test_coeffs_numpy.py``) always run, so the
+suite never collects empty.
+"""
+
+import importlib.util
 import os
 import sys
 
 sys.path.insert(0, os.path.dirname(__file__))
 
-import jax
+HAVE_JAX = importlib.util.find_spec("jax") is not None
+HAVE_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
 
-# f64 test sweeps need real float64 semantics
-jax.config.update("jax_enable_x64", True)
+if HAVE_JAX:
+    import jax
+
+    # f64 test sweeps need real float64 semantics
+    jax.config.update("jax_enable_x64", True)
+
+# modules importing jax (directly or via compile.kernels) at module scope
+_JAX_TESTS = [
+    "compile/aot.py",
+    "compile/model.py",
+    "tests/test_axis.py",
+    "tests/test_coeffs.py",
+    "tests/test_invariants.py",
+    "tests/test_model_aot.py",
+    "tests/test_rtm.py",
+    "tests/test_star_box.py",
+    "tests/test_transpose.py",
+]
+
+# modules additionally importing hypothesis at module scope
+_HYPOTHESIS_TESTS = [
+    "tests/test_axis.py",
+    "tests/test_coeffs.py",
+    "tests/test_invariants.py",
+    "tests/test_rtm.py",
+    "tests/test_star_box.py",
+    "tests/test_transpose.py",
+]
+
+collect_ignore = []
+if not HAVE_JAX:
+    collect_ignore += _JAX_TESTS
+if not HAVE_HYPOTHESIS:
+    collect_ignore += [p for p in _HYPOTHESIS_TESTS if p not in collect_ignore]

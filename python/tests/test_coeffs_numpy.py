@@ -1,0 +1,75 @@
+"""JAX-free checks of the coefficient tables and band-matrix builders.
+
+These run on any host with numpy — including CI runners where jax is not
+installed and every other test module is skipped — so the pytest job
+always has a non-empty collection and the rust-mirrored formulas stay
+cross-checked.
+"""
+
+import numpy as np
+
+from compile.coeffs import (
+    FIRST_DERIV,
+    SECOND_DERIV,
+    band_matrix,
+    band_matrix_t,
+    box_weights,
+    star_weights,
+)
+
+
+def test_second_deriv_annihilates_linears():
+    # sum w = 0 (constants) and sum k*w = 0 (linears) for every radius
+    for r, w in SECOND_DERIV.items():
+        k = np.arange(-r, r + 1)
+        assert abs(w.sum()) < 1e-12, r
+        assert abs((k * w).sum()) < 1e-12, r
+        # curvature of x^2/2 is 1
+        assert abs((k**2 / 2 * w).sum() - 1.0) < 1e-9, r
+
+
+def test_first_deriv_antisymmetric_and_exact_on_linears():
+    for r, w in FIRST_DERIV.items():
+        assert np.allclose(w, -w[::-1]), r
+        k = np.arange(-r, r + 1)
+        assert abs((k * w).sum() - 1.0) < 1e-9, r
+
+
+def test_star_weights_center_and_axes():
+    center, axes = star_weights(3, 4)
+    assert len(axes) == 3
+    for ax in axes:
+        assert ax[4] == 0.0
+        assert len(ax) == 9
+    # center = ndim * base center
+    assert np.isclose(center, 3 * SECOND_DERIV[4][4], rtol=1e-6)
+
+
+def test_box_weights_normalized_and_dense():
+    for ndim in (2, 3):
+        for r in (1, 2):
+            w = box_weights(ndim, r)
+            assert w.shape == (2 * r + 1,) * ndim
+            assert np.isclose(np.abs(w).sum(), 1.0, rtol=1e-5)
+            # fully dense: no exact zeros
+            assert (w != 0).all()
+
+
+def test_band_matrix_applies_stencil():
+    rng = np.random.default_rng(7)
+    for r in (1, 2, 4):
+        w = SECOND_DERIV[r].astype(np.float64)
+        v = 16
+        x = rng.standard_normal(v + 2 * r)
+        c = band_matrix(w, v, dtype=np.float64)
+        got = x @ c
+        want = np.array(
+            [sum(w[k + r] * x[j + k + r] for k in range(-r, r + 1)) for j in range(v)]
+        )
+        assert np.allclose(got, want, atol=1e-12)
+
+
+def test_band_matrix_t_is_transpose():
+    w = SECOND_DERIV[2]
+    v = 8
+    assert np.allclose(band_matrix_t(w, v), band_matrix(w, v).T)

@@ -46,12 +46,47 @@ impl SweepSpec {
     }
 }
 
-/// Full config file: a sweep and/or an RTM run.
+/// Persistent worker-runtime configuration (`[runtime]` table): how many
+/// workers the coordinator spawns (once per driver) and the simulated
+/// NUMA topology their core slots are drawn from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RuntimeSpec {
+    /// Worker count; 0 = inherit `sweep.threads`.
+    pub workers: usize,
+    /// Simulated NUMA clusters for worker slot assignment.
+    pub numa_nodes: usize,
+    /// Cores per simulated NUMA cluster.
+    pub cores_per_numa: usize,
+}
+
+impl Default for RuntimeSpec {
+    fn default() -> Self {
+        // derive from the paper platform so the config path and the
+        // Driver::new path agree on the simulated topology
+        let p = crate::simulator::Platform::paper();
+        Self { workers: 0, numa_nodes: p.total_numa(), cores_per_numa: p.cores_per_numa }
+    }
+}
+
+impl RuntimeSpec {
+    /// Lower to the coordinator's runtime config, resolving `workers = 0`
+    /// against the sweep's thread count.
+    pub fn to_runtime_config(&self, sweep_threads: usize) -> crate::coordinator::runtime::RuntimeConfig {
+        crate::coordinator::runtime::RuntimeConfig {
+            workers: if self.workers > 0 { self.workers } else { sweep_threads.max(1) },
+            cores_per_numa: self.cores_per_numa.max(1),
+            numa_nodes: self.numa_nodes.max(1),
+        }
+    }
+}
+
+/// Full config file: a sweep and/or an RTM run, plus the runtime table.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
     pub title: String,
     pub sweep: SweepSpec,
     pub rtm: RtmConfig,
+    pub runtime: RuntimeSpec,
 }
 
 impl Default for ExperimentConfig {
@@ -60,6 +95,7 @@ impl Default for ExperimentConfig {
             title: "default".into(),
             sweep: SweepSpec::default(),
             rtm: RtmConfig::small(Medium::Vti),
+            runtime: RuntimeSpec::default(),
         }
     }
 }
@@ -106,6 +142,11 @@ pub fn from_text(text: &str) -> Result<ExperimentConfig, toml::ParseError> {
     r.snap_every = doc.usize_or("rtm", "snap_every", r.snap_every);
     r.sponge_width = doc.usize_or("rtm", "sponge_width", r.sponge_width);
     r.receiver_z = doc.usize_or("rtm", "receiver_z", r.receiver_z);
+
+    let rt = &mut cfg.runtime;
+    rt.workers = doc.usize_or("runtime", "workers", rt.workers);
+    rt.numa_nodes = doc.usize_or("runtime", "numa_nodes", rt.numa_nodes);
+    rt.cores_per_numa = doc.usize_or("runtime", "cores_per_numa", rt.cores_per_numa);
     Ok(cfg)
 }
 
@@ -154,6 +195,22 @@ dx = 12.5
         assert_eq!(cfg.rtm.medium, crate::rtm::driver::Medium::Tti);
         assert_eq!(cfg.rtm.nz, 64);
         assert!((cfg.rtm.dx - 12.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn runtime_table_parses_and_lowers() {
+        let cfg = from_text(
+            "[sweep]\nthreads = 6\n[runtime]\nworkers = 12\nnuma_nodes = 4\ncores_per_numa = 8\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.runtime.workers, 12);
+        let rc = cfg.runtime.to_runtime_config(cfg.sweep.threads);
+        assert_eq!(rc.workers, 12);
+        assert_eq!(rc.numa_nodes, 4);
+        assert_eq!(rc.cores_per_numa, 8);
+        // workers = 0 inherits sweep.threads
+        let cfg = from_text("[sweep]\nthreads = 6\n").unwrap();
+        assert_eq!(cfg.runtime.to_runtime_config(cfg.sweep.threads).workers, 6);
     }
 
     #[test]

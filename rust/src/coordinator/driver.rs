@@ -5,8 +5,22 @@
 //! attached from `simulator::roofline` / the exchange models so every
 //! experiment reports both "measured here" and "predicted on the paper's
 //! platform" numbers.
+//!
+//! All work is dispatched onto the **persistent** worker runtime
+//! ([`super::runtime`]): the free functions [`sweep`] /
+//! [`multirank_sweep`] use the process-global pool, while a [`Driver`]
+//! owns a dedicated pool whose workers are spawned exactly once for the
+//! driver's lifetime.  A multirank step is submitted as dependency-
+//! ordered batches — under the SDMA backend the halo exchange runs as a
+//! pool task *concurrently* with the deep-interior tile batch (paper
+//! Fig. 9), and only the boundary-shell batch waits for it; under MPI
+//! the exchange is serialized ahead of all compute, matching the
+//! paper's progress-engine semantics.
+
+use std::sync::Mutex;
 
 use crate::grid::decomp::CartDecomp;
+use crate::grid::halo::HaloGrid;
 use crate::grid::Grid3;
 use crate::simulator::roofline::{self, Engine, MemKind, SweepConfig};
 use crate::simulator::Platform;
@@ -15,8 +29,35 @@ use crate::util::Timer;
 
 use super::exchange::{self, Backend};
 use super::pipeline::{self, Overlap};
-use super::pool;
+use super::runtime::{self, Runtime, RuntimeConfig, RuntimeStats};
 use super::tiles::{self, Strategy};
+
+/// Pool activity attributable to one sweep / stepped run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolSnapshot {
+    pub workers: usize,
+    /// Items executed (tiles, slabs, comm tasks) across the run.
+    pub tasks: u64,
+    /// Chunks stolen from a neighbour's injector queue.
+    pub steals: u64,
+    /// Mean worker busy fraction over the run's wall time.
+    pub utilization: f64,
+    /// One-time worker spawn cost of the backing runtime (not paid per
+    /// call — reported so benches can show what per-call respawn would
+    /// have cost).
+    pub spawn_overhead_s: f64,
+}
+
+fn pool_delta(rt: &Runtime, before: &RuntimeStats, wall_s: f64) -> PoolSnapshot {
+    let d = rt.stats().delta_since(before);
+    PoolSnapshot {
+        workers: rt.workers(),
+        tasks: d.total_tasks(),
+        steals: d.total_steals(),
+        utilization: d.mean_utilization(wall_s),
+        spawn_overhead_s: d.spawn_overhead_s,
+    }
+}
 
 /// Statistics from one parallel sweep.
 #[derive(Clone, Copy, Debug)]
@@ -28,18 +69,93 @@ pub struct SweepStats {
     /// simulated single-NUMA time on the paper platform
     pub sim_s: f64,
     pub sim_bandwidth_util: f64,
+    /// runtime activity during this sweep
+    pub pool: PoolSnapshot,
 }
 
-/// Shared-output wrapper: tiles are disjoint, so concurrent mutation is
-/// race-free; assert-checked by `TilePlan::validate` in tests.
-struct SharedOut(*mut Grid3);
-unsafe impl Sync for SharedOut {}
-unsafe impl Send for SharedOut {}
+/// Shared-output wrapper: concurrent tasks write disjoint regions, so
+/// mutation through the raw pointer is data-race-free; assert-checked
+/// by `TilePlan::validate` / the box partition tests.
+///
+/// Caveat (inherited from the seed's `SharedOut`/`SendPtr` idiom):
+/// tasks materialize overlapping `&`/`&mut` references to the same
+/// allocation and rely on cell-level disjointness.  That satisfies the
+/// no-data-race requirement but not Rust's strict aliasing model
+/// (Miri's stacked borrows would flag it); the rigorous fix is
+/// `UnsafeCell`-backed grid storage, tracked as a follow-up since it
+/// touches every engine signature.
+struct SharedMut<T>(*mut T);
+unsafe impl<T> Sync for SharedMut<T> {}
+unsafe impl<T> Send for SharedMut<T> {}
+
+/// A driver owns a dedicated persistent runtime: workers are spawned
+/// once in [`Driver::new`] and reused by every subsequent sweep or
+/// timestep — never per `parallel_for` call.
+pub struct Driver {
+    rt: Runtime,
+    platform: Platform,
+    threads: usize,
+}
+
+impl Driver {
+    pub fn new(threads: usize, platform: Platform) -> Self {
+        let threads = threads.max(1);
+        let cfg = RuntimeConfig {
+            workers: threads,
+            cores_per_numa: platform.cores_per_numa,
+            numa_nodes: platform.total_numa(),
+        };
+        Self { rt: Runtime::new(cfg), platform, threads }
+    }
+
+    /// Build from an experiment config (`[runtime]` + `[sweep]` tables).
+    pub fn from_config(cfg: &crate::config::ExperimentConfig) -> Self {
+        let rc = cfg.runtime.to_runtime_config(cfg.sweep.threads);
+        Self {
+            rt: Runtime::new(rc),
+            platform: Platform::paper(),
+            threads: cfg.sweep.threads.max(1),
+        }
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn sweep(&self, spec: &StencilSpec, g: &Grid3, strategy: Strategy) -> (Grid3, SweepStats) {
+        sweep_on(&self.rt, spec, g, self.threads, strategy, &self.platform)
+    }
+
+    pub fn multirank_sweep(
+        &self,
+        spec: &StencilSpec,
+        global: &Grid3,
+        decomp: &CartDecomp,
+        backend: &Backend,
+        steps: usize,
+    ) -> (Grid3, StepStats) {
+        multirank_sweep_on(&self.rt, spec, global, decomp, backend, steps, self.threads, &self.platform)
+    }
+}
 
 /// One full periodic sweep of `spec` over `g`, parallelized over
-/// `threads` with the given tile strategy.  Returns the output grid and
-/// host + simulated stats.
+/// `threads` with the given tile strategy on the process-global pool.
 pub fn sweep(
+    spec: &StencilSpec,
+    g: &Grid3,
+    threads: usize,
+    strategy: Strategy,
+    platform: &Platform,
+) -> (Grid3, SweepStats) {
+    sweep_on(runtime::global(), spec, g, threads, strategy, platform)
+}
+
+fn sweep_on(
+    rt: &Runtime,
     spec: &StencilSpec,
     g: &Grid3,
     threads: usize,
@@ -49,12 +165,13 @@ pub fn sweep(
     assert_eq!(spec.ndim, 3);
     let plan = tiles::plan(strategy, threads.max(1), g.nx, g.ny);
     let mut out = Grid3::zeros(g.nz, g.nx, g.ny);
+    let before = rt.stats();
     let t = Timer::start();
     {
-        let shared = SharedOut(&mut out as *mut Grid3);
+        let shared = SharedMut(&mut out as *mut Grid3);
         let shared = &shared;
         let tile_list = &plan.tiles;
-        pool::parallel_for(threads, tile_list.len(), |i| {
+        rt.run(threads.max(1), tile_list.len(), &|i| {
             let tl = &tile_list[i];
             // SAFETY: tiles are disjoint XY regions over all z
             let out_ref: &mut Grid3 = unsafe { &mut *shared.0 };
@@ -73,6 +190,7 @@ pub fn sweep(
             gcells_per_s: cells as f64 / real_s / 1e9,
             sim_s: est.time_s,
             sim_bandwidth_util: est.bandwidth_util,
+            pool: pool_delta(rt, &before, real_s),
         },
     )
 }
@@ -81,6 +199,9 @@ pub fn sweep(
 #[derive(Clone, Copy, Debug)]
 pub struct StepStats {
     pub real_s: f64,
+    /// measured wall time of the halo-exchange task (overlapped with the
+    /// interior batch under SDMA)
+    pub real_comm_s: f64,
     /// simulated per-rank compute time
     pub sim_compute_s: f64,
     /// simulated exchange time under the chosen backend
@@ -90,11 +211,58 @@ pub struct StepStats {
     /// simulated step time with the pipeline-overlap scheme
     pub sim_step_pipelined_s: f64,
     pub exchanged_bytes: u64,
+    /// runtime activity across all steps
+    pub pool: PoolSnapshot,
+}
+
+/// One rank's compute region, in halo-storage coordinates.
+#[derive(Clone, Copy, Debug)]
+struct RegionTask {
+    rank: usize,
+    z0: usize,
+    z1: usize,
+    x0: usize,
+    x1: usize,
+    y0: usize,
+    y1: usize,
+}
+
+/// Interior-local boxes (z0,z1,x0,x1,y0,y1) covering the boundary shell
+/// (points within `r` of a block face); disjoint, union = interior ∖ deep.
+fn boundary_boxes(nz: usize, nx: usize, ny: usize, r: usize) -> Vec<[usize; 6]> {
+    let zl = r.min(nz);
+    let zh = nz.saturating_sub(r).max(zl);
+    let xl = r.min(nx);
+    let xh = nx.saturating_sub(r).max(xl);
+    let yl = r.min(ny);
+    let yh = ny.saturating_sub(r).max(yl);
+    let mut out = Vec::with_capacity(6);
+    let mut push = |b: [usize; 6]| {
+        if b[0] < b[1] && b[2] < b[3] && b[4] < b[5] {
+            out.push(b);
+        }
+    };
+    push([0, zl, 0, nx, 0, ny]);
+    push([zh, nz, 0, nx, 0, ny]);
+    push([zl, zh, 0, xl, 0, ny]);
+    push([zl, zh, xh, nx, 0, ny]);
+    push([zl, zh, xl, xh, 0, yl]);
+    push([zl, zh, xl, xh, yh, ny]);
+    out
+}
+
+/// Interior-local deep box (needs no halo data), if non-empty.
+fn deep_box(nz: usize, nx: usize, ny: usize, r: usize) -> Option<[usize; 6]> {
+    if nz > 2 * r && nx > 2 * r && ny > 2 * r {
+        Some([r, nz - r, r, nx - r, r, ny - r])
+    } else {
+        None
+    }
 }
 
 /// Run `steps` repeated sweeps of `spec` over a global periodic grid
-/// decomposed across `decomp` ranks, exchanging halos through `backend`
-/// each step.  Returns the final grid plus per-step stats (averaged).
+/// decomposed across `decomp` ranks on the process-global pool,
+/// exchanging halos through `backend` each step.
 pub fn multirank_sweep(
     spec: &StencilSpec,
     global: &Grid3,
@@ -104,37 +272,170 @@ pub fn multirank_sweep(
     threads: usize,
     platform: &Platform,
 ) -> (Grid3, StepStats) {
+    multirank_sweep_on(runtime::global(), spec, global, decomp, backend, steps, threads, platform)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn multirank_sweep_on(
+    rt: &Runtime,
+    spec: &StencilSpec,
+    global: &Grid3,
+    decomp: &CartDecomp,
+    backend: &Backend,
+    steps: usize,
+    threads: usize,
+    platform: &Platform,
+) -> (Grid3, StepStats) {
     let r = spec.radius;
+    let threads = threads.max(1);
     let mut current = global.clone();
     let mut acc = StepStats {
         real_s: 0.0,
+        real_comm_s: 0.0,
         sim_compute_s: 0.0,
         sim_comm_s: 0.0,
         sim_step_s: 0.0,
         sim_step_pipelined_s: 0.0,
         exchanged_bytes: 0,
+        pool: PoolSnapshot::default(),
     };
+    let before = rt.stats();
+    let run_timer = Timer::start();
     for _ in 0..steps {
         let t = Timer::start();
         let mut grids = exchange::scatter(&current, decomp, r);
-        let rep = exchange::exchange(decomp, &mut grids, backend);
-        exchange::fill_halos_from_global(&current, decomp, &mut grids, true);
 
-        // per-rank compute (parallel over ranks; each rank sweeps its
-        // interior using the halo-extended storage as a periodic grid is
-        // NOT valid — compute directly on storage with plain offsets)
-        let rank_outputs = pool::parallel_map(threads, decomp.ranks(), |rk| {
-            let hg = &grids[rk];
-            // wrap-free: every interior point has its halo present
-            let mut outg = Grid3::zeros(hg.nz, hg.nx, hg.ny);
-            compute_interior(spec, hg, &mut outg);
-            outg
-        });
-        let mut next = Grid3::zeros(current.nz, current.nx, current.ny);
-        for (rk, og) in rank_outputs.iter().enumerate() {
-            let b = decomp.block(rk, current.nz, current.nx, current.ny);
-            next.insert_block(b.z0, b.x0, b.y0, og.nz, og.nx, og.ny, &og.data);
+        // per-rank output buffers in halo-storage shape, so region tasks
+        // can write results at the same coordinates they compute
+        let mut touts: Vec<Grid3> = grids
+            .iter()
+            .map(|hg| Grid3::zeros(hg.grid.nz, hg.grid.nx, hg.grid.ny))
+            .collect();
+
+        // deep-interior tasks (no halo dependency), split into z-slabs so
+        // every worker gets work even with few ranks
+        let mut deep: Vec<RegionTask> = Vec::new();
+        let mut shell: Vec<RegionTask> = Vec::new();
+        for (rk, hg) in grids.iter().enumerate() {
+            if let Some([z0, z1, x0, x1, y0, y1]) = deep_box(hg.nz, hg.nx, hg.ny, r) {
+                let span = z1 - z0;
+                let slabs = (threads * 2)
+                    .div_ceil(decomp.ranks())
+                    .clamp(1, span);
+                let per = span.div_ceil(slabs);
+                let mut z = z0;
+                while z < z1 {
+                    let ze = (z + per).min(z1);
+                    deep.push(RegionTask {
+                        rank: rk,
+                        z0: z + r,
+                        z1: ze + r,
+                        x0: x0 + r,
+                        x1: x1 + r,
+                        y0: y0 + r,
+                        y1: y1 + r,
+                    });
+                    z = ze;
+                }
+            }
+            for [z0, z1, x0, x1, y0, y1] in boundary_boxes(hg.nz, hg.nx, hg.ny, r) {
+                shell.push(RegionTask {
+                    rank: rk,
+                    z0: z0 + r,
+                    z1: z1 + r,
+                    x0: x0 + r,
+                    x1: x1 + r,
+                    y0: y0 + r,
+                    y1: y1 + r,
+                });
+            }
         }
+
+        let grids_ptr = SharedMut(&mut grids as *mut Vec<HaloGrid>);
+        let grids_ptr = &grids_ptr;
+        let tout_ptrs: Vec<SharedMut<Grid3>> =
+            touts.iter_mut().map(|g| SharedMut(g as *mut Grid3)).collect();
+        let tout_ptrs = &tout_ptrs;
+
+        let comm_result: Mutex<Option<(exchange::ExchangeReport, f64)>> = Mutex::new(None);
+        let do_comm = || {
+            let ct = Timer::start();
+            // SAFETY: the exchange and the periodic-wrap fill write only
+            // halo-frame cells (and read interior-boundary layers), while
+            // concurrent deep-interior tasks read interior cells and
+            // write their own disjoint output buffers — no cell is
+            // written by one task and touched by another.
+            let grids_mut: &mut Vec<HaloGrid> = unsafe { &mut *grids_ptr.0 };
+            let rep = exchange::exchange(decomp, grids_mut, backend);
+            exchange::fill_halos_from_global(&current, decomp, grids_mut, true);
+            *comm_result.lock().unwrap() = Some((rep, ct.secs()));
+        };
+        let run_region = |task: &RegionTask| {
+            // SAFETY: region tasks of one rank cover disjoint output
+            // boxes; the shared input grid is only read
+            let grids_ref: &Vec<HaloGrid> = unsafe { &*grids_ptr.0 };
+            let out: &mut Grid3 = unsafe { &mut *tout_ptrs[task.rank].0 };
+            simd::apply3_region(
+                spec,
+                &grids_ref[task.rank].grid,
+                out,
+                task.z0,
+                task.z1,
+                task.x0,
+                task.x1,
+                task.y0,
+                task.y1,
+            );
+        };
+
+        match backend {
+            Backend::Sdma(_) => {
+                // SDMA is non-intrusive: the exchange task and the
+                // deep-interior batch run concurrently on the pool
+                rt.run(threads + 1, deep.len() + 1, &|i| {
+                    if i == 0 {
+                        do_comm();
+                    } else {
+                        run_region(&deep[i - 1]);
+                    }
+                });
+            }
+            Backend::Mpi(_) => {
+                // MPI's progress engine occupies a core: exchange first,
+                // then compute (serialized, as the paper models it)
+                do_comm();
+                rt.run(threads, deep.len(), &|i| run_region(&deep[i]));
+            }
+        }
+        // dependency-ordered batch: the boundary shell needs the halos
+        // the exchange just filled
+        rt.run(threads, shell.len(), &|i| run_region(&shell[i]));
+
+        // assemble the next global grid from the per-rank interiors
+        let mut next = Grid3::zeros(current.nz, current.nx, current.ny);
+        {
+            let next_ptr = SharedMut(&mut next as *mut Grid3);
+            let next_ptr = &next_ptr;
+            let touts_ref = &touts;
+            rt.run(threads, decomp.ranks(), &|rk| {
+                let b = decomp.block(rk, current.nz, current.nx, current.ny);
+                let tg = &touts_ref[rk];
+                // SAFETY: rank blocks partition the global grid
+                let next_mut: &mut Grid3 = unsafe { &mut *next_ptr.0 };
+                let (bz, bx, by) = b.dims();
+                for z in 0..bz {
+                    for x in 0..bx {
+                        let src = tg.idx(z + r, x + r, r);
+                        let dst = next_mut.idx(b.z0 + z, b.x0 + x, b.y0);
+                        next_mut.data[dst..dst + by].copy_from_slice(&tg.data[src..src + by]);
+                    }
+                }
+            });
+        }
+        let (rep, comm_s) = comm_result
+            .into_inner()
+            .unwrap()
+            .expect("halo-exchange task must have run");
         current = next;
 
         // simulated accounting: each rank is one NUMA node
@@ -155,6 +456,7 @@ pub fn multirank_sweep(
         let (no_overlap, pipelined) = pipeline::step_time(&compute_l, &comm_l, overlap);
 
         acc.real_s += t.secs();
+        acc.real_comm_s += comm_s;
         acc.sim_compute_s += est.time_s;
         acc.sim_comm_s += rep.sim_time_s;
         acc.sim_step_s += no_overlap;
@@ -163,38 +465,13 @@ pub fn multirank_sweep(
     }
     let n = steps.max(1) as f64;
     acc.real_s /= n;
+    acc.real_comm_s /= n;
     acc.sim_compute_s /= n;
     acc.sim_comm_s /= n;
     acc.sim_step_s /= n;
     acc.sim_step_pipelined_s /= n;
+    acc.pool = pool_delta(rt, &before, run_timer.secs());
     (current, acc)
-}
-
-/// Compute the interior of a halo grid (all halos must be filled).
-fn compute_interior(spec: &StencilSpec, hg: &crate::grid::halo::HaloGrid, out: &mut Grid3) {
-    let r = spec.radius;
-    // view the storage as a periodic grid restricted to interior points:
-    // every needed neighbour is physically present, so wrap never fires
-    let storage = &hg.grid;
-    let mut tmp = Grid3::zeros(storage.nz, storage.nx, storage.ny);
-    simd::apply3_region(
-        spec,
-        storage,
-        &mut tmp,
-        r,
-        r + hg.nz,
-        r,
-        r + hg.nx,
-        r,
-        r + hg.ny,
-    );
-    for z in 0..hg.nz {
-        for x in 0..hg.nx {
-            let src = tmp.idx(z + r, x + r, r);
-            let dst = out.idx(z, x, 0);
-            out.data[dst..dst + hg.ny].copy_from_slice(&tmp.data[src..src + hg.ny]);
-        }
-    }
 }
 
 #[cfg(test)]
@@ -229,6 +506,7 @@ mod tests {
             multirank_sweep(&spec, &g, &d, &Backend::sdma(), 1, 4, &p);
         assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
         assert!(stats.exchanged_bytes > 0);
+        assert!(stats.real_comm_s >= 0.0);
     }
 
     #[test]
@@ -258,5 +536,53 @@ mod tests {
         // MPI gains nothing from pipelining and its comm is far slower
         assert_eq!(mpi.sim_step_pipelined_s, mpi.sim_step_s);
         assert!(mpi.sim_comm_s > sdma.sim_comm_s);
+    }
+
+    #[test]
+    fn boundary_and_deep_boxes_partition_interior() {
+        for (nz, nx, ny, r) in [(16, 16, 16, 4), (8, 8, 8, 4), (12, 20, 9, 2), (5, 5, 5, 4)] {
+            let mut hits = vec![0u8; nz * nx * ny];
+            let mut mark = |b: [usize; 6]| {
+                for z in b[0]..b[1] {
+                    for x in b[2]..b[3] {
+                        for y in b[4]..b[5] {
+                            hits[(z * nx + x) * ny + y] += 1;
+                        }
+                    }
+                }
+            };
+            if let Some(b) = deep_box(nz, nx, ny, r) {
+                mark(b);
+            }
+            for b in boundary_boxes(nz, nx, ny, r) {
+                mark(b);
+            }
+            assert!(
+                hits.iter().all(|&h| h == 1),
+                "({nz},{nx},{ny}) r={r}: boxes must cover the interior exactly once"
+            );
+        }
+    }
+
+    #[test]
+    fn driver_owns_one_worker_set_across_calls() {
+        let p = Platform::paper();
+        let d = Driver::new(3, p.clone());
+        let spawned = d.runtime().spawn_count();
+        assert_eq!(spawned, 3);
+        let spec = StencilSpec::star3d(2);
+        let g = Grid3::random(10, 24, 24, 9);
+        let want = naive::apply3(&spec, &g);
+        for _ in 0..5 {
+            let (got, stats) = d.sweep(&spec, &g, Strategy::SnoopAware);
+            assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
+            assert_eq!(stats.pool.workers, 3);
+        }
+        let dec = CartDecomp::new(1, 2, 1);
+        for _ in 0..3 {
+            let (got, _) = d.multirank_sweep(&spec, &g, &dec, &Backend::sdma(), 1);
+            assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
+        }
+        assert_eq!(d.runtime().spawn_count(), spawned, "Driver must never respawn workers");
     }
 }

@@ -2,16 +2,21 @@
 //!
 //! * [`tiles`]    — per-core tile partitioning, including the snoop-aware
 //!   narrow-Y adjacent assignment (paper §IV-E);
-//! * [`pool`]     — scoped thread pool executing tile tasks on real data;
+//! * [`runtime`]  — the persistent NUMA-aware worker runtime: workers
+//!   spawned once per driver lifetime, pinned to simulated core slots,
+//!   fed through per-worker injector queues with work stealing;
+//! * [`pool`]     — `parallel_for`-style helpers dispatching onto the
+//!   process-global runtime (kept for the RTM propagators);
 //! * [`exchange`] — halo exchange between rank subdomains, with both the
 //!   SDMA and the MPI cost paths (paper §IV-F, Table II);
 //! * [`pipeline`] — z-layer pipeline overlapping compute with exchange
-//!   (paper Fig. 9);
+//!   (paper Fig. 9), executed as runtime tasks;
 //! * [`driver`]   — whole-sweep orchestration: grid → bricks → tiles →
-//!   threads → engine (rust-native or PJRT block artifacts) → metrics.
+//!   runtime batches → engine (rust-native or artifact) → metrics.
 
 pub mod driver;
 pub mod exchange;
 pub mod pipeline;
 pub mod pool;
+pub mod runtime;
 pub mod tiles;

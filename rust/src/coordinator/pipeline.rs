@@ -52,9 +52,10 @@ pub fn equal_layers(total_compute_s: f64, total_comm_s: f64, layers: usize) -> (
 }
 
 /// A real (host-threaded) overlapped executor: runs `compute(k)` for each
-/// layer while prefetching layer k+1 with `comm(k+1)` on a helper thread.
-/// Returns wall seconds.  Used by the end-to-end driver to demonstrate
-/// actual overlap, not just the model.
+/// layer while prefetching layer k+1 with `comm(k+1)` as a task on the
+/// persistent worker runtime (no per-layer thread spawn).  Returns wall
+/// seconds.  Used by the end-to-end driver to demonstrate actual
+/// overlap, not just the model.
 pub fn run_overlapped(
     layers: usize,
     compute: impl Fn(usize) + Sync,
@@ -64,22 +65,20 @@ pub fn run_overlapped(
     if layers == 0 {
         return 0.0;
     }
+    let rt = super::runtime::global();
     comm(0);
-    let comm = &comm;
-    crossbeam_utils::thread::scope(|s| {
-        for k in 0..layers {
-            let comm_handle = if k + 1 < layers {
-                Some(s.spawn(move |_| comm(k + 1)))
-            } else {
-                None
-            };
+    for k in 0..layers {
+        if k + 1 < layers {
+            let next_comm = |_: usize| comm(k + 1);
+            // SAFETY: the handle is waited before `next_comm` (and the
+            // borrows it captures) leave this scope
+            let handle = unsafe { rt.submit_scoped(1, &next_comm) };
             compute(k);
-            if let Some(h) = comm_handle {
-                h.join().unwrap();
-            }
+            handle.wait();
+        } else {
+            compute(k);
         }
-    })
-    .unwrap();
+    }
     t.secs()
 }
 

@@ -1,11 +1,18 @@
-//! Scoped thread pool for tile tasks (std threads + crossbeam scope;
-//! tokio is unavailable offline and the workload is CPU-bound).
+//! Data-parallel helpers for tile tasks, backed by the **persistent**
+//! worker runtime ([`super::runtime`]).
+//!
+//! The seed implementation spawned a fresh crossbeam scope (and OS
+//! threads) on every call and claimed indices from one shared
+//! `AtomicUsize`; these wrappers keep the exact call signatures but
+//! dispatch onto the process-global pool — workers are spawned once per
+//! process, chunks land on per-worker injector queues with contiguous
+//! (adjacency-preserving) assignment, and ragged tails are work-stolen.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use super::runtime;
 
-/// Run `task(i)` for every index in `0..n` across `threads` workers.
-/// Work is claimed dynamically from a shared counter (no per-thread
-/// imbalance for ragged tiles).
+/// Run `task(i)` for every index in `0..n` across the persistent pool.
+/// `threads` is the parallelism hint (chunk granularity); `threads <= 1`
+/// runs inline on the caller.
 pub fn parallel_for(threads: usize, n: usize, task: impl Fn(usize) + Sync) {
     if threads <= 1 || n <= 1 {
         for i in 0..n {
@@ -13,24 +20,9 @@ pub fn parallel_for(threads: usize, n: usize, task: impl Fn(usize) + Sync) {
         }
         return;
     }
-    let next = AtomicUsize::new(0);
-    crossbeam_utils::thread::scope(|s| {
-        for _ in 0..threads.min(n) {
-            s.spawn(|_| {
-                // workers inherit a fresh MXCSR; keep the FTZ/DAZ policy
-                // of the numeric kernels (see util::enable_flush_to_zero)
-                crate::util::enable_flush_to_zero();
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    task(i);
-                }
-            });
-        }
-    })
-    .expect("worker panicked");
+    // FTZ/DAZ policy: pool workers set it at spawn; the submitting
+    // thread sets it when it helps (runtime::Runtime::join_job)
+    runtime::global().run(threads, n, &task);
 }
 
 /// Run `task(chunk_index, lo, hi)` over `0..n` split into `chunks`
@@ -123,5 +115,15 @@ mod tests {
         });
         let par: f64 = partials.iter().sum();
         assert!((serial - par).abs() < 1e-9);
+    }
+
+    #[test]
+    fn repeated_calls_reuse_the_global_pool() {
+        let rt = runtime::global();
+        let spawned = rt.spawn_count();
+        for _ in 0..20 {
+            parallel_for(4, 128, |_| {});
+        }
+        assert_eq!(rt.spawn_count(), spawned, "parallel_for must never respawn workers");
     }
 }

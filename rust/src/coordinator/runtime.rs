@@ -1,0 +1,690 @@
+//! Persistent NUMA-aware worker runtime (paper §IV-E / §V-E scheduling
+//! substrate).
+//!
+//! The seed coordinator tore down and respawned scoped threads on every
+//! `parallel_for` call, which (a) made the paper's scheduling story
+//! unmeasurable — spawn cost dominated small dispatches — and (b) broke
+//! the snoop-aware adjacency contract: a fresh thread set has no stable
+//! worker↔core identity for adjacent tiles to land on.  This module
+//! replaces it:
+//!
+//! * workers are spawned **once** per [`Runtime`] lifetime (the process
+//!   global [`global()`] pool backs the `pool::parallel_*` free
+//!   functions; a [`super::driver::Driver`] owns a dedicated one);
+//! * each worker is pinned to a simulated NUMA/core-cluster slot
+//!   ([`CoreSlot`]) derived from the platform topology in the config —
+//!   worker *k* keeps the same slot for its whole life, so contiguous
+//!   chunk assignment reproduces the paper's adjacent-core placement;
+//! * dispatch goes through **per-worker injector queues**: a job is cut
+//!   into contiguous chunks, chunk *j* lands on worker `j·W/m`, and idle
+//!   workers **steal** from ring-adjacent victims for ragged tails —
+//!   replacing the seed's single shared `AtomicUsize` claim counter;
+//! * per-worker utilization, steal counts, and the one-time spawn
+//!   overhead are recorded ([`RuntimeStats`]) so the Fig. 12/13 benches
+//!   can attribute scaling losses to scheduling vs. memory.
+//!
+//! Submitters *help*: while waiting for a job, the submitting thread
+//! executes queued chunks itself.  That keeps nested submissions (a task
+//! that itself calls `parallel_for`) deadlock-free and lets a 1-worker
+//! pool still overlap a comm task with caller-side compute.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Simulated NUMA/core placement of one worker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CoreSlot {
+    pub numa: usize,
+    pub core: usize,
+}
+
+/// Runtime construction parameters (see `config::RuntimeSpec` for the
+/// TOML-file form).
+#[derive(Clone, Debug)]
+pub struct RuntimeConfig {
+    /// Worker count; 0 = one per host hardware thread.
+    pub workers: usize,
+    /// Simulated cores per NUMA cluster used for slot assignment.
+    pub cores_per_numa: usize,
+    /// Simulated NUMA cluster count (slots wrap past the last cluster).
+    pub numa_nodes: usize,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        let p = crate::simulator::Platform::paper();
+        Self { workers: 0, cores_per_numa: p.cores_per_numa, numa_nodes: p.total_numa() }
+    }
+}
+
+impl RuntimeConfig {
+    pub fn with_workers(workers: usize) -> Self {
+        Self { workers, ..Self::default() }
+    }
+
+    fn resolved_workers(&self) -> usize {
+        if self.workers > 0 {
+            return self.workers;
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    }
+
+    /// Slot of worker `i`: fill a cluster with adjacent cores before
+    /// moving to the next (paper §IV-E adjacency).
+    pub fn slot(&self, i: usize) -> CoreSlot {
+        let cpn = self.cores_per_numa.max(1);
+        CoreSlot { numa: (i / cpn) % self.numa_nodes.max(1), core: i % cpn }
+    }
+}
+
+/// Lifetime-erased task pointer.  SAFETY: [`Runtime::run`] blocks until
+/// every chunk of the job has finished before the borrow it erases ends,
+/// and nothing dereferences the pointer after the job completes.
+struct RawTask(*const (dyn Fn(usize) + Sync));
+unsafe impl Send for RawTask {}
+unsafe impl Sync for RawTask {}
+
+struct JobInner {
+    task: RawTask,
+    /// Items not yet finished; guarded so completion can signal `cv`.
+    remaining: Mutex<usize>,
+    cv: Condvar,
+    panicked: AtomicBool,
+}
+
+impl JobInner {
+    /// Run items `[lo, hi)`, absorbing panics into the `panicked` flag so
+    /// the submitter (not the worker) reports them.
+    fn execute(&self, lo: usize, hi: usize) {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let task = unsafe { &*self.task.0 };
+            for i in lo..hi {
+                task(i);
+            }
+        }));
+        if result.is_err() {
+            self.panicked.store(true, Ordering::Relaxed);
+        }
+        let mut rem = self.remaining.lock().unwrap();
+        *rem -= hi - lo;
+        if *rem == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        *self.remaining.lock().unwrap() == 0
+    }
+}
+
+struct Chunk {
+    job: Arc<JobInner>,
+    lo: usize,
+    hi: usize,
+}
+
+#[derive(Default)]
+struct WorkerCounters {
+    tasks: AtomicU64,
+    steals: AtomicU64,
+    busy_ns: AtomicU64,
+}
+
+struct Shared {
+    injectors: Vec<Mutex<VecDeque<Chunk>>>,
+    /// (epoch, cv): bumped on every submit so sleeping workers rescan.
+    signal: (Mutex<u64>, Condvar),
+    shutdown: AtomicBool,
+    counters: Vec<WorkerCounters>,
+    helper: WorkerCounters,
+    jobs: AtomicU64,
+    items: AtomicU64,
+}
+
+impl Shared {
+    fn pop_for(&self, worker: usize) -> Option<(Chunk, bool)> {
+        // own queue first, then ring-adjacent victims (±1, ±2, …) so a
+        // steal lands as close as possible to the tile's intended core
+        if let Some(c) = self.injectors[worker].lock().unwrap().pop_front() {
+            return Some((c, false));
+        }
+        let w = self.injectors.len();
+        for d in 1..w {
+            let victim = if d % 2 == 1 { (worker + d.div_ceil(2)) % w } else { (worker + w - d / 2) % w };
+            if let Some(c) = self.injectors[victim].lock().unwrap().pop_back() {
+                return Some((c, true));
+            }
+        }
+        None
+    }
+
+    fn pop_any(&self) -> Option<Chunk> {
+        for q in &self.injectors {
+            if let Some(c) = q.lock().unwrap().pop_front() {
+                return Some(c);
+            }
+        }
+        None
+    }
+
+    fn wake_all(&self) {
+        let mut epoch = self.signal.0.lock().unwrap();
+        *epoch += 1;
+        drop(epoch);
+        self.signal.1.notify_all();
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, idx: usize) {
+    // workers inherit a fresh MXCSR; keep the FTZ/DAZ policy of the
+    // numeric kernels (see util::enable_flush_to_zero)
+    crate::util::enable_flush_to_zero();
+    let mut seen_epoch = *shared.signal.0.lock().unwrap();
+    loop {
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        if let Some((chunk, stolen)) = shared.pop_for(idx) {
+            let t = Instant::now();
+            let n = (chunk.hi - chunk.lo) as u64;
+            chunk.job.execute(chunk.lo, chunk.hi);
+            let c = &shared.counters[idx];
+            c.tasks.fetch_add(n, Ordering::Relaxed);
+            c.busy_ns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            if stolen {
+                c.steals.fetch_add(1, Ordering::Relaxed);
+            }
+            continue;
+        }
+        let guard = shared.signal.0.lock().unwrap();
+        if *guard == seen_epoch && !shared.shutdown.load(Ordering::Acquire) {
+            let guard = shared.signal.1.wait(guard).unwrap();
+            seen_epoch = *guard;
+        } else {
+            seen_epoch = *guard;
+        }
+    }
+}
+
+/// Per-worker statistics snapshot.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerStats {
+    pub slot: CoreSlot,
+    /// Items executed on this worker.
+    pub tasks: u64,
+    /// Chunks this worker stole from a neighbour's injector queue.
+    pub steals: u64,
+    /// Seconds spent executing task bodies.
+    pub busy_s: f64,
+}
+
+/// Whole-runtime statistics snapshot (cumulative since construction or
+/// the last [`Runtime::reset_stats`]).
+#[derive(Clone, Debug)]
+pub struct RuntimeStats {
+    pub workers: Vec<WorkerStats>,
+    /// Items executed inline by submitting threads while helping.
+    pub helper_tasks: u64,
+    pub helper_busy_s: f64,
+    /// Jobs dispatched through the queues.
+    pub jobs: u64,
+    /// Total items across those jobs.
+    pub items: u64,
+    /// Threads ever spawned by this runtime (constant after startup —
+    /// the regression contract `spawn_count == workers` holds for the
+    /// whole lifetime).
+    pub spawn_count: u64,
+    /// One-time cost of spawning the worker set.
+    pub spawn_overhead_s: f64,
+}
+
+impl RuntimeStats {
+    pub fn total_steals(&self) -> u64 {
+        self.workers.iter().map(|w| w.steals).sum()
+    }
+
+    pub fn total_tasks(&self) -> u64 {
+        self.workers.iter().map(|w| w.tasks).sum::<u64>() + self.helper_tasks
+    }
+
+    /// Mean fraction of `wall_s` the workers spent executing tasks.
+    pub fn mean_utilization(&self, wall_s: f64) -> f64 {
+        if self.workers.is_empty() || wall_s <= 0.0 {
+            return 0.0;
+        }
+        let busy: f64 = self.workers.iter().map(|w| w.busy_s).sum();
+        (busy / self.workers.len() as f64 / wall_s).min(1.0)
+    }
+
+    /// Counter-wise difference `self − earlier` (worker list unchanged).
+    pub fn delta_since(&self, earlier: &RuntimeStats) -> RuntimeStats {
+        let workers = self
+            .workers
+            .iter()
+            .zip(&earlier.workers)
+            .map(|(a, b)| WorkerStats {
+                slot: a.slot,
+                tasks: a.tasks - b.tasks,
+                steals: a.steals - b.steals,
+                busy_s: a.busy_s - b.busy_s,
+            })
+            .collect();
+        RuntimeStats {
+            workers,
+            helper_tasks: self.helper_tasks - earlier.helper_tasks,
+            helper_busy_s: self.helper_busy_s - earlier.helper_busy_s,
+            jobs: self.jobs - earlier.jobs,
+            items: self.items - earlier.items,
+            spawn_count: self.spawn_count,
+            spawn_overhead_s: self.spawn_overhead_s,
+        }
+    }
+
+    /// Flatten into metric records (`metrics::RunRecord` rows) for the
+    /// bench CSV exports.
+    pub fn to_records(&self, experiment: &str, series: &str, wall_s: f64) -> Vec<crate::metrics::RunRecord> {
+        let mut out = Vec::new();
+        for (i, w) in self.workers.iter().enumerate() {
+            let label = format!("w{i}@numa{}", w.slot.numa);
+            out.push(crate::metrics::RunRecord::new(
+                experiment, series, &label, "worker_utilization",
+                if wall_s > 0.0 { (w.busy_s / wall_s).min(1.0) } else { 0.0 },
+            ));
+            out.push(crate::metrics::RunRecord::new(
+                experiment, series, &label, "steals", w.steals as f64,
+            ));
+        }
+        out.push(crate::metrics::RunRecord::new(
+            experiment, series, "pool", "spawn_overhead_s", self.spawn_overhead_s,
+        ));
+        out
+    }
+}
+
+/// The persistent worker pool.
+pub struct Runtime {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    config: RuntimeConfig,
+    spawn_overhead_s: f64,
+}
+
+impl Runtime {
+    pub fn new(config: RuntimeConfig) -> Self {
+        let workers = config.resolved_workers().max(1);
+        let shared = Arc::new(Shared {
+            injectors: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            signal: (Mutex::new(0), Condvar::new()),
+            shutdown: AtomicBool::new(false),
+            counters: (0..workers).map(|_| WorkerCounters::default()).collect(),
+            helper: WorkerCounters::default(),
+            jobs: AtomicU64::new(0),
+            items: AtomicU64::new(0),
+        });
+        let t = Instant::now();
+        let handles = (0..workers)
+            .map(|i| {
+                let s = shared.clone();
+                let slot = config.slot(i);
+                std::thread::Builder::new()
+                    .name(format!("mmstencil-w{i}-numa{}", slot.numa))
+                    .spawn(move || worker_loop(s, i))
+                    .expect("spawning worker thread")
+            })
+            .collect();
+        let spawn_overhead_s = t.elapsed().as_secs_f64();
+        Self { shared, handles, config, spawn_overhead_s }
+    }
+
+    pub fn with_workers(workers: usize) -> Self {
+        Self::new(RuntimeConfig::with_workers(workers))
+    }
+
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Threads ever spawned — equals [`workers`](Self::workers) for the
+    /// whole runtime lifetime (the regression-test contract).
+    pub fn spawn_count(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn config(&self) -> &RuntimeConfig {
+        &self.config
+    }
+
+    /// Run `task(i)` for every `i in 0..n` on the pool and wait.
+    /// `concurrency` is the caller's parallelism hint (tile/thread count
+    /// from the sweep config); it bounds chunk granularity, not worker
+    /// count.  The submitting thread helps execute queued chunks.
+    pub fn run(&self, concurrency: usize, n: usize, task: &(dyn Fn(usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        if n == 1 {
+            task(0);
+            return;
+        }
+        // erase the borrow; run() joins the job before returning, so the
+        // pointee outlives every dereference (see RawTask)
+        let raw: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(task) };
+        let job = Arc::new(JobInner {
+            task: RawTask(raw as *const _),
+            remaining: Mutex::new(n),
+            cv: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        let w = self.workers();
+        // contiguous chunks; ~2 per hinted thread for steal slack, but
+        // never more chunks than items
+        let target = (concurrency.max(1) * 2).clamp(1, n).max(w.min(n));
+        let chunk = n.div_ceil(target);
+        let m = n.div_ceil(chunk);
+        {
+            for j in 0..m {
+                let lo = j * chunk;
+                let hi = ((j + 1) * chunk).min(n);
+                // contiguous block assignment keeps adjacent chunks on
+                // adjacent workers (snoop-aware placement)
+                let target_worker = j * w / m;
+                self.shared.injectors[target_worker]
+                    .lock()
+                    .unwrap()
+                    .push_back(Chunk { job: job.clone(), lo, hi });
+            }
+        }
+        self.shared.jobs.fetch_add(1, Ordering::Relaxed);
+        self.shared.items.fetch_add(n as u64, Ordering::Relaxed);
+        self.shared.wake_all();
+        self.wait(&job);
+    }
+
+    /// Submit a job without waiting.  The returned handle joins the job
+    /// on [`wait`](JobHandle::wait) *or* on drop (including unwind), so
+    /// the erased borrow cannot be outlived by a running worker.
+    ///
+    /// # Safety
+    /// The caller must not `mem::forget` the handle: leaking it skips
+    /// the join and leaves workers dereferencing the erased borrow
+    /// after it dies.
+    pub unsafe fn submit_scoped(&self, n: usize, task: &(dyn Fn(usize) + Sync)) -> JobHandle<'_> {
+        let raw: &'static (dyn Fn(usize) + Sync) = std::mem::transmute(task);
+        let job = Arc::new(JobInner {
+            task: RawTask(raw as *const _),
+            remaining: Mutex::new(n.max(1)),
+            cv: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        if n == 0 {
+            *job.remaining.lock().unwrap() = 0;
+            return JobHandle { job, rt: self };
+        }
+        let w = self.workers().max(1);
+        for i in 0..n {
+            self.shared.injectors[i * w / n]
+                .lock()
+                .unwrap()
+                .push_back(Chunk { job: job.clone(), lo: i, hi: i + 1 });
+        }
+        self.shared.jobs.fetch_add(1, Ordering::Relaxed);
+        self.shared.items.fetch_add(n as u64, Ordering::Relaxed);
+        self.shared.wake_all();
+        JobHandle { job, rt: self }
+    }
+
+    fn wait(&self, job: &Arc<JobInner>) {
+        self.join_job(job);
+        if job.panicked.load(Ordering::Relaxed) {
+            panic!("worker panicked");
+        }
+    }
+
+    /// Block (helping with queued work) until every item of `job` has
+    /// finished.  Does NOT propagate task panics — callers that want the
+    /// "worker panicked" repanic use [`wait`](Self::wait); `JobHandle`'s
+    /// drop uses this directly so joining during unwind cannot abort.
+    fn join_job(&self, job: &Arc<JobInner>) {
+        // the helping thread executes task bodies too: hold the same
+        // FTZ/DAZ policy the pool workers set at startup — but restore
+        // the submitter's own FP environment on exit, since this may be
+        // an embedder's thread that relies on subnormal semantics
+        let _ftz = crate::util::FtzGuard::new();
+        loop {
+            if job.is_done() {
+                break;
+            }
+            // help: drain queued chunks (any job) instead of blocking
+            if let Some(chunk) = self.shared.pop_any() {
+                let t = Instant::now();
+                let n = (chunk.hi - chunk.lo) as u64;
+                chunk.job.execute(chunk.lo, chunk.hi);
+                self.shared.helper.tasks.fetch_add(n, Ordering::Relaxed);
+                self.shared
+                    .helper
+                    .busy_ns
+                    .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                continue;
+            }
+            let rem = job.remaining.lock().unwrap();
+            if *rem > 0 {
+                // chunks are all claimed by workers; sleep until the
+                // last one signals
+                drop(job.cv.wait(rem).unwrap());
+            }
+        }
+    }
+
+    /// Cumulative statistics snapshot.
+    pub fn stats(&self) -> RuntimeStats {
+        RuntimeStats {
+            workers: self
+                .shared
+                .counters
+                .iter()
+                .enumerate()
+                .map(|(i, c)| WorkerStats {
+                    slot: self.config.slot(i),
+                    tasks: c.tasks.load(Ordering::Relaxed),
+                    steals: c.steals.load(Ordering::Relaxed),
+                    busy_s: c.busy_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+                })
+                .collect(),
+            helper_tasks: self.shared.helper.tasks.load(Ordering::Relaxed),
+            helper_busy_s: self.shared.helper.busy_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+            jobs: self.shared.jobs.load(Ordering::Relaxed),
+            items: self.shared.items.load(Ordering::Relaxed),
+            spawn_count: self.handles.len() as u64,
+            spawn_overhead_s: self.spawn_overhead_s,
+        }
+    }
+
+    /// Zero the cumulative counters (spawn figures are preserved).
+    pub fn reset_stats(&self) {
+        for c in self.shared.counters.iter().chain(std::iter::once(&self.shared.helper)) {
+            c.tasks.store(0, Ordering::Relaxed);
+            c.steals.store(0, Ordering::Relaxed);
+            c.busy_ns.store(0, Ordering::Relaxed);
+        }
+        self.shared.jobs.store(0, Ordering::Relaxed);
+        self.shared.items.store(0, Ordering::Relaxed);
+    }
+}
+
+impl Drop for Runtime {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.wake_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Handle to a job submitted with [`Runtime::submit_scoped`].  Dropping
+/// the handle joins the job (like a scoped thread): even if the caller
+/// unwinds before calling [`wait`](Self::wait), no worker can still be
+/// executing the lifetime-erased task when its borrows die.
+pub struct JobHandle<'rt> {
+    job: Arc<JobInner>,
+    rt: &'rt Runtime,
+}
+
+impl JobHandle<'_> {
+    /// Block (helping with queued work) until the job finishes,
+    /// repanicking if any task panicked.
+    pub fn wait(self) {
+        self.rt.join_job(&self.job);
+        let panicked = self.job.panicked.load(Ordering::Relaxed);
+        drop(self); // re-join in Drop is a no-op: the job is done
+        if panicked {
+            panic!("worker panicked");
+        }
+    }
+}
+
+impl Drop for JobHandle<'_> {
+    fn drop(&mut self) {
+        // join-on-drop, even during unwind (panics are swallowed here —
+        // propagation happens only through wait())
+        self.rt.join_job(&self.job);
+    }
+}
+
+static GLOBAL: OnceLock<Runtime> = OnceLock::new();
+
+/// The process-wide pool backing `pool::parallel_*`.  Spawned on first
+/// use, never respawned; size = host hardware threads (min 4 so comm
+/// tasks overlap compute even on small hosts).
+pub fn global() -> &'static Runtime {
+    GLOBAL.get_or_init(|| {
+        let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Runtime::new(RuntimeConfig::with_workers(host.max(4)))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_every_index_once() {
+        let rt = Runtime::with_workers(4);
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        rt.run(8, 1000, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn repeated_jobs_do_not_respawn() {
+        let rt = Runtime::with_workers(3);
+        let before = rt.spawn_count();
+        for _ in 0..50 {
+            rt.run(3, 64, &|_| {});
+        }
+        assert_eq!(rt.spawn_count(), before);
+        assert_eq!(rt.spawn_count(), 3);
+        let s = rt.stats();
+        assert_eq!(s.jobs, 50);
+        assert_eq!(s.items, 50 * 64);
+        assert_eq!(s.total_tasks(), 50 * 64);
+    }
+
+    #[test]
+    fn slots_fill_clusters_adjacently() {
+        let cfg = RuntimeConfig { workers: 8, cores_per_numa: 4, numa_nodes: 2 };
+        assert_eq!(cfg.slot(0), CoreSlot { numa: 0, core: 0 });
+        assert_eq!(cfg.slot(3), CoreSlot { numa: 0, core: 3 });
+        assert_eq!(cfg.slot(4), CoreSlot { numa: 1, core: 0 });
+        assert_eq!(cfg.slot(7), CoreSlot { numa: 1, core: 3 });
+    }
+
+    #[test]
+    fn nested_submission_completes() {
+        let rt = Runtime::with_workers(2);
+        let total = AtomicU64::new(0);
+        rt.run(2, 4, &|_| {
+            // a task submitting more work must not deadlock the pool
+            let inner = AtomicU64::new(0);
+            super::global().run(2, 8, &|_| {
+                inner.fetch_add(1, Ordering::Relaxed);
+            });
+            total.fetch_add(inner.load(Ordering::Relaxed), Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker panicked")]
+    fn task_panic_propagates_to_submitter() {
+        let rt = Runtime::with_workers(2);
+        rt.run(2, 16, &|i| {
+            if i == 7 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn stats_reset_preserves_spawn_figures() {
+        let rt = Runtime::with_workers(2);
+        rt.run(2, 100, &|_| {});
+        rt.reset_stats();
+        let s = rt.stats();
+        assert_eq!(s.total_tasks(), 0);
+        assert_eq!(s.spawn_count, 2);
+        assert!(s.spawn_overhead_s >= 0.0);
+    }
+
+    #[test]
+    fn submit_scoped_overlaps_with_caller() {
+        let rt = Runtime::with_workers(2);
+        let ran = AtomicU64::new(0);
+        let task = |_: usize| {
+            ran.fetch_add(1, Ordering::Relaxed);
+        };
+        let h = unsafe { rt.submit_scoped(3, &task) };
+        h.wait();
+        assert_eq!(ran.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn handle_drop_joins_job() {
+        let rt = Runtime::with_workers(2);
+        let done = AtomicU64::new(0);
+        {
+            let slow = |_: usize| {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                done.fetch_add(1, Ordering::Relaxed);
+            };
+            let _h = unsafe { rt.submit_scoped(2, &slow) };
+            // handle dropped without wait(): Drop must join before the
+            // borrowed closure (and `done`) go out of scope
+        }
+        assert_eq!(done.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn utilization_and_steals_observable() {
+        let rt = Runtime::with_workers(4);
+        rt.reset_stats();
+        let t = Instant::now();
+        // ragged workload: long tail forces steals with high likelihood
+        rt.run(4, 64, &|i| {
+            if i % 16 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        });
+        let wall = t.elapsed().as_secs_f64();
+        let s = rt.stats();
+        assert_eq!(s.total_tasks(), 64);
+        assert!(s.mean_utilization(wall) <= 1.0);
+        // steals are opportunistic — just check the counter is sane
+        assert!(s.total_steals() <= 64);
+    }
+}

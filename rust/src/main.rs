@@ -160,13 +160,22 @@ fn cmd_sweep(opts: &Opts) -> Result<(), String> {
     let platform = Platform::paper();
     let g = Grid3::random(nz, nx, ny, 42);
     println!("sweep {name} on {nz}×{nx}×{ny}, {threads} threads, {strategy:?}");
-    let (out, stats) = sweep_driver::sweep(&spec, &g, threads, strategy, &platform);
+    let driver = sweep_driver::Driver::new(threads, platform);
+    let (out, stats) = driver.sweep(&spec, &g, strategy);
     let check = naive::apply3(&spec, &g);
     let err = out.max_abs_diff(&check);
     println!(
         "  host: {:.1} ms  {:.3} Gcell/s   max|Δ| vs naive = {err:.2e}",
         stats.real_s * 1e3,
         stats.gcells_per_s
+    );
+    println!(
+        "  pool: {} persistent workers (spawned once, {:.2} ms), {} tasks, {} steals, util {:.0}%",
+        stats.pool.workers,
+        stats.pool.spawn_overhead_s * 1e3,
+        stats.pool.tasks,
+        stats.pool.steals,
+        stats.pool.utilization * 100.0
     );
     println!(
         "  simulated on paper platform: {:.2} ms/sweep, bandwidth util {:.1}%",

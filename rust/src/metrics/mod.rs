@@ -81,6 +81,12 @@ impl RecordSet {
         self.records.push(r);
     }
 
+    /// Append a batch of records (e.g. the per-worker utilization /
+    /// steal-count rows from `coordinator::runtime::RuntimeStats`).
+    pub fn extend(&mut self, records: impl IntoIterator<Item = RunRecord>) {
+        self.records.extend(records);
+    }
+
     pub fn add(
         &mut self,
         experiment: &str,
@@ -200,6 +206,17 @@ mod tests {
         let md = rs.to_markdown("m", 2);
         assert_eq!(md.lines().count(), 4);
         assert!(md.contains("| A | 1.00 | 1.00 |"));
+    }
+
+    #[test]
+    fn extend_appends_batches() {
+        let mut rs = RecordSet::new();
+        rs.extend(vec![
+            RunRecord::new("fig13", "pool", "w0@numa0", "worker_utilization", 0.92),
+            RunRecord::new("fig13", "pool", "w0@numa0", "steals", 3.0),
+        ]);
+        assert_eq!(rs.records.len(), 2);
+        assert!(rs.to_csv().contains("worker_utilization"));
     }
 
     #[test]

@@ -8,7 +8,8 @@
 //! cross-validate the rust-native propagator (`rtm::vti`) over many
 //! steps, not just one.
 
-use anyhow::{anyhow, Result};
+use crate::anyhow;
+use crate::util::err::Result;
 
 use super::media::VtiMedia;
 use super::vti::VtiState;

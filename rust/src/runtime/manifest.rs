@@ -6,7 +6,8 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::err::{Context, Result};
+use crate::{anyhow, bail};
 
 /// Shape + dtype of one tensor.
 #[derive(Clone, Debug, PartialEq, Eq)]

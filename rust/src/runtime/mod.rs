@@ -1,21 +1,23 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//! Artifact runtime: load the AOT artifact manifest and execute the
+//! artifacts' *semantics*.
 //!
-//! The interchange format is HLO *text* (not serialized protos): jax ≥ 0.5
-//! emits 64-bit instruction ids the crate's xla_extension 0.5.1 rejects;
-//! the text parser reassigns ids (see `python/compile/aot.py`).
-//!
-//! `Runtime` owns one PJRT CPU client and a lazy registry of compiled
-//! executables keyed by artifact name; `manifest.txt` (written by the AOT
-//! step) provides the expected input/output shapes so feeds are validated
-//! before execution.
+//! The original interchange path compiles the HLO-text artifacts through
+//! a PJRT CPU client (`xla` crate).  That crate (and `anyhow`) are not in
+//! the offline vendor set, so this build ships a **native interpreter**
+//! instead: every artifact in `manifest.txt` carries `meta=kind:...`
+//! written by `python/compile/aot.py`, and for each kind the interpreter
+//! dispatches to the rust-native engine with identical semantics
+//! (`stencil::naive` for the block/grid stencils, `rtm::{vti,tti}` for
+//! the whole-grid RTM steps).  Feed validation — input counts and shapes
+//! against the manifest — is unchanged, so the cross-layer correctness
+//! contract in `rust/tests/runtime_artifacts.rs` still holds end to end.
 
 pub mod manifest;
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::err::Result;
+use crate::{anyhow, bail};
 
 pub use manifest::{ArtifactMeta, Manifest, TensorSpec};
 
@@ -41,12 +43,10 @@ impl Tensor {
     }
 }
 
-/// The PJRT-backed artifact runtime.
+/// The artifact runtime (native interpreter backend).
 pub struct Runtime {
-    client: xla::PjRtClient,
     dir: PathBuf,
     pub manifest: Manifest,
-    executables: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
 }
 
 impl Runtime {
@@ -54,9 +54,8 @@ impl Runtime {
     pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(dir.join("manifest.txt"))
-            .with_context(|| format!("loading manifest from {}", dir.display()))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Self { client, dir, manifest, executables: Mutex::new(HashMap::new()) })
+            .map_err(|e| e.wrap(format!("loading manifest from {}", dir.display())))?;
+        Ok(Self { dir, manifest })
     }
 
     /// Default artifact dir: `$MMSTENCIL_ARTIFACTS` or `./artifacts`.
@@ -65,37 +64,21 @@ impl Runtime {
         Self::open(dir)
     }
 
+    /// Backend description (the PJRT client is replaced by the native
+    /// interpreter in the offline build).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "native-interpreter".to_string()
     }
 
-    /// Compile (or fetch cached) the named artifact.
-    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.executables.lock().unwrap().get(name) {
-            return Ok(e.clone());
-        }
-        let meta = self
-            .manifest
-            .get(name)
-            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?;
-        let path = self.dir.join(&meta.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-        let exe = std::sync::Arc::new(exe);
-        self.executables.lock().unwrap().insert(name.to_string(), exe.clone());
-        Ok(exe)
+    /// Path of the artifact's HLO-text file (kept for tooling; the
+    /// interpreter executes from the manifest metadata, not the HLO).
+    pub fn artifact_path(&self, name: &str) -> Option<PathBuf> {
+        self.manifest.get(name).map(|m| self.dir.join(&m.file))
     }
 
     /// Execute artifact `name` with the given inputs.  Inputs must match
     /// the manifest specs; outputs come back as one `Tensor` per manifest
-    /// output (the AOT step lowers with `return_tuple=True`).
+    /// output.
     pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         let meta = self
             .manifest
@@ -118,37 +101,24 @@ impl Runtime {
                 );
             }
         }
-        let exe = self.executable(name)?;
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| {
-                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(&t.data)
-                    .reshape(&dims)
-                    .map_err(|e| anyhow!("reshape: {e:?}"))
-            })
-            .collect::<Result<_>>()?;
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        let parts = result.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        if parts.len() != meta.outputs.len() {
+        let outs = interpret(&meta, inputs)?;
+        if outs.len() != meta.outputs.len() {
             bail!(
                 "{name}: got {} outputs, manifest says {}",
-                parts.len(),
+                outs.len(),
                 meta.outputs.len()
             );
         }
-        parts
-            .into_iter()
-            .zip(&meta.outputs)
-            .map(|(lit, spec)| {
-                let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
-                Ok(Tensor::new(spec.shape.clone(), data))
-            })
-            .collect()
+        for (o, spec) in outs.iter().zip(&meta.outputs) {
+            if o.shape != spec.shape {
+                bail!(
+                    "{name}: output shape {:?} != manifest {:?}",
+                    o.shape,
+                    spec.shape
+                );
+            }
+        }
+        Ok(outs)
     }
 
     /// Names of all artifacts available in the manifest.
@@ -157,19 +127,271 @@ impl Runtime {
     }
 }
 
+fn meta_radius(meta: &ArtifactMeta) -> usize {
+    meta.meta
+        .get("radius")
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(4)
+}
+
+/// Periodic sweep on a 3D halo cube, cropped to the interior — the block
+/// operator contract (halo width == radius, so wrap never contaminates).
+fn block3(spec: &crate::stencil::StencilSpec, input: &Tensor, r: usize) -> Tensor {
+    let (hz, hx, hy) = (input.shape[0], input.shape[1], input.shape[2]);
+    let g = crate::grid::Grid3 { nz: hz, nx: hx, ny: hy, data: input.data.clone() };
+    let full = crate::stencil::naive::apply3(spec, &g);
+    let (bz, bx, by) = (hz - 2 * r, hx - 2 * r, hy - 2 * r);
+    let mut data = Vec::with_capacity(bz * bx * by);
+    for z in 0..bz {
+        for x in 0..bx {
+            for y in 0..by {
+                data.push(full.get(z + r, x + r, y + r));
+            }
+        }
+    }
+    Tensor::new(vec![bz, bx, by], data)
+}
+
+/// 2D analogue of [`block3`].
+fn block2(spec: &crate::stencil::StencilSpec, input: &Tensor, r: usize) -> Tensor {
+    let (hx, hy) = (input.shape[0], input.shape[1]);
+    let g = crate::grid::Grid2 { nx: hx, ny: hy, data: input.data.clone() };
+    let full = crate::stencil::naive::apply2(spec, &g);
+    let (bx, by) = (hx - 2 * r, hy - 2 * r);
+    let mut data = Vec::with_capacity(bx * by);
+    for x in 0..bx {
+        for y in 0..by {
+            data.push(full.get(x + r, y + r));
+        }
+    }
+    Tensor::new(vec![bx, by], data)
+}
+
+fn grid3_of(t: &Tensor) -> crate::grid::Grid3 {
+    crate::grid::Grid3 {
+        nz: t.shape[0],
+        nx: t.shape[1],
+        ny: t.shape[2],
+        data: t.data.clone(),
+    }
+}
+
+fn interpret(meta: &ArtifactMeta, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    use crate::stencil::StencilSpec;
+    let kind = meta.meta.get("kind").map(String::as_str).unwrap_or("");
+    let r = meta_radius(meta);
+    match kind {
+        "star3d_block" => Ok(vec![block3(&StencilSpec::star3d(r), &inputs[0], r)]),
+        "box3d_block" => Ok(vec![block3(&StencilSpec::box3d(r), &inputs[0], r)]),
+        "star2d_block" => Ok(vec![block2(&StencilSpec::star2d(r), &inputs[0], r)]),
+        "box2d_block" => Ok(vec![block2(&StencilSpec::box2d(r), &inputs[0], r)]),
+        "transpose_block" => {
+            let (n, m) = (inputs[0].shape[0], inputs[0].shape[1]);
+            let mut data = vec![0.0f32; n * m];
+            for i in 0..n {
+                for j in 0..m {
+                    data[j * n + i] = inputs[0].data[i * m + j];
+                }
+            }
+            Ok(vec![Tensor::new(vec![m, n], data)])
+        }
+        "star_grid" | "box_grid" => {
+            let star = kind == "star_grid";
+            if inputs[0].shape.len() == 3 {
+                let spec = if star { StencilSpec::star3d(r) } else { StencilSpec::box3d(r) };
+                let g = grid3_of(&inputs[0]);
+                let out = crate::stencil::naive::apply3(&spec, &g);
+                Ok(vec![Tensor::new(inputs[0].shape.clone(), out.data)])
+            } else {
+                let spec = if star { StencilSpec::star2d(r) } else { StencilSpec::box2d(r) };
+                let g = crate::grid::Grid2 {
+                    nx: inputs[0].shape[0],
+                    ny: inputs[0].shape[1],
+                    data: inputs[0].data.clone(),
+                };
+                let out = crate::stencil::naive::apply2(&spec, &g);
+                Ok(vec![Tensor::new(inputs[0].shape.clone(), out.data)])
+            }
+        }
+        "rtm_vti_grid" => {
+            // inputs: sh, sv, sh_prev, sv_prev, vp2dt2, eps, delta
+            if inputs.len() != 7 {
+                bail!("{}: rtm_vti_grid needs 7 inputs, manifest lists {}", meta.name, inputs.len());
+            }
+            let mut state = crate::rtm::vti::VtiState {
+                sh: grid3_of(&inputs[0]),
+                sv: grid3_of(&inputs[1]),
+                sh_prev: grid3_of(&inputs[2]),
+                sv_prev: grid3_of(&inputs[3]),
+            };
+            let media = crate::rtm::media::VtiMedia {
+                vp2dt2: grid3_of(&inputs[4]),
+                eps: grid3_of(&inputs[5]),
+                delta: grid3_of(&inputs[6]),
+                dt: 0.0,
+                dx: 0.0,
+            };
+            let w2 = crate::stencil::coeffs::second_deriv(r);
+            let (nz, nx, ny) = state.sh.shape();
+            let mut sc = crate::rtm::vti::VtiScratch::new(nz, nx, ny);
+            crate::rtm::vti::step(&mut state, &media, &w2, 1, &mut sc);
+            let shape = inputs[0].shape.clone();
+            Ok(vec![
+                Tensor::new(shape.clone(), state.sh.data),
+                Tensor::new(shape, state.sv.data),
+            ])
+        }
+        "rtm_tti_grid" => {
+            // inputs: p, q, p_prev, q_prev, vpx2, vpz2, vpn2, vsz2,
+            //         alpha, theta, phi
+            if inputs.len() != 11 {
+                bail!("{}: rtm_tti_grid needs 11 inputs, manifest lists {}", meta.name, inputs.len());
+            }
+            let mut state = crate::rtm::tti::TtiState {
+                p: grid3_of(&inputs[0]),
+                q: grid3_of(&inputs[1]),
+                p_prev: grid3_of(&inputs[2]),
+                q_prev: grid3_of(&inputs[3]),
+            };
+            let media = crate::rtm::media::TtiMedia {
+                vpx2: grid3_of(&inputs[4]),
+                vpz2: grid3_of(&inputs[5]),
+                vpn2: grid3_of(&inputs[6]),
+                vsz2: grid3_of(&inputs[7]),
+                alpha: grid3_of(&inputs[8]),
+                theta: grid3_of(&inputs[9]),
+                phi: grid3_of(&inputs[10]),
+                dt: 0.0,
+                dx: 0.0,
+            };
+            let trig = crate::rtm::tti::TtiTrig::new(&media);
+            let w2 = crate::stencil::coeffs::second_deriv(r);
+            let w1 = crate::stencil::coeffs::first_deriv(r);
+            let (nz, nx, ny) = state.p.shape();
+            let mut sc = crate::rtm::tti::TtiScratch::new(nz, nx, ny);
+            crate::rtm::tti::step(&mut state, &media, &trig, &w2, &w1, 1, &mut sc);
+            let shape = inputs[0].shape.clone();
+            Ok(vec![
+                Tensor::new(shape.clone(), state.p.data),
+                Tensor::new(shape, state.q.data),
+            ])
+        }
+        other => bail!(
+            "artifact {}: kind {other:?} has no native interpretation \
+             (requires the PJRT backend, unavailable offline)",
+            meta.name
+        ),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::grid::Grid3;
+    use crate::stencil::{naive, StencilSpec};
+    use crate::util::prop::assert_allclose;
 
     #[test]
     fn tensor_shape_len_consistency() {
         let t = Tensor::new(vec![2, 3], vec![0.0; 6]);
         assert_eq!(t.len(), 6);
+        assert!(!t.is_empty());
     }
 
     #[test]
     #[should_panic]
     fn tensor_rejects_mismatched_shape() {
         Tensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    fn rt_with(line: &str, dir: &str) -> Runtime {
+        Runtime { dir: PathBuf::from(dir), manifest: Manifest::parse(line).unwrap() }
+    }
+
+    #[test]
+    fn interpreter_star3d_block_matches_native_crop() {
+        let rt = rt_with(
+            "star3d_r2_block|star3d_r2_block.hlo.txt|in=f32[8,20,20]|out=f32[4,16,16]|meta=kind:star3d_block,radius:2",
+            "unused",
+        );
+        let spec = StencilSpec::star3d(2);
+        let g = Grid3::random(8, 20, 20, 77);
+        let out = rt.execute("star3d_r2_block", &[Tensor::new(vec![8, 20, 20], g.data.clone())]).unwrap();
+        let full = naive::apply3(&spec, &g);
+        let mut want = Vec::new();
+        for z in 0..4 {
+            for x in 0..16 {
+                for y in 0..16 {
+                    want.push(full.get(z + 2, x + 2, y + 2));
+                }
+            }
+        }
+        assert_allclose(&out[0].data, &want, 1e-5, 1e-6);
+    }
+
+    #[test]
+    fn interpreter_validates_feeds() {
+        let rt = rt_with(
+            "star3d_r2_block|f.hlo.txt|in=f32[8,20,20]|out=f32[4,16,16]|meta=kind:star3d_block,radius:2",
+            "unused",
+        );
+        let err = rt.execute("star3d_r2_block", &[]).unwrap_err();
+        assert!(err.to_string().contains("expected 1 inputs"), "{err}");
+        let err = rt.execute("nope", &[]).unwrap_err();
+        assert!(err.to_string().contains("not in manifest"), "{err}");
+        let bad = Tensor::new(vec![2, 2], vec![0.0; 4]);
+        assert!(rt.execute("star3d_r2_block", &[bad]).is_err());
+    }
+
+    #[test]
+    fn interpreter_transpose() {
+        let rt = rt_with(
+            "transpose16_block|t.hlo.txt|in=f32[16,16]|out=f32[16,16]|meta=kind:transpose_block",
+            "unused",
+        );
+        let data: Vec<f32> = (0..256).map(|i| i as f32).collect();
+        let out = rt.execute("transpose16_block", &[Tensor::new(vec![16, 16], data.clone())]).unwrap();
+        for i in 0..16 {
+            for j in 0..16 {
+                assert_eq!(out[0].data[j * 16 + i], data[i * 16 + j]);
+            }
+        }
+    }
+
+    #[test]
+    fn interpreter_vti_grid_matches_native_step() {
+        let n = 12;
+        let rt = rt_with(
+            &format!(
+                "rtm_vti_r4_grid{n}|v.hlo.txt|in=f32[{n},{n},{n}];f32[{n},{n},{n}];f32[{n},{n},{n}];f32[{n},{n},{n}];f32[{n},{n},{n}];f32[{n},{n},{n}];f32[{n},{n},{n}]|out=f32[{n},{n},{n}];f32[{n},{n},{n}]|meta=kind:rtm_vti_grid,radius:4"
+            ),
+            "unused",
+        );
+        let m = crate::rtm::media::layered_vti(n, n, n, 10.0, &crate::rtm::media::default_layers());
+        let mut st = crate::rtm::vti::VtiState::zeros(n, n, n);
+        st.inject(6, 6, 6, 1.0);
+        let shape = vec![n, n, n];
+        let t = |g: &Grid3| Tensor::new(shape.clone(), g.data.clone());
+        let outs = rt
+            .execute(
+                &format!("rtm_vti_r4_grid{n}"),
+                &[
+                    t(&st.sh), t(&st.sv), t(&st.sh_prev), t(&st.sv_prev),
+                    t(&m.vp2dt2), t(&m.eps), t(&m.delta),
+                ],
+            )
+            .unwrap();
+        let w2 = crate::stencil::coeffs::second_deriv(4);
+        let mut sc = crate::rtm::vti::VtiScratch::new(n, n, n);
+        crate::rtm::vti::step(&mut st, &m, &w2, 1, &mut sc);
+        assert_allclose(&outs[0].data, &st.sh.data, 1e-5, 1e-6);
+        assert_allclose(&outs[1].data, &st.sv.data, 1e-5, 1e-6);
+    }
+
+    #[test]
+    fn unknown_kind_is_an_error() {
+        let rt = rt_with("x|x.hlo.txt|in=f32[2]|out=f32[2]|meta=kind:mystery", "unused");
+        let err = rt.execute("x", &[Tensor::new(vec![2], vec![0.0; 2])]).unwrap_err();
+        assert!(err.to_string().contains("no native interpretation"), "{err}");
     }
 }

@@ -124,6 +124,14 @@ impl Platform {
         self.onpkg_port_bits / 8
     }
 
+    /// Modeled cost of spawning `n` OS threads (~25 µs each, serialized
+    /// in the parent).  A per-call scoped pool pays this on *every*
+    /// dispatch; the persistent runtime pays it once per driver — the
+    /// Fig. 13 bench reports both so scaling losses can be attributed.
+    pub fn thread_spawn_overhead_s(&self, n: usize) -> f64 {
+        n as f64 * 25e-6
+    }
+
     /// A100 reference platform (for the GPU comparison series): 1955 GB/s
     /// HBM (paper §III-B).
     pub fn a100_bw() -> f64 {
@@ -169,6 +177,17 @@ mod tests {
         // 280 GB/s ≈ 70% of the modeled 400 GB/s peak
         let p = Platform::paper();
         assert!((280e9 / p.onpkg_bw_per_numa - 0.70) < 0.01);
+    }
+
+    #[test]
+    fn spawn_overhead_scales_linearly() {
+        let p = Platform::paper();
+        assert_eq!(p.thread_spawn_overhead_s(0), 0.0);
+        let one = p.thread_spawn_overhead_s(1);
+        assert!((p.thread_spawn_overhead_s(38) - 38.0 * one).abs() < 1e-12);
+        // a 38-thread respawn per dispatch costs ~1 ms — visible against
+        // the sub-ms simulated sweep times the benches report
+        assert!(p.thread_spawn_overhead_s(38) > 5e-4);
     }
 
     #[test]

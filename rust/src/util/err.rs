@@ -1,0 +1,132 @@
+//! Minimal error + context shim (anyhow is unavailable in the offline
+//! vendor set — see DESIGN.md §7).
+//!
+//! Provides the small slice of the `anyhow` API the crate uses: a
+//! string-backed [`Error`], a [`Result`] alias, the [`Context`]
+//! extension trait for `Result`/`Option`, and the `anyhow!` / `bail!`
+//! macros (exported at the crate root, imported as
+//! `use crate::{anyhow, bail}`).
+
+use std::fmt;
+
+/// A string-backed error with optional context layers.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Self {
+        Self { msg: m.into() }
+    }
+
+    /// Wrap with an outer context layer (`context: inner`).
+    pub fn wrap(self, ctx: impl fmt::Display) -> Self {
+        Self { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Self::msg(e.to_string())
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(..)` for `Result` and `Option`,
+/// mirroring anyhow's trait of the same name.
+pub trait Context<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Build an [`Error`](crate::util::err::Error) from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($t:tt)*) => {
+        $crate::util::err::Error::msg(format!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`](crate::util::err::Error).
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::util::err::Error::msg(format!($($t)*)))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        Err(crate::anyhow!("value {} too big", 7))
+    }
+
+    #[test]
+    fn macro_formats() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "value 7 too big");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                crate::bail!("negative: {x}");
+            }
+            Ok(x)
+        }
+        assert!(f(1).is_ok());
+        assert!(f(-1).unwrap_err().to_string().contains("negative"));
+    }
+
+    #[test]
+    fn context_layers_on_result() {
+        let base: std::result::Result<(), String> = Err("inner".into());
+        let e = base.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+
+    #[test]
+    fn context_on_option() {
+        let n: Option<u8> = None;
+        let e = n.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+    }
+}

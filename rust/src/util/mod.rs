@@ -6,6 +6,7 @@
 //! equivalents used by `benches/*` and the test suites.
 
 pub mod bench;
+pub mod err;
 pub mod prop;
 pub mod rng;
 pub mod stats;
@@ -28,5 +29,51 @@ pub fn enable_flush_to_zero() {
         use std::arch::x86_64::{_mm_getcsr, _mm_setcsr};
         // bit 15 = FTZ, bit 6 = DAZ
         _mm_setcsr(_mm_getcsr() | (1 << 15) | (1 << 6));
+    }
+}
+
+/// Scoped variant of [`enable_flush_to_zero`]: FTZ/DAZ hold for the
+/// guard's lifetime and the caller's previous MXCSR is restored on
+/// drop (no-op off x86_64).  Used where a *non-worker* thread runs
+/// numeric task bodies (the runtime's submitter help loop) so the
+/// pool does not permanently alter an embedder thread's FP
+/// environment.
+pub struct FtzGuard {
+    #[cfg(target_arch = "x86_64")]
+    saved: u32,
+}
+
+impl FtzGuard {
+    pub fn new() -> Self {
+        #[cfg(target_arch = "x86_64")]
+        {
+            #[allow(deprecated)]
+            unsafe {
+                use std::arch::x86_64::{_mm_getcsr, _mm_setcsr};
+                let saved = _mm_getcsr();
+                _mm_setcsr(saved | (1 << 15) | (1 << 6));
+                return Self { saved };
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            Self {}
+        }
+    }
+}
+
+impl Default for FtzGuard {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for FtzGuard {
+    fn drop(&mut self) {
+        #[cfg(target_arch = "x86_64")]
+        #[allow(deprecated)]
+        unsafe {
+            std::arch::x86_64::_mm_setcsr(self.saved);
+        }
     }
 }

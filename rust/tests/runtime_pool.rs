@@ -1,0 +1,112 @@
+//! Regression contract for the persistent worker runtime: workers are
+//! spawned exactly once per runtime lifetime — repeated `parallel_for`
+//! calls, sweeps, and multirank timesteps must never respawn threads —
+//! and the scheduling metrics (per-worker utilization, steal counts,
+//! spawn overhead) stay observable through the whole stack.
+
+use mmstencil::coordinator::driver::{multirank_sweep, sweep, Driver};
+use mmstencil::coordinator::exchange::Backend;
+use mmstencil::coordinator::tiles::Strategy;
+use mmstencil::coordinator::{pool, runtime};
+use mmstencil::grid::{CartDecomp, Grid3};
+use mmstencil::simulator::Platform;
+use mmstencil::stencil::{naive, StencilSpec};
+use mmstencil::util::prop::assert_allclose;
+
+#[test]
+fn global_pool_spawns_workers_exactly_once() {
+    let rt = runtime::global();
+    let spawned = rt.spawn_count();
+    assert!(spawned >= 1);
+    assert_eq!(spawned, rt.workers());
+
+    // many parallel_for dispatches of varying shapes
+    for n in [1usize, 2, 7, 64, 513] {
+        for _ in 0..10 {
+            pool::parallel_for(4, n, |_| {});
+        }
+    }
+    assert_eq!(rt.spawn_count(), spawned, "parallel_for respawned workers");
+
+    // full sweeps and multirank timesteps ride the same pool
+    let p = Platform::paper();
+    let spec = StencilSpec::star3d(2);
+    let g = Grid3::random(12, 24, 24, 3);
+    let want = naive::apply3(&spec, &g);
+    for _ in 0..3 {
+        let (got, stats) = sweep(&spec, &g, 4, Strategy::SnoopAware, &p);
+        assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
+        assert_eq!(stats.pool.workers, rt.workers());
+    }
+    let d = CartDecomp::new(1, 2, 2);
+    for _ in 0..3 {
+        let (got, stats) = multirank_sweep(&spec, &g, &d, &Backend::sdma(), 1, 4, &p);
+        assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
+        assert!(stats.pool.tasks > 0, "steps must run through the pool");
+    }
+    assert_eq!(
+        rt.spawn_count(),
+        spawned,
+        "sweeps/timesteps must reuse the persistent workers"
+    );
+}
+
+#[test]
+fn driver_runtime_spawns_once_per_driver_lifetime() {
+    let p = Platform::paper();
+    let driver = Driver::new(2, p);
+    assert_eq!(driver.runtime().spawn_count(), 2);
+    let spec = StencilSpec::box3d(1);
+    let g = Grid3::random(8, 16, 16, 11);
+    let want = naive::apply3(&spec, &g);
+    for _ in 0..8 {
+        let (got, _) = driver.sweep(&spec, &g, Strategy::Square);
+        assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
+    }
+    let d = CartDecomp::new(2, 1, 1);
+    for _ in 0..4 {
+        let (got, _) = driver.multirank_sweep(&spec, &g, &d, &Backend::sdma(), 1);
+        assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
+    }
+    assert_eq!(
+        driver.runtime().spawn_count(),
+        2,
+        "Driver workers are spawned once in Driver::new, never per call"
+    );
+}
+
+#[test]
+fn pool_metrics_account_for_all_dispatched_items() {
+    let driver = Driver::new(3, Platform::paper());
+    let rt = driver.runtime();
+    rt.reset_stats();
+    let spec = StencilSpec::star3d(4);
+    let g = Grid3::random(10, 40, 40, 7);
+    let (_, stats) = driver.sweep(&spec, &g, Strategy::SnoopAware);
+    // the sweep dispatched one task per tile (3 tiles for 3 threads)
+    assert_eq!(stats.pool.tasks, 3);
+    let s = rt.stats();
+    assert_eq!(s.jobs, 1);
+    assert_eq!(s.items, 3);
+    assert!(s.spawn_overhead_s >= 0.0);
+    assert!(stats.pool.utilization >= 0.0 && stats.pool.utilization <= 1.0);
+}
+
+#[test]
+fn overlapped_step_equals_barriered_reference() {
+    // the SDMA overlap schedule (comm concurrent with deep interior,
+    // boundary ordered after) must be numerically identical to the
+    // fully-barriered MPI schedule and to the naive oracle
+    let p = Platform::paper();
+    let spec = StencilSpec::box3d(2);
+    let g = Grid3::random(14, 14, 14, 21);
+    let mut want = g.clone();
+    for _ in 0..2 {
+        want = naive::apply3(&spec, &want);
+    }
+    let d = CartDecomp::new(2, 2, 1);
+    let (sdma, _) = multirank_sweep(&spec, &g, &d, &Backend::sdma(), 2, 4, &p);
+    let (mpi, _) = multirank_sweep(&spec, &g, &d, &Backend::mpi(), 2, 4, &p);
+    assert_allclose(&sdma.data, &want.data, 1e-3, 1e-4);
+    assert_eq!(sdma.data, mpi.data, "overlap must not change the numerics");
+}
