@@ -28,9 +28,19 @@ fn main() {
     let p = Platform::paper();
 
     // ---- 1. brick dimension sweep ----------------------------------------
-    println!("ablation 1 — brick dims (3DStarR4 window, on-package port {} B):", p.onpkg_port_bytes());
+    println!(
+        "ablation 1 — brick dims (3DStarR4 window, on-package port {} B):",
+        p.onpkg_port_bytes()
+    );
     let access = BlockAccess::star3d(16, 16, 4, 4);
-    let mut t = Table::new(&["brick (bz,bx,by)", "bytes", "streams", "halo overfetch", "port eff", "score"]);
+    let mut t = Table::new(&[
+        "brick (bz,bx,by)",
+        "bytes",
+        "streams",
+        "halo overfetch",
+        "port eff",
+        "score",
+    ]);
     let mut best: (String, f64) = (String::new(), 0.0);
     let mut paper_score = 0.0;
     for (bz, bx, by) in [(2, 16, 2), (4, 16, 4), (8, 16, 8), (4, 8, 4), (4, 32, 4), (2, 16, 8)] {
@@ -47,7 +57,12 @@ fn main() {
         // dims must divide the block dims (VX=VY=16, VZ=4) so blocks
         // tile bricks exactly
         let vec_eff = (bx as f64 / 16.0).min(1.0);
-        let divides = 16 % bx.min(16) == 0 && 16 % by == 0 && 4 % bz.min(4) == 0 && bx <= 16 && by <= 16 && bz <= 4;
+        let divides = 16 % bx.min(16) == 0
+            && 16 % by == 0
+            && 4 % bz.min(4) == 0
+            && bx <= 16
+            && by <= 16
+            && bz <= 4;
         let score = eff / overfetch * vec_eff * if divides { 1.0 } else { 0.5 };
         if score > best.1 {
             best = (format!("({bz},{bx},{by})"), score);
@@ -162,7 +177,12 @@ fn main() {
     };
     let with_tmp = run(true);
     let in_place = run(false);
-    println!("  LRU misses over {blocks} blocks: temp buffer {with_tmp}, write-to-destination {in_place}");
-    println!("  temp buffer avoids {:.1}% of misses\n", (1.0 - with_tmp as f64 / in_place as f64) * 100.0);
+    println!(
+        "  LRU misses over {blocks} blocks: temp buffer {with_tmp}, write-to-destination {in_place}"
+    );
+    println!(
+        "  temp buffer avoids {:.1}% of misses\n",
+        (1.0 - with_tmp as f64 / in_place as f64) * 100.0
+    );
     assert!(with_tmp < in_place, "temp buffer must reduce cache misses");
 }

@@ -41,9 +41,18 @@ fn main() {
             assert!(want.max_abs_diff(&simd::apply3(&spec, &g)) < 1e-3);
             assert!(want.max_abs_diff(&matrix_unit::apply3(&spec, &g, dims).0) < 1e-3);
             (
-                bench_auto("naive", 0.4, || { std::hint::black_box(naive::apply3(&spec, &g)); }).median_s,
-                bench_auto("simd", 0.4, || { std::hint::black_box(simd::apply3(&spec, &g)); }).median_s,
-                bench_auto("matrix", 0.4, || { std::hint::black_box(matrix_unit::apply3(&spec, &g, dims)); }).median_s,
+                bench_auto("naive", 0.4, || {
+                    std::hint::black_box(naive::apply3(&spec, &g));
+                })
+                .median_s,
+                bench_auto("simd", 0.4, || {
+                    std::hint::black_box(simd::apply3(&spec, &g));
+                })
+                .median_s,
+                bench_auto("matrix", 0.4, || {
+                    std::hint::black_box(matrix_unit::apply3(&spec, &g, dims));
+                })
+                .median_s,
             )
         } else {
             let g = Grid2::random(192, 192, 5);
@@ -51,9 +60,18 @@ fn main() {
             assert!(want.max_abs_diff(&simd::apply2(&spec, &g)) < 1e-3);
             assert!(want.max_abs_diff(&matrix_unit::apply2(&spec, &g, dims).0) < 1e-3);
             (
-                bench_auto("naive", 0.4, || { std::hint::black_box(naive::apply2(&spec, &g)); }).median_s,
-                bench_auto("simd", 0.4, || { std::hint::black_box(simd::apply2(&spec, &g)); }).median_s,
-                bench_auto("matrix", 0.4, || { std::hint::black_box(matrix_unit::apply2(&spec, &g, dims)); }).median_s,
+                bench_auto("naive", 0.4, || {
+                    std::hint::black_box(naive::apply2(&spec, &g));
+                })
+                .median_s,
+                bench_auto("simd", 0.4, || {
+                    std::hint::black_box(simd::apply2(&spec, &g));
+                })
+                .median_s,
+                bench_auto("matrix", 0.4, || {
+                    std::hint::black_box(matrix_unit::apply2(&spec, &g, dims));
+                })
+                .median_s,
             )
         };
 

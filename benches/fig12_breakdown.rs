@@ -28,13 +28,23 @@ fn main() {
     let p = Platform::paper();
     println!("Fig. 12 — Performance Breakdown of MMStencil (512³, f32)\n");
     for mem in [MemKind::Ddr, MemKind::OnPkg] {
-        println!("--- {} ---", if mem == MemKind::Ddr { "DDR memory" } else { "on-package memory" });
-        let mut t = Table::new(&["kernel", "base GStencil/s", "+brick", "+snoop", "+prefetch", "brick gain", "snoop gain", "prefetch gain"]);
+        let mem_name = if mem == MemKind::Ddr { "DDR memory" } else { "on-package memory" };
+        println!("--- {mem_name} ---");
+        let mut t = Table::new(&[
+            "kernel",
+            "base GStencil/s",
+            "+brick",
+            "+snoop",
+            "+prefetch",
+            "brick gain",
+            "snoop gain",
+            "prefetch gain",
+        ]);
         for name in KERNELS {
             let spec = StencilSpec::by_name(name).unwrap();
             let mk = |brick, snoop, prefetch| {
-                predict(&spec, N, Engine::MMStencil, SweepConfig { mem, brick, snoop, prefetch }, &p)
-                    .gstencils_per_s
+                let cfg = SweepConfig { mem, brick, snoop, prefetch };
+                predict(&spec, N, Engine::MMStencil, cfg, &p).gstencils_per_s
             };
             let base = mk(false, false, false);
             let b = mk(true, false, false);
@@ -48,10 +58,17 @@ fn main() {
                 format!("{:.2}x", bsp / bs),
             ]);
             // paper-shape assertions
-            assert!(b / base >= bs / b && b / base >= bsp / bs, "{name}: brick must be the biggest step");
+            assert!(
+                b / base >= bs / b && b / base >= bsp / bs,
+                "{name}: brick must be the biggest step"
+            );
             match mem {
                 MemKind::Ddr => {
-                    assert!((1.0..1.45).contains(&(bs / b)), "{name}: DDR snoop gain {:.2}", bs / b);
+                    assert!(
+                        (1.0..1.45).contains(&(bs / b)),
+                        "{name}: DDR snoop gain {:.2}",
+                        bs / b
+                    );
                 }
                 MemKind::OnPkg => {
                     let snoop_gain = bs / b;
@@ -105,5 +122,9 @@ fn main() {
         }
         std::hint::black_box(acc);
     });
-    println!("  rowmajor {:.3} ms   bricked {:.3} ms", r_line.median_s * 1e3, b_line.median_s * 1e3);
+    println!(
+        "  rowmajor {:.3} ms   bricked {:.3} ms",
+        r_line.median_s * 1e3,
+        b_line.median_s * 1e3
+    );
 }

@@ -35,7 +35,12 @@ fn a100_time(cells: usize) -> f64 {
 }
 
 /// Simulated per-step times (mpi, sdma, pipelined) for a decomposition.
-fn sim(spec: &StencilSpec, d: &CartDecomp, global_edge: (usize, usize, usize), p: &Platform) -> (f64, f64, f64) {
+fn sim(
+    spec: &StencilSpec,
+    d: &CartDecomp,
+    global_edge: (usize, usize, usize),
+    p: &Platform,
+) -> (f64, f64, f64) {
     let (gz, gx, gy) = global_edge;
     let rank_cells = gz * gx * gy / d.ranks();
     let est = predict(spec, rank_cells, Engine::MMStencil, SweepConfig::best(MemKind::OnPkg), p);
@@ -145,7 +150,14 @@ fn main() {
 
     // ---- STRONG scaling: 512³ global --------------------------------------
     println!("Fig. 13a — strong scaling, 3DStarR4, 512³ global (sim):");
-    let mut t = Table::new(&["ranks", "MPI ms", "SDMA ms", "pipeline ms", "pipe speedup", "A100/BrickLib ms"]);
+    let mut t = Table::new(&[
+        "ranks",
+        "MPI ms",
+        "SDMA ms",
+        "pipeline ms",
+        "pipe speedup",
+        "A100/BrickLib ms",
+    ]);
     let base = sim(&spec, &decomp_for(1), (EDGE, EDGE, EDGE), &p).2;
     let mut strong = Vec::new();
     for ranks in [1usize, 2, 4, 8] {
@@ -172,7 +184,14 @@ fn main() {
 
     // ---- WEAK scaling: 512³ per rank ---------------------------------------
     println!("Fig. 13b — weak scaling, 3DStarR4, 512³ per rank (sim):");
-    let mut t = Table::new(&["ranks", "MPI ms", "SDMA ms", "pipeline ms", "efficiency", "vs A100 same domain"]);
+    let mut t = Table::new(&[
+        "ranks",
+        "MPI ms",
+        "SDMA ms",
+        "pipeline ms",
+        "efficiency",
+        "vs A100 same domain",
+    ]);
     let t1 = sim(&spec, &decomp_for(1), (EDGE, EDGE, EDGE), &p).2;
     let mut weak = Vec::new();
     for ranks in [1usize, 2, 4, 8, 16] {

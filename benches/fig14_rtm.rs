@@ -46,7 +46,11 @@ fn main() {
         let (image, rep) = run_shot(&cfg, &p);
         println!(
             "  {medium:?}: fwd {:.2}s bwd {:.2}s, {:.0} Mpoint/s, image energy {:.2e} ({} correlations)",
-            rep.forward_s, rep.backward_s, rep.gpoints_per_s / 1e6, rep.image_energy, image.correlations
+            rep.forward_s,
+            rep.backward_s,
+            rep.gpoints_per_s / 1e6,
+            rep.image_energy,
+            image.correlations
         );
         assert!(rep.energy_trace.iter().all(|e| e.is_finite()), "{medium:?} unstable");
         assert!(rep.image_energy > 0.0, "{medium:?}: no image");
@@ -85,7 +89,10 @@ fn main() {
             f(a100 * 1e3, 2),
             format!("{:+.1}%", (mm_u / a100_util - 1.0) * 100.0),
         ]);
-        assert!((speedup / paper_speedup - 1.0).abs() < 0.25, "{medium:?}: speedup {speedup:.2} vs paper {paper_speedup}");
+        assert!(
+            (speedup / paper_speedup - 1.0).abs() < 0.25,
+            "{medium:?}: speedup {speedup:.2} vs paper {paper_speedup}"
+        );
         match medium {
             Medium::Vti => {
                 assert!((0.35..0.70).contains(&mm_u), "VTI util {mm_u:.2} (paper 0.47)");

@@ -32,7 +32,14 @@ fn paper_bound(name: &str) -> &'static str {
 fn main() {
     let p = Platform::paper();
     println!("Table I — Stencil Kernel Benchmarks (simulated platform)\n");
-    let mut t = Table::new(&["Kernel", "Points", "Pattern (model)", "Pattern (paper)", "match", "Tile Size"]);
+    let mut t = Table::new(&[
+        "Kernel",
+        "Points",
+        "Pattern (model)",
+        "Pattern (paper)",
+        "match",
+        "Tile Size",
+    ]);
     let mut matches = 0;
     for (name, spec) in StencilSpec::benchmark_suite() {
         let b = classify(&spec, &p, MemKind::OnPkg);

@@ -34,14 +34,44 @@ fn main() {
     // paper block shapes; run lengths follow from "x most discontinuous"
     // (their X faces are element-strided, Z faces contiguous slabs)
     let rows = [
-        Row { dir: "X", block: "(16, 512,512)", bytes: 16 * 512 * 512 * 4, run_bytes: 64, paper_mpi: 3.62, paper_sdma: 57.9 },
-        Row { dir: "Y", block: "(512, 4, 512)", bytes: 512 * 4 * 512 * 4, run_bytes: 8192, paper_mpi: 5.31, paper_sdma: 144.1 },
-        Row { dir: "Z", block: "(512, 512, 4)", bytes: 512 * 512 * 4 * 4, run_bytes: 512 * 512 * 4 * 4, paper_mpi: 6.98, paper_sdma: 285.1 },
+        Row {
+            dir: "X",
+            block: "(16, 512,512)",
+            bytes: 16 * 512 * 512 * 4,
+            run_bytes: 64,
+            paper_mpi: 3.62,
+            paper_sdma: 57.9,
+        },
+        Row {
+            dir: "Y",
+            block: "(512, 4, 512)",
+            bytes: 512 * 4 * 512 * 4,
+            run_bytes: 8192,
+            paper_mpi: 5.31,
+            paper_sdma: 144.1,
+        },
+        Row {
+            dir: "Z",
+            block: "(512, 512, 4)",
+            bytes: 512 * 512 * 4 * 4,
+            run_bytes: 512 * 512 * 4 * 4,
+            paper_mpi: 6.98,
+            paper_sdma: 285.1,
+        },
     ];
     let sdma = Sdma::default();
     let mpi = MpiModel::default();
     println!("Table II — Halo Area Exchange (512³, 2 ranks on one die)\n");
-    let mut t = Table::new(&["Direction", "Block Shape", "MPI GB/s", "(paper)", "SDMA GB/s", "(paper)", "Speedup", "(paper)"]);
+    let mut t = Table::new(&[
+        "Direction",
+        "Block Shape",
+        "MPI GB/s",
+        "(paper)",
+        "SDMA GB/s",
+        "(paper)",
+        "Speedup",
+        "(paper)",
+    ]);
     for r in &rows {
         let mpi_bw = mpi.bandwidth(r.bytes, r.run_bytes) / 1e9;
         let sdma_bw = sdma.bandwidth(CopyDesc { bytes: r.bytes, run_bytes: r.run_bytes }) / 1e9;
@@ -62,7 +92,8 @@ fn main() {
     // ---- real data path: exchanged halos must be element-exact ----------
     let n = 64;
     let g = Grid3::random(n, n, n, 17);
-    for (ranks, axis_name) in [((1, 2, 1), "x-split"), ((1, 1, 2), "y-split"), ((2, 1, 1), "z-split")] {
+    let splits = [((1, 2, 1), "x-split"), ((1, 1, 2), "y-split"), ((2, 1, 1), "z-split")];
+    for (ranks, axis_name) in splits {
         let d = CartDecomp::new(ranks.0, ranks.1, ranks.2);
         for backend in [Backend::mpi(), Backend::sdma()] {
             let mut grids = exchange::scatter(&g, &d, 4);
@@ -73,10 +104,15 @@ fn main() {
             exchange::fill_halos_from_global(&g, &d, &mut check, false);
             for (a, b) in grids.iter().zip(&check) {
                 // compare only the faces the single-axis exchange covers
-                assert_eq!(a.grid.data.len(), b.grid.data.len());
+                assert_eq!(a.grid.len(), b.grid.len());
             }
-            println!("real {axis_name:8} via {:4}: {} bytes exchanged, sim {:.3} ms, host {:.3} ms",
-                backend.name(), rep.bytes, rep.sim_time_s * 1e3, rep.real_time_s * 1e3);
+            println!(
+                "real {axis_name:8} via {:4}: {} bytes exchanged, sim {:.3} ms, host {:.3} ms",
+                backend.name(),
+                rep.bytes,
+                rep.sim_time_s * 1e3,
+                rep.real_time_s * 1e3
+            );
         }
     }
 }

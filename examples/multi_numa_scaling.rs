@@ -42,7 +42,14 @@ fn main() {
     // ---- strong scaling: fixed 512³ global grid --------------------------
     let global = 512usize * 512 * 512;
     println!("\nSTRONG scaling, 3DStarR4, 512³ global (simulated platform):");
-    let mut t = Table::new(&["ranks", "MPI ms", "SDMA ms", "SDMA+pipe ms", "speedup vs 1", "A100 BrickLib ms"]);
+    let mut t = Table::new(&[
+        "ranks",
+        "MPI ms",
+        "SDMA ms",
+        "SDMA+pipe ms",
+        "speedup vs 1",
+        "A100 BrickLib ms",
+    ]);
     let base = sim_step(&spec, global, 1, &p).0;
     for ranks in [1usize, 2, 4, 8] {
         let (mpi, sdma, pipe) = sim_step(&spec, global, ranks, &p);
@@ -59,7 +66,14 @@ fn main() {
 
     // ---- weak scaling: 512³ per rank --------------------------------------
     println!("\nWEAK scaling, 3DStarR4, 512³ per rank (simulated platform):");
-    let mut t = Table::new(&["ranks", "MPI ms", "SDMA ms", "SDMA+pipe ms", "efficiency", "A100/rank ms"]);
+    let mut t = Table::new(&[
+        "ranks",
+        "MPI ms",
+        "SDMA ms",
+        "SDMA+pipe ms",
+        "efficiency",
+        "A100/rank ms",
+    ]);
     let per_rank = 512usize * 512 * 512;
     let base_pipe = sim_step(&spec, per_rank, 1, &p).2;
     for ranks in [1usize, 2, 4, 8, 16] {
@@ -74,7 +88,9 @@ fn main() {
         ]);
     }
     t.print();
-    println!("\n(paper: SDMA near-ideal to 4 ranks; x-direction comm stalls 8-rank\n strong scaling unless pipelined; ≥1.2–2.1× over BrickLib/A100 weak.)");
+    println!(
+        "\n(paper: SDMA near-ideal to 4 ranks; x-direction comm stalls 8-rank\n strong scaling unless pipelined; ≥1.2–2.1× over BrickLib/A100 weak.)"
+    );
 }
 
 /// Simulated per-step times (MPI, SDMA, SDMA+pipeline) for `ranks`
@@ -83,18 +99,30 @@ fn sim_step(spec: &StencilSpec, global: usize, ranks: usize, p: &Platform) -> (f
     scaled_step(spec, global / ranks, ranks, 512, p)
 }
 
-fn sim_step_weak(spec: &StencilSpec, per_rank: usize, ranks: usize, p: &Platform) -> (f64, f64, f64) {
+fn sim_step_weak(
+    spec: &StencilSpec,
+    per_rank: usize,
+    ranks: usize,
+    p: &Platform,
+) -> (f64, f64, f64) {
     scaled_step(spec, per_rank, ranks, 512, p)
 }
 
 /// Analytic per-step model mirroring `coordinator::driver::multirank_sweep`
 /// accounting at paper scale: per-rank compute from the roofline and face
 /// traffic through the two transport models, pipelined over 8 z-layers.
-fn scaled_step(spec: &StencilSpec, rank_cells: usize, ranks: usize, edge: usize, p: &Platform) -> (f64, f64, f64) {
+fn scaled_step(
+    spec: &StencilSpec,
+    rank_cells: usize,
+    ranks: usize,
+    edge: usize,
+    p: &Platform,
+) -> (f64, f64, f64) {
     use mmstencil::coordinator::pipeline::{equal_layers, step_time, Overlap};
     use mmstencil::simulator::{mpi::MpiModel, sdma::Sdma};
 
-    let est = roofline::predict(spec, rank_cells, Engine::MMStencil, SweepConfig::best(MemKind::OnPkg), p);
+    let cfg = SweepConfig::best(MemKind::OnPkg);
+    let est = roofline::predict(spec, rank_cells, Engine::MMStencil, cfg, p);
     // Cartesian split: count cut planes; each rank exchanges 2 faces per
     // cut axis of edge² cells × radius depth
     let cuts = match ranks {

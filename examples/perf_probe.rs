@@ -14,18 +14,28 @@ fn main() {
     let spec = StencilSpec::star3d(4);
     let work = (n * n * n) as f64;
 
-    let r = bench_auto("naive star3d r4 96^3", 2.0, || { std::hint::black_box(naive::apply3(&spec, &g)); });
+    let r = bench_auto("naive star3d r4 96^3", 2.0, || {
+        std::hint::black_box(naive::apply3(&spec, &g));
+    });
     report(&r, &format!("{:.1} Mcell/s", work / r.median_s / 1e6));
-    let r = bench_auto("simd  star3d r4 96^3", 2.0, || { std::hint::black_box(simd::apply3(&spec, &g)); });
+    let r = bench_auto("simd  star3d r4 96^3", 2.0, || {
+        std::hint::black_box(simd::apply3(&spec, &g));
+    });
     report(&r, &format!("{:.1} Mcell/s", work / r.median_s / 1e6));
     let dims = matrix_unit::BlockDims::default();
-    let r = bench_auto("mxu   star3d r4 96^3", 2.0, || { std::hint::black_box(matrix_unit::apply3(&spec, &g, dims)); });
+    let r = bench_auto("mxu   star3d r4 96^3", 2.0, || {
+        std::hint::black_box(matrix_unit::apply3(&spec, &g, dims));
+    });
     report(&r, &format!("{:.1} Mcell/s", work / r.median_s / 1e6));
 
     let bspec = StencilSpec::box3d(2);
-    let r = bench_auto("simd  box3d r2 96^3", 2.0, || { std::hint::black_box(simd::apply3(&bspec, &g)); });
+    let r = bench_auto("simd  box3d r2 96^3", 2.0, || {
+        std::hint::black_box(simd::apply3(&bspec, &g));
+    });
     report(&r, &format!("{:.1} Mcell/s", work / r.median_s / 1e6));
-    let r = bench_auto("mxu   box3d r2 96^3", 2.0, || { std::hint::black_box(matrix_unit::apply3(&bspec, &g, dims)); });
+    let r = bench_auto("mxu   box3d r2 96^3", 2.0, || {
+        std::hint::black_box(matrix_unit::apply3(&bspec, &g, dims));
+    });
     report(&r, &format!("{:.1} Mcell/s", work / r.median_s / 1e6));
 
     // RTM steps
@@ -43,12 +53,16 @@ fn main() {
     let mut ts = tti::TtiState::zeros(n, n, n);
     ts.inject(48, 48, 48, 1.0);
     let mut tsc = tti::TtiScratch::new(n, n, n);
-    let r = bench_auto("tti step 96^3 (1 thread)", 3.0, || tti::step(&mut ts, &tm, &trig, &w2, &w1, 1, &mut tsc));
+    let r = bench_auto("tti step 96^3 (1 thread)", 3.0, || {
+        tti::step(&mut ts, &tm, &trig, &w2, &w1, 1, &mut tsc)
+    });
     report(&r, &format!("{:.1} Mcell/s", work / r.median_s / 1e6));
 
     // d2_axis per-axis breakdown
     for axis in 0..3 {
-        let r = bench_auto(&format!("d2_axis axis={axis} 96^3"), 1.5, || { std::hint::black_box(vti::d2_axis(&g, &w2, axis, 1)); });
+        let r = bench_auto(&format!("d2_axis axis={axis} 96^3"), 1.5, || {
+            std::hint::black_box(vti::d2_axis(&g, &w2, axis, 1));
+        });
         report(&r, &format!("{:.1} Mcell/s", work / r.median_s / 1e6));
     }
 }

@@ -31,7 +31,8 @@ fn main() -> Result<()> {
         .clone();
     let ishape = meta.inputs[0].shape.clone(); // (VZ+2r, VX+2r, VY+2r)
     let halo = Grid3::random(ishape[0], ishape[1], ishape[2], 1);
-    let out = rt.execute("star3d_r4_block", &[Tensor::new(ishape.clone(), halo.data.clone())])?;
+    let feed = Tensor::new(ishape.clone(), halo.as_slice().to_vec());
+    let out = rt.execute("star3d_r4_block", &[feed])?;
 
     // the rust-native oracle: periodic sweep on the halo cube, cropped
     let r = spec.radius;

@@ -37,10 +37,18 @@ fn main() -> Result<()> {
         vti::step(&mut st, &m, &w2, 1, &mut sc);
     }
     let shape = vec![n, n, n];
-    let t = |g: &Grid3| Tensor::new(shape.clone(), g.data.clone());
+    let t = |g: &Grid3| Tensor::new(shape.clone(), g.as_slice().to_vec());
     let outs = rt.execute(
         "rtm_vti_r4_grid64",
-        &[t(&st.sh), t(&st.sv), t(&st.sh_prev), t(&st.sv_prev), t(&m.vp2dt2), t(&m.eps), t(&m.delta)],
+        &[
+            t(&st.sh),
+            t(&st.sv),
+            t(&st.sh_prev),
+            t(&st.sv_prev),
+            t(&m.vp2dt2),
+            t(&m.eps),
+            t(&m.delta),
+        ],
     )?;
     let mut rust_next = vti::VtiState {
         sh: st.sh.clone(),
@@ -49,8 +57,8 @@ fn main() -> Result<()> {
         sv_prev: st.sv_prev.clone(),
     };
     vti::step(&mut rust_next, &m, &w2, 1, &mut sc);
-    let err_h = max_err(&outs[0].data, &rust_next.sh.data);
-    let err_v = max_err(&outs[1].data, &rust_next.sv.data);
+    let err_h = max_err(&outs[0].data, rust_next.sh.as_slice());
+    let err_v = max_err(&outs[1].data, rust_next.sv.as_slice());
     println!("L3-rust vs L1/L2-PJRT one VTI step @64³: max|Δ| sh={err_h:.2e} sv={err_v:.2e}");
     assert!(err_h < 1e-3 && err_v < 1e-3, "rust/JAX physics mismatch");
 

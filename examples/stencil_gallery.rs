@@ -45,7 +45,7 @@ fn main() {
                 want.max_abs_diff(&simd_out),
                 want.max_abs_diff(&mm_out),
                 counts,
-                g.data.len(),
+                g.len(),
             )
         };
         assert!(agree_simd < 1e-3 && agree_mm < 1e-3, "{name}: engines disagree");
@@ -53,13 +53,17 @@ fn main() {
         // PJRT block artifact check (block kernels exist for all eight)
         let art = artifact_name(name);
         let pjrt = match &rt {
-            Some(rt) => check_block(rt, &art, &spec).map(|e| format!("{e:.1e}")).unwrap_or("-".into()),
+            Some(rt) => check_block(rt, &art, &spec)
+                .map(|e| format!("{e:.1e}"))
+                .unwrap_or("-".into()),
             None => "-".into(),
         };
 
         let n512 = if spec.ndim == 3 { 512usize.pow(3) } else { 8192usize.pow(2) };
-        let mm = roofline::predict(&spec, n512, Engine::MMStencil, roofline::engine_cfg(Engine::MMStencil, MemKind::OnPkg), &p);
-        let sd = roofline::predict(&spec, n512, Engine::Simd, roofline::engine_cfg(Engine::Simd, MemKind::OnPkg), &p);
+        let mm_cfg = roofline::engine_cfg(Engine::MMStencil, MemKind::OnPkg);
+        let mm = roofline::predict(&spec, n512, Engine::MMStencil, mm_cfg, &p);
+        let sd_cfg = roofline::engine_cfg(Engine::Simd, MemKind::OnPkg);
+        let sd = roofline::predict(&spec, n512, Engine::Simd, sd_cfg, &p);
         t.row(&[
             name.to_string(),
             spec.points().to_string(),
@@ -73,7 +77,9 @@ fn main() {
         ]);
     }
     t.print();
-    println!("\n(sim columns are the paper-platform projection; Fig. 11 shape:\n SIMD wins 3DStarR2, MMStencil wins high-order, box gains biggest.)");
+    println!(
+        "\n(sim columns are the paper-platform projection; Fig. 11 shape:\n SIMD wins 3DStarR2, MMStencil wins high-order, box gains biggest.)"
+    );
 }
 
 fn artifact_name(kernel: &str) -> String {
@@ -92,21 +98,22 @@ fn check_block(rt: &Runtime, art: &str, spec: &StencilSpec) -> Option<f32> {
     let r = spec.radius;
     let out = if spec.ndim == 3 {
         let halo = Grid3::random(ishape[0], ishape[1], ishape[2], 3);
-        let got = rt.execute(art, &[Tensor::new(ishape.clone(), halo.data.clone())]).ok()?;
+        let got = rt.execute(art, &[Tensor::new(ishape.clone(), halo.as_slice().to_vec())]).ok()?;
         let oracle = naive::apply3(spec, &halo);
         let (oz, ox, oy) = (ishape[0] - 2 * r, ishape[1] - 2 * r, ishape[2] - 2 * r);
         let mut err = 0.0f32;
         for z in 0..oz {
             for x in 0..ox {
                 for y in 0..oy {
-                    err = err.max((oracle.get(z + r, x + r, y + r) - got[0].data[(z * ox + x) * oy + y]).abs());
+                    let want = oracle.get(z + r, x + r, y + r);
+                    err = err.max((want - got[0].data[(z * ox + x) * oy + y]).abs());
                 }
             }
         }
         err
     } else {
         let halo = Grid2::random(ishape[0], ishape[1], 3);
-        let got = rt.execute(art, &[Tensor::new(ishape.clone(), halo.data.clone())]).ok()?;
+        let got = rt.execute(art, &[Tensor::new(ishape.clone(), halo.as_slice().to_vec())]).ok()?;
         let oracle = naive::apply2(spec, &halo);
         let (ox, oy) = (ishape[0] - 2 * r, ishape[1] - 2 * r);
         let mut err = 0.0f32;

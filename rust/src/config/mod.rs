@@ -71,7 +71,10 @@ impl Default for RuntimeSpec {
 impl RuntimeSpec {
     /// Lower to the coordinator's runtime config, resolving `workers = 0`
     /// against the sweep's thread count.
-    pub fn to_runtime_config(&self, sweep_threads: usize) -> crate::coordinator::runtime::RuntimeConfig {
+    pub fn to_runtime_config(
+        &self,
+        sweep_threads: usize,
+    ) -> crate::coordinator::runtime::RuntimeConfig {
         crate::coordinator::runtime::RuntimeConfig {
             workers: if self.workers > 0 { self.workers } else { sweep_threads.max(1) },
             cores_per_numa: self.cores_per_numa.max(1),
@@ -103,7 +106,10 @@ impl Default for ExperimentConfig {
 /// Parse an experiment config from TOML text.
 pub fn from_text(text: &str) -> Result<ExperimentConfig, toml::ParseError> {
     let doc = toml::parse(text)?;
-    let mut cfg = ExperimentConfig { title: doc.str_or("", "title", "experiment").into(), ..Default::default() };
+    let mut cfg = ExperimentConfig {
+        title: doc.str_or("", "title", "experiment").into(),
+        ..Default::default()
+    };
 
     let s = &mut cfg.sweep;
     s.kernel = doc.str_or("sweep", "kernel", &s.kernel.clone()).to_string();

@@ -193,8 +193,14 @@ names = ["a", "b"]
         assert_eq!(doc.usize_or("grid", "nz", 0), 128);
         assert!((doc.float_or("grid", "dx", 0.0) - 10.5).abs() < 1e-12);
         assert!(doc.bool_or("grid", "periodic", false));
-        let dims: Vec<usize> =
-            doc.get("grid", "dims").unwrap().as_array().unwrap().iter().map(|v| v.as_usize().unwrap()).collect();
+        let dims: Vec<usize> = doc
+            .get("grid", "dims")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect();
         assert_eq!(dims, vec![2, 2, 2]);
         assert_eq!(
             doc.get("grid", "names").unwrap().as_array().unwrap()[1].as_str(),

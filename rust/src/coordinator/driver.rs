@@ -20,7 +20,8 @@
 use std::sync::Mutex;
 
 use crate::grid::decomp::CartDecomp;
-use crate::grid::halo::HaloGrid;
+use crate::grid::halo::HaloView;
+use crate::grid::par::ParGrid3;
 use crate::grid::Grid3;
 use crate::simulator::roofline::{self, Engine, MemKind, SweepConfig};
 use crate::simulator::Platform;
@@ -73,20 +74,15 @@ pub struct SweepStats {
     pub pool: PoolSnapshot,
 }
 
-/// Shared-output wrapper: concurrent tasks write disjoint regions, so
-/// mutation through the raw pointer is data-race-free; assert-checked
-/// by `TilePlan::validate` / the box partition tests.
-///
-/// Caveat (inherited from the seed's `SharedOut`/`SendPtr` idiom):
-/// tasks materialize overlapping `&`/`&mut` references to the same
-/// allocation and rely on cell-level disjointness.  That satisfies the
-/// no-data-race requirement but not Rust's strict aliasing model
-/// (Miri's stacked borrows would flag it); the rigorous fix is
-/// `UnsafeCell`-backed grid storage, tracked as a follow-up since it
-/// touches every engine signature.
-struct SharedMut<T>(*mut T);
-unsafe impl<T> Sync for SharedMut<T> {}
-unsafe impl<T> Send for SharedMut<T> {}
+// Concurrent output is shared through `grid::par` views, not raw
+// pointers: one `&mut Grid3` becomes a `ParGrid3` of `UnsafeCell`
+// slots, and every task claims an exclusive `TileViewMut` of its
+// disjoint region (`TilePlan::validate` proves the plans statically;
+// debug builds re-check every claim dynamically).  No overlapping
+// `&mut` references ever exist, so the sweeps are clean under Rust's
+// aliasing model — enforced by the CI `miri` job over
+// `rust/tests/aliasing.rs`.  The seed's shared-raw-pointer idiom this
+// replaces satisfied the weaker no-data-race requirement only.
 
 /// A driver owns a dedicated persistent runtime: workers are spawned
 /// once in [`Driver::new`] and reused by every subsequent sweep or
@@ -138,7 +134,16 @@ impl Driver {
         backend: &Backend,
         steps: usize,
     ) -> (Grid3, StepStats) {
-        multirank_sweep_on(&self.rt, spec, global, decomp, backend, steps, self.threads, &self.platform)
+        multirank_sweep_on(
+            &self.rt,
+            spec,
+            global,
+            decomp,
+            backend,
+            steps,
+            self.threads,
+            &self.platform,
+        )
     }
 }
 
@@ -164,18 +169,20 @@ fn sweep_on(
 ) -> (Grid3, SweepStats) {
     assert_eq!(spec.ndim, 3);
     let plan = tiles::plan(strategy, threads.max(1), g.nx, g.ny);
+    // static proof of the disjointness every claim below relies on
+    #[cfg(debug_assertions)]
+    plan.validate();
     let mut out = Grid3::zeros(g.nz, g.nx, g.ny);
     let before = rt.stats();
     let t = Timer::start();
     {
-        let shared = SharedMut(&mut out as *mut Grid3);
-        let shared = &shared;
+        let out_pg = ParGrid3::new(&mut out);
+        let out_pg = &out_pg;
         let tile_list = &plan.tiles;
         rt.run(threads.max(1), tile_list.len(), &|i| {
-            let tl = &tile_list[i];
-            // SAFETY: tiles are disjoint XY regions over all z
-            let out_ref: &mut Grid3 = unsafe { &mut *shared.0 };
-            simd::apply3_region(spec, g, out_ref, 0, g.nz, tl.x0, tl.x1, tl.y0, tl.y1);
+            // exclusive view of this tile's XY region over all z
+            let mut view = tile_list[i].claim(out_pg);
+            simd::apply3_region(spec, g, &mut view);
         });
     }
     let real_s = t.secs();
@@ -351,83 +358,75 @@ fn multirank_sweep_on(
             }
         }
 
-        let grids_ptr = SharedMut(&mut grids as *mut Vec<HaloGrid>);
-        let grids_ptr = &grids_ptr;
-        let tout_ptrs: Vec<SharedMut<Grid3>> =
-            touts.iter_mut().map(|g| SharedMut(g as *mut Grid3)).collect();
-        let tout_ptrs = &tout_ptrs;
-
         let comm_result: Mutex<Option<(exchange::ExchangeReport, f64)>> = Mutex::new(None);
-        let do_comm = || {
-            let ct = Timer::start();
-            // SAFETY: the exchange and the periodic-wrap fill write only
-            // halo-frame cells (and read interior-boundary layers), while
-            // concurrent deep-interior tasks read interior cells and
-            // write their own disjoint output buffers — no cell is
-            // written by one task and touched by another.
-            let grids_mut: &mut Vec<HaloGrid> = unsafe { &mut *grids_ptr.0 };
-            let rep = exchange::exchange(decomp, grids_mut, backend);
-            exchange::fill_halos_from_global(&current, decomp, grids_mut, true);
-            *comm_result.lock().unwrap() = Some((rep, ct.secs()));
-        };
-        let run_region = |task: &RegionTask| {
-            // SAFETY: region tasks of one rank cover disjoint output
-            // boxes; the shared input grid is only read
-            let grids_ref: &Vec<HaloGrid> = unsafe { &*grids_ptr.0 };
-            let out: &mut Grid3 = unsafe { &mut *tout_ptrs[task.rank].0 };
-            simd::apply3_region(
-                spec,
-                &grids_ref[task.rank].grid,
-                out,
-                task.z0,
-                task.z1,
-                task.x0,
-                task.x1,
-                task.y0,
-                task.y1,
-            );
-        };
+        {
+            // cell-level views for the concurrent phase: the comm task
+            // writes halo frames through exclusive claims while region
+            // tasks read interiors through the same views' shared cell
+            // access and write their own claimed tout boxes — no `&mut`
+            // aliasing anywhere (see grid::par)
+            let hviews: Vec<HaloView<'_>> = grids.iter_mut().map(|hg| hg.par_view()).collect();
+            let tout_pgs: Vec<ParGrid3<'_>> = touts.iter_mut().map(ParGrid3::new).collect();
+            let hviews = &hviews;
+            let tout_pgs = &tout_pgs;
 
-        match backend {
-            Backend::Sdma(_) => {
-                // SDMA is non-intrusive: the exchange task and the
-                // deep-interior batch run concurrently on the pool
-                rt.run(threads + 1, deep.len() + 1, &|i| {
-                    if i == 0 {
-                        do_comm();
-                    } else {
-                        run_region(&deep[i - 1]);
-                    }
-                });
+            let do_comm = || {
+                let ct = Timer::start();
+                let rep = exchange::exchange_views(decomp, hviews, backend);
+                exchange::fill_halos_from_global_views(&current, decomp, hviews, true);
+                *comm_result.lock().unwrap() = Some((rep, ct.secs()));
+            };
+            let run_region = |task: &RegionTask| {
+                // exclusive view of this task's output box; the input is
+                // read through the rank's shared halo view
+                let mut view = tout_pgs[task.rank]
+                    .view(task.z0, task.z1, task.x0, task.x1, task.y0, task.y1);
+                simd::apply3_region(spec, &hviews[task.rank].pg, &mut view);
+            };
+
+            match backend {
+                Backend::Sdma(_) => {
+                    // SDMA is non-intrusive: the exchange task and the
+                    // deep-interior batch run concurrently on the pool
+                    rt.run(threads + 1, deep.len() + 1, &|i| {
+                        if i == 0 {
+                            do_comm();
+                        } else {
+                            run_region(&deep[i - 1]);
+                        }
+                    });
+                }
+                Backend::Mpi(_) => {
+                    // MPI's progress engine occupies a core: exchange
+                    // first, then compute (serialized, as the paper
+                    // models it)
+                    do_comm();
+                    rt.run(threads, deep.len(), &|i| run_region(&deep[i]));
+                }
             }
-            Backend::Mpi(_) => {
-                // MPI's progress engine occupies a core: exchange first,
-                // then compute (serialized, as the paper models it)
-                do_comm();
-                rt.run(threads, deep.len(), &|i| run_region(&deep[i]));
-            }
+            // dependency-ordered batch: the boundary shell needs the
+            // halos the exchange just filled
+            rt.run(threads, shell.len(), &|i| run_region(&shell[i]));
         }
-        // dependency-ordered batch: the boundary shell needs the halos
-        // the exchange just filled
-        rt.run(threads, shell.len(), &|i| run_region(&shell[i]));
 
         // assemble the next global grid from the per-rank interiors
-        let mut next = Grid3::zeros(current.nz, current.nx, current.ny);
+        let (gnz, gnx, gny) = current.shape();
+        let mut next = Grid3::zeros(gnz, gnx, gny);
         {
-            let next_ptr = SharedMut(&mut next as *mut Grid3);
-            let next_ptr = &next_ptr;
+            let next_pg = ParGrid3::new(&mut next);
+            let next_pg = &next_pg;
             let touts_ref = &touts;
             rt.run(threads, decomp.ranks(), &|rk| {
-                let b = decomp.block(rk, current.nz, current.nx, current.ny);
+                let b = decomp.block(rk, gnz, gnx, gny);
                 let tg = &touts_ref[rk];
-                // SAFETY: rank blocks partition the global grid
-                let next_mut: &mut Grid3 = unsafe { &mut *next_ptr.0 };
                 let (bz, bx, by) = b.dims();
+                // rank blocks partition the global grid: each task claims
+                // exactly its block
+                let mut view = next_pg.view(b.z0, b.z0 + bz, b.x0, b.x0 + bx, b.y0, b.y0 + by);
                 for z in 0..bz {
                     for x in 0..bx {
                         let src = tg.idx(z + r, x + r, r);
-                        let dst = next_mut.idx(b.z0 + z, b.x0 + x, b.y0);
-                        next_mut.data[dst..dst + by].copy_from_slice(&tg.data[src..src + by]);
+                        view.copy_row_from(b.z0 + z, b.x0 + x, b.y0, &tg.as_slice()[src..src + by]);
                     }
                 }
             });
@@ -502,8 +501,7 @@ mod tests {
         let want = naive::apply3(&spec, &g);
         let p = Platform::paper();
         let d = CartDecomp::new(2, 2, 2);
-        let (got, stats) =
-            multirank_sweep(&spec, &g, &d, &Backend::sdma(), 1, 4, &p);
+        let (got, stats) = multirank_sweep(&spec, &g, &d, &Backend::sdma(), 1, 4, &p);
         assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
         assert!(stats.exchanged_bytes > 0);
         assert!(stats.real_comm_s >= 0.0);

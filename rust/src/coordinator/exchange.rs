@@ -8,9 +8,17 @@
 //!   channels, non-intrusive (overlaps with compute);
 //! * `Mpi`  — the lock-serialized MPI runtime: per-message overhead,
 //!   single-stream copies, pack penalty for strided faces.
+//!
+//! The exchange operates on [`HaloView`]s: every halo write claims the
+//! target frame box as an exclusive `TileViewMut`, so the SDMA variant
+//! can run as a pool task concurrently with compute tasks that read the
+//! same storage through the views' shared cell access — without any
+//! `&mut` aliasing (see `grid::par`).  The `&mut [HaloGrid]` entry
+//! points below are serial conveniences that open views internally.
 
 use crate::grid::decomp::CartDecomp;
-use crate::grid::halo::{Axis, HaloGrid, Side};
+use crate::grid::halo::{Axis, HaloGrid, HaloView, Side};
+use crate::grid::Grid3;
 use crate::simulator::mpi::MpiModel;
 use crate::simulator::sdma::{CopyDesc, Sdma};
 
@@ -52,17 +60,33 @@ pub struct ExchangeReport {
 /// Contiguous run length (bytes) of a packed face in the (z,x,y) layout:
 /// Z faces are fully contiguous slabs, X faces are (h·ny)-element runs,
 /// Y faces are h-element runs (the strided worst case).
-pub fn face_run_bytes(g: &HaloGrid, axis: Axis) -> u64 {
+fn run_bytes(h: usize, nx: usize, ny: usize, axis: Axis) -> u64 {
     match axis {
-        Axis::Z => (g.h * g.nx * g.ny * 4) as u64,
-        Axis::X => (g.h * g.ny * 4) as u64,
-        Axis::Y => (g.h * 4) as u64,
+        Axis::Z => (h * nx * ny * 4) as u64,
+        Axis::X => (h * ny * 4) as u64,
+        Axis::Y => (h * 4) as u64,
     }
+}
+
+/// [`run_bytes`] for an owned halo grid.
+pub fn face_run_bytes(g: &HaloGrid, axis: Axis) -> u64 {
+    run_bytes(g.h, g.nx, g.ny, axis)
 }
 
 /// Exchange all interior faces of `grids` (one per rank) for one field.
 /// Returns the per-round accounting.
 pub fn exchange(decomp: &CartDecomp, grids: &mut [HaloGrid], backend: &Backend) -> ExchangeReport {
+    let views: Vec<HaloView<'_>> = grids.iter_mut().map(|g| g.par_view()).collect();
+    exchange_views(decomp, &views, backend)
+}
+
+/// View-based interior-face exchange — the form the overlapped step
+/// submits as a pool task while compute proceeds on the same views.
+pub fn exchange_views(
+    decomp: &CartDecomp,
+    grids: &[HaloView<'_>],
+    backend: &Backend,
+) -> ExchangeReport {
     assert_eq!(grids.len(), decomp.ranks());
     let timer = crate::util::Timer::start();
     let mut report = ExchangeReport::default();
@@ -85,7 +109,7 @@ pub fn exchange(decomp: &CartDecomp, grids: &mut [HaloGrid], backend: &Backend) 
         let to_nb = grids[rank].pack_face(axis, Side::High);
         let to_rank = grids[nb].pack_face(axis, Side::Low);
         let bytes = (to_nb.len() + to_rank.len()) as u64 * 4;
-        let run = face_run_bytes(&grids[rank], axis);
+        let run = run_bytes(grids[rank].h, grids[rank].nx, grids[rank].ny, axis);
         grids[nb].unpack_halo(axis, Side::Low, &to_nb);
         grids[rank].unpack_halo(axis, Side::High, &to_rank);
         report.bytes += bytes;
@@ -111,7 +135,7 @@ pub fn exchange(decomp: &CartDecomp, grids: &mut [HaloGrid], backend: &Backend) 
 
 /// Build rank subdomain grids from a global periodic grid, interiors
 /// filled, halos zero (to be exchanged / wrap-filled).
-pub fn scatter(global: &crate::grid::Grid3, decomp: &CartDecomp, h: usize) -> Vec<HaloGrid> {
+pub fn scatter(global: &Grid3, decomp: &CartDecomp, h: usize) -> Vec<HaloGrid> {
     (0..decomp.ranks())
         .map(|r| {
             let b = decomp.block(r, global.nz, global.nx, global.ny);
@@ -129,44 +153,50 @@ pub fn scatter(global: &crate::grid::Grid3, decomp: &CartDecomp, h: usize) -> Ve
 /// global grid — the oracle the exchange is checked against, and the
 /// filler for the periodic outer boundary after an interior exchange.
 pub fn fill_halos_from_global(
-    global: &crate::grid::Grid3,
+    global: &Grid3,
     decomp: &CartDecomp,
     grids: &mut [HaloGrid],
     only_boundary: bool,
 ) {
+    let views: Vec<HaloView<'_>> = grids.iter_mut().map(|g| g.par_view()).collect();
+    fill_halos_from_global_views(global, decomp, &views, only_boundary);
+}
+
+/// View-based variant of [`fill_halos_from_global`]: each halo-frame
+/// box is claimed as an exclusive view before writing, so the wrap fill
+/// can run inside the overlapped comm task.
+pub fn fill_halos_from_global_views(
+    global: &Grid3,
+    decomp: &CartDecomp,
+    grids: &[HaloView<'_>],
+    only_boundary: bool,
+) {
     for r in 0..decomp.ranks() {
         let b = decomp.block(r, global.nz, global.nx, global.ny);
-        let g = &mut grids[r];
+        let g = &grids[r];
         let h = g.h as isize;
-        let (snz, snx, sny) = (g.grid.nz, g.grid.nx, g.grid.ny);
-        for z in 0..snz {
-            for x in 0..snx {
-                for y in 0..sny {
-                    let interior = z as isize >= h
-                        && (z as isize) < h + g.nz as isize
-                        && x as isize >= h
-                        && (x as isize) < h + g.nx as isize
-                        && y as isize >= h
-                        && (y as isize) < h + g.ny as isize;
-                    if interior {
-                        continue;
-                    }
-                    let gz = b.z0 as isize + z as isize - h;
-                    let gx = b.x0 as isize + x as isize - h;
-                    let gy = b.y0 as isize + y as isize - h;
-                    if only_boundary {
-                        // skip halos that the interior exchange provides
-                        let inside = gz >= 0
-                            && gz < global.nz as isize
-                            && gx >= 0
-                            && gx < global.nx as isize
-                            && gy >= 0
-                            && gy < global.ny as isize;
-                        if inside {
-                            continue;
+        for frame in g.frame_boxes() {
+            let mut view = g.claim_box(frame);
+            for z in frame[0]..frame[1] {
+                for x in frame[2]..frame[3] {
+                    for y in frame[4]..frame[5] {
+                        let gz = b.z0 as isize + z as isize - h;
+                        let gx = b.x0 as isize + x as isize - h;
+                        let gy = b.y0 as isize + y as isize - h;
+                        if only_boundary {
+                            // skip halos the interior exchange provides
+                            let inside = gz >= 0
+                                && gz < global.nz as isize
+                                && gx >= 0
+                                && gx < global.nx as isize
+                                && gy >= 0
+                                && gy < global.ny as isize;
+                            if inside {
+                                continue;
+                            }
                         }
+                        view.set(z, x, y, global.get_wrap(gz, gx, gy));
                     }
-                    g.grid.set(z, x, y, global.get_wrap(gz, gx, gy));
                 }
             }
         }
@@ -174,8 +204,8 @@ pub fn fill_halos_from_global(
 }
 
 /// Gather rank interiors back into a global grid.
-pub fn gather(decomp: &CartDecomp, grids: &[HaloGrid], nz: usize, nx: usize, ny: usize) -> crate::grid::Grid3 {
-    let mut out = crate::grid::Grid3::zeros(nz, nx, ny);
+pub fn gather(decomp: &CartDecomp, grids: &[HaloGrid], nz: usize, nx: usize, ny: usize) -> Grid3 {
+    let mut out = Grid3::zeros(nz, nx, ny);
     for (r, g) in grids.iter().enumerate() {
         let b = decomp.block(r, nz, nx, ny);
         out.insert_block(b.z0, b.x0, b.y0, g.nz, g.nx, g.ny, &g.interior());

@@ -4,6 +4,12 @@
 //! the SDMA engine exchanges the halos layer `k+1` needs.  Before moving
 //! on, completion of the earlier SDMA task is checked.  MPI cannot
 //! overlap this way (its progress engine occupies a core).
+//!
+//! The real overlapped step in `coordinator::driver` realizes this
+//! scheme with the `grid::par` view model: the prefetching comm task
+//! writes halo frames through exclusive `TileViewMut` claims while the
+//! compute layers read the same storage through shared cell views, so
+//! the concurrency here never materializes aliased `&mut` references.
 
 /// Communication overlap semantics of a transport.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -44,7 +50,11 @@ pub fn step_time(compute_s: &[f64], comm_s: &[f64], overlap: Overlap) -> (f64, f
 }
 
 /// Split a per-step workload into `layers` equal layers.
-pub fn equal_layers(total_compute_s: f64, total_comm_s: f64, layers: usize) -> (Vec<f64>, Vec<f64>) {
+pub fn equal_layers(
+    total_compute_s: f64,
+    total_comm_s: f64,
+    layers: usize,
+) -> (Vec<f64>, Vec<f64>) {
     (
         vec![total_compute_s / layers as f64; layers],
         vec![total_comm_s / layers as f64; layers],

@@ -9,6 +9,7 @@
 //! (adjacency-preserving) assignment, and ragged tails are work-stolen.
 
 use super::runtime;
+use crate::grid::par::ParSlice;
 
 /// Run `task(i)` for every index in `0..n` across the persistent pool.
 /// `threads` is the parallelism hint (chunk granularity); `threads <= 1`
@@ -47,6 +48,51 @@ pub fn parallel_chunks(
     parallel_for(threads, chunks, |i| {
         let (lo, hi) = bounds[i];
         task(i, lo, hi);
+    });
+}
+
+/// Apply `f(offset, chunk)` over disjoint contiguous chunks of `data`
+/// in parallel.  Writes go through [`ParSlice`] claims, so the chunk
+/// disjointness is alias-model-clean and debug-checked (replaces the
+/// seed's raw-pointer chunk writers in the RTM propagators).
+pub fn parallel_mut_chunks(
+    threads: usize,
+    data: &mut [f32],
+    f: impl Fn(usize, &mut [f32]) + Sync,
+) {
+    let n = data.len();
+    if n == 0 {
+        return;
+    }
+    let ps = ParSlice::new(data);
+    let ps = &ps;
+    parallel_chunks(threads, n, (threads.max(1) * 4).min(n), |_, lo, hi| {
+        let mut claim = ps.claim(lo, hi);
+        f(lo, claim.as_mut_slice());
+    });
+}
+
+/// Lockstep variant of [`parallel_mut_chunks`] over two equal-length
+/// slices: `f(offset, chunk_a, chunk_b)` gets the same range of both
+/// (e.g. the TTI H1/H2 operator pair written in one pass).
+pub fn parallel_mut_chunks2(
+    threads: usize,
+    a: &mut [f32],
+    b: &mut [f32],
+    f: impl Fn(usize, &mut [f32], &mut [f32]) + Sync,
+) {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n == 0 {
+        return;
+    }
+    let pa = ParSlice::new(a);
+    let pb = ParSlice::new(b);
+    let (pa, pb) = (&pa, &pb);
+    parallel_chunks(threads, n, (threads.max(1) * 4).min(n), |_, lo, hi| {
+        let mut ca = pa.claim(lo, hi);
+        let mut cb = pb.claim(lo, hi);
+        f(lo, ca.as_mut_slice(), cb.as_mut_slice());
     });
 }
 
@@ -115,6 +161,36 @@ mod tests {
         });
         let par: f64 = partials.iter().sum();
         assert!((serial - par).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mut_chunks_cover_every_element_once() {
+        let mut v = vec![0.0f32; 1003];
+        parallel_mut_chunks(4, &mut v, |off, chunk| {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x += (off + i) as f32;
+            }
+        });
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i as f32);
+        }
+    }
+
+    #[test]
+    fn mut_chunks2_walk_in_lockstep() {
+        let mut a = vec![0.0f32; 257];
+        let mut b = vec![0.0f32; 257];
+        parallel_mut_chunks2(4, &mut a, &mut b, |off, ca, cb| {
+            assert_eq!(ca.len(), cb.len());
+            for i in 0..ca.len() {
+                ca[i] = (off + i) as f32;
+                cb[i] = -(ca[i]);
+            }
+        });
+        for i in 0..257 {
+            assert_eq!(a[i], i as f32);
+            assert_eq!(b[i], -(i as f32));
+        }
     }
 
     #[test]

@@ -152,7 +152,11 @@ impl Shared {
         }
         let w = self.injectors.len();
         for d in 1..w {
-            let victim = if d % 2 == 1 { (worker + d.div_ceil(2)) % w } else { (worker + w - d / 2) % w };
+            let victim = if d % 2 == 1 {
+                (worker + d.div_ceil(2)) % w
+            } else {
+                (worker + w - d / 2) % w
+            };
             if let Some(c) = self.injectors[victim].lock().unwrap().pop_back() {
                 return Some((c, true));
             }
@@ -284,7 +288,12 @@ impl RuntimeStats {
 
     /// Flatten into metric records (`metrics::RunRecord` rows) for the
     /// bench CSV exports.
-    pub fn to_records(&self, experiment: &str, series: &str, wall_s: f64) -> Vec<crate::metrics::RunRecord> {
+    pub fn to_records(
+        &self,
+        experiment: &str,
+        series: &str,
+        wall_s: f64,
+    ) -> Vec<crate::metrics::RunRecord> {
         let mut out = Vec::new();
         for (i, w) in self.workers.iter().enumerate() {
             let label = format!("w{i}@numa{}", w.slot.numa);

@@ -10,6 +10,7 @@
 //!   hold each other's Y-halos in their private caches and the Y term
 //!   drops from the reuse analysis.
 
+use crate::grid::par::{ParGrid3, TileViewMut};
 use crate::simulator::directory::{reuse_ratios, TileSchedule};
 
 /// Tiling strategy.
@@ -32,6 +33,14 @@ pub struct Tile {
 impl Tile {
     pub fn cells_per_layer(&self) -> usize {
         (self.x1 - self.x0) * (self.y1 - self.y0)
+    }
+
+    /// Claim this tile's exclusive output view (all z layers) — the
+    /// typed handoff the sweep gives each runtime task.  Debug builds
+    /// panic if the tile overlaps a live claim (a broken plan); release
+    /// builds rely on [`TilePlan::validate`]'s static proof.
+    pub fn claim<'p>(&self, pg: &'p ParGrid3<'_>) -> TileViewMut<'p> {
+        pg.view(0, pg.nz(), self.x0, self.x1, self.y0, self.y1)
     }
 }
 
@@ -198,6 +207,19 @@ mod tests {
         let sq = plan(Strategy::Square, cores, 512, 512).mean_reuse(16, 4);
         let sn = plan(Strategy::SnoopAware, cores, 512, 512).mean_reuse(16, 4);
         assert!(sn > sq, "snoop {sn:.3} vs square {sq:.3}");
+    }
+
+    #[test]
+    fn plan_tiles_claim_disjoint_views() {
+        // every tile of a valid plan can hold its exclusive view at the
+        // same time — the typed form of TilePlan::validate
+        let mut out = crate::grid::Grid3::zeros(3, 16, 16);
+        let pg = ParGrid3::new(&mut out);
+        let p = plan(Strategy::SnoopAware, 4, 16, 16);
+        let mut views: Vec<_> = p.tiles.iter().map(|t| t.claim(&pg)).collect();
+        for (t, v) in p.tiles.iter().zip(views.iter_mut()) {
+            v.set(0, t.x0, t.y0, 1.0);
+        }
     }
 
     #[test]

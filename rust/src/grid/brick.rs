@@ -123,7 +123,15 @@ impl BrickLayout {
     /// Number of bricks a halo-extended block `(bz..+lz, bx..+lx, by..+ly)`
     /// (in grid coords, may be unaligned) intersects — the brick scheme
     /// loads whole bricks whenever the halo intersects them.
-    pub fn bricks_touched(&self, z0: usize, x0: usize, y0: usize, lz: usize, lx: usize, ly: usize) -> usize {
+    pub fn bricks_touched(
+        &self,
+        z0: usize,
+        x0: usize,
+        y0: usize,
+        lz: usize,
+        lx: usize,
+        ly: usize,
+    ) -> usize {
         let zb = (z0 + lz).div_ceil(self.dims.bz) - z0 / self.dims.bz;
         let xb = (x0 + lx).div_ceil(self.dims.bx) - x0 / self.dims.bx;
         let yb = (y0 + ly).div_ceil(self.dims.by) - y0 / self.dims.by;

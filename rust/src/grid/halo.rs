@@ -4,7 +4,15 @@
 //! of width `h` on every face (allocated `(nz+2h, nx+2h, ny+2h)`).
 //! Face pack/unpack is the data path of the SDMA / MPI halo exchange
 //! (paper §IV-F, Table II).
+//!
+//! Two access modes exist: the owned [`HaloGrid`] (serial `&mut`
+//! callers), and the borrowed [`HaloView`] used by the overlapped
+//! multirank step — shared cell-level reads anywhere plus exclusive
+//! claimed writes of the halo frame, so the exchange task can fill
+//! halos *while* compute tasks read interiors of the same storage
+//! without violating the aliasing model (see `grid::par`).
 
+use super::par::{ParGrid3, TileViewMut};
 use super::Grid3;
 
 /// Axis of a halo face.
@@ -20,6 +28,48 @@ pub enum Axis {
 pub enum Side {
     Low,
     High,
+}
+
+/// Storage-coordinate box `[z0, z1, x0, x1, y0, y1]` of the
+/// *interior-boundary* slab a neighbour on (`axis`, `side`) needs: the
+/// first/last `h` interior layers, full storage extent in the other
+/// axes (incl. their halos — filled or not; the axis-ordered exchange
+/// makes corners correct).
+fn pack_box(nz: usize, nx: usize, ny: usize, h: usize, axis: Axis, side: Side) -> [usize; 6] {
+    let (sz, sx, sy) = (nz + 2 * h, nx + 2 * h, ny + 2 * h);
+    match (axis, side) {
+        (Axis::Z, Side::Low) => [h, 2 * h, 0, sx, 0, sy],
+        (Axis::Z, Side::High) => [nz, nz + h, 0, sx, 0, sy],
+        (Axis::X, Side::Low) => [0, sz, h, 2 * h, 0, sy],
+        (Axis::X, Side::High) => [0, sz, nx, nx + h, 0, sy],
+        (Axis::Y, Side::Low) => [0, sz, 0, sx, h, 2 * h],
+        (Axis::Y, Side::High) => [0, sz, 0, sx, ny, ny + h],
+    }
+}
+
+/// Storage-coordinate box of the halo frame slab on (`axis`, `side`)
+/// that a received face is unpacked into (mirrors [`pack_box`]).
+fn halo_box(nz: usize, nx: usize, ny: usize, h: usize, axis: Axis, side: Side) -> [usize; 6] {
+    let (sz, sx, sy) = (nz + 2 * h, nx + 2 * h, ny + 2 * h);
+    match (axis, side) {
+        (Axis::Z, Side::Low) => [0, h, 0, sx, 0, sy],
+        (Axis::Z, Side::High) => [nz + h, sz, 0, sx, 0, sy],
+        (Axis::X, Side::Low) => [0, sz, 0, h, 0, sy],
+        (Axis::X, Side::High) => [0, sz, nx + h, sx, 0, sy],
+        (Axis::Y, Side::Low) => [0, sz, 0, sx, 0, h],
+        (Axis::Y, Side::High) => [0, sz, 0, sx, ny + h, sy],
+    }
+}
+
+/// Elements in the face slab on `axis`: `h` deep, full *storage*
+/// cross-section of the other axes.
+fn face_len_of(nz: usize, nx: usize, ny: usize, h: usize, axis: Axis) -> usize {
+    let (sz, sx, sy) = (nz + 2 * h, nx + 2 * h, ny + 2 * h);
+    match axis {
+        Axis::Z => h * sx * sy,
+        Axis::X => sz * h * sy,
+        Axis::Y => sz * sx * h,
+    }
 }
 
 /// A grid with halo storage.
@@ -51,6 +101,19 @@ impl HaloGrid {
         self.grid.set(z + self.h, x + self.h, y + self.h, v);
     }
 
+    /// Open this grid for the overlapped step: cell-level shared reads
+    /// plus claimed exclusive writes (halo unpack / wrap fill), safe to
+    /// use concurrently with compute tasks reading the same storage.
+    pub fn par_view(&mut self) -> HaloView<'_> {
+        HaloView {
+            nz: self.nz,
+            nx: self.nx,
+            ny: self.ny,
+            h: self.h,
+            pg: ParGrid3::new(&mut self.grid),
+        }
+    }
+
     /// Fill the interior from a packed (z,x,y) buffer.
     pub fn fill_interior(&mut self, src: &[f32]) {
         assert_eq!(src.len(), self.nz * self.nx * self.ny);
@@ -80,30 +143,13 @@ impl HaloGrid {
     /// extents let an axis-ordered exchange (Z, X, Y) propagate edge and
     /// corner halos through shared neighbours.
     pub fn face_len(&self, axis: Axis) -> usize {
-        let (sz, sx, sy) = (self.nz + 2 * self.h, self.nx + 2 * self.h, self.ny + 2 * self.h);
-        match axis {
-            Axis::Z => self.h * sx * sy,
-            Axis::X => sz * self.h * sy,
-            Axis::Y => sz * sx * self.h,
-        }
+        face_len_of(self.nz, self.nx, self.ny, self.h, axis)
     }
 
     /// Pack the *interior-boundary* slab that a neighbour on (`axis`,
-    /// `side`) needs for its halo: the first/last `h` interior layers,
-    /// full storage extent in the other axes (incl. their halos — filled
-    /// or not; axis-ordered exchange makes corners correct).
+    /// `side`) needs for its halo (see [`pack_box`]).
     pub fn pack_face(&self, axis: Axis, side: Side) -> Vec<f32> {
-        let h = self.h;
-        let (sz, sx, sy) = (self.nz + 2 * h, self.nx + 2 * h, self.ny + 2 * h);
-        // storage-coordinate ranges
-        let (z0, z1, x0, x1, y0, y1) = match (axis, side) {
-            (Axis::Z, Side::Low) => (h, 2 * h, 0, sx, 0, sy),
-            (Axis::Z, Side::High) => (self.nz, self.nz + h, 0, sx, 0, sy),
-            (Axis::X, Side::Low) => (0, sz, h, 2 * h, 0, sy),
-            (Axis::X, Side::High) => (0, sz, self.nx, self.nx + h, 0, sy),
-            (Axis::Y, Side::Low) => (0, sz, 0, sx, h, 2 * h),
-            (Axis::Y, Side::High) => (0, sz, 0, sx, self.ny, self.ny + h),
-        };
+        let [z0, z1, x0, x1, y0, y1] = pack_box(self.nz, self.nx, self.ny, self.h, axis, side);
         let mut out = Vec::with_capacity((z1 - z0) * (x1 - x0) * (y1 - y0));
         for z in z0..z1 {
             for x in x0..x1 {
@@ -118,30 +164,86 @@ impl HaloGrid {
     /// Unpack a received face slab into the halo on (`axis`, `side`)
     /// (full storage extent in the other axes, mirroring [`pack_face`]).
     pub fn unpack_halo(&mut self, axis: Axis, side: Side, buf: &[f32]) {
-        assert_eq!(buf.len(), self.face_len(axis));
-        let h = self.h;
-        let (sz, sx, sy) = (self.nz + 2 * h, self.nx + 2 * h, self.ny + 2 * h);
-        let (z0, z1, x0, x1, y0, y1) = match (axis, side) {
-            (Axis::Z, Side::Low) => (0, h, 0, sx, 0, sy),
-            (Axis::Z, Side::High) => (self.nz + h, sz, 0, sx, 0, sy),
-            (Axis::X, Side::Low) => (0, sz, 0, h, 0, sy),
-            (Axis::X, Side::High) => (0, sz, self.nx + h, sx, 0, sy),
-            (Axis::Y, Side::Low) => (0, sz, 0, sx, 0, h),
-            (Axis::Y, Side::High) => (0, sz, 0, sx, self.ny + h, sy),
-        };
-        let mut it = buf.iter();
-        for z in z0..z1 {
-            for x in x0..x1 {
-                for y in y0..y1 {
-                    self.grid.set(z, x, y, *it.next().unwrap());
-                }
-            }
-        }
+        self.par_view().unpack_halo(axis, side, buf);
     }
 
     /// Bytes moved by one exchange of this face (both pack directions).
     pub fn face_bytes(&self, axis: Axis) -> usize {
         self.face_len(axis) * 4
+    }
+}
+
+/// Borrowed parallel view of one rank's halo grid for the duration of a
+/// step: geometry by value, storage as a [`ParGrid3`].  The `pg` field
+/// is public so compute tasks can read the interior through it while
+/// the exchange concurrently claims halo-frame boxes for writing.
+pub struct HaloView<'a> {
+    /// Interior dims.
+    pub nz: usize,
+    pub nx: usize,
+    pub ny: usize,
+    /// Halo width.
+    pub h: usize,
+    /// Cell-level storage view, shape (nz+2h, nx+2h, ny+2h).
+    pub pg: ParGrid3<'a>,
+}
+
+impl HaloView<'_> {
+    /// See [`HaloGrid::face_len`].
+    pub fn face_len(&self, axis: Axis) -> usize {
+        face_len_of(self.nz, self.nx, self.ny, self.h, axis)
+    }
+
+    /// See [`HaloGrid::pack_face`] — reads through the shared cell view.
+    pub fn pack_face(&self, axis: Axis, side: Side) -> Vec<f32> {
+        let [z0, z1, x0, x1, y0, y1] = pack_box(self.nz, self.nx, self.ny, self.h, axis, side);
+        let mut out = Vec::with_capacity((z1 - z0) * (x1 - x0) * (y1 - y0));
+        for z in z0..z1 {
+            for x in x0..x1 {
+                for y in y0..y1 {
+                    out.push(self.pg.get(z, x, y));
+                }
+            }
+        }
+        out
+    }
+
+    /// See [`HaloGrid::unpack_halo`] — the halo-frame slab is claimed as
+    /// an exclusive view for the duration of the write, so debug builds
+    /// catch any concurrent writer of the same cells.
+    pub fn unpack_halo(&self, axis: Axis, side: Side, buf: &[f32]) {
+        assert_eq!(buf.len(), self.face_len(axis));
+        let [z0, z1, x0, x1, y0, y1] = halo_box(self.nz, self.nx, self.ny, self.h, axis, side);
+        let mut view = self.pg.view(z0, z1, x0, x1, y0, y1);
+        let mut it = buf.iter();
+        for z in z0..z1 {
+            for x in x0..x1 {
+                for y in y0..y1 {
+                    view.set(z, x, y, *it.next().unwrap());
+                }
+            }
+        }
+    }
+
+    /// The halo frame (storage minus interior) as six disjoint boxes:
+    /// z slabs over the full cross-section, then x slabs over interior
+    /// z, then y slabs over interior z and x.
+    pub(crate) fn frame_boxes(&self) -> [[usize; 6]; 6] {
+        let h = self.h;
+        let (sz, sx, sy) = (self.nz + 2 * h, self.nx + 2 * h, self.ny + 2 * h);
+        [
+            [0, h, 0, sx, 0, sy],
+            [sz - h, sz, 0, sx, 0, sy],
+            [h, sz - h, 0, h, 0, sy],
+            [h, sz - h, sx - h, sx, 0, sy],
+            [h, sz - h, h, sx - h, 0, h],
+            [h, sz - h, h, sx - h, sy - h, sy],
+        ]
+    }
+
+    /// Claim one halo-frame box as an exclusive write view.
+    pub(crate) fn claim_box(&self, b: [usize; 6]) -> TileViewMut<'_> {
+        self.pg.view(b[0], b[1], b[2], b[3], b[4], b[5])
     }
 }
 
@@ -199,11 +301,7 @@ mod tests {
         // a's halo column y = ny (storage y = h + ny) equals b(z, x, 0)
         for z in 0..2 {
             for x in 0..2 {
-                assert_eq!(
-                    a.grid.get(z + h, x + h, h + 4),
-                    b.get(z, x, 0),
-                    "z={z} x={x}"
-                );
+                assert_eq!(a.grid.get(z + h, x + h, h + 4), b.get(z, x, 0), "z={z} x={x}");
                 assert_eq!(b.grid.get(z + h, x + h, 0), a.get(z, x, 3));
             }
         }
@@ -217,6 +315,55 @@ mod tests {
                 let buf = g.pack_face(axis, side);
                 assert_eq!(buf.len(), g.face_len(axis));
                 g.unpack_halo(axis, side, &buf); // must not panic
+            }
+        }
+    }
+
+    #[test]
+    fn view_pack_matches_owned_pack() {
+        let mut g = filled(3, 4, 5, 2);
+        let owned: Vec<Vec<f32>> = [Axis::Z, Axis::X, Axis::Y]
+            .into_iter()
+            .flat_map(|a| [g.pack_face(a, Side::Low), g.pack_face(a, Side::High)])
+            .collect();
+        let v = g.par_view();
+        let viewed: Vec<Vec<f32>> = [Axis::Z, Axis::X, Axis::Y]
+            .into_iter()
+            .flat_map(|a| [v.pack_face(a, Side::Low), v.pack_face(a, Side::High)])
+            .collect();
+        assert_eq!(owned, viewed);
+    }
+
+    #[test]
+    fn frame_boxes_cover_exactly_the_halo_frame() {
+        for (nz, nx, ny, h) in [(3, 4, 5, 2), (2, 2, 2, 1), (4, 4, 4, 0)] {
+            let mut g = HaloGrid::zeros(nz, nx, ny, h);
+            let (sz, sx, sy) = (nz + 2 * h, nx + 2 * h, ny + 2 * h);
+            let mut hits = vec![0u8; sz * sx * sy];
+            let v = g.par_view();
+            for b in v.frame_boxes() {
+                for z in b[0]..b[1] {
+                    for x in b[2]..b[3] {
+                        for y in b[4]..b[5] {
+                            hits[(z * sx + x) * sy + y] += 1;
+                        }
+                    }
+                }
+            }
+            for z in 0..sz {
+                for x in 0..sx {
+                    for y in 0..sy {
+                        let interior = (h..h + nz).contains(&z)
+                            && (h..h + nx).contains(&x)
+                            && (h..h + ny).contains(&y);
+                        let want = u8::from(!interior);
+                        assert_eq!(
+                            hits[(z * sx + x) * sy + y],
+                            want,
+                            "({nz},{nx},{ny}) h={h} at ({z},{x},{y})"
+                        );
+                    }
+                }
             }
         }
     }

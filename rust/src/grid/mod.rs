@@ -7,9 +7,11 @@
 pub mod brick;
 pub mod decomp;
 pub mod halo;
+pub mod par;
 
 pub use brick::BrickLayout;
 pub use decomp::CartDecomp;
+pub use par::{GridSrc, ParGrid3, ParSlice, TileViewMut};
 
 /// Dense 3D grid of f32, row-major `(z, x, y)`, y contiguous.
 #[derive(Clone, Debug, PartialEq)]
@@ -25,7 +27,12 @@ impl Grid3 {
         Self { nz, nx, ny, data: vec![0.0; nz * nx * ny] }
     }
 
-    pub fn from_fn(nz: usize, nx: usize, ny: usize, mut f: impl FnMut(usize, usize, usize) -> f32) -> Self {
+    pub fn from_fn(
+        nz: usize,
+        nx: usize,
+        ny: usize,
+        mut f: impl FnMut(usize, usize, usize) -> f32,
+    ) -> Self {
         let mut g = Self::zeros(nz, nx, ny);
         for z in 0..nz {
             for x in 0..nx {
@@ -83,9 +90,28 @@ impl Grid3 {
         (self.nz, self.nx, self.ny)
     }
 
+    /// Entire storage as a flat `(z, x, y)`-ordered slice.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable flat storage — for *serial* callers; parallel writers go
+    /// through [`par::ParGrid3`] views instead.
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
     /// Extract a sub-block `(z0..z0+bz, x0..x0+bx, y0..y0+by)` with
     /// periodic wrap into a packed buffer (z,x,y order).
-    pub fn extract_wrap(&self, z0: isize, x0: isize, y0: isize, bz: usize, bx: usize, by: usize) -> Vec<f32> {
+    pub fn extract_wrap(
+        &self,
+        z0: isize,
+        x0: isize,
+        y0: isize,
+        bz: usize,
+        bx: usize,
+        by: usize,
+    ) -> Vec<f32> {
         let mut out = Vec::with_capacity(bz * bx * by);
         for dz in 0..bz as isize {
             for dx in 0..bx as isize {
@@ -99,7 +125,16 @@ impl Grid3 {
 
     /// Copy a packed (z,x,y) block into the grid at `(z0, x0, y0)`
     /// (no wrap; caller must stay in bounds).
-    pub fn insert_block(&mut self, z0: usize, x0: usize, y0: usize, bz: usize, bx: usize, by: usize, block: &[f32]) {
+    pub fn insert_block(
+        &mut self,
+        z0: usize,
+        x0: usize,
+        y0: usize,
+        bz: usize,
+        bx: usize,
+        by: usize,
+        block: &[f32],
+    ) {
         assert_eq!(block.len(), bz * bx * by);
         for dz in 0..bz {
             for dx in 0..bx {
@@ -172,6 +207,16 @@ impl Grid2 {
 
     pub fn shape(&self) -> (usize, usize) {
         (self.nx, self.ny)
+    }
+
+    /// Entire storage as a flat `(x, y)`-ordered slice.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable flat storage (serial callers).
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
     }
 
     pub fn max_abs_diff(&self, other: &Self) -> f32 {

@@ -1,0 +1,689 @@
+//! Alias-model-clean shared grid views for disjoint-region parallel
+//! writes (the PR 2 tentpole; see DESIGN.md §8).
+//!
+//! The paper's multi-thread paradigm (§IV-E) hands every core an
+//! exclusive tile of the output grid.  The seed reproduced that with a
+//! shared-raw-pointer idiom: each task re-materialized `&mut Grid3`
+//! from a `*mut` and wrote its tile.  Data-race-free — the tiles
+//! are disjoint — but a violation of Rust's aliasing model: the moment
+//! two tasks hold `&mut` to the same allocation, the provenance of one
+//! of them is dead, and Miri's stacked-borrows checker rejects the whole
+//! sweep.
+//!
+//! This module makes the disjointness a *typed* invariant instead:
+//!
+//! * [`ParGrid3`] converts one `&mut Grid3` into a shared slab of
+//!   [`GridCell`]s (`UnsafeCell<f32>`).  No `&mut` to the storage exists
+//!   afterwards; every write goes through a cell pointer, which the
+//!   aliasing model permits to alias.
+//! * [`TileViewMut`] is an exclusive *claim* on one
+//!   `(z0..z1, x0..x1, y0..y1)` box, handed to exactly one task.  Debug
+//!   builds keep a ledger of live claims and panic on overlap — the
+//!   dynamic counterpart of the static `TilePlan::validate` proof the
+//!   tile planners run.
+//! * [`GridSrc`] abstracts the read side so the stencil engines accept
+//!   either a quiescent `&Grid3` or a `ParGrid3` whose *other* cells are
+//!   being written concurrently (the overlapped halo-exchange step).
+//! * [`ParSlice`]/[`SliceClaim`] are the 1-D flavour backing
+//!   `coordinator::pool::parallel_mut_chunks`.
+//!
+//! With every parallel write path routed through these types, the CI
+//! `miri` job can run the real sweeps (`rust/tests/aliasing.rs`) under
+//! stacked borrows.
+
+use std::cell::UnsafeCell;
+#[cfg(debug_assertions)]
+use std::sync::Mutex;
+
+use super::Grid3;
+
+/// One f32 storage slot writable through a shared reference.
+#[repr(transparent)]
+pub struct GridCell(UnsafeCell<f32>);
+
+// SAFETY: all mutation funnels through `UnsafeCell` pointers handed out
+// by exclusive claims (`TileViewMut` / `SliceClaim`), whose disjointness
+// the planners guarantee statically (`TilePlan::validate`) and debug
+// builds re-check dynamically; concurrent access to *distinct* cells is
+// exactly what `UnsafeCell` exists to permit.
+unsafe impl Sync for GridCell {}
+
+/// Live exclusive claims of one `ParGrid3`/`ParSlice` (debug builds
+/// only): boxes as `[z0, z1, x0, x1, y0, y1]`.
+#[cfg(debug_assertions)]
+#[derive(Default)]
+struct Ledger {
+    next: u64,
+    live: Vec<(u64, [usize; 6])>,
+}
+
+#[cfg(debug_assertions)]
+fn boxes_overlap(a: &[usize; 6], b: &[usize; 6]) -> bool {
+    a[0] < b[1] && b[0] < a[1] && a[2] < b[3] && b[2] < a[3] && a[4] < b[5] && b[4] < a[5]
+}
+
+/// Poison-tolerant lock: a claim-overlap panic must not abort the
+/// process when an unwinding view releases its claim afterwards.
+#[cfg(debug_assertions)]
+fn lock(m: &Mutex<Ledger>) -> std::sync::MutexGuard<'_, Ledger> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+#[cfg(debug_assertions)]
+fn claim_box(claims: &Mutex<Ledger>, what: &str, b: [usize; 6]) -> u64 {
+    let mut led = lock(claims);
+    for (_, other) in &led.live {
+        assert!(
+            !boxes_overlap(&b, other),
+            "overlapping {what}: requested {b:?} intersects live exclusive claim {other:?}"
+        );
+    }
+    led.next += 1;
+    let id = led.next;
+    led.live.push((id, b));
+    id
+}
+
+#[cfg(debug_assertions)]
+fn release_box(claims: &Mutex<Ledger>, id: u64) {
+    let mut led = lock(claims);
+    if let Some(i) = led.live.iter().position(|(c, _)| *c == id) {
+        led.live.swap_remove(i);
+    }
+}
+
+/// A `Grid3` opened for disjoint-region parallel access: shared reads
+/// anywhere, writes only through claimed [`TileViewMut`]s.
+///
+/// Constructed from the one `&mut Grid3` — the unique borrow is traded
+/// for cell-level shared access for the view's lifetime, so no `&mut`
+/// aliases can exist while tasks run.
+pub struct ParGrid3<'g> {
+    nz: usize,
+    nx: usize,
+    ny: usize,
+    cells: &'g [GridCell],
+    #[cfg(debug_assertions)]
+    claims: Mutex<Ledger>,
+}
+
+impl<'g> ParGrid3<'g> {
+    pub fn new(g: &'g mut Grid3) -> Self {
+        let (nz, nx, ny) = g.shape();
+        let data: &'g mut [f32] = &mut g.data;
+        // SAFETY: `GridCell` is `repr(transparent)` over `UnsafeCell<f32>`,
+        // which has the layout of `f32`; the unique borrow we consume
+        // here is the only access path until this `ParGrid3` drops.
+        let cells: &'g [GridCell] = unsafe { &*(data as *mut [f32] as *const [GridCell]) };
+        Self {
+            nz,
+            nx,
+            ny,
+            cells,
+            #[cfg(debug_assertions)]
+            claims: Mutex::new(Ledger::default()),
+        }
+    }
+
+    pub fn nz(&self) -> usize {
+        self.nz
+    }
+
+    pub fn nx(&self) -> usize {
+        self.nx
+    }
+
+    pub fn ny(&self) -> usize {
+        self.ny
+    }
+
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.nz, self.nx, self.ny)
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    #[inline(always)]
+    fn index(&self, z: usize, x: usize, y: usize) -> usize {
+        debug_assert!(z < self.nz && x < self.nx && y < self.ny);
+        (z * self.nx + x) * self.ny + y
+    }
+
+    /// Miri lane only: logical read-vs-claim checking.  The write side
+    /// is always ledger-checked in debug builds; reads are checked only
+    /// under Miri (where grids are tiny) so native debug hot loops stay
+    /// cheap, yet the aliasing suite deterministically catches a read
+    /// that overlaps a live exclusive claim even when the scheduler
+    /// never interleaves the racing accesses.
+    #[cfg(all(miri, debug_assertions))]
+    fn check_read(&self, start: usize, len: usize) {
+        let led = lock(&self.claims);
+        let plane = self.nx * self.ny;
+        for i in start..start + len {
+            let (z, rem) = (i / plane, i % plane);
+            let (x, y) = (rem / self.ny, rem % self.ny);
+            for (_, b) in &led.live {
+                assert!(
+                    !(b[0] <= z && z < b[1] && b[2] <= x && x < b[3] && b[4] <= y && y < b[5]),
+                    "shared read of ({z}, {x}, {y}) intersects live exclusive claim {b:?}"
+                );
+            }
+        }
+    }
+
+    /// Shared read of one cell.  Orchestration invariant (ledger-checked
+    /// for writes in debug builds, for reads under Miri): the cell is
+    /// not concurrently written through a live claim.
+    #[inline(always)]
+    pub fn get(&self, z: usize, x: usize, y: usize) -> f32 {
+        let i = self.index(z, x, y);
+        #[cfg(all(miri, debug_assertions))]
+        self.check_read(i, 1);
+        // SAFETY: reading through the cell pointer; disjointness from
+        // concurrent claimed writes is the caller's schedule invariant.
+        unsafe { *self.cells[i].0.get() }
+    }
+
+    /// Shared read of `len` contiguous values from linear index `start`.
+    /// The span must not intersect a region a live claim is writing.
+    #[inline]
+    pub fn span(&self, start: usize, len: usize) -> &[f32] {
+        #[cfg(all(miri, debug_assertions))]
+        self.check_read(start, len);
+        let cells = &self.cells[start..start + len];
+        // SAFETY: the span is quiescent for the reference's lifetime
+        // (schedule invariant above); layout matches `[f32]`.
+        unsafe { std::slice::from_raw_parts(cells.as_ptr() as *const f32, len) }
+    }
+
+    /// Claim the box `[z0,z1)×[x0,x1)×[y0,y1)` for exclusive writing.
+    ///
+    /// Debug builds panic if the box overlaps any live claim of this
+    /// grid; the claim is released when the view drops.
+    pub fn view(
+        &self,
+        z0: usize,
+        z1: usize,
+        x0: usize,
+        x1: usize,
+        y0: usize,
+        y1: usize,
+    ) -> TileViewMut<'_> {
+        assert!(
+            z0 <= z1 && z1 <= self.nz && x0 <= x1 && x1 <= self.nx && y0 <= y1 && y1 <= self.ny,
+            "view out of bounds: ({z0}..{z1}, {x0}..{x1}, {y0}..{y1}) on {:?}",
+            self.shape()
+        );
+        #[cfg(debug_assertions)]
+        let claim = claim_box(&self.claims, "TileViewMut", [z0, z1, x0, x1, y0, y1]);
+        TileViewMut {
+            cells: self.cells,
+            nz: self.nz,
+            nx: self.nx,
+            ny: self.ny,
+            z0,
+            z1,
+            x0,
+            x1,
+            y0,
+            y1,
+            #[cfg(debug_assertions)]
+            ledger: &self.claims,
+            #[cfg(debug_assertions)]
+            claim,
+        }
+    }
+
+    /// Claim the whole grid as one view (serial engines).
+    pub fn full_view(&self) -> TileViewMut<'_> {
+        self.view(0, self.nz, 0, self.nx, 0, self.ny)
+    }
+}
+
+/// Exclusive write view of one disjoint `(z, x, y)` box of a
+/// [`ParGrid3`].  All coordinates are *absolute* grid coordinates — a
+/// task computes and writes at the same indices the serial engines use.
+pub struct TileViewMut<'a> {
+    cells: &'a [GridCell],
+    nz: usize,
+    nx: usize,
+    ny: usize,
+    z0: usize,
+    z1: usize,
+    x0: usize,
+    x1: usize,
+    y0: usize,
+    y1: usize,
+    #[cfg(debug_assertions)]
+    ledger: &'a Mutex<Ledger>,
+    #[cfg(debug_assertions)]
+    claim: u64,
+}
+
+#[cfg(debug_assertions)]
+impl Drop for TileViewMut<'_> {
+    fn drop(&mut self) {
+        release_box(self.ledger, self.claim);
+    }
+}
+
+impl TileViewMut<'_> {
+    /// The claimed box as `(z0, z1, x0, x1, y0, y1)`.
+    pub fn bounds(&self) -> (usize, usize, usize, usize, usize, usize) {
+        (self.z0, self.z1, self.x0, self.x1, self.y0, self.y1)
+    }
+
+    /// Shape of the *backing grid* (not of the box).
+    pub fn grid_shape(&self) -> (usize, usize, usize) {
+        (self.nz, self.nx, self.ny)
+    }
+
+    #[inline(always)]
+    fn index(&self, z: usize, x: usize, y: usize) -> usize {
+        (z * self.nx + x) * self.ny + y
+    }
+
+    #[inline(always)]
+    fn debug_check_row(&self, z: usize, x: usize, y: usize, len: usize) {
+        debug_assert!(
+            self.z0 <= z
+                && z < self.z1
+                && self.x0 <= x
+                && x < self.x1
+                && self.y0 <= y
+                && y + len <= self.y1,
+            "write outside claimed box: ({z}, {x}, {y}..{}) not in ({}..{}, {}..{}, {}..{})",
+            y + len,
+            self.z0,
+            self.z1,
+            self.x0,
+            self.x1,
+            self.y0,
+            self.y1
+        );
+    }
+
+    /// Write one cell of the claimed box.
+    #[inline(always)]
+    pub fn set(&mut self, z: usize, x: usize, y: usize, v: f32) {
+        self.debug_check_row(z, x, y, 1);
+        // SAFETY: the claim makes this view the only writer of the cell.
+        unsafe { *self.cells[self.index(z, x, y)].0.get() = v }
+    }
+
+    /// Exclusive `[y, y+len)` row segment of `(z, x)` — the contiguous
+    /// unit the vectorized engines accumulate into.
+    #[inline]
+    pub fn row_mut(&mut self, z: usize, x: usize, y: usize, len: usize) -> &mut [f32] {
+        self.debug_check_row(z, x, y, len);
+        let i = self.index(z, x, y);
+        let cells = &self.cells[i..i + len];
+        let ptr = UnsafeCell::raw_get(cells.as_ptr() as *const UnsafeCell<f32>);
+        // SAFETY: the claim covers the whole segment exclusively, so a
+        // unique reference derived through the cells cannot alias any
+        // other live access; layout matches `[f32]`.
+        unsafe { std::slice::from_raw_parts_mut(ptr, len) }
+    }
+
+    /// Copy a packed row into the claimed box at `(z, x, y0)`.
+    pub fn copy_row_from(&mut self, z: usize, x: usize, y: usize, src: &[f32]) {
+        self.row_mut(z, x, y, src.len()).copy_from_slice(src);
+    }
+
+    /// Copy a packed `(z, x, y)` block into the claimed box at
+    /// `(z0, x0, y0)` — the view-side mirror of `Grid3::insert_block`.
+    pub fn insert_block(
+        &mut self,
+        z0: usize,
+        x0: usize,
+        y0: usize,
+        bz: usize,
+        bx: usize,
+        by: usize,
+        block: &[f32],
+    ) {
+        assert_eq!(block.len(), bz * bx * by);
+        for dz in 0..bz {
+            for dx in 0..bx {
+                let src = (dz * bx + dx) * by;
+                self.copy_row_from(z0 + dz, x0 + dx, y0, &block[src..src + by]);
+            }
+        }
+    }
+
+    /// The whole claimed box as one mutable slice.  Requires a box that
+    /// is contiguous in storage, i.e. full x and y extent (z-slabs).
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        assert!(
+            self.x0 == 0 && self.x1 == self.nx && self.y0 == 0 && self.y1 == self.ny,
+            "as_mut_slice needs a contiguous z-slab view (full x/y extent)"
+        );
+        let plane = self.nx * self.ny;
+        let (lo, hi) = (self.z0 * plane, self.z1 * plane);
+        let cells = &self.cells[lo..hi];
+        let ptr = UnsafeCell::raw_get(cells.as_ptr() as *const UnsafeCell<f32>);
+        // SAFETY: as in `row_mut` — the claim covers the slab.
+        unsafe { std::slice::from_raw_parts_mut(ptr, hi - lo) }
+    }
+}
+
+/// Read access the stencil engines accept: either a quiescent `&Grid3`
+/// or a [`ParGrid3`] whose other cells are concurrently written through
+/// claims (the overlapped halo-exchange step reads interiors while the
+/// comm task fills halo frames).
+pub trait GridSrc: Sync {
+    fn shape(&self) -> (usize, usize, usize);
+
+    /// Shared read of `len` contiguous values from linear index `start`.
+    fn span(&self, start: usize, len: usize) -> &[f32];
+
+    fn get(&self, z: usize, x: usize, y: usize) -> f32;
+
+    #[inline]
+    fn idx(&self, z: usize, x: usize, y: usize) -> usize {
+        let (_, nx, ny) = self.shape();
+        (z * nx + x) * ny + y
+    }
+
+    /// Periodic (wrapped) access — matches the jnp.roll oracles.
+    #[inline]
+    fn get_wrap(&self, z: isize, x: isize, y: isize) -> f32 {
+        let (nz, nx, ny) = self.shape();
+        let z = z.rem_euclid(nz as isize) as usize;
+        let x = x.rem_euclid(nx as isize) as usize;
+        let y = y.rem_euclid(ny as isize) as usize;
+        self.get(z, x, y)
+    }
+
+    /// Extract a sub-block with periodic wrap into a packed buffer
+    /// (z, x, y order) — mirror of `Grid3::extract_wrap`.
+    fn extract_wrap(
+        &self,
+        z0: isize,
+        x0: isize,
+        y0: isize,
+        bz: usize,
+        bx: usize,
+        by: usize,
+    ) -> Vec<f32> {
+        let mut out = Vec::with_capacity(bz * bx * by);
+        for dz in 0..bz as isize {
+            for dx in 0..bx as isize {
+                for dy in 0..by as isize {
+                    out.push(self.get_wrap(z0 + dz, x0 + dx, y0 + dy));
+                }
+            }
+        }
+        out
+    }
+}
+
+impl GridSrc for Grid3 {
+    fn shape(&self) -> (usize, usize, usize) {
+        Grid3::shape(self)
+    }
+
+    #[inline]
+    fn span(&self, start: usize, len: usize) -> &[f32] {
+        &self.data[start..start + len]
+    }
+
+    #[inline]
+    fn get(&self, z: usize, x: usize, y: usize) -> f32 {
+        Grid3::get(self, z, x, y)
+    }
+
+    #[inline]
+    fn get_wrap(&self, z: isize, x: isize, y: isize) -> f32 {
+        Grid3::get_wrap(self, z, x, y)
+    }
+
+    fn extract_wrap(
+        &self,
+        z0: isize,
+        x0: isize,
+        y0: isize,
+        bz: usize,
+        bx: usize,
+        by: usize,
+    ) -> Vec<f32> {
+        Grid3::extract_wrap(self, z0, x0, y0, bz, bx, by)
+    }
+}
+
+impl GridSrc for ParGrid3<'_> {
+    fn shape(&self) -> (usize, usize, usize) {
+        ParGrid3::shape(self)
+    }
+
+    #[inline]
+    fn span(&self, start: usize, len: usize) -> &[f32] {
+        ParGrid3::span(self, start, len)
+    }
+
+    #[inline]
+    fn get(&self, z: usize, x: usize, y: usize) -> f32 {
+        ParGrid3::get(self, z, x, y)
+    }
+}
+
+/// 1-D counterpart of [`ParGrid3`]: a `&mut [f32]` opened for disjoint
+/// chunk-parallel writes (backs `pool::parallel_mut_chunks`).
+pub struct ParSlice<'a> {
+    cells: &'a [GridCell],
+    #[cfg(debug_assertions)]
+    claims: Mutex<Ledger>,
+}
+
+impl<'a> ParSlice<'a> {
+    pub fn new(data: &'a mut [f32]) -> Self {
+        // SAFETY: as in `ParGrid3::new` — layout-compatible transparent
+        // wrapper, unique borrow consumed.
+        let cells: &'a [GridCell] = unsafe { &*(data as *mut [f32] as *const [GridCell]) };
+        Self {
+            cells,
+            #[cfg(debug_assertions)]
+            claims: Mutex::new(Ledger::default()),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Claim `[lo, hi)` for exclusive writing; debug builds panic on
+    /// overlap with a live claim.
+    pub fn claim(&self, lo: usize, hi: usize) -> SliceClaim<'_> {
+        assert!(
+            lo <= hi && hi <= self.cells.len(),
+            "claim out of bounds: {lo}..{hi} of {}",
+            self.cells.len()
+        );
+        #[cfg(debug_assertions)]
+        let claim = claim_box(&self.claims, "ParSlice claim", [lo, hi, 0, 1, 0, 1]);
+        SliceClaim {
+            cells: &self.cells[lo..hi],
+            offset: lo,
+            #[cfg(debug_assertions)]
+            ledger: &self.claims,
+            #[cfg(debug_assertions)]
+            claim,
+        }
+    }
+}
+
+/// Exclusive claim on one contiguous chunk of a [`ParSlice`].
+pub struct SliceClaim<'a> {
+    cells: &'a [GridCell],
+    offset: usize,
+    #[cfg(debug_assertions)]
+    ledger: &'a Mutex<Ledger>,
+    #[cfg(debug_assertions)]
+    claim: u64,
+}
+
+#[cfg(debug_assertions)]
+impl Drop for SliceClaim<'_> {
+    fn drop(&mut self) {
+        release_box(self.ledger, self.claim);
+    }
+}
+
+impl SliceClaim<'_> {
+    /// Start of the claimed range in the parent slice.
+    pub fn offset(&self) -> usize {
+        self.offset
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        let ptr = UnsafeCell::raw_get(self.cells.as_ptr() as *const UnsafeCell<f32>);
+        // SAFETY: the claim covers the chunk exclusively (see `row_mut`).
+        unsafe { std::slice::from_raw_parts_mut(ptr, self.cells.len()) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn views_write_through_to_the_grid() {
+        let mut g = Grid3::zeros(2, 3, 4);
+        {
+            let pg = ParGrid3::new(&mut g);
+            let mut a = pg.view(0, 2, 0, 3, 0, 2);
+            let mut b = pg.view(0, 2, 0, 3, 2, 4);
+            a.set(0, 0, 0, 1.0);
+            a.copy_row_from(1, 2, 0, &[2.0, 3.0]);
+            b.set(1, 2, 3, 4.0);
+        }
+        assert_eq!(g.get(0, 0, 0), 1.0);
+        assert_eq!(g.get(1, 2, 0), 2.0);
+        assert_eq!(g.get(1, 2, 1), 3.0);
+        assert_eq!(g.get(1, 2, 3), 4.0);
+    }
+
+    #[test]
+    fn reads_see_prior_writes() {
+        let mut g = Grid3::from_fn(2, 2, 2, |z, x, y| (z * 4 + x * 2 + y) as f32);
+        let pg = ParGrid3::new(&mut g);
+        assert_eq!(pg.get(1, 1, 1), 7.0);
+        assert_eq!(pg.span(0, 4), &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(GridSrc::get_wrap(&pg, -1, 0, 0), 4.0);
+    }
+
+    #[test]
+    fn slab_view_is_contiguous() {
+        let mut g = Grid3::zeros(3, 2, 2);
+        {
+            let pg = ParGrid3::new(&mut g);
+            let mut v = pg.view(1, 2, 0, 2, 0, 2);
+            v.as_mut_slice().fill(5.0);
+        }
+        assert!(g.as_slice()[4..8].iter().all(|&v| v == 5.0));
+        assert!(g.as_slice()[0..4].iter().all(|&v| v == 0.0));
+        assert!(g.as_slice()[8..12].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn par_slice_chunks_write_disjointly() {
+        let mut v = vec![0.0f32; 10];
+        {
+            let ps = ParSlice::new(&mut v);
+            let mut a = ps.claim(0, 5);
+            let mut b = ps.claim(5, 10);
+            a.as_mut_slice().fill(1.0);
+            b.as_mut_slice().fill(2.0);
+            assert_eq!(a.offset(), 0);
+            assert_eq!(b.offset(), 5);
+        }
+        assert_eq!(&v[..5], &[1.0; 5]);
+        assert_eq!(&v[5..], &[2.0; 5]);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "overlapping TileViewMut")]
+    fn overlapping_views_panic_in_debug() {
+        let mut g = Grid3::zeros(4, 4, 4);
+        let pg = ParGrid3::new(&mut g);
+        let _a = pg.view(0, 4, 0, 2, 0, 4);
+        let _b = pg.view(0, 4, 1, 3, 0, 4);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn dropped_view_releases_its_claim() {
+        let mut g = Grid3::zeros(2, 2, 2);
+        let pg = ParGrid3::new(&mut g);
+        {
+            let _a = pg.full_view();
+        }
+        let _b = pg.full_view();
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "overlapping ParSlice claim")]
+    fn overlapping_slice_claims_panic_in_debug() {
+        let mut v = vec![0.0f32; 8];
+        let ps = ParSlice::new(&mut v);
+        let _a = ps.claim(0, 5);
+        let _b = ps.claim(4, 8);
+    }
+
+    #[test]
+    fn empty_views_never_overlap() {
+        let mut g = Grid3::zeros(2, 2, 2);
+        let pg = ParGrid3::new(&mut g);
+        let _a = pg.full_view();
+        let _b = pg.view(0, 0, 0, 2, 0, 2);
+        let _c = pg.view(1, 1, 0, 0, 0, 0);
+    }
+
+    #[test]
+    fn concurrent_disjoint_slab_writes() {
+        let mut g = Grid3::zeros(4, 4, 4);
+        {
+            let pg = ParGrid3::new(&mut g);
+            let pg = &pg;
+            std::thread::scope(|s| {
+                for z in 0..4 {
+                    s.spawn(move || {
+                        let mut v = pg.view(z, z + 1, 0, 4, 0, 4);
+                        for x in 0..4 {
+                            for y in 0..4 {
+                                v.set(z, x, y, (z * 100 + x * 10 + y) as f32);
+                            }
+                        }
+                    });
+                }
+            });
+        }
+        for z in 0..4 {
+            for x in 0..4 {
+                for y in 0..4 {
+                    assert_eq!(g.get(z, x, y), (z * 100 + x * 10 + y) as f32);
+                }
+            }
+        }
+    }
+}

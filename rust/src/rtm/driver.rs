@@ -169,12 +169,12 @@ pub fn run_shot(cfg: &RtmConfig, platform: &Platform) -> (Image, RtmReport) {
 }
 
 fn record_plane(g: &Grid3, z: usize) -> Vec<f32> {
-    g.data[z * g.nx * g.ny..(z + 1) * g.nx * g.ny].to_vec()
+    g.as_slice()[z * g.nx * g.ny..(z + 1) * g.nx * g.ny].to_vec()
 }
 
 fn inject_plane(g: &mut Grid3, z: usize, plane: &[f32]) {
     let off = z * g.nx * g.ny;
-    for (d, &s) in g.data[off..off + plane.len()].iter_mut().zip(plane) {
+    for (d, &s) in g.as_mut_slice()[off..off + plane.len()].iter_mut().zip(plane) {
         *d += s;
     }
 }

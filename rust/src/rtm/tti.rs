@@ -6,7 +6,8 @@
 //! commutative-composition scheme.  Periodic boundaries, axes (Z, X, Y).
 
 use super::media::TtiMedia;
-use super::vti::{d1_axis_into, d2_axis_into, par_mut_chunks};
+use super::vti::{d1_axis_into, d2_axis_into};
+use crate::coordinator::pool;
 use crate::grid::Grid3;
 
 /// Leapfrog time levels of the TTI field pair (p, q).
@@ -93,7 +94,16 @@ pub struct Derivs {
 impl Derivs {
     pub fn new(nz: usize, nx: usize, ny: usize) -> Self {
         let mk = || Grid3::zeros(nz, nx, ny);
-        Self { dxx: mk(), dyy: mk(), dzz: mk(), dxy: mk(), dyz: mk(), dxz: mk(), d1: mk(), d1b: mk() }
+        Self {
+            dxx: mk(),
+            dyy: mk(),
+            dzz: mk(),
+            dxy: mk(),
+            dyz: mk(),
+            dxz: mk(),
+            d1: mk(),
+            d1b: mk(),
+        }
     }
 
     /// Fill all six derivative grids of `f` (mirror of
@@ -112,14 +122,12 @@ impl Derivs {
     }
 
     /// h1 = Σ trig-weighted derivatives; h2 = laplacian − h1; written
-    /// into the two output slices.
+    /// into the two output slices in one lockstep chunk pass.
     pub fn h1h2(&self, trig: &TtiTrig, h1: &mut [f32], h2: &mut [f32], threads: usize) {
         let (dxx, dyy, dzz) = (&self.dxx.data, &self.dyy.data, &self.dzz.data);
         let (dxy, dyz, dxz) = (&self.dxy.data, &self.dyz.data, &self.dxz.data);
-        let h2ptr = SyncSlice(h2.as_mut_ptr());
-        let h2ref = &h2ptr;
-        par_mut_chunks(threads, h1, |off, chunk| {
-            for (i, v) in chunk.iter_mut().enumerate() {
+        pool::parallel_mut_chunks2(threads, h1, h2, |off, c1, c2| {
+            for i in 0..c1.len() {
                 let j = off + i;
                 let a = trig.st2cp2[j] * dxx[j]
                     + trig.st2sp2[j] * dyy[j]
@@ -127,17 +135,12 @@ impl Derivs {
                     + trig.st2s2p[j] * dxy[j]
                     + trig.s2t_sp[j] * dyz[j]
                     + trig.s2t_cp[j] * dxz[j];
-                *v = a;
-                // SAFETY: j indexes are disjoint across chunks
-                unsafe { *h2ref.0.add(j) = dxx[j] + dyy[j] + dzz[j] - a };
+                c1[i] = a;
+                c2[i] = dxx[j] + dyy[j] + dzz[j] - a;
             }
         });
     }
 }
-
-struct SyncSlice(*mut f32);
-unsafe impl Send for SyncSlice {}
-unsafe impl Sync for SyncSlice {}
 
 /// Whole-step scratch: derivative workspaces + the four operator grids.
 pub struct TtiScratch {
@@ -185,7 +188,7 @@ pub fn step(
         (&m.vpx2.data, &m.vpz2.data, &m.vpn2.data, &m.vsz2.data, &m.alpha.data);
     {
         let pp = &mut state.p_prev.data;
-        par_mut_chunks(threads, pp, |off, chunk| {
+        pool::parallel_mut_chunks(threads, pp, |off, chunk| {
             for (i, out) in chunk.iter_mut().enumerate() {
                 let j = off + i;
                 let rhs = vpx2[j] * h2p[j] + alpha[j] * vpz2[j] * h1q[j]
@@ -196,7 +199,7 @@ pub fn step(
     }
     {
         let qp = &mut state.q_prev.data;
-        par_mut_chunks(threads, qp, |off, chunk| {
+        pool::parallel_mut_chunks(threads, qp, |off, chunk| {
             for (i, out) in chunk.iter_mut().enumerate() {
                 let j = off + i;
                 let rhs = (vpn2[j] / alpha[j]) * h2p[j] + vpz2[j] * h1q[j]

@@ -12,9 +12,13 @@
 //! The derivative passes are decomposed into 1D axis stencils — exactly
 //! the §IV-G scheme the block artifacts (`rtm_vti_block.hlo.txt`)
 //! implement — and parallelized over z-slabs with the coordinator pool.
+//! Each slab task claims its output plane as an exclusive
+//! `TileViewMut`, and the pointwise stages run through the pool's
+//! `ParSlice`-backed chunk helpers — no raw-pointer sharing.
 
 use super::media::VtiMedia;
 use crate::coordinator::pool;
+use crate::grid::par::ParGrid3;
 use crate::grid::Grid3;
 
 /// The two leapfrog time levels of both stress components.
@@ -61,13 +65,14 @@ pub fn d2_axis_into(g: &Grid3, w2: &[f32], axis: usize, out: &mut Grid3, threads
     let r = (w2.len() - 1) / 2;
     let (nz, nx, ny) = g.shape();
     let plane = nx * ny;
-    let out_ptr = SendPtr(out.data.as_mut_ptr());
-    let out_ptr = &out_ptr;
+    let pg = ParGrid3::new(out);
+    let pg = &pg;
     match axis {
         0 => {
             // z: per output slab, accumulate whole shifted planes
             pool::parallel_for(threads, nz, |z| {
-                let dst = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(z * plane), plane) };
+                let mut view = pg.view(z, z + 1, 0, nx, 0, ny);
+                let dst = view.as_mut_slice();
                 dst.copy_from_slice(&g.data[z * plane..(z + 1) * plane]);
                 for v in dst.iter_mut() {
                     *v *= w2[r];
@@ -75,7 +80,8 @@ pub fn d2_axis_into(g: &Grid3, w2: &[f32], axis: usize, out: &mut Grid3, threads
                 for k in 1..=r {
                     let zp = (z + k) % nz;
                     let zm = (z + nz - k) % nz;
-                    let (a, b) = (&g.data[zp * plane..(zp + 1) * plane], &g.data[zm * plane..(zm + 1) * plane]);
+                    let a = &g.data[zp * plane..(zp + 1) * plane];
+                    let b = &g.data[zm * plane..(zm + 1) * plane];
                     let w = w2[r + k];
                     for ((d, &p), &m) in dst.iter_mut().zip(a).zip(b) {
                         *d += w * (p + m);
@@ -87,7 +93,8 @@ pub fn d2_axis_into(g: &Grid3, w2: &[f32], axis: usize, out: &mut Grid3, threads
             // x: per z-slab, accumulate shifted y-rows
             pool::parallel_for(threads, nz, |z| {
                 let base = z * plane;
-                let dst = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(base), plane) };
+                let mut view = pg.view(z, z + 1, 0, nx, 0, ny);
+                let dst = view.as_mut_slice();
                 for x in 0..nx {
                     let row = &mut dst[x * ny..(x + 1) * ny];
                     let src = &g.data[base + x * ny..base + (x + 1) * ny];
@@ -112,7 +119,8 @@ pub fn d2_axis_into(g: &Grid3, w2: &[f32], axis: usize, out: &mut Grid3, threads
             // wrapped scalar edges
             pool::parallel_for(threads, nz, |z| {
                 let base = z * plane;
-                let dst = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(base), plane) };
+                let mut view = pg.view(z, z + 1, 0, nx, 0, ny);
+                let dst = view.as_mut_slice();
                 for x in 0..nx {
                     let row = &mut dst[x * ny..(x + 1) * ny];
                     let src = &g.data[base + x * ny..base + (x + 1) * ny];
@@ -167,17 +175,19 @@ pub fn d1_axis_into(g: &Grid3, w1: &[f32], axis: usize, out: &mut Grid3, threads
     let r = (w1.len() - 1) / 2;
     let (nz, nx, ny) = g.shape();
     let plane = nx * ny;
-    let out_ptr = SendPtr(out.data.as_mut_ptr());
-    let out_ptr = &out_ptr;
+    let pg = ParGrid3::new(out);
+    let pg = &pg;
     match axis {
         0 => {
             pool::parallel_for(threads, nz, |z| {
-                let dst = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(z * plane), plane) };
+                let mut view = pg.view(z, z + 1, 0, nx, 0, ny);
+                let dst = view.as_mut_slice();
                 dst.fill(0.0);
                 for k in 1..=r {
                     let zp = (z + k) % nz;
                     let zm = (z + nz - k) % nz;
-                    let (a, b) = (&g.data[zp * plane..(zp + 1) * plane], &g.data[zm * plane..(zm + 1) * plane]);
+                    let a = &g.data[zp * plane..(zp + 1) * plane];
+                    let b = &g.data[zm * plane..(zm + 1) * plane];
                     let w = w1[r + k];
                     for ((d, &p), &m) in dst.iter_mut().zip(a).zip(b) {
                         *d += w * (p - m);
@@ -188,7 +198,8 @@ pub fn d1_axis_into(g: &Grid3, w1: &[f32], axis: usize, out: &mut Grid3, threads
         1 => {
             pool::parallel_for(threads, nz, |z| {
                 let base = z * plane;
-                let dst = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(base), plane) };
+                let mut view = pg.view(z, z + 1, 0, nx, 0, ny);
+                let dst = view.as_mut_slice();
                 for x in 0..nx {
                     let row = &mut dst[x * ny..(x + 1) * ny];
                     row.fill(0.0);
@@ -208,7 +219,8 @@ pub fn d1_axis_into(g: &Grid3, w1: &[f32], axis: usize, out: &mut Grid3, threads
         2 => {
             pool::parallel_for(threads, nz, |z| {
                 let base = z * plane;
-                let dst = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(base), plane) };
+                let mut view = pg.view(z, z + 1, 0, nx, 0, ny);
+                let dst = view.as_mut_slice();
                 for x in 0..nx {
                     let row = &mut dst[x * ny..(x + 1) * ny];
                     let src = &g.data[base + x * ny..base + (x + 1) * ny];
@@ -245,29 +257,6 @@ pub fn d1_axis_into(g: &Grid3, w1: &[f32], axis: usize, out: &mut Grid3, threads
     }
 }
 
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
-
-/// Apply `f(offset, chunk)` over disjoint chunks of `data` in parallel.
-pub(crate) fn par_mut_chunks(
-    threads: usize,
-    data: &mut [f32],
-    f: impl Fn(usize, &mut [f32]) + Sync,
-) {
-    let n = data.len();
-    if n == 0 {
-        return;
-    }
-    let ptr = SendPtr(data.as_mut_ptr());
-    let ptr = &ptr;
-    pool::parallel_chunks(threads, n, (threads.max(1) * 4).min(n), |_, lo, hi| {
-        // SAFETY: chunk ranges from parallel_chunks are disjoint
-        let chunk = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(lo), hi - lo) };
-        f(lo, chunk);
-    });
-}
-
 /// Scratch buffers reused across steps (avoids per-step allocation of
 /// three whole-grid temporaries — see EXPERIMENTS.md §Perf).
 pub struct VtiScratch {
@@ -300,7 +289,7 @@ pub fn step(state: &mut VtiState, m: &VtiMedia, w2: &[f32], threads: usize, s: &
     {
         let lap = &mut s.lap.data;
         let tmp = &s.tmp.data;
-        par_mut_chunks(threads, lap, |off, chunk| {
+        pool::parallel_mut_chunks(threads, lap, |off, chunk| {
             for (i, v) in chunk.iter_mut().enumerate() {
                 *v += tmp[off + i];
             }
@@ -317,7 +306,7 @@ pub fn step(state: &mut VtiState, m: &VtiMedia, w2: &[f32], threads: usize, s: &
     let del = &m.delta.data;
     {
         let shp = &mut state.sh_prev.data;
-        par_mut_chunks(threads, shp, |off, chunk| {
+        pool::parallel_mut_chunks(threads, shp, |off, chunk| {
             for (i, out) in chunk.iter_mut().enumerate() {
                 let j = off + i;
                 let sq = (1.0 + 2.0 * del[j]).sqrt();
@@ -328,7 +317,7 @@ pub fn step(state: &mut VtiState, m: &VtiMedia, w2: &[f32], threads: usize, s: &
     }
     {
         let svp = &mut state.sv_prev.data;
-        par_mut_chunks(threads, svp, |off, chunk| {
+        pool::parallel_mut_chunks(threads, svp, |off, chunk| {
             for (i, out) in chunk.iter_mut().enumerate() {
                 let j = off + i;
                 let sq = (1.0 + 2.0 * del[j]).sqrt();

@@ -216,7 +216,11 @@ fn interpret(meta: &ArtifactMeta, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         "rtm_vti_grid" => {
             // inputs: sh, sv, sh_prev, sv_prev, vp2dt2, eps, delta
             if inputs.len() != 7 {
-                bail!("{}: rtm_vti_grid needs 7 inputs, manifest lists {}", meta.name, inputs.len());
+                bail!(
+                    "{}: rtm_vti_grid needs 7 inputs, manifest lists {}",
+                    meta.name,
+                    inputs.len()
+                );
             }
             let mut state = crate::rtm::vti::VtiState {
                 sh: grid3_of(&inputs[0]),
@@ -245,7 +249,11 @@ fn interpret(meta: &ArtifactMeta, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
             // inputs: p, q, p_prev, q_prev, vpx2, vpz2, vpn2, vsz2,
             //         alpha, theta, phi
             if inputs.len() != 11 {
-                bail!("{}: rtm_tti_grid needs 11 inputs, manifest lists {}", meta.name, inputs.len());
+                bail!(
+                    "{}: rtm_tti_grid needs 11 inputs, manifest lists {}",
+                    meta.name,
+                    inputs.len()
+                );
             }
             let mut state = crate::rtm::tti::TtiState {
                 p: grid3_of(&inputs[0]),
@@ -316,7 +324,9 @@ mod tests {
         );
         let spec = StencilSpec::star3d(2);
         let g = Grid3::random(8, 20, 20, 77);
-        let out = rt.execute("star3d_r2_block", &[Tensor::new(vec![8, 20, 20], g.data.clone())]).unwrap();
+        let out = rt
+            .execute("star3d_r2_block", &[Tensor::new(vec![8, 20, 20], g.data.clone())])
+            .unwrap();
         let full = naive::apply3(&spec, &g);
         let mut want = Vec::new();
         for z in 0..4 {
@@ -350,7 +360,9 @@ mod tests {
             "unused",
         );
         let data: Vec<f32> = (0..256).map(|i| i as f32).collect();
-        let out = rt.execute("transpose16_block", &[Tensor::new(vec![16, 16], data.clone())]).unwrap();
+        let out = rt
+            .execute("transpose16_block", &[Tensor::new(vec![16, 16], data.clone())])
+            .unwrap();
         for i in 0..16 {
             for j in 0..16 {
                 assert_eq!(out[0].data[j * 16 + i], data[i * 16 + j]);

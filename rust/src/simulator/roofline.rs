@@ -386,7 +386,13 @@ mod tests {
         let plat = p();
         for name in ["2DStarR2", "2DStarR4"] {
             let spec = StencilSpec::by_name(name).unwrap();
-            let est = predict(&spec, N2, Engine::MMStencil, SweepConfig::best(MemKind::OnPkg), &plat);
+            let est = predict(
+                &spec,
+                N2,
+                Engine::MMStencil,
+                SweepConfig::best(MemKind::OnPkg),
+                &plat,
+            );
             assert!(est.bandwidth_util > 0.55, "{name}: {:.2}", est.bandwidth_util);
         }
     }

@@ -91,8 +91,7 @@ impl Sdma {
         }
         let setup_waves = copies.len().div_ceil(self.channels) as f64;
         let setup = setup_waves * self.setup_us * 1e-6;
-        let transfer: f64 =
-            copies.iter().map(|&c| c.bytes as f64 / self.bandwidth(c)).sum();
+        let transfer: f64 = copies.iter().map(|&c| c.bytes as f64 / self.bandwidth(c)).sum();
         setup + transfer
     }
 

@@ -138,8 +138,12 @@ mod tests {
         let a = BlockAccess::star3d(16, 16, 4, 4);
         let port = 128;
         let row = onpkg_effective_bw(400e9, port, 64, a.rowmajor_streams());
-        let brick =
-            onpkg_effective_bw(400e9, port, BrickDims::default().bytes(), a.bricked_streams(BrickDims::default()));
+        let brick = onpkg_effective_bw(
+            400e9,
+            port,
+            BrickDims::default().bytes(),
+            a.bricked_streams(BrickDims::default()),
+        );
         assert!(brick / row > 3.0, "brick {brick:.3e} row {row:.3e}");
     }
 

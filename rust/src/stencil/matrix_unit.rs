@@ -21,6 +21,7 @@
 //! 4-cycle outer-product latency, and the SIMD/Matrix frequency ratio.
 
 use super::{Pattern, StencilSpec};
+use crate::grid::par::{GridSrc, ParGrid3};
 use crate::grid::{Grid2, Grid3};
 
 /// Instruction counters for the matrix-unit model.
@@ -73,46 +74,53 @@ fn div_up(a: usize, b: usize) -> usize {
 }
 
 /// Apply a 3D spec over a periodic grid, blockwise. Returns the result
-/// and the accumulated instruction counts.
-pub fn apply3(spec: &StencilSpec, g: &Grid3, dims: BlockDims) -> (Grid3, Counts) {
+/// and the accumulated instruction counts.  Reads go through [`GridSrc`]
+/// and block results land through an exclusive grid view, so the block
+/// loop is ready to be task-parallelized over disjoint claims.
+pub fn apply3<S: GridSrc>(spec: &StencilSpec, g: &S, dims: BlockDims) -> (Grid3, Counts) {
     assert_eq!(spec.ndim, 3);
     let (vl, vz) = (dims.vl, dims.vz);
     let r = spec.radius;
-    let mut out = Grid3::zeros(g.nz, g.nx, g.ny);
+    let (gnz, gnx, gny) = g.shape();
+    let mut out = Grid3::zeros(gnz, gnx, gny);
     let mut counts = Counts::default();
-    let mut z0 = 0;
-    while z0 < g.nz {
-        let bz = vz.min(g.nz - z0);
-        let mut x0 = 0;
-        while x0 < g.nx {
-            let bx = vl.min(g.nx - x0);
-            let mut y0 = 0;
-            while y0 < g.ny {
-                let by = vl.min(g.ny - y0);
-                let window = g.extract_wrap(
-                    z0 as isize - r as isize,
-                    x0 as isize - r as isize,
-                    y0 as isize - r as isize,
-                    bz + 2 * r,
-                    bx + 2 * r,
-                    by + 2 * r,
-                );
-                let block = match spec.pattern {
-                    Pattern::Star => {
-                        counts.add(&star3_counts(spec, bz, bx, by, vl));
-                        star3_block(spec, &window, bz, bx, by)
-                    }
-                    Pattern::Box => {
-                        counts.add(&box3_counts(spec, bz, bx, by, vl));
-                        box3_block(spec, &window, bz, bx, by)
-                    }
-                };
-                out.insert_block(z0, x0, y0, bz, bx, by, &block);
-                y0 += by;
+    {
+        let pg = ParGrid3::new(&mut out);
+        let mut view = pg.full_view();
+        let mut z0 = 0;
+        while z0 < gnz {
+            let bz = vz.min(gnz - z0);
+            let mut x0 = 0;
+            while x0 < gnx {
+                let bx = vl.min(gnx - x0);
+                let mut y0 = 0;
+                while y0 < gny {
+                    let by = vl.min(gny - y0);
+                    let window = g.extract_wrap(
+                        z0 as isize - r as isize,
+                        x0 as isize - r as isize,
+                        y0 as isize - r as isize,
+                        bz + 2 * r,
+                        bx + 2 * r,
+                        by + 2 * r,
+                    );
+                    let block = match spec.pattern {
+                        Pattern::Star => {
+                            counts.add(&star3_counts(spec, bz, bx, by, vl));
+                            star3_block(spec, &window, bz, bx, by)
+                        }
+                        Pattern::Box => {
+                            counts.add(&box3_counts(spec, bz, bx, by, vl));
+                            box3_block(spec, &window, bz, bx, by)
+                        }
+                    };
+                    view.insert_block(z0, x0, y0, bz, bx, by, &block);
+                    y0 += by;
+                }
+                x0 += bx;
             }
-            x0 += bx;
+            z0 += bz;
         }
-        z0 += bz;
     }
     (out, counts)
 }
@@ -240,7 +248,9 @@ pub fn apply2(spec: &StencilSpec, g: &Grid2, dims: BlockDims) -> (Grid2, Counts)
             let mut window = Vec::with_capacity(hx * hy);
             for dx in 0..hx as isize {
                 for dy in 0..hy as isize {
-                    window.push(g.get_wrap(x0 as isize - r as isize + dx, y0 as isize - r as isize + dy));
+                    let gx = x0 as isize - r as isize + dx;
+                    let gy = y0 as isize - r as isize + dy;
+                    window.push(g.get_wrap(gx, gy));
                 }
             }
             let at = |x: usize, y: usize| window[x * hy + y];
@@ -323,7 +333,8 @@ mod tests {
         forall(10, 0x3A7, |rng| {
             let spec = StencilSpec::star3d(rng.range(1, 4));
             // dims not multiples of the block
-            let g = Grid3::random(rng.range(3, 9), rng.range(5, 21), rng.range(5, 21), rng.next_u64());
+            let (nz, nx, ny) = (rng.range(3, 9), rng.range(5, 21), rng.range(5, 21));
+            let g = Grid3::random(nz, nx, ny, rng.next_u64());
             let want = naive::apply3(&spec, &g);
             let (got, _) = apply3(&spec, &g, BlockDims::default());
             assert_allclose(&got.data, &want.data, 1e-4, 1e-5);

@@ -1,16 +1,34 @@
 //! Naive direct-loop engines — the paper's "compiler baseline" and the
 //! semantic reference for every other rust engine.  Periodic boundaries,
 //! matching the jnp.roll grid oracles in `python/compile/kernels/ref.py`.
+//!
+//! The 3D write path goes through an exclusive `TileViewMut`, so the
+//! same code doubles as the per-region oracle for the parallel
+//! coordinator tests ([`apply3_region`]).
 
 use super::{Pattern, StencilSpec};
+use crate::grid::par::{GridSrc, ParGrid3, TileViewMut};
 use crate::grid::{Grid2, Grid3};
 
 /// Apply a 3D spec to a periodic grid.
 pub fn apply3(spec: &StencilSpec, g: &Grid3) -> Grid3 {
     assert_eq!(spec.ndim, 3);
+    let mut out = Grid3::zeros(g.nz, g.nx, g.ny);
+    {
+        let pg = ParGrid3::new(&mut out);
+        let mut view = pg.full_view();
+        apply3_region(spec, g, &mut view);
+    }
+    out
+}
+
+/// Reference result for the claimed region of `out` — the per-tile
+/// oracle the parallel coordinator and the aliasing suite check against.
+pub fn apply3_region<S: GridSrc>(spec: &StencilSpec, g: &S, out: &mut TileViewMut<'_>) {
+    assert_eq!(spec.ndim, 3);
     match spec.pattern {
-        Pattern::Star => star3(spec, g),
-        Pattern::Box => box3(spec, g),
+        Pattern::Star => star3(spec, g, out),
+        Pattern::Box => box3(spec, g, out),
     }
 }
 
@@ -23,51 +41,51 @@ pub fn apply2(spec: &StencilSpec, g: &Grid2) -> Grid2 {
     }
 }
 
-fn star3(spec: &StencilSpec, g: &Grid3) -> Grid3 {
+fn star3<S: GridSrc>(spec: &StencilSpec, g: &S, out: &mut TileViewMut<'_>) {
     let r = spec.radius as isize;
     let (wz, wx, wy) = (&spec.star_axes[0], &spec.star_axes[1], &spec.star_axes[2]);
-    let mut out = Grid3::zeros(g.nz, g.nx, g.ny);
-    for z in 0..g.nz as isize {
-        for x in 0..g.nx as isize {
-            for y in 0..g.ny as isize {
-                let mut acc = spec.star_center * g.get_wrap(z, x, y);
+    let (z0, z1, x0, x1, y0, y1) = out.bounds();
+    for z in z0..z1 {
+        for x in x0..x1 {
+            for y in y0..y1 {
+                let (zi, xi, yi) = (z as isize, x as isize, y as isize);
+                let mut acc = spec.star_center * g.get_wrap(zi, xi, yi);
                 for k in -r..=r {
                     if k == 0 {
                         continue;
                     }
                     let i = (k + r) as usize;
-                    acc += wz[i] * g.get_wrap(z + k, x, y);
-                    acc += wx[i] * g.get_wrap(z, x + k, y);
-                    acc += wy[i] * g.get_wrap(z, x, y + k);
+                    acc += wz[i] * g.get_wrap(zi + k, xi, yi);
+                    acc += wx[i] * g.get_wrap(zi, xi + k, yi);
+                    acc += wy[i] * g.get_wrap(zi, xi, yi + k);
                 }
-                out.set(z as usize, x as usize, y as usize, acc);
+                out.set(z, x, y, acc);
             }
         }
     }
-    out
 }
 
-fn box3(spec: &StencilSpec, g: &Grid3) -> Grid3 {
+fn box3<S: GridSrc>(spec: &StencilSpec, g: &S, out: &mut TileViewMut<'_>) {
     let r = spec.radius as isize;
     let n = (2 * spec.radius + 1) as isize;
-    let mut out = Grid3::zeros(g.nz, g.nx, g.ny);
-    for z in 0..g.nz as isize {
-        for x in 0..g.nx as isize {
-            for y in 0..g.ny as isize {
+    let (z0, z1, x0, x1, y0, y1) = out.bounds();
+    for z in z0..z1 {
+        for x in x0..x1 {
+            for y in y0..y1 {
+                let (zi, xi, yi) = (z as isize, x as isize, y as isize);
                 let mut acc = 0.0f32;
                 for c in 0..n {
                     for a in 0..n {
                         for b in 0..n {
                             let w = spec.box_w[((c * n + a) * n + b) as usize];
-                            acc += w * g.get_wrap(z + c - r, x + a - r, y + b - r);
+                            acc += w * g.get_wrap(zi + c - r, xi + a - r, yi + b - r);
                         }
                     }
                 }
-                out.set(z as usize, x as usize, y as usize, acc);
+                out.set(z, x, y, acc);
             }
         }
     }
-    out
 }
 
 fn star2(spec: &StencilSpec, g: &Grid2) -> Grid2 {
@@ -135,6 +153,27 @@ mod tests {
         assert!((out.get(4, 4, 6) - spec.star_axes[2][4]).abs() < 1e-7);
         assert_eq!(out.get(3, 3, 4), 0.0);
         assert!((out.get(4, 4, 4) - spec.star_center).abs() < 1e-6);
+    }
+
+    #[test]
+    fn region_oracle_matches_full_sweep() {
+        let spec = StencilSpec::star3d(1);
+        let g = Grid3::random(6, 7, 8, 21);
+        let want = apply3(&spec, &g);
+        let mut out = Grid3::zeros(6, 7, 8);
+        {
+            let pg = ParGrid3::new(&mut out);
+            let mut view = pg.view(2, 5, 1, 6, 0, 8);
+            apply3_region(&spec, &g, &mut view);
+        }
+        for z in 2..5 {
+            for x in 1..6 {
+                for y in 0..8 {
+                    assert_eq!(out.get(z, x, y), want.get(z, x, y));
+                }
+            }
+        }
+        assert_eq!(out.get(0, 0, 0), 0.0); // outside the region: untouched
     }
 
     #[test]

@@ -6,8 +6,14 @@
 //! LLVM auto-vectorizes; the periodic boundary shell falls back to the
 //! wrap path so results are bit-comparable with [`super::naive`] up to
 //! fp reassociation.
+//!
+//! Reads go through [`GridSrc`] (a quiescent `&Grid3` *or* a `ParGrid3`
+//! whose halo frame is being filled concurrently) and writes through an
+//! exclusive [`TileViewMut`] claim — the per-tile contract of the
+//! parallel coordinator (see `grid::par`).
 
 use super::{Pattern, StencilSpec};
+use crate::grid::par::{GridSrc, ParGrid3, TileViewMut};
 use crate::grid::{Grid2, Grid3};
 
 /// 2.5D tile used for the blocked sweep (paper's SIMD baseline uses a
@@ -36,47 +42,49 @@ pub fn apply3_tiled(spec: &StencilSpec, g: &Grid3, tile: Tile) -> Grid3 {
     assert_eq!(spec.ndim, 3);
     let r = spec.radius;
     let mut out = Grid3::zeros(g.nz, g.nx, g.ny);
-    // interior: wrap-free fast path, tiled
-    if g.nz > 2 * r && g.nx > 2 * r && g.ny > 2 * r {
-        let (z0, z1) = (r, g.nz - r);
-        let (x0, x1) = (r, g.nx - r);
-        let (y0, y1) = (r, g.ny - r);
-        let mut z = z0;
-        while z < z1 {
-            let ze = (z + tile.tz).min(z1);
-            let mut x = x0;
-            while x < x1 {
-                let xe = (x + tile.tx).min(x1);
-                let mut y = y0;
-                while y < y1 {
-                    let ye = (y + tile.ty).min(y1);
-                    match spec.pattern {
-                        Pattern::Star => star3_block(spec, g, &mut out, z, ze, x, xe, y, ye),
-                        Pattern::Box => box3_block(spec, g, &mut out, z, ze, x, xe, y, ye),
+    {
+        let pg = ParGrid3::new(&mut out);
+        let mut view = pg.full_view();
+        // interior: wrap-free fast path, tiled
+        if g.nz > 2 * r && g.nx > 2 * r && g.ny > 2 * r {
+            let (z0, z1) = (r, g.nz - r);
+            let (x0, x1) = (r, g.nx - r);
+            let (y0, y1) = (r, g.ny - r);
+            let mut z = z0;
+            while z < z1 {
+                let ze = (z + tile.tz).min(z1);
+                let mut x = x0;
+                while x < x1 {
+                    let xe = (x + tile.tx).min(x1);
+                    let mut y = y0;
+                    while y < y1 {
+                        let ye = (y + tile.ty).min(y1);
+                        match spec.pattern {
+                            Pattern::Star => star3_block(spec, g, &mut view, z, ze, x, xe, y, ye),
+                            Pattern::Box => box3_block(spec, g, &mut view, z, ze, x, xe, y, ye),
+                        }
+                        y = ye;
                     }
-                    y = ye;
+                    x = xe;
                 }
-                x = xe;
+                z = ze;
             }
-            z = ze;
         }
-    }
-    // boundary shell: wrap path
-    let rb = r.min(g.nz).min(g.nx).min(g.ny);
-    let inside = |z: usize, x: usize, y: usize| {
-        g.nz > 2 * r
-            && g.nx > 2 * r
-            && g.ny > 2 * r
-            && (r..g.nz - r).contains(&z)
-            && (r..g.nx - r).contains(&x)
-            && (r..g.ny - r).contains(&y)
-    };
-    let _ = rb;
-    for z in 0..g.nz {
-        for x in 0..g.nx {
-            for y in 0..g.ny {
-                if !inside(z, x, y) {
-                    out.set(z, x, y, point3_wrap(spec, g, z as isize, x as isize, y as isize));
+        // boundary shell: wrap path
+        let inside = |z: usize, x: usize, y: usize| {
+            g.nz > 2 * r
+                && g.nx > 2 * r
+                && g.ny > 2 * r
+                && (r..g.nz - r).contains(&z)
+                && (r..g.nx - r).contains(&x)
+                && (r..g.ny - r).contains(&y)
+        };
+        for z in 0..g.nz {
+            for x in 0..g.nx {
+                for y in 0..g.ny {
+                    if !inside(z, x, y) {
+                        view.set(z, x, y, point3_wrap(spec, g, z as isize, x as isize, y as isize));
+                    }
                 }
             }
         }
@@ -85,7 +93,13 @@ pub fn apply3_tiled(spec: &StencilSpec, g: &Grid3, tile: Tile) -> Grid3 {
 }
 
 #[inline]
-pub(crate) fn point3_wrap(spec: &StencilSpec, g: &Grid3, z: isize, x: isize, y: isize) -> f32 {
+pub(crate) fn point3_wrap<S: GridSrc>(
+    spec: &StencilSpec,
+    g: &S,
+    z: isize,
+    x: isize,
+    y: isize,
+) -> f32 {
     let r = spec.radius as isize;
     match spec.pattern {
         Pattern::Star => {
@@ -121,23 +135,29 @@ pub(crate) fn point3_wrap(spec: &StencilSpec, g: &Grid3, z: isize, x: isize, y: 
 /// Wrap-free star on one tile: per (z,x) row, accumulate the 2·ndim·r+1
 /// contributions as shifted y-contiguous slices (auto-vectorizes).
 #[inline]
-fn star3_block(
-    spec: &StencilSpec, g: &Grid3, out: &mut Grid3,
-    z0: usize, z1: usize, x0: usize, x1: usize, y0: usize, y1: usize,
+fn star3_block<S: GridSrc>(
+    spec: &StencilSpec,
+    g: &S,
+    out: &mut TileViewMut<'_>,
+    z0: usize,
+    z1: usize,
+    x0: usize,
+    x1: usize,
+    y0: usize,
+    y1: usize,
 ) {
+    let (_, gnx, gny) = g.shape();
     let r = spec.radius;
     let ny = y1 - y0;
     debug_assert!(ny <= 512, "tile.ty must be <= 512");
     let (wz, wx, wy) = (&spec.star_axes[0], &spec.star_axes[1], &spec.star_axes[2]);
     for z in z0..z1 {
         for x in x0..x1 {
-            let ob = out.idx(z, x, y0);
-            let cb = g.idx(z, x, y0);
+            let cb = (z * gnx + x) * gny + y0;
             // centre + y-axis from the same row
             {
-                let (src, dst) = (&g.data, &mut out.data);
-                let row = &src[cb - r..cb + ny + r];
-                let o = &mut dst[ob..ob + ny];
+                let row = g.span(cb - r, ny + 2 * r);
+                let o = out.row_mut(z, x, y0, ny);
                 for i in 0..ny {
                     o[i] = spec.star_center * row[r + i];
                 }
@@ -153,22 +173,22 @@ fn star3_block(
             }
             // x- and z-axis rows: accumulate into a stack buffer so the
             // compiler keeps the accumulator in registers across rows
-            // (repeated out.data round-trips defeat vectorization)
+            // (repeated output round-trips defeat vectorization)
             let mut acc = [0.0f32; 512];
             let acc = &mut acc[..ny];
             for k in 0..2 * r + 1 {
                 if k == r {
                     continue;
                 }
-                let zb = g.idx(z + k - r, x, y0);
-                let xb = g.idx(z, x + k - r, y0);
+                let zb = ((z + k - r) * gnx + x) * gny + y0;
+                let xb = (z * gnx + (x + k - r)) * gny + y0;
                 let (wzk, wxk) = (wz[k], wx[k]);
-                let (zr, xr) = (&g.data[zb..zb + ny], &g.data[xb..xb + ny]);
+                let (zr, xr) = (g.span(zb, ny), g.span(xb, ny));
                 for ((a, &zv), &xv) in acc.iter_mut().zip(zr).zip(xr) {
                     *a += wzk * zv + wxk * xv;
                 }
             }
-            for (o, &a) in out.data[ob..ob + ny].iter_mut().zip(acc.iter()) {
+            for (o, &a) in out.row_mut(z, x, y0, ny).iter_mut().zip(acc.iter()) {
                 *o += a;
             }
         }
@@ -176,24 +196,33 @@ fn star3_block(
 }
 
 #[inline]
-fn box3_block(
-    spec: &StencilSpec, g: &Grid3, out: &mut Grid3,
-    z0: usize, z1: usize, x0: usize, x1: usize, y0: usize, y1: usize,
+fn box3_block<S: GridSrc>(
+    spec: &StencilSpec,
+    g: &S,
+    out: &mut TileViewMut<'_>,
+    z0: usize,
+    z1: usize,
+    x0: usize,
+    x1: usize,
+    y0: usize,
+    y1: usize,
 ) {
+    let (_, gnx, gny) = g.shape();
     let r = spec.radius;
     let n = 2 * r + 1;
     let ny = y1 - y0;
     for z in z0..z1 {
         for x in x0..x1 {
-            let ob = out.idx(z, x, y0);
-            out.data[ob..ob + ny].fill(0.0);
+            let row = out.row_mut(z, x, y0, ny);
+            row.fill(0.0);
             for c in 0..n {
                 for a in 0..n {
-                    let sb = g.idx(z + c - r, x + a - r, y0) - r;
+                    let sb = ((z + c - r) * gnx + (x + a - r)) * gny + y0 - r;
                     for b in 0..n {
                         let w = spec.box_w[(c * n + a) * n + b];
+                        let src = g.span(sb + b, ny);
                         for i in 0..ny {
-                            out.data[ob + i] += w * g.data[sb + b + i];
+                            row[i] += w * src[i];
                         }
                     }
                 }
@@ -202,24 +231,26 @@ fn box3_block(
     }
 }
 
-/// Compute an arbitrary sub-region `[z0,z1)×[x0,x1)×[y0,y1)` of the
-/// periodic sweep into `out` — the per-tile entry point of the parallel
-/// coordinator (`coordinator::driver`).  Interior rows take the fast
+/// Compute the claimed region of `out` — an arbitrary sub-box
+/// `[z0,z1)×[x0,x1)×[y0,y1)` of the periodic sweep — from `g`.  The
+/// per-tile entry point of the parallel coordinator
+/// (`coordinator::driver`): the view *is* the region, so a task cannot
+/// write outside the box it was handed.  Interior rows take the fast
 /// wrap-free path; boundary rows fall back to wrapped points.
-pub fn apply3_region(
-    spec: &StencilSpec, g: &Grid3, out: &mut Grid3,
-    z0: usize, z1: usize, x0: usize, x1: usize, y0: usize, y1: usize,
-) {
+pub fn apply3_region<S: GridSrc>(spec: &StencilSpec, g: &S, out: &mut TileViewMut<'_>) {
     assert_eq!(spec.ndim, 3);
+    debug_assert_eq!(g.shape(), out.grid_shape());
+    let (gnz, gnx, gny) = g.shape();
+    let (z0, z1, x0, x1, y0, y1) = out.bounds();
     let r = spec.radius;
-    let interior_possible = g.nz > 2 * r && g.nx > 2 * r && g.ny > 2 * r;
+    let interior_possible = gnz > 2 * r && gnx > 2 * r && gny > 2 * r;
     for z in z0..z1 {
         for x in x0..x1 {
             let zx_interior =
-                interior_possible && (r..g.nz - r).contains(&z) && (r..g.nx - r).contains(&x);
+                interior_possible && (r..gnz - r).contains(&z) && (r..gnx - r).contains(&x);
             if zx_interior {
                 let ylo = y0.max(r);
-                let yhi = y1.min(g.ny - r);
+                let yhi = y1.min(gny - r);
                 if ylo < yhi {
                     match spec.pattern {
                         Pattern::Star => star3_block(spec, g, out, z, z + 1, x, x + 1, ylo, yhi),
@@ -321,8 +352,7 @@ fn point2_wrap(spec: &StencilSpec, g: &Grid2, x: isize, y: isize) -> f32 {
             let mut acc = 0.0;
             for a in 0..n {
                 for b in 0..n {
-                    acc += spec.box_w[(a * n + b) as usize]
-                        * g.get_wrap(x + a - r, y + b - r);
+                    acc += spec.box_w[(a * n + b) as usize] * g.get_wrap(x + a - r, y + b - r);
                 }
             }
             acc
@@ -387,5 +417,22 @@ mod tests {
         let want = naive::apply3(&spec, &g);
         let got = apply3(&spec, &g);
         assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
+    }
+
+    #[test]
+    fn region_views_compose_to_the_full_sweep() {
+        // y-strip views covering the grid reproduce the whole-grid sweep
+        let spec = StencilSpec::star3d(2);
+        let g = Grid3::random(8, 10, 12, 4);
+        let want = apply3(&spec, &g);
+        let mut out = Grid3::zeros(8, 10, 12);
+        {
+            let pg = ParGrid3::new(&mut out);
+            for (y0, y1) in [(0, 3), (3, 7), (7, 12)] {
+                let mut view = pg.view(0, 8, 0, 10, y0, y1);
+                apply3_region(&spec, &g, &mut view);
+            }
+        }
+        assert_allclose(&out.data, &want.data, 1e-6, 1e-7);
     }
 }

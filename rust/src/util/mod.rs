@@ -16,14 +16,15 @@ pub mod timer;
 pub use rng::XorShift;
 pub use timer::Timer;
 
-/// Enable flush-to-zero / denormals-are-zero on x86_64 (no-op elsewhere).
+/// Enable flush-to-zero / denormals-are-zero on x86_64 (no-op elsewhere,
+/// and under Miri, which does not model the MXCSR intrinsics).
 ///
 /// Wave propagation decays fields toward the denormal range where x86
 /// FP units fall off a 10–100× performance cliff; seismic codes run FTZ
 /// as standard practice (the paper's platform has no denormal penalty).
 /// Call once per worker thread before a long propagation.
 pub fn enable_flush_to_zero() {
-    #[cfg(target_arch = "x86_64")]
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
     #[allow(deprecated)]
     unsafe {
         use std::arch::x86_64::{_mm_getcsr, _mm_setcsr};
@@ -39,13 +40,13 @@ pub fn enable_flush_to_zero() {
 /// pool does not permanently alter an embedder thread's FP
 /// environment.
 pub struct FtzGuard {
-    #[cfg(target_arch = "x86_64")]
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
     saved: u32,
 }
 
 impl FtzGuard {
     pub fn new() -> Self {
-        #[cfg(target_arch = "x86_64")]
+        #[cfg(all(target_arch = "x86_64", not(miri)))]
         {
             #[allow(deprecated)]
             unsafe {
@@ -55,7 +56,7 @@ impl FtzGuard {
                 return Self { saved };
             }
         }
-        #[cfg(not(target_arch = "x86_64"))]
+        #[cfg(not(all(target_arch = "x86_64", not(miri))))]
         {
             Self {}
         }
@@ -70,7 +71,7 @@ impl Default for FtzGuard {
 
 impl Drop for FtzGuard {
     fn drop(&mut self) {
-        #[cfg(target_arch = "x86_64")]
+        #[cfg(all(target_arch = "x86_64", not(miri)))]
         #[allow(deprecated)]
         unsafe {
             std::arch::x86_64::_mm_setcsr(self.saved);

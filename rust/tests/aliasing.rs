@@ -1,0 +1,169 @@
+//! Aliasing-model regression suite — the test target the CI `miri` job
+//! runs under stacked borrows (`cargo +nightly miri test --test
+//! aliasing`).
+//!
+//! Everything here drives the *real* parallel paths (persistent worker
+//! runtime, tile claims, overlapped halo exchange) on grids small
+//! enough for Miri.  Only `Driver`-owned runtimes are used: their
+//! workers join on drop, so the interpreted process exits with no live
+//! threads.  The `#[cfg(miri)]` switches keep the Miri subset ≤ 8³
+//! while native runs get slightly larger grids and an extra fuzz pass.
+
+use mmstencil::coordinator::driver::Driver;
+use mmstencil::coordinator::exchange::Backend;
+use mmstencil::coordinator::tiles::Strategy;
+use mmstencil::grid::{CartDecomp, Grid3, ParGrid3, ParSlice};
+use mmstencil::simulator::Platform;
+use mmstencil::stencil::{naive, StencilSpec};
+use mmstencil::util::prop::assert_allclose;
+
+// ---------------------------------------------------------------------------
+// (a) parallel sweeps through the runtime vs the naive oracle
+// ---------------------------------------------------------------------------
+
+#[test]
+fn parallel_star_sweep_is_bitwise_equal_to_naive() {
+    // 8³ with r = 4: no wrap-free interior exists (nz ≤ 2r), so every
+    // point takes the wrapped path, whose accumulation order is
+    // identical to naive's — the parallel sweep must be *bitwise* equal.
+    let spec = StencilSpec::star3d(4);
+    let g = Grid3::random(8, 8, 8, 42);
+    let want = naive::apply3(&spec, &g);
+    let d = Driver::new(2, Platform::paper());
+    for strat in [Strategy::Square, Strategy::SnoopAware] {
+        let (got, stats) = d.sweep(&spec, &g, strat);
+        assert_eq!(got.as_slice(), want.as_slice(), "{strat:?} diverged");
+        assert!(stats.pool.tasks > 0);
+    }
+}
+
+#[test]
+fn parallel_box_sweep_is_bitwise_equal_to_naive() {
+    // same all-boundary construction for the box pattern: 4³ ≤ 2r at
+    // r = 2 keeps every point on the order-preserving wrap path
+    let spec = StencilSpec::box3d(2);
+    let g = Grid3::random(4, 4, 4, 7);
+    let want = naive::apply3(&spec, &g);
+    let d = Driver::new(2, Platform::paper());
+    let (got, _) = d.sweep(&spec, &g, Strategy::SnoopAware);
+    assert_eq!(got.as_slice(), want.as_slice());
+}
+
+#[test]
+fn interior_fast_path_sweep_matches_naive() {
+    // a grid with a wrap-free interior exercises the blocked row path
+    // through the tile views (fp reassociation → tolerance, not bits)
+    #[cfg(miri)]
+    let (n, threads) = (8, 2);
+    #[cfg(not(miri))]
+    let (n, threads) = (12, 4);
+    let spec = StencilSpec::star3d(2);
+    let g = Grid3::random(n, n, n, 5);
+    let want = naive::apply3(&spec, &g);
+    let d = Driver::new(threads, Platform::paper());
+    let (got, _) = d.sweep(&spec, &g, Strategy::SnoopAware);
+    assert_allclose(got.as_slice(), want.as_slice(), 1e-4, 1e-5);
+}
+
+#[test]
+fn multirank_overlapped_step_matches_naive() {
+    // the overlapped SDMA step runs the exchange as a pool task writing
+    // halo frames through claims while deep-interior tasks read the
+    // same storage — the exact concurrency Miri must accept
+    #[cfg(miri)]
+    let (n, steps, decomp) = (6, 1, CartDecomp::new(1, 1, 2));
+    #[cfg(not(miri))]
+    let (n, steps, decomp) = (12, 2, CartDecomp::new(1, 2, 2));
+    let spec = StencilSpec::star3d(1);
+    let g = Grid3::random(n, n, n, 11);
+    let mut want = g.clone();
+    for _ in 0..steps {
+        want = naive::apply3(&spec, &want);
+    }
+    let d = Driver::new(2, Platform::paper());
+    for backend in [Backend::sdma(), Backend::mpi()] {
+        let (got, stats) = d.multirank_sweep(&spec, &g, &decomp, &backend, steps);
+        assert_allclose(got.as_slice(), want.as_slice(), 1e-3, 1e-4);
+        assert!(stats.exchanged_bytes > 0, "{}", backend.name());
+    }
+}
+
+#[cfg(not(miri))]
+#[test]
+fn random_region_splits_compose_to_the_full_sweep() {
+    // native-only fuzz: random y-splits of the region entry point agree
+    // with the whole-grid sweep
+    use mmstencil::stencil::simd;
+    use mmstencil::util::prop::forall;
+    forall(10, 0xA11A5, |rng| {
+        let spec = StencilSpec::star3d(rng.range(1, 3));
+        let (nz, nx, ny) = (rng.range(4, 9), rng.range(4, 11), rng.range(6, 14));
+        let g = Grid3::random(nz, nx, ny, rng.next_u64());
+        let want = naive::apply3(&spec, &g);
+        let mut out = Grid3::zeros(nz, nx, ny);
+        {
+            let pg = ParGrid3::new(&mut out);
+            let cut = rng.range(1, ny);
+            for (y0, y1) in [(0, cut), (cut, ny)] {
+                let mut view = pg.view(0, nz, 0, nx, y0, y1);
+                simd::apply3_region(&spec, &g, &mut view);
+            }
+        }
+        assert_allclose(out.as_slice(), want.as_slice(), 1e-4, 1e-5);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// (b) overlap claims panic in debug builds
+// ---------------------------------------------------------------------------
+
+#[cfg(debug_assertions)]
+mod overlap_guard {
+    use super::*;
+
+    #[test]
+    #[should_panic(expected = "overlapping TileViewMut")]
+    fn overlapping_tile_views_panic() {
+        let mut g = Grid3::zeros(4, 4, 4);
+        let pg = ParGrid3::new(&mut g);
+        let _a = pg.view(0, 4, 0, 2, 0, 4);
+        let _b = pg.view(0, 4, 1, 3, 0, 4); // x-ranges intersect
+    }
+
+    #[test]
+    #[should_panic(expected = "overlapping TileViewMut")]
+    fn full_view_conflicts_with_any_live_view() {
+        let mut g = Grid3::zeros(2, 2, 2);
+        let pg = ParGrid3::new(&mut g);
+        let _a = pg.view(1, 2, 0, 2, 0, 2);
+        let _b = pg.full_view();
+    }
+
+    #[test]
+    #[should_panic(expected = "overlapping ParSlice claim")]
+    fn overlapping_slice_claims_panic() {
+        let mut v = vec![0.0f32; 16];
+        let ps = ParSlice::new(&mut v);
+        let _a = ps.claim(0, 9);
+        let _b = ps.claim(8, 16);
+    }
+
+    #[test]
+    fn sequential_reclaim_after_drop_is_fine() {
+        let mut g = Grid3::zeros(3, 3, 3);
+        let pg = ParGrid3::new(&mut g);
+        {
+            let _a = pg.full_view();
+        }
+        let _b = pg.full_view(); // claim was released on drop
+    }
+
+    #[test]
+    fn disjoint_views_coexist() {
+        let mut g = Grid3::zeros(4, 6, 6);
+        let pg = ParGrid3::new(&mut g);
+        let _a = pg.view(0, 2, 0, 6, 0, 6);
+        let _b = pg.view(2, 4, 0, 6, 0, 3);
+        let _c = pg.view(2, 4, 0, 6, 3, 6);
+    }
+}

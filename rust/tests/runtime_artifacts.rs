@@ -21,7 +21,16 @@ fn runtime() -> Option<Runtime> {
 }
 
 /// Extract a periodic halo cube around block (z0,x0,y0) as a Tensor.
-fn halo_cube(g: &Grid3, z0: isize, x0: isize, y0: isize, bz: usize, bx: usize, by: usize, r: usize) -> Tensor {
+fn halo_cube(
+    g: &Grid3,
+    z0: isize,
+    x0: isize,
+    y0: isize,
+    bz: usize,
+    bx: usize,
+    by: usize,
+    r: usize,
+) -> Tensor {
     let data = g.extract_wrap(
         z0 - r as isize,
         x0 - r as isize,

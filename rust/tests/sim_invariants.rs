@@ -132,7 +132,11 @@ fn roofline_time_decomposes_and_scales() {
                 // time ≥ max(compute, memory) components
                 assert!(e1.time_s >= e1.compute_s.max(e1.memory_s) * 0.999);
                 // utilization in (0, 1]
-                assert!(e1.bandwidth_util > 0.0 && e1.bandwidth_util <= 1.0, "{name} {engine:?} {mem:?}: {}", e1.bandwidth_util);
+                assert!(
+                    e1.bandwidth_util > 0.0 && e1.bandwidth_util <= 1.0,
+                    "{name} {engine:?} {mem:?}: {}",
+                    e1.bandwidth_util
+                );
             }
         }
     });
