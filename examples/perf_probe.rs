@@ -2,65 +2,151 @@
 //! derivative passes) — the measurement harness behind EXPERIMENTS.md
 //! §Perf. Run after any optimization to check for regressions:
 //! `cargo run --release --example perf_probe`
+//!
+//! Emits `BENCH_engines.json` (schema `metrics::bench_json`): per-engine
+//! throughput, per-sweep heap-allocation counts (via the counting
+//! global allocator below), and scratch-arena growth for star/box
+//! r ∈ {1, 4}, plus the headline 256³ star-r4 interior-throughput
+//! sweep.  CI runs a shrunken probe (env below) and uploads the JSON
+//! as the perf-trajectory artifact; numbers are advisory, the schema
+//! is validated.
+//!
+//! Env knobs: `PERF_PROBE_N` (grid edge, default 96), `PERF_PROBE_BIG_N`
+//! (headline sweep edge, default 256; 0 skips), `PERF_PROBE_BUDGET_S`
+//! (per-bench time budget, default 1.0), `BENCH_ENGINES_OUT` (output
+//! path, default `BENCH_engines.json`).
+
+use mmstencil::coordinator::scratch;
 use mmstencil::grid::Grid3;
-use mmstencil::rtm::{media, vti, tti};
+use mmstencil::metrics::bench_json::{self, EngineBench};
+use mmstencil::rtm::{media, tti, vti};
 use mmstencil::stencil::coeffs::{first_deriv, second_deriv};
-use mmstencil::stencil::{matrix_unit, simd, naive, StencilSpec};
+use mmstencil::stencil::{matrix_unit, naive, simd, StencilSpec};
+use mmstencil::util::alloc_count::CountingAlloc;
 use mmstencil::util::bench::{bench_auto, report};
 
-fn main() {
-    let n = 96;
-    let g = Grid3::random(n, n, n, 1);
-    let spec = StencilSpec::star3d(4);
+// Counting global allocator (shared impl with rust/tests/alloc_free.rs):
+// the "allocation counts" column of the bench JSON.
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Time `f`, then run one extra post-warm-up call under the allocation
+/// counters, and record the entry.
+#[allow(clippy::too_many_arguments)]
+fn probe(
+    entries: &mut Vec<EngineBench>,
+    engine: &str,
+    pattern: &str,
+    radius: usize,
+    n: usize,
+    threads: usize,
+    budget_s: f64,
+    mut f: impl FnMut(),
+) {
     let work = (n * n * n) as f64;
+    let r = bench_auto(&format!("{engine:<16} {pattern}3d r{radius} {n}^3"), budget_s, &mut f);
+    let (a0, g0) = (CountingAlloc::events(), scratch::grow_events());
+    f();
+    let allocs = CountingAlloc::events() - a0;
+    let grows = scratch::grow_events() - g0;
+    let mcells = work / r.median_s / 1e6;
+    report(&r, &format!("{mcells:.1} Mcell/s  {allocs} allocs  {grows} arena-grows"));
+    entries.push(EngineBench {
+        engine: engine.into(),
+        pattern: pattern.into(),
+        radius,
+        n,
+        threads,
+        mcells_per_s: mcells,
+        allocs_per_sweep: allocs,
+        arena_grows_per_sweep: grows,
+    });
+}
 
-    let r = bench_auto("naive star3d r4 96^3", 2.0, || {
-        std::hint::black_box(naive::apply3(&spec, &g));
-    });
-    report(&r, &format!("{:.1} Mcell/s", work / r.median_s / 1e6));
-    let r = bench_auto("simd  star3d r4 96^3", 2.0, || {
-        std::hint::black_box(simd::apply3(&spec, &g));
-    });
-    report(&r, &format!("{:.1} Mcell/s", work / r.median_s / 1e6));
+fn main() {
+    let n = env_usize("PERF_PROBE_N", 96);
+    let big_n = env_usize("PERF_PROBE_BIG_N", 256);
+    let budget = env_f64("PERF_PROBE_BUDGET_S", 1.0);
+    let threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4);
     let dims = matrix_unit::BlockDims::default();
-    let r = bench_auto("mxu   star3d r4 96^3", 2.0, || {
-        std::hint::black_box(matrix_unit::apply3(&spec, &g, dims));
-    });
-    report(&r, &format!("{:.1} Mcell/s", work / r.median_s / 1e6));
+    let mut entries: Vec<EngineBench> = Vec::new();
 
-    let bspec = StencilSpec::box3d(2);
-    let r = bench_auto("simd  box3d r2 96^3", 2.0, || {
-        std::hint::black_box(simd::apply3(&bspec, &g));
-    });
-    report(&r, &format!("{:.1} Mcell/s", work / r.median_s / 1e6));
-    let r = bench_auto("mxu   box3d r2 96^3", 2.0, || {
-        std::hint::black_box(matrix_unit::apply3(&bspec, &g, dims));
-    });
-    report(&r, &format!("{:.1} Mcell/s", work / r.median_s / 1e6));
+    // ---- engine matrix: star/box, r ∈ {1, 4}, all engines ----
+    let g = Grid3::random(n, n, n, 1);
+    for (pattern, radius) in [("star", 1), ("star", 4), ("box", 1), ("box", 4)] {
+        let spec = if pattern == "star" {
+            StencilSpec::star3d(radius)
+        } else {
+            StencilSpec::box3d(radius)
+        };
+        probe(&mut entries, "naive", pattern, radius, n, 1, budget, || {
+            std::hint::black_box(naive::apply3(&spec, &g));
+        });
+        probe(&mut entries, "simd", pattern, radius, n, 1, budget, || {
+            std::hint::black_box(simd::apply3(&spec, &g));
+        });
+        probe(&mut entries, "matrix_unit", pattern, radius, n, 1, budget, || {
+            std::hint::black_box(matrix_unit::apply3(&spec, &g, dims));
+        });
+        probe(&mut entries, "matrix_unit_par", pattern, radius, n, threads, budget, || {
+            std::hint::black_box(matrix_unit::apply3_par(&spec, &g, dims, threads));
+        });
+    }
 
-    // RTM steps
+    // ---- headline interior-throughput sweep: star r4 at big_n³ ----
+    if big_n > 0 {
+        let spec = StencilSpec::star3d(4);
+        let gb = Grid3::random(big_n, big_n, big_n, 2);
+        probe(&mut entries, "simd", "star", 4, big_n, 1, budget, || {
+            std::hint::black_box(simd::apply3(&spec, &gb));
+        });
+        probe(&mut entries, "matrix_unit_par", "star", 4, big_n, threads, budget, || {
+            std::hint::black_box(matrix_unit::apply3_par(&spec, &gb, dims, threads));
+        });
+    }
+
+    let out_path =
+        std::env::var("BENCH_ENGINES_OUT").unwrap_or_else(|_| "BENCH_engines.json".into());
+    let json = bench_json::render(&entries);
+    bench_json::validate(&json).expect("BENCH_engines.json failed schema validation");
+    std::fs::write(&out_path, &json).expect("writing BENCH_engines.json");
+    println!("wrote {out_path} ({} entries)", entries.len());
+
+    // ---- RTM steps (probe-only; not part of the engine JSON) ----
+    let work = (n * n * n) as f64;
+    let mid = n / 2;
     let m = media::layered_vti(n, n, n, 10.0, &media::default_layers());
     let w2 = second_deriv(4);
     let mut st = vti::VtiState::zeros(n, n, n);
-    st.inject(48, 48, 48, 1.0);
+    st.inject(mid, mid, mid, 1.0);
     let mut sc = vti::VtiScratch::new(n, n, n);
-    let r = bench_auto("vti step 96^3 (1 thread)", 2.0, || vti::step(&mut st, &m, &w2, 1, &mut sc));
+    let r = bench_auto(&format!("vti step {n}^3 (1 thread)"), budget, || {
+        vti::step(&mut st, &m, &w2, 1, &mut sc)
+    });
     report(&r, &format!("{:.1} Mcell/s", work / r.median_s / 1e6));
 
     let tm = media::layered_tti(n, n, n, 10.0, &media::default_layers());
     let trig = tti::TtiTrig::new(&tm);
     let w1 = first_deriv(4);
     let mut ts = tti::TtiState::zeros(n, n, n);
-    ts.inject(48, 48, 48, 1.0);
+    ts.inject(mid, mid, mid, 1.0);
     let mut tsc = tti::TtiScratch::new(n, n, n);
-    let r = bench_auto("tti step 96^3 (1 thread)", 3.0, || {
+    let r = bench_auto(&format!("tti step {n}^3 (1 thread)"), budget, || {
         tti::step(&mut ts, &tm, &trig, &w2, &w1, 1, &mut tsc)
     });
     report(&r, &format!("{:.1} Mcell/s", work / r.median_s / 1e6));
 
     // d2_axis per-axis breakdown
     for axis in 0..3 {
-        let r = bench_auto(&format!("d2_axis axis={axis} 96^3"), 1.5, || {
+        let r = bench_auto(&format!("d2_axis axis={axis} {n}^3"), budget, || {
             std::hint::black_box(vti::d2_axis(&g, &w2, axis, 1));
         });
         report(&r, &format!("{:.1} Mcell/s", work / r.median_s / 1e6));

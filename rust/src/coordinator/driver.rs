@@ -22,6 +22,7 @@ use std::sync::Mutex;
 use crate::grid::decomp::CartDecomp;
 use crate::grid::halo::HaloView;
 use crate::grid::par::ParGrid3;
+use crate::grid::shell;
 use crate::grid::Grid3;
 use crate::simulator::roofline::{self, Engine, MemKind, SweepConfig};
 use crate::simulator::Platform;
@@ -234,38 +235,10 @@ struct RegionTask {
     y1: usize,
 }
 
-/// Interior-local boxes (z0,z1,x0,x1,y0,y1) covering the boundary shell
-/// (points within `r` of a block face); disjoint, union = interior ∖ deep.
-fn boundary_boxes(nz: usize, nx: usize, ny: usize, r: usize) -> Vec<[usize; 6]> {
-    let zl = r.min(nz);
-    let zh = nz.saturating_sub(r).max(zl);
-    let xl = r.min(nx);
-    let xh = nx.saturating_sub(r).max(xl);
-    let yl = r.min(ny);
-    let yh = ny.saturating_sub(r).max(yl);
-    let mut out = Vec::with_capacity(6);
-    let mut push = |b: [usize; 6]| {
-        if b[0] < b[1] && b[2] < b[3] && b[4] < b[5] {
-            out.push(b);
-        }
-    };
-    push([0, zl, 0, nx, 0, ny]);
-    push([zh, nz, 0, nx, 0, ny]);
-    push([zl, zh, 0, xl, 0, ny]);
-    push([zl, zh, xh, nx, 0, ny]);
-    push([zl, zh, xl, xh, 0, yl]);
-    push([zl, zh, xl, xh, yh, ny]);
-    out
-}
-
-/// Interior-local deep box (needs no halo data), if non-empty.
-fn deep_box(nz: usize, nx: usize, ny: usize, r: usize) -> Option<[usize; 6]> {
-    if nz > 2 * r && nx > 2 * r && ny > 2 * r {
-        Some([r, nz - r, r, nx - r, r, ny - r])
-    } else {
-        None
-    }
-}
+// The deep-interior / boundary-shell split below comes from
+// `grid::shell` (shared with the stencil engines' O(surface) boundary
+// fills): `shell::interior_box` is the halo-independent batch,
+// `shell::boundary_boxes` the ≤6 slabs that wait on the exchange.
 
 /// Run `steps` repeated sweeps of `spec` over a global periodic grid
 /// decomposed across `decomp` ranks on the process-global pool,
@@ -324,7 +297,7 @@ fn multirank_sweep_on(
         let mut deep: Vec<RegionTask> = Vec::new();
         let mut shell: Vec<RegionTask> = Vec::new();
         for (rk, hg) in grids.iter().enumerate() {
-            if let Some([z0, z1, x0, x1, y0, y1]) = deep_box(hg.nz, hg.nx, hg.ny, r) {
+            if let Some([z0, z1, x0, x1, y0, y1]) = shell::interior_box(hg.nz, hg.nx, hg.ny, r) {
                 let span = z1 - z0;
                 let slabs = (threads * 2)
                     .div_ceil(decomp.ranks())
@@ -345,7 +318,7 @@ fn multirank_sweep_on(
                     z = ze;
                 }
             }
-            for [z0, z1, x0, x1, y0, y1] in boundary_boxes(hg.nz, hg.nx, hg.ny, r) {
+            for [z0, z1, x0, x1, y0, y1] in shell::boundary_boxes(hg.nz, hg.nx, hg.ny, r) {
                 shell.push(RegionTask {
                     rank: rk,
                     z0: z0 + r,
@@ -534,32 +507,6 @@ mod tests {
         // MPI gains nothing from pipelining and its comm is far slower
         assert_eq!(mpi.sim_step_pipelined_s, mpi.sim_step_s);
         assert!(mpi.sim_comm_s > sdma.sim_comm_s);
-    }
-
-    #[test]
-    fn boundary_and_deep_boxes_partition_interior() {
-        for (nz, nx, ny, r) in [(16, 16, 16, 4), (8, 8, 8, 4), (12, 20, 9, 2), (5, 5, 5, 4)] {
-            let mut hits = vec![0u8; nz * nx * ny];
-            let mut mark = |b: [usize; 6]| {
-                for z in b[0]..b[1] {
-                    for x in b[2]..b[3] {
-                        for y in b[4]..b[5] {
-                            hits[(z * nx + x) * ny + y] += 1;
-                        }
-                    }
-                }
-            };
-            if let Some(b) = deep_box(nz, nx, ny, r) {
-                mark(b);
-            }
-            for b in boundary_boxes(nz, nx, ny, r) {
-                mark(b);
-            }
-            assert!(
-                hits.iter().all(|&h| h == 1),
-                "({nz},{nx},{ny}) r={r}: boxes must cover the interior exactly once"
-            );
-        }
     }
 
     #[test]

@@ -15,7 +15,12 @@
 //! same storage through the views' shared cell access — without any
 //! `&mut` aliasing (see `grid::par`).  The `&mut [HaloGrid]` entry
 //! points below are serial conveniences that open views internally.
+//!
+//! Face pack/unpack staging goes through the worker-local scratch arena
+//! (`coordinator::scratch`): after the first step of a run, an exchange
+//! round performs zero heap allocations for its staging buffers.
 
+use super::scratch;
 use crate::grid::decomp::CartDecomp;
 use crate::grid::halo::{Axis, HaloGrid, HaloView, Side};
 use crate::grid::Grid3;
@@ -105,13 +110,22 @@ pub fn exchange_views(
         }
     }
     for (rank, axis, nb) in ordered {
-        // low rank's High face ↔ high rank's Low face, both directions
-        let to_nb = grids[rank].pack_face(axis, Side::High);
-        let to_rank = grids[nb].pack_face(axis, Side::Low);
-        let bytes = (to_nb.len() + to_rank.len()) as u64 * 4;
+        // low rank's High face ↔ high rank's Low face, both directions —
+        // staged through one worker-local scratch-arena buffer, so a
+        // steady-state exchange allocates nothing per face.  One buffer
+        // serialized over the two directions is safe: a pack reads only
+        // the interior-boundary slab, which is disjoint from the halo
+        // frame the preceding unpack wrote on the same axis.
+        let nb_len = grids[rank].face_len(axis);
+        let rank_len = grids[nb].face_len(axis);
+        scratch::with(nb_len.max(rank_len), |buf| {
+            grids[rank].pack_face_into(axis, Side::High, &mut buf[..nb_len]);
+            grids[nb].unpack_halo(axis, Side::Low, &buf[..nb_len]);
+            grids[nb].pack_face_into(axis, Side::Low, &mut buf[..rank_len]);
+            grids[rank].unpack_halo(axis, Side::High, &buf[..rank_len]);
+        });
+        let bytes = (nb_len + rank_len) as u64 * 4;
         let run = run_bytes(grids[rank].h, grids[rank].nx, grids[rank].ny, axis);
-        grids[nb].unpack_halo(axis, Side::Low, &to_nb);
-        grids[rank].unpack_halo(axis, Side::High, &to_rank);
         report.bytes += bytes;
         report.faces += 2;
         match backend {

@@ -7,6 +7,9 @@
 //!   fed through per-worker injector queues with work stealing;
 //! * [`pool`]     — `parallel_for`-style helpers dispatching onto the
 //!   process-global runtime (kept for the RTM propagators);
+//! * [`scratch`]  — worker-local grow-only scratch arenas backing the
+//!   engines' block windows, accumulator rows, and halo face staging
+//!   (allocation-free steady state, with a test hook);
 //! * [`exchange`] — halo exchange between rank subdomains, with both the
 //!   SDMA and the MPI cost paths (paper §IV-F, Table II);
 //! * [`pipeline`] — z-layer pipeline overlapping compute with exchange
@@ -19,4 +22,5 @@ pub mod exchange;
 pub mod pipeline;
 pub mod pool;
 pub mod runtime;
+pub mod scratch;
 pub mod tiles;

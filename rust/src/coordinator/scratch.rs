@@ -1,0 +1,166 @@
+//! Worker-local scratch arenas: reusable, grow-only `f32` buffers for
+//! the engine hot paths (PR 3 tentpole).
+//!
+//! The seed engines heap-allocated a fresh halo-window `Vec` per block
+//! (`GridSrc::extract_wrap`), a fresh `tmp` buffer per star block, and
+//! fresh pack/unpack staging per halo face — exactly the redundant
+//! allocation traffic §IV-C/§IV-D of the paper optimize away.  This
+//! module replaces all of it with per-thread buffer pools:
+//!
+//! * **Worker-local** — the pool is a `thread_local!`, so each
+//!   persistent runtime worker ([`super::runtime`]) keeps its own arena
+//!   for its whole life; helping submitter threads get their own.  No
+//!   locks, no cross-thread sharing, no false sharing.
+//! * **Grow-only** — buffers are never shrunk or freed while the thread
+//!   lives; a checkout reuses the largest free buffer and grows it only
+//!   if the request exceeds its capacity.  After one warm-up sweep the
+//!   steady state performs **zero heap allocations per block**.
+//! * **Borrowed per task** — checkouts are scoped ([`with`] hands the
+//!   buffer to a closure and reclaims it on return), so a buffer can
+//!   never leak across tasks or outlive its checkout.  Nested checkouts
+//!   (window + tmp in one block) pop distinct buffers.
+//!
+//! [`grow_events`] is the allocation-counting hook the regression tests
+//! and `examples/perf_probe.rs` assert on: it counts every real heap
+//! growth the arenas perform, so "allocation-free after warm-up" is a
+//! testable property, not a claim.
+//!
+//! Ownership rules (DESIGN.md §9): buffers belong to the thread, never
+//! to a task; contents are unspecified on checkout; no reference to a
+//! buffer may escape the checkout closure.
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide count of arena heap-growth events (a checkout that had
+/// to allocate a new buffer or enlarge an existing one).  Steady-state
+/// sweeps must not bump this — the allocation-counting perf hook
+/// (`examples/perf_probe.rs` records deltas across timed sweeps).
+static GROW_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+/// Cumulative arena heap-growth events since process start, summed over
+/// **all** threads.  For deterministic single-thread assertions (unit
+/// tests that may run concurrently with other arena users) use
+/// [`local_grow_events`] instead.
+pub fn grow_events() -> u64 {
+    GROW_EVENTS.load(Ordering::Relaxed)
+}
+
+/// Arena heap-growth events performed by the **calling thread** only —
+/// immune to concurrent test threads bumping the global counter.
+pub fn local_grow_events() -> u64 {
+    LOCAL_GROWS.with(|c| c.get())
+}
+
+thread_local! {
+    /// Free buffers of this thread's arena (small: at most the maximum
+    /// checkout nesting depth the engines use).
+    static FREE: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+    static LOCAL_GROWS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Check out a buffer with capacity ≥ `len`, growing only if needed.
+fn take(len: usize) -> Vec<f32> {
+    let mut buf = FREE.with(|f| {
+        let mut free = f.borrow_mut();
+        // reuse the largest free buffer: grow-only reuse converges on a
+        // small set of buffers sized for the biggest blocks seen
+        let best = free
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, b)| b.capacity())
+            .map(|(i, _)| i);
+        match best {
+            Some(i) => free.swap_remove(i),
+            None => Vec::new(),
+        }
+    });
+    if buf.capacity() < len {
+        GROW_EVENTS.fetch_add(1, Ordering::Relaxed);
+        LOCAL_GROWS.with(|c| c.set(c.get() + 1));
+        buf.reserve_exact(len - buf.len());
+    }
+    // keep the logical length pinned at full capacity: the fill runs
+    // once per grow, so a warm checkout is O(1) — no re-memset when a
+    // smaller request truncated the length on an earlier checkout
+    if buf.len() < buf.capacity() {
+        let cap = buf.capacity();
+        buf.resize(cap, 0.0);
+    }
+    buf
+}
+
+/// Return a buffer to this thread's pool (capacity retained).
+fn give(buf: Vec<f32>) {
+    FREE.with(|f| f.borrow_mut().push(buf));
+}
+
+/// Run `f` with a borrowed `len`-element scratch buffer.  Contents are
+/// **unspecified** (stale data from earlier checkouts) — callers must
+/// fully overwrite what they read (every engine consumer writes before
+/// reading, or `fill`s explicitly).
+pub fn with<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    let mut buf = take(len);
+    let r = f(&mut buf[..len]);
+    give(buf);
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_have_requested_length() {
+        with(17, |b| assert_eq!(b.len(), 17));
+        with(5, |b| assert_eq!(b.len(), 5));
+    }
+
+    #[test]
+    fn nested_checkouts_are_distinct() {
+        with(8, |a| {
+            a.fill(1.0);
+            with(8, |b| {
+                b.fill(2.0);
+                assert!(a.iter().all(|&v| v == 1.0));
+            });
+            assert!(a.iter().all(|&v| v == 1.0));
+        });
+    }
+
+    #[test]
+    fn warm_checkouts_do_not_grow() {
+        // warm this thread's arena for the sizes used below
+        with(1024, |_| {});
+        with(1024, |a| with(256, |b| (a.len(), b.len())));
+        let before = local_grow_events();
+        for _ in 0..50 {
+            with(1024, |a| {
+                a[0] = 1.0;
+                with(256, |b| b[0] = 2.0);
+            });
+            with(64, |_| {}); // smaller request reuses a big buffer
+        }
+        assert_eq!(local_grow_events(), before, "warm arena must not reallocate");
+    }
+
+    #[test]
+    fn growth_is_counted() {
+        // a fresh thread has an empty arena: the first checkout grows
+        let handle = std::thread::spawn(|| {
+            let before = local_grow_events();
+            with(32, |_| {});
+            local_grow_events() - before
+        });
+        assert_eq!(handle.join().unwrap(), 1);
+    }
+
+    #[test]
+    fn returned_values_pass_through() {
+        let v = with(4, |b| {
+            b[3] = 7.0;
+            b[3]
+        });
+        assert_eq!(v, 7.0);
+    }
+}

@@ -196,16 +196,27 @@ impl HaloView<'_> {
 
     /// See [`HaloGrid::pack_face`] — reads through the shared cell view.
     pub fn pack_face(&self, axis: Axis, side: Side) -> Vec<f32> {
+        let mut out = vec![0.0; self.face_len(axis)];
+        self.pack_face_into(axis, side, &mut out);
+        out
+    }
+
+    /// [`pack_face`](Self::pack_face) into a caller-provided buffer of
+    /// exactly [`face_len`](Self::face_len) elements — the form the
+    /// exchange stages through the worker-local scratch arena so a
+    /// steady-state step packs without heap allocation.
+    pub fn pack_face_into(&self, axis: Axis, side: Side, out: &mut [f32]) {
+        assert_eq!(out.len(), self.face_len(axis));
         let [z0, z1, x0, x1, y0, y1] = pack_box(self.nz, self.nx, self.ny, self.h, axis, side);
-        let mut out = Vec::with_capacity((z1 - z0) * (x1 - x0) * (y1 - y0));
+        let mut i = 0;
         for z in z0..z1 {
             for x in x0..x1 {
                 for y in y0..y1 {
-                    out.push(self.pg.get(z, x, y));
+                    out[i] = self.pg.get(z, x, y);
+                    i += 1;
                 }
             }
         }
-        out
     }
 
     /// See [`HaloGrid::unpack_halo`] — the halo-frame slab is claimed as

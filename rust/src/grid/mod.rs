@@ -8,6 +8,7 @@ pub mod brick;
 pub mod decomp;
 pub mod halo;
 pub mod par;
+pub mod shell;
 
 pub use brick::BrickLayout;
 pub use decomp::CartDecomp;

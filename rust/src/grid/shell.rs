@@ -1,0 +1,234 @@
+//! O(surface) boundary-shell enumeration.
+//!
+//! A periodic stencil sweep splits a grid into the wrap-free **deep
+//! interior** (`[r, n-r)` per axis) and the **boundary shell** (points
+//! within `r` of a face).  The seed engines found the shell by scanning
+//! the *whole volume* with an `inside()` predicate — O(N³) branchy work
+//! for an O(N²·r) point set.  This module enumerates the shell directly
+//! as at most six disjoint slabs (four in 2D), so engines visit only
+//! the points they actually recompute.
+//!
+//! The box set comes back in a fixed-size container ([`Boxes`]) — no
+//! heap allocation, so the per-task region paths that call this every
+//! step stay allocation-free.
+//!
+//! The same boxes drive the coordinator's dependency-ordered multirank
+//! batches (`coordinator::driver`): the deep interior runs concurrently
+//! with the halo exchange, and the shell waits for it.
+
+/// Up to `N` boxes of `D` bounds each (`[lo, hi)` pairs per axis),
+/// stored inline.  Iterates by value as `[usize; D]` items.
+#[derive(Clone, Copy, Debug)]
+pub struct Boxes<const D: usize, const N: usize> {
+    boxes: [[usize; D]; N],
+    len: usize,
+}
+
+impl<const D: usize, const N: usize> Boxes<D, N> {
+    fn new() -> Self {
+        Self { boxes: [[0; D]; N], len: 0 }
+    }
+
+    fn push(&mut self, b: [usize; D]) {
+        self.boxes[self.len] = b;
+        self.len += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[[usize; D]] {
+        &self.boxes[..self.len]
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, [usize; D]> {
+        self.as_slice().iter()
+    }
+}
+
+impl<const D: usize, const N: usize> IntoIterator for Boxes<D, N> {
+    type Item = [usize; D];
+    type IntoIter = std::iter::Take<std::array::IntoIter<[usize; D], N>>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.boxes.into_iter().take(self.len)
+    }
+}
+
+/// Wrap-free deep-interior box `[r, nz-r)×[r, nx-r)×[r, ny-r)` as
+/// `[z0, z1, x0, x1, y0, y1]`, if non-empty.
+pub fn interior_box(nz: usize, nx: usize, ny: usize, r: usize) -> Option<[usize; 6]> {
+    if nz > 2 * r && nx > 2 * r && ny > 2 * r {
+        Some([r, nz - r, r, nx - r, r, ny - r])
+    } else {
+        None
+    }
+}
+
+/// Disjoint boxes `[z0, z1, x0, x1, y0, y1]` covering the boundary
+/// shell (points within `r` of a face): two z-slabs over the full
+/// cross-section, two x-slabs over interior z, two y-slabs over
+/// interior z and x.  Union with [`interior_box`] partitions the
+/// volume; when no interior exists the boxes cover everything.
+pub fn boundary_boxes(nz: usize, nx: usize, ny: usize, r: usize) -> Boxes<6, 6> {
+    let zl = r.min(nz);
+    let zh = nz.saturating_sub(r).max(zl);
+    let xl = r.min(nx);
+    let xh = nx.saturating_sub(r).max(xl);
+    let yl = r.min(ny);
+    let yh = ny.saturating_sub(r).max(yl);
+    let mut out = Boxes::new();
+    let mut push = |b: [usize; 6]| {
+        if b[0] < b[1] && b[2] < b[3] && b[4] < b[5] {
+            out.push(b);
+        }
+    };
+    push([0, zl, 0, nx, 0, ny]);
+    push([zh, nz, 0, nx, 0, ny]);
+    push([zl, zh, 0, xl, 0, ny]);
+    push([zl, zh, xh, nx, 0, ny]);
+    push([zl, zh, xl, xh, 0, yl]);
+    push([zl, zh, xl, xh, yh, ny]);
+    out
+}
+
+/// 2D wrap-free interior `[r, nx-r)×[r, ny-r)` as `[x0, x1, y0, y1]`,
+/// if non-empty.
+pub fn interior_box2(nx: usize, ny: usize, r: usize) -> Option<[usize; 4]> {
+    if nx > 2 * r && ny > 2 * r {
+        Some([r, nx - r, r, ny - r])
+    } else {
+        None
+    }
+}
+
+/// 2D boundary shell as at most four disjoint `[x0, x1, y0, y1]` boxes.
+pub fn boundary_boxes2(nx: usize, ny: usize, r: usize) -> Boxes<4, 4> {
+    let xl = r.min(nx);
+    let xh = nx.saturating_sub(r).max(xl);
+    let yl = r.min(ny);
+    let yh = ny.saturating_sub(r).max(yl);
+    let mut out = Boxes::new();
+    let mut push = |b: [usize; 4]| {
+        if b[0] < b[1] && b[2] < b[3] {
+            out.push(b);
+        }
+    };
+    push([0, xl, 0, ny]);
+    push([xh, nx, 0, ny]);
+    push([xl, xh, 0, yl]);
+    push([xl, xh, yh, ny]);
+    out
+}
+
+/// Intersection of two `[z0, z1, x0, x1, y0, y1]` boxes, `None` if
+/// empty — used to clip the shell/interior split to a claimed region.
+pub fn intersect(a: [usize; 6], b: [usize; 6]) -> Option<[usize; 6]> {
+    let c = [
+        a[0].max(b[0]),
+        a[1].min(b[1]),
+        a[2].max(b[2]),
+        a[3].min(b[3]),
+        a[4].max(b[4]),
+        a[5].min(b[5]),
+    ];
+    if c[0] < c[1] && c[2] < c[3] && c[4] < c[5] {
+        Some(c)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boundary_and_interior_boxes_partition_the_volume() {
+        for (nz, nx, ny, r) in [
+            (16, 16, 16, 4),
+            (8, 8, 8, 4),
+            (12, 20, 9, 2),
+            (5, 5, 5, 4),
+            (9, 9, 9, 0),
+            (1, 7, 7, 1),
+        ] {
+            let mut hits = vec![0u8; nz * nx * ny];
+            let mut mark = |b: [usize; 6]| {
+                for z in b[0]..b[1] {
+                    for x in b[2]..b[3] {
+                        for y in b[4]..b[5] {
+                            hits[(z * nx + x) * ny + y] += 1;
+                        }
+                    }
+                }
+            };
+            if let Some(b) = interior_box(nz, nx, ny, r) {
+                mark(b);
+            }
+            for b in boundary_boxes(nz, nx, ny, r) {
+                mark(b);
+            }
+            assert!(
+                hits.iter().all(|&h| h == 1),
+                "({nz},{nx},{ny}) r={r}: boxes must cover the volume exactly once"
+            );
+        }
+    }
+
+    #[test]
+    fn shell_point_count_is_o_surface() {
+        // 32³ at r=2: shell has N³ − (N−2r)³ points, enumerated exactly
+        let (n, r) = (32usize, 2usize);
+        let total: usize = boundary_boxes(n, n, n, r)
+            .iter()
+            .map(|b| (b[1] - b[0]) * (b[3] - b[2]) * (b[5] - b[4]))
+            .sum();
+        assert_eq!(total, n * n * n - (n - 2 * r).pow(3));
+    }
+
+    #[test]
+    fn boxes2_partition_the_plane() {
+        for (nx, ny, r) in [(10, 10, 2), (5, 9, 4), (4, 4, 4), (7, 7, 0)] {
+            let mut hits = vec![0u8; nx * ny];
+            let mut mark = |b: [usize; 4]| {
+                for x in b[0]..b[1] {
+                    for y in b[2]..b[3] {
+                        hits[x * ny + y] += 1;
+                    }
+                }
+            };
+            if let Some(b) = interior_box2(nx, ny, r) {
+                mark(b);
+            }
+            for b in boundary_boxes2(nx, ny, r) {
+                mark(b);
+            }
+            assert!(hits.iter().all(|&h| h == 1), "({nx},{ny}) r={r}");
+        }
+    }
+
+    #[test]
+    fn box_set_is_inline_and_sized() {
+        let b = boundary_boxes(16, 16, 16, 4);
+        assert_eq!(b.len(), 6);
+        assert!(!b.is_empty());
+        assert_eq!(b.as_slice().len(), 6);
+        let none = boundary_boxes(9, 9, 9, 0);
+        assert!(none.is_empty());
+        assert_eq!(none.into_iter().count(), 0);
+    }
+
+    #[test]
+    fn intersect_clips_and_rejects() {
+        let a = [0, 10, 0, 10, 0, 10];
+        assert_eq!(intersect(a, [5, 15, 2, 4, 0, 10]), Some([5, 10, 2, 4, 0, 10]));
+        assert_eq!(intersect(a, [10, 12, 0, 10, 0, 10]), None);
+        assert_eq!(intersect([3, 3, 0, 1, 0, 1], a), None); // empty input
+    }
+}

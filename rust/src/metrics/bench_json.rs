@@ -1,0 +1,166 @@
+//! Stable JSON schema for the per-engine perf trajectory
+//! (`BENCH_engines.json`, emitted by `examples/perf_probe.rs` and
+//! uploaded as a CI artifact).
+//!
+//! The numbers are advisory — host-dependent throughput is never gated
+//! on — but the **schema is contract**: CI validates it on every PR so
+//! the trajectory stays machine-readable across the PR sequence.
+//! Renderer and validator are hand-rolled (no serde; DESIGN.md §7).
+
+/// Schema tag carried in the document; bump on breaking field changes.
+pub const SCHEMA: &str = "mmstencil.bench_engines.v1";
+
+/// One engine × workload measurement.
+#[derive(Clone, Debug)]
+pub struct EngineBench {
+    /// "naive" | "simd" | "matrix_unit" | "matrix_unit_par" | …
+    pub engine: String,
+    /// "star" | "box"
+    pub pattern: String,
+    pub radius: usize,
+    /// Cubic grid edge (the workload is an n³ periodic sweep).
+    pub n: usize,
+    /// Parallelism the engine ran with (1 for serial engines).
+    pub threads: usize,
+    /// Median throughput in million stencil outputs per second.
+    pub mcells_per_s: f64,
+    /// Heap allocations observed during one post-warm-up sweep
+    /// (counting global allocator in the probe binary).
+    pub allocs_per_sweep: u64,
+    /// Scratch-arena growth events during the same sweep
+    /// (`coordinator::scratch::grow_events` delta; 0 in steady state).
+    pub arena_grows_per_sweep: u64,
+}
+
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Render the document.  Entries keep their push order, so re-runs of
+/// the same probe diff cleanly.
+pub fn render(entries: &[EngineBench]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("  \"schema\": \"{SCHEMA}\",\n"));
+    s.push_str("  \"entries\": [\n");
+    for (i, e) in entries.iter().enumerate() {
+        let m = if e.mcells_per_s.is_finite() { e.mcells_per_s } else { 0.0 };
+        s.push_str(&format!(
+            "    {{\"engine\": \"{}\", \"pattern\": \"{}\", \"radius\": {}, \"n\": {}, \
+             \"threads\": {}, \"mcells_per_s\": {:.3}, \"allocs_per_sweep\": {}, \
+             \"arena_grows_per_sweep\": {}}}{}\n",
+            esc(&e.engine),
+            esc(&e.pattern),
+            e.radius,
+            e.n,
+            e.threads,
+            m,
+            e.allocs_per_sweep,
+            e.arena_grows_per_sweep,
+            if i + 1 == entries.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Structural validation of a rendered document: schema tag, balanced
+/// nesting, and every entry carrying the full key set.  Returns the
+/// entry count.  (CI additionally parses the artifact with a real JSON
+/// parser; this keeps the contract testable offline.)
+pub fn validate(s: &str) -> Result<usize, String> {
+    if !s.contains(&format!("\"schema\": \"{SCHEMA}\"")) {
+        return Err(format!("missing schema tag {SCHEMA}"));
+    }
+    let (mut brace, mut bracket) = (0i64, 0i64);
+    for c in s.chars() {
+        match c {
+            '{' => brace += 1,
+            '}' => brace -= 1,
+            '[' => bracket += 1,
+            ']' => bracket -= 1,
+            _ => {}
+        }
+        if brace < 0 || bracket < 0 {
+            return Err("unbalanced nesting".into());
+        }
+    }
+    if brace != 0 || bracket != 0 {
+        return Err("unbalanced nesting".into());
+    }
+    let count = s.matches("\"engine\":").count();
+    for k in [
+        "\"pattern\":",
+        "\"radius\":",
+        "\"n\":",
+        "\"threads\":",
+        "\"mcells_per_s\":",
+        "\"allocs_per_sweep\":",
+        "\"arena_grows_per_sweep\":",
+    ] {
+        if s.matches(k).count() != count {
+            return Err(format!("key {k} count mismatch (expected {count})"));
+        }
+    }
+    Ok(count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<EngineBench> {
+        vec![
+            EngineBench {
+                engine: "simd".into(),
+                pattern: "star".into(),
+                radius: 4,
+                n: 96,
+                threads: 1,
+                mcells_per_s: 123.456,
+                allocs_per_sweep: 2,
+                arena_grows_per_sweep: 0,
+            },
+            EngineBench {
+                engine: "matrix_unit_par".into(),
+                pattern: "box".into(),
+                radius: 1,
+                n: 96,
+                threads: 8,
+                mcells_per_s: 77.0,
+                allocs_per_sweep: 31,
+                arena_grows_per_sweep: 0,
+            },
+        ]
+    }
+
+    #[test]
+    fn render_validates() {
+        let doc = render(&sample());
+        assert_eq!(validate(&doc), Ok(2));
+        assert!(doc.contains("\"schema\": \"mmstencil.bench_engines.v1\""));
+        assert!(doc.contains("\"mcells_per_s\": 123.456"));
+    }
+
+    #[test]
+    fn empty_document_is_valid_with_zero_entries() {
+        assert_eq!(validate(&render(&[])), Ok(0));
+    }
+
+    #[test]
+    fn tampered_documents_fail() {
+        let doc = render(&sample());
+        assert!(validate(&doc.replace("bench_engines.v1", "v0")).is_err());
+        assert!(validate(&doc.replace("\"radius\":", "\"r\":")).is_err());
+        assert!(validate(doc.trim_end().trim_end_matches('}')).is_err());
+    }
+
+    #[test]
+    fn non_finite_throughput_is_clamped() {
+        let mut e = sample();
+        e[0].mcells_per_s = f64::INFINITY;
+        let doc = render(&e);
+        assert!(validate(&doc).is_ok());
+        assert!(doc.contains("\"mcells_per_s\": 0.000"));
+    }
+}

@@ -1,7 +1,11 @@
 //! Run records and the paper's reporting metrics: GStencil/s,
 //! bandwidth utilization, speedups, plus CSV/markdown export for the
 //! bench harness (criterion is unavailable offline — `util::bench` does
-//! the timing, this module does the bookkeeping).
+//! the timing, this module does the bookkeeping).  [`bench_json`]
+//! carries the stable `BENCH_engines.json` schema behind the perf
+//! trajectory.
+
+pub mod bench_json;
 
 use crate::stencil::StencilSpec;
 

@@ -1,10 +1,29 @@
 //! The MMStencil matrix-unit algorithm (paper §IV-A/§IV-C), emulated.
 //!
-//! Numerics: the grid is swept in `(VZ, VX, VY)` blocks; each block loads
-//! a halo-extended window once (the brick scheme) and computes per-axis
-//! 1D stencils as outer-product accumulations into 16×16 tiles, with the
-//! x/y partial kept in a temporary buffer before the z pass (Cache
-//! Pollution Avoiding Intermediate Result Placement).
+//! Numerics: the grid is swept in `(VZ, VX, VY)` blocks; each block
+//! reads a halo-extended window and computes per-axis 1D stencils as
+//! outer-product accumulations into 16×16 tiles, with the x/y partial
+//! kept in a temporary buffer before the z pass (Cache Pollution
+//! Avoiding Intermediate Result Placement).
+//!
+//! Memory discipline (PR 3): the hot path is **allocation-free after
+//! warm-up** and **zero-copy for interior blocks** —
+//!
+//! * blocks whose halo window lies fully inside the grid read strided
+//!   y-rows straight from the [`GridSrc`] ([`DirectWin`]) — no window
+//!   materialization at all;
+//! * only the O(surface) boundary blocks wrap-copy their window, into a
+//!   worker-local scratch-arena buffer (`coordinator::scratch`), never
+//!   a fresh `Vec`;
+//! * the star `tmp` buffer comes from the same arena, and results land
+//!   directly in the claimed output view (no per-block result `Vec`).
+//!
+//! Parallelism: [`apply3_on`] fans the z-block loop out over the
+//! persistent worker runtime via disjoint `TileViewMut` z-slab claims;
+//! per-task [`Counts`] are merged by reduction, so the instruction
+//! accounting is *exactly* the serial sweep's (integer sums commute)
+//! and the grid bytes are *bitwise* the serial sweep's (identical
+//! per-block kernels on disjoint regions).
 //!
 //! Instruction accounting: every block records the instruction mix the
 //! paper reasons about —
@@ -21,7 +40,9 @@
 //! 4-cycle outer-product latency, and the SIMD/Matrix frequency ratio.
 
 use super::{Pattern, StencilSpec};
-use crate::grid::par::{GridSrc, ParGrid3};
+use crate::coordinator::runtime::{self, Runtime};
+use crate::coordinator::scratch;
+use crate::grid::par::{GridSrc, ParGrid3, TileViewMut};
 use crate::grid::{Grid2, Grid3};
 
 /// Instruction counters for the matrix-unit model.
@@ -73,126 +94,336 @@ fn div_up(a: usize, b: usize) -> usize {
     a.div_ceil(b)
 }
 
-/// Apply a 3D spec over a periodic grid, blockwise. Returns the result
-/// and the accumulated instruction counts.  Reads go through [`GridSrc`]
-/// and block results land through an exclusive grid view, so the block
-/// loop is ready to be task-parallelized over disjoint claims.
-pub fn apply3<S: GridSrc>(spec: &StencilSpec, g: &S, dims: BlockDims) -> (Grid3, Counts) {
-    assert_eq!(spec.ndim, 3);
-    let (vl, vz) = (dims.vl, dims.vz);
+/// Halo-window rows: `row(z, x)` is the y-contiguous `hy`-length row at
+/// window coordinates `(z, x)`.  The two implementations are the
+/// zero-copy / wrap-copy split: [`DirectWin`] for interior blocks,
+/// [`PackedWin`] for boundary blocks.
+trait Win {
+    fn row(&self, z: usize, x: usize) -> &[f32];
+}
+
+/// Packed window buffer (boundary blocks; wrap-copied into the arena).
+struct PackedWin<'a> {
+    w: &'a [f32],
+    hx: usize,
+    hy: usize,
+}
+
+impl Win for PackedWin<'_> {
+    #[inline(always)]
+    fn row(&self, z: usize, x: usize) -> &[f32] {
+        let b = (z * self.hx + x) * self.hy;
+        &self.w[b..b + self.hy]
+    }
+}
+
+/// Zero-copy window over a fully interior block: rows are strided spans
+/// read straight from the source grid — no copy, no allocation.
+struct DirectWin<'a, S: GridSrc> {
+    g: &'a S,
+    nx: usize,
+    ny: usize,
+    /// Grid coordinates of window origin (block origin minus radius).
+    z0: usize,
+    x0: usize,
+    y0: usize,
+    hy: usize,
+}
+
+impl<S: GridSrc> Win for DirectWin<'_, S> {
+    #[inline(always)]
+    fn row(&self, z: usize, x: usize) -> &[f32] {
+        let b = ((self.z0 + z) * self.nx + (self.x0 + x)) * self.ny + self.y0;
+        self.g.span(b, self.hy)
+    }
+}
+
+/// Wrap-copy a halo window into `out` (packed `(z, x, y)` order) — the
+/// boundary-block path; `out` comes from the scratch arena.
+fn fill_window_wrap<S: GridSrc>(
+    g: &S,
+    z0: isize,
+    x0: isize,
+    y0: isize,
+    hz: usize,
+    hx: usize,
+    hy: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), hz * hx * hy);
+    let mut i = 0;
+    for dz in 0..hz as isize {
+        for dx in 0..hx as isize {
+            for dy in 0..hy as isize {
+                out[i] = g.get_wrap(z0 + dz, x0 + dx, y0 + dy);
+                i += 1;
+            }
+        }
+    }
+}
+
+/// Star block: x/y passes accumulate into the arena `tmp` buffer; the z
+/// pass is applied after the intermediate-buffer round-trip, storing
+/// straight into the claimed view rows.
+fn star3_block<W: Win>(
+    spec: &StencilSpec,
+    w: &W,
+    out: &mut TileViewMut<'_>,
+    z0: usize,
+    x0: usize,
+    y0: usize,
+    bz: usize,
+    bx: usize,
+    by: usize,
+    tmp: &mut [f32],
+) {
+    let r = spec.radius;
+    let (wz, wx, wy) = (&spec.star_axes[0], &spec.star_axes[1], &spec.star_axes[2]);
+    debug_assert_eq!(tmp.len(), bz * bx * by);
+    // temp buffer = x/y partial + centre (lives in the tile accumulators)
+    for z in 0..bz {
+        for x in 0..bx {
+            let t = &mut tmp[(z * bx + x) * by..][..by];
+            let c = w.row(z + r, x + r);
+            for y in 0..by {
+                t[y] = spec.star_center * c[y + r];
+            }
+            for i in 0..2 * r + 1 {
+                if i == r {
+                    continue;
+                }
+                let wyi = wy[i];
+                for y in 0..by {
+                    t[y] += wyi * c[y + i];
+                }
+                let xr = w.row(z + r, x + i);
+                let wxi = wx[i];
+                for y in 0..by {
+                    t[y] += wxi * xr[y + r];
+                }
+            }
+        }
+    }
+    // z pass reads the window again (different tile orientation) and
+    // lands the result in the exclusive view
+    for z in 0..bz {
+        for x in 0..bx {
+            let t = &tmp[(z * bx + x) * by..][..by];
+            let o = out.row_mut(z0 + z, x0 + x, y0, by);
+            o.copy_from_slice(t);
+            for i in 0..2 * r + 1 {
+                if i == r {
+                    continue;
+                }
+                let zr = w.row(z + i, x + r);
+                let wzi = wz[i];
+                for y in 0..by {
+                    o[y] += wzi * zr[y + r];
+                }
+            }
+        }
+    }
+}
+
+fn box3_block<W: Win>(
+    spec: &StencilSpec,
+    w: &W,
+    out: &mut TileViewMut<'_>,
+    z0: usize,
+    x0: usize,
+    y0: usize,
+    bz: usize,
+    bx: usize,
+    by: usize,
+) {
+    let r = spec.radius;
+    let n = 2 * r + 1;
+    // Redundant-Access Zeroing order: sub-stencil loop over the shared
+    // window (one load of the halo cube serves all (2r+1)^2 passes)
+    for z in 0..bz {
+        for x in 0..bx {
+            let o = out.row_mut(z0 + z, x0 + x, y0, by);
+            o.fill(0.0);
+            for c in 0..n {
+                for a in 0..n {
+                    let srow = w.row(z + c, x + a);
+                    for b in 0..n {
+                        let wv = spec.box_w[(c * n + a) * n + b];
+                        for y in 0..by {
+                            o[y] += wv * srow[y + b];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Dispatch one block through the zero-copy / wrap-copy window split.
+fn compute_block<S: GridSrc>(
+    spec: &StencilSpec,
+    g: &S,
+    view: &mut TileViewMut<'_>,
+    z0: usize,
+    x0: usize,
+    y0: usize,
+    bz: usize,
+    bx: usize,
+    by: usize,
+) {
     let r = spec.radius;
     let (gnz, gnx, gny) = g.shape();
-    let mut out = Grid3::zeros(gnz, gnx, gny);
+    let (hz, hx, hy) = (bz + 2 * r, bx + 2 * r, by + 2 * r);
+    let interior = z0 >= r
+        && z0 + bz + r <= gnz
+        && x0 >= r
+        && x0 + bx + r <= gnx
+        && y0 >= r
+        && y0 + by + r <= gny;
+    if interior {
+        // zero-copy: strided spans straight from the source
+        let win = DirectWin { g, nx: gnx, ny: gny, z0: z0 - r, x0: x0 - r, y0: y0 - r, hy };
+        run_block(spec, &win, view, z0, x0, y0, bz, bx, by);
+    } else {
+        // O(surface) boundary block: wrap-copy into the arena
+        scratch::with(hz * hx * hy, |w| {
+            fill_window_wrap(
+                g,
+                z0 as isize - r as isize,
+                x0 as isize - r as isize,
+                y0 as isize - r as isize,
+                hz,
+                hx,
+                hy,
+                w,
+            );
+            let win = PackedWin { w, hx, hy };
+            run_block(spec, &win, view, z0, x0, y0, bz, bx, by);
+        });
+    }
+}
+
+fn run_block<W: Win>(
+    spec: &StencilSpec,
+    win: &W,
+    view: &mut TileViewMut<'_>,
+    z0: usize,
+    x0: usize,
+    y0: usize,
+    bz: usize,
+    bx: usize,
+    by: usize,
+) {
+    match spec.pattern {
+        Pattern::Star => scratch::with(bz * bx * by, |tmp| {
+            star3_block(spec, win, view, z0, x0, y0, bz, bx, by, tmp)
+        }),
+        Pattern::Box => box3_block(spec, win, view, z0, x0, y0, bz, bx, by),
+    }
+}
+
+/// Compute every block whose z-origin lies in `[zlo, zhi)` into `view`
+/// (which must claim exactly those z rows, full xy extent), returning
+/// the accumulated instruction counts.  `zlo`/`zhi` must be z-block
+/// boundaries (multiples of `vz`, or the grid end) so serial and
+/// parallel sweeps partition identically.
+fn apply3_zspan<S: GridSrc>(
+    spec: &StencilSpec,
+    g: &S,
+    dims: BlockDims,
+    view: &mut TileViewMut<'_>,
+    zlo: usize,
+    zhi: usize,
+) -> Counts {
+    let (vl, vz) = (dims.vl, dims.vz);
+    let (_, gnx, gny) = g.shape();
     let mut counts = Counts::default();
+    let mut z0 = zlo;
+    while z0 < zhi {
+        let bz = vz.min(zhi - z0);
+        let mut x0 = 0;
+        while x0 < gnx {
+            let bx = vl.min(gnx - x0);
+            let mut y0 = 0;
+            while y0 < gny {
+                let by = vl.min(gny - y0);
+                counts.add(&match spec.pattern {
+                    Pattern::Star => star3_counts(spec, bz, bx, by, vl),
+                    Pattern::Box => box3_counts(spec, bz, bx, by, vl),
+                });
+                compute_block(spec, g, view, z0, x0, y0, bz, bx, by);
+                y0 += by;
+            }
+            x0 += bx;
+        }
+        z0 += bz;
+    }
+    counts
+}
+
+/// Apply a 3D spec over a periodic grid, blockwise (serial).  Returns
+/// the result and the accumulated instruction counts.  Reads go through
+/// [`GridSrc`] (zero-copy for interior blocks) and block results land
+/// through an exclusive grid view; [`apply3_on`] is the task-parallel
+/// form over the same kernels.
+pub fn apply3<S: GridSrc>(spec: &StencilSpec, g: &S, dims: BlockDims) -> (Grid3, Counts) {
+    assert_eq!(spec.ndim, 3);
+    let (gnz, gnx, gny) = g.shape();
+    let mut out = Grid3::zeros(gnz, gnx, gny);
+    let counts;
     {
         let pg = ParGrid3::new(&mut out);
         let mut view = pg.full_view();
-        let mut z0 = 0;
-        while z0 < gnz {
-            let bz = vz.min(gnz - z0);
-            let mut x0 = 0;
-            while x0 < gnx {
-                let bx = vl.min(gnx - x0);
-                let mut y0 = 0;
-                while y0 < gny {
-                    let by = vl.min(gny - y0);
-                    let window = g.extract_wrap(
-                        z0 as isize - r as isize,
-                        x0 as isize - r as isize,
-                        y0 as isize - r as isize,
-                        bz + 2 * r,
-                        bx + 2 * r,
-                        by + 2 * r,
-                    );
-                    let block = match spec.pattern {
-                        Pattern::Star => {
-                            counts.add(&star3_counts(spec, bz, bx, by, vl));
-                            star3_block(spec, &window, bz, bx, by)
-                        }
-                        Pattern::Box => {
-                            counts.add(&box3_counts(spec, bz, bx, by, vl));
-                            box3_block(spec, &window, bz, bx, by)
-                        }
-                    };
-                    view.insert_block(z0, x0, y0, bz, bx, by, &block);
-                    y0 += by;
-                }
-                x0 += bx;
-            }
-            z0 += bz;
-        }
+        counts = apply3_zspan(spec, g, dims, &mut view, 0, gnz);
     }
     (out, counts)
 }
 
-/// Star block: x/y passes accumulate into a temp tile buffer; z pass is
-/// applied after an intermediate-buffer round-trip.
-fn star3_block(spec: &StencilSpec, w: &[f32], bz: usize, bx: usize, by: usize) -> Vec<f32> {
-    let r = spec.radius;
-    let (wz, wx, wy) = (&spec.star_axes[0], &spec.star_axes[1], &spec.star_axes[2]);
-    let (hx, hy) = (bx + 2 * r, by + 2 * r);
-    let at = |z: usize, x: usize, y: usize| w[(z * hx + x) * hy + y];
-    // temp buffer = x/y partial + centre (lives in the tile accumulators)
-    let mut tmp = vec![0.0f32; bz * bx * by];
-    for z in 0..bz {
-        for x in 0..bx {
-            for y in 0..by {
-                // outer-product order: iterate input index, accumulate
-                let mut acc = spec.star_center * at(z + r, x + r, y + r);
-                for i in 0..2 * r + 1 {
-                    if i == r {
-                        continue;
-                    }
-                    acc += wy[i] * at(z + r, x + r, y + i);
-                    acc += wx[i] * at(z + r, x + i, y + r);
-                }
-                tmp[(z * bx + x) * by + y] = acc;
-            }
-        }
+/// Parallel matrix-unit sweep on `rt`: the z-block loop fans out over
+/// the persistent runtime, each task claiming a disjoint z-slab
+/// [`TileViewMut`] and running the same per-block kernels as the serial
+/// [`apply3`].  Per-task [`Counts`] are merged by reduction — the total
+/// is exactly the serial sweep's, and the grid is bitwise identical.
+pub fn apply3_on<S: GridSrc>(
+    rt: &Runtime,
+    spec: &StencilSpec,
+    g: &S,
+    dims: BlockDims,
+    threads: usize,
+) -> (Grid3, Counts) {
+    assert_eq!(spec.ndim, 3);
+    let (gnz, gnx, gny) = g.shape();
+    let vz = dims.vz.max(1);
+    let nslabs = gnz.div_ceil(vz);
+    let mut out = Grid3::zeros(gnz, gnx, gny);
+    // one shared accumulator, one uncontended lock per slab: u64 sums
+    // commute, so the total is exactly the serial sweep's regardless of
+    // task completion order
+    let total = std::sync::Mutex::new(Counts::default());
+    {
+        let pg = ParGrid3::new(&mut out);
+        let pg = &pg;
+        let total = &total;
+        rt.run(threads.max(1), nslabs, &|i| {
+            let z0 = i * vz;
+            let z1 = (z0 + vz).min(gnz);
+            let mut view = pg.view(z0, z1, 0, gnx, 0, gny);
+            let c = apply3_zspan(spec, g, dims, &mut view, z0, z1);
+            total.lock().unwrap().add(&c);
+        });
     }
-    // z pass reads the window again (different tile orientation)
-    let mut outb = tmp;
-    for z in 0..bz {
-        for x in 0..bx {
-            for y in 0..by {
-                let mut acc = 0.0f32;
-                for i in 0..2 * r + 1 {
-                    if i == r {
-                        continue;
-                    }
-                    acc += wz[i] * at(z + i, x + r, y + r);
-                }
-                outb[(z * bx + x) * by + y] += acc;
-            }
-        }
-    }
-    outb
+    let counts = total.into_inner().unwrap();
+    (out, counts)
 }
 
-fn box3_block(spec: &StencilSpec, w: &[f32], bz: usize, bx: usize, by: usize) -> Vec<f32> {
-    let r = spec.radius;
-    let n = 2 * r + 1;
-    let (hx, hy) = (bx + 2 * r, by + 2 * r);
-    let at = |z: usize, x: usize, y: usize| w[(z * hx + x) * hy + y];
-    let mut outb = vec![0.0f32; bz * bx * by];
-    // Redundant-Access Zeroing order: sub-stencil loop innermost over the
-    // shared window (one load of the halo cube serves all (2r+1)^2 passes)
-    for z in 0..bz {
-        for x in 0..bx {
-            for y in 0..by {
-                let mut acc = 0.0f32;
-                for c in 0..n {
-                    for a in 0..n {
-                        for b in 0..n {
-                            acc += spec.box_w[(c * n + a) * n + b] * at(z + c, x + a, y + b);
-                        }
-                    }
-                }
-                outb[(z * bx + x) * by + y] = acc;
-            }
-        }
-    }
-    outb
+/// [`apply3_on`] over the process-global runtime.
+pub fn apply3_par<S: GridSrc>(
+    spec: &StencilSpec,
+    g: &S,
+    dims: BlockDims,
+    threads: usize,
+) -> (Grid3, Counts) {
+    apply3_on(runtime::global(), spec, g, dims, threads)
 }
 
 fn star3_counts(spec: &StencilSpec, bz: usize, bx: usize, by: usize, vl: usize) -> Counts {
@@ -231,7 +462,106 @@ fn box3_counts(spec: &StencilSpec, bz: usize, bx: usize, by: usize, vl: usize) -
     c
 }
 
-/// 2D variant (VZ = 1 blocks).
+/// 2D window rows (`row(x)` is the y-contiguous `hy`-length row):
+/// zero-copy for interior blocks, arena-packed for boundary blocks.
+enum Win2<'a> {
+    Packed { w: &'a [f32], hy: usize },
+    Direct { data: &'a [f32], ny: usize, x0: usize, y0: usize, hy: usize },
+}
+
+impl Win2<'_> {
+    #[inline(always)]
+    fn row(&self, x: usize) -> &[f32] {
+        match *self {
+            Win2::Packed { w, hy } => &w[x * hy..(x + 1) * hy],
+            Win2::Direct { data, ny, x0, y0, hy } => {
+                let b = (x0 + x) * ny + y0;
+                &data[b..b + hy]
+            }
+        }
+    }
+}
+
+fn star2_block(
+    spec: &StencilSpec,
+    w: &Win2<'_>,
+    out: &mut Grid2,
+    x0: usize,
+    y0: usize,
+    bx: usize,
+    by: usize,
+) {
+    let r = spec.radius;
+    let (wx, wy) = (&spec.star_axes[0], &spec.star_axes[1]);
+    for x in 0..bx {
+        let ob = out.idx(x0 + x, y0);
+        let o = &mut out.data[ob..ob + by];
+        let c = w.row(x + r);
+        for y in 0..by {
+            o[y] = spec.star_center * c[y + r];
+        }
+        for i in 0..2 * r + 1 {
+            if i == r {
+                continue;
+            }
+            let wyi = wy[i];
+            for y in 0..by {
+                o[y] += wyi * c[y + i];
+            }
+            let xr = w.row(x + i);
+            let wxi = wx[i];
+            for y in 0..by {
+                o[y] += wxi * xr[y + r];
+            }
+        }
+    }
+}
+
+fn run2_block(
+    spec: &StencilSpec,
+    w: &Win2<'_>,
+    out: &mut Grid2,
+    x0: usize,
+    y0: usize,
+    bx: usize,
+    by: usize,
+) {
+    match spec.pattern {
+        Pattern::Star => star2_block(spec, w, out, x0, y0, bx, by),
+        Pattern::Box => box2_block(spec, w, out, x0, y0, bx, by),
+    }
+}
+
+fn box2_block(
+    spec: &StencilSpec,
+    w: &Win2<'_>,
+    out: &mut Grid2,
+    x0: usize,
+    y0: usize,
+    bx: usize,
+    by: usize,
+) {
+    let r = spec.radius;
+    let n = 2 * r + 1;
+    for x in 0..bx {
+        let ob = out.idx(x0 + x, y0);
+        let o = &mut out.data[ob..ob + by];
+        o.fill(0.0);
+        for a in 0..n {
+            let srow = w.row(x + a);
+            for b in 0..n {
+                let wv = spec.box_w[a * n + b];
+                for y in 0..by {
+                    o[y] += wv * srow[y + b];
+                }
+            }
+        }
+    }
+}
+
+/// 2D variant (VZ = 1 blocks), with the same zero-copy / wrap-copy
+/// window split as [`apply3`]: interior blocks read rows straight from
+/// the grid, boundary blocks wrap-copy into the scratch arena.
 pub fn apply2(spec: &StencilSpec, g: &Grid2, dims: BlockDims) -> (Grid2, Counts) {
     assert_eq!(spec.ndim, 2);
     let vl = dims.vl;
@@ -245,31 +575,27 @@ pub fn apply2(spec: &StencilSpec, g: &Grid2, dims: BlockDims) -> (Grid2, Counts)
         while y0 < g.ny {
             let by = vl.min(g.ny - y0);
             let (hx, hy) = (bx + 2 * r, by + 2 * r);
-            let mut window = Vec::with_capacity(hx * hy);
-            for dx in 0..hx as isize {
-                for dy in 0..hy as isize {
-                    let gx = x0 as isize - r as isize + dx;
-                    let gy = y0 as isize - r as isize + dy;
-                    window.push(g.get_wrap(gx, gy));
-                }
-            }
-            let at = |x: usize, y: usize| window[x * hy + y];
-            match spec.pattern {
-                Pattern::Star => {
-                    let (wx, wy) = (&spec.star_axes[0], &spec.star_axes[1]);
-                    for x in 0..bx {
-                        for y in 0..by {
-                            let mut acc = spec.star_center * at(x + r, y + r);
-                            for i in 0..2 * r + 1 {
-                                if i == r {
-                                    continue;
-                                }
-                                acc += wy[i] * at(x + r, y + i);
-                                acc += wx[i] * at(x + i, y + r);
-                            }
-                            out.set(x0 + x, y0 + y, acc);
+            let interior = x0 >= r && x0 + bx + r <= g.nx && y0 >= r && y0 + by + r <= g.ny;
+            if interior {
+                let win = Win2::Direct { data: &g.data, ny: g.ny, x0: x0 - r, y0: y0 - r, hy };
+                run2_block(spec, &win, &mut out, x0, y0, bx, by);
+            } else {
+                scratch::with(hx * hy, |buf| {
+                    let mut i = 0;
+                    for dx in 0..hx as isize {
+                        for dy in 0..hy as isize {
+                            let gx = x0 as isize - r as isize + dx;
+                            let gy = y0 as isize - r as isize + dy;
+                            buf[i] = g.get_wrap(gx, gy);
+                            i += 1;
                         }
                     }
+                    let win = Win2::Packed { w: buf, hy };
+                    run2_block(spec, &win, &mut out, x0, y0, bx, by);
+                });
+            }
+            match spec.pattern {
+                Pattern::Star => {
                     counts.vec_loads += (hx * div_up(hy, vl)) as u64;
                     counts.outer_products += div_up(bx * hy, vl) as u64; // y
                     counts.outer_products += div_up(hx * by, vl) as u64; // x
@@ -279,20 +605,9 @@ pub fn apply2(spec: &StencilSpec, g: &Grid2, dims: BlockDims) -> (Grid2, Counts)
                     counts.vec_stores += div_up(bx * by, vl) as u64;
                 }
                 Pattern::Box => {
-                    let n = 2 * r + 1;
-                    for x in 0..bx {
-                        for y in 0..by {
-                            let mut acc = 0.0f32;
-                            for a in 0..n {
-                                for b in 0..n {
-                                    acc += spec.box_w[a * n + b] * at(x + a, y + b);
-                                }
-                            }
-                            out.set(x0 + x, y0 + y, acc);
-                        }
-                    }
+                    let n = (2 * r + 1) as u64;
                     counts.vec_loads += (hx * div_up(hy, vl)) as u64;
-                    counts.outer_products += (n as u64) * div_up(bx * hy, vl) as u64;
+                    counts.outer_products += n * div_up(bx * hy, vl) as u64;
                     counts.vec_stores += div_up(bx * by, vl) as u64;
                 }
             }
@@ -342,6 +657,46 @@ mod tests {
     }
 
     #[test]
+    fn interior_blocks_agree_with_boundary_blocks() {
+        // a grid large enough that the default (16,16,4) blocks include
+        // fully interior ones: the zero-copy path must agree with naive
+        for spec in [StencilSpec::star3d(2), StencilSpec::box3d(1)] {
+            let g = Grid3::random(12, 40, 40, 13);
+            let want = naive::apply3(&spec, &g);
+            let (got, _) = apply3(&spec, &g, BlockDims::default());
+            assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
+        }
+    }
+
+    #[test]
+    fn apply2_interior_split_agrees() {
+        for spec in [StencilSpec::star2d(2), StencilSpec::box2d(1)] {
+            let g = Grid2::random(40, 40, 17);
+            let want = naive::apply2(&spec, &g);
+            let (got, _) = apply2(&spec, &g, BlockDims::default());
+            assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
+        }
+    }
+
+    #[test]
+    fn parallel_sweep_is_bitwise_serial_with_exact_counts() {
+        // blocks chosen so interior (zero-copy) and boundary (packed)
+        // paths both run; counts must be *exactly* equal and the grid
+        // *bitwise* equal for any worker count
+        let dims = BlockDims::default();
+        for spec in [StencilSpec::star3d(3), StencilSpec::box3d(2)] {
+            let g = Grid3::random(13, 40, 37, 3);
+            let (want, cw) = apply3(&spec, &g, dims);
+            for workers in [1, 2, 4] {
+                let rt = Runtime::with_workers(workers);
+                let (got, cg) = apply3_on(&rt, &spec, &g, dims, workers);
+                assert_eq!(got.data, want.data, "workers={workers}");
+                assert_eq!(cg, cw, "workers={workers}");
+            }
+        }
+    }
+
+    #[test]
     fn outer_product_count_matches_iv_b_model() {
         // One full (4,16,16) star block, radius r: the §IV-B model says a
         // (VL,VL) tile takes VL+2r outer products per axis pass.
@@ -377,5 +732,20 @@ mod tests {
         let loads = (4 + 4) * (16 + 4) * (20f64 / 16f64).ceil() as u64;
         assert_eq!(c.vec_loads, loads);
         assert_eq!(c.outer_products, 25 * ((4 * 16 * 20) as f64 / 16.0).ceil() as u64);
+    }
+
+    #[test]
+    fn steady_state_sweeps_do_not_grow_the_arena() {
+        // serial sweeps run on this thread: after one warm-up pass the
+        // thread-local arena must satisfy every block without growing
+        let dims = BlockDims::default();
+        let g = Grid3::random(8, 40, 40, 23);
+        for spec in [StencilSpec::star3d(4), StencilSpec::box3d(2)] {
+            apply3(&spec, &g, dims); // warm-up
+            let before = scratch::local_grow_events();
+            apply3(&spec, &g, dims);
+            apply3(&spec, &g, dims);
+            assert_eq!(scratch::local_grow_events(), before, "arena grew after warm-up");
+        }
     }
 }

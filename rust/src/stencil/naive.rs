@@ -5,10 +5,17 @@
 //! The 3D write path goes through an exclusive `TileViewMut`, so the
 //! same code doubles as the per-region oracle for the parallel
 //! coordinator tests ([`apply3_region`]).
+//!
+//! The 3D sweeps split the region against `grid::shell`: deep-interior
+//! points read directly (no `rem_euclid`), only the O(surface) shell
+//! slabs take the wrapped path.  The per-point accumulation order is
+//! identical in both branches and a direct read equals a wrapped read
+//! of an in-bounds point, so results are **bitwise unchanged** — the
+//! oracle stays the oracle, just without a full-volume wrap scan.
 
 use super::{Pattern, StencilSpec};
 use crate::grid::par::{GridSrc, ParGrid3, TileViewMut};
-use crate::grid::{Grid2, Grid3};
+use crate::grid::{shell, Grid2, Grid3};
 
 /// Apply a 3D spec to a periodic grid.
 pub fn apply3(spec: &StencilSpec, g: &Grid3) -> Grid3 {
@@ -44,22 +51,51 @@ pub fn apply2(spec: &StencilSpec, g: &Grid2) -> Grid2 {
 fn star3<S: GridSrc>(spec: &StencilSpec, g: &S, out: &mut TileViewMut<'_>) {
     let r = spec.radius as isize;
     let (wz, wx, wy) = (&spec.star_axes[0], &spec.star_axes[1], &spec.star_axes[2]);
+    let (gnz, gnx, gny) = g.shape();
     let (z0, z1, x0, x1, y0, y1) = out.bounds();
-    for z in z0..z1 {
-        for x in x0..x1 {
-            for y in y0..y1 {
-                let (zi, xi, yi) = (z as isize, x as isize, y as isize);
-                let mut acc = spec.star_center * g.get_wrap(zi, xi, yi);
-                for k in -r..=r {
-                    if k == 0 {
-                        continue;
+    let bounds = [z0, z1, x0, x1, y0, y1];
+    let deep =
+        shell::interior_box(gnz, gnx, gny, spec.radius).and_then(|ib| shell::intersect(bounds, ib));
+    if let Some(b) = deep {
+        // wrap-free interior: same accumulation order, direct reads —
+        // bitwise equal to the wrapped path for in-bounds points
+        for z in b[0]..b[1] {
+            for x in b[2]..b[3] {
+                for y in b[4]..b[5] {
+                    let (zi, xi, yi) = (z as isize, x as isize, y as isize);
+                    let mut acc = spec.star_center * g.get(z, x, y);
+                    for k in -r..=r {
+                        if k == 0 {
+                            continue;
+                        }
+                        let i = (k + r) as usize;
+                        acc += wz[i] * g.get((zi + k) as usize, x, y);
+                        acc += wx[i] * g.get(z, (xi + k) as usize, y);
+                        acc += wy[i] * g.get(z, x, (yi + k) as usize);
                     }
-                    let i = (k + r) as usize;
-                    acc += wz[i] * g.get_wrap(zi + k, xi, yi);
-                    acc += wx[i] * g.get_wrap(zi, xi + k, yi);
-                    acc += wy[i] * g.get_wrap(zi, xi, yi + k);
+                    out.set(z, x, y, acc);
                 }
-                out.set(z, x, y, acc);
+            }
+        }
+    }
+    for sb in shell::boundary_boxes(gnz, gnx, gny, spec.radius) {
+        let Some(b) = shell::intersect(bounds, sb) else { continue };
+        for z in b[0]..b[1] {
+            for x in b[2]..b[3] {
+                for y in b[4]..b[5] {
+                    let (zi, xi, yi) = (z as isize, x as isize, y as isize);
+                    let mut acc = spec.star_center * g.get_wrap(zi, xi, yi);
+                    for k in -r..=r {
+                        if k == 0 {
+                            continue;
+                        }
+                        let i = (k + r) as usize;
+                        acc += wz[i] * g.get_wrap(zi + k, xi, yi);
+                        acc += wx[i] * g.get_wrap(zi, xi + k, yi);
+                        acc += wy[i] * g.get_wrap(zi, xi, yi + k);
+                    }
+                    out.set(z, x, y, acc);
+                }
             }
         }
     }
@@ -68,21 +104,52 @@ fn star3<S: GridSrc>(spec: &StencilSpec, g: &S, out: &mut TileViewMut<'_>) {
 fn box3<S: GridSrc>(spec: &StencilSpec, g: &S, out: &mut TileViewMut<'_>) {
     let r = spec.radius as isize;
     let n = (2 * spec.radius + 1) as isize;
+    let (gnz, gnx, gny) = g.shape();
     let (z0, z1, x0, x1, y0, y1) = out.bounds();
-    for z in z0..z1 {
-        for x in x0..x1 {
-            for y in y0..y1 {
-                let (zi, xi, yi) = (z as isize, x as isize, y as isize);
-                let mut acc = 0.0f32;
-                for c in 0..n {
-                    for a in 0..n {
-                        for b in 0..n {
-                            let w = spec.box_w[((c * n + a) * n + b) as usize];
-                            acc += w * g.get_wrap(zi + c - r, xi + a - r, yi + b - r);
+    let bounds = [z0, z1, x0, x1, y0, y1];
+    let deep =
+        shell::interior_box(gnz, gnx, gny, spec.radius).and_then(|ib| shell::intersect(bounds, ib));
+    if let Some(bx) = deep {
+        for z in bx[0]..bx[1] {
+            for x in bx[2]..bx[3] {
+                for y in bx[4]..bx[5] {
+                    let (zi, xi, yi) = (z as isize, x as isize, y as isize);
+                    let mut acc = 0.0f32;
+                    for c in 0..n {
+                        for a in 0..n {
+                            for b in 0..n {
+                                let w = spec.box_w[((c * n + a) * n + b) as usize];
+                                acc += w
+                                    * g.get(
+                                        (zi + c - r) as usize,
+                                        (xi + a - r) as usize,
+                                        (yi + b - r) as usize,
+                                    );
+                            }
                         }
                     }
+                    out.set(z, x, y, acc);
                 }
-                out.set(z, x, y, acc);
+            }
+        }
+    }
+    for sb in shell::boundary_boxes(gnz, gnx, gny, spec.radius) {
+        let Some(bx) = shell::intersect(bounds, sb) else { continue };
+        for z in bx[0]..bx[1] {
+            for x in bx[2]..bx[3] {
+                for y in bx[4]..bx[5] {
+                    let (zi, xi, yi) = (z as isize, x as isize, y as isize);
+                    let mut acc = 0.0f32;
+                    for c in 0..n {
+                        for a in 0..n {
+                            for b in 0..n {
+                                let w = spec.box_w[((c * n + a) * n + b) as usize];
+                                acc += w * g.get_wrap(zi + c - r, xi + a - r, yi + b - r);
+                            }
+                        }
+                    }
+                    out.set(z, x, y, acc);
+                }
             }
         }
     }
@@ -174,6 +241,34 @@ mod tests {
             }
         }
         assert_eq!(out.get(0, 0, 0), 0.0); // outside the region: untouched
+    }
+
+    #[test]
+    fn interior_split_is_bitwise_the_wrap_path() {
+        // the shell/interior split must not change a single bit vs the
+        // all-points wrapped accumulation (same order, direct reads)
+        let spec = StencilSpec::star3d(2);
+        let g = Grid3::random(9, 10, 11, 31);
+        let got = apply3(&spec, &g);
+        let r = spec.radius as isize;
+        let (wz, wx, wy) = (&spec.star_axes[0], &spec.star_axes[1], &spec.star_axes[2]);
+        for z in 0..9isize {
+            for x in 0..10isize {
+                for y in 0..11isize {
+                    let mut acc = spec.star_center * g.get_wrap(z, x, y);
+                    for k in -r..=r {
+                        if k == 0 {
+                            continue;
+                        }
+                        let i = (k + r) as usize;
+                        acc += wz[i] * g.get_wrap(z + k, x, y);
+                        acc += wx[i] * g.get_wrap(z, x + k, y);
+                        acc += wy[i] * g.get_wrap(z, x, y + k);
+                    }
+                    assert_eq!(got.get(z as usize, x as usize, y as usize), acc);
+                }
+            }
+        }
     }
 
     #[test]

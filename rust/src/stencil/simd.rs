@@ -5,16 +5,22 @@
 //! The interior is computed with wrap-free, y-contiguous inner loops that
 //! LLVM auto-vectorizes; the periodic boundary shell falls back to the
 //! wrap path so results are bit-comparable with [`super::naive`] up to
-//! fp reassociation.
+//! fp reassociation.  The shell is enumerated directly as the ≤6
+//! O(N²·r) slabs of `grid::shell` — never by scanning the full volume
+//! with an `inside()` predicate.
 //!
 //! Reads go through [`GridSrc`] (a quiescent `&Grid3` *or* a `ParGrid3`
 //! whose halo frame is being filled concurrently) and writes through an
 //! exclusive [`TileViewMut`] claim — the per-tile contract of the
-//! parallel coordinator (see `grid::par`).
+//! parallel coordinator (see `grid::par`).  Accumulator rows come from
+//! the worker-local scratch arena (`coordinator::scratch`), so tiles of
+//! any `ty` work (the old fixed `[f32; 512]` stack buffer made
+//! `ty > 512` panic) and the steady state allocates nothing.
 
 use super::{Pattern, StencilSpec};
+use crate::coordinator::scratch;
 use crate::grid::par::{GridSrc, ParGrid3, TileViewMut};
-use crate::grid::{Grid2, Grid3};
+use crate::grid::{shell, Grid2, Grid3};
 
 /// 2.5D tile used for the blocked sweep (paper's SIMD baseline uses a
 /// 16×4×2 brick; the tile here is the per-core working set).
@@ -70,19 +76,11 @@ pub fn apply3_tiled(spec: &StencilSpec, g: &Grid3, tile: Tile) -> Grid3 {
                 z = ze;
             }
         }
-        // boundary shell: wrap path
-        let inside = |z: usize, x: usize, y: usize| {
-            g.nz > 2 * r
-                && g.nx > 2 * r
-                && g.ny > 2 * r
-                && (r..g.nz - r).contains(&z)
-                && (r..g.nx - r).contains(&x)
-                && (r..g.ny - r).contains(&y)
-        };
-        for z in 0..g.nz {
-            for x in 0..g.nx {
-                for y in 0..g.ny {
-                    if !inside(z, x, y) {
+        // boundary shell: wrap path over the O(N²·r) slabs only
+        for b in shell::boundary_boxes(g.nz, g.nx, g.ny, r) {
+            for z in b[0]..b[1] {
+                for x in b[2]..b[3] {
+                    for y in b[4]..b[5] {
                         view.set(z, x, y, point3_wrap(spec, g, z as isize, x as isize, y as isize));
                     }
                 }
@@ -149,50 +147,53 @@ fn star3_block<S: GridSrc>(
     let (_, gnx, gny) = g.shape();
     let r = spec.radius;
     let ny = y1 - y0;
-    debug_assert!(ny <= 512, "tile.ty must be <= 512");
     let (wz, wx, wy) = (&spec.star_axes[0], &spec.star_axes[1], &spec.star_axes[2]);
-    for z in z0..z1 {
-        for x in x0..x1 {
-            let cb = (z * gnx + x) * gny + y0;
-            // centre + y-axis from the same row
-            {
-                let row = g.span(cb - r, ny + 2 * r);
-                let o = out.row_mut(z, x, y0, ny);
-                for i in 0..ny {
-                    o[i] = spec.star_center * row[r + i];
+    // x/z accumulator row from the worker-local arena: one checkout per
+    // block, reused across every (z, x) row — removes the old fixed
+    // `[f32; 512]` stack buffer and its `ty > 512` panic cliff
+    scratch::with(ny, |acc| {
+        for z in z0..z1 {
+            for x in x0..x1 {
+                let cb = (z * gnx + x) * gny + y0;
+                // centre + y-axis from the same row
+                {
+                    let row = g.span(cb - r, ny + 2 * r);
+                    let o = out.row_mut(z, x, y0, ny);
+                    for i in 0..ny {
+                        o[i] = spec.star_center * row[r + i];
+                    }
+                    for k in 0..2 * r + 1 {
+                        if k == r {
+                            continue;
+                        }
+                        let w = wy[k];
+                        for i in 0..ny {
+                            o[i] += w * row[k + i];
+                        }
+                    }
                 }
+                // x- and z-axis rows: accumulate into the arena row so
+                // the compiler keeps the accumulator hot across rows
+                // (repeated output round-trips defeat vectorization)
+                acc.fill(0.0);
                 for k in 0..2 * r + 1 {
                     if k == r {
                         continue;
                     }
-                    let w = wy[k];
-                    for i in 0..ny {
-                        o[i] += w * row[k + i];
+                    let zb = ((z + k - r) * gnx + x) * gny + y0;
+                    let xb = (z * gnx + (x + k - r)) * gny + y0;
+                    let (wzk, wxk) = (wz[k], wx[k]);
+                    let (zr, xr) = (g.span(zb, ny), g.span(xb, ny));
+                    for ((a, &zv), &xv) in acc.iter_mut().zip(zr).zip(xr) {
+                        *a += wzk * zv + wxk * xv;
                     }
                 }
-            }
-            // x- and z-axis rows: accumulate into a stack buffer so the
-            // compiler keeps the accumulator in registers across rows
-            // (repeated output round-trips defeat vectorization)
-            let mut acc = [0.0f32; 512];
-            let acc = &mut acc[..ny];
-            for k in 0..2 * r + 1 {
-                if k == r {
-                    continue;
+                for (o, &a) in out.row_mut(z, x, y0, ny).iter_mut().zip(acc.iter()) {
+                    *o += a;
                 }
-                let zb = ((z + k - r) * gnx + x) * gny + y0;
-                let xb = (z * gnx + (x + k - r)) * gny + y0;
-                let (wzk, wxk) = (wz[k], wx[k]);
-                let (zr, xr) = (g.span(zb, ny), g.span(xb, ny));
-                for ((a, &zv), &xv) in acc.iter_mut().zip(zr).zip(xr) {
-                    *a += wzk * zv + wxk * xv;
-                }
-            }
-            for (o, &a) in out.row_mut(z, x, y0, ny).iter_mut().zip(acc.iter()) {
-                *o += a;
             }
         }
-    }
+    });
 }
 
 #[inline]
@@ -235,37 +236,32 @@ fn box3_block<S: GridSrc>(
 /// `[z0,z1)×[x0,x1)×[y0,y1)` of the periodic sweep — from `g`.  The
 /// per-tile entry point of the parallel coordinator
 /// (`coordinator::driver`): the view *is* the region, so a task cannot
-/// write outside the box it was handed.  Interior rows take the fast
-/// wrap-free path; boundary rows fall back to wrapped points.
+/// write outside the box it was handed.  The region is split against
+/// the wrap-free deep interior (one blocked call) and the ≤6 boundary
+/// slabs of `grid::shell` (wrapped points) — no per-row `inside()`
+/// scanning.
 pub fn apply3_region<S: GridSrc>(spec: &StencilSpec, g: &S, out: &mut TileViewMut<'_>) {
     assert_eq!(spec.ndim, 3);
     debug_assert_eq!(g.shape(), out.grid_shape());
     let (gnz, gnx, gny) = g.shape();
     let (z0, z1, x0, x1, y0, y1) = out.bounds();
+    let bounds = [z0, z1, x0, x1, y0, y1];
     let r = spec.radius;
-    let interior_possible = gnz > 2 * r && gnx > 2 * r && gny > 2 * r;
-    for z in z0..z1 {
-        for x in x0..x1 {
-            let zx_interior =
-                interior_possible && (r..gnz - r).contains(&z) && (r..gnx - r).contains(&x);
-            if zx_interior {
-                let ylo = y0.max(r);
-                let yhi = y1.min(gny - r);
-                if ylo < yhi {
-                    match spec.pattern {
-                        Pattern::Star => star3_block(spec, g, out, z, z + 1, x, x + 1, ylo, yhi),
-                        Pattern::Box => box3_block(spec, g, out, z, z + 1, x, x + 1, ylo, yhi),
+    if let Some(d) =
+        shell::interior_box(gnz, gnx, gny, r).and_then(|ib| shell::intersect(bounds, ib))
+    {
+        match spec.pattern {
+            Pattern::Star => star3_block(spec, g, out, d[0], d[1], d[2], d[3], d[4], d[5]),
+            Pattern::Box => box3_block(spec, g, out, d[0], d[1], d[2], d[3], d[4], d[5]),
+        }
+    }
+    for sb in shell::boundary_boxes(gnz, gnx, gny, r) {
+        if let Some(b) = shell::intersect(bounds, sb) {
+            for z in b[0]..b[1] {
+                for x in b[2]..b[3] {
+                    for y in b[4]..b[5] {
+                        out.set(z, x, y, point3_wrap(spec, g, z as isize, x as isize, y as isize));
                     }
-                }
-                for y in y0..ylo.min(y1) {
-                    out.set(z, x, y, point3_wrap(spec, g, z as isize, x as isize, y as isize));
-                }
-                for y in yhi.max(y0)..y1 {
-                    out.set(z, x, y, point3_wrap(spec, g, z as isize, x as isize, y as isize));
-                }
-            } else {
-                for y in y0..y1 {
-                    out.set(z, x, y, point3_wrap(spec, g, z as isize, x as isize, y as isize));
                 }
             }
         }
@@ -316,13 +312,10 @@ pub fn apply2(spec: &StencilSpec, g: &Grid2) -> Grid2 {
             }
         }
     }
-    for x in 0..g.nx {
-        for y in 0..g.ny {
-            let interior = g.nx > 2 * r
-                && g.ny > 2 * r
-                && (r..g.nx - r).contains(&x)
-                && (r..g.ny - r).contains(&y);
-            if !interior {
+    // boundary shell: the ≤4 O(N·r) slabs, no full-plane scan
+    for b in shell::boundary_boxes2(g.nx, g.ny, r) {
+        for x in b[0]..b[1] {
+            for y in b[2]..b[3] {
                 out.set(x, y, point2_wrap(spec, g, x as isize, y as isize));
             }
         }
@@ -407,6 +400,18 @@ mod tests {
             let got = apply3_tiled(&spec, &g, tile);
             assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
         });
+    }
+
+    #[test]
+    fn tile_ty_above_512_matches_naive() {
+        // regression: the old fixed `[f32; 512]` accumulator made any
+        // tile with ty > 512 panic (debug assert / release slice OOB);
+        // the arena row must handle 1024-wide tiles on a ny > 1024 grid
+        let spec = StencilSpec::star3d(1);
+        let g = Grid3::random(4, 6, 1100, 77);
+        let want = naive::apply3(&spec, &g);
+        let got = apply3_tiled(&spec, &g, Tile { tz: 2, tx: 4, ty: 1024 });
+        assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
     }
 
     #[test]

@@ -1,0 +1,49 @@
+//! Counting global allocator shared by the allocation-accounting
+//! binaries (`rust/tests/alloc_free.rs`, `examples/perf_probe.rs`).
+//!
+//! Counts allocation *events* (alloc / alloc_zeroed / realloc), not
+//! bytes — the hot-path contract under test is "how many times did we
+//! hit the heap", not "how much".  Each binary installs its own
+//! instance:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: CountingAlloc = CountingAlloc;
+//! let before = CountingAlloc::events();
+//! ```
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static EVENTS: AtomicU64 = AtomicU64::new(0);
+
+/// System allocator wrapper that counts allocation events process-wide.
+pub struct CountingAlloc;
+
+impl CountingAlloc {
+    /// Allocation events since process start (all threads).
+    pub fn events() -> u64 {
+        EVENTS.load(Ordering::Relaxed)
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, n)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}

@@ -5,6 +5,7 @@
 //! DESIGN.md §7), so `bench` and `prop` provide minimal, dependency-free
 //! equivalents used by `benches/*` and the test suites.
 
+pub mod alloc_count;
 pub mod bench;
 pub mod err;
 pub mod prop;

@@ -1,0 +1,88 @@
+//! Steady-state allocation accounting for the engine hot paths (the
+//! PR 3 tentpole contract): after one warm-up sweep, the serial
+//! matrix-unit sweep performs **zero heap allocations per block** —
+//! interior blocks are zero-copy, boundary windows and star `tmp`
+//! buffers come from the warm worker-local scratch arena
+//! (`coordinator::scratch`), and results land directly in the claimed
+//! output view.
+//!
+//! Enforced with a counting global allocator: allocation *events* per
+//! sweep must be a small constant (the output grid + debug claim
+//! ledger), independent of how many blocks the sweep visits.  Not run
+//! under Miri (the CI miri job targets `aliasing.rs` only).
+
+use mmstencil::coordinator::scratch;
+use mmstencil::grid::Grid3;
+use mmstencil::stencil::matrix_unit::{self, BlockDims};
+use mmstencil::stencil::StencilSpec;
+use mmstencil::util::alloc_count::CountingAlloc;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Minimum allocation-event count of `reps` runs of `f`.  The minimum
+/// filters the rare harness-side allocation (test-runner bookkeeping on
+/// another thread) out of the measurement — noise only ever adds.
+fn min_events_during(reps: usize, mut f: impl FnMut()) -> u64 {
+    (0..reps)
+        .map(|_| {
+            let before = CountingAlloc::events();
+            f();
+            CountingAlloc::events() - before
+        })
+        .min()
+        .unwrap()
+}
+
+// One test fn on purpose: a second concurrently starting test would
+// share the global counter.
+#[test]
+fn matrix_unit_hot_path_allocation_contract() {
+    let dims = BlockDims::default();
+    // same (vz, vl, vl) block shapes, 8× the block count: with the
+    // default (4,16,16) blocks the small grid has 2·2·2 = 8 blocks and
+    // the big one 4·4·4 = 64
+    let small = Grid3::random(8, 32, 32, 1);
+    let big = Grid3::random(16, 64, 64, 2);
+    for spec in [StencilSpec::star3d(4), StencilSpec::box3d(2)] {
+        // warm-up: sizes the thread-local arena for every buffer shape
+        matrix_unit::apply3(&spec, &big, dims);
+        matrix_unit::apply3(&spec, &small, dims);
+
+        let a_small = min_events_during(3, || {
+            matrix_unit::apply3(&spec, &small, dims);
+        });
+        let a_big = min_events_during(3, || {
+            matrix_unit::apply3(&spec, &big, dims);
+        });
+        // per-sweep constant (output grid + debug claim ledger), never
+        // per block: 8× the blocks must not change the count
+        assert_eq!(
+            a_small, a_big,
+            "allocation count scales with block count ({a_small} vs {a_big})"
+        );
+        assert!(a_big <= 8, "steady-state sweep allocated {a_big} times");
+
+        // and the arena itself must be warm
+        let grows = scratch::local_grow_events();
+        matrix_unit::apply3(&spec, &big, dims);
+        assert_eq!(scratch::local_grow_events(), grows, "arena grew after warm-up");
+    }
+
+    // all-interior sweep on a fresh, larger grid: interior blocks are
+    // zero-copy, so even the *first* big-grid sweep stays at the
+    // per-sweep constant — its r=1 boundary windows are no bigger than
+    // the warm ones from the small grid below (same block dims)
+    let spec = StencilSpec::star3d(1);
+    let warm = Grid3::random(8, 32, 32, 3);
+    matrix_unit::apply3(&spec, &warm, dims);
+    let g = Grid3::random(24, 96, 96, 4);
+    // reps must be 1 here: the *first* (cold) big-grid sweep is the
+    // measurement — later reps would be warm and hide a regression.
+    // The <=8 slack absorbs the rare harness-side stray allocation the
+    // min-filter would otherwise remove.
+    let first = min_events_during(1, || {
+        matrix_unit::apply3(&spec, &g, dims);
+    });
+    assert!(first <= 8, "cold interior sweep allocated {first} times");
+}
