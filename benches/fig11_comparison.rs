@@ -18,7 +18,7 @@
 use mmstencil::grid::{Grid2, Grid3};
 use mmstencil::simulator::roofline::{engine_cfg, predict, Engine, MemKind};
 use mmstencil::simulator::Platform;
-use mmstencil::stencil::{matrix_unit, naive, simd, StencilSpec};
+use mmstencil::stencil::{matrix_unit, naive, simd, EngineKind, StencilSpec};
 use mmstencil::util::bench::bench_auto;
 use mmstencil::util::table::{f, Table};
 
@@ -35,25 +35,26 @@ fn main() {
     let mut sim_speedups = Vec::new();
     for (name, spec) in StencilSpec::benchmark_suite() {
         // ---- real measurements (small grid, engines verified equal) ----
+        // 3D goes through the engine dispatch layer; 2D sweeps have no
+        // dispatch surface yet and call the engines directly
         let (tn, ts, tm) = if spec.ndim == 3 {
             let g = Grid3::random(16, 48, 48, 5);
-            let want = naive::apply3(&spec, &g);
-            assert!(want.max_abs_diff(&simd::apply3(&spec, &g)) < 1e-3);
-            assert!(want.max_abs_diff(&matrix_unit::apply3(&spec, &g, dims).0) < 1e-3);
-            (
-                bench_auto("naive", 0.4, || {
-                    std::hint::black_box(naive::apply3(&spec, &g));
+            let engine = |kind| mmstencil::stencil::Engine::new(kind);
+            let want = engine(EngineKind::Naive).apply3(&spec, &g);
+            for kind in [EngineKind::Simd, EngineKind::MatrixUnit] {
+                assert!(want.max_abs_diff(&engine(kind).apply3(&spec, &g)) < 1e-3);
+            }
+            let medians: Vec<f64> = EngineKind::ALL
+                .iter()
+                .map(|&kind| {
+                    let eng = engine(kind);
+                    bench_auto(kind.name(), 0.4, || {
+                        std::hint::black_box(eng.apply3(&spec, &g));
+                    })
+                    .median_s
                 })
-                .median_s,
-                bench_auto("simd", 0.4, || {
-                    std::hint::black_box(simd::apply3(&spec, &g));
-                })
-                .median_s,
-                bench_auto("matrix", 0.4, || {
-                    std::hint::black_box(matrix_unit::apply3(&spec, &g, dims));
-                })
-                .median_s,
-            )
+                .collect();
+            (medians[0], medians[1], medians[2])
         } else {
             let g = Grid2::random(192, 192, 5);
             let want = naive::apply2(&spec, &g);

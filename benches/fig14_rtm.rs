@@ -3,9 +3,11 @@
 //! A100 GPU implementation.
 //!
 //! REAL layer: complete (small) RTM shots run on this host — forward +
-//! backward + imaging — for both media, checked for stability and a
-//! non-trivial image.  SIM layer: the paper-grid (512×512×256 CPU,
-//! 512³ GPU) projection.
+//! backward + imaging — for both media **through every propagation
+//! engine** (naive / simd / matrix_unit via `RtmConfig::engine`),
+//! checked for stability, a non-trivial image, and cross-engine image
+//! agreement.  SIM layer: the paper-grid (512×512×256 CPU, 512³ GPU)
+//! projection.
 //!
 //! Paper anchors asserted: VTI 47% bandwidth utilization and 2.00× vs
 //! SIMD; TTI 27.35% utilization (intermediate spill) and 2.06× vs SIMD;
@@ -16,7 +18,9 @@
 use mmstencil::rtm::driver::{run_shot, simulate_step, Medium, RtmConfig};
 use mmstencil::simulator::roofline::Engine;
 use mmstencil::simulator::Platform;
+use mmstencil::stencil::EngineKind;
 use mmstencil::util::table::{f, Table};
+use mmstencil::util::Timer;
 
 /// A100 RTM reference: the industrial CUDA kernels sustain ~38% of
 /// 1955 GB/s on the VTI propagator (derived from the paper's "23.2%
@@ -34,26 +38,46 @@ fn a100_step_time(cells: usize, medium: Medium) -> f64 {
 fn main() {
     let p = Platform::paper();
 
-    // ---- REAL shots -------------------------------------------------------
-    println!("real RTM shots on this host (32³, 60 steps):");
+    // ---- REAL shots, one row per propagation engine -----------------------
+    // the whole shot (forward + backward + imaging) dispatches through
+    // RtmConfig::engine; images must agree across engines up to fp
+    // accumulation order
+    println!("real RTM shots on this host (32³, 60 steps), per engine:");
     for medium in [Medium::Vti, Medium::Tti] {
-        let mut cfg = RtmConfig::small(medium);
-        cfg.nz = 32;
-        cfg.nx = 32;
-        cfg.ny = 32;
-        cfg.steps = 60;
-        cfg.threads = 2;
-        let (image, rep) = run_shot(&cfg, &p);
-        println!(
-            "  {medium:?}: fwd {:.2}s bwd {:.2}s, {:.0} Mpoint/s, image energy {:.2e} ({} correlations)",
-            rep.forward_s,
-            rep.backward_s,
-            rep.gpoints_per_s / 1e6,
-            rep.image_energy,
-            image.correlations
-        );
-        assert!(rep.energy_trace.iter().all(|e| e.is_finite()), "{medium:?} unstable");
-        assert!(rep.image_energy > 0.0, "{medium:?}: no image");
+        let mut reference_energy = None;
+        for kind in EngineKind::ALL {
+            let mut cfg = RtmConfig::small(medium);
+            cfg.nz = 32;
+            cfg.nx = 32;
+            cfg.ny = 32;
+            cfg.steps = 60;
+            cfg.threads = 2;
+            cfg.engine = kind;
+            let wall = Timer::start();
+            let (image, rep) = run_shot(&cfg, &p);
+            let total = wall.secs();
+            println!(
+                "  {medium:?} {:<12} fwd {:.2}s bwd {:.2}s ({total:.2}s), {:.0} Mpoint/s, \
+                 image energy {:.2e} ({} correlations)",
+                kind.name(),
+                rep.forward_s,
+                rep.backward_s,
+                rep.gpoints_per_s / 1e6,
+                rep.image_energy,
+                image.correlations
+            );
+            assert!(
+                rep.energy_trace.iter().all(|e| e.is_finite()),
+                "{medium:?}/{kind:?} unstable"
+            );
+            assert!(rep.image_energy > 0.0, "{medium:?}/{kind:?}: no image");
+            let e0 = *reference_energy.get_or_insert(rep.image_energy);
+            assert!(
+                (rep.image_energy / e0 - 1.0).abs() < 2e-2,
+                "{medium:?}/{kind:?}: image energy {:.3e} diverges from oracle {e0:.3e}",
+                rep.image_energy
+            );
+        }
     }
 
     // ---- SIM at paper scale ------------------------------------------------

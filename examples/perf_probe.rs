@@ -3,13 +3,16 @@
 //! §Perf. Run after any optimization to check for regressions:
 //! `cargo run --release --example perf_probe`
 //!
-//! Emits `BENCH_engines.json` (schema `metrics::bench_json`): per-engine
-//! throughput, per-sweep heap-allocation counts (via the counting
-//! global allocator below), and scratch-arena growth for star/box
-//! r ∈ {1, 4}, plus the headline 256³ star-r4 interior-throughput
-//! sweep.  CI runs a shrunken probe (env below) and uploads the JSON
-//! as the perf-trajectory artifact; numbers are advisory, the schema
-//! is validated.
+//! Every engine is exercised through the dispatch layer
+//! (`stencil::Engine` + `EngineKind::by_name`) — no per-engine closures
+//! — and emits `BENCH_engines.json` (schema `metrics::bench_json` v2):
+//! per-engine sweep throughput for star/box r ∈ {1, 4}, the headline
+//! 256³ star-r4 sweep, and **per-engine RTM step throughput** (VTI and
+//! TTI, the application workload), each with per-sweep/per-step
+//! heap-allocation counts (counting global allocator below) and
+//! scratch-arena growth.  CI runs a shrunken probe (env below) and
+//! uploads the JSON as the perf-trajectory artifact; numbers are
+//! advisory, the schema is validated.
 //!
 //! Env knobs: `PERF_PROBE_N` (grid edge, default 96), `PERF_PROBE_BIG_N`
 //! (headline sweep edge, default 256; 0 skips), `PERF_PROBE_BUDGET_S`
@@ -18,10 +21,10 @@
 
 use mmstencil::coordinator::scratch;
 use mmstencil::grid::Grid3;
-use mmstencil::metrics::bench_json::{self, EngineBench};
+use mmstencil::metrics::bench_json::{self, EngineBench, RtmBench};
 use mmstencil::rtm::{media, tti, vti};
 use mmstencil::stencil::coeffs::{first_deriv, second_deriv};
-use mmstencil::stencil::{matrix_unit, naive, simd, StencilSpec};
+use mmstencil::stencil::{Engine, EngineKind, StencilSpec};
 use mmstencil::util::alloc_count::CountingAlloc;
 use mmstencil::util::bench::{bench_auto, report};
 
@@ -39,32 +42,43 @@ fn env_f64(key: &str, default: f64) -> f64 {
 }
 
 /// Time `f`, then run one extra post-warm-up call under the allocation
-/// counters, and record the entry.
-#[allow(clippy::too_many_arguments)]
-fn probe(
-    entries: &mut Vec<EngineBench>,
-    engine: &str,
-    pattern: &str,
-    radius: usize,
-    n: usize,
-    threads: usize,
-    budget_s: f64,
-    mut f: impl FnMut(),
-) {
-    let work = (n * n * n) as f64;
-    let r = bench_auto(&format!("{engine:<16} {pattern}3d r{radius} {n}^3"), budget_s, &mut f);
+/// counters; returns (mcells/s, allocs, arena grows) for `work` cells.
+fn timed(label: &str, work: f64, budget_s: f64, mut f: impl FnMut()) -> (f64, u64, u64) {
+    let r = bench_auto(label, budget_s, &mut f);
     let (a0, g0) = (CountingAlloc::events(), scratch::grow_events());
     f();
     let allocs = CountingAlloc::events() - a0;
     let grows = scratch::grow_events() - g0;
     let mcells = work / r.median_s / 1e6;
     report(&r, &format!("{mcells:.1} Mcell/s  {allocs} allocs  {grows} arena-grows"));
+    (mcells, allocs, grows)
+}
+
+/// One engine × sweep workload through the dispatch layer.
+fn probe_sweep(
+    entries: &mut Vec<EngineBench>,
+    label: &str,
+    eng: &Engine,
+    spec: &StencilSpec,
+    pattern: &str,
+    g: &Grid3,
+    budget_s: f64,
+) {
+    let n = g.nz;
+    let (mcells, allocs, grows) = timed(
+        &format!("{label:<16} {pattern}3d r{} {n}^3", spec.radius),
+        (n * n * n) as f64,
+        budget_s,
+        || {
+            std::hint::black_box(eng.apply3(spec, g));
+        },
+    );
     entries.push(EngineBench {
-        engine: engine.into(),
+        engine: label.into(),
         pattern: pattern.into(),
-        radius,
+        radius: spec.radius,
         n,
-        threads,
+        threads: eng.threads,
         mcells_per_s: mcells,
         allocs_per_sweep: allocs,
         arena_grows_per_sweep: grows,
@@ -76,10 +90,10 @@ fn main() {
     let big_n = env_usize("PERF_PROBE_BIG_N", 256);
     let budget = env_f64("PERF_PROBE_BUDGET_S", 1.0);
     let threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4);
-    let dims = matrix_unit::BlockDims::default();
     let mut entries: Vec<EngineBench> = Vec::new();
+    let mut rtm_entries: Vec<RtmBench> = Vec::new();
 
-    // ---- engine matrix: star/box, r ∈ {1, 4}, all engines ----
+    // ---- engine matrix: star/box, r ∈ {1, 4}, all engines + par ----
     let g = Grid3::random(n, n, n, 1);
     for (pattern, radius) in [("star", 1), ("star", 4), ("box", 1), ("box", 4)] {
         let spec = if pattern == "star" {
@@ -87,67 +101,92 @@ fn main() {
         } else {
             StencilSpec::box3d(radius)
         };
-        probe(&mut entries, "naive", pattern, radius, n, 1, budget, || {
-            std::hint::black_box(naive::apply3(&spec, &g));
-        });
-        probe(&mut entries, "simd", pattern, radius, n, 1, budget, || {
-            std::hint::black_box(simd::apply3(&spec, &g));
-        });
-        probe(&mut entries, "matrix_unit", pattern, radius, n, 1, budget, || {
-            std::hint::black_box(matrix_unit::apply3(&spec, &g, dims));
-        });
-        probe(&mut entries, "matrix_unit_par", pattern, radius, n, threads, budget, || {
-            std::hint::black_box(matrix_unit::apply3_par(&spec, &g, dims, threads));
-        });
+        for kind in EngineKind::ALL {
+            let eng = Engine::new(kind);
+            probe_sweep(&mut entries, kind.name(), &eng, &spec, pattern, &g, budget);
+        }
+        let par = Engine::new(EngineKind::MatrixUnit).with_threads(threads);
+        probe_sweep(&mut entries, "matrix_unit_par", &par, &spec, pattern, &g, budget);
     }
 
     // ---- headline interior-throughput sweep: star r4 at big_n³ ----
     if big_n > 0 {
         let spec = StencilSpec::star3d(4);
         let gb = Grid3::random(big_n, big_n, big_n, 2);
-        probe(&mut entries, "simd", "star", 4, big_n, 1, budget, || {
-            std::hint::black_box(simd::apply3(&spec, &gb));
-        });
-        probe(&mut entries, "matrix_unit_par", "star", 4, big_n, threads, budget, || {
-            std::hint::black_box(matrix_unit::apply3_par(&spec, &gb, dims, threads));
-        });
+        let simd = Engine::new(EngineKind::Simd);
+        probe_sweep(&mut entries, "simd", &simd, &spec, "star", &gb, budget);
+        let par = Engine::new(EngineKind::MatrixUnit).with_threads(threads);
+        probe_sweep(&mut entries, "matrix_unit_par", &par, &spec, "star", &gb, budget);
+    }
+
+    // ---- RTM steps per engine (the v2 application rows) ----
+    let work = (n * n * n) as f64;
+    let mid = n / 2;
+    let w2 = second_deriv(4);
+    let w1 = first_deriv(4);
+    let vm = media::layered_vti(n, n, n, 10.0, &media::default_layers());
+    let tm = media::layered_tti(n, n, n, 10.0, &media::default_layers());
+    let trig = tti::TtiTrig::new(&tm);
+    for kind in EngineKind::ALL {
+        let eng = Engine::new(kind).with_threads(threads);
+        {
+            let mut st = vti::VtiState::zeros(n, n, n);
+            let mut sc = vti::VtiScratch::new(n, n, n);
+            st.inject(mid, mid, mid, 1.0);
+            let (mcells, allocs, grows) = timed(
+                &format!("rtm vti {:<12} {n}^3 x{threads}", kind.name()),
+                work,
+                budget,
+                || vti::step_with(&mut st, &vm, &w2, &eng, &mut sc),
+            );
+            rtm_entries.push(RtmBench {
+                engine: kind.name().into(),
+                medium: "vti".into(),
+                n,
+                threads,
+                mcells_per_s: mcells,
+                allocs_per_step: allocs,
+                arena_grows_per_step: grows,
+            });
+        }
+        {
+            let mut st = tti::TtiState::zeros(n, n, n);
+            let mut sc = tti::TtiScratch::new(n, n, n);
+            st.inject(mid, mid, mid, 1.0);
+            let (mcells, allocs, grows) = timed(
+                &format!("rtm tti {:<12} {n}^3 x{threads}", kind.name()),
+                work,
+                budget,
+                || tti::step_with(&mut st, &tm, &trig, &w2, &w1, &eng, &mut sc),
+            );
+            rtm_entries.push(RtmBench {
+                engine: kind.name().into(),
+                medium: "tti".into(),
+                n,
+                threads,
+                mcells_per_s: mcells,
+                allocs_per_step: allocs,
+                arena_grows_per_step: grows,
+            });
+        }
     }
 
     let out_path =
         std::env::var("BENCH_ENGINES_OUT").unwrap_or_else(|_| "BENCH_engines.json".into());
-    let json = bench_json::render(&entries);
+    let json = bench_json::render(&entries, &rtm_entries);
     bench_json::validate(&json).expect("BENCH_engines.json failed schema validation");
     std::fs::write(&out_path, &json).expect("writing BENCH_engines.json");
-    println!("wrote {out_path} ({} entries)", entries.len());
+    println!(
+        "wrote {out_path} ({} sweep entries, {} rtm entries)",
+        entries.len(),
+        rtm_entries.len()
+    );
 
-    // ---- RTM steps (probe-only; not part of the engine JSON) ----
-    let work = (n * n * n) as f64;
-    let mid = n / 2;
-    let m = media::layered_vti(n, n, n, 10.0, &media::default_layers());
-    let w2 = second_deriv(4);
-    let mut st = vti::VtiState::zeros(n, n, n);
-    st.inject(mid, mid, mid, 1.0);
-    let mut sc = vti::VtiScratch::new(n, n, n);
-    let r = bench_auto(&format!("vti step {n}^3 (1 thread)"), budget, || {
-        vti::step(&mut st, &m, &w2, 1, &mut sc)
-    });
-    report(&r, &format!("{:.1} Mcell/s", work / r.median_s / 1e6));
-
-    let tm = media::layered_tti(n, n, n, 10.0, &media::default_layers());
-    let trig = tti::TtiTrig::new(&tm);
-    let w1 = first_deriv(4);
-    let mut ts = tti::TtiState::zeros(n, n, n);
-    ts.inject(mid, mid, mid, 1.0);
-    let mut tsc = tti::TtiScratch::new(n, n, n);
-    let r = bench_auto(&format!("tti step {n}^3 (1 thread)"), budget, || {
-        tti::step(&mut ts, &tm, &trig, &w2, &w1, 1, &mut tsc)
-    });
-    report(&r, &format!("{:.1} Mcell/s", work / r.median_s / 1e6));
-
-    // d2_axis per-axis breakdown
+    // ---- d2_axis per-axis breakdown (probe-only) ----
+    let simd = Engine::new(EngineKind::Simd);
     for axis in 0..3 {
         let r = bench_auto(&format!("d2_axis axis={axis} {n}^3"), budget, || {
-            std::hint::black_box(vti::d2_axis(&g, &w2, axis, 1));
+            std::hint::black_box(simd.d2_axis(&g, &w2, axis));
         });
         report(&r, &format!("{:.1} Mcell/s", work / r.median_s / 1e6));
     }

@@ -14,7 +14,7 @@ use mmstencil::coordinator::tiles::Strategy;
 use mmstencil::grid::Grid3;
 use mmstencil::runtime::{Runtime, Tensor};
 use mmstencil::simulator::Platform;
-use mmstencil::stencil::{naive, simd, StencilSpec};
+use mmstencil::stencil::{naive, Engine, StencilSpec};
 use mmstencil::util::err::Result;
 
 fn main() -> Result<()> {
@@ -56,7 +56,8 @@ fn main() -> Result<()> {
     let g = Grid3::random(64, 64, 64, 2);
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     let (out, stats) = driver::sweep(&spec, &g, threads, Strategy::SnoopAware, &platform);
-    let check = simd::apply3(&spec, &g);
+    // cross-check through the engine dispatch layer, selected by name
+    let check = Engine::by_name("simd").expect("known engine").apply3(&spec, &g);
     println!(
         "coordinator sweep 64³ ({} threads): {:.3} Gcell/s host, max|Δ| vs simd = {:.2e}",
         threads,

@@ -20,6 +20,7 @@ use mmstencil::rtm::{media, vti};
 use mmstencil::runtime::{Runtime, Tensor};
 use mmstencil::simulator::Platform;
 use mmstencil::stencil::coeffs::second_deriv;
+use mmstencil::stencil::EngineKind;
 use mmstencil::util::err::Result;
 use mmstencil::util::Timer;
 
@@ -76,10 +77,18 @@ fn main() -> Result<()> {
         sponge_width: 10,
         src: None,
         receiver_z: 3,
+        // the paper's application claim: propagate through the
+        // matrix-unit engine, not the SIMD baseline
+        engine: EngineKind::MatrixUnit,
     };
     println!(
-        "\nRTM shot: {}×{}×{} VTI r=4, {} fwd + {} bwd steps …",
-        cfg.nz, cfg.nx, cfg.ny, cfg.steps, cfg.steps
+        "\nRTM shot: {}×{}×{} VTI r=4, {} fwd + {} bwd steps, {} engine …",
+        cfg.nz,
+        cfg.nx,
+        cfg.ny,
+        cfg.steps,
+        cfg.steps,
+        cfg.engine.name()
     );
     let timer = Timer::start();
     let p = Platform::paper();

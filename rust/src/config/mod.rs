@@ -1,5 +1,10 @@
 //! Typed experiment configuration loaded from `configs/*.toml`
 //! (hand-rolled TOML subset in [`toml`]; serde is unavailable offline).
+//!
+//! Contract: configs are plain owned data resolved once at startup —
+//! names are validated eagerly where a typo would otherwise run the
+//! wrong thing (`[rtm] engine` must be a known `EngineKind`; an
+//! unknown sweep kernel is detectable via `SweepSpec::stencil`).
 
 pub mod toml;
 
@@ -148,6 +153,19 @@ pub fn from_text(text: &str) -> Result<ExperimentConfig, toml::ParseError> {
     r.snap_every = doc.usize_or("rtm", "snap_every", r.snap_every);
     r.sponge_width = doc.usize_or("rtm", "sponge_width", r.sponge_width);
     r.receiver_z = doc.usize_or("rtm", "receiver_z", r.receiver_z);
+    let engine_name = doc.str_or("rtm", "engine", r.engine.name());
+    r.engine = match crate::stencil::EngineKind::by_name(engine_name) {
+        Some(kind) => kind,
+        None => {
+            return Err(toml::ParseError {
+                line: 0,
+                msg: format!(
+                    "[rtm] engine: unknown engine {engine_name:?} \
+                     (expected naive | simd | matrix_unit)"
+                ),
+            })
+        }
+    };
 
     let rt = &mut cfg.runtime;
     rt.workers = doc.usize_or("runtime", "workers", rt.workers);
@@ -223,5 +241,17 @@ dx = 12.5
     fn unknown_kernel_is_detectable() {
         let cfg = from_text("[sweep]\nkernel = \"9DStarR9\"\n").unwrap();
         assert!(cfg.sweep.stencil().is_none());
+    }
+
+    #[test]
+    fn rtm_engine_key_selects_and_rejects() {
+        use crate::stencil::EngineKind;
+        let cfg = from_text("[rtm]\nengine = \"matrix_unit\"\n").unwrap();
+        assert_eq!(cfg.rtm.engine, EngineKind::MatrixUnit);
+        // default stays simd
+        assert_eq!(from_text("").unwrap().rtm.engine, EngineKind::Simd);
+        // unknown engine names are a parse error, not a silent default
+        let err = from_text("[rtm]\nengine = \"avx512\"\n").unwrap_err();
+        assert!(err.to_string().contains("unknown engine"), "{err}");
     }
 }

@@ -87,7 +87,9 @@ impl Doc {
     }
 }
 
-/// Parse error with a line number.
+/// Parse error with a line number.  `line == 0` means the error has no
+/// specific source line (semantic validation of a parsed value, e.g. an
+/// unknown `[rtm] engine` name) and the position prefix is omitted.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ParseError {
     pub line: usize,
@@ -96,7 +98,11 @@ pub struct ParseError {
 
 impl std::fmt::Display for ParseError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "toml parse error at line {}: {}", self.line, self.msg)
+        if self.line == 0 {
+            write!(f, "toml config error: {}", self.msg)
+        } else {
+            write!(f, "toml parse error at line {}: {}", self.line, self.msg)
+        }
     }
 }
 

@@ -10,8 +10,13 @@
 //! ([`super::runtime`]): the free functions [`sweep`] /
 //! [`multirank_sweep`] use the process-global pool, while a [`Driver`]
 //! owns a dedicated pool whose workers are spawned exactly once for the
-//! driver's lifetime.  A multirank step is submitted as dependency-
-//! ordered batches — under the SDMA backend the halo exchange runs as a
+//! driver's lifetime.  Which *compute engine* a tile task runs is no
+//! longer hardcoded at the call site: region tasks dispatch through the
+//! engine layer (`stencil::engine`), selected per driver
+//! ([`Driver::with_engine`]) or per call ([`sweep_with`]).
+//!
+//! A multirank step is submitted as dependency-ordered batches —
+//! under the SDMA backend the halo exchange runs as a
 //! pool task *concurrently* with the deep-interior tile batch (paper
 //! Fig. 9), and only the boundary-shell batch waits for it; under MPI
 //! the exchange is serialized ahead of all compute, matching the
@@ -24,9 +29,9 @@ use crate::grid::halo::HaloView;
 use crate::grid::par::ParGrid3;
 use crate::grid::shell;
 use crate::grid::Grid3;
-use crate::simulator::roofline::{self, Engine, MemKind, SweepConfig};
+use crate::simulator::roofline::{self, Engine as SimEngine, MemKind, SweepConfig};
 use crate::simulator::Platform;
-use crate::stencil::{simd, StencilSpec};
+use crate::stencil::{Engine, StencilSpec};
 use crate::util::Timer;
 
 use super::exchange::{self, Backend};
@@ -87,14 +92,20 @@ pub struct SweepStats {
 
 /// A driver owns a dedicated persistent runtime: workers are spawned
 /// once in [`Driver::new`] and reused by every subsequent sweep or
-/// timestep — never per `parallel_for` call.
+/// timestep — never per `parallel_for` call.  The compute engine is a
+/// driver property ([`Driver::with_engine`]): every per-tile region
+/// task dispatches through it instead of hardcoding one engine at the
+/// call site.
 pub struct Driver {
     rt: Runtime,
     platform: Platform,
     threads: usize,
+    engine: Engine,
 }
 
 impl Driver {
+    /// Spawn a driver with its own `threads`-worker runtime and the
+    /// default simd engine.
     pub fn new(threads: usize, platform: Platform) -> Self {
         let threads = threads.max(1);
         let cfg = RuntimeConfig {
@@ -102,7 +113,7 @@ impl Driver {
             cores_per_numa: platform.cores_per_numa,
             numa_nodes: platform.total_numa(),
         };
-        Self { rt: Runtime::new(cfg), platform, threads }
+        Self { rt: Runtime::new(cfg), platform, threads, engine: Engine::default_simd(1) }
     }
 
     /// Build from an experiment config (`[runtime]` + `[sweep]` tables).
@@ -112,21 +123,39 @@ impl Driver {
             rt: Runtime::new(rc),
             platform: Platform::paper(),
             threads: cfg.sweep.threads.max(1),
+            engine: Engine::default_simd(1),
         }
     }
 
+    /// Route this driver's region tasks through `engine` (tasks run
+    /// serially inside their claims — the driver's tiling is the
+    /// parallelism, so the engine's own `threads` hint is unused here).
+    pub fn with_engine(mut self, engine: Engine) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// The engine region tasks dispatch through.
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// The dedicated runtime backing this driver.
     pub fn runtime(&self) -> &Runtime {
         &self.rt
     }
 
+    /// Worker-parallelism of this driver's sweeps.
     pub fn threads(&self) -> usize {
         self.threads
     }
 
+    /// One full periodic sweep on this driver's runtime and engine.
     pub fn sweep(&self, spec: &StencilSpec, g: &Grid3, strategy: Strategy) -> (Grid3, SweepStats) {
-        sweep_on(&self.rt, spec, g, self.threads, strategy, &self.platform)
+        sweep_on(&self.rt, spec, g, self.threads, strategy, &self.platform, &self.engine)
     }
 
+    /// A multi-rank stepped sweep on this driver's runtime and engine.
     pub fn multirank_sweep(
         &self,
         spec: &StencilSpec,
@@ -144,12 +173,14 @@ impl Driver {
             steps,
             self.threads,
             &self.platform,
+            &self.engine,
         )
     }
 }
 
 /// One full periodic sweep of `spec` over `g`, parallelized over
-/// `threads` with the given tile strategy on the process-global pool.
+/// `threads` with the given tile strategy on the process-global pool
+/// and the default simd engine ([`sweep_with`] takes an explicit one).
 pub fn sweep(
     spec: &StencilSpec,
     g: &Grid3,
@@ -157,9 +188,23 @@ pub fn sweep(
     strategy: Strategy,
     platform: &Platform,
 ) -> (Grid3, SweepStats) {
-    sweep_on(runtime::global(), spec, g, threads, strategy, platform)
+    sweep_with(spec, g, threads, strategy, platform, &Engine::default_simd(1))
 }
 
+/// [`sweep`] with an explicit engine: every tile task dispatches its
+/// region through `engine`.
+pub fn sweep_with(
+    spec: &StencilSpec,
+    g: &Grid3,
+    threads: usize,
+    strategy: Strategy,
+    platform: &Platform,
+    engine: &Engine,
+) -> (Grid3, SweepStats) {
+    sweep_on(runtime::global(), spec, g, threads, strategy, platform, engine)
+}
+
+#[allow(clippy::too_many_arguments)]
 fn sweep_on(
     rt: &Runtime,
     spec: &StencilSpec,
@@ -167,6 +212,7 @@ fn sweep_on(
     threads: usize,
     strategy: Strategy,
     platform: &Platform,
+    engine: &Engine,
 ) -> (Grid3, SweepStats) {
     assert_eq!(spec.ndim, 3);
     let plan = tiles::plan(strategy, threads.max(1), g.nx, g.ny);
@@ -183,13 +229,13 @@ fn sweep_on(
         rt.run(threads.max(1), tile_list.len(), &|i| {
             // exclusive view of this tile's XY region over all z
             let mut view = tile_list[i].claim(out_pg);
-            simd::apply3_region(spec, g, &mut view);
+            engine.apply3_region(spec, g, &mut view);
         });
     }
     let real_s = t.secs();
     let cells = g.len();
     let cfg = SweepConfig::best(MemKind::OnPkg);
-    let est = roofline::predict(spec, cells, Engine::MMStencil, cfg, platform);
+    let est = roofline::predict(spec, cells, SimEngine::MMStencil, cfg, platform);
     (
         out,
         SweepStats {
@@ -242,7 +288,7 @@ struct RegionTask {
 
 /// Run `steps` repeated sweeps of `spec` over a global periodic grid
 /// decomposed across `decomp` ranks on the process-global pool,
-/// exchanging halos through `backend` each step.
+/// exchanging halos through `backend` each step (default simd engine).
 pub fn multirank_sweep(
     spec: &StencilSpec,
     global: &Grid3,
@@ -252,7 +298,17 @@ pub fn multirank_sweep(
     threads: usize,
     platform: &Platform,
 ) -> (Grid3, StepStats) {
-    multirank_sweep_on(runtime::global(), spec, global, decomp, backend, steps, threads, platform)
+    multirank_sweep_on(
+        runtime::global(),
+        spec,
+        global,
+        decomp,
+        backend,
+        steps,
+        threads,
+        platform,
+        &Engine::default_simd(1),
+    )
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -265,6 +321,7 @@ fn multirank_sweep_on(
     steps: usize,
     threads: usize,
     platform: &Platform,
+    engine: &Engine,
 ) -> (Grid3, StepStats) {
     let r = spec.radius;
     let threads = threads.max(1);
@@ -354,7 +411,7 @@ fn multirank_sweep_on(
                 // read through the rank's shared halo view
                 let mut view = tout_pgs[task.rank]
                     .view(task.z0, task.z1, task.x0, task.x1, task.y0, task.y1);
-                simd::apply3_region(spec, &hviews[task.rank].pg, &mut view);
+                engine.apply3_region(spec, &hviews[task.rank].pg, &mut view);
             };
 
             match backend {
@@ -415,7 +472,7 @@ fn multirank_sweep_on(
         let est = roofline::predict(
             spec,
             rank_cells,
-            Engine::MMStencil,
+            SimEngine::MMStencil,
             SweepConfig::best(MemKind::OnPkg),
             platform,
         );
@@ -449,7 +506,7 @@ fn multirank_sweep_on(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::stencil::naive;
+    use crate::stencil::{naive, EngineKind};
     use crate::util::prop::assert_allclose;
 
     #[test]
@@ -465,6 +522,34 @@ mod tests {
                 assert!(stats.gcells_per_s > 0.0);
             }
         }
+    }
+
+    #[test]
+    fn every_engine_sweeps_through_the_coordinator() {
+        // the tile plan + claims are engine-agnostic: each kind's
+        // region kernel must reproduce the naive oracle under tiling
+        let spec = StencilSpec::star3d(2);
+        let g = Grid3::random(10, 28, 36, 15);
+        let want = naive::apply3(&spec, &g);
+        let p = Platform::paper();
+        for kind in EngineKind::ALL {
+            let eng = Engine::new(kind);
+            let (got, stats) = sweep_with(&spec, &g, 4, Strategy::SnoopAware, &p, &eng);
+            assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
+            assert!(stats.gcells_per_s > 0.0, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn driver_engine_is_configurable() {
+        let p = Platform::paper();
+        let d = Driver::new(2, p).with_engine(Engine::new(EngineKind::MatrixUnit));
+        assert_eq!(d.engine().kind, EngineKind::MatrixUnit);
+        let spec = StencilSpec::star3d(1);
+        let g = Grid3::random(8, 20, 20, 33);
+        let want = naive::apply3(&spec, &g);
+        let (got, _) = d.sweep(&spec, &g, Strategy::Square);
+        assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
     }
 
     #[test]

@@ -73,7 +73,7 @@ fn run_bytes(h: usize, nx: usize, ny: usize, axis: Axis) -> u64 {
     }
 }
 
-/// [`run_bytes`] for an owned halo grid.
+/// `run_bytes` for an owned halo grid.
 pub fn face_run_bytes(g: &HaloGrid, axis: Axis) -> u64 {
     run_bytes(g.h, g.nx, g.ny, axis)
 }

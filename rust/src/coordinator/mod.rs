@@ -15,7 +15,16 @@
 //! * [`pipeline`] — z-layer pipeline overlapping compute with exchange
 //!   (paper Fig. 9), executed as runtime tasks;
 //! * [`driver`]   — whole-sweep orchestration: grid → bricks → tiles →
-//!   runtime batches → engine (rust-native or artifact) → metrics.
+//!   runtime batches → engine (selected through `stencil::Engine`) →
+//!   metrics.
+//!
+//! Ownership/aliasing contract: the coordinator owns the tile plans
+//! and batch ordering, but never hands two tasks overlapping mutable
+//! state — every region task claims an exclusive `TileViewMut` of its
+//! output box, chunk helpers claim disjoint `ParSlice` ranges, and
+//! scratch buffers belong to worker threads (checked out per task via
+//! scoped closures, never shared).  Engines are dispatched per claim
+//! through the `stencil::engine` layer.
 
 pub mod driver;
 pub mod exchange;

@@ -147,7 +147,7 @@ impl HaloGrid {
     }
 
     /// Pack the *interior-boundary* slab that a neighbour on (`axis`,
-    /// `side`) needs for its halo (see [`pack_box`]).
+    /// `side`) needs for its halo (see `pack_box`).
     pub fn pack_face(&self, axis: Axis, side: Side) -> Vec<f32> {
         let [z0, z1, x0, x1, y0, y1] = pack_box(self.nz, self.nx, self.ny, self.h, axis, side);
         let mut out = Vec::with_capacity((z1 - z0) * (x1 - x0) * (y1 - y0));

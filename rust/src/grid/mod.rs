@@ -3,6 +3,16 @@
 //! Layout convention (mirrors the python oracles): 3D grids are indexed
 //! `(z, x, y)` with z slowest and y contiguous; 2D grids are `(x, y)` with
 //! y contiguous.
+//!
+//! Ownership/aliasing contract: a [`Grid3`]/[`Grid2`] is plain owned
+//! storage — serial code may poke `as_mut_slice`, but **all** parallel
+//! access goes through [`par`]: one `&mut Grid3` is traded for a
+//! [`ParGrid3`] of `UnsafeCell` slots, reads go through [`GridSrc`],
+//! and writes happen only inside exclusive claimed [`TileViewMut`]
+//! boxes (debug-checked ledger, Miri-checked in CI).  [`shell`]
+//! enumerates the wrap-free interior vs boundary slabs those claims
+//! are split against; [`halo`]/[`decomp`]/[`brick`] own the multirank
+//! layout.
 
 pub mod brick;
 pub mod decomp;

@@ -126,6 +126,51 @@ pub fn boundary_boxes2(nx: usize, ny: usize, r: usize) -> Boxes<4, 4> {
     out
 }
 
+/// Wrap-free interior of a **1-D band stencil** along `axis`
+/// (0 = z, 1 = x, 2 = y): the grid shrunk by `r` along that axis only,
+/// full extent elsewhere.  `None` when the axis is too short (or any
+/// dimension is empty) — then [`axis_boundary_boxes`] covers everything.
+pub fn axis_interior_box(
+    nz: usize,
+    nx: usize,
+    ny: usize,
+    axis: usize,
+    r: usize,
+) -> Option<[usize; 6]> {
+    assert!(axis < 3, "axis must be 0 (z), 1 (x), or 2 (y)");
+    let dims = [nz, nx, ny];
+    if dims[axis] <= 2 * r || dims.contains(&0) {
+        return None;
+    }
+    let mut b = [0, nz, 0, nx, 0, ny];
+    b[2 * axis] = r;
+    b[2 * axis + 1] = dims[axis] - r;
+    Some(b)
+}
+
+/// Boundary shell of a 1-D band stencil along `axis`: at most two slabs
+/// of thickness `r` at the low and high faces of that axis, full extent
+/// on the other axes.  Union with [`axis_interior_box`] partitions the
+/// volume; when no interior exists the slabs cover everything.
+pub fn axis_boundary_boxes(nz: usize, nx: usize, ny: usize, axis: usize, r: usize) -> Boxes<6, 2> {
+    assert!(axis < 3, "axis must be 0 (z), 1 (x), or 2 (y)");
+    let dims = [nz, nx, ny];
+    let lo = r.min(dims[axis]);
+    let hi = dims[axis].saturating_sub(r).max(lo);
+    let mut out = Boxes::new();
+    let mut push = |a0: usize, a1: usize| {
+        let mut b = [0, nz, 0, nx, 0, ny];
+        b[2 * axis] = a0;
+        b[2 * axis + 1] = a1;
+        if b[0] < b[1] && b[2] < b[3] && b[4] < b[5] {
+            out.push(b);
+        }
+    };
+    push(0, lo);
+    push(hi, dims[axis]);
+    out
+}
+
 /// Intersection of two `[z0, z1, x0, x1, y0, y1]` boxes, `None` if
 /// empty — used to clip the shell/interior split to a claimed region.
 pub fn intersect(a: [usize; 6], b: [usize; 6]) -> Option<[usize; 6]> {
@@ -222,6 +267,43 @@ mod tests {
         let none = boundary_boxes(9, 9, 9, 0);
         assert!(none.is_empty());
         assert_eq!(none.into_iter().count(), 0);
+    }
+
+    #[test]
+    fn axis_boxes_partition_the_volume() {
+        for (nz, nx, ny, r) in [(16, 9, 7, 4), (8, 8, 8, 4), (5, 12, 3, 2), (3, 3, 3, 4)] {
+            for axis in 0..3 {
+                let mut hits = vec![0u8; nz * nx * ny];
+                let mut mark = |b: [usize; 6]| {
+                    for z in b[0]..b[1] {
+                        for x in b[2]..b[3] {
+                            for y in b[4]..b[5] {
+                                hits[(z * nx + x) * ny + y] += 1;
+                            }
+                        }
+                    }
+                };
+                if let Some(b) = axis_interior_box(nz, nx, ny, axis, r) {
+                    mark(b);
+                }
+                for b in axis_boundary_boxes(nz, nx, ny, axis, r) {
+                    mark(b);
+                }
+                assert!(
+                    hits.iter().all(|&h| h == 1),
+                    "({nz},{nx},{ny}) axis={axis} r={r}: axis boxes must partition"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn axis_interior_shrinks_one_axis_only() {
+        assert_eq!(axis_interior_box(10, 11, 12, 0, 3), Some([3, 7, 0, 11, 0, 12]));
+        assert_eq!(axis_interior_box(10, 11, 12, 1, 3), Some([0, 10, 3, 8, 0, 12]));
+        assert_eq!(axis_interior_box(10, 11, 12, 2, 3), Some([0, 10, 0, 11, 3, 9]));
+        assert_eq!(axis_interior_box(6, 11, 12, 0, 3), None);
+        assert_eq!(axis_boundary_boxes(6, 11, 12, 0, 3).len(), 2);
     }
 
     #[test]

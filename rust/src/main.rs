@@ -65,7 +65,7 @@ USAGE: mmstencil <subcommand> [--key value ...]
 
   info                                platform + artifact inventory
   sweep      --kernel 3DStarR4 --n 64 --threads 8 --strategy snoop|square
-  rtm        --medium vti|tti --n 48 --steps 120 --threads 8
+  rtm        --medium vti|tti --n 48 --steps 120 --threads 8 --engine simd|naive|matrix_unit
   exchange   --n 128 --radius 4             Table II halo bandwidth test
   scaling    --mode strong|weak --kernel 3DStarR4 --n 64
   artifacts  [--dir artifacts]              verify PJRT vs rust kernels
@@ -200,10 +200,19 @@ fn cmd_rtm(opts: &Opts) -> Result<(), String> {
     cfg.ny = opt_usize(opts, "ny", n);
     cfg.steps = opt_usize(opts, "steps", 120);
     cfg.threads = opt_usize(opts, "threads", default_threads());
+    let engine_name = opt_str(opts, "engine", "simd");
+    cfg.engine = mmstencil::stencil::EngineKind::by_name(engine_name).ok_or_else(|| {
+        format!("unknown --engine {engine_name:?} (expected naive | simd | matrix_unit)")
+    })?;
     let p = Platform::paper();
     println!(
-        "RTM {medium:?} shot: {}×{}×{} grid, {} steps, {} threads",
-        cfg.nz, cfg.nx, cfg.ny, cfg.steps, cfg.threads
+        "RTM {medium:?} shot: {}×{}×{} grid, {} steps, {} threads, {} engine",
+        cfg.nz,
+        cfg.nx,
+        cfg.ny,
+        cfg.steps,
+        cfg.threads,
+        cfg.engine.name()
     );
     let (image, rep) = rtm_driver::run_shot(&cfg, &p);
     println!(
@@ -374,5 +383,6 @@ fn cmd_run(opts: &Opts) -> Result<(), String> {
     o.insert("ny".into(), cfg.rtm.ny.to_string());
     o.insert("steps".into(), cfg.rtm.steps.to_string());
     o.insert("threads".into(), cfg.rtm.threads.to_string());
+    o.insert("engine".into(), cfg.rtm.engine.name().to_string());
     cmd_rtm(&o)
 }

@@ -6,17 +6,23 @@
 //! on — but the **schema is contract**: CI validates it on every PR so
 //! the trajectory stays machine-readable across the PR sequence.
 //! Renderer and validator are hand-rolled (no serde; DESIGN.md §7).
+//!
+//! v2 (this PR) extends the document with `rtm_entries`: per-engine RTM
+//! step throughput, so the trajectory covers the application workload,
+//! not just raw sweeps.
 
 /// Schema tag carried in the document; bump on breaking field changes.
-pub const SCHEMA: &str = "mmstencil.bench_engines.v1";
+/// v1 → v2: added the `rtm_entries` array.
+pub const SCHEMA: &str = "mmstencil.bench_engines.v2";
 
-/// One engine × workload measurement.
+/// One engine × sweep-workload measurement.
 #[derive(Clone, Debug)]
 pub struct EngineBench {
     /// "naive" | "simd" | "matrix_unit" | "matrix_unit_par" | …
     pub engine: String,
     /// "star" | "box"
     pub pattern: String,
+    /// Stencil radius.
     pub radius: usize,
     /// Cubic grid edge (the workload is an n³ periodic sweep).
     pub n: usize,
@@ -32,19 +38,47 @@ pub struct EngineBench {
     pub arena_grows_per_sweep: u64,
 }
 
+/// One engine × RTM-step measurement (schema v2): a full propagator
+/// timestep — derivative passes plus pointwise update — through the
+/// engine dispatch layer.
+#[derive(Clone, Debug)]
+pub struct RtmBench {
+    /// Canonical engine-kind name (`EngineKind::name`).
+    pub engine: String,
+    /// "vti" | "tti"
+    pub medium: String,
+    /// Cubic grid edge of the step.
+    pub n: usize,
+    /// Worker-parallelism of the step.
+    pub threads: usize,
+    /// Median cell-update throughput of one step, in millions/s.
+    pub mcells_per_s: f64,
+    /// Heap allocations during one post-warm-up step.
+    pub allocs_per_step: u64,
+    /// Scratch-arena growth events during the same step.
+    pub arena_grows_per_step: u64,
+}
+
 fn esc(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
+fn finite(v: f64) -> f64 {
+    if v.is_finite() {
+        v
+    } else {
+        0.0
+    }
+}
+
 /// Render the document.  Entries keep their push order, so re-runs of
 /// the same probe diff cleanly.
-pub fn render(entries: &[EngineBench]) -> String {
+pub fn render(entries: &[EngineBench], rtm_entries: &[RtmBench]) -> String {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str(&format!("  \"schema\": \"{SCHEMA}\",\n"));
     s.push_str("  \"entries\": [\n");
     for (i, e) in entries.iter().enumerate() {
-        let m = if e.mcells_per_s.is_finite() { e.mcells_per_s } else { 0.0 };
         s.push_str(&format!(
             "    {{\"engine\": \"{}\", \"pattern\": \"{}\", \"radius\": {}, \"n\": {}, \
              \"threads\": {}, \"mcells_per_s\": {:.3}, \"allocs_per_sweep\": {}, \
@@ -54,10 +88,26 @@ pub fn render(entries: &[EngineBench]) -> String {
             e.radius,
             e.n,
             e.threads,
-            m,
+            finite(e.mcells_per_s),
             e.allocs_per_sweep,
             e.arena_grows_per_sweep,
             if i + 1 == entries.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"rtm_entries\": [\n");
+    for (i, e) in rtm_entries.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"engine\": \"{}\", \"medium\": \"{}\", \"n\": {}, \"threads\": {}, \
+             \"mcells_per_s\": {:.3}, \"allocs_per_step\": {}, \"arena_grows_per_step\": {}}}{}\n",
+            esc(&e.engine),
+            esc(&e.medium),
+            e.n,
+            e.threads,
+            finite(e.mcells_per_s),
+            e.allocs_per_step,
+            e.arena_grows_per_step,
+            if i + 1 == rtm_entries.len() { "" } else { "," }
         ));
     }
     s.push_str("  ]\n}\n");
@@ -65,10 +115,10 @@ pub fn render(entries: &[EngineBench]) -> String {
 }
 
 /// Structural validation of a rendered document: schema tag, balanced
-/// nesting, and every entry carrying the full key set.  Returns the
-/// entry count.  (CI additionally parses the artifact with a real JSON
-/// parser; this keeps the contract testable offline.)
-pub fn validate(s: &str) -> Result<usize, String> {
+/// nesting, and every entry carrying its full key set.  Returns the
+/// `(sweep, rtm)` entry counts.  (CI additionally parses the artifact
+/// with a real JSON parser; this keeps the contract testable offline.)
+pub fn validate(s: &str) -> Result<(usize, usize), String> {
     if !s.contains(&format!("\"schema\": \"{SCHEMA}\"")) {
         return Err(format!("missing schema tag {SCHEMA}"));
     }
@@ -88,21 +138,29 @@ pub fn validate(s: &str) -> Result<usize, String> {
     if brace != 0 || bracket != 0 {
         return Err("unbalanced nesting".into());
     }
-    let count = s.matches("\"engine\":").count();
-    for k in [
-        "\"pattern\":",
-        "\"radius\":",
-        "\"n\":",
-        "\"threads\":",
-        "\"mcells_per_s\":",
-        "\"allocs_per_sweep\":",
-        "\"arena_grows_per_sweep\":",
-    ] {
-        if s.matches(k).count() != count {
-            return Err(format!("key {k} count mismatch (expected {count})"));
+    if !s.contains("\"rtm_entries\":") {
+        return Err("missing rtm_entries array".into());
+    }
+    // sweep entries are the only rows with "pattern"; RTM rows the only
+    // ones with "medium"; shared keys must appear once per row of both
+    let sweeps = s.matches("\"pattern\":").count();
+    let rtms = s.matches("\"medium\":").count();
+    for k in ["\"radius\":", "\"allocs_per_sweep\":", "\"arena_grows_per_sweep\":"] {
+        if s.matches(k).count() != sweeps {
+            return Err(format!("key {k} count mismatch (expected {sweeps})"));
         }
     }
-    Ok(count)
+    for k in ["\"allocs_per_step\":", "\"arena_grows_per_step\":"] {
+        if s.matches(k).count() != rtms {
+            return Err(format!("key {k} count mismatch (expected {rtms})"));
+        }
+    }
+    for k in ["\"engine\":", "\"n\":", "\"threads\":", "\"mcells_per_s\":"] {
+        if s.matches(k).count() != sweeps + rtms {
+            return Err(format!("key {k} count mismatch (expected {})", sweeps + rtms));
+        }
+    }
+    Ok((sweeps, rtms))
 }
 
 #[cfg(test)]
@@ -134,24 +192,40 @@ mod tests {
         ]
     }
 
+    fn rtm_sample() -> Vec<RtmBench> {
+        vec![RtmBench {
+            engine: "matrix_unit".into(),
+            medium: "vti".into(),
+            n: 96,
+            threads: 8,
+            mcells_per_s: 450.5,
+            allocs_per_step: 12,
+            arena_grows_per_step: 0,
+        }]
+    }
+
     #[test]
     fn render_validates() {
-        let doc = render(&sample());
-        assert_eq!(validate(&doc), Ok(2));
-        assert!(doc.contains("\"schema\": \"mmstencil.bench_engines.v1\""));
+        let doc = render(&sample(), &rtm_sample());
+        assert_eq!(validate(&doc), Ok((2, 1)));
+        assert!(doc.contains("\"schema\": \"mmstencil.bench_engines.v2\""));
         assert!(doc.contains("\"mcells_per_s\": 123.456"));
+        assert!(doc.contains("\"medium\": \"vti\""));
+        assert!(doc.contains("\"allocs_per_step\": 12"));
     }
 
     #[test]
     fn empty_document_is_valid_with_zero_entries() {
-        assert_eq!(validate(&render(&[])), Ok(0));
+        assert_eq!(validate(&render(&[], &[])), Ok((0, 0)));
     }
 
     #[test]
     fn tampered_documents_fail() {
-        let doc = render(&sample());
-        assert!(validate(&doc.replace("bench_engines.v1", "v0")).is_err());
+        let doc = render(&sample(), &rtm_sample());
+        assert!(validate(&doc.replace("bench_engines.v2", "v1")).is_err());
         assert!(validate(&doc.replace("\"radius\":", "\"r\":")).is_err());
+        assert!(validate(&doc.replace("\"allocs_per_step\":", "\"a\":")).is_err());
+        assert!(validate(&doc.replace("\"rtm_entries\":", "\"rtm\":")).is_err());
         assert!(validate(doc.trim_end().trim_end_matches('}')).is_err());
     }
 
@@ -159,7 +233,7 @@ mod tests {
     fn non_finite_throughput_is_clamped() {
         let mut e = sample();
         e[0].mcells_per_s = f64::INFINITY;
-        let doc = render(&e);
+        let doc = render(&e, &[]);
         assert!(validate(&doc).is_ok());
         assert!(doc.contains("\"mcells_per_s\": 0.000"));
     }

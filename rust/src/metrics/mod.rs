@@ -3,7 +3,11 @@
 //! bench harness (criterion is unavailable offline — `util::bench` does
 //! the timing, this module does the bookkeeping).  [`bench_json`]
 //! carries the stable `BENCH_engines.json` schema behind the perf
-//! trajectory.
+//! trajectory (v2: sweep rows + per-engine RTM step rows).
+//!
+//! Contract: everything here is pure bookkeeping over owned values —
+//! no shared mutable state, no grid access; records are built from
+//! numbers the measuring code already owns.
 
 pub mod bench_json;
 

@@ -10,6 +10,7 @@ use crate::grid::Grid3;
 
 /// Precomputed per-cell damping factors.
 pub struct Sponge {
+    /// Damping-ramp width (cells) at every face.
     pub width: usize,
     factors: Vec<f32>,
     nz: usize,

@@ -3,6 +3,12 @@
 //! time-reversed traces, and zero-lag imaging with snapshot
 //! checkpointing — the full real-world workflow MMStencil integrates
 //! into, with simulated-platform metrics attached.
+//!
+//! The propagation engine is part of the shot configuration
+//! ([`RtmConfig::engine`]): both passes step through the engine
+//! dispatch layer, so one config field switches a whole shot between
+//! the naive oracle, the simd baseline, and the matrix-unit engine
+//! (the paper's headline 1.8× RTM claim is exactly this switch).
 
 use super::boundary::Sponge;
 use super::image::Image;
@@ -11,25 +17,31 @@ use super::tti::{self, TtiScratch, TtiState, TtiTrig};
 use super::vti::{self, VtiScratch, VtiState};
 use super::wavelet;
 use crate::grid::Grid3;
-use crate::simulator::roofline::{self, Engine, MemKind};
+use crate::simulator::roofline::{self, Engine as SimEngine, MemKind};
 use crate::simulator::Platform;
 use crate::stencil::coeffs::{first_deriv, second_deriv};
-use crate::stencil::StencilSpec;
+use crate::stencil::{Engine, EngineKind, StencilSpec};
 use crate::util::Timer;
 
 /// Anisotropy model of the run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Medium {
+    /// Vertical transverse isotropy (pseudo-acoustic σH/σV pair).
     Vti,
+    /// Tilted transverse isotropy (p/q pair with tilt/azimuth fields).
     Tti,
 }
 
 /// Shot configuration.
 #[derive(Clone, Debug)]
 pub struct RtmConfig {
+    /// Anisotropy model of the run.
     pub medium: Medium,
+    /// Grid cells along z (depth).
     pub nz: usize,
+    /// Grid cells along x.
     pub nx: usize,
+    /// Grid cells along y.
     pub ny: usize,
     /// grid spacing (m)
     pub dx: f64,
@@ -37,17 +49,24 @@ pub struct RtmConfig {
     pub steps: usize,
     /// Ricker peak frequency (Hz)
     pub f0: f64,
+    /// Worker-parallelism of the propagators (slab fan-out + pointwise
+    /// chunking).
     pub threads: usize,
     /// store a source snapshot every k steps for imaging
     pub snap_every: usize,
+    /// Absorbing-sponge ramp width (cells).
     pub sponge_width: usize,
     /// source position (z, x, y); default mid-surface
     pub src: Option<(usize, usize, usize)>,
     /// receiver plane depth (z index)
     pub receiver_z: usize,
+    /// Stencil engine both propagation passes dispatch through
+    /// (`EngineKind::by_name` selects it from configs/CLI).
+    pub engine: EngineKind,
 }
 
 impl RtmConfig {
+    /// A small default shot (48³, 120 steps, simd engine).
     pub fn small(medium: Medium) -> Self {
         Self {
             medium,
@@ -62,25 +81,39 @@ impl RtmConfig {
             sponge_width: 8,
             src: None,
             receiver_z: 2,
+            engine: EngineKind::Simd,
         }
     }
 
+    /// Source position: configured, or just below the sponge at the
+    /// lateral centre.
     pub fn src_pos(&self) -> (usize, usize, usize) {
         self.src.unwrap_or((self.sponge_width + 1, self.nx / 2, self.ny / 2))
     }
 
+    /// Total grid cells.
     pub fn cells(&self) -> usize {
         self.nz * self.nx * self.ny
+    }
+
+    /// The configured propagation engine, threaded per the config.
+    pub fn propagation_engine(&self) -> Engine {
+        Engine::new(self.engine).with_threads(self.threads)
     }
 }
 
 /// Metrics of one shot.
 #[derive(Clone, Debug)]
 pub struct RtmReport {
+    /// Anisotropy model of the shot.
     pub medium: Medium,
+    /// Timesteps per pass.
     pub steps: usize,
+    /// Grid cells.
     pub cells: usize,
+    /// Wall time of the forward pass (s).
     pub forward_s: f64,
+    /// Wall time of the backward pass (s).
     pub backward_s: f64,
     /// grid-point updates per second (both passes, both fields)
     pub gpoints_per_s: f64,
@@ -88,6 +121,7 @@ pub struct RtmReport {
     pub energy_trace: Vec<f64>,
     /// max |trace| recorded at the receiver plane
     pub max_trace: f32,
+    /// Energy of the accumulated zero-lag image.
     pub image_energy: f64,
     /// simulated single-NUMA bandwidth utilization on the paper platform
     pub sim_bandwidth_util: f64,
@@ -123,7 +157,7 @@ pub fn equiv_sweeps(medium: Medium) -> f64 {
 
 /// Simulated per-step time + bandwidth utilization on the paper
 /// platform for one NUMA node (used by Fig. 14/15 benches too).
-pub fn simulate_step(cfg: &RtmConfig, engine: Engine, p: &Platform) -> (f64, f64) {
+pub fn simulate_step(cfg: &RtmConfig, engine: SimEngine, p: &Platform) -> (f64, f64) {
     let spec = StencilSpec::star3d(4);
     let est = roofline::predict(
         &spec,
@@ -144,7 +178,7 @@ pub fn simulate_step(cfg: &RtmConfig, engine: Engine, p: &Platform) -> (f64, f64
     // MMStencil keeps them in thread-private L1 buffers per block — on a
     // memory-bound step that costs the baselines ~an extra half sweep
     // of traffic per derivative pass
-    let integration_penalty = if engine == Engine::MMStencil {
+    let integration_penalty = if engine == SimEngine::MMStencil {
         1.0
     } else {
         match cfg.medium {
@@ -183,6 +217,7 @@ fn run_shot_vti(cfg: &RtmConfig, platform: &Platform) -> (Image, RtmReport) {
     let (nz, nx, ny) = (cfg.nz, cfg.nx, cfg.ny);
     let m: VtiMedia = media::layered_vti(nz, nx, ny, cfg.dx, &media::default_layers());
     let w2 = second_deriv(4);
+    let eng = cfg.propagation_engine();
     let sponge = Sponge::new(nz, nx, ny, cfg.sponge_width, 0.0053);
     let (sz, sx, sy) = cfg.src_pos();
     let src_series = wavelet::ricker_series(cfg.steps, m.dt, cfg.f0);
@@ -196,7 +231,7 @@ fn run_shot_vti(cfg: &RtmConfig, platform: &Platform) -> (Image, RtmReport) {
     let t_fwd = Timer::start();
     for (i, &amp) in src_series.iter().enumerate() {
         st.inject(sz, sx, sy, amp);
-        vti::step(&mut st, &m, &w2, cfg.threads, &mut sc);
+        vti::step_with(&mut st, &m, &w2, &eng, &mut sc);
         sponge.apply(&mut st.sh);
         sponge.apply(&mut st.sv);
         sponge.apply(&mut st.sh_prev);
@@ -221,7 +256,7 @@ fn run_shot_vti(cfg: &RtmConfig, platform: &Platform) -> (Image, RtmReport) {
     for i in (0..cfg.steps).rev() {
         inject_plane(&mut rb.sh, cfg.receiver_z, &traces[i]);
         inject_plane(&mut rb.sv, cfg.receiver_z, &traces[i]);
-        vti::step(&mut rb, &m, &w2, cfg.threads, &mut sc);
+        vti::step_with(&mut rb, &m, &w2, &eng, &mut sc);
         sponge.apply(&mut rb.sh);
         sponge.apply(&mut rb.sv);
         sponge.apply(&mut rb.sh_prev);
@@ -235,8 +270,8 @@ fn run_shot_vti(cfg: &RtmConfig, platform: &Platform) -> (Image, RtmReport) {
     }
     let backward_s = t_bwd.secs();
 
-    let (sim_step_s, sim_util) = simulate_step(cfg, Engine::MMStencil, platform);
-    let (sim_step_simd_s, _) = simulate_step(cfg, Engine::Simd, platform);
+    let (sim_step_s, sim_util) = simulate_step(cfg, SimEngine::MMStencil, platform);
+    let (sim_step_simd_s, _) = simulate_step(cfg, SimEngine::Simd, platform);
     let report = RtmReport {
         medium: Medium::Vti,
         steps: cfg.steps,
@@ -261,6 +296,7 @@ fn run_shot_tti(cfg: &RtmConfig, platform: &Platform) -> (Image, RtmReport) {
     let trig = TtiTrig::new(&m);
     let w2 = second_deriv(4);
     let w1 = first_deriv(4);
+    let eng = cfg.propagation_engine();
     let sponge = Sponge::new(nz, nx, ny, cfg.sponge_width, 0.0053);
     let (sz, sx, sy) = cfg.src_pos();
     let src_series = wavelet::ricker_series(cfg.steps, m.dt, cfg.f0);
@@ -273,7 +309,7 @@ fn run_shot_tti(cfg: &RtmConfig, platform: &Platform) -> (Image, RtmReport) {
     let t_fwd = Timer::start();
     for (i, &amp) in src_series.iter().enumerate() {
         st.inject(sz, sx, sy, amp);
-        tti::step(&mut st, &m, &trig, &w2, &w1, cfg.threads, &mut sc);
+        tti::step_with(&mut st, &m, &trig, &w2, &w1, &eng, &mut sc);
         sponge.apply(&mut st.p);
         sponge.apply(&mut st.q);
         sponge.apply(&mut st.p_prev);
@@ -297,7 +333,7 @@ fn run_shot_tti(cfg: &RtmConfig, platform: &Platform) -> (Image, RtmReport) {
     for i in (0..cfg.steps).rev() {
         inject_plane(&mut rb.p, cfg.receiver_z, &traces[i]);
         inject_plane(&mut rb.q, cfg.receiver_z, &traces[i]);
-        tti::step(&mut rb, &m, &trig, &w2, &w1, cfg.threads, &mut sc);
+        tti::step_with(&mut rb, &m, &trig, &w2, &w1, &eng, &mut sc);
         sponge.apply(&mut rb.p);
         sponge.apply(&mut rb.q);
         sponge.apply(&mut rb.p_prev);
@@ -311,8 +347,8 @@ fn run_shot_tti(cfg: &RtmConfig, platform: &Platform) -> (Image, RtmReport) {
     }
     let backward_s = t_bwd.secs();
 
-    let (sim_step_s, sim_util) = simulate_step(cfg, Engine::MMStencil, platform);
-    let (sim_step_simd_s, _) = simulate_step(cfg, Engine::Simd, platform);
+    let (sim_step_s, sim_util) = simulate_step(cfg, SimEngine::MMStencil, platform);
+    let (sim_step_simd_s, _) = simulate_step(cfg, SimEngine::Simd, platform);
     let report = RtmReport {
         medium: Medium::Tti,
         steps: cfg.steps,
@@ -372,8 +408,8 @@ mod tests {
         let p = Platform::paper();
         for medium in [Medium::Vti, Medium::Tti] {
             let cfg = RtmConfig::small(medium);
-            let (t_mm, _) = simulate_step(&cfg, Engine::MMStencil, &p);
-            let (t_simd, _) = simulate_step(&cfg, Engine::Simd, &p);
+            let (t_mm, _) = simulate_step(&cfg, SimEngine::MMStencil, &p);
+            let (t_simd, _) = simulate_step(&cfg, SimEngine::Simd, &p);
             let s = t_simd / t_mm;
             assert!(
                 (1.4..3.0).contains(&s),
@@ -387,7 +423,35 @@ mod tests {
         // paper: 47% bandwidth utilization for VTI on one NUMA node
         let p = Platform::paper();
         let cfg = RtmConfig::small(Medium::Vti);
-        let (_, util) = simulate_step(&cfg, Engine::MMStencil, &p);
+        let (_, util) = simulate_step(&cfg, SimEngine::MMStencil, &p);
         assert!((0.3..0.7).contains(&util), "VTI util {util}");
+    }
+
+    #[test]
+    fn shots_through_every_engine_image_the_same_reflectors() {
+        // the config engine switch runs the whole shot through each
+        // engine; images must agree closely (engines differ only in fp
+        // accumulation order)
+        let p = Platform::paper();
+        let mut energies = Vec::new();
+        for kind in EngineKind::ALL {
+            let mut cfg = RtmConfig::small(Medium::Vti);
+            cfg.nz = 24;
+            cfg.nx = 24;
+            cfg.ny = 24;
+            cfg.steps = 30;
+            cfg.threads = 2;
+            cfg.engine = kind;
+            let (image, rep) = run_shot(&cfg, &p);
+            assert!(rep.image_energy > 0.0, "{kind:?}: empty image");
+            assert!(image.correlations > 0);
+            energies.push(rep.image_energy);
+        }
+        for e in &energies[1..] {
+            assert!(
+                (e / energies[0] - 1.0).abs() < 1e-2,
+                "image energies diverge across engines: {energies:?}"
+            );
+        }
     }
 }

@@ -11,12 +11,16 @@ use crate::grid::Grid3;
 
 /// Accumulating RTM image.
 pub struct Image {
+    /// Zero-lag cross-correlation sum Σ_t S·R.
     pub img: Grid3,
+    /// Source illumination Σ_t S².
     pub illum: Grid3,
+    /// Time levels accumulated so far.
     pub correlations: usize,
 }
 
 impl Image {
+    /// An empty image of the given shape.
     pub fn zeros(nz: usize, nx: usize, ny: usize) -> Self {
         Self {
             img: Grid3::zeros(nz, nx, ny),

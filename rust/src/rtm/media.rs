@@ -9,10 +9,15 @@ use crate::grid::Grid3;
 
 /// VTI medium: Vp²·dt², ε, δ per cell (axes (Z, X, Y), z = depth).
 pub struct VtiMedia {
+    /// (Vp·dt/dx)² per cell — the update scale of the leapfrog step.
     pub vp2dt2: Grid3,
+    /// Thomsen ε per cell.
     pub eps: Grid3,
+    /// Thomsen δ per cell.
     pub delta: Grid3,
+    /// Timestep (s), CFL-safe for the radius-4 band.
     pub dt: f64,
+    /// Grid spacing (m).
     pub dx: f64,
 }
 
@@ -23,7 +28,9 @@ pub struct Layer {
     pub top: f64,
     /// P velocity (m/s)
     pub vp: f64,
+    /// Thomsen ε of the layer.
     pub eps: f64,
+    /// Thomsen δ of the layer (kept ≤ ε for stability).
     pub delta: f64,
 }
 
@@ -76,14 +83,23 @@ pub fn layered_vti(nz: usize, nx: usize, ny: usize, dx: f64, layers: &[Layer]) -
 /// TTI medium: squared velocities (scaled by dt²/dx²), shear term,
 /// anellipticity α, and tilt/azimuth angle fields.
 pub struct TtiMedia {
+    /// Horizontal P velocity squared, × dt²/dx².
     pub vpx2: Grid3,
+    /// Vertical P velocity squared, × dt²/dx².
     pub vpz2: Grid3,
+    /// NMO velocity squared, × dt²/dx².
     pub vpn2: Grid3,
+    /// Vertical S velocity squared, × dt²/dx².
     pub vsz2: Grid3,
+    /// Anellipticity coupling factor per cell.
     pub alpha: Grid3,
+    /// Symmetry-axis tilt θ (radians) per cell.
     pub theta: Grid3,
+    /// Symmetry-axis azimuth φ (radians) per cell.
     pub phi: Grid3,
+    /// Timestep (s), CFL-safe with the TTI margin.
     pub dt: f64,
+    /// Grid spacing (m).
     pub dx: f64,
 }
 

@@ -10,6 +10,17 @@
 //! * [`image`]    — zero-lag cross-correlation imaging condition;
 //! * [`driver`]   — shot loop: forward + backward propagation, imaging,
 //!   metrics, and PJRT artifact cross-checks.
+//!
+//! Ownership/engine contract (DESIGN.md §10): the propagators own their
+//! wavefield grids and whole-grid scratch (`VtiScratch`/`TtiScratch`);
+//! every derivative sweep is dispatched through the engine layer
+//! ([`stencil::engine`](crate::stencil::engine)) as fixed z-slab
+//! [`TileViewMut`](crate::grid::par::TileViewMut) claims fanned over
+//! the persistent worker runtime, and the pointwise stages run through
+//! the pool's `ParSlice` chunk claims — the propagators never share
+//! mutable grid state between tasks by any other means.  The scalar
+//! loops the propagators started with live on as the naive engine's
+//! axis oracle (`stencil::naive::d_axis_region`).
 
 pub mod boundary;
 pub mod driver;
@@ -19,3 +30,39 @@ pub mod pjrt_prop;
 pub mod tti;
 pub mod vti;
 pub mod wavelet;
+
+/// Shared RTM test fixtures: the media/grid builders and the worker
+/// counts every RTM test sweeps, hoisted here so `vti`, `tti`, and the
+/// driver tests stop duplicating helpers and hardcoding per-test thread
+/// counts.
+#[cfg(test)]
+pub(crate) mod fixtures {
+    use super::media::{self, TtiMedia, VtiMedia};
+    use crate::grid::Grid3;
+
+    /// Worker counts the RTM suites sweep — widen here, not per test.
+    /// Index 0 is the serial reference leg.
+    pub const WORKER_COUNTS: [usize; 2] = [1, 4];
+
+    /// The parallel leg of two-leg tests.
+    pub const PAR_WORKERS: usize = WORKER_COUNTS[1];
+
+    /// Default layered VTI medium at 10 m spacing.
+    pub fn vti_media(nz: usize, nx: usize, ny: usize) -> VtiMedia {
+        media::layered_vti(nz, nx, ny, 10.0, &media::default_layers())
+    }
+
+    /// Default layered TTI medium at 10 m spacing.
+    pub fn tti_media(nz: usize, nx: usize, ny: usize) -> TtiMedia {
+        media::layered_tti(nz, nx, ny, 10.0, &media::default_layers())
+    }
+
+    /// f = cos(2πz/n): an eigenfunction of the periodic ∂zz band with
+    /// eigenvalue ≈ −(2π/n)² (the helper `vti` tests used to duplicate
+    /// under the misleading name `quadratic_grid`).
+    pub fn cosine_grid(n: usize) -> Grid3 {
+        Grid3::from_fn(n, n, n, |z, _, _| {
+            (2.0 * std::f32::consts::PI * z as f32 / n as f32).cos()
+        })
+    }
+}

@@ -46,6 +46,7 @@ impl<'rt> PjrtVtiStepper<'rt> {
         Ok(Self { rt, artifact: artifact.to_string(), shape, media })
     }
 
+    /// Grid shape the bound artifact was lowered for.
     pub fn grid_shape(&self) -> (usize, usize, usize) {
         (self.shape[0], self.shape[1], self.shape[2])
     }
@@ -164,6 +165,8 @@ pub struct PjrtTtiStepper<'rt> {
 }
 
 impl<'rt> PjrtTtiStepper<'rt> {
+    /// Bind to `artifact` (e.g. `"rtm_tti_r4_grid32"`); the seven media
+    /// and angle grids are uploaded once and reused every step.
     pub fn new(rt: &'rt Runtime, artifact: &str, m: &super::media::TtiMedia) -> Result<Self> {
         let meta = rt
             .manifest

@@ -4,21 +4,31 @@
 //! need all six second derivatives; the mixed ones (∂xy, ∂yz, ∂xz) are
 //! composed from two first-derivative 1D passes — the paper's §IV-G
 //! commutative-composition scheme.  Periodic boundaries, axes (Z, X, Y).
+//!
+//! All eight axis passes per field dispatch through the engine layer
+//! ([`stencil::engine`](crate::stencil::engine)): [`step_with`] /
+//! [`Derivs::compute_with`] take any [`Engine`] and fan fixed z-slab
+//! claims over the persistent worker runtime, like the VTI propagator.
 
 use super::media::TtiMedia;
-use super::vti::{d1_axis_into, d2_axis_into};
 use crate::coordinator::pool;
 use crate::grid::Grid3;
+use crate::stencil::Engine;
 
 /// Leapfrog time levels of the TTI field pair (p, q).
 pub struct TtiState {
+    /// Quasi-P field, current time level.
     pub p: Grid3,
+    /// Auxiliary (quasi-SV) field, current time level.
     pub q: Grid3,
+    /// `p` one step back (overwritten with the next level each step).
     pub p_prev: Grid3,
+    /// `q` one step back (overwritten with the next level each step).
     pub q_prev: Grid3,
 }
 
 impl TtiState {
+    /// All-zero wavefields of the given shape.
     pub fn zeros(nz: usize, nx: usize, ny: usize) -> Self {
         Self {
             p: Grid3::zeros(nz, nx, ny),
@@ -28,12 +38,14 @@ impl TtiState {
         }
     }
 
+    /// Add a point source sample to both fields.
     pub fn inject(&mut self, z: usize, x: usize, y: usize, amp: f32) {
         let i = self.p.idx(z, x, y);
         self.p.data[i] += amp;
         self.q.data[i] += amp;
     }
 
+    /// Total wavefield energy (sum of squares of both fields).
     pub fn energy(&self) -> f64 {
         self.p.energy() + self.q.energy()
     }
@@ -42,15 +54,22 @@ impl TtiState {
 /// Precomputed per-cell trig weights of the H1 operator — computing
 /// sin/cos per cell per step would dominate the pointwise stage.
 pub struct TtiTrig {
+    /// sin²θ·cos²φ (∂xx weight).
     pub st2cp2: Vec<f32>,
+    /// sin²θ·sin²φ (∂yy weight).
     pub st2sp2: Vec<f32>,
+    /// cos²θ (∂zz weight).
     pub ct2: Vec<f32>,
+    /// sin²θ·sin 2φ (∂xy weight).
     pub st2s2p: Vec<f32>,
+    /// sin 2θ·sin φ (∂yz weight).
     pub s2t_sp: Vec<f32>,
+    /// sin 2θ·cos φ (∂xz weight).
     pub s2t_cp: Vec<f32>,
 }
 
 impl TtiTrig {
+    /// Precompute the weights from the medium's tilt/azimuth fields.
     pub fn new(m: &TtiMedia) -> Self {
         let n = m.theta.len();
         let mut t = Self {
@@ -81,17 +100,24 @@ impl TtiTrig {
 
 /// The six second derivatives of one field, reused as scratch per step.
 pub struct Derivs {
+    /// ∂xx of the field.
     pub dxx: Grid3,
+    /// ∂yy of the field.
     pub dyy: Grid3,
+    /// ∂zz of the field.
     pub dzz: Grid3,
+    /// Mixed ∂xy (two first-derivative passes).
     pub dxy: Grid3,
+    /// Mixed ∂yz (two first-derivative passes).
     pub dyz: Grid3,
+    /// Mixed ∂xz (two first-derivative passes).
     pub dxz: Grid3,
     d1: Grid3,
     d1b: Grid3,
 }
 
 impl Derivs {
+    /// Derivative workspaces sized for `(nz, nx, ny)` fields.
     pub fn new(nz: usize, nx: usize, ny: usize) -> Self {
         let mk = || Grid3::zeros(nz, nx, ny);
         Self {
@@ -106,19 +132,27 @@ impl Derivs {
         }
     }
 
-    /// Fill all six derivative grids of `f` (mirror of
-    /// `ref.py::tti_h1`'s derivative set).
+    /// Fill all six derivative grids of `f` through the default simd
+    /// engine — compatibility wrapper over [`compute_with`](Self::compute_with).
     pub fn compute(&mut self, f: &Grid3, w2: &[f32], w1: &[f32], threads: usize) {
-        d2_axis_into(f, w2, 1, &mut self.dxx, threads);
-        d2_axis_into(f, w2, 2, &mut self.dyy, threads);
-        d2_axis_into(f, w2, 0, &mut self.dzz, threads);
+        self.compute_with(f, w2, w1, &Engine::default_simd(threads));
+    }
+
+    /// Fill all six derivative grids of `f` (mirror of
+    /// `ref.py::tti_h1`'s derivative set) through an explicit engine:
+    /// eight 1-D axis passes (three second-derivative, five
+    /// first-derivative) dispatched over the persistent runtime.
+    pub fn compute_with(&mut self, f: &Grid3, w2: &[f32], w1: &[f32], eng: &Engine) {
+        eng.d2_axis_into(f, w2, 1, &mut self.dxx);
+        eng.d2_axis_into(f, w2, 2, &mut self.dyy);
+        eng.d2_axis_into(f, w2, 0, &mut self.dzz);
         // ∂z then ∂x / ∂y of it
-        d1_axis_into(f, w1, 0, &mut self.d1, threads);
-        d1_axis_into(&self.d1, w1, 1, &mut self.dxz, threads);
-        d1_axis_into(&self.d1, w1, 2, &mut self.dyz, threads);
+        eng.d1_axis_into(f, w1, 0, &mut self.d1);
+        eng.d1_axis_into(&self.d1, w1, 1, &mut self.dxz);
+        eng.d1_axis_into(&self.d1, w1, 2, &mut self.dyz);
         // ∂x then ∂y of it
-        d1_axis_into(f, w1, 1, &mut self.d1b, threads);
-        d1_axis_into(&self.d1b, w1, 2, &mut self.dxy, threads);
+        eng.d1_axis_into(f, w1, 1, &mut self.d1b);
+        eng.d1_axis_into(&self.d1b, w1, 2, &mut self.dxy);
     }
 
     /// h1 = Σ trig-weighted derivatives; h2 = laplacian − h1; written
@@ -152,6 +186,7 @@ pub struct TtiScratch {
 }
 
 impl TtiScratch {
+    /// Scratch sized for `(nz, nx, ny)` wavefields.
     pub fn new(nz: usize, nx: usize, ny: usize) -> Self {
         let n = nz * nx * ny;
         Self {
@@ -164,8 +199,9 @@ impl TtiScratch {
     }
 }
 
-/// One TTI leapfrog step (velocity-squared fields in `m` already carry
-/// the dt²/dx² factor, matching `media::layered_tti`).
+/// One TTI leapfrog step through the default simd engine (velocity-
+/// squared fields in `m` already carry the dt²/dx² factor, matching
+/// `media::layered_tti`).  Compatibility wrapper over [`step_with`].
 pub fn step(
     state: &mut TtiState,
     m: &TtiMedia,
@@ -175,11 +211,28 @@ pub fn step(
     threads: usize,
     s: &mut TtiScratch,
 ) {
+    step_with(state, m, trig, w2, w1, &Engine::default_simd(threads), s);
+}
+
+/// One TTI leapfrog step through an explicit [`Engine`]: 16 axis
+/// passes (eight per field) fan over the persistent runtime, then the
+/// H1/H2 and leapfrog pointwise stages run through the pool chunk
+/// helpers.  Bitwise-stable for any `eng.threads`.
+pub fn step_with(
+    state: &mut TtiState,
+    m: &TtiMedia,
+    trig: &TtiTrig,
+    w2: &[f32],
+    w1: &[f32],
+    eng: &Engine,
+    s: &mut TtiScratch,
+) {
     // decaying wavefields hit the x86 denormal cliff without FTZ
     crate::util::enable_flush_to_zero();
-    s.dv.compute(&state.p, w2, w1, threads);
+    let threads = eng.threads;
+    s.dv.compute_with(&state.p, w2, w1, eng);
     s.dv.h1h2(trig, &mut s.h1p, &mut s.h2p, threads);
-    s.dv.compute(&state.q, w2, w1, threads);
+    s.dv.compute_with(&state.q, w2, w1, eng);
     s.dv.h1h2(trig, &mut s.h1q, &mut s.h2q, threads);
 
     let (h1p, h2p, h1q, h2q) = (&s.h1p, &s.h2p, &s.h1q, &s.h2q);
@@ -215,8 +268,9 @@ pub fn step(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::rtm::media;
+    use crate::rtm::fixtures::{self, PAR_WORKERS, WORKER_COUNTS};
     use crate::stencil::coeffs::{first_deriv, second_deriv};
+    use crate::stencil::EngineKind;
     use crate::util::prop::assert_allclose;
 
     #[test]
@@ -224,8 +278,9 @@ mod tests {
         // ∂x∂z f == ∂z∂x f when composed from the same bands
         let g = Grid3::random(8, 8, 8, 3);
         let w1 = first_deriv(4);
-        let a = super::super::vti::d1_axis(&super::super::vti::d1_axis(&g, &w1, 0, 2), &w1, 1, 2);
-        let b = super::super::vti::d1_axis(&super::super::vti::d1_axis(&g, &w1, 1, 2), &w1, 0, 2);
+        let t = PAR_WORKERS;
+        let a = super::super::vti::d1_axis(&super::super::vti::d1_axis(&g, &w1, 0, t), &w1, 1, t);
+        let b = super::super::vti::d1_axis(&super::super::vti::d1_axis(&g, &w1, 1, t), &w1, 0, t);
         assert_allclose(&a.data, &b.data, 1e-4, 1e-5);
     }
 
@@ -233,7 +288,7 @@ mod tests {
     fn zero_tilt_h1_is_dzz() {
         // θ = 0 → H1 = ∂zz, H2 = ∂xx + ∂yy
         let (nz, nx, ny) = (8, 8, 8);
-        let mut m = media::layered_tti(nz, nx, ny, 10.0, &media::default_layers());
+        let mut m = fixtures::tti_media(nz, nx, ny);
         m.theta = Grid3::zeros(nz, nx, ny);
         m.phi = Grid3::zeros(nz, nx, ny);
         let trig = TtiTrig::new(&m);
@@ -241,13 +296,14 @@ mod tests {
         let w2 = second_deriv(4);
         let w1 = first_deriv(4);
         let mut dv = Derivs::new(nz, nx, ny);
-        dv.compute(&g, &w2, &w1, 2);
+        let t = PAR_WORKERS;
+        dv.compute(&g, &w2, &w1, t);
         let n = nz * nx * ny;
         let (mut h1, mut h2) = (vec![0.0; n], vec![0.0; n]);
-        dv.h1h2(&trig, &mut h1, &mut h2, 2);
-        let dzz = super::super::vti::d2_axis(&g, &w2, 0, 2);
-        let dxx = super::super::vti::d2_axis(&g, &w2, 1, 2);
-        let dyy = super::super::vti::d2_axis(&g, &w2, 2, 2);
+        dv.h1h2(&trig, &mut h1, &mut h2, t);
+        let dzz = super::super::vti::d2_axis(&g, &w2, 0, t);
+        let dxx = super::super::vti::d2_axis(&g, &w2, 1, t);
+        let dyy = super::super::vti::d2_axis(&g, &w2, 2, t);
         assert_allclose(&h1, &dzz.data, 1e-4, 1e-5);
         let want: Vec<f32> = dxx.data.iter().zip(&dyy.data).map(|(a, b)| a + b).collect();
         assert_allclose(&h2, &want, 1e-4, 1e-5);
@@ -256,16 +312,17 @@ mod tests {
     #[test]
     fn h1_plus_h2_is_laplacian_any_tilt() {
         let (nz, nx, ny) = (6, 10, 7);
-        let m = media::layered_tti(nz, nx, ny, 10.0, &media::default_layers());
+        let m = fixtures::tti_media(nz, nx, ny);
         let trig = TtiTrig::new(&m);
         let g = Grid3::random(nz, nx, ny, 9);
         let w2 = second_deriv(3);
         let w1 = first_deriv(3);
         let mut dv = Derivs::new(nz, nx, ny);
-        dv.compute(&g, &w2, &w1, 3);
+        let t = PAR_WORKERS;
+        dv.compute(&g, &w2, &w1, t);
         let n = nz * nx * ny;
         let (mut h1, mut h2) = (vec![0.0; n], vec![0.0; n]);
-        dv.h1h2(&trig, &mut h1, &mut h2, 3);
+        dv.h1h2(&trig, &mut h1, &mut h2, t);
         let lap: Vec<f32> = dv
             .dxx
             .data
@@ -281,7 +338,7 @@ mod tests {
     #[test]
     fn impulse_stays_bounded() {
         let (nz, nx, ny) = (20, 20, 20);
-        let m = media::layered_tti(nz, nx, ny, 10.0, &media::default_layers());
+        let m = fixtures::tti_media(nz, nx, ny);
         let trig = TtiTrig::new(&m);
         let mut st = TtiState::zeros(nz, nx, ny);
         let mut sc = TtiScratch::new(nz, nx, ny);
@@ -289,7 +346,7 @@ mod tests {
         let w2 = second_deriv(4);
         let w1 = first_deriv(4);
         for _ in 0..120 {
-            step(&mut st, &m, &trig, &w2, &w1, 4, &mut sc);
+            step(&mut st, &m, &trig, &w2, &w1, PAR_WORKERS, &mut sc);
         }
         let e = st.energy();
         assert!(e.is_finite() && e < 1e6, "unstable: energy {e}");
@@ -298,7 +355,7 @@ mod tests {
     #[test]
     fn threads_do_not_change_step() {
         let (nz, nx, ny) = (10, 10, 10);
-        let m = media::layered_tti(nz, nx, ny, 10.0, &media::default_layers());
+        let m = fixtures::tti_media(nz, nx, ny);
         let trig = TtiTrig::new(&m);
         let w2 = second_deriv(2);
         let w1 = first_deriv(2);
@@ -311,8 +368,36 @@ mod tests {
             }
             st.p
         };
-        let a = run(1);
-        let b = run(6);
-        assert_eq!(a.data, b.data);
+        let a = run(WORKER_COUNTS[0]);
+        for &workers in &WORKER_COUNTS[1..] {
+            let b = run(workers);
+            assert_eq!(a.data, b.data, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn every_engine_tti_step_matches_the_naive_oracle() {
+        let (nz, nx, ny) = (12, 14, 16);
+        let m = fixtures::tti_media(nz, nx, ny);
+        let trig = TtiTrig::new(&m);
+        let w2 = second_deriv(4);
+        let w1 = first_deriv(4);
+        let run = |eng: &Engine| {
+            let mut st = TtiState::zeros(nz, nx, ny);
+            let mut sc = TtiScratch::new(nz, nx, ny);
+            st.inject(6, 7, 8, 1.0);
+            for _ in 0..4 {
+                step_with(&mut st, &m, &trig, &w2, &w1, eng, &mut sc);
+            }
+            st
+        };
+        let oracle = run(&Engine::new(EngineKind::Naive));
+        for kind in [EngineKind::Simd, EngineKind::MatrixUnit] {
+            for &workers in &WORKER_COUNTS {
+                let got = run(&Engine::new(kind).with_threads(workers));
+                assert_allclose(&got.p.data, &oracle.p.data, 1e-4, 1e-6);
+                assert_allclose(&got.q.data, &oracle.q.data, 1e-4, 1e-6);
+            }
+        }
     }
 }

@@ -11,25 +11,34 @@
 //!
 //! The derivative passes are decomposed into 1D axis stencils — exactly
 //! the §IV-G scheme the block artifacts (`rtm_vti_block.hlo.txt`)
-//! implement — and parallelized over z-slabs with the coordinator pool.
-//! Each slab task claims its output plane as an exclusive
-//! `TileViewMut`, and the pointwise stages run through the pool's
-//! `ParSlice`-backed chunk helpers — no raw-pointer sharing.
+//! implement — and dispatched through the engine layer
+//! ([`stencil::engine`](crate::stencil::engine), DESIGN.md §10):
+//! [`step_with`] fans each pass as fixed z-slab claims over the
+//! persistent worker runtime through any [`Engine`] (simd, matrix-unit,
+//! or the naive scalar oracle the engines are checked against), and the
+//! pointwise leapfrog stages run through the pool's `ParSlice`-backed
+//! chunk helpers — no raw-pointer sharing, O(1) allocations per step
+//! after warm-up (`rust/tests/alloc_free.rs`).
 
 use super::media::VtiMedia;
 use crate::coordinator::pool;
-use crate::grid::par::ParGrid3;
 use crate::grid::Grid3;
+use crate::stencil::Engine;
 
 /// The two leapfrog time levels of both stress components.
 pub struct VtiState {
+    /// Horizontal stress σH, current time level.
     pub sh: Grid3,
+    /// Vertical stress σV, current time level.
     pub sv: Grid3,
+    /// σH one step back (overwritten with the next level each step).
     pub sh_prev: Grid3,
+    /// σV one step back (overwritten with the next level each step).
     pub sv_prev: Grid3,
 }
 
 impl VtiState {
+    /// All-zero wavefields of the given shape.
     pub fn zeros(nz: usize, nx: usize, ny: usize) -> Self {
         Self {
             sh: Grid3::zeros(nz, nx, ny),
@@ -46,13 +55,15 @@ impl VtiState {
         self.sv.data[i] += amp;
     }
 
+    /// Total wavefield energy (sum of squares of both components).
     pub fn energy(&self) -> f64 {
         self.sh.energy() + self.sv.energy()
     }
 }
 
 /// Second derivative along `axis` (0 = z, 1 = x, 2 = y) with periodic
-/// wrap — mirror of `ref.py::d2_axis`.  Parallel over z-slabs.
+/// wrap — mirror of `ref.py::d2_axis`, routed through the simd engine's
+/// axis kernel (z-slabs fanned over the persistent runtime).
 pub fn d2_axis(g: &Grid3, w2: &[f32], axis: usize, threads: usize) -> Grid3 {
     let mut out = Grid3::zeros(g.nz, g.nx, g.ny);
     d2_axis_into(g, w2, axis, &mut out, threads);
@@ -61,108 +72,11 @@ pub fn d2_axis(g: &Grid3, w2: &[f32], axis: usize, threads: usize) -> Grid3 {
 
 /// In-place variant of [`d2_axis`]: `out` is fully overwritten.
 pub fn d2_axis_into(g: &Grid3, w2: &[f32], axis: usize, out: &mut Grid3, threads: usize) {
-    assert_eq!(g.shape(), out.shape());
-    let r = (w2.len() - 1) / 2;
-    let (nz, nx, ny) = g.shape();
-    let plane = nx * ny;
-    let pg = ParGrid3::new(out);
-    let pg = &pg;
-    match axis {
-        0 => {
-            // z: per output slab, accumulate whole shifted planes
-            pool::parallel_for(threads, nz, |z| {
-                let mut view = pg.view(z, z + 1, 0, nx, 0, ny);
-                let dst = view.as_mut_slice();
-                dst.copy_from_slice(&g.data[z * plane..(z + 1) * plane]);
-                for v in dst.iter_mut() {
-                    *v *= w2[r];
-                }
-                for k in 1..=r {
-                    let zp = (z + k) % nz;
-                    let zm = (z + nz - k) % nz;
-                    let a = &g.data[zp * plane..(zp + 1) * plane];
-                    let b = &g.data[zm * plane..(zm + 1) * plane];
-                    let w = w2[r + k];
-                    for ((d, &p), &m) in dst.iter_mut().zip(a).zip(b) {
-                        *d += w * (p + m);
-                    }
-                }
-            });
-        }
-        1 => {
-            // x: per z-slab, accumulate shifted y-rows
-            pool::parallel_for(threads, nz, |z| {
-                let base = z * plane;
-                let mut view = pg.view(z, z + 1, 0, nx, 0, ny);
-                let dst = view.as_mut_slice();
-                for x in 0..nx {
-                    let row = &mut dst[x * ny..(x + 1) * ny];
-                    let src = &g.data[base + x * ny..base + (x + 1) * ny];
-                    for (d, &s) in row.iter_mut().zip(src) {
-                        *d = w2[r] * s;
-                    }
-                    for k in 1..=r {
-                        let xp = (x + k) % nx;
-                        let xm = (x + nx - k) % nx;
-                        let a = &g.data[base + xp * ny..base + xp * ny + ny];
-                        let b = &g.data[base + xm * ny..base + xm * ny + ny];
-                        let w = w2[r + k];
-                        for ((d, &p), &m) in row.iter_mut().zip(a).zip(b) {
-                            *d += w * (p + m);
-                        }
-                    }
-                }
-            });
-        }
-        2 => {
-            // y: contiguous rows; vectorizable shifted-slice interior,
-            // wrapped scalar edges
-            pool::parallel_for(threads, nz, |z| {
-                let base = z * plane;
-                let mut view = pg.view(z, z + 1, 0, nx, 0, ny);
-                let dst = view.as_mut_slice();
-                for x in 0..nx {
-                    let row = &mut dst[x * ny..(x + 1) * ny];
-                    let src = &g.data[base + x * ny..base + (x + 1) * ny];
-                    if ny >= 2 * r + 1 {
-                        // interior: row[y] = Σ w2[k+r]·src[y+k], y ∈ [r, ny-r)
-                        let inner = ny - 2 * r;
-                        for (d, &s) in row[r..r + inner].iter_mut().zip(&src[r..r + inner]) {
-                            *d = w2[r] * s;
-                        }
-                        for k in 1..=r {
-                            let w = w2[r + k];
-                            let (p, m) = (&src[r + k..r + k + inner], &src[r - k..r - k + inner]);
-                            for ((d, &a), &b) in row[r..r + inner].iter_mut().zip(p).zip(m) {
-                                *d += w * (a + b);
-                            }
-                        }
-                        // wrapped edges
-                        for y in (0..r).chain(ny - r..ny) {
-                            let mut acc = w2[r] * src[y];
-                            for k in 1..=r {
-                                acc += w2[r + k] * (src[(y + k) % ny] + src[(y + ny - k) % ny]);
-                            }
-                            row[y] = acc;
-                        }
-                    } else {
-                        for y in 0..ny {
-                            let mut acc = w2[r] * src[y];
-                            for k in 1..=r {
-                                acc += w2[r + k] * (src[(y + k) % ny] + src[(y + ny - k) % ny]);
-                            }
-                            row[y] = acc;
-                        }
-                    }
-                }
-            });
-        }
-        _ => panic!("axis must be 0, 1, or 2"),
-    }
+    Engine::default_simd(threads).d2_axis_into(g, w2, axis, out);
 }
 
 /// First derivative along `axis` with periodic wrap (antisymmetric
-/// band) — mirror of `ref.py::d1_axis`.
+/// band) — mirror of `ref.py::d1_axis`, engine-routed like [`d2_axis`].
 pub fn d1_axis(g: &Grid3, w1: &[f32], axis: usize, threads: usize) -> Grid3 {
     let mut out = Grid3::zeros(g.nz, g.nx, g.ny);
     d1_axis_into(g, w1, axis, &mut out, threads);
@@ -171,90 +85,7 @@ pub fn d1_axis(g: &Grid3, w1: &[f32], axis: usize, threads: usize) -> Grid3 {
 
 /// In-place variant of [`d1_axis`]: `out` is fully overwritten.
 pub fn d1_axis_into(g: &Grid3, w1: &[f32], axis: usize, out: &mut Grid3, threads: usize) {
-    assert_eq!(g.shape(), out.shape());
-    let r = (w1.len() - 1) / 2;
-    let (nz, nx, ny) = g.shape();
-    let plane = nx * ny;
-    let pg = ParGrid3::new(out);
-    let pg = &pg;
-    match axis {
-        0 => {
-            pool::parallel_for(threads, nz, |z| {
-                let mut view = pg.view(z, z + 1, 0, nx, 0, ny);
-                let dst = view.as_mut_slice();
-                dst.fill(0.0);
-                for k in 1..=r {
-                    let zp = (z + k) % nz;
-                    let zm = (z + nz - k) % nz;
-                    let a = &g.data[zp * plane..(zp + 1) * plane];
-                    let b = &g.data[zm * plane..(zm + 1) * plane];
-                    let w = w1[r + k];
-                    for ((d, &p), &m) in dst.iter_mut().zip(a).zip(b) {
-                        *d += w * (p - m);
-                    }
-                }
-            });
-        }
-        1 => {
-            pool::parallel_for(threads, nz, |z| {
-                let base = z * plane;
-                let mut view = pg.view(z, z + 1, 0, nx, 0, ny);
-                let dst = view.as_mut_slice();
-                for x in 0..nx {
-                    let row = &mut dst[x * ny..(x + 1) * ny];
-                    row.fill(0.0);
-                    for k in 1..=r {
-                        let xp = (x + k) % nx;
-                        let xm = (x + nx - k) % nx;
-                        let a = &g.data[base + xp * ny..base + xp * ny + ny];
-                        let b = &g.data[base + xm * ny..base + xm * ny + ny];
-                        let w = w1[r + k];
-                        for ((d, &p), &m) in row.iter_mut().zip(a).zip(b) {
-                            *d += w * (p - m);
-                        }
-                    }
-                }
-            });
-        }
-        2 => {
-            pool::parallel_for(threads, nz, |z| {
-                let base = z * plane;
-                let mut view = pg.view(z, z + 1, 0, nx, 0, ny);
-                let dst = view.as_mut_slice();
-                for x in 0..nx {
-                    let row = &mut dst[x * ny..(x + 1) * ny];
-                    let src = &g.data[base + x * ny..base + (x + 1) * ny];
-                    if ny >= 2 * r + 1 {
-                        let inner = ny - 2 * r;
-                        row[r..r + inner].fill(0.0);
-                        for k in 1..=r {
-                            let w = w1[r + k];
-                            let (p, m) = (&src[r + k..r + k + inner], &src[r - k..r - k + inner]);
-                            for ((d, &a), &b) in row[r..r + inner].iter_mut().zip(p).zip(m) {
-                                *d += w * (a - b);
-                            }
-                        }
-                        for y in (0..r).chain(ny - r..ny) {
-                            let mut acc = 0.0f32;
-                            for k in 1..=r {
-                                acc += w1[r + k] * (src[(y + k) % ny] - src[(y + ny - k) % ny]);
-                            }
-                            row[y] = acc;
-                        }
-                    } else {
-                        for y in 0..ny {
-                            let mut acc = 0.0f32;
-                            for k in 1..=r {
-                                acc += w1[r + k] * (src[(y + k) % ny] - src[(y + ny - k) % ny]);
-                            }
-                            row[y] = acc;
-                        }
-                    }
-                }
-            });
-        }
-        _ => panic!("axis must be 0, 1, or 2"),
-    }
+    Engine::default_simd(threads).d1_axis_into(g, w1, axis, out);
 }
 
 /// Scratch buffers reused across steps (avoids per-step allocation of
@@ -266,6 +97,7 @@ pub struct VtiScratch {
 }
 
 impl VtiScratch {
+    /// Scratch sized for `(nz, nx, ny)` wavefields.
     pub fn new(nz: usize, nx: usize, ny: usize) -> Self {
         Self {
             lap: Grid3::zeros(nz, nx, ny),
@@ -275,17 +107,29 @@ impl VtiScratch {
     }
 }
 
-/// One leapfrog step; rotates `state` in place.
+/// One leapfrog step through the default simd engine; rotates `state`
+/// in place.  Compatibility wrapper over [`step_with`].
 pub fn step(state: &mut VtiState, m: &VtiMedia, w2: &[f32], threads: usize, s: &mut VtiScratch) {
+    step_with(state, m, w2, &Engine::default_simd(threads), s);
+}
+
+/// One leapfrog step through an explicit [`Engine`]; rotates `state` in
+/// place.  The three derivative passes fan fixed z-slab claims over the
+/// persistent runtime via the engine's axis kernels (bitwise-stable for
+/// any `eng.threads`); the pointwise coupling/leapfrog stages run
+/// through the pool chunk helpers.  Allocation-free after warm-up up to
+/// a per-step constant (`rust/tests/alloc_free.rs`).
+pub fn step_with(state: &mut VtiState, m: &VtiMedia, w2: &[f32], eng: &Engine, s: &mut VtiScratch) {
     // decaying wavefields hit the x86 denormal cliff without FTZ
     crate::util::enable_flush_to_zero();
     let (nz, nx, ny) = state.sh.shape();
     assert_eq!(m.vp2dt2.shape(), (nz, nx, ny));
+    let threads = eng.threads;
 
     // xy-laplacian of σH and ∂zz of σV, each as 1D axis passes
-    d2_axis_into(&state.sh, w2, 1, &mut s.lap, threads);
-    d2_axis_into(&state.sh, w2, 2, &mut s.tmp, threads);
-    d2_axis_into(&state.sv, w2, 0, &mut s.dzz, threads);
+    eng.d2_axis_into(&state.sh, w2, 1, &mut s.lap);
+    eng.d2_axis_into(&state.sh, w2, 2, &mut s.tmp);
+    eng.d2_axis_into(&state.sv, w2, 0, &mut s.dzz);
     {
         let lap = &mut s.lap.data;
         let tmp = &s.tmp.data;
@@ -333,16 +177,10 @@ pub fn step(state: &mut VtiState, m: &VtiMedia, w2: &[f32], threads: usize, s: &
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::rtm::media;
+    use crate::rtm::fixtures::{self, PAR_WORKERS, WORKER_COUNTS};
     use crate::stencil::coeffs::second_deriv;
+    use crate::stencil::EngineKind;
     use crate::util::prop::assert_allclose;
-
-    fn quadratic_grid(n: usize) -> Grid3 {
-        // f = cos(2πz/n): d2/dz2 with the exact band ≈ -(2π/n)² f
-        Grid3::from_fn(n, n, n, |z, _, _| {
-            (2.0 * std::f32::consts::PI * z as f32 / n as f32).cos()
-        })
-    }
 
     #[test]
     fn d2_axis_matches_direct_loop() {
@@ -350,7 +188,7 @@ mod tests {
         let w2 = second_deriv(3);
         let r = 3isize;
         for axis in 0..3 {
-            let got = d2_axis(&g, &w2, axis, 3);
+            let got = d2_axis(&g, &w2, axis, PAR_WORKERS);
             let want = Grid3::from_fn(6, 7, 9, |z, x, y| {
                 let mut acc = 0.0;
                 for k in -r..=r {
@@ -374,7 +212,7 @@ mod tests {
         let w1 = crate::stencil::coeffs::first_deriv(4);
         let r = 4isize;
         for axis in 0..3 {
-            let got = d1_axis(&g, &w1, axis, 2);
+            let got = d1_axis(&g, &w1, axis, PAR_WORKERS);
             let want = Grid3::from_fn(5, 8, 6, |z, x, y| {
                 let mut acc = 0.0;
                 for k in -r..=r {
@@ -395,9 +233,9 @@ mod tests {
     #[test]
     fn d2_of_cosine_has_right_eigenvalue() {
         let n = 32;
-        let g = quadratic_grid(n);
+        let g = fixtures::cosine_grid(n);
         let w2 = second_deriv(4);
-        let d = d2_axis(&g, &w2, 0, 4);
+        let d = d2_axis(&g, &w2, 0, PAR_WORKERS);
         let lam = -(2.0 * std::f32::consts::PI / n as f32).powi(2);
         for (got, f) in d.data.iter().zip(&g.data) {
             assert!((got - lam * f).abs() < 1e-4, "{got} vs {}", lam * f);
@@ -408,21 +246,23 @@ mod tests {
     fn thread_count_does_not_change_results() {
         let g = Grid3::random(8, 8, 8, 17);
         let w2 = second_deriv(2);
-        let a = d2_axis(&g, &w2, 1, 1);
-        let b = d2_axis(&g, &w2, 1, 7);
-        assert_eq!(a.data, b.data);
+        let a = d2_axis(&g, &w2, 1, WORKER_COUNTS[0]);
+        for &workers in &WORKER_COUNTS[1..] {
+            let b = d2_axis(&g, &w2, 1, workers);
+            assert_eq!(a.data, b.data, "workers={workers}");
+        }
     }
 
     #[test]
     fn impulse_stays_bounded_many_steps() {
         let (nz, nx, ny) = (24, 24, 24);
-        let m = media::layered_vti(nz, nx, ny, 10.0, &media::default_layers());
+        let m = fixtures::vti_media(nz, nx, ny);
         let mut st = VtiState::zeros(nz, nx, ny);
         let mut sc = VtiScratch::new(nz, nx, ny);
         st.inject(12, 12, 12, 1.0);
         let w2 = second_deriv(4);
         for _ in 0..200 {
-            step(&mut st, &m, &w2, 4, &mut sc);
+            step(&mut st, &m, &w2, PAR_WORKERS, &mut sc);
         }
         let e = st.energy();
         assert!(e.is_finite() && e < 1e6, "unstable: energy {e}");
@@ -431,17 +271,72 @@ mod tests {
     #[test]
     fn wave_spreads_from_source() {
         let (nz, nx, ny) = (32, 32, 32);
-        let m = media::layered_vti(nz, nx, ny, 10.0, &media::default_layers());
+        let m = fixtures::vti_media(nz, nx, ny);
         let mut st = VtiState::zeros(nz, nx, ny);
         let mut sc = VtiScratch::new(nz, nx, ny);
         let w2 = second_deriv(4);
         for i in 0..40 {
             st.inject(16, 16, 16, super::super::wavelet::ricker(i as f64 * m.dt, 15.0));
-            step(&mut st, &m, &w2, 4, &mut sc);
+            step(&mut st, &m, &w2, PAR_WORKERS, &mut sc);
         }
         // energy must have propagated away from the source cell
         let far = st.sh.get(16, 16, 26).abs() + st.sh.get(26, 16, 16).abs();
         assert!(far > 0.0, "no propagation");
         assert!(st.energy() > 0.0);
+    }
+
+    #[test]
+    fn every_engine_step_matches_the_naive_oracle() {
+        // the engine-equivalence contract of the RTM rework: a few VTI
+        // steps through each engine agree with the scalar oracle in
+        // energy and pointwise within 1e-4 relative tolerance
+        let (nz, nx, ny) = (18, 20, 22);
+        let m = fixtures::vti_media(nz, nx, ny);
+        let w2 = second_deriv(4);
+        let run = |eng: &Engine| {
+            let mut st = VtiState::zeros(nz, nx, ny);
+            let mut sc = VtiScratch::new(nz, nx, ny);
+            st.inject(9, 10, 11, 1.0);
+            for _ in 0..6 {
+                step_with(&mut st, &m, &w2, eng, &mut sc);
+            }
+            st
+        };
+        let oracle = run(&Engine::new(EngineKind::Naive));
+        for kind in [EngineKind::Simd, EngineKind::MatrixUnit] {
+            for &workers in &WORKER_COUNTS {
+                let got = run(&Engine::new(kind).with_threads(workers));
+                assert_allclose(&got.sh.data, &oracle.sh.data, 1e-4, 1e-6);
+                assert_allclose(&got.sv.data, &oracle.sv.data, 1e-4, 1e-6);
+                let (e, eo) = (got.energy(), oracle.energy());
+                assert!(
+                    (e / eo - 1.0).abs() < 1e-4,
+                    "{kind:?} workers={workers}: energy {e} vs oracle {eo}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matrix_unit_step_is_bitwise_stable_across_workers() {
+        let (nz, nx, ny) = (16, 18, 20);
+        let m = fixtures::vti_media(nz, nx, ny);
+        let w2 = second_deriv(4);
+        let run = |workers: usize| {
+            let mut st = VtiState::zeros(nz, nx, ny);
+            let mut sc = VtiScratch::new(nz, nx, ny);
+            st.inject(8, 9, 10, 1.0);
+            let eng = Engine::new(EngineKind::MatrixUnit).with_threads(workers);
+            for _ in 0..4 {
+                step_with(&mut st, &m, &w2, &eng, &mut sc);
+            }
+            st
+        };
+        let want = run(WORKER_COUNTS[0]);
+        for &workers in &WORKER_COUNTS[1..] {
+            let got = run(workers);
+            assert_eq!(got.sh.data, want.sh.data, "workers={workers}");
+            assert_eq!(got.sv.data, want.sv.data, "workers={workers}");
+        }
     }
 }

@@ -11,6 +11,11 @@
 //! the whole-grid RTM steps).  Feed validation — input counts and shapes
 //! against the manifest — is unchanged, so the cross-layer correctness
 //! contract in `rust/tests/runtime_artifacts.rs` still holds end to end.
+//!
+//! Ownership contract: the runtime owns the loaded manifest and copies
+//! tensors at the execute boundary (feeds in, results out) — it never
+//! aliases caller grids, so interpreted execution cannot race the
+//! native compute layers.
 
 pub mod manifest;
 

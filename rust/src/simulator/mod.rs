@@ -15,6 +15,11 @@
 //!   copies), calibrated to Table II;
 //! * [`mpi`]       — the lock-serialized MPI runtime cost model;
 //! * [`roofline`]  — the §IV-B performance model tying it together.
+//!
+//! Contract: the simulator is a *model*, not a runtime — it owns no
+//! grid data and shares no mutable state with the compute layers; it
+//! maps workload descriptions (spec, cells, engine, memory kind) to
+//! predicted times/utilizations, pure-functionally per call.
 
 pub mod cache;
 pub mod directory;

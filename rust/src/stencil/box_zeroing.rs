@@ -16,6 +16,7 @@ use crate::grid::Grid2;
 pub struct Decomposition {
     /// Per-sub-stencil y-axis weight rows (2r+1 rows of 2r+1 weights).
     pub rows: Vec<Vec<f32>>,
+    /// Radius of the decomposed box.
     pub radius: usize,
 }
 

@@ -1,0 +1,340 @@
+//! First-class engine dispatch: one place that names the compute
+//! engines, selects them at runtime (`by_name`, mirroring
+//! [`StencilSpec::by_name`]), and fans their kernels over the
+//! persistent worker runtime.
+//!
+//! Before this layer existed every call site hardcoded an engine
+//! (`simd::apply3_region` in the coordinator driver, one closure per
+//! engine in `examples/perf_probe.rs` and the benches, hand-rolled
+//! derivative loops in `rtm::{vti,tti}`).  Now a single [`Engine`]
+//! value carries the selection plus its tuning knobs, and the three
+//! call-site families — whole-grid sweeps, per-tile region tasks, and
+//! the RTM 1-D axis-derivative passes — all dispatch through it.
+//!
+//! Determinism contract: every parallel entry point partitions work
+//! into fixed-size z-slabs (granularity [`BlockDims::vz`], never the
+//! worker count), and each slab claims an exclusive
+//! [`TileViewMut`](crate::grid::par::TileViewMut) and runs the same
+//! per-region kernel the serial path runs.  Results are therefore
+//! **bitwise identical for any `threads` value** — the property the
+//! RTM engine-equivalence suite pins.
+//!
+//! ```
+//! use mmstencil::grid::Grid3;
+//! use mmstencil::stencil::{Engine, EngineKind, StencilSpec};
+//!
+//! let spec = StencilSpec::by_name("3DStarR2").unwrap();
+//! let g = Grid3::random(8, 12, 12, 7);
+//! let serial = Engine::new(EngineKind::MatrixUnit).apply3(&spec, &g);
+//! let par = Engine::by_name("matrix_unit").unwrap().with_threads(4).apply3(&spec, &g);
+//! assert_eq!(serial.data, par.data); // worker count never changes bits
+//! ```
+
+use super::matrix_unit::BlockDims;
+use super::{matrix_unit, naive, simd, StencilSpec};
+use crate::coordinator::runtime;
+use crate::grid::par::{GridSrc, ParGrid3, TileViewMut};
+use crate::grid::Grid3;
+
+/// The compute-engine families (see the [`super`] module docs for what
+/// each one models).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EngineKind {
+    /// Direct scalar loops — the semantic oracle every other engine is
+    /// checked against (the paper's "compiler baseline").
+    Naive,
+    /// Blocked, auto-vectorization-friendly sweeps (the paper's
+    /// hand-tuned SIMD-intrinsic baseline).
+    Simd,
+    /// The MMStencil matrix-unit algorithm: blockwise outer-product
+    /// accumulation with instruction accounting.
+    MatrixUnit,
+}
+
+impl EngineKind {
+    /// Every engine kind, in oracle-first order.
+    pub const ALL: [EngineKind; 3] = [EngineKind::Naive, EngineKind::Simd, EngineKind::MatrixUnit];
+
+    /// Runtime selection by canonical name (`"naive"`, `"simd"`,
+    /// `"matrix_unit"`) — the `StencilSpec::by_name` analogue used by
+    /// configs, the CLI, and the bench JSON.
+    pub fn by_name(name: &str) -> Option<Self> {
+        Some(match name {
+            "naive" => EngineKind::Naive,
+            "simd" => EngineKind::Simd,
+            "matrix_unit" => EngineKind::MatrixUnit,
+            _ => return None,
+        })
+    }
+
+    /// Canonical name; `by_name(kind.name())` round-trips.
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineKind::Naive => "naive",
+            EngineKind::Simd => "simd",
+            EngineKind::MatrixUnit => "matrix_unit",
+        }
+    }
+}
+
+/// A configured engine: the kind plus the tuning state the kernels
+/// need.  Cheap to copy; construct once and pass by reference.
+#[derive(Clone, Copy, Debug)]
+pub struct Engine {
+    /// Which engine implementation the kernels dispatch to.
+    pub kind: EngineKind,
+    /// Parallelism hint: > 1 fans fixed-size z-slabs over the global
+    /// persistent runtime ([`runtime::global`]); 1 runs inline on the
+    /// caller.  Never changes results (see the module docs).
+    pub threads: usize,
+    /// Matrix-unit block geometry; its `vz` is also the z-slab
+    /// granularity every engine's parallel fan-out uses, so serial and
+    /// parallel partitions coincide.
+    pub dims: BlockDims,
+}
+
+impl Engine {
+    /// A serial engine of `kind` with default tuning.
+    pub fn new(kind: EngineKind) -> Self {
+        Self { kind, threads: 1, dims: BlockDims::default() }
+    }
+
+    /// Runtime selection by canonical kind name (see
+    /// [`EngineKind::by_name`]); `None` for unknown names.
+    pub fn by_name(name: &str) -> Option<Self> {
+        EngineKind::by_name(name).map(Self::new)
+    }
+
+    /// The crate-wide default of the `threads`-keyed compatibility
+    /// entry points (`rtm::vti::step`, `rtm::tti::step`, the
+    /// coordinator's free `sweep` functions): the simd engine with the
+    /// given parallelism hint.  One definition, so the wrappers cannot
+    /// drift onto different defaults.
+    pub fn default_simd(threads: usize) -> Self {
+        Self::new(EngineKind::Simd).with_threads(threads)
+    }
+
+    /// Set the parallelism hint (clamped to ≥ 1).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Override the matrix-unit block geometry / z-slab granularity.
+    pub fn with_dims(mut self, dims: BlockDims) -> Self {
+        self.dims = dims;
+        self
+    }
+
+    /// Fan `f` over fixed-size z-slab views of `out` (serial when
+    /// `threads <= 1`; same partition either way).
+    fn fan_zslabs<F>(&self, out: &mut Grid3, f: F)
+    where
+        F: Fn(&mut TileViewMut<'_>) + Sync,
+    {
+        let (nz, nx, ny) = out.shape();
+        let vz = self.dims.vz.max(1);
+        let nslabs = nz.div_ceil(vz);
+        let pg = ParGrid3::new(out);
+        let pg = &pg;
+        let task = |i: usize| {
+            let z0 = i * vz;
+            let z1 = (z0 + vz).min(nz);
+            let mut view = pg.view(z0, z1, 0, nx, 0, ny);
+            f(&mut view);
+        };
+        if self.threads <= 1 || nslabs <= 1 {
+            for i in 0..nslabs {
+                task(i);
+            }
+        } else {
+            runtime::global().run(self.threads, nslabs, &task);
+        }
+    }
+
+    /// One full periodic sweep of `spec` over `g` through this engine.
+    pub fn apply3<S: GridSrc>(&self, spec: &StencilSpec, g: &S) -> Grid3 {
+        assert_eq!(spec.ndim, 3, "Engine::apply3 needs a 3D spec");
+        let (nz, nx, ny) = g.shape();
+        let mut out = Grid3::zeros(nz, nx, ny);
+        self.fan_zslabs(&mut out, |view| self.apply3_region(spec, g, view));
+        out
+    }
+
+    /// Compute the claimed region of `out` from `g` — the per-tile task
+    /// body of the parallel coordinator (`coordinator::driver`).  Runs
+    /// serially inside the claim; parallelism is the caller's tiling.
+    pub fn apply3_region<S: GridSrc>(&self, spec: &StencilSpec, g: &S, out: &mut TileViewMut<'_>) {
+        match self.kind {
+            EngineKind::Naive => naive::apply3_region(spec, g, out),
+            EngineKind::Simd => simd::apply3_region(spec, g, out),
+            EngineKind::MatrixUnit => {
+                matrix_unit::apply3_region(spec, g, out, self.dims);
+            }
+        }
+    }
+
+    /// Second derivative along `axis` (0 = z, 1 = x, 2 = y) with
+    /// periodic wrap: `out[p] = Σ_k w2[k+r]·g[p + k·axis]`.  `out` is
+    /// fully overwritten; z-slabs fan over the persistent runtime.
+    pub fn d2_axis_into<S: GridSrc>(&self, g: &S, w2: &[f32], axis: usize, out: &mut Grid3) {
+        self.band_axis_into(g, w2, axis, out);
+    }
+
+    /// First derivative along `axis` with periodic wrap (antisymmetric
+    /// band `w1`, zero centre).  `out` is fully overwritten.
+    pub fn d1_axis_into<S: GridSrc>(&self, g: &S, w1: &[f32], axis: usize, out: &mut Grid3) {
+        self.band_axis_into(g, w1, axis, out);
+    }
+
+    /// Allocating convenience form of [`d2_axis_into`](Self::d2_axis_into).
+    pub fn d2_axis<S: GridSrc>(&self, g: &S, w2: &[f32], axis: usize) -> Grid3 {
+        let (nz, nx, ny) = g.shape();
+        let mut out = Grid3::zeros(nz, nx, ny);
+        self.d2_axis_into(g, w2, axis, &mut out);
+        out
+    }
+
+    /// Allocating convenience form of [`d1_axis_into`](Self::d1_axis_into).
+    pub fn d1_axis<S: GridSrc>(&self, g: &S, w1: &[f32], axis: usize) -> Grid3 {
+        let (nz, nx, ny) = g.shape();
+        let mut out = Grid3::zeros(nz, nx, ny);
+        self.d1_axis_into(g, w1, axis, &mut out);
+        out
+    }
+
+    /// The shared 1-D band pass behind `d1`/`d2`: the band (length
+    /// 2r+1, centre at index r) is applied along `axis` as a 1-D star
+    /// stencil by the selected engine's axis kernel.
+    fn band_axis_into<S: GridSrc>(&self, g: &S, band: &[f32], axis: usize, out: &mut Grid3) {
+        assert!(axis < 3, "axis must be 0 (z), 1 (x), or 2 (y)");
+        assert_eq!(band.len() % 2, 1, "band must have odd length");
+        assert_eq!(g.shape(), out.shape(), "band_axis_into shape mismatch");
+        self.fan_zslabs(out, |view| match self.kind {
+            EngineKind::Naive => naive::d_axis_region(band, axis, g, view),
+            EngineKind::Simd => simd::d_axis_region(band, axis, g, view),
+            EngineKind::MatrixUnit => {
+                matrix_unit::d_axis_region(band, axis, g, view, self.dims);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::coeffs::{first_deriv, second_deriv};
+    use crate::util::prop::assert_allclose;
+
+    #[test]
+    fn kind_names_round_trip() {
+        for kind in EngineKind::ALL {
+            assert_eq!(EngineKind::by_name(kind.name()), Some(kind), "{kind:?}");
+            assert_eq!(Engine::by_name(kind.name()).unwrap().kind, kind);
+        }
+    }
+
+    #[test]
+    fn unknown_engine_names_are_none() {
+        for bad in ["", "SIMD", "avx512", "matrix-unit", "matrix_unit_par", "naive "] {
+            assert!(EngineKind::by_name(bad).is_none(), "{bad:?}");
+            assert!(Engine::by_name(bad).is_none(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn with_threads_clamps_to_one() {
+        assert_eq!(Engine::new(EngineKind::Simd).with_threads(0).threads, 1);
+    }
+
+    #[test]
+    fn every_engine_matches_the_naive_oracle() {
+        for (name, spec) in StencilSpec::benchmark_suite() {
+            if spec.ndim != 3 {
+                continue;
+            }
+            let g = Grid3::random(10, 18, 22, 11);
+            let want = naive::apply3(&spec, &g);
+            for kind in EngineKind::ALL {
+                let got = Engine::new(kind).apply3(&spec, &g);
+                assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
+                let _ = name;
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_sweep_is_bitwise_serial() {
+        let spec = StencilSpec::star3d(4);
+        let g = Grid3::random(11, 20, 24, 5);
+        for kind in EngineKind::ALL {
+            let want = Engine::new(kind).apply3(&spec, &g);
+            for threads in [2, 5] {
+                let got = Engine::new(kind).with_threads(threads).apply3(&spec, &g);
+                assert_eq!(got.data, want.data, "{kind:?} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn axis_kernels_match_the_direct_loop() {
+        let g = Grid3::random(7, 9, 11, 3);
+        let w2 = second_deriv(3);
+        let w1 = first_deriv(4);
+        for (band, is_d2) in [(&w2, true), (&w1, false)] {
+            let r = band.len() as isize / 2;
+            for axis in 0..3 {
+                let want = Grid3::from_fn(7, 9, 11, |z, x, y| {
+                    let mut acc = 0.0;
+                    for k in -r..=r {
+                        let (mut zz, mut xx, mut yy) = (z as isize, x as isize, y as isize);
+                        match axis {
+                            0 => zz += k,
+                            1 => xx += k,
+                            _ => yy += k,
+                        }
+                        acc += band[(k + r) as usize] * g.get_wrap(zz, xx, yy);
+                    }
+                    acc
+                });
+                for kind in EngineKind::ALL {
+                    let eng = Engine::new(kind);
+                    let got = if is_d2 {
+                        eng.d2_axis(&g, band, axis)
+                    } else {
+                        eng.d1_axis(&g, band, axis)
+                    };
+                    assert_allclose(&got.data, &want.data, 1e-4, 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn axis_kernels_are_bitwise_stable_across_threads() {
+        let g = Grid3::random(13, 10, 17, 9);
+        let w2 = second_deriv(4);
+        for kind in EngineKind::ALL {
+            for axis in 0..3 {
+                let want = Engine::new(kind).d2_axis(&g, &w2, axis);
+                for threads in [2, 6] {
+                    let got = Engine::new(kind).with_threads(threads).d2_axis(&g, &w2, axis);
+                    assert_eq!(got.data, want.data, "{kind:?} axis={axis} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn small_all_boundary_grids_agree() {
+        // grid shorter than the band along every axis: the axis kernels
+        // run entirely on their wrapped boundary paths
+        let g = Grid3::random(4, 4, 4, 2);
+        let w2 = second_deriv(4);
+        let want = Engine::new(EngineKind::Naive).d2_axis(&g, &w2, 1);
+        for kind in [EngineKind::Simd, EngineKind::MatrixUnit] {
+            let got = Engine::new(kind).d2_axis(&g, &w2, 1);
+            assert_allclose(&got.data, &want.data, 1e-5, 1e-6);
+        }
+    }
+}

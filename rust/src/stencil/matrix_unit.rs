@@ -10,7 +10,7 @@
 //! warm-up** and **zero-copy for interior blocks** —
 //!
 //! * blocks whose halo window lies fully inside the grid read strided
-//!   y-rows straight from the [`GridSrc`] ([`DirectWin`]) — no window
+//!   y-rows straight from the [`GridSrc`] (`DirectWin`) — no window
 //!   materialization at all;
 //! * only the O(surface) boundary blocks wrap-copy their window, into a
 //!   worker-local scratch-arena buffer (`coordinator::scratch`), never
@@ -48,8 +48,12 @@ use crate::grid::{Grid2, Grid3};
 /// Instruction counters for the matrix-unit model.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct Counts {
+    /// Matrix-unit outer-product instructions (one per VL-element input
+    /// vector consumed by a 1D-stencil pass — the Fig. 4 mapping).
     pub outer_products: u64,
+    /// Vector loads: halo-window reads plus intermediate-buffer reloads.
     pub vec_loads: u64,
+    /// Vector stores: results plus the intermediate-buffer round-trip.
     pub vec_stores: u64,
     /// Matrix-tile horizontal/vertical slice insert/extract instructions.
     pub tile_slices: u64,
@@ -61,6 +65,8 @@ pub struct Counts {
 }
 
 impl Counts {
+    /// Accumulate another counter set (integer sums commute, so merge
+    /// order never changes the total).
     pub fn add(&mut self, o: &Counts) {
         self.outer_products += o.outer_products;
         self.vec_loads += o.vec_loads;
@@ -79,7 +85,9 @@ impl Counts {
 /// Block geometry. Paper defaults: VL = 16 fp32 lanes, VZ = 4 tiles.
 #[derive(Clone, Copy, Debug)]
 pub struct BlockDims {
+    /// Vector length: blocks are `vl × vl` in the x/y plane.
     pub vl: usize,
+    /// Block extent along z (tiles stacked per block).
     pub vz: usize,
 }
 
@@ -322,41 +330,43 @@ fn run_block<W: Win>(
     }
 }
 
-/// Compute every block whose z-origin lies in `[zlo, zhi)` into `view`
-/// (which must claim exactly those z rows, full xy extent), returning
-/// the accumulated instruction counts.  `zlo`/`zhi` must be z-block
-/// boundaries (multiples of `vz`, or the grid end) so serial and
-/// parallel sweeps partition identically.
-fn apply3_zspan<S: GridSrc>(
+/// Compute the claimed region of `out` — an arbitrary sub-box of the
+/// periodic sweep — blockwise, returning the accumulated instruction
+/// counts.  Blocks tile the *claimed box* from its origin; because
+/// every per-point accumulation order is block-independent, the result
+/// bytes equal the whole-grid sweep's on that box regardless of how
+/// the grid was partitioned into claims.  The per-tile matrix-unit
+/// entry point of the engine dispatch layer (`stencil::engine`).
+pub fn apply3_region<S: GridSrc>(
     spec: &StencilSpec,
     g: &S,
+    out: &mut TileViewMut<'_>,
     dims: BlockDims,
-    view: &mut TileViewMut<'_>,
-    zlo: usize,
-    zhi: usize,
 ) -> Counts {
-    let (vl, vz) = (dims.vl, dims.vz);
-    let (_, gnx, gny) = g.shape();
+    assert_eq!(spec.ndim, 3);
+    debug_assert_eq!(g.shape(), out.grid_shape());
+    let (vl, vz) = (dims.vl.max(1), dims.vz.max(1));
+    let (z0, z1, x0, x1, y0, y1) = out.bounds();
     let mut counts = Counts::default();
-    let mut z0 = zlo;
-    while z0 < zhi {
-        let bz = vz.min(zhi - z0);
-        let mut x0 = 0;
-        while x0 < gnx {
-            let bx = vl.min(gnx - x0);
-            let mut y0 = 0;
-            while y0 < gny {
-                let by = vl.min(gny - y0);
+    let mut zb = z0;
+    while zb < z1 {
+        let bz = vz.min(z1 - zb);
+        let mut xb = x0;
+        while xb < x1 {
+            let bx = vl.min(x1 - xb);
+            let mut yb = y0;
+            while yb < y1 {
+                let by = vl.min(y1 - yb);
                 counts.add(&match spec.pattern {
                     Pattern::Star => star3_counts(spec, bz, bx, by, vl),
                     Pattern::Box => box3_counts(spec, bz, bx, by, vl),
                 });
-                compute_block(spec, g, view, z0, x0, y0, bz, bx, by);
-                y0 += by;
+                compute_block(spec, g, out, zb, xb, yb, bz, bx, by);
+                yb += by;
             }
-            x0 += bx;
+            xb += bx;
         }
-        z0 += bz;
+        zb += bz;
     }
     counts
 }
@@ -374,7 +384,7 @@ pub fn apply3<S: GridSrc>(spec: &StencilSpec, g: &S, dims: BlockDims) -> (Grid3,
     {
         let pg = ParGrid3::new(&mut out);
         let mut view = pg.full_view();
-        counts = apply3_zspan(spec, g, dims, &mut view, 0, gnz);
+        counts = apply3_region(spec, g, &mut view, dims);
     }
     (out, counts)
 }
@@ -408,7 +418,7 @@ pub fn apply3_on<S: GridSrc>(
             let z0 = i * vz;
             let z1 = (z0 + vz).min(gnz);
             let mut view = pg.view(z0, z1, 0, gnx, 0, gny);
-            let c = apply3_zspan(spec, g, dims, &mut view, z0, z1);
+            let c = apply3_region(spec, g, &mut view, dims);
             total.lock().unwrap().add(&c);
         });
     }
@@ -424,6 +434,174 @@ pub fn apply3_par<S: GridSrc>(
     threads: usize,
 ) -> (Grid3, Counts) {
     apply3_on(runtime::global(), spec, g, dims, threads)
+}
+
+/// 1-D band pass along `axis` (0 = z, 1 = x, 2 = y) over the claimed
+/// region — the matrix-unit axis-derivative kernel behind
+/// `Engine::{d1,d2}_axis_into` (the §IV-G decomposition: RTM derivative
+/// sweeps as single outer-product passes).
+///
+/// Blockwise like [`apply3_region`], with the same zero-copy /
+/// wrap-copy window split — except the halo extends along `axis`
+/// **only** (a 1-D band needs no halo on the other axes), so boundary
+/// windows are a 2r-slab, not a cube.  `band` has odd length 2r+1,
+/// centre at index r.  Returns the one-pass instruction counts
+/// (window loads, outer products, result stores; the x-axis pass also
+/// records its Tile-Assisted Vector Transpose slices).
+pub fn d_axis_region<S: GridSrc>(
+    band: &[f32],
+    axis: usize,
+    g: &S,
+    out: &mut TileViewMut<'_>,
+    dims: BlockDims,
+) -> Counts {
+    assert!(axis < 3, "axis must be 0 (z), 1 (x), or 2 (y)");
+    assert_eq!(band.len() % 2, 1, "band must have odd length");
+    debug_assert_eq!(g.shape(), out.grid_shape());
+    let r = band.len() / 2;
+    let (vl, vz) = (dims.vl.max(1), dims.vz.max(1));
+    let (z0, z1, x0, x1, y0, y1) = out.bounds();
+    let mut counts = Counts::default();
+    let mut zb = z0;
+    while zb < z1 {
+        let bz = vz.min(z1 - zb);
+        let mut xb = x0;
+        while xb < x1 {
+            let bx = vl.min(x1 - xb);
+            let mut yb = y0;
+            while yb < y1 {
+                let by = vl.min(y1 - yb);
+                counts.add(&axis_counts(r, axis, bz, bx, by, vl));
+                compute_axis_block(band, axis, g, out, zb, xb, yb, bz, bx, by);
+                yb += by;
+            }
+            xb += bx;
+        }
+        zb += bz;
+    }
+    counts
+}
+
+/// Dispatch one axis-pass block through the zero-copy / wrap-copy
+/// window split (halo along `axis` only).
+#[allow(clippy::too_many_arguments)]
+fn compute_axis_block<S: GridSrc>(
+    band: &[f32],
+    axis: usize,
+    g: &S,
+    view: &mut TileViewMut<'_>,
+    z0: usize,
+    x0: usize,
+    y0: usize,
+    bz: usize,
+    bx: usize,
+    by: usize,
+) {
+    let r = band.len() / 2;
+    let (gnz, gnx, gny) = g.shape();
+    let hz = bz + if axis == 0 { 2 * r } else { 0 };
+    let hx = bx + if axis == 1 { 2 * r } else { 0 };
+    let hy = by + if axis == 2 { 2 * r } else { 0 };
+    let oz = z0 as isize - if axis == 0 { r as isize } else { 0 };
+    let ox = x0 as isize - if axis == 1 { r as isize } else { 0 };
+    let oy = y0 as isize - if axis == 2 { r as isize } else { 0 };
+    let interior = oz >= 0
+        && oz as usize + hz <= gnz
+        && ox >= 0
+        && ox as usize + hx <= gnx
+        && oy >= 0
+        && oy as usize + hy <= gny;
+    if interior {
+        let win = DirectWin {
+            g,
+            nx: gnx,
+            ny: gny,
+            z0: oz as usize,
+            x0: ox as usize,
+            y0: oy as usize,
+            hy,
+        };
+        axis_band_block(band, axis, &win, view, z0, x0, y0, bz, bx, by);
+    } else {
+        scratch::with(hz * hx * hy, |buf| {
+            fill_window_wrap(g, oz, ox, oy, hz, hx, hy, buf);
+            let win = PackedWin { w: buf, hx, hy };
+            axis_band_block(band, axis, &win, view, z0, x0, y0, bz, bx, by);
+        });
+    }
+}
+
+/// One axis-pass block: per output row, accumulate the 2r+1 band taps
+/// as whole shifted window rows (axis z/x) or shifted in-row slices
+/// (axis y), landing straight in the claimed view.
+#[allow(clippy::too_many_arguments)]
+fn axis_band_block<W: Win>(
+    band: &[f32],
+    axis: usize,
+    win: &W,
+    out: &mut TileViewMut<'_>,
+    z0: usize,
+    x0: usize,
+    y0: usize,
+    bz: usize,
+    bx: usize,
+    by: usize,
+) {
+    let r = band.len() / 2;
+    for z in 0..bz {
+        for x in 0..bx {
+            let o = out.row_mut(z0 + z, x0 + x, y0, by);
+            if axis == 2 {
+                let c = win.row(z, x);
+                for y in 0..by {
+                    o[y] = band[r] * c[y + r];
+                }
+                for (k, &wk) in band.iter().enumerate() {
+                    if k == r {
+                        continue;
+                    }
+                    for y in 0..by {
+                        o[y] += wk * c[y + k];
+                    }
+                }
+            } else {
+                {
+                    let c = if axis == 0 { win.row(z + r, x) } else { win.row(z, x + r) };
+                    for y in 0..by {
+                        o[y] = band[r] * c[y];
+                    }
+                }
+                for (k, &wk) in band.iter().enumerate() {
+                    if k == r {
+                        continue;
+                    }
+                    let s = if axis == 0 { win.row(z + k, x) } else { win.row(z, x + k) };
+                    for y in 0..by {
+                        o[y] += wk * s[y];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Instruction counts of one 1-D axis pass on one block: the window is
+/// loaded once and consumed by a single outer-product pass; the x-axis
+/// pass additionally pays (and saves) the tile-transpose traffic.
+fn axis_counts(r: usize, axis: usize, bz: usize, bx: usize, by: usize, vl: usize) -> Counts {
+    let hz = bz + if axis == 0 { 2 * r } else { 0 };
+    let hx = bx + if axis == 1 { 2 * r } else { 0 };
+    let hy = by + if axis == 2 { 2 * r } else { 0 };
+    let mut c = Counts::default();
+    c.vec_loads += (hz * hx * div_up(hy, vl)) as u64;
+    c.outer_products += div_up(hz * hx * hy, vl) as u64;
+    if axis == 1 {
+        c.tile_slices += (2 * vl * bz) as u64;
+        c.simd_permutes_avoided += (vl * vl.ilog2() as usize * bz) as u64;
+        c.gathers_avoided += (bz * hx) as u64;
+    }
+    c.vec_stores += div_up(bz * bx * by, vl) as u64;
+    c
 }
 
 fn star3_counts(spec: &StencilSpec, bz: usize, bx: usize, by: usize, vl: usize) -> Counts {
@@ -732,6 +910,35 @@ mod tests {
         let loads = (4 + 4) * (16 + 4) * (20f64 / 16f64).ceil() as u64;
         assert_eq!(c.vec_loads, loads);
         assert_eq!(c.outer_products, 25 * ((4 * 16 * 20) as f64 / 16.0).ceil() as u64);
+    }
+
+    #[test]
+    fn axis_pass_counts_one_block() {
+        // one (4,16,16) block, r=4 band along y: window = (4,16,24),
+        // loaded once, consumed by one outer-product pass
+        let w2 = crate::stencil::coeffs::second_deriv(4);
+        let g = Grid3::random(4, 16, 16, 5);
+        let mut out = Grid3::zeros(4, 16, 16);
+        let c;
+        {
+            let pg = ParGrid3::new(&mut out);
+            let mut view = pg.full_view();
+            c = d_axis_region(&w2, 2, &g, &mut view, BlockDims::default());
+        }
+        assert_eq!(c.vec_loads, (4 * 16 * 2) as u64);
+        assert_eq!(c.outer_products, ((4 * 16 * 24) / 16) as u64);
+        assert_eq!(c.vec_stores, 64);
+        assert_eq!(c.tile_slices, 0, "y pass needs no tile transpose");
+        // the x-axis pass pays the Tile-Assisted Vector Transpose
+        let mut out2 = Grid3::zeros(4, 16, 16);
+        let cx;
+        {
+            let pg = ParGrid3::new(&mut out2);
+            let mut view = pg.full_view();
+            cx = d_axis_region(&w2, 1, &g, &mut view, BlockDims::default());
+        }
+        assert_eq!(cx.tile_slices, (2 * 16 * 4) as u64);
+        assert_eq!(cx.gathers_avoided, (4 * 24) as u64);
     }
 
     #[test]

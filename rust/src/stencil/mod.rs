@@ -10,37 +10,60 @@
 //!   outer-product accumulation into 16×16 tiles, with instruction
 //!   counters feeding the microarchitectural performance model.
 //! * [`box_zeroing`] — the Redundant-Access Zeroing box decomposition.
+//!
+//! [`engine`] is the dispatch layer over them: an [`Engine`] value
+//! selects a kind at runtime ([`EngineKind::by_name`]) and fans sweeps,
+//! per-tile region tasks, and the RTM 1-D axis-derivative passes over
+//! the persistent worker runtime with a worker-count-independent
+//! partition (bitwise-stable results for any thread count).
+//!
+//! Ownership/aliasing contract: engines **read** through
+//! [`GridSrc`](crate::grid::par::GridSrc) (a quiescent `&Grid3` or a
+//! `ParGrid3` whose other cells are written concurrently) and **write**
+//! only through the exclusive [`TileViewMut`](crate::grid::par::TileViewMut)
+//! claim they are handed — a task cannot touch cells outside its claim.
 
 pub mod box_zeroing;
 pub mod coeffs;
+pub mod engine;
 pub mod matrix_unit;
 pub mod naive;
 pub mod simd;
 
 pub use coeffs::{box_weights, first_deriv, second_deriv, star_weights};
+pub use engine::{Engine, EngineKind};
 
 /// Stencil pattern class (paper Fig. 1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Pattern {
+    /// Axis-aligned cross: 1 + 2·ndim·r points.
     Star,
+    /// Dense (2r+1)^ndim neighbourhood.
     Box,
 }
 
 /// A stencil benchmark kernel specification.
 #[derive(Clone, Debug)]
 pub struct StencilSpec {
+    /// Neighbourhood shape (star cross or dense box).
     pub pattern: Pattern,
+    /// Grid dimensionality: 2 or 3.
     pub ndim: usize,
+    /// Stencil radius `r` (halo width per axis).
     pub radius: usize,
-    /// Star: per-axis weights (len 2r+1, zero centre) in axis order
-    /// `[x, y]` (2D) or `[z, x, y]` (3D), plus the centre weight.
-    /// Box: dense weight tensor, row-major over `(x,y)` / `(z,x,y)`.
+    /// Star only: the centre-point weight (the per-axis bands carry a
+    /// zero centre so the point is counted once).
     pub star_center: f32,
+    /// Star only: per-axis weights (len 2r+1, zero centre) in axis
+    /// order `[x, y]` (2D) or `[z, x, y]` (3D).
     pub star_axes: Vec<Vec<f32>>,
+    /// Box only: dense weight tensor, row-major over `(x,y)` /
+    /// `(z,x,y)`.
     pub box_w: Vec<f32>,
 }
 
 impl StencilSpec {
+    /// 2D star (cross) kernel of the given radius.
     pub fn star2d(radius: usize) -> Self {
         let (c, axes) = star_weights(2, radius);
         Self {
@@ -53,6 +76,7 @@ impl StencilSpec {
         }
     }
 
+    /// 3D star (cross) kernel of the given radius.
     pub fn star3d(radius: usize) -> Self {
         let (c, axes) = star_weights(3, radius);
         Self {
@@ -65,6 +89,7 @@ impl StencilSpec {
         }
     }
 
+    /// 2D dense box kernel of the given radius.
     pub fn box2d(radius: usize) -> Self {
         Self {
             pattern: Pattern::Box,
@@ -76,6 +101,7 @@ impl StencilSpec {
         }
     }
 
+    /// 3D dense box kernel of the given radius.
     pub fn box3d(radius: usize) -> Self {
         Self {
             pattern: Pattern::Box,
@@ -155,7 +181,23 @@ mod tests {
 
     #[test]
     fn unknown_name_is_none() {
-        assert!(StencilSpec::by_name("4DStarR9").is_none());
+        for bad in ["4DStarR9", "", "3dstarr4", "3DStarR4 ", "3DStar"] {
+            assert!(StencilSpec::by_name(bad).is_none(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn by_name_round_trips_the_benchmark_suite() {
+        // every suite name resolves to the kernel the suite carries
+        for (name, spec) in StencilSpec::benchmark_suite() {
+            let again = StencilSpec::by_name(name).unwrap();
+            assert_eq!(again.pattern, spec.pattern, "{name}");
+            assert_eq!(again.ndim, spec.ndim, "{name}");
+            assert_eq!(again.radius, spec.radius, "{name}");
+            assert_eq!(again.points(), spec.points(), "{name}");
+            assert_eq!(again.star_axes, spec.star_axes, "{name}");
+            assert_eq!(again.box_w, spec.box_w, "{name}");
+        }
     }
 
     #[test]

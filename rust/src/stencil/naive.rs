@@ -48,6 +48,51 @@ pub fn apply2(spec: &StencilSpec, g: &Grid2) -> Grid2 {
     }
 }
 
+/// 1-D band pass along `axis` (0 = z, 1 = x, 2 = y) over the claimed
+/// region, with periodic wrap everywhere — **the axis-derivative
+/// oracle**.  These are the RTM propagators' original scalar loops,
+/// demoted here when `rtm::{vti,tti}` moved onto the engine dispatch
+/// layer: one wrapped multiply-accumulate per band tap per point, taps
+/// in ascending `k` order (matching the `jnp.roll` reference), no
+/// interior/shell split.  `band` has odd length 2r+1 with the centre
+/// weight at index r (zero for first derivatives).
+pub fn d_axis_region<S: GridSrc>(band: &[f32], axis: usize, g: &S, out: &mut TileViewMut<'_>) {
+    assert!(axis < 3, "axis must be 0 (z), 1 (x), or 2 (y)");
+    assert_eq!(band.len() % 2, 1, "band must have odd length");
+    let (z0, z1, x0, x1, y0, y1) = out.bounds();
+    d_axis_box(band, axis, g, out, [z0, z1, x0, x1, y0, y1]);
+}
+
+/// The wrapped per-point band loop over one `[z0,z1,x0,x1,y0,y1]`
+/// sub-box of the claim — the single definition of the oracle tap
+/// order, shared with `simd::d_axis_region`'s boundary arm.
+pub(crate) fn d_axis_box<S: GridSrc>(
+    band: &[f32],
+    axis: usize,
+    g: &S,
+    out: &mut TileViewMut<'_>,
+    b: [usize; 6],
+) {
+    let r = (band.len() / 2) as isize;
+    for z in b[0]..b[1] {
+        for x in b[2]..b[3] {
+            for y in b[4]..b[5] {
+                let mut acc = 0.0f32;
+                for (k, &wk) in band.iter().enumerate() {
+                    let d = k as isize - r;
+                    let (zz, xx, yy) = match axis {
+                        0 => (z as isize + d, x as isize, y as isize),
+                        1 => (z as isize, x as isize + d, y as isize),
+                        _ => (z as isize, x as isize, y as isize + d),
+                    };
+                    acc += wk * g.get_wrap(zz, xx, yy);
+                }
+                out.set(z, x, y, acc);
+            }
+        }
+    }
+}
+
 fn star3<S: GridSrc>(spec: &StencilSpec, g: &S, out: &mut TileViewMut<'_>) {
     let r = spec.radius as isize;
     let (wz, wx, wy) = (&spec.star_axes[0], &spec.star_axes[1], &spec.star_axes[2]);

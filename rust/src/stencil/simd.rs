@@ -26,8 +26,11 @@ use crate::grid::{shell, Grid2, Grid3};
 /// 16×4×2 brick; the tile here is the per-core working set).
 #[derive(Clone, Copy, Debug)]
 pub struct Tile {
+    /// Tile extent along z (slowest axis).
     pub tz: usize,
+    /// Tile extent along x.
     pub tx: usize,
+    /// Tile extent along y (the contiguous axis).
     pub ty: usize,
 }
 
@@ -44,6 +47,7 @@ pub fn apply3(spec: &StencilSpec, g: &Grid3) -> Grid3 {
     apply3_tiled(spec, g, Tile::default())
 }
 
+/// [`apply3`] with an explicit tile shape.
 pub fn apply3_tiled(spec: &StencilSpec, g: &Grid3, tile: Tile) -> Grid3 {
     assert_eq!(spec.ndim, 3);
     let r = spec.radius;
@@ -264,6 +268,61 @@ pub fn apply3_region<S: GridSrc>(spec: &StencilSpec, g: &S, out: &mut TileViewMu
                     }
                 }
             }
+        }
+    }
+}
+
+/// 1-D band pass along `axis` (0 = z, 1 = x, 2 = y) over the claimed
+/// region — the blocked axis-derivative kernel behind
+/// `Engine::{d1,d2}_axis_into` for [`EngineKind::Simd`](super::EngineKind).
+///
+/// The region is split against `grid::shell`'s **per-axis** boxes: a
+/// 1-D band only wraps along its own axis, so the wrap-free interior is
+/// the grid shrunk by `r` along `axis` alone
+/// ([`shell::axis_interior_box`]), computed as shifted y-contiguous
+/// [`GridSrc::span`] accumulations that LLVM auto-vectorizes; the ≤2
+/// boundary slabs ([`shell::axis_boundary_boxes`]) take the wrapped
+/// per-point path.  `band` has odd length 2r+1, centre at index r.
+pub fn d_axis_region<S: GridSrc>(band: &[f32], axis: usize, g: &S, out: &mut TileViewMut<'_>) {
+    assert!(axis < 3, "axis must be 0 (z), 1 (x), or 2 (y)");
+    assert_eq!(band.len() % 2, 1, "band must have odd length");
+    debug_assert_eq!(g.shape(), out.grid_shape());
+    let r = band.len() / 2;
+    let (gnz, gnx, gny) = g.shape();
+    let (z0, z1, x0, x1, y0, y1) = out.bounds();
+    let bounds = [z0, z1, x0, x1, y0, y1];
+    let stride = match axis {
+        0 => (gnx * gny) as isize,
+        1 => gny as isize,
+        _ => 1,
+    };
+    let interior = shell::axis_interior_box(gnz, gnx, gny, axis, r);
+    if let Some(d) = interior.and_then(|ib| shell::intersect(bounds, ib)) {
+        let len = d[5] - d[4];
+        for z in d[0]..d[1] {
+            for x in d[2]..d[3] {
+                let base = ((z * gnx + x) * gny + d[4]) as isize;
+                let o = out.row_mut(z, x, d[4], len);
+                let c = g.span(base as usize, len);
+                for i in 0..len {
+                    o[i] = band[r] * c[i];
+                }
+                for (k, &wk) in band.iter().enumerate() {
+                    if k == r {
+                        continue;
+                    }
+                    let s = g.span((base + (k as isize - r as isize) * stride) as usize, len);
+                    for i in 0..len {
+                        o[i] += wk * s[i];
+                    }
+                }
+            }
+        }
+    }
+    for sb in shell::axis_boundary_boxes(gnz, gnx, gny, axis, r) {
+        if let Some(b) = shell::intersect(bounds, sb) {
+            // wrapped taps: one definition of the tap order, the oracle's
+            super::naive::d_axis_box(band, axis, g, out, b);
         }
     }
 }

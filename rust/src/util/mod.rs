@@ -4,6 +4,11 @@
 //! Criterion and proptest are unavailable in the offline vendor set (see
 //! DESIGN.md §7), so `bench` and `prop` provide minimal, dependency-free
 //! equivalents used by `benches/*` and the test suites.
+//!
+//! Contract: every helper here is self-contained and owns its state;
+//! the only process-global pieces are the counting allocator
+//! (`alloc_count`, read-only counters) and the FTZ flag helpers, which
+//! mutate thread-local FP state only.
 
 pub mod alloc_count;
 pub mod bench;

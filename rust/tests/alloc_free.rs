@@ -8,13 +8,18 @@
 //!
 //! Enforced with a counting global allocator: allocation *events* per
 //! sweep must be a small constant (the output grid + debug claim
-//! ledger), independent of how many blocks the sweep visits.  Not run
+//! ledger), independent of how many blocks the sweep visits.  The same
+//! contract extends up the stack to a full RTM VTI step through the
+//! matrix-unit engine (the PR 4 application rework): O(1) allocation
+//! events per step after warm-up, independent of grid size.  Not run
 //! under Miri (the CI miri job targets `aliasing.rs` only).
 
 use mmstencil::coordinator::scratch;
 use mmstencil::grid::Grid3;
+use mmstencil::rtm::{media, vti};
+use mmstencil::stencil::coeffs::second_deriv;
 use mmstencil::stencil::matrix_unit::{self, BlockDims};
-use mmstencil::stencil::StencilSpec;
+use mmstencil::stencil::{Engine, EngineKind, StencilSpec};
 use mmstencil::util::alloc_count::CountingAlloc;
 
 #[global_allocator]
@@ -85,4 +90,32 @@ fn matrix_unit_hot_path_allocation_contract() {
         matrix_unit::apply3(&spec, &g, dims);
     });
     assert!(first <= 8, "cold interior sweep allocated {first} times");
+
+    // ---- RTM step through the matrix-unit engine: O(1) allocations ----
+    // per step after warm-up.  Each step performs a fixed number of
+    // runtime dispatches (3 axis passes + 3 pointwise chunk passes),
+    // each costing a constant handful of events (job Arc, chunk-bounds
+    // vec, debug claim ledger) — never per block or per cell, so 8×
+    // the cells must not move the count beyond ledger-growth noise.
+    let eng = Engine::new(EngineKind::MatrixUnit).with_threads(2);
+    let w2 = second_deriv(4);
+    let shot = |n: usize| {
+        let m = media::layered_vti(n, n, n, 10.0, &media::default_layers());
+        let mut st = vti::VtiState::zeros(n, n, n);
+        let mut sc = vti::VtiScratch::new(n, n, n);
+        st.inject(n / 2, n / 2, n / 2, 1.0);
+        // warm-up: sizes arenas, runtime queues, and ledger capacity
+        vti::step_with(&mut st, &m, &w2, &eng, &mut sc);
+        vti::step_with(&mut st, &m, &w2, &eng, &mut sc);
+        min_events_during(3, || {
+            vti::step_with(&mut st, &m, &w2, &eng, &mut sc);
+        })
+    };
+    let small_step = shot(16);
+    let big_step = shot(32);
+    assert!(
+        big_step <= small_step + 24,
+        "RTM step allocations scale with grid size ({small_step} vs {big_step})"
+    );
+    assert!(big_step <= 96, "steady-state RTM step allocated {big_step} times");
 }
