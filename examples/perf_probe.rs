@@ -5,19 +5,27 @@
 //!
 //! Every engine is exercised through the dispatch layer
 //! (`stencil::Engine` + `EngineKind::by_name`) — no per-engine closures
-//! — and emits `BENCH_engines.json` (schema `metrics::bench_json` v2):
+//! — and emits `BENCH_engines.json` (schema `metrics::bench_json` v3):
 //! per-engine sweep throughput for star/box r ∈ {1, 4}, the headline
-//! 256³ star-r4 sweep, and **per-engine RTM step throughput** (VTI and
-//! TTI, the application workload), each with per-sweep/per-step
+//! 256³ star-r4 sweep at temporal-blocking depths k ∈ {1, 2, 4}
+//! (`Engine::apply3_fused` — the fused rows are the perf-trajectory
+//! evidence for the deep-halo tentpole), and per-engine RTM step
+//! throughput (VTI and TTI, classic `step_with` at depth 1 and the
+//! fused `step_k_with` at depth 2), each with per-sweep/per-step
 //! heap-allocation counts (counting global allocator below) and
-//! scratch-arena growth.  CI runs a shrunken probe (env below) and
-//! uploads the JSON as the perf-trajectory artifact; numbers are
-//! advisory, the schema is validated.
+//! scratch-arena growth.  CI runs a shrunken probe (env below),
+//! validates the schema, diffs against the committed baseline
+//! (`scripts/bench_diff.py`, advisory), and uploads the JSON.
 //!
-//! Env knobs: `PERF_PROBE_N` (grid edge, default 96), `PERF_PROBE_BIG_N`
-//! (headline sweep edge, default 256; 0 skips), `PERF_PROBE_BUDGET_S`
-//! (per-bench time budget, default 1.0), `BENCH_ENGINES_OUT` (output
-//! path, default `BENCH_engines.json`).
+//! Env knobs (documented in README §Perf trajectory):
+//! * `PERF_PROBE_N` — engine-matrix / RTM grid edge (default 96)
+//! * `PERF_PROBE_BIG_N` — headline sweep edge (default 256; 0 skips)
+//! * `PERF_PROBE_BUDGET_S` — per-bench time budget (default 1.0)
+//! * `BENCH_ENGINES_OUT` — output path (default `BENCH_engines.json`)
+//! * `MMSTENCIL_PROBE_ENGINES` — comma-separated row filter over the
+//!   engine labels (`naive,simd,matrix_unit,matrix_unit_par`); unset
+//!   runs everything.  Filtered probes are for local iteration — CI
+//!   needs the full set.
 
 use mmstencil::coordinator::scratch;
 use mmstencil::grid::Grid3;
@@ -41,6 +49,26 @@ fn env_f64(key: &str, default: f64) -> f64 {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// `MMSTENCIL_PROBE_ENGINES` row filter: `None` = run everything,
+/// `Some(list)` = run only the named engine labels.
+fn engine_filter() -> Option<Vec<String>> {
+    let v = std::env::var("MMSTENCIL_PROBE_ENGINES").ok()?;
+    let list: Vec<String> = v
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if list.is_empty() {
+        None
+    } else {
+        Some(list)
+    }
+}
+
+fn wants(filter: &Option<Vec<String>>, label: &str) -> bool {
+    filter.as_ref().map_or(true, |f| f.iter().any(|e| e == label))
+}
+
 /// Time `f`, then run one extra post-warm-up call under the allocation
 /// counters; returns (mcells/s, allocs, arena grows) for `work` cells.
 fn timed(label: &str, work: f64, budget_s: f64, mut f: impl FnMut()) -> (f64, u64, u64) {
@@ -54,7 +82,9 @@ fn timed(label: &str, work: f64, budget_s: f64, mut f: impl FnMut()) -> (f64, u6
     (mcells, allocs, grows)
 }
 
-/// One engine × sweep workload through the dispatch layer.
+/// One engine × sweep workload through the dispatch layer, at a given
+/// temporal-blocking depth (`time_block` fused sweeps per call).
+#[allow(clippy::too_many_arguments)]
 fn probe_sweep(
     entries: &mut Vec<EngineBench>,
     label: &str,
@@ -62,15 +92,16 @@ fn probe_sweep(
     spec: &StencilSpec,
     pattern: &str,
     g: &Grid3,
+    time_block: usize,
     budget_s: f64,
 ) {
     let n = g.nz;
     let (mcells, allocs, grows) = timed(
-        &format!("{label:<16} {pattern}3d r{} {n}^3", spec.radius),
-        (n * n * n) as f64,
+        &format!("{label:<16} {pattern}3d r{} {n}^3 k{time_block}", spec.radius),
+        (time_block * n * n * n) as f64,
         budget_s,
         || {
-            std::hint::black_box(eng.apply3(spec, g));
+            std::hint::black_box(eng.apply3_fused(spec, g, time_block));
         },
     );
     entries.push(EngineBench {
@@ -79,6 +110,7 @@ fn probe_sweep(
         radius: spec.radius,
         n,
         threads: eng.threads,
+        time_block,
         mcells_per_s: mcells,
         allocs_per_sweep: allocs,
         arena_grows_per_sweep: grows,
@@ -90,6 +122,7 @@ fn main() {
     let big_n = env_usize("PERF_PROBE_BIG_N", 256);
     let budget = env_f64("PERF_PROBE_BUDGET_S", 1.0);
     let threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4);
+    let filter = engine_filter();
     let mut entries: Vec<EngineBench> = Vec::new();
     let mut rtm_entries: Vec<RtmBench> = Vec::new();
 
@@ -102,21 +135,35 @@ fn main() {
             StencilSpec::box3d(radius)
         };
         for kind in EngineKind::ALL {
+            if !wants(&filter, kind.name()) {
+                continue;
+            }
             let eng = Engine::new(kind);
-            probe_sweep(&mut entries, kind.name(), &eng, &spec, pattern, &g, budget);
+            probe_sweep(&mut entries, kind.name(), &eng, &spec, pattern, &g, 1, budget);
         }
-        let par = Engine::new(EngineKind::MatrixUnit).with_threads(threads);
-        probe_sweep(&mut entries, "matrix_unit_par", &par, &spec, pattern, &g, budget);
+        if wants(&filter, "matrix_unit_par") {
+            let par = Engine::new(EngineKind::MatrixUnit).with_threads(threads);
+            probe_sweep(&mut entries, "matrix_unit_par", &par, &spec, pattern, &g, 1, budget);
+        }
     }
 
-    // ---- headline interior-throughput sweep: star r4 at big_n³ ----
+    // ---- headline interior-throughput sweep: star r4 at big_n³, at
+    // temporal-blocking depths 1/2/4 (the tentpole's Mcells/s evidence:
+    // fused sweeps amortize the output allocation + keep the
+    // destination hot, so k > 1 must not be slower per update) ----
     if big_n > 0 {
         let spec = StencilSpec::star3d(4);
         let gb = Grid3::random(big_n, big_n, big_n, 2);
-        let simd = Engine::new(EngineKind::Simd);
-        probe_sweep(&mut entries, "simd", &simd, &spec, "star", &gb, budget);
-        let par = Engine::new(EngineKind::MatrixUnit).with_threads(threads);
-        probe_sweep(&mut entries, "matrix_unit_par", &par, &spec, "star", &gb, budget);
+        if wants(&filter, "simd") {
+            let simd = Engine::new(EngineKind::Simd);
+            probe_sweep(&mut entries, "simd", &simd, &spec, "star", &gb, 1, budget);
+        }
+        if wants(&filter, "matrix_unit_par") {
+            let par = Engine::new(EngineKind::MatrixUnit).with_threads(threads);
+            for k in [1usize, 2, 4] {
+                probe_sweep(&mut entries, "matrix_unit_par", &par, &spec, "star", &gb, k, budget);
+            }
+        }
     }
 
     // ---- RTM steps per engine (the v2 application rows) ----
@@ -128,46 +175,57 @@ fn main() {
     let tm = media::layered_tti(n, n, n, 10.0, &media::default_layers());
     let trig = tti::TtiTrig::new(&tm);
     for kind in EngineKind::ALL {
-        let eng = Engine::new(kind).with_threads(threads);
-        {
-            let mut st = vti::VtiState::zeros(n, n, n);
-            let mut sc = vti::VtiScratch::new(n, n, n);
-            st.inject(mid, mid, mid, 1.0);
-            let (mcells, allocs, grows) = timed(
-                &format!("rtm vti {:<12} {n}^3 x{threads}", kind.name()),
-                work,
-                budget,
-                || vti::step_with(&mut st, &vm, &w2, &eng, &mut sc),
-            );
-            rtm_entries.push(RtmBench {
-                engine: kind.name().into(),
-                medium: "vti".into(),
-                n,
-                threads,
-                mcells_per_s: mcells,
-                allocs_per_step: allocs,
-                arena_grows_per_step: grows,
-            });
+        if !wants(&filter, kind.name()) {
+            continue;
         }
-        {
-            let mut st = tti::TtiState::zeros(n, n, n);
-            let mut sc = tti::TtiScratch::new(n, n, n);
-            st.inject(mid, mid, mid, 1.0);
-            let (mcells, allocs, grows) = timed(
-                &format!("rtm tti {:<12} {n}^3 x{threads}", kind.name()),
-                work,
-                budget,
-                || tti::step_with(&mut st, &tm, &trig, &w2, &w1, &eng, &mut sc),
-            );
-            rtm_entries.push(RtmBench {
-                engine: kind.name().into(),
-                medium: "tti".into(),
-                n,
-                threads,
-                mcells_per_s: mcells,
-                allocs_per_step: allocs,
-                arena_grows_per_step: grows,
-            });
+        let eng = Engine::new(kind).with_threads(threads);
+        // k = 1 is the classic per-step row; k = 2 measures the fused
+        // boundary-free entry (step_k_with) so the RTM trajectory is
+        // diffable per depth like the sweep rows
+        for k in [1usize, 2] {
+            let kwork = k as f64 * work;
+            {
+                let mut st = vti::VtiState::zeros(n, n, n);
+                let mut sc = vti::VtiScratch::new(n, n, n);
+                st.inject(mid, mid, mid, 1.0);
+                let (mcells, allocs, grows) = timed(
+                    &format!("rtm vti {:<12} {n}^3 x{threads} k{k}", kind.name()),
+                    kwork,
+                    budget,
+                    || vti::step_k_with(&mut st, &vm, &w2, &eng, &mut sc, k),
+                );
+                rtm_entries.push(RtmBench {
+                    engine: kind.name().into(),
+                    medium: "vti".into(),
+                    n,
+                    threads,
+                    time_block: k,
+                    mcells_per_s: mcells,
+                    allocs_per_step: allocs,
+                    arena_grows_per_step: grows,
+                });
+            }
+            {
+                let mut st = tti::TtiState::zeros(n, n, n);
+                let mut sc = tti::TtiScratch::new(n, n, n);
+                st.inject(mid, mid, mid, 1.0);
+                let (mcells, allocs, grows) = timed(
+                    &format!("rtm tti {:<12} {n}^3 x{threads} k{k}", kind.name()),
+                    kwork,
+                    budget,
+                    || tti::step_k_with(&mut st, &tm, &trig, &w2, &w1, &eng, &mut sc, k),
+                );
+                rtm_entries.push(RtmBench {
+                    engine: kind.name().into(),
+                    medium: "tti".into(),
+                    n,
+                    threads,
+                    time_block: k,
+                    mcells_per_s: mcells,
+                    allocs_per_step: allocs,
+                    arena_grows_per_step: grows,
+                });
+            }
         }
     }
 
@@ -183,11 +241,13 @@ fn main() {
     );
 
     // ---- d2_axis per-axis breakdown (probe-only) ----
-    let simd = Engine::new(EngineKind::Simd);
-    for axis in 0..3 {
-        let r = bench_auto(&format!("d2_axis axis={axis} {n}^3"), budget, || {
-            std::hint::black_box(simd.d2_axis(&g, &w2, axis));
-        });
-        report(&r, &format!("{:.1} Mcell/s", work / r.median_s / 1e6));
+    if wants(&filter, "simd") {
+        let simd = Engine::new(EngineKind::Simd);
+        for axis in 0..3 {
+            let r = bench_auto(&format!("d2_axis axis={axis} {n}^3"), budget, || {
+                std::hint::black_box(simd.d2_axis(&g, &w2, axis));
+            });
+            report(&r, &format!("{:.1} Mcell/s", work / r.median_s / 1e6));
+        }
     }
 }

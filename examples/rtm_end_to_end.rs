@@ -80,6 +80,9 @@ fn main() -> Result<()> {
         // the paper's application claim: propagate through the
         // matrix-unit engine, not the SIMD baseline
         engine: EngineKind::MatrixUnit,
+        // shots clamp temporal blocking to 1 anyway (§III-B: the
+        // sponge + per-step recording bound the fusable depth)
+        time_block: 1,
     };
     println!(
         "\nRTM shot: {}×{}×{} VTI r=4, {} fwd + {} bwd steps, {} engine …",

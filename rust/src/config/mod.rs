@@ -62,6 +62,12 @@ pub struct RuntimeSpec {
     pub numa_nodes: usize,
     /// Cores per simulated NUMA cluster.
     pub cores_per_numa: usize,
+    /// Timesteps fused per halo exchange (`time_block = k`, clamped to
+    /// ≥ 1 and to the decomposition's maximum depth at run time —
+    /// `coordinator::temporal`).  1 is the classic one-exchange-per-step
+    /// pipeline, bitwise unchanged; imaging RTM shots always clamp to 1
+    /// (`RtmConfig::shot_time_block`).
+    pub time_block: usize,
 }
 
 impl Default for RuntimeSpec {
@@ -69,7 +75,12 @@ impl Default for RuntimeSpec {
         // derive from the paper platform so the config path and the
         // Driver::new path agree on the simulated topology
         let p = crate::simulator::Platform::paper();
-        Self { workers: 0, numa_nodes: p.total_numa(), cores_per_numa: p.cores_per_numa }
+        Self {
+            workers: 0,
+            numa_nodes: p.total_numa(),
+            cores_per_numa: p.cores_per_numa,
+            time_block: 1,
+        }
     }
 }
 
@@ -171,6 +182,9 @@ pub fn from_text(text: &str) -> Result<ExperimentConfig, toml::ParseError> {
     rt.workers = doc.usize_or("runtime", "workers", rt.workers);
     rt.numa_nodes = doc.usize_or("runtime", "numa_nodes", rt.numa_nodes);
     rt.cores_per_numa = doc.usize_or("runtime", "cores_per_numa", rt.cores_per_numa);
+    rt.time_block = doc.usize_or("runtime", "time_block", rt.time_block).max(1);
+    // the propagators' fused entries read the same knob
+    cfg.rtm.time_block = rt.time_block;
     Ok(cfg)
 }
 
@@ -219,6 +233,18 @@ dx = 12.5
         assert_eq!(cfg.rtm.medium, crate::rtm::driver::Medium::Tti);
         assert_eq!(cfg.rtm.nz, 64);
         assert!((cfg.rtm.dx - 12.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_block_parses_clamps_and_reaches_rtm() {
+        // default is the classic one-exchange-per-step pipeline
+        assert_eq!(from_text("").unwrap().runtime.time_block, 1);
+        let cfg = from_text("[runtime]\ntime_block = 4\n").unwrap();
+        assert_eq!(cfg.runtime.time_block, 4);
+        // the propagators' fused entries read the same knob
+        assert_eq!(cfg.rtm.time_block, 4);
+        // 0 is clamped to 1, never a divide-by-zero depth
+        assert_eq!(from_text("[runtime]\ntime_block = 0\n").unwrap().runtime.time_block, 1);
     }
 
     #[test]

@@ -37,6 +37,8 @@ use crate::util::Timer;
 use super::exchange::{self, Backend};
 use super::pipeline::{self, Overlap};
 use super::runtime::{self, Runtime, RuntimeConfig, RuntimeStats};
+use super::scratch;
+use super::temporal;
 use super::tiles::{self, Strategy};
 
 /// Pool activity attributable to one sweep / stepped run.
@@ -101,6 +103,7 @@ pub struct Driver {
     platform: Platform,
     threads: usize,
     engine: Engine,
+    time_block: usize,
 }
 
 impl Driver {
@@ -113,7 +116,13 @@ impl Driver {
             cores_per_numa: platform.cores_per_numa,
             numa_nodes: platform.total_numa(),
         };
-        Self { rt: Runtime::new(cfg), platform, threads, engine: Engine::default_simd(1) }
+        Self {
+            rt: Runtime::new(cfg),
+            platform,
+            threads,
+            engine: Engine::default_simd(1),
+            time_block: 1,
+        }
     }
 
     /// Build from an experiment config (`[runtime]` + `[sweep]` tables).
@@ -124,6 +133,7 @@ impl Driver {
             platform: Platform::paper(),
             threads: cfg.sweep.threads.max(1),
             engine: Engine::default_simd(1),
+            time_block: cfg.runtime.time_block.max(1),
         }
     }
 
@@ -140,6 +150,22 @@ impl Driver {
         &self.engine
     }
 
+    /// Fuse `k` timesteps per halo exchange (`[runtime] time_block`,
+    /// clamped to ≥ 1): periodic sweeps run `k` back-to-back passes
+    /// ping-ponged through an arena double buffer, and multirank steps
+    /// take the deep-halo temporal-blocking path
+    /// ([`coordinator::temporal`](super::temporal)).  `1` is the
+    /// classic one-exchange-per-step pipeline, bitwise unchanged.
+    pub fn with_time_block(mut self, k: usize) -> Self {
+        self.time_block = k.max(1);
+        self
+    }
+
+    /// Timesteps fused per halo exchange (1 = classic stepping).
+    pub fn time_block(&self) -> usize {
+        self.time_block
+    }
+
     /// The dedicated runtime backing this driver.
     pub fn runtime(&self) -> &Runtime {
         &self.rt
@@ -150,12 +176,28 @@ impl Driver {
         self.threads
     }
 
-    /// One full periodic sweep on this driver's runtime and engine.
+    /// One periodic sweep pass on this driver's runtime and engine —
+    /// or, with [`with_time_block`](Self::with_time_block)` > 1`, `k`
+    /// fused back-to-back passes (result = the `k`-times-composed
+    /// sweep, bitwise equal to `k` separate calls; `SweepStats::cells`
+    /// counts all `k·n³` updates).
     pub fn sweep(&self, spec: &StencilSpec, g: &Grid3, strategy: Strategy) -> (Grid3, SweepStats) {
-        sweep_on(&self.rt, spec, g, self.threads, strategy, &self.platform, &self.engine)
+        sweep_on(
+            &self.rt,
+            spec,
+            g,
+            self.threads,
+            strategy,
+            &self.platform,
+            &self.engine,
+            self.time_block,
+        )
     }
 
     /// A multi-rank stepped sweep on this driver's runtime and engine.
+    /// With [`with_time_block`](Self::with_time_block)` > 1` the steps
+    /// run through the deep-halo temporal-blocking path: one exchange
+    /// per `k` fused sub-steps, bitwise equal to the classic path.
     pub fn multirank_sweep(
         &self,
         spec: &StencilSpec,
@@ -164,17 +206,32 @@ impl Driver {
         backend: &Backend,
         steps: usize,
     ) -> (Grid3, StepStats) {
-        multirank_sweep_on(
-            &self.rt,
-            spec,
-            global,
-            decomp,
-            backend,
-            steps,
-            self.threads,
-            &self.platform,
-            &self.engine,
-        )
+        if self.time_block > 1 {
+            multirank_sweep_fused_on(
+                &self.rt,
+                spec,
+                global,
+                decomp,
+                backend,
+                steps,
+                self.threads,
+                &self.platform,
+                &self.engine,
+                self.time_block,
+            )
+        } else {
+            multirank_sweep_on(
+                &self.rt,
+                spec,
+                global,
+                decomp,
+                backend,
+                steps,
+                self.threads,
+                &self.platform,
+                &self.engine,
+            )
+        }
     }
 }
 
@@ -201,7 +258,7 @@ pub fn sweep_with(
     platform: &Platform,
     engine: &Engine,
 ) -> (Grid3, SweepStats) {
-    sweep_on(runtime::global(), spec, g, threads, strategy, platform, engine)
+    sweep_on(runtime::global(), spec, g, threads, strategy, platform, engine, 1)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -213,8 +270,10 @@ fn sweep_on(
     strategy: Strategy,
     platform: &Platform,
     engine: &Engine,
+    time_block: usize,
 ) -> (Grid3, SweepStats) {
     assert_eq!(spec.ndim, 3);
+    let k = time_block.max(1);
     let plan = tiles::plan(strategy, threads.max(1), g.nx, g.ny);
     // static proof of the disjointness every claim below relies on
     #[cfg(debug_assertions)]
@@ -223,26 +282,42 @@ fn sweep_on(
     let before = rt.stats();
     let t = Timer::start();
     {
-        let out_pg = ParGrid3::new(&mut out);
-        let out_pg = &out_pg;
         let tile_list = &plan.tiles;
-        rt.run(threads.max(1), tile_list.len(), &|i| {
-            // exclusive view of this tile's XY region over all z
-            let mut view = tile_list[i].claim(out_pg);
-            engine.apply3_region(spec, g, &mut view);
-        });
+        // one tiled pass src → dst; the tiles cover the grid, and every
+        // engine overwrites its whole claim, so dst is fully defined
+        let run_pass = |src: &Grid3, dst: &mut Grid3| {
+            let out_pg = ParGrid3::new(dst);
+            let out_pg = &out_pg;
+            rt.run(threads.max(1), tile_list.len(), &|i| {
+                // exclusive view of this tile's XY region over all z
+                let mut view = tile_list[i].claim(out_pg);
+                engine.apply3_region(spec, src, &mut view);
+            });
+        };
+        run_pass(g, &mut out);
+        if k > 1 {
+            // fused passes ping-pong through one arena checkout instead
+            // of allocating (and zeroing) a grid per pass — the
+            // single-grid form of temporal blocking (no halo to pay, so
+            // the whole win is allocation traffic + dst reuse in cache)
+            let mut other = scratch::grid(g.nz, g.nx, g.ny);
+            for _ in 1..k {
+                run_pass(&out, &mut *other);
+                std::mem::swap(&mut out, &mut *other);
+            }
+        }
     }
     let real_s = t.secs();
-    let cells = g.len();
+    let cells = k * g.len();
     let cfg = SweepConfig::best(MemKind::OnPkg);
-    let est = roofline::predict(spec, cells, SimEngine::MMStencil, cfg, platform);
+    let est = roofline::predict(spec, g.len(), SimEngine::MMStencil, cfg, platform);
     (
         out,
         SweepStats {
             real_s,
             cells,
             gcells_per_s: cells as f64 / real_s / 1e9,
-            sim_s: est.time_s,
+            sim_s: est.time_s * k as f64,
             sim_bandwidth_util: est.bandwidth_util,
             pool: pool_delta(rt, &before, real_s),
         },
@@ -265,6 +340,10 @@ pub struct StepStats {
     /// simulated step time with the pipeline-overlap scheme
     pub sim_step_pipelined_s: f64,
     pub exchanged_bytes: u64,
+    /// Halo-exchange transport rounds performed across the whole run
+    /// (NOT averaged): `steps` on the classic path, `⌈steps / k⌉` under
+    /// temporal blocking — the 1/k reduction the fused path exists for.
+    pub comm_rounds: u64,
     /// runtime activity across all steps
     pub pool: PoolSnapshot,
 }
@@ -334,6 +413,7 @@ fn multirank_sweep_on(
         sim_step_s: 0.0,
         sim_step_pipelined_s: 0.0,
         exchanged_bytes: 0,
+        comm_rounds: 0,
         pool: PoolSnapshot::default(),
     };
     let before = rt.stats();
@@ -350,30 +430,14 @@ fn multirank_sweep_on(
             .collect();
 
         // deep-interior tasks (no halo dependency), split into z-slabs so
-        // every worker gets work even with few ranks
+        // every worker gets work even with few ranks (one granularity
+        // policy, shared with the fused path: `push_zslabs`)
         let mut deep: Vec<RegionTask> = Vec::new();
         let mut shell: Vec<RegionTask> = Vec::new();
         for (rk, hg) in grids.iter().enumerate() {
-            if let Some([z0, z1, x0, x1, y0, y1]) = shell::interior_box(hg.nz, hg.nx, hg.ny, r) {
-                let span = z1 - z0;
-                let slabs = (threads * 2)
-                    .div_ceil(decomp.ranks())
-                    .clamp(1, span);
-                let per = span.div_ceil(slabs);
-                let mut z = z0;
-                while z < z1 {
-                    let ze = (z + per).min(z1);
-                    deep.push(RegionTask {
-                        rank: rk,
-                        z0: z + r,
-                        z1: ze + r,
-                        x0: x0 + r,
-                        x1: x1 + r,
-                        y0: y0 + r,
-                        y1: y1 + r,
-                    });
-                    z = ze;
-                }
+            if let Some(b) = shell::interior_box(hg.nz, hg.nx, hg.ny, r) {
+                let shifted = [b[0] + r, b[1] + r, b[2] + r, b[3] + r, b[4] + r, b[5] + r];
+                push_zslabs(&mut deep, rk, shifted, threads, decomp.ranks());
             }
             for [z0, z1, x0, x1, y0, y1] in shell::boundary_boxes(hg.nz, hg.nx, hg.ny, r) {
                 shell.push(RegionTask {
@@ -491,6 +555,277 @@ fn multirank_sweep_on(
         acc.sim_step_s += no_overlap;
         acc.sim_step_pipelined_s += pipelined;
         acc.exchanged_bytes += rep.bytes;
+        acc.comm_rounds += 1;
+    }
+    let n = steps.max(1) as f64;
+    acc.real_s /= n;
+    acc.real_comm_s /= n;
+    acc.sim_compute_s /= n;
+    acc.sim_comm_s /= n;
+    acc.sim_step_s /= n;
+    acc.sim_step_pipelined_s /= n;
+    acc.pool = pool_delta(rt, &before, run_timer.secs());
+    (current, acc)
+}
+
+/// Split one rank's box into contiguous z-slab tasks so every worker
+/// gets work even with few ranks — the single granularity policy of
+/// both the classic deep-interior batch and the fused sub-step batches.
+fn push_zslabs(
+    tasks: &mut Vec<RegionTask>,
+    rank: usize,
+    b: [usize; 6],
+    threads: usize,
+    ranks: usize,
+) {
+    let span = b[1] - b[0];
+    if span == 0 || b[2] >= b[3] || b[4] >= b[5] {
+        return;
+    }
+    let slabs = (threads * 2).div_ceil(ranks).clamp(1, span);
+    let per = span.div_ceil(slabs);
+    let mut z = b[0];
+    while z < b[1] {
+        let ze = (z + per).min(b[1]);
+        tasks.push(RegionTask { rank, z0: z, z1: ze, x0: b[2], x1: b[3], y0: b[4], y1: b[5] });
+        z = ze;
+    }
+}
+
+/// [`multirank_sweep`] with deep-halo temporal blocking on the
+/// process-global pool (default simd engine): halos widened to `k·r`
+/// and exchanged **once per `k` fused timesteps**, with each rank
+/// running `k` back-to-back sweeps over shrinking trapezoid boxes
+/// (`coordinator::temporal`) ping-ponged between its scattered slab and
+/// an arena-checked-out double buffer.  `time_block` is clamped to the
+/// decomposition's maximum depth; results are bitwise equal to the
+/// classic path for any `k`, worker count, and backend
+/// (`rust/tests/temporal.rs`), while `StepStats::comm_rounds` drops to
+/// `⌈steps / k⌉`.
+#[allow(clippy::too_many_arguments)]
+pub fn multirank_sweep_fused(
+    spec: &StencilSpec,
+    global: &Grid3,
+    decomp: &CartDecomp,
+    backend: &Backend,
+    steps: usize,
+    threads: usize,
+    platform: &Platform,
+    time_block: usize,
+) -> (Grid3, StepStats) {
+    multirank_sweep_fused_on(
+        runtime::global(),
+        spec,
+        global,
+        decomp,
+        backend,
+        steps,
+        threads,
+        platform,
+        &Engine::default_simd(1),
+        time_block,
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn multirank_sweep_fused_on(
+    rt: &Runtime,
+    spec: &StencilSpec,
+    global: &Grid3,
+    decomp: &CartDecomp,
+    backend: &Backend,
+    steps: usize,
+    threads: usize,
+    platform: &Platform,
+    engine: &Engine,
+    time_block: usize,
+) -> (Grid3, StepStats) {
+    let r = spec.radius;
+    let threads = threads.max(1);
+    let k_max = temporal::effective_depth(time_block, decomp, global.nz, global.nx, global.ny, r);
+    let mut current = global.clone();
+    let mut acc = StepStats {
+        real_s: 0.0,
+        real_comm_s: 0.0,
+        sim_compute_s: 0.0,
+        sim_comm_s: 0.0,
+        sim_step_s: 0.0,
+        sim_step_pipelined_s: 0.0,
+        exchanged_bytes: 0,
+        comm_rounds: 0,
+        pool: PoolSnapshot::default(),
+    };
+    let before = rt.stats();
+    let run_timer = Timer::start();
+    let mut done = 0usize;
+    while done < steps {
+        let kk = k_max.min(steps - done);
+        let h = kk * r;
+        let t = Timer::start();
+        // src slabs with a kk-radii-deep halo frame; dst double buffers
+        // in the same storage shape, checked out of the caller's arena
+        // (stale contents: every sub-step overwrites its whole claimed
+        // box before reading it back, and the gather reads only the
+        // interior the final sub-step wrote)
+        let mut grids = exchange::scatter(&current, decomp, h);
+        let mut bufs: Vec<scratch::GridCheckout> = grids
+            .iter()
+            .map(|hg| scratch::grid(hg.grid.nz, hg.grid.nx, hg.grid.ny))
+            .collect();
+
+        // sub-step 0: the deep batch only reads the pre-exchange-valid
+        // interior, so it overlaps with the SDMA exchange exactly like
+        // the classic deep-interior batch; the frame slabs wait for the
+        // kk·r-deep halos
+        let mut deep: Vec<RegionTask> = Vec::new();
+        let mut frame: Vec<RegionTask> = Vec::new();
+        for (rk, hg) in grids.iter().enumerate() {
+            if let Some(b) = temporal::substep0_deep_box(hg.nz, hg.nx, hg.ny, r, kk) {
+                push_zslabs(&mut deep, rk, b, threads, decomp.ranks());
+            }
+            for b in temporal::substep0_frame_boxes(hg.nz, hg.nx, hg.ny, r, kk) {
+                frame.push(RegionTask {
+                    rank: rk,
+                    z0: b[0],
+                    z1: b[1],
+                    x0: b[2],
+                    x1: b[3],
+                    y0: b[4],
+                    y1: b[5],
+                });
+            }
+        }
+
+        let comm_result: Mutex<Option<(exchange::ExchangeReport, f64)>> = Mutex::new(None);
+        {
+            let hviews: Vec<HaloView<'_>> = grids.iter_mut().map(|hg| hg.par_view()).collect();
+            let dst_pgs: Vec<ParGrid3<'_>> =
+                bufs.iter_mut().map(|b| ParGrid3::new(&mut **b)).collect();
+            let hviews = &hviews;
+            let dst_pgs = &dst_pgs;
+
+            let do_comm = || {
+                let ct = Timer::start();
+                let rep = exchange::exchange_views(decomp, hviews, backend);
+                exchange::fill_halos_from_global_views(&current, decomp, hviews, true);
+                *comm_result.lock().unwrap() = Some((rep, ct.secs()));
+            };
+            let run_region = |task: &RegionTask| {
+                let mut view = dst_pgs[task.rank]
+                    .view(task.z0, task.z1, task.x0, task.x1, task.y0, task.y1);
+                engine.apply3_region(spec, &hviews[task.rank].pg, &mut view);
+            };
+
+            match backend {
+                Backend::Sdma(_) => {
+                    rt.run(threads + 1, deep.len() + 1, &|i| {
+                        if i == 0 {
+                            do_comm();
+                        } else {
+                            run_region(&deep[i - 1]);
+                        }
+                    });
+                }
+                Backend::Mpi(_) => {
+                    do_comm();
+                    rt.run(threads, deep.len(), &|i| run_region(&deep[i]));
+                }
+            }
+            rt.run(threads, frame.len(), &|i| run_region(&frame[i]));
+        }
+
+        // sub-steps 1..kk: ping-pong between the scattered slabs and the
+        // arena buffers over the shrinking trapezoid boxes — no halo
+        // traffic, every read is data the previous sub-step wrote
+        for s in 1..kk {
+            let mut tasks: Vec<RegionTask> = Vec::new();
+            for (rk, hg) in grids.iter().enumerate() {
+                let b = temporal::substep_box(hg.nz, hg.nx, hg.ny, r, kk, s);
+                push_zslabs(&mut tasks, rk, b, threads, decomp.ranks());
+            }
+            // sub-step t's result lives in `bufs` iff t is even, so
+            // sub-step s reads `bufs` iff s is odd
+            let src_is_buf = s % 2 == 1;
+            let (srcs, dsts): (Vec<&Grid3>, Vec<ParGrid3<'_>>) = if src_is_buf {
+                (
+                    bufs.iter().map(|b| &**b).collect(),
+                    grids.iter_mut().map(|hg| ParGrid3::new(&mut hg.grid)).collect(),
+                )
+            } else {
+                (
+                    grids.iter().map(|hg| &hg.grid).collect(),
+                    bufs.iter_mut().map(|b| ParGrid3::new(&mut **b)).collect(),
+                )
+            };
+            let srcs = &srcs;
+            let dsts = &dsts;
+            rt.run(threads, tasks.len(), &|i| {
+                let task = &tasks[i];
+                let mut view =
+                    dsts[task.rank].view(task.z0, task.z1, task.x0, task.x1, task.y0, task.y1);
+                engine.apply3_region(spec, srcs[task.rank], &mut view);
+            });
+        }
+
+        // gather: the final sub-step wrote exactly the interiors
+        let (gnz, gnx, gny) = current.shape();
+        let mut next = Grid3::zeros(gnz, gnx, gny);
+        {
+            let next_pg = ParGrid3::new(&mut next);
+            let next_pg = &next_pg;
+            let finals: Vec<&Grid3> = if kk % 2 == 1 {
+                bufs.iter().map(|b| &**b).collect()
+            } else {
+                grids.iter().map(|hg| &hg.grid).collect()
+            };
+            let finals = &finals;
+            rt.run(threads, decomp.ranks(), &|rk| {
+                let b = decomp.block(rk, gnz, gnx, gny);
+                let tg = finals[rk];
+                let (bz, bx, by) = b.dims();
+                let mut view = next_pg.view(b.z0, b.z0 + bz, b.x0, b.x0 + bx, b.y0, b.y0 + by);
+                for z in 0..bz {
+                    for x in 0..bx {
+                        let src = tg.idx(z + h, x + h, h);
+                        view.copy_row_from(b.z0 + z, b.x0 + x, b.y0, &tg.as_slice()[src..src + by]);
+                    }
+                }
+            });
+        }
+        let (rep, comm_s) = comm_result
+            .into_inner()
+            .unwrap()
+            .expect("halo-exchange task must have run");
+        current = next;
+
+        // simulated accounting: one exchange amortized over kk fused
+        // sweeps — only the first sub-step can hide comm behind compute
+        let rank_cells = decomp.block(0, current.nz, current.nx, current.ny).cells();
+        let est = roofline::predict(
+            spec,
+            rank_cells,
+            SimEngine::MMStencil,
+            SweepConfig::best(MemKind::OnPkg),
+            platform,
+        );
+        let overlap = match backend {
+            Backend::Sdma(_) => Overlap::Concurrent,
+            Backend::Mpi(_) => Overlap::Serialized,
+        };
+        let layers = 8usize;
+        let (compute_l, comm_l) = pipeline::equal_layers(est.time_s, rep.sim_time_s, layers);
+        let (no_overlap, pipelined) = pipeline::step_time(&compute_l, &comm_l, overlap);
+        let tail = est.time_s * (kk as f64 - 1.0);
+
+        acc.real_s += t.secs();
+        acc.real_comm_s += comm_s;
+        acc.sim_compute_s += est.time_s * kk as f64;
+        acc.sim_comm_s += rep.sim_time_s;
+        acc.sim_step_s += no_overlap + tail;
+        acc.sim_step_pipelined_s += pipelined + tail;
+        acc.exchanged_bytes += rep.bytes;
+        acc.comm_rounds += 1;
+        done += kk;
     }
     let n = steps.max(1) as f64;
     acc.real_s /= n;

@@ -20,6 +20,8 @@
 //! (`coordinator::scratch`): after the first step of a run, an exchange
 //! round performs zero heap allocations for its staging buffers.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use super::scratch;
 use crate::grid::decomp::CartDecomp;
 use crate::grid::halo::{Axis, HaloGrid, HaloView, Side};
@@ -49,6 +51,21 @@ impl Backend {
             Backend::Mpi(_) => "MPI",
         }
     }
+}
+
+/// Process-wide count of transport rounds: one per [`exchange`] /
+/// [`exchange_views`] call, regardless of how many faces the round
+/// moves.  The temporal-blocking contract (`rust/tests/temporal.rs`)
+/// asserts on deltas of this counter: a fused run must perform exactly
+/// one round per `k` timesteps.  Summed over all threads — assert exact
+/// deltas only from a context that owns every exchange in the window
+/// (a dedicated test process).
+static TRANSPORT_ROUNDS: AtomicU64 = AtomicU64::new(0);
+
+/// Cumulative transport rounds since process start (see the contract
+/// on the counter above).
+pub fn transport_rounds() -> u64 {
+    TRANSPORT_ROUNDS.load(Ordering::Relaxed)
 }
 
 /// Accounting for one exchange round.
@@ -93,6 +110,7 @@ pub fn exchange_views(
     backend: &Backend,
 ) -> ExchangeReport {
     assert_eq!(grids.len(), decomp.ranks());
+    TRANSPORT_ROUNDS.fetch_add(1, Ordering::Relaxed);
     let timer = crate::util::Timer::start();
     let mut report = ExchangeReport::default();
     let mut copies: Vec<CopyDesc> = Vec::new();
@@ -258,6 +276,47 @@ mod tests {
                 "rank {r} halos differ"
             );
         }
+    }
+
+    #[test]
+    fn exchange_matches_global_fill_on_uneven_decomps() {
+        // property test over the asymmetric cases the symmetric test
+        // above never reaches: prime-sized grids (uneven CartDecomp
+        // splits), lopsided rank layouts (1×1×N, 2×3×1), and halo depths
+        // beyond one radius (the temporal-blocking frames, h = k·r)
+        use crate::util::prop::forall;
+        const PRIMES: [usize; 5] = [5, 7, 11, 13, 17];
+        const LAYOUTS: [(usize, usize, usize); 5] =
+            [(1, 1, 2), (1, 1, 3), (1, 1, 4), (2, 3, 1), (3, 1, 2)];
+        forall(12, 0xDEC0, |rng| {
+            let nz = PRIMES[rng.range(0, PRIMES.len() - 1)];
+            let nx = PRIMES[rng.range(0, PRIMES.len() - 1)];
+            let ny = PRIMES[rng.range(0, PRIMES.len() - 1)];
+            let (pz, px, py) = LAYOUTS[rng.range(0, LAYOUTS.len() - 1)];
+            let d = CartDecomp::new(pz, px, py);
+            // deepest halo a single nearest-neighbour exchange supports:
+            // min owned layers on any decomposed axis (see
+            // coordinator::temporal::max_depth)
+            let mut max_h = 4;
+            for (p, n) in [(pz, nz), (px, nx), (py, ny)] {
+                if p > 1 {
+                    max_h = max_h.min(n / p);
+                }
+            }
+            let h = rng.range(1, max_h); // range() is lo..=hi inclusive
+            let g = Grid3::random(nz, nx, ny, rng.next_u64());
+            let mut via_exchange = scatter(&g, &d, h);
+            let mut via_oracle = scatter(&g, &d, h);
+            exchange(&d, &mut via_exchange, &Backend::sdma());
+            fill_halos_from_global(&g, &d, &mut via_exchange, true);
+            fill_halos_from_global(&g, &d, &mut via_oracle, false);
+            for r in 0..d.ranks() {
+                assert_eq!(
+                    via_exchange[r].grid.data, via_oracle[r].grid.data,
+                    "({nz},{nx},{ny}) ranks ({pz},{px},{py}) h={h}: rank {r} halos differ"
+                );
+            }
+        });
     }
 
     #[test]

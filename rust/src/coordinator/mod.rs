@@ -14,6 +14,9 @@
 //!   SDMA and the MPI cost paths (paper §IV-F, Table II);
 //! * [`pipeline`] — z-layer pipeline overlapping compute with exchange
 //!   (paper Fig. 9), executed as runtime tasks;
+//! * [`temporal`] — deep-halo temporal blocking: `k·r` halo frames,
+//!   one exchange per `k` fused sub-steps, trapezoid sub-step boxes
+//!   (paper §III-B's "depth of temporal blocking", made tunable);
 //! * [`driver`]   — whole-sweep orchestration: grid → bricks → tiles →
 //!   runtime batches → engine (selected through `stencil::Engine`) →
 //!   metrics.
@@ -32,4 +35,5 @@ pub mod pipeline;
 pub mod pool;
 pub mod runtime;
 pub mod scratch;
+pub mod temporal;
 pub mod tiles;

@@ -106,6 +106,59 @@ pub fn with<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
     r
 }
 
+/// An arena-backed whole-grid checkout: a [`Grid3`] whose storage came
+/// from this thread's pool and **returns to it on drop** — the RAII
+/// form of [`with`] for callers that need several buffers alive at once
+/// (the temporal-blocking driver checks one double-buffer grid per rank
+/// out per fused round).  Same rules as [`with`]: contents are
+/// unspecified on checkout, the buffer belongs to the checking-out
+/// thread, and it must be dropped on that thread.
+///
+/// [`Grid3`]: crate::grid::Grid3
+pub struct GridCheckout {
+    g: Option<crate::grid::Grid3>,
+}
+
+impl std::ops::Deref for GridCheckout {
+    type Target = crate::grid::Grid3;
+
+    fn deref(&self) -> &crate::grid::Grid3 {
+        self.g.as_ref().expect("GridCheckout accessed after drop")
+    }
+}
+
+impl std::ops::DerefMut for GridCheckout {
+    fn deref_mut(&mut self) -> &mut crate::grid::Grid3 {
+        self.g.as_mut().expect("GridCheckout accessed after drop")
+    }
+}
+
+impl Drop for GridCheckout {
+    fn drop(&mut self) {
+        if let Some(mut g) = self.g.take() {
+            // restore take()'s len == capacity invariant before the
+            // buffer re-enters the pool: grid() truncated the length, and
+            // a short buffer would make the *next* checkout re-memset the
+            // tail inside its (possibly hot) path — pay it here instead,
+            // once per grid checkout, outside the engine loops
+            let cap = g.data.capacity();
+            g.data.resize(cap, 0.0);
+            give(g.data);
+        }
+    }
+}
+
+/// Check a `(nz, nx, ny)` grid out of this thread's arena.  Contents
+/// are **unspecified** — the caller must overwrite every cell it later
+/// reads (the fused sub-step kernels overwrite their whole claimed box
+/// before any read; cells outside the final box are never read).
+pub fn grid(nz: usize, nx: usize, ny: usize) -> GridCheckout {
+    let len = nz * nx * ny;
+    let mut data = take(len);
+    data.truncate(len);
+    GridCheckout { g: Some(crate::grid::Grid3 { nz, nx, ny, data }) }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -153,6 +206,38 @@ mod tests {
             local_grow_events() - before
         });
         assert_eq!(handle.join().unwrap(), 1);
+    }
+
+    #[test]
+    fn grid_checkouts_are_distinct_and_return_capacity() {
+        {
+            let mut a = grid(2, 3, 4);
+            assert_eq!(a.shape(), (2, 3, 4));
+            assert_eq!(a.data.len(), 24);
+            a.data.fill(1.0);
+            let mut b = grid(2, 3, 4);
+            b.data.fill(2.0);
+            assert!(a.data.iter().all(|&v| v == 1.0), "checkouts must not alias");
+        }
+        // both storages are back in the pool: warm re-checkout of the
+        // same shapes must not grow
+        let before = local_grow_events();
+        let _a = grid(2, 3, 4);
+        let _b = grid(2, 3, 4);
+        assert_eq!(local_grow_events(), before, "warm grid checkout grew the arena");
+    }
+
+    #[test]
+    fn grid_checkout_interoperates_with_with() {
+        // a grid checkout and a slice checkout nested on one thread pop
+        // distinct buffers
+        let mut g = grid(4, 4, 4);
+        g.data.fill(3.0);
+        with(64, |b| {
+            b.fill(4.0);
+            assert!(g.data.iter().all(|&v| v == 3.0));
+        });
+        assert!(g.data.iter().all(|&v| v == 3.0));
     }
 
     #[test]

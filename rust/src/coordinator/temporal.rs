@@ -1,0 +1,204 @@
+//! Temporal-blocking plan: deep halos, shrinking sub-step boxes, and
+//! the depth clamp (the PR 5 tentpole geometry).
+//!
+//! The paper frames boundary handling as the limit on "the depth of
+//! temporal blocking" (§III-B).  For the periodic multirank sweep the
+//! only boundary is the halo, so the depth *is* tunable: widen every
+//! rank's halo to `k·r` ([`HaloGrid::with_depth`]), exchange **once**,
+//! then run `k` back-to-back sweeps over the slab.  Each fused sub-step
+//! consumes `r` layers of halo validity, so its writable box shrinks by
+//! `r` per side — the classic trapezoid rule:
+//!
+//! ```text
+//! storage   [0 ........................... dim + 2h)      h = k·r
+//! exchange  [═ halo ═][═══ interior ═══][═ halo ═]        valid: ± h
+//! sub-step 0     [──────── ± (k-1)·r ────────]
+//! sub-step 1        [────── ± (k-2)·r ──────]
+//!   ⋮
+//! sub-step k-1          [═══ interior ═══]               valid: ± 0
+//! ```
+//!
+//! Every box returned here keeps all stencil reads **in bounds** of the
+//! rank's storage (each point stays ≥ r away from the storage faces),
+//! so the engines' wrap-free interior kernels compute the fused
+//! sub-steps with exactly the per-point arithmetic of the k = 1 path —
+//! the bitwise-equality contract `rust/tests/temporal.rs` pins.
+//!
+//! Ownership of halo depth: the plan (this module) decides `h = k·r`
+//! once per fused round; [`HaloGrid`] stores it; the exchange packs and
+//! unpacks whatever depth the grids carry (its boxes are depth-generic);
+//! the engines never see the halo at all — they just get shrinking
+//! claimed boxes.  See DESIGN.md §11.
+//!
+//! [`HaloGrid::with_depth`]: crate::grid::halo::HaloGrid::with_depth
+//! [`HaloGrid`]: crate::grid::halo::HaloGrid
+
+use crate::grid::decomp::CartDecomp;
+use crate::grid::shell::{self, Boxes};
+
+/// Maximum fusable depth `k` for one nearest-neighbour exchange: every
+/// *decomposed* axis (process count > 1) must give each rank at least
+/// `k·r` owned layers, or the packed face would reach past the
+/// neighbour's interior into data it does not own.  Undecomposed axes
+/// never exchange — their halos come straight from the global wrap
+/// fill, which is depth-unlimited — so they do not clamp.  Always ≥ 1
+/// (the classic one-step exchange is the floor the k = 1 path already
+/// assumes).
+pub fn max_depth(decomp: &CartDecomp, nz: usize, nx: usize, ny: usize, r: usize) -> usize {
+    let mut cap = usize::MAX;
+    for (p, n) in [(decomp.pz, nz), (decomp.px, nx), (decomp.py, ny)] {
+        if p > 1 {
+            // CartDecomp::split hands out near-equal chunks; the
+            // smallest is the floor quotient
+            cap = cap.min((n / p) / r.max(1));
+        }
+    }
+    cap.max(1)
+}
+
+/// The depth a fused run actually uses: the requested `time_block`
+/// clamped to `[1, max_depth]`.
+pub fn effective_depth(
+    requested: usize,
+    decomp: &CartDecomp,
+    nz: usize,
+    nx: usize,
+    ny: usize,
+    r: usize,
+) -> usize {
+    requested.clamp(1, max_depth(decomp, nz, nx, ny, r))
+}
+
+/// Valid compute box (halo-storage coordinates) of fused sub-step
+/// `s ∈ [0, k)` for a rank with interior `(nz, nx, ny)` and halo
+/// `h = k·r`: the interior grown by `(k-1-s)·r` on every side.
+/// Sub-step `s` reads its input on the next-larger extension
+/// (`substep_box(.., s)` grown by `r`, which sub-step `s-1` wrote — or
+/// the freshly exchanged frame for `s = 0`), and the final sub-step
+/// writes exactly the interior.
+pub fn substep_box(nz: usize, nx: usize, ny: usize, r: usize, k: usize, s: usize) -> [usize; 6] {
+    assert!(s < k, "sub-step {s} out of range for depth {k}");
+    let h = k * r;
+    let e = (k - 1 - s) * r;
+    [h - e, nz + h + e, h - e, nx + h + e, h - e, ny + h + e]
+}
+
+/// The halo-independent part of sub-step 0: the rank interior shrunk by
+/// `r` (every stencil read stays inside the pre-exchange-valid interior
+/// `[h, dim + h)`), in halo-storage coordinates.  `None` when the rank
+/// is too thin to have one — then the whole sub-step-0 box waits for
+/// the exchange.  This is the batch the SDMA exchange overlaps with
+/// (paper Fig. 9), generalizing the k = 1 deep-interior batch.
+pub fn substep0_deep_box(
+    nz: usize,
+    nx: usize,
+    ny: usize,
+    r: usize,
+    k: usize,
+) -> Option<[usize; 6]> {
+    let h = k * r;
+    shell::interior_box(nz, nx, ny, r)
+        .map(|b| [b[0] + h, b[1] + h, b[2] + h, b[3] + h, b[4] + h, b[5] + h])
+}
+
+/// The halo-dependent frame of sub-step 0: its full box minus the deep
+/// part — the ≤ 6 slabs that wait on the exchange
+/// ([`shell::difference_boxes`]).
+pub fn substep0_frame_boxes(nz: usize, nx: usize, ny: usize, r: usize, k: usize) -> Boxes<6, 6> {
+    shell::difference_boxes(
+        substep_box(nz, nx, ny, r, k, 0),
+        substep0_deep_box(nz, nx, ny, r, k),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn substep_boxes_shrink_to_the_interior() {
+        let (nz, nx, ny, r, k) = (10, 12, 14, 2, 3);
+        let h = k * r;
+        for s in 0..k {
+            let b = substep_box(nz, nx, ny, r, k, s);
+            let e = (k - 1 - s) * r;
+            assert_eq!(b, [h - e, nz + h + e, h - e, nx + h + e, h - e, ny + h + e]);
+            // stencil support of every computed point stays in storage
+            assert!(b[0] >= r && b[1] + r <= nz + 2 * h);
+        }
+        // final sub-step writes exactly the interior
+        assert_eq!(substep_box(nz, nx, ny, r, k, k - 1), [h, nz + h, h, nx + h, h, ny + h]);
+        // k = 1 degenerates to the classic single-step box
+        assert_eq!(substep_box(nz, nx, ny, r, 1, 0), [r, nz + r, r, nx + r, r, ny + r]);
+    }
+
+    #[test]
+    fn substep_support_nests_by_one_radius() {
+        // sub-step s+1 reads exactly what sub-step s wrote: its box
+        // grown by r equals the previous sub-step's box
+        let (nz, nx, ny, r, k) = (9, 7, 11, 3, 4);
+        for s in 1..k {
+            let prev = substep_box(nz, nx, ny, r, k, s - 1);
+            let cur = substep_box(nz, nx, ny, r, k, s);
+            for a in 0..3 {
+                assert_eq!(cur[2 * a] - r, prev[2 * a], "s={s} axis={a}");
+                assert_eq!(cur[2 * a + 1] + r, prev[2 * a + 1], "s={s} axis={a}");
+            }
+        }
+    }
+
+    #[test]
+    fn deep_and_frame_partition_substep0() {
+        for (nz, nx, ny, r, k) in [(10, 12, 14, 2, 3), (6, 6, 6, 1, 4), (3, 8, 8, 2, 2)] {
+            let b0 = substep_box(nz, nx, ny, r, k, 0);
+            let (sz, sx, sy) = (nz + 2 * k * r, nx + 2 * k * r, ny + 2 * k * r);
+            let mut hits = vec![0u8; sz * sx * sy];
+            let mut mark = |b: [usize; 6]| {
+                for z in b[0]..b[1] {
+                    for x in b[2]..b[3] {
+                        for y in b[4]..b[5] {
+                            hits[(z * sx + x) * sy + y] += 1;
+                        }
+                    }
+                }
+            };
+            if let Some(d) = substep0_deep_box(nz, nx, ny, r, k) {
+                mark(d);
+            }
+            for f in substep0_frame_boxes(nz, nx, ny, r, k) {
+                mark(f);
+            }
+            for z in 0..sz {
+                for x in 0..sx {
+                    for y in 0..sy {
+                        let inside = (b0[0]..b0[1]).contains(&z)
+                            && (b0[2]..b0[3]).contains(&x)
+                            && (b0[4]..b0[5]).contains(&y);
+                        assert_eq!(
+                            hits[(z * sx + x) * sy + y],
+                            u8::from(inside),
+                            "({nz},{nx},{ny}) r={r} k={k} at ({z},{x},{y})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn depth_clamps_on_decomposed_axes_only() {
+        // (1,1,2) split of ny = 13 at r = 2: min block 6 → depth ≤ 3
+        let d = CartDecomp::new(1, 1, 2);
+        assert_eq!(max_depth(&d, 5, 5, 13, 2), 3);
+        assert_eq!(effective_depth(8, &d, 5, 5, 13, 2), 3);
+        assert_eq!(effective_depth(2, &d, 5, 5, 13, 2), 2);
+        assert_eq!(effective_depth(0, &d, 5, 5, 13, 2), 1);
+        // undecomposed axes never clamp: nz = 5 < 2r·4 is fine at pz = 1
+        assert_eq!(max_depth(&CartDecomp::new(1, 1, 1), 5, 5, 5, 4), usize::MAX);
+        // multiple decomposed axes take the tightest
+        let d = CartDecomp::new(2, 3, 1);
+        assert_eq!(max_depth(&d, 16, 9, 50, 1), 3); // nx/3 = 3 layers
+        // a too-thin decomposed axis still reports 1 (the k = 1 floor)
+        assert_eq!(max_depth(&CartDecomp::new(4, 1, 1), 7, 9, 9, 4), 1);
+    }
+}

@@ -90,6 +90,15 @@ impl HaloGrid {
         Self { nz, nx, ny, h, grid: Grid3::zeros(nz + 2 * h, nx + 2 * h, ny + 2 * h) }
     }
 
+    /// A zeroed grid whose halo is `depth` stencil radii wide
+    /// (`h = depth · r`) — the temporal-blocking frame: one exchange at
+    /// depth `k` feeds `k` fused sub-steps whose valid region shrinks by
+    /// `r` per sub-step (`coordinator::temporal`).  `with_depth(.., r, 1)`
+    /// is exactly the classic one-step halo.
+    pub fn with_depth(nz: usize, nx: usize, ny: usize, r: usize, depth: usize) -> Self {
+        Self::zeros(nz, nx, ny, depth.max(1) * r)
+    }
+
     /// Interior accessor (interior coordinates, halo-offset applied).
     #[inline(always)]
     pub fn get(&self, z: usize, x: usize, y: usize) -> f32 {
@@ -314,6 +323,49 @@ mod tests {
             for x in 0..2 {
                 assert_eq!(a.grid.get(z + h, x + h, h + 4), b.get(z, x, 0), "z={z} x={x}");
                 assert_eq!(b.grid.get(z + h, x + h, 0), a.get(z, x, 3));
+            }
+        }
+    }
+
+    #[test]
+    fn with_depth_scales_the_halo_by_radii() {
+        let g = HaloGrid::with_depth(6, 8, 10, 2, 3);
+        assert_eq!(g.h, 6);
+        assert_eq!(g.grid.shape(), (18, 20, 22));
+        // depth 1 == the classic one-step halo
+        let one = HaloGrid::with_depth(6, 8, 10, 2, 1);
+        assert_eq!(one.h, 2);
+        // depth 0 is clamped to 1 (a zero-width halo cannot feed a sweep)
+        assert_eq!(HaloGrid::with_depth(6, 8, 10, 2, 0).h, 2);
+    }
+
+    #[test]
+    fn deep_halo_exchange_between_neighbours_matches_global() {
+        // the pack/unpack boxes are depth-generic: a 2-radius-deep halo
+        // (h = 2r = 2 at r = 1) moves the first/last 2 interior layers
+        let h = 2;
+        let mut a = HaloGrid::zeros(3, 3, 4, h);
+        let mut b = HaloGrid::zeros(3, 3, 4, h);
+        for z in 0..3 {
+            for x in 0..3 {
+                for y in 0..4 {
+                    a.set(z, x, y, (100 + z * 20 + x * 10 + y) as f32);
+                    b.set(z, x, y, (200 + z * 20 + x * 10 + y) as f32);
+                }
+            }
+        }
+        let to_a = b.pack_face(Axis::Y, Side::Low);
+        let to_b = a.pack_face(Axis::Y, Side::High);
+        a.unpack_halo(Axis::Y, Side::High, &to_a);
+        b.unpack_halo(Axis::Y, Side::Low, &to_b);
+        for z in 0..3 {
+            for x in 0..3 {
+                for d in 0..h {
+                    // a's halo columns y = ny..ny+h hold b(z, x, 0..h)
+                    assert_eq!(a.grid.get(z + h, x + h, h + 4 + d), b.get(z, x, d));
+                    // b's halo columns y = -h..0 hold a(z, x, ny-h..ny)
+                    assert_eq!(b.grid.get(z + h, x + h, d), a.get(z, x, 4 - h + d));
+                }
             }
         }
     }

@@ -171,6 +171,37 @@ pub fn axis_boundary_boxes(nz: usize, nx: usize, ny: usize, axis: usize, r: usiz
     out
 }
 
+/// Disjoint boxes covering `outer` minus `inner` — the general form of
+/// [`boundary_boxes`] (which is exactly `difference_boxes` of the full
+/// grid against [`interior_box`]): two z slabs over the full
+/// cross-section of `outer`, two x slabs over the clipped z range, two
+/// y slabs over the clipped z and x ranges, in that order.  When
+/// `inner` is `None` (or does not intersect `outer`) the single box
+/// `outer` comes back.  The temporal-blocking coordinator uses this to
+/// enumerate the halo-dependent frame of a fused sub-step: the part of
+/// the sub-step's valid trapezoid box that the pre-exchange deep
+/// interior cannot cover (`coordinator::temporal`).
+pub fn difference_boxes(outer: [usize; 6], inner: Option<[usize; 6]>) -> Boxes<6, 6> {
+    let mut out = Boxes::new();
+    let mut push = |b: [usize; 6]| {
+        if b[0] < b[1] && b[2] < b[3] && b[4] < b[5] {
+            out.push(b);
+        }
+    };
+    match inner.and_then(|i| intersect(outer, i)) {
+        None => push(outer),
+        Some(c) => {
+            push([outer[0], c[0], outer[2], outer[3], outer[4], outer[5]]);
+            push([c[1], outer[1], outer[2], outer[3], outer[4], outer[5]]);
+            push([c[0], c[1], outer[2], c[2], outer[4], outer[5]]);
+            push([c[0], c[1], c[3], outer[3], outer[4], outer[5]]);
+            push([c[0], c[1], c[2], c[3], outer[4], c[4]]);
+            push([c[0], c[1], c[2], c[3], c[5], outer[5]]);
+        }
+    }
+    out
+}
+
 /// Intersection of two `[z0, z1, x0, x1, y0, y1]` boxes, `None` if
 /// empty — used to clip the shell/interior split to a claimed region.
 pub fn intersect(a: [usize; 6], b: [usize; 6]) -> Option<[usize; 6]> {
@@ -304,6 +335,61 @@ mod tests {
         assert_eq!(axis_interior_box(10, 11, 12, 2, 3), Some([0, 10, 0, 11, 3, 9]));
         assert_eq!(axis_interior_box(6, 11, 12, 0, 3), None);
         assert_eq!(axis_boundary_boxes(6, 11, 12, 0, 3).len(), 2);
+    }
+
+    #[test]
+    fn difference_boxes_partition_outer_minus_inner() {
+        for (outer, inner) in [
+            ([2usize, 14, 1, 9, 3, 12], Some([4usize, 10, 2, 7, 5, 9])),
+            ([0, 8, 0, 8, 0, 8], Some([1, 7, 1, 7, 1, 7])),
+            ([0, 8, 0, 8, 0, 8], Some([0, 8, 0, 8, 0, 8])), // inner == outer
+            ([0, 8, 0, 8, 0, 8], None),                     // no inner
+            ([0, 8, 0, 8, 0, 8], Some([10, 12, 0, 8, 0, 8])), // disjoint inner
+            ([3, 6, 3, 6, 3, 6], Some([0, 12, 0, 12, 0, 12])), // inner ⊇ outer
+        ] {
+            let (oz, ox, oy) = (outer[1], outer[3], outer[5]);
+            let mut hits = vec![0u8; oz * ox * oy];
+            for b in difference_boxes(outer, inner) {
+                for z in b[0]..b[1] {
+                    for x in b[2]..b[3] {
+                        for y in b[4]..b[5] {
+                            hits[(z * ox + x) * oy + y] += 1;
+                        }
+                    }
+                }
+            }
+            let clipped = inner.and_then(|i| intersect(outer, i));
+            for z in 0..oz {
+                for x in 0..ox {
+                    for y in 0..oy {
+                        let in_outer = (outer[0]..outer[1]).contains(&z)
+                            && (outer[2]..outer[3]).contains(&x)
+                            && (outer[4]..outer[5]).contains(&y);
+                        let in_inner = clipped.is_some_and(|c| {
+                            (c[0]..c[1]).contains(&z)
+                                && (c[2]..c[3]).contains(&x)
+                                && (c[4]..c[5]).contains(&y)
+                        });
+                        let want = u8::from(in_outer && !in_inner);
+                        assert_eq!(
+                            hits[(z * ox + x) * oy + y],
+                            want,
+                            "outer={outer:?} inner={inner:?} at ({z},{x},{y})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn difference_boxes_generalize_boundary_boxes() {
+        // boundary_boxes is exactly the full-grid difference against the
+        // interior box — same slabs, same order
+        let (nz, nx, ny, r) = (12, 9, 15, 3);
+        let via_diff = difference_boxes([0, nz, 0, nx, 0, ny], interior_box(nz, nx, ny, r));
+        let direct = boundary_boxes(nz, nx, ny, r);
+        assert_eq!(via_diff.as_slice(), direct.as_slice());
     }
 
     #[test]

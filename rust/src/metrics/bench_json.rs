@@ -7,13 +7,17 @@
 //! the trajectory stays machine-readable across the PR sequence.
 //! Renderer and validator are hand-rolled (no serde; DESIGN.md §7).
 //!
-//! v2 (this PR) extends the document with `rtm_entries`: per-engine RTM
-//! step throughput, so the trajectory covers the application workload,
-//! not just raw sweeps.
+//! v2 extended the document with `rtm_entries`: per-engine RTM step
+//! throughput, so the trajectory covers the application workload, not
+//! just raw sweeps.  v3 (this PR) adds a `time_block` field to every
+//! row — the temporal-blocking depth the workload ran at (1 = classic
+//! stepping) — so the fused-sweep trajectory is diffable per depth
+//! (`scripts/bench_diff.py`).
 
 /// Schema tag carried in the document; bump on breaking field changes.
 /// v1 → v2: added the `rtm_entries` array.
-pub const SCHEMA: &str = "mmstencil.bench_engines.v2";
+/// v2 → v3: added `time_block` to every sweep and RTM row.
+pub const SCHEMA: &str = "mmstencil.bench_engines.v3";
 
 /// One engine × sweep-workload measurement.
 #[derive(Clone, Debug)]
@@ -28,6 +32,10 @@ pub struct EngineBench {
     pub n: usize,
     /// Parallelism the engine ran with (1 for serial engines).
     pub threads: usize,
+    /// Temporal-blocking depth: sweeps fused per measured call
+    /// (`Engine::apply3_fused`); 1 = one classic sweep.  Throughput
+    /// counts all `time_block · n³` updates.
+    pub time_block: usize,
     /// Median throughput in million stencil outputs per second.
     pub mcells_per_s: f64,
     /// Heap allocations observed during one post-warm-up sweep
@@ -51,6 +59,10 @@ pub struct RtmBench {
     pub n: usize,
     /// Worker-parallelism of the step.
     pub threads: usize,
+    /// Temporal-blocking depth of the measured call: 1 = one classic
+    /// `step_with`, > 1 = a `step_k_with` fused call (throughput counts
+    /// all `time_block · n³` updates).
+    pub time_block: usize,
     /// Median cell-update throughput of one step, in millions/s.
     pub mcells_per_s: f64,
     /// Heap allocations during one post-warm-up step.
@@ -81,13 +93,14 @@ pub fn render(entries: &[EngineBench], rtm_entries: &[RtmBench]) -> String {
     for (i, e) in entries.iter().enumerate() {
         s.push_str(&format!(
             "    {{\"engine\": \"{}\", \"pattern\": \"{}\", \"radius\": {}, \"n\": {}, \
-             \"threads\": {}, \"mcells_per_s\": {:.3}, \"allocs_per_sweep\": {}, \
-             \"arena_grows_per_sweep\": {}}}{}\n",
+             \"threads\": {}, \"time_block\": {}, \"mcells_per_s\": {:.3}, \
+             \"allocs_per_sweep\": {}, \"arena_grows_per_sweep\": {}}}{}\n",
             esc(&e.engine),
             esc(&e.pattern),
             e.radius,
             e.n,
             e.threads,
+            e.time_block,
             finite(e.mcells_per_s),
             e.allocs_per_sweep,
             e.arena_grows_per_sweep,
@@ -99,11 +112,13 @@ pub fn render(entries: &[EngineBench], rtm_entries: &[RtmBench]) -> String {
     for (i, e) in rtm_entries.iter().enumerate() {
         s.push_str(&format!(
             "    {{\"engine\": \"{}\", \"medium\": \"{}\", \"n\": {}, \"threads\": {}, \
-             \"mcells_per_s\": {:.3}, \"allocs_per_step\": {}, \"arena_grows_per_step\": {}}}{}\n",
+             \"time_block\": {}, \"mcells_per_s\": {:.3}, \"allocs_per_step\": {}, \
+             \"arena_grows_per_step\": {}}}{}\n",
             esc(&e.engine),
             esc(&e.medium),
             e.n,
             e.threads,
+            e.time_block,
             finite(e.mcells_per_s),
             e.allocs_per_step,
             e.arena_grows_per_step,
@@ -155,7 +170,13 @@ pub fn validate(s: &str) -> Result<(usize, usize), String> {
             return Err(format!("key {k} count mismatch (expected {rtms})"));
         }
     }
-    for k in ["\"engine\":", "\"n\":", "\"threads\":", "\"mcells_per_s\":"] {
+    for k in [
+        "\"engine\":",
+        "\"n\":",
+        "\"threads\":",
+        "\"time_block\":",
+        "\"mcells_per_s\":",
+    ] {
         if s.matches(k).count() != sweeps + rtms {
             return Err(format!("key {k} count mismatch (expected {})", sweeps + rtms));
         }
@@ -175,6 +196,7 @@ mod tests {
                 radius: 4,
                 n: 96,
                 threads: 1,
+                time_block: 1,
                 mcells_per_s: 123.456,
                 allocs_per_sweep: 2,
                 arena_grows_per_sweep: 0,
@@ -185,6 +207,7 @@ mod tests {
                 radius: 1,
                 n: 96,
                 threads: 8,
+                time_block: 4,
                 mcells_per_s: 77.0,
                 allocs_per_sweep: 31,
                 arena_grows_per_sweep: 0,
@@ -198,6 +221,7 @@ mod tests {
             medium: "vti".into(),
             n: 96,
             threads: 8,
+            time_block: 1,
             mcells_per_s: 450.5,
             allocs_per_step: 12,
             arena_grows_per_step: 0,
@@ -208,10 +232,11 @@ mod tests {
     fn render_validates() {
         let doc = render(&sample(), &rtm_sample());
         assert_eq!(validate(&doc), Ok((2, 1)));
-        assert!(doc.contains("\"schema\": \"mmstencil.bench_engines.v2\""));
+        assert!(doc.contains("\"schema\": \"mmstencil.bench_engines.v3\""));
         assert!(doc.contains("\"mcells_per_s\": 123.456"));
         assert!(doc.contains("\"medium\": \"vti\""));
         assert!(doc.contains("\"allocs_per_step\": 12"));
+        assert!(doc.contains("\"time_block\": 4"));
     }
 
     #[test]
@@ -222,10 +247,11 @@ mod tests {
     #[test]
     fn tampered_documents_fail() {
         let doc = render(&sample(), &rtm_sample());
-        assert!(validate(&doc.replace("bench_engines.v2", "v1")).is_err());
+        assert!(validate(&doc.replace("bench_engines.v3", "v2")).is_err());
         assert!(validate(&doc.replace("\"radius\":", "\"r\":")).is_err());
         assert!(validate(&doc.replace("\"allocs_per_step\":", "\"a\":")).is_err());
         assert!(validate(&doc.replace("\"rtm_entries\":", "\"rtm\":")).is_err());
+        assert!(validate(&doc.replacen("\"time_block\":", "\"tb\":", 1)).is_err());
         assert!(validate(doc.trim_end().trim_end_matches('}')).is_err());
     }
 

@@ -13,6 +13,7 @@
 use super::media::TtiMedia;
 use crate::coordinator::pool;
 use crate::grid::Grid3;
+use crate::stencil::engine::AxisPass;
 use crate::stencil::Engine;
 
 /// Leapfrog time levels of the TTI field pair (p, q).
@@ -141,18 +142,31 @@ impl Derivs {
     /// Fill all six derivative grids of `f` (mirror of
     /// `ref.py::tti_h1`'s derivative set) through an explicit engine:
     /// eight 1-D axis passes (three second-derivative, five
-    /// first-derivative) dispatched over the persistent runtime.
+    /// first-derivative) dispatched over the persistent runtime as
+    /// **two** batched fan-outs — the five passes reading `f` share one
+    /// barrier, the three mixed-derivative second legs (reading the
+    /// fresh ∂z/∂x intermediates) share another.  Bitwise identical to
+    /// the eight sequential calls.
     pub fn compute_with(&mut self, f: &Grid3, w2: &[f32], w1: &[f32], eng: &Engine) {
-        eng.d2_axis_into(f, w2, 1, &mut self.dxx);
-        eng.d2_axis_into(f, w2, 2, &mut self.dyy);
-        eng.d2_axis_into(f, w2, 0, &mut self.dzz);
-        // ∂z then ∂x / ∂y of it
-        eng.d1_axis_into(f, w1, 0, &mut self.d1);
-        eng.d1_axis_into(&self.d1, w1, 1, &mut self.dxz);
-        eng.d1_axis_into(&self.d1, w1, 2, &mut self.dyz);
-        // ∂x then ∂y of it
-        eng.d1_axis_into(f, w1, 1, &mut self.d1b);
-        eng.d1_axis_into(&self.d1b, w1, 2, &mut self.dxy);
+        let Derivs { dxx, dyy, dzz, dxy, dyz, dxz, d1, d1b } = self;
+        // level 1: everything that reads only f
+        let mut first = [
+            AxisPass { src: f, band: w2, axis: 1, out: &mut *dxx },
+            AxisPass { src: f, band: w2, axis: 2, out: &mut *dyy },
+            AxisPass { src: f, band: w2, axis: 0, out: &mut *dzz },
+            AxisPass { src: f, band: w1, axis: 0, out: &mut *d1 }, // ∂z
+            AxisPass { src: f, band: w1, axis: 1, out: &mut *d1b }, // ∂x
+        ];
+        eng.band_axes_into(&mut first);
+        // level 2: the mixed derivatives' second legs (∂x/∂y of ∂z f,
+        // ∂y of ∂x f); `first`'s borrows of d1/d1b ended with its last
+        // use above, so the shared reborrows below are clean
+        let mut second = [
+            AxisPass { src: &*d1, band: w1, axis: 1, out: &mut *dxz },
+            AxisPass { src: &*d1, band: w1, axis: 2, out: &mut *dyz },
+            AxisPass { src: &*d1b, band: w1, axis: 2, out: &mut *dxy },
+        ];
+        eng.band_axes_into(&mut second);
     }
 
     /// h1 = Σ trig-weighted derivatives; h2 = laplacian − h1; written
@@ -215,9 +229,11 @@ pub fn step(
 }
 
 /// One TTI leapfrog step through an explicit [`Engine`]: 16 axis
-/// passes (eight per field) fan over the persistent runtime, then the
-/// H1/H2 and leapfrog pointwise stages run through the pool chunk
-/// helpers.  Bitwise-stable for any `eng.threads`.
+/// passes (eight per field) fan over the persistent runtime in four
+/// batched dispatches (two dependency levels per field — see
+/// [`Derivs::compute_with`]), then the H1/H2 and leapfrog pointwise
+/// stages run through the pool chunk helpers.  Bitwise-stable for any
+/// `eng.threads`.
 pub fn step_with(
     state: &mut TtiState,
     m: &TtiMedia,
@@ -263,6 +279,27 @@ pub fn step_with(
     }
     std::mem::swap(&mut state.p, &mut state.p_prev);
     std::mem::swap(&mut state.q, &mut state.q_prev);
+}
+
+/// `k` fused TTI leapfrog steps — the boundary-free `[runtime]
+/// time_block` consumer, mirroring
+/// [`vti::step_k_with`](super::vti::step_k_with): bitwise identical to
+/// `k` calls of [`step_with`]; imaging shots stay at `k = 1` because
+/// the sponge/injection/recording are per-step boundary operations
+/// (paper §III-B).
+pub fn step_k_with(
+    state: &mut TtiState,
+    m: &TtiMedia,
+    trig: &TtiTrig,
+    w2: &[f32],
+    w1: &[f32],
+    eng: &Engine,
+    s: &mut TtiScratch,
+    k: usize,
+) {
+    for _ in 0..k.max(1) {
+        step_with(state, m, trig, w2, w1, eng, s);
+    }
 }
 
 #[cfg(test)]
@@ -372,6 +409,33 @@ mod tests {
         for &workers in &WORKER_COUNTS[1..] {
             let b = run(workers);
             assert_eq!(a.data, b.data, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn fused_steps_are_bitwise_the_stepped_loop() {
+        let (nz, nx, ny) = (10, 12, 14);
+        let m = fixtures::tti_media(nz, nx, ny);
+        let trig = TtiTrig::new(&m);
+        let w2 = second_deriv(4);
+        let w1 = first_deriv(4);
+        let eng = Engine::new(EngineKind::MatrixUnit).with_threads(PAR_WORKERS);
+        for k in [2usize, 3] {
+            let mk = || {
+                let mut st = TtiState::zeros(nz, nx, ny);
+                st.inject(5, 6, 7, 1.0);
+                st
+            };
+            let mut fused = mk();
+            let mut sc = TtiScratch::new(nz, nx, ny);
+            step_k_with(&mut fused, &m, &trig, &w2, &w1, &eng, &mut sc, k);
+            let mut looped = mk();
+            let mut sc2 = TtiScratch::new(nz, nx, ny);
+            for _ in 0..k {
+                step_with(&mut looped, &m, &trig, &w2, &w1, &eng, &mut sc2);
+            }
+            assert_eq!(fused.p.data, looped.p.data, "k={k}");
+            assert_eq!(fused.q.data, looped.q.data, "k={k}");
         }
     }
 

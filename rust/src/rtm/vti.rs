@@ -23,6 +23,7 @@
 use super::media::VtiMedia;
 use crate::coordinator::pool;
 use crate::grid::Grid3;
+use crate::stencil::engine::AxisPass;
 use crate::stencil::Engine;
 
 /// The two leapfrog time levels of both stress components.
@@ -126,10 +127,15 @@ pub fn step_with(state: &mut VtiState, m: &VtiMedia, w2: &[f32], eng: &Engine, s
     assert_eq!(m.vp2dt2.shape(), (nz, nx, ny));
     let threads = eng.threads;
 
-    // xy-laplacian of σH and ∂zz of σV, each as 1D axis passes
-    eng.d2_axis_into(&state.sh, w2, 1, &mut s.lap);
-    eng.d2_axis_into(&state.sh, w2, 2, &mut s.tmp);
-    eng.d2_axis_into(&state.sv, w2, 0, &mut s.dzz);
+    // xy-laplacian of σH and ∂zz of σV as 1D axis passes — the three
+    // passes are independent, so they run as one batched dispatch (one
+    // runtime barrier instead of three; bitwise the sequential calls)
+    let mut passes = [
+        AxisPass { src: &state.sh, band: w2, axis: 1, out: &mut s.lap },
+        AxisPass { src: &state.sh, band: w2, axis: 2, out: &mut s.tmp },
+        AxisPass { src: &state.sv, band: w2, axis: 0, out: &mut s.dzz },
+    ];
+    eng.band_axes_into(&mut passes);
     {
         let lap = &mut s.lap.data;
         let tmp = &s.tmp.data;
@@ -172,6 +178,32 @@ pub fn step_with(state: &mut VtiState, m: &VtiMedia, w2: &[f32], eng: &Engine, s
     }
     std::mem::swap(&mut state.sh, &mut state.sh_prev);
     std::mem::swap(&mut state.sv, &mut state.sv_prev);
+}
+
+/// `k` fused leapfrog steps through an explicit [`Engine`] — the
+/// `[runtime] time_block` consumer for **boundary-free** (periodic)
+/// propagation: the scratch grids and both time levels stay hot across
+/// the fused sub-steps and no per-step host work intervenes.  Bitwise
+/// identical to `k` calls of [`step_with`] for any `k`, engine, and
+/// worker count (`rust/tests/temporal.rs`).
+///
+/// Imaging shots cannot use `k > 1`: the sponge boundary, source
+/// injection, and receiver recording are per-step operations, which is
+/// exactly the paper's §III-B point that boundary handling constrains
+/// the depth of temporal blocking — see
+/// [`RtmConfig::time_block`](super::driver::RtmConfig::time_block) and
+/// DESIGN.md §11.
+pub fn step_k_with(
+    state: &mut VtiState,
+    m: &VtiMedia,
+    w2: &[f32],
+    eng: &Engine,
+    s: &mut VtiScratch,
+    k: usize,
+) {
+    for _ in 0..k.max(1) {
+        step_with(state, m, w2, eng, s);
+    }
 }
 
 #[cfg(test)]
@@ -313,6 +345,37 @@ mod tests {
                     (e / eo - 1.0).abs() < 1e-4,
                     "{kind:?} workers={workers}: energy {e} vs oracle {eo}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_steps_are_bitwise_the_stepped_loop() {
+        // step_k_with(k) == k × step_with, bit for bit, per engine and
+        // worker count — the RTM half of the time_block contract
+        let (nz, nx, ny) = (14, 16, 18);
+        let m = fixtures::vti_media(nz, nx, ny);
+        let w2 = second_deriv(4);
+        for kind in EngineKind::ALL {
+            for &workers in &WORKER_COUNTS {
+                let eng = Engine::new(kind).with_threads(workers);
+                let mk = || {
+                    let mut st = VtiState::zeros(nz, nx, ny);
+                    st.inject(7, 8, 9, 1.0);
+                    st
+                };
+                for k in [1usize, 2, 4] {
+                    let mut fused = mk();
+                    let mut sc = VtiScratch::new(nz, nx, ny);
+                    step_k_with(&mut fused, &m, &w2, &eng, &mut sc, k);
+                    let mut looped = mk();
+                    let mut sc2 = VtiScratch::new(nz, nx, ny);
+                    for _ in 0..k {
+                        step_with(&mut looped, &m, &w2, &eng, &mut sc2);
+                    }
+                    assert_eq!(fused.sh.data, looped.sh.data, "{kind:?} w={workers} k={k}");
+                    assert_eq!(fused.sv.data, looped.sv.data, "{kind:?} w={workers} k={k}");
+                }
             }
         }
     }

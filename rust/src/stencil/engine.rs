@@ -17,7 +17,12 @@
 //! [`TileViewMut`](crate::grid::par::TileViewMut) and runs the same
 //! per-region kernel the serial path runs.  Results are therefore
 //! **bitwise identical for any `threads` value** — the property the
-//! RTM engine-equivalence suite pins.
+//! RTM engine-equivalence suite pins.  The fused entry points extend
+//! the contract: [`Engine::apply3_fused`] (k ping-ponged sweeps, one
+//! arena intermediate) is bitwise the k-chained sweeps, and
+//! [`Engine::band_axes_into`] (independent axis passes batched into one
+//! runtime dispatch — the RTM propagators' barrier-fusion path) is
+//! bitwise the sequential per-pass calls.
 //!
 //! ```
 //! use mmstencil::grid::Grid3;
@@ -32,7 +37,7 @@
 
 use super::matrix_unit::BlockDims;
 use super::{matrix_unit, naive, simd, StencilSpec};
-use crate::coordinator::runtime;
+use crate::coordinator::{runtime, scratch};
 use crate::grid::par::{GridSrc, ParGrid3, TileViewMut};
 use crate::grid::Grid3;
 
@@ -161,6 +166,30 @@ impl Engine {
         out
     }
 
+    /// `k` fused periodic sweeps of `spec` over `g` — the
+    /// temporal-blocking form of [`apply3`](Self::apply3) for a single
+    /// shared-memory grid (no halos to pay, so the fusion win is purely
+    /// allocation traffic and destination reuse): intermediate levels
+    /// ping-pong through **one** arena-checked-out grid instead of
+    /// allocating and zeroing a fresh grid per sweep.  Bitwise equal to
+    /// `k` chained [`apply3`](Self::apply3) calls for any `k` and any
+    /// worker count (same z-slab partition, same per-region kernels).
+    pub fn apply3_fused<S: GridSrc>(&self, spec: &StencilSpec, g: &S, k: usize) -> Grid3 {
+        assert!(k >= 1, "apply3_fused needs k >= 1");
+        let mut out = self.apply3(spec, g);
+        if k > 1 {
+            let (nz, nx, ny) = g.shape();
+            let mut other = scratch::grid(nz, nx, ny);
+            for _ in 1..k {
+                // every slab claim is fully overwritten, so the stale
+                // arena contents are never observable
+                self.fan_zslabs(&mut *other, |view| self.apply3_region(spec, &out, view));
+                std::mem::swap(&mut out, &mut *other);
+            }
+        }
+        out
+    }
+
     /// Compute the claimed region of `out` from `g` — the per-tile task
     /// body of the parallel coordinator (`coordinator::driver`).  Runs
     /// serially inside the claim; parallelism is the caller's tiling.
@@ -218,6 +247,101 @@ impl Engine {
             }
         });
     }
+
+    /// Run several **independent** 1-D band passes as one batch: all
+    /// slab tasks of every pass fan over the runtime in a single
+    /// dispatch, so a propagator step pays one barrier per dependency
+    /// level instead of one per pass (a VTI step's three derivative
+    /// passes become one barrier; a TTI field's eight become two).
+    ///
+    /// Passes must be independent: no pass's `out` may be another
+    /// pass's `src` (debug-asserted).  Each pass gets exactly the slab
+    /// partition and kernels of [`d1_axis_into`](Self::d1_axis_into) /
+    /// [`d2_axis_into`](Self::d2_axis_into), and the serial path runs
+    /// the passes in order — results are **bitwise identical** to
+    /// sequential per-pass calls for any worker count.
+    pub fn band_axes_into(&self, passes: &mut [AxisPass<'_>]) {
+        #[cfg(debug_assertions)]
+        {
+            let srcs: Vec<*const f32> = passes.iter().map(|p| p.src.data.as_ptr()).collect();
+            for p in passes.iter() {
+                let out_ptr: *const f32 = p.out.data.as_ptr();
+                assert!(
+                    !srcs.contains(&out_ptr),
+                    "band_axes_into passes must be independent (an out aliases a src)"
+                );
+            }
+        }
+        let vz = self.dims.vz.max(1);
+        struct Job<'a> {
+            src: &'a Grid3,
+            band: &'a [f32],
+            axis: usize,
+            pg: ParGrid3<'a>,
+            nz: usize,
+            nx: usize,
+            ny: usize,
+            first_task: usize,
+        }
+        let mut jobs: Vec<Job<'_>> = Vec::with_capacity(passes.len());
+        let mut total = 0usize;
+        for p in passes.iter_mut() {
+            assert!(p.axis < 3, "axis must be 0 (z), 1 (x), or 2 (y)");
+            assert_eq!(p.band.len() % 2, 1, "band must have odd length");
+            assert_eq!(p.src.shape(), p.out.shape(), "band_axes_into shape mismatch");
+            let (nz, nx, ny) = p.src.shape();
+            jobs.push(Job {
+                src: p.src,
+                band: p.band,
+                axis: p.axis,
+                pg: ParGrid3::new(p.out),
+                nz,
+                nx,
+                ny,
+                first_task: total,
+            });
+            total += nz.div_ceil(vz);
+        }
+        let jobs = &jobs;
+        let task = |i: usize| {
+            let j = jobs
+                .iter()
+                .rev()
+                .find(|j| j.first_task <= i)
+                .expect("task index maps to a job");
+            let s = i - j.first_task;
+            let z0 = s * vz;
+            let z1 = (z0 + vz).min(j.nz);
+            let mut view = j.pg.view(z0, z1, 0, j.nx, 0, j.ny);
+            match self.kind {
+                EngineKind::Naive => naive::d_axis_region(j.band, j.axis, j.src, &mut view),
+                EngineKind::Simd => simd::d_axis_region(j.band, j.axis, j.src, &mut view),
+                EngineKind::MatrixUnit => {
+                    matrix_unit::d_axis_region(j.band, j.axis, j.src, &mut view, self.dims);
+                }
+            }
+        };
+        if self.threads <= 1 || total <= 1 {
+            for i in 0..total {
+                task(i);
+            }
+        } else {
+            runtime::global().run(self.threads, total, &task);
+        }
+    }
+}
+
+/// One 1-D band pass of a fused batch — see [`Engine::band_axes_into`].
+pub struct AxisPass<'a> {
+    /// Input grid (periodic along `axis`).
+    pub src: &'a Grid3,
+    /// Band weights, odd length 2r+1, centre at index r.
+    pub band: &'a [f32],
+    /// Axis the band runs along: 0 = z, 1 = x, 2 = y.
+    pub axis: usize,
+    /// Output grid, fully overwritten; must not alias any `src` in the
+    /// same batch.
+    pub out: &'a mut Grid3,
 }
 
 #[cfg(test)]
@@ -272,6 +396,65 @@ mod tests {
             for threads in [2, 5] {
                 let got = Engine::new(kind).with_threads(threads).apply3(&spec, &g);
                 assert_eq!(got.data, want.data, "{kind:?} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_sweeps_are_bitwise_the_chained_sweeps() {
+        // apply3_fused(k) must equal k chained apply3 calls bit-for-bit:
+        // same z-slab partition, same per-region kernels, only the
+        // intermediate allocations differ
+        let spec = StencilSpec::star3d(2);
+        let g = Grid3::random(10, 14, 18, 77);
+        for kind in EngineKind::ALL {
+            for threads in [1, 3] {
+                let eng = Engine::new(kind).with_threads(threads);
+                let one = eng.apply3(&spec, &g);
+                assert_eq!(eng.apply3_fused(&spec, &g, 1).data, one.data, "{kind:?} k=1");
+                for k in [2usize, 4] {
+                    let got = eng.apply3_fused(&spec, &g, k);
+                    let mut want = one.clone();
+                    for _ in 1..k {
+                        want = eng.apply3(&spec, &want);
+                    }
+                    assert_eq!(got.data, want.data, "{kind:?} threads={threads} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_axis_passes_are_bitwise_the_sequential_passes() {
+        // one band_axes_into dispatch == the per-pass calls, bit-for-bit
+        let g1 = Grid3::random(9, 11, 13, 21);
+        let g2 = Grid3::random(9, 11, 13, 22);
+        let w2 = second_deriv(4);
+        let w1 = first_deriv(3);
+        for kind in EngineKind::ALL {
+            for threads in [1, 4] {
+                let eng = Engine::new(kind).with_threads(threads);
+                let want = [
+                    eng.d2_axis(&g1, &w2, 1),
+                    eng.d2_axis(&g1, &w2, 2),
+                    eng.d2_axis(&g2, &w2, 0),
+                    eng.d1_axis(&g1, &w1, 0),
+                ];
+                let (nz, nx, ny) = g1.shape();
+                let mut outs: Vec<Grid3> = (0..4).map(|_| Grid3::zeros(nz, nx, ny)).collect();
+                {
+                    let [a, b, c, d] = &mut outs[..] else { unreachable!() };
+                    let mut passes = [
+                        AxisPass { src: &g1, band: &w2, axis: 1, out: a },
+                        AxisPass { src: &g1, band: &w2, axis: 2, out: b },
+                        AxisPass { src: &g2, band: &w2, axis: 0, out: c },
+                        AxisPass { src: &g1, band: &w1, axis: 0, out: d },
+                    ];
+                    eng.band_axes_into(&mut passes);
+                }
+                for (got, want) in outs.iter().zip(&want) {
+                    assert_eq!(got.data, want.data, "{kind:?} threads={threads}");
+                }
             }
         }
     }

@@ -90,6 +90,39 @@ fn multirank_overlapped_step_matches_naive() {
 }
 
 #[test]
+fn fused_multirank_sweep_is_bitwise_the_classic_path() {
+    // the temporal-blocking path under the aliasing model: kk·r-deep
+    // halo claims, arena-checked-out double buffers, trapezoid
+    // sub-step views ping-ponging between the two storages — exactly
+    // the concurrency Miri must accept.  Depth comes from
+    // MMSTENCIL_TIME_BLOCK (default 2 so the fused path is always
+    // exercised; CI adds an env-selected depth-3 run).
+    let k: usize = std::env::var("MMSTENCIL_TIME_BLOCK")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
+    #[cfg(miri)]
+    let (n, steps, decomp) = (6, 2, CartDecomp::new(1, 1, 2));
+    #[cfg(not(miri))]
+    let (n, steps, decomp) = (12, 4, CartDecomp::new(1, 2, 2));
+    let spec = StencilSpec::star3d(1);
+    let g = Grid3::random(n, n, n, 0xF5D);
+    let classic = Driver::new(2, Platform::paper());
+    let (want, _) = classic.multirank_sweep(&spec, &g, &decomp, &Backend::sdma(), steps);
+    let fused = Driver::new(2, Platform::paper()).with_time_block(k);
+    for backend in [Backend::sdma(), Backend::mpi()] {
+        let (got, stats) = fused.multirank_sweep(&spec, &g, &decomp, &backend, steps);
+        assert_eq!(
+            got.as_slice(),
+            want.as_slice(),
+            "time_block={k} {} diverged",
+            backend.name()
+        );
+        assert!(stats.comm_rounds <= steps as u64);
+    }
+}
+
+#[test]
 fn parallel_matrix_unit_sweep_is_bitwise_serial_with_exact_counts() {
     // the PR 3 parallel matrix-unit sweep: z-slab TileViewMut claims on
     // the persistent runtime, per-task Counts merged by reduction.

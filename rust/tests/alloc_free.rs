@@ -118,4 +118,29 @@ fn matrix_unit_hot_path_allocation_contract() {
         "RTM step allocations scale with grid size ({small_step} vs {big_step})"
     );
     assert!(big_step <= 96, "steady-state RTM step allocated {big_step} times");
+
+    // ---- fused stepping keeps the O(1)-per-sub-step contract ----
+    // step_k_with(k) is k fused sub-steps sharing warm scratch; its
+    // allocation events must stay within k × the single-step budget
+    // (plus harness slack), never grow with depth beyond that.  Depth
+    // is env-selected (default 2): CI runs this suite once more with
+    // MMSTENCIL_TIME_BLOCK=3 on top of the default run.
+    let k: usize = std::env::var("MMSTENCIL_TIME_BLOCK")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2)
+        .max(1);
+    let n = 16;
+    let m = media::layered_vti(n, n, n, 10.0, &media::default_layers());
+    let mut st = vti::VtiState::zeros(n, n, n);
+    let mut sc = vti::VtiScratch::new(n, n, n);
+    st.inject(8, 8, 8, 1.0);
+    // warm-up: arenas, runtime queues, claim-ledger capacity
+    vti::step_k_with(&mut st, &m, &w2, &eng, &mut sc, k);
+    let single = min_events_during(3, || vti::step_with(&mut st, &m, &w2, &eng, &mut sc));
+    let fused = min_events_during(3, || vti::step_k_with(&mut st, &m, &w2, &eng, &mut sc, k));
+    assert!(
+        fused <= k as u64 * single + 24,
+        "fused step (k={k}) allocated {fused}, single step {single}"
+    );
 }

@@ -1,0 +1,110 @@
+//! Temporal-blocking contract suite (the PR 5 tentpole's acceptance
+//! tests): deep-halo fused multirank sweeps must be **bitwise** the
+//! classic one-exchange-per-step path for any depth, worker count,
+//! engine, and backend — while performing exactly one transport round
+//! per `k` fused steps.
+//!
+//! The transport-round assertions read the process-global counter
+//! (`exchange::transport_rounds`), so every exchange-touching check
+//! lives in ONE test fn (test binaries are separate processes, but
+//! tests inside a binary run concurrently — a second exchange-touching
+//! test here would race the counter; same pattern as
+//! `rust/tests/alloc_free.rs`).
+
+use mmstencil::coordinator::driver::{multirank_sweep, multirank_sweep_fused, Driver};
+use mmstencil::coordinator::exchange::{self, Backend};
+use mmstencil::coordinator::temporal;
+use mmstencil::coordinator::tiles::Strategy;
+use mmstencil::grid::{CartDecomp, Grid3};
+use mmstencil::simulator::Platform;
+use mmstencil::stencil::{Engine, EngineKind, StencilSpec};
+
+#[test]
+fn fused_multirank_is_bitwise_the_classic_path_with_one_exchange_per_k() {
+    let p = Platform::paper();
+    let spec = StencilSpec::star3d(2);
+    let g = Grid3::random(12, 12, 12, 0xA11);
+    let d = CartDecomp::new(1, 2, 2);
+    let steps = 4usize;
+
+    // classic oracle: one transport round per step, by construction
+    let before = exchange::transport_rounds();
+    let (want, base) = multirank_sweep(&spec, &g, &d, &Backend::sdma(), steps, 4, &p);
+    assert_eq!(base.comm_rounds, steps as u64);
+    assert_eq!(exchange::transport_rounds() - before, steps as u64);
+
+    // fused path: k ∈ {1, 2, 4} × worker counts × backends, all bitwise
+    // equal to the oracle; rounds collapse to ⌈steps / k_eff⌉ (k = 4 is
+    // clamped to the decomposition's max depth 3 — 12/2 owned layers at
+    // r = 2 per decomposed axis)
+    assert_eq!(temporal::max_depth(&d, 12, 12, 12, 2), 3);
+    for k in [1usize, 2, 4] {
+        let k_eff = temporal::effective_depth(k, &d, 12, 12, 12, 2);
+        // rounds = number of kk-sized chunks the run splits steps into
+        let mut want_rounds = 0u64;
+        let mut left = steps;
+        while left > 0 {
+            left -= k_eff.min(left);
+            want_rounds += 1;
+        }
+        for threads in [1usize, 2, 5] {
+            for backend in [Backend::sdma(), Backend::mpi()] {
+                let before = exchange::transport_rounds();
+                let (got, stats) =
+                    multirank_sweep_fused(&spec, &g, &d, &backend, steps, threads, &p, k);
+                let rounds = exchange::transport_rounds() - before;
+                assert_eq!(
+                    got.data,
+                    want.data,
+                    "k={k} threads={threads} {} diverged from the classic path",
+                    backend.name()
+                );
+                assert_eq!(stats.comm_rounds, want_rounds, "k={k} (k_eff={k_eff})");
+                assert_eq!(rounds, want_rounds, "transport counter, k={k}");
+                assert!(stats.exchanged_bytes > 0);
+            }
+        }
+    }
+
+    // engine-agnostic: a matrix-unit Driver with time_block routes the
+    // same fused path and stays bitwise vs its own classic path
+    let mu = Engine::new(EngineKind::MatrixUnit);
+    let classic = Driver::new(2, p.clone()).with_engine(mu);
+    let (want_mu, _) = classic.multirank_sweep(&spec, &g, &d, &Backend::sdma(), steps);
+    let fused = Driver::new(2, p.clone()).with_engine(mu).with_time_block(2);
+    let before = exchange::transport_rounds();
+    let (got_mu, stats_mu) = fused.multirank_sweep(&spec, &g, &d, &Backend::sdma(), steps);
+    assert_eq!(got_mu.data, want_mu.data, "matrix-unit fused path diverged");
+    assert_eq!(stats_mu.comm_rounds, 2);
+    assert_eq!(exchange::transport_rounds() - before, 2);
+
+    // uneven decomposition: prime-sized grid, lopsided 1×1×3 layout,
+    // blocks 5/4/4 along y — one deep exchange feeds all four steps
+    let spec1 = StencilSpec::star3d(1);
+    let g2 = Grid3::random(7, 11, 13, 0xBEE);
+    let d3 = CartDecomp::new(1, 1, 3);
+    assert_eq!(temporal::max_depth(&d3, 7, 11, 13, 1), 4);
+    let (want2, _) = multirank_sweep(&spec1, &g2, &d3, &Backend::sdma(), 4, 3, &p);
+    let before = exchange::transport_rounds();
+    let (got2, st2) = multirank_sweep_fused(&spec1, &g2, &d3, &Backend::sdma(), 4, 3, &p, 4);
+    assert_eq!(got2.data, want2.data, "uneven-decomp fused path diverged");
+    assert_eq!(st2.comm_rounds, 1);
+    assert_eq!(exchange::transport_rounds() - before, 1);
+}
+
+#[test]
+fn fused_driver_sweep_is_bitwise_the_chained_sweeps() {
+    // the single-grid arm of the time_block knob: k tiled sweeps
+    // ping-ponged through the arena double buffer == k chained sweeps
+    let p = Platform::paper();
+    let spec = StencilSpec::star3d(2);
+    let g = Grid3::random(10, 20, 24, 9);
+    let classic = Driver::new(3, p.clone());
+    let (one, s1) = classic.sweep(&spec, &g, Strategy::SnoopAware);
+    let (two, _) = classic.sweep(&spec, &one, Strategy::SnoopAware);
+    let fused = Driver::new(3, p).with_time_block(2);
+    assert_eq!(fused.time_block(), 2);
+    let (got, s2) = fused.sweep(&spec, &g, Strategy::SnoopAware);
+    assert_eq!(got.data, two.data, "fused driver sweep diverged");
+    assert_eq!(s2.cells, 2 * s1.cells, "fused stats must count all updates");
+}

@@ -1,0 +1,113 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_engines.json files (schema mmstencil.bench_engines.v3).
+
+Rows are matched by identity key — sweep rows on (engine, pattern,
+radius, n, time_block), RTM rows on (engine, medium, n, time_block) —
+and the per-row throughput delta is printed as a percentage.  `threads`
+is deliberately NOT part of the key: the probe derives it from the
+host's core count, so keying on it would silently stop matching rows
+whenever the runner shape changes (engine labels already distinguish
+serial from parallel rows).  Baseline rows with zero throughput (the
+committed zero-seeded baseline, before any CI run has populated real
+numbers) print as "n/a" instead of a bogus percentage, as do rows
+present on only one side.
+
+Advisory by default: always exits 0, because throughput on shared
+runners is noise-prone.  Pass --fail-below PCT to turn any regression
+worse than -PCT% into exit 1 (for local, quiet-machine use).
+
+Usage:
+    python3 scripts/bench_diff.py BASELINE.json CURRENT.json [--fail-below PCT]
+"""
+
+import argparse
+import json
+import sys
+
+SWEEP_KEY = ("engine", "pattern", "radius", "n", "time_block")
+RTM_KEY = ("engine", "medium", "n", "time_block")
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    schema = doc.get("schema", "")
+    if not schema.startswith("mmstencil.bench_engines."):
+        sys.exit(f"{path}: not a bench_engines document (schema {schema!r})")
+    return doc
+
+
+def index(rows, key_fields):
+    out = {}
+    for row in rows:
+        # v2 documents lack time_block; treat them as depth-1 rows so
+        # old baselines stay diffable against v3 output
+        key = tuple(row.get(k, 1 if k == "time_block" else None) for k in key_fields)
+        out[key] = row
+    return out
+
+
+def fmt_key(key, key_fields):
+    return " ".join(f"{k}={v}" for k, v in zip(key_fields, key))
+
+
+def diff_section(name, base_rows, cur_rows, key_fields):
+    base = index(base_rows, key_fields)
+    cur = index(cur_rows, key_fields)
+    worst = None
+    print(f"== {name} ({len(cur)} rows, baseline {len(base)}) ==")
+    for key in sorted(cur, key=str):
+        b = base.get(key)
+        c = cur[key]
+        cv = c.get("mcells_per_s", 0.0)
+        if b is None:
+            print(f"  {fmt_key(key, key_fields):<64} {cv:>10.1f} Mcell/s   (new row)")
+            continue
+        bv = b.get("mcells_per_s", 0.0)
+        if bv <= 0.0:
+            print(f"  {fmt_key(key, key_fields):<64} {cv:>10.1f} Mcell/s   (n/a: baseline unmeasured)")
+            continue
+        pct = (cv - bv) / bv * 100.0
+        print(f"  {fmt_key(key, key_fields):<64} {cv:>10.1f} Mcell/s   {pct:+7.1f}%")
+        if worst is None or pct < worst:
+            worst = pct
+    for key in sorted(set(base) - set(cur), key=str):
+        print(f"  {fmt_key(key, key_fields):<64} {'—':>10}           (row dropped)")
+    return worst
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument(
+        "--fail-below",
+        type=float,
+        default=None,
+        metavar="PCT",
+        help="exit 1 if any matched row regresses more than PCT percent",
+    )
+    args = ap.parse_args()
+
+    base = load(args.baseline)
+    cur = load(args.current)
+    worst = []
+    w = diff_section("sweep entries", base.get("entries", []), cur.get("entries", []), SWEEP_KEY)
+    if w is not None:
+        worst.append(w)
+    w = diff_section(
+        "rtm entries", base.get("rtm_entries", []), cur.get("rtm_entries", []), RTM_KEY
+    )
+    if w is not None:
+        worst.append(w)
+
+    if worst:
+        print(f"worst matched delta: {min(worst):+.1f}%")
+    else:
+        print("no measured baseline rows to compare (advisory diff only)")
+    if args.fail_below is not None and worst and min(worst) < -abs(args.fail_below):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()
