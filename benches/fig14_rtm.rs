@@ -15,7 +15,8 @@
 //!
 //! Run with: `cargo bench --bench fig14_rtm`
 
-use mmstencil::rtm::driver::{run_shot, simulate_step, Medium, RtmConfig};
+use mmstencil::rtm::driver::{simulate_step, Medium, RtmConfig};
+use mmstencil::rtm::service::{ShotJob, SurveyConfig, SurveyRunner};
 use mmstencil::simulator::roofline::Engine;
 use mmstencil::simulator::Platform;
 use mmstencil::stencil::EngineKind;
@@ -43,6 +44,10 @@ fn main() {
     // RtmConfig::engine; images must agree across engines up to fp
     // accumulation order
     println!("real RTM shots on this host (32³, 60 steps), per engine:");
+    // one shot-service session serves every engine/medium row (the
+    // runtime and media cache persist across run_one calls)
+    let mut runner = SurveyRunner::new(SurveyConfig::one_shot(), &p)
+        .expect("one-shot survey config is valid");
     for medium in [Medium::Vti, Medium::Tti] {
         let mut reference_energy = None;
         for kind in EngineKind::ALL {
@@ -53,8 +58,9 @@ fn main() {
             cfg.steps = 60;
             cfg.threads = 2;
             cfg.engine = kind;
+            let job = ShotJob::builder(cfg).build().expect("fig14 shot config is valid");
             let wall = Timer::start();
-            let (image, rep) = run_shot(&cfg, &p);
+            let (image, rep) = runner.run_one(job).expect("fig14 shot cannot fail");
             let total = wall.secs();
             println!(
                 "  {medium:?} {:<12} fwd {:.2}s bwd {:.2}s ({total:.2}s), {:.0} Mpoint/s, \

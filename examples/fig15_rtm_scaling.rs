@@ -1,0 +1,101 @@
+//! Fig. 15 companion run: RTM *survey* scaling across simulated NUMA
+//! rank shards, driven end to end through the shot service
+//! (`rtm::service::SurveyRunner`).
+//!
+//! The bench of the same name (`benches/fig15_rtm_scaling.rs`) covers
+//! the halo-exchange scaling of one decomposed shot; this example
+//! covers the orthogonal axis the paper's survey workload scales on:
+//! many independent shots pipelined across rank shards.  For each shard
+//! count it runs the SAME shot line through a fresh session and checks
+//!
+//! * every shot completes (no retries expected — no injected faults);
+//! * the accumulated image is **bitwise identical** across shard
+//!   counts (the tree reduction's shape depends only on the shot
+//!   count, never on scheduling);
+//! * the image energy is positive (a real image formed);
+//! * shots/hour is reported per shard count — the throughput axis.
+//!
+//! Env knobs: `FIG15_SHOTS` (default 8), `FIG15_N` (grid edge, default
+//! 24), `FIG15_STEPS` (default 24).
+//!
+//! Run with: `cargo run --release --example fig15_rtm_scaling`
+
+use mmstencil::rtm::driver::{Medium, RtmConfig};
+use mmstencil::rtm::service::{ShotJob, SurveyConfig, SurveyRunner};
+use mmstencil::simulator::Platform;
+use mmstencil::stencil::EngineKind;
+use mmstencil::util::table::{f, Table};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn shot_line(cfg: &RtmConfig, shots: usize) -> Vec<ShotJob> {
+    let (sz, _, sy) = cfg.src_pos();
+    let lo = cfg.sponge_width + 1;
+    let hi = (cfg.nx - cfg.sponge_width).saturating_sub(2).max(lo);
+    (0..shots)
+        .map(|s| {
+            let sx = lo + (hi - lo) * s / shots.saturating_sub(1).max(1);
+            ShotJob::builder(cfg.clone())
+                .src(sz, sx, sy)
+                .build()
+                .expect("fig15 shot config is valid")
+        })
+        .collect()
+}
+
+fn main() {
+    let shots = env_usize("FIG15_SHOTS", 8).max(2);
+    let n = env_usize("FIG15_N", 24);
+    let steps = env_usize("FIG15_STEPS", 24);
+    let p = Platform::paper();
+
+    let mut cfg = RtmConfig::small(Medium::Vti);
+    cfg.nz = n;
+    cfg.nx = n;
+    cfg.ny = n;
+    cfg.steps = steps;
+    cfg.threads = 2;
+    cfg.engine = EngineKind::MatrixUnit;
+
+    println!(
+        "RTM survey scaling: {shots} VTI shots at {n}³ × {steps} steps, \
+         matrix_unit engine, full-state checkpoints\n"
+    );
+    let mut t =
+        Table::new(&["shards", "workers", "stolen", "wall s", "shots/hour", "image energy"]);
+    let mut reference: Option<Vec<f32>> = None;
+    for shards in [1usize, 2, 4] {
+        let mut scfg = SurveyConfig::default();
+        scfg.shards = shards;
+        scfg.queue_capacity = 2; // small bound: exercises backpressure
+        let mut runner = SurveyRunner::new(scfg, &p).expect("survey config is valid");
+        let report = runner.run(shot_line(&cfg, shots));
+        assert_eq!(
+            report.completed(),
+            shots,
+            "{shards} shard(s): every shot must complete"
+        );
+        assert_eq!(report.retries(), 0, "no faults injected, no retries expected");
+        let image = report.image.as_ref().expect("completed survey has an image");
+        assert!(image.img.energy() > 0.0, "no image formed");
+        match &reference {
+            None => reference = Some(image.img.data.clone()),
+            Some(r) => assert_eq!(
+                &image.img.data, r,
+                "{shards} shard(s): survey image must be bitwise-stable across shard counts"
+            ),
+        }
+        t.row(&[
+            shards.to_string(),
+            runner.workers().to_string(),
+            report.stolen().to_string(),
+            f(report.wall_s, 2),
+            f(report.shots_per_hour(), 0),
+            format!("{:.3e}", image.img.energy()),
+        ]);
+    }
+    t.print();
+    println!("\nsurvey image bitwise-stable across 1/2/4 shards: OK");
+}

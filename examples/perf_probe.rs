@@ -4,8 +4,8 @@
 //! `cargo run --release --example perf_probe`
 //!
 //! Every engine is exercised through the dispatch layer
-//! (`stencil::Engine` + `EngineKind::by_name`) — no per-engine closures
-//! — and emits `BENCH_engines.json` (schema `metrics::bench_json` v3):
+//! (`stencil::Engine` + `EngineKind::parse`) — no per-engine closures
+//! — and emits `BENCH_engines.json` (schema `metrics::bench_json` v4):
 //! per-engine sweep throughput for star/box r ∈ {1, 4}, the headline
 //! 256³ star-r4 sweep at temporal-blocking depths k ∈ {1, 2, 4}
 //! (`Engine::apply3_fused` — the fused rows are the perf-trajectory
@@ -13,13 +13,19 @@
 //! throughput (VTI and TTI, classic `step_with` at depth 1 and the
 //! fused `step_k_with` at depth 2), each with per-sweep/per-step
 //! heap-allocation counts (counting global allocator below) and
-//! scratch-arena growth.  CI runs a shrunken probe (env below),
+//! scratch-arena growth.  A mini-survey through the shot service
+//! (`rtm::service`) emits the v4 `survey_entries` rows — shots/hour
+//! plus retry/failure accounting, with one injected-fault shot proving
+//! the retry path end to end.  CI runs a shrunken probe (env below),
 //! validates the schema, diffs against the committed baseline
 //! (`scripts/bench_diff.py`, advisory), and uploads the JSON.
 //!
 //! Env knobs (documented in README §Perf trajectory):
 //! * `PERF_PROBE_N` — engine-matrix / RTM grid edge (default 96)
 //! * `PERF_PROBE_BIG_N` — headline sweep edge (default 256; 0 skips)
+//! * `PERF_PROBE_SURVEY_SHOTS` — mini-survey shot count (default 4;
+//!   0 skips the survey rows)
+//! * `PERF_PROBE_SURVEY_N` — mini-survey grid edge (default 24)
 //! * `PERF_PROBE_BUDGET_S` — per-bench time budget (default 1.0)
 //! * `BENCH_ENGINES_OUT` — output path (default `BENCH_engines.json`)
 //! * `MMSTENCIL_PROBE_ENGINES` — comma-separated row filter over the
@@ -29,8 +35,11 @@
 
 use mmstencil::coordinator::scratch;
 use mmstencil::grid::Grid3;
-use mmstencil::metrics::bench_json::{self, EngineBench, RtmBench};
+use mmstencil::metrics::bench_json::{self, EngineBench, RtmBench, SurveyBench};
+use mmstencil::rtm::driver::{Medium, RtmConfig};
+use mmstencil::rtm::service::{ShotJob, SurveyConfig, SurveyRunner};
 use mmstencil::rtm::{media, tti, vti};
+use mmstencil::simulator::Platform;
 use mmstencil::stencil::coeffs::{first_deriv, second_deriv};
 use mmstencil::stencil::{Engine, EngineKind, StencilSpec};
 use mmstencil::util::alloc_count::CountingAlloc;
@@ -229,15 +238,71 @@ fn main() {
         }
     }
 
+    // ---- mini-survey through the shot service (the v4 rows): shots
+    // sweep a source line, one shot carries an injected fault so the
+    // emitted retry count proves the retry path end to end ----
+    let mut survey_entries: Vec<SurveyBench> = Vec::new();
+    let survey_shots = env_usize("PERF_PROBE_SURVEY_SHOTS", 4);
+    if survey_shots > 0 {
+        let sn = env_usize("PERF_PROBE_SURVEY_N", 24);
+        for medium in [Medium::Vti, Medium::Tti] {
+            let mut cfg = RtmConfig::small(medium);
+            cfg.nz = sn;
+            cfg.nx = sn;
+            cfg.ny = sn;
+            cfg.steps = 24;
+            cfg.threads = 2;
+            cfg.engine = EngineKind::MatrixUnit;
+            let scfg = SurveyConfig::default();
+            let mut runner = SurveyRunner::new(scfg, &Platform::paper())
+                .expect("default survey config is valid");
+            let (sz, _, sy) = cfg.src_pos();
+            let lo = cfg.sponge_width + 1;
+            let hi = (sn - cfg.sponge_width).saturating_sub(2).max(lo);
+            let jobs: Vec<ShotJob> = (0..survey_shots)
+                .map(|s| {
+                    let sx = lo + (hi - lo) * s / (survey_shots - 1).max(1);
+                    let b = ShotJob::builder(cfg.clone()).src(sz, sx, sy);
+                    // shot 0 fails once and must succeed on the retry
+                    let b = if s == 0 { b.inject_faults(1) } else { b };
+                    b.build().expect("probe survey config is valid")
+                })
+                .collect();
+            let rep = runner.run(jobs);
+            assert_eq!(rep.failed(), 0, "probe survey shots must all complete");
+            assert_eq!(rep.retries(), 1, "the injected fault must consume one retry");
+            println!(
+                "survey {:?} {survey_shots} shots / {} shards: {:.0} shots/hour ({} retried)",
+                medium,
+                rep.shards,
+                rep.shots_per_hour(),
+                rep.retries()
+            );
+            survey_entries.push(SurveyBench {
+                engine: cfg.engine.name().into(),
+                medium: if medium == Medium::Tti { "tti" } else { "vti" }.into(),
+                n: sn,
+                shots: survey_shots,
+                shards: rep.shards,
+                threads: cfg.threads,
+                checkpoint: rep.checkpoint.name().into(),
+                retries: rep.retries() as u64,
+                failed: rep.failed() as u64,
+                shots_per_hour: rep.shots_per_hour(),
+            });
+        }
+    }
+
     let out_path =
         std::env::var("BENCH_ENGINES_OUT").unwrap_or_else(|_| "BENCH_engines.json".into());
-    let json = bench_json::render(&entries, &rtm_entries);
+    let json = bench_json::render(&entries, &rtm_entries, &survey_entries);
     bench_json::validate(&json).expect("BENCH_engines.json failed schema validation");
     std::fs::write(&out_path, &json).expect("writing BENCH_engines.json");
     println!(
-        "wrote {out_path} ({} sweep entries, {} rtm entries)",
+        "wrote {out_path} ({} sweep entries, {} rtm entries, {} survey entries)",
         entries.len(),
-        rtm_entries.len()
+        rtm_entries.len(),
+        survey_entries.len()
     );
 
     // ---- d2_axis per-axis breakdown (probe-only) ----

@@ -15,13 +15,14 @@
 //! Run with: `cargo run --release --example rtm_end_to_end`
 
 use mmstencil::grid::Grid3;
-use mmstencil::rtm::driver::{run_shot, Medium, RtmConfig};
+use mmstencil::rtm::driver::{Medium, RtmConfig};
+use mmstencil::rtm::service::{ShotJob, SurveyConfig, SurveyRunner};
 use mmstencil::rtm::{media, vti};
 use mmstencil::runtime::{Runtime, Tensor};
 use mmstencil::simulator::Platform;
 use mmstencil::stencil::coeffs::second_deriv;
 use mmstencil::stencil::EngineKind;
-use mmstencil::util::err::Result;
+use mmstencil::util::err::{Context, Result};
 use mmstencil::util::Timer;
 
 fn main() -> Result<()> {
@@ -95,7 +96,12 @@ fn main() -> Result<()> {
     );
     let timer = Timer::start();
     let p = Platform::paper();
-    let (image, rep) = run_shot(&cfg, &p);
+    // validated job + one-shot survey session: the service API behind
+    // the old run_shot free function
+    let job = ShotJob::builder(cfg.clone()).build().context("building the shot job")?;
+    let mut runner =
+        SurveyRunner::new(SurveyConfig::one_shot(), &p).context("starting the survey session")?;
+    let (image, rep) = runner.run_one(job)?;
     let total = timer.secs();
 
     // energy trace: quiet start, source build-up, then bounded

@@ -47,7 +47,33 @@ impl Default for SweepSpec {
 
 impl SweepSpec {
     pub fn stencil(&self) -> Option<StencilSpec> {
-        StencilSpec::by_name(&self.kernel)
+        StencilSpec::parse(&self.kernel).ok()
+    }
+}
+
+/// Survey-scale RTM configuration (`[survey]` table): the shot count
+/// and scheduler shape handed to [`rtm::service::SurveyRunner`]
+/// (`crate::rtm::service`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SurveySpec {
+    /// Number of shots to synthesize along the source line.
+    pub shots: usize,
+    /// Simulated NUMA rank shards the shot queue is split across.
+    pub shards: usize,
+    /// Bounded per-shard queue capacity (backpressure threshold).
+    pub queue_capacity: usize,
+    /// Adjoint-pass wavefield checkpointing strategy.
+    pub checkpoint: crate::rtm::service::CheckpointStrategy,
+}
+
+impl Default for SurveySpec {
+    fn default() -> Self {
+        Self {
+            shots: 8,
+            shards: 2,
+            queue_capacity: 4,
+            checkpoint: crate::rtm::service::CheckpointStrategy::FullState,
+        }
     }
 }
 
@@ -99,13 +125,15 @@ impl RuntimeSpec {
     }
 }
 
-/// Full config file: a sweep and/or an RTM run, plus the runtime table.
+/// Full config file: a sweep and/or an RTM run, plus the runtime and
+/// survey tables.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
     pub title: String,
     pub sweep: SweepSpec,
     pub rtm: RtmConfig,
     pub runtime: RuntimeSpec,
+    pub survey: SurveySpec,
 }
 
 impl Default for ExperimentConfig {
@@ -115,6 +143,7 @@ impl Default for ExperimentConfig {
             sweep: SweepSpec::default(),
             rtm: RtmConfig::small(Medium::Vti),
             runtime: RuntimeSpec::default(),
+            survey: SurveySpec::default(),
         }
     }
 }
@@ -165,18 +194,8 @@ pub fn from_text(text: &str) -> Result<ExperimentConfig, toml::ParseError> {
     r.sponge_width = doc.usize_or("rtm", "sponge_width", r.sponge_width);
     r.receiver_z = doc.usize_or("rtm", "receiver_z", r.receiver_z);
     let engine_name = doc.str_or("rtm", "engine", r.engine.name());
-    r.engine = match crate::stencil::EngineKind::by_name(engine_name) {
-        Some(kind) => kind,
-        None => {
-            return Err(toml::ParseError {
-                line: 0,
-                msg: format!(
-                    "[rtm] engine: unknown engine {engine_name:?} \
-                     (expected naive | simd | matrix_unit)"
-                ),
-            })
-        }
-    };
+    r.engine = crate::stencil::EngineKind::parse(engine_name)
+        .map_err(|e| toml::ParseError { line: 0, msg: format!("[rtm] engine: {e}") })?;
 
     let rt = &mut cfg.runtime;
     rt.workers = doc.usize_or("runtime", "workers", rt.workers);
@@ -185,6 +204,20 @@ pub fn from_text(text: &str) -> Result<ExperimentConfig, toml::ParseError> {
     rt.time_block = doc.usize_or("runtime", "time_block", rt.time_block).max(1);
     // the propagators' fused entries read the same knob
     cfg.rtm.time_block = rt.time_block;
+
+    let sv = &mut cfg.survey;
+    sv.shots = doc.usize_or("survey", "shots", sv.shots).max(1);
+    sv.shards = doc.usize_or("survey", "shards", sv.shards).max(1);
+    sv.queue_capacity = doc.usize_or("survey", "queue_capacity", sv.queue_capacity).max(1);
+    let ck_name = doc.str_or("survey", "checkpoint", sv.checkpoint.name());
+    sv.checkpoint = crate::rtm::service::CheckpointStrategy::parse(ck_name)
+        .map_err(|e| toml::ParseError { line: 0, msg: format!("[survey] checkpoint: {e}") })?;
+
+    // a config that would panic deep inside the propagators is a parse
+    // error here, where the file/line context still exists
+    cfg.rtm
+        .validate()
+        .map_err(|e| toml::ParseError { line: 0, msg: format!("[rtm]: {e}") })?;
     Ok(cfg)
 }
 
@@ -279,5 +312,43 @@ dx = 12.5
         // unknown engine names are a parse error, not a silent default
         let err = from_text("[rtm]\nengine = \"avx512\"\n").unwrap_err();
         assert!(err.to_string().contains("unknown engine"), "{err}");
+        // ...and the message now names the allowed list (shared
+        // ParseKindError across the selector trio)
+        assert!(err.to_string().contains("naive | simd | matrix_unit"), "{err}");
+    }
+
+    #[test]
+    fn survey_table_parses_and_defaults() {
+        use crate::rtm::service::CheckpointStrategy;
+        let cfg = from_text("").unwrap();
+        assert_eq!(cfg.survey, SurveySpec::default());
+        let cfg = from_text(
+            "[survey]\nshots = 16\nshards = 4\nqueue_capacity = 2\ncheckpoint = \"boundary_saving\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.survey.shots, 16);
+        assert_eq!(cfg.survey.shards, 4);
+        assert_eq!(cfg.survey.queue_capacity, 2);
+        assert_eq!(cfg.survey.checkpoint, CheckpointStrategy::BoundarySaving);
+        // zeros clamp to 1 rather than wedging the scheduler
+        let cfg = from_text("[survey]\nshots = 0\nshards = 0\nqueue_capacity = 0\n").unwrap();
+        assert_eq!((cfg.survey.shots, cfg.survey.shards, cfg.survey.queue_capacity), (1, 1, 1));
+        // an unknown strategy is a parse error naming the allowed list
+        let err = from_text("[survey]\ncheckpoint = \"rematerialize\"\n").unwrap_err();
+        assert!(err.to_string().contains("unknown checkpoint strategy"), "{err}");
+        assert!(err.to_string().contains("full_state | boundary_saving"), "{err}");
+    }
+
+    #[test]
+    fn invalid_rtm_fields_fail_at_parse_not_in_the_propagator() {
+        // receiver plane outside the grid: caught by RtmConfig::validate
+        let err = from_text("[rtm]\nnz = 32\nreceiver_z = 32\n").unwrap_err();
+        assert!(err.to_string().contains("receiver_z"), "{err}");
+        // grid smaller than the stencil halo
+        let err = from_text("[rtm]\nnz = 4\n").unwrap_err();
+        assert!(err.to_string().contains("stencil halo"), "{err}");
+        // snapshot cadence of zero would divide-by-zero the imaging loop
+        let err = from_text("[rtm]\nsnap_every = 0\n").unwrap_err();
+        assert!(err.to_string().contains("snap_every"), "{err}");
     }
 }

@@ -5,6 +5,7 @@
 //! * `info`                    — platform model, artifact inventory
 //! * `sweep`                   — one parallel stencil sweep (single NUMA)
 //! * `rtm`                     — one RTM shot (VTI/TTI)
+//! * `survey`                  — multi-shot RTM survey on the shot service
 //! * `exchange`                — halo-exchange bandwidth test (Table II)
 //! * `scaling`                 — strong/weak multi-NUMA scaling run
 //! * `artifacts`               — verify PJRT artifacts against rust kernels
@@ -21,7 +22,8 @@ use mmstencil::coordinator::exchange::Backend;
 use mmstencil::coordinator::tiles::Strategy;
 use mmstencil::grid::{CartDecomp, Grid3};
 use mmstencil::metrics;
-use mmstencil::rtm::driver::{self as rtm_driver, Medium, RtmConfig};
+use mmstencil::rtm::driver::{Medium, RtmConfig};
+use mmstencil::rtm::service::{CheckpointStrategy, ShotJob, SurveyConfig, SurveyRunner};
 use mmstencil::runtime::{Runtime, Tensor};
 use mmstencil::simulator::Platform;
 use mmstencil::stencil::{naive, StencilSpec};
@@ -38,6 +40,7 @@ fn main() -> ExitCode {
         "info" => cmd_info(&opts),
         "sweep" => cmd_sweep(&opts),
         "rtm" => cmd_rtm(&opts),
+        "survey" => cmd_survey(&opts),
         "exchange" => cmd_exchange(&opts),
         "scaling" => cmd_scaling(&opts),
         "artifacts" => cmd_artifacts(&opts),
@@ -68,6 +71,9 @@ USAGE: mmstencil <subcommand> [--key value ...]
              --time_block k         fuse k sweeps per pass (arena double buffer)
   rtm        --medium vti|tti --n 48 --steps 120 --threads 8 --engine simd|naive|matrix_unit
              --time_block k         requested fuse depth (shots clamp to 1, §III-B)
+  survey     --shots 8 --shards 2 --medium vti|tti --n 32 --steps 60
+             --engine matrix_unit --checkpoint full_state|boundary_saving
+             --queue_capacity 4     multi-shot survey on the shot service
   exchange   --n 128 --radius 4             Table II halo bandwidth test
   scaling    --mode strong|weak --kernel 3DStarR4 --n 64
              --steps 4 --time_block k   one halo exchange per k fused steps
@@ -145,7 +151,7 @@ fn cmd_info(opts: &Opts) -> Result<(), String> {
 
 fn cmd_sweep(opts: &Opts) -> Result<(), String> {
     let name = opt_str(opts, "kernel", "3DStarR4");
-    let spec = StencilSpec::by_name(name).ok_or_else(|| format!("unknown kernel {name}"))?;
+    let spec = StencilSpec::parse(name).map_err(|e| e.to_string())?;
     if spec.ndim != 3 {
         return Err("sweep drives 3D kernels; 2D kernels are bench-only".into());
     }
@@ -212,9 +218,8 @@ fn cmd_rtm(opts: &Opts) -> Result<(), String> {
     cfg.steps = opt_usize(opts, "steps", 120);
     cfg.threads = opt_usize(opts, "threads", default_threads());
     let engine_name = opt_str(opts, "engine", "simd");
-    cfg.engine = mmstencil::stencil::EngineKind::by_name(engine_name).ok_or_else(|| {
-        format!("unknown --engine {engine_name:?} (expected naive | simd | matrix_unit)")
-    })?;
+    cfg.engine =
+        mmstencil::stencil::EngineKind::parse(engine_name).map_err(|e| format!("--engine: {e}"))?;
     cfg.time_block = opt_usize(opts, "time_block", 1).max(1);
     if cfg.time_block > cfg.shot_time_block() {
         println!(
@@ -234,7 +239,10 @@ fn cmd_rtm(opts: &Opts) -> Result<(), String> {
         cfg.threads,
         cfg.engine.name()
     );
-    let (image, rep) = rtm_driver::run_shot(&cfg, &p);
+    let job = ShotJob::builder(cfg).build().map_err(|e| e.to_string())?;
+    let mut runner =
+        SurveyRunner::new(SurveyConfig::one_shot(), &p).map_err(|e| e.to_string())?;
+    let (image, rep) = runner.run_one(job).map_err(|e| e.to_string())?;
     println!(
         "  forward {:.2}s + backward {:.2}s  →  {:.3} Gpoint/s",
         rep.forward_s,
@@ -252,6 +260,105 @@ fn cmd_rtm(opts: &Opts) -> Result<(), String> {
         rep.sim_speedup_vs_simd()
     );
     Ok(())
+}
+
+fn cmd_survey(opts: &Opts) -> Result<(), String> {
+    let medium = match opt_str(opts, "medium", "vti") {
+        "tti" => Medium::Tti,
+        _ => Medium::Vti,
+    };
+    let mut cfg = RtmConfig::small(medium);
+    let n = opt_usize(opts, "n", 32);
+    cfg.nz = opt_usize(opts, "nz", n);
+    cfg.nx = opt_usize(opts, "nx", n);
+    cfg.ny = opt_usize(opts, "ny", n);
+    cfg.steps = opt_usize(opts, "steps", 60);
+    cfg.threads = opt_usize(opts, "threads", default_threads());
+    let engine_name = opt_str(opts, "engine", "matrix_unit");
+    cfg.engine =
+        mmstencil::stencil::EngineKind::parse(engine_name).map_err(|e| format!("--engine: {e}"))?;
+    let shots = opt_usize(opts, "shots", 8).max(1);
+    let mut scfg = SurveyConfig::default();
+    scfg.shards = opt_usize(opts, "shards", scfg.shards).max(1);
+    scfg.queue_capacity = opt_usize(opts, "queue_capacity", scfg.queue_capacity).max(1);
+    scfg.checkpoint = CheckpointStrategy::parse(opt_str(opts, "checkpoint", "full_state"))
+        .map_err(|e| format!("--checkpoint: {e}"))?;
+    let jobs = survey_jobs(&cfg, shots).map_err(|e| e.to_string())?;
+    println!(
+        "RTM {medium:?} survey: {} shots on {} shard(s), {}×{}×{} grid, {} steps, \
+         {} engine, {} checkpointing",
+        shots,
+        scfg.shards,
+        cfg.nz,
+        cfg.nx,
+        cfg.ny,
+        cfg.steps,
+        cfg.engine.name(),
+        scfg.checkpoint.name()
+    );
+    let p = Platform::paper();
+    let mut runner = SurveyRunner::new(scfg, &p).map_err(|e| e.to_string())?;
+    let report = runner.run(jobs);
+    let mut t =
+        Table::new(&["shot", "shard", "stolen", "attempts", "deq seq", "status", "Gpoint/s"]);
+    for r in &report.records {
+        let (status, gpps) = match (&r.status, &r.report) {
+            (mmstencil::rtm::service::ShotStatus::Completed, Some(rep)) => {
+                ("ok".to_string(), f(rep.gpoints_per_s / 1e9, 3))
+            }
+            (mmstencil::rtm::service::ShotStatus::Failed(e), _) => {
+                (format!("FAILED: {e}"), "-".to_string())
+            }
+            _ => ("?".to_string(), "-".to_string()),
+        };
+        t.row(&[
+            r.id.to_string(),
+            r.shard.to_string(),
+            if r.stolen { "yes" } else { "" }.to_string(),
+            r.attempts.to_string(),
+            r.dequeue_seq.to_string(),
+            status,
+            gpps,
+        ]);
+    }
+    t.print();
+    println!(
+        "  {} completed, {} failed, {} retried, {} stolen in {:.2}s  →  {:.0} shots/hour",
+        report.completed(),
+        report.failed(),
+        report.retries(),
+        report.stolen(),
+        report.wall_s,
+        report.shots_per_hour()
+    );
+    if let Some(image) = &report.image {
+        println!(
+            "  accumulated image energy {:.3e} over {} correlations",
+            image.img.energy(),
+            image.correlations
+        );
+    }
+    if report.failed() > 0 {
+        return Err(format!("{} shot(s) failed", report.failed()));
+    }
+    Ok(())
+}
+
+/// Build a line of shots whose sources sweep the interior x-axis of the
+/// grid (the classic towed-line acquisition geometry).
+fn survey_jobs(
+    cfg: &RtmConfig,
+    shots: usize,
+) -> Result<Vec<ShotJob>, mmstencil::rtm::driver::ConfigError> {
+    let (sz, _, sy) = cfg.src_pos();
+    let lo = cfg.sponge_width + 1;
+    let hi = cfg.nx.saturating_sub(cfg.sponge_width + 2).max(lo);
+    (0..shots)
+        .map(|s| {
+            let sx = lo + (hi - lo) * s / shots.saturating_sub(1).max(1);
+            ShotJob::builder(cfg.clone()).src(sz, sx, sy).build()
+        })
+        .collect()
 }
 
 fn cmd_exchange(opts: &Opts) -> Result<(), String> {
@@ -284,7 +391,7 @@ fn cmd_exchange(opts: &Opts) -> Result<(), String> {
 
 fn cmd_scaling(opts: &Opts) -> Result<(), String> {
     let name = opt_str(opts, "kernel", "3DStarR4");
-    let spec = StencilSpec::by_name(name).ok_or_else(|| format!("unknown kernel {name}"))?;
+    let spec = StencilSpec::parse(name).map_err(|e| e.to_string())?;
     let n = opt_usize(opts, "n", 64);
     let threads = opt_usize(opts, "threads", default_threads());
     let steps = opt_usize(opts, "steps", 2);
@@ -414,5 +521,21 @@ fn cmd_run(opts: &Opts) -> Result<(), String> {
     o.insert("threads".into(), cfg.rtm.threads.to_string());
     o.insert("engine".into(), cfg.rtm.engine.name().to_string());
     o.insert("time_block".into(), cfg.rtm.time_block.to_string());
-    cmd_rtm(&o)
+    cmd_rtm(&o)?;
+    let mut o: Opts = HashMap::new();
+    o.insert(
+        "medium".into(),
+        if cfg.rtm.medium == Medium::Tti { "tti" } else { "vti" }.to_string(),
+    );
+    o.insert("nz".into(), cfg.rtm.nz.to_string());
+    o.insert("nx".into(), cfg.rtm.nx.to_string());
+    o.insert("ny".into(), cfg.rtm.ny.to_string());
+    o.insert("steps".into(), cfg.rtm.steps.to_string());
+    o.insert("threads".into(), cfg.rtm.threads.to_string());
+    o.insert("engine".into(), cfg.rtm.engine.name().to_string());
+    o.insert("shots".into(), cfg.survey.shots.to_string());
+    o.insert("shards".into(), cfg.survey.shards.to_string());
+    o.insert("queue_capacity".into(), cfg.survey.queue_capacity.to_string());
+    o.insert("checkpoint".into(), cfg.survey.checkpoint.name().to_string());
+    cmd_survey(&o)
 }

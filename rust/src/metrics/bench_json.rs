@@ -9,15 +9,19 @@
 //!
 //! v2 extended the document with `rtm_entries`: per-engine RTM step
 //! throughput, so the trajectory covers the application workload, not
-//! just raw sweeps.  v3 (this PR) adds a `time_block` field to every
-//! row — the temporal-blocking depth the workload ran at (1 = classic
-//! stepping) — so the fused-sweep trajectory is diffable per depth
-//! (`scripts/bench_diff.py`).
+//! just raw sweeps.  v3 added a `time_block` field to every row — the
+//! temporal-blocking depth the workload ran at (1 = classic stepping)
+//! — so the fused-sweep trajectory is diffable per depth
+//! (`scripts/bench_diff.py`).  v4 (this PR) adds `survey_entries`:
+//! multi-shot surveys through [`rtm::service`](crate::rtm::service),
+//! reported as shots/hour with retry/failure accounting and the
+//! checkpoint strategy the shots ran under.
 
 /// Schema tag carried in the document; bump on breaking field changes.
 /// v1 → v2: added the `rtm_entries` array.
 /// v2 → v3: added `time_block` to every sweep and RTM row.
-pub const SCHEMA: &str = "mmstencil.bench_engines.v3";
+/// v3 → v4: added the `survey_entries` array (shot-service surveys).
+pub const SCHEMA: &str = "mmstencil.bench_engines.v4";
 
 /// One engine × sweep-workload measurement.
 #[derive(Clone, Debug)]
@@ -71,6 +75,33 @@ pub struct RtmBench {
     pub arena_grows_per_step: u64,
 }
 
+/// One survey measurement (schema v4): a multi-shot run through the
+/// shot service ([`rtm::service`](crate::rtm::service)) — throughput in
+/// shots/hour plus the scheduler's retry/failure accounting.
+#[derive(Clone, Debug)]
+pub struct SurveyBench {
+    /// Canonical engine-kind name every shot propagated with.
+    pub engine: String,
+    /// "vti" | "tti"
+    pub medium: String,
+    /// Cubic grid edge of each shot.
+    pub n: usize,
+    /// Shots submitted to the survey.
+    pub shots: usize,
+    /// Simulated NUMA rank shards the queue was split across.
+    pub shards: usize,
+    /// Propagator worker-parallelism of each shot.
+    pub threads: usize,
+    /// Checkpoint strategy name (`CheckpointStrategy::name`).
+    pub checkpoint: String,
+    /// Retry attempts consumed across the survey.
+    pub retries: u64,
+    /// Shots recorded as failed after exhausting their retries.
+    pub failed: u64,
+    /// Completed-shot throughput.
+    pub shots_per_hour: f64,
+}
+
 fn esc(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
 }
@@ -85,7 +116,11 @@ fn finite(v: f64) -> f64 {
 
 /// Render the document.  Entries keep their push order, so re-runs of
 /// the same probe diff cleanly.
-pub fn render(entries: &[EngineBench], rtm_entries: &[RtmBench]) -> String {
+pub fn render(
+    entries: &[EngineBench],
+    rtm_entries: &[RtmBench],
+    survey_entries: &[SurveyBench],
+) -> String {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str(&format!("  \"schema\": \"{SCHEMA}\",\n"));
@@ -125,15 +160,36 @@ pub fn render(entries: &[EngineBench], rtm_entries: &[RtmBench]) -> String {
             if i + 1 == rtm_entries.len() { "" } else { "," }
         ));
     }
+    s.push_str("  ],\n");
+    s.push_str("  \"survey_entries\": [\n");
+    for (i, e) in survey_entries.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"engine\": \"{}\", \"medium\": \"{}\", \"n\": {}, \"shots\": {}, \
+             \"shards\": {}, \"threads\": {}, \"checkpoint\": \"{}\", \"retries\": {}, \
+             \"failed\": {}, \"shots_per_hour\": {:.3}}}{}\n",
+            esc(&e.engine),
+            esc(&e.medium),
+            e.n,
+            e.shots,
+            e.shards,
+            e.threads,
+            esc(&e.checkpoint),
+            e.retries,
+            e.failed,
+            finite(e.shots_per_hour),
+            if i + 1 == survey_entries.len() { "" } else { "," }
+        ));
+    }
     s.push_str("  ]\n}\n");
     s
 }
 
 /// Structural validation of a rendered document: schema tag, balanced
 /// nesting, and every entry carrying its full key set.  Returns the
-/// `(sweep, rtm)` entry counts.  (CI additionally parses the artifact
-/// with a real JSON parser; this keeps the contract testable offline.)
-pub fn validate(s: &str) -> Result<(usize, usize), String> {
+/// `(sweep, rtm, survey)` entry counts.  (CI additionally parses the
+/// artifact with a real JSON parser; this keeps the contract testable
+/// offline.)
+pub fn validate(s: &str) -> Result<(usize, usize, usize), String> {
     if !s.contains(&format!("\"schema\": \"{SCHEMA}\"")) {
         return Err(format!("missing schema tag {SCHEMA}"));
     }
@@ -156,10 +212,19 @@ pub fn validate(s: &str) -> Result<(usize, usize), String> {
     if !s.contains("\"rtm_entries\":") {
         return Err("missing rtm_entries array".into());
     }
-    // sweep entries are the only rows with "pattern"; RTM rows the only
-    // ones with "medium"; shared keys must appear once per row of both
+    if !s.contains("\"survey_entries\":") {
+        return Err("missing survey_entries array".into());
+    }
+    // sweep entries are the only rows with "pattern"; survey rows the
+    // only ones with "checkpoint"; RTM and survey rows both carry
+    // "medium"; shared keys must appear once per row of each family
     let sweeps = s.matches("\"pattern\":").count();
-    let rtms = s.matches("\"medium\":").count();
+    let surveys = s.matches("\"checkpoint\":").count();
+    let rtms = s
+        .matches("\"medium\":")
+        .count()
+        .checked_sub(surveys)
+        .ok_or("more checkpoint keys than medium keys")?;
     for k in ["\"radius\":", "\"allocs_per_sweep\":", "\"arena_grows_per_sweep\":"] {
         if s.matches(k).count() != sweeps {
             return Err(format!("key {k} count mismatch (expected {sweeps})"));
@@ -171,17 +236,30 @@ pub fn validate(s: &str) -> Result<(usize, usize), String> {
         }
     }
     for k in [
-        "\"engine\":",
-        "\"n\":",
-        "\"threads\":",
-        "\"time_block\":",
-        "\"mcells_per_s\":",
+        "\"shots\":",
+        "\"shards\":",
+        "\"retries\":",
+        "\"failed\":",
+        "\"shots_per_hour\":",
     ] {
+        if s.matches(k).count() != surveys {
+            return Err(format!("key {k} count mismatch (expected {surveys})"));
+        }
+    }
+    for k in ["\"time_block\":", "\"mcells_per_s\":"] {
         if s.matches(k).count() != sweeps + rtms {
             return Err(format!("key {k} count mismatch (expected {})", sweeps + rtms));
         }
     }
-    Ok((sweeps, rtms))
+    for k in ["\"engine\":", "\"n\":", "\"threads\":"] {
+        if s.matches(k).count() != sweeps + rtms + surveys {
+            return Err(format!(
+                "key {k} count mismatch (expected {})",
+                sweeps + rtms + surveys
+            ));
+        }
+    }
+    Ok((sweeps, rtms, surveys))
 }
 
 #[cfg(test)]
@@ -228,29 +306,51 @@ mod tests {
         }]
     }
 
+    fn survey_sample() -> Vec<SurveyBench> {
+        vec![SurveyBench {
+            engine: "matrix_unit".into(),
+            medium: "tti".into(),
+            n: 24,
+            shots: 4,
+            shards: 2,
+            threads: 2,
+            checkpoint: "boundary_saving".into(),
+            retries: 1,
+            failed: 0,
+            shots_per_hour: 1234.5,
+        }]
+    }
+
     #[test]
     fn render_validates() {
-        let doc = render(&sample(), &rtm_sample());
-        assert_eq!(validate(&doc), Ok((2, 1)));
-        assert!(doc.contains("\"schema\": \"mmstencil.bench_engines.v3\""));
+        let doc = render(&sample(), &rtm_sample(), &survey_sample());
+        assert_eq!(validate(&doc), Ok((2, 1, 1)));
+        assert!(doc.contains("\"schema\": \"mmstencil.bench_engines.v4\""));
         assert!(doc.contains("\"mcells_per_s\": 123.456"));
         assert!(doc.contains("\"medium\": \"vti\""));
         assert!(doc.contains("\"allocs_per_step\": 12"));
         assert!(doc.contains("\"time_block\": 4"));
+        assert!(doc.contains("\"checkpoint\": \"boundary_saving\""));
+        assert!(doc.contains("\"shots_per_hour\": 1234.500"));
     }
 
     #[test]
     fn empty_document_is_valid_with_zero_entries() {
-        assert_eq!(validate(&render(&[], &[])), Ok((0, 0)));
+        assert_eq!(validate(&render(&[], &[], &[])), Ok((0, 0, 0)));
     }
 
     #[test]
     fn tampered_documents_fail() {
-        let doc = render(&sample(), &rtm_sample());
-        assert!(validate(&doc.replace("bench_engines.v3", "v2")).is_err());
+        let doc = render(&sample(), &rtm_sample(), &survey_sample());
+        assert!(validate(&doc.replace("bench_engines.v4", "v3")).is_err());
         assert!(validate(&doc.replace("\"radius\":", "\"r\":")).is_err());
         assert!(validate(&doc.replace("\"allocs_per_step\":", "\"a\":")).is_err());
         assert!(validate(&doc.replace("\"rtm_entries\":", "\"rtm\":")).is_err());
+        assert!(validate(&doc.replace("\"survey_entries\":", "\"surveys\":")).is_err());
+        assert!(validate(&doc.replace("\"shots_per_hour\":", "\"sph\":")).is_err());
+        // dropping the survey row's medium key makes the rtm count
+        // arithmetic impossible, not silently wrong
+        assert!(validate(&doc.replace("\"medium\": \"tti\"", "\"med\": \"tti\"")).is_err());
         assert!(validate(&doc.replacen("\"time_block\":", "\"tb\":", 1)).is_err());
         assert!(validate(doc.trim_end().trim_end_matches('}')).is_err());
     }
@@ -259,7 +359,7 @@ mod tests {
     fn non_finite_throughput_is_clamped() {
         let mut e = sample();
         e[0].mcells_per_s = f64::INFINITY;
-        let doc = render(&e, &[]);
+        let doc = render(&e, &[], &[]);
         assert!(validate(&doc).is_ok());
         assert!(doc.contains("\"mcells_per_s\": 0.000"));
     }

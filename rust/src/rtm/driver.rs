@@ -9,22 +9,24 @@
 //! dispatch layer, so one config field switches a whole shot between
 //! the naive oracle, the simd baseline, and the matrix-unit engine
 //! (the paper's headline 1.8× RTM claim is exactly this switch).
+//!
+//! The shot loop itself lives in [`super::service`]: [`run_shot`] is a
+//! thin compatibility wrapper that runs a single validated
+//! [`ShotJob`](super::service::ShotJob) through a one-shot
+//! [`SurveyRunner`](super::service::SurveyRunner).  This module keeps
+//! the configuration ([`RtmConfig`], [`ConfigError`]), the report type,
+//! and the simulated-platform cost model the service attaches to every
+//! shot.
 
-use super::boundary::Sponge;
 use super::image::Image;
-use super::media::{self, TtiMedia, VtiMedia};
-use super::tti::{self, TtiScratch, TtiState, TtiTrig};
-use super::vti::{self, VtiScratch, VtiState};
-use super::wavelet;
-use crate::grid::Grid3;
+use super::service;
 use crate::simulator::roofline::{self, Engine as SimEngine, MemKind};
 use crate::simulator::Platform;
-use crate::stencil::coeffs::{first_deriv, second_deriv};
 use crate::stencil::{Engine, EngineKind, StencilSpec};
-use crate::util::Timer;
+use std::fmt;
 
 /// Anisotropy model of the run.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Medium {
     /// Vertical transverse isotropy (pseudo-acoustic σH/σV pair).
     Vti,
@@ -61,7 +63,7 @@ pub struct RtmConfig {
     /// receiver plane depth (z index)
     pub receiver_z: usize,
     /// Stencil engine both propagation passes dispatch through
-    /// (`EngineKind::by_name` selects it from configs/CLI).
+    /// (`EngineKind::parse` selects it from configs/CLI).
     pub engine: EngineKind,
     /// Requested temporal-blocking depth (`[runtime] time_block`, CLI
     /// `rtm --time_block`).  [`run_shot`] consumes it through
@@ -124,7 +126,120 @@ impl RtmConfig {
     pub fn shot_time_block(&self) -> usize {
         self.time_block.clamp(1, 1)
     }
+
+    /// Check every field combination that would otherwise panic deep
+    /// inside the propagators: the grid must cover the radius-4 stencil
+    /// halo, the receiver plane and source position must be in bounds,
+    /// and the snapshot cadence must be non-zero.  Called by the
+    /// [`ShotJob`](super::service::ShotJob) builder and the config/CLI
+    /// paths, so a bad field is reported where the file or flag context
+    /// still exists.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let min = MIN_GRID_CELLS;
+        if self.nz < min || self.nx < min || self.ny < min {
+            return Err(ConfigError::GridTooSmall {
+                nz: self.nz,
+                nx: self.nx,
+                ny: self.ny,
+                min,
+            });
+        }
+        if self.steps == 0 {
+            return Err(ConfigError::ZeroSteps);
+        }
+        if self.snap_every == 0 {
+            return Err(ConfigError::ZeroSnapEvery);
+        }
+        if self.receiver_z >= self.nz {
+            return Err(ConfigError::ReceiverOutOfRange {
+                receiver_z: self.receiver_z,
+                nz: self.nz,
+            });
+        }
+        let src = self.src_pos();
+        if src.0 >= self.nz || src.1 >= self.nx || src.2 >= self.ny {
+            return Err(ConfigError::SourceOutOfBounds {
+                src,
+                dims: (self.nz, self.nx, self.ny),
+            });
+        }
+        Ok(())
+    }
 }
+
+/// Minimum grid cells per axis: the radius-4 halo on both sides plus
+/// the centre plane (2·4 + 1) — smaller grids have no interior for the
+/// propagators to update.
+pub const MIN_GRID_CELLS: usize = 9;
+
+/// A rejected [`RtmConfig`] (or survey-scheduler shape): every variant
+/// is a field combination that used to panic deep inside
+/// `run_shot_vti`'s grid indexing instead of failing at construction.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ConfigError {
+    /// A grid axis is smaller than the propagation stencil needs.
+    GridTooSmall {
+        /// Configured z extent.
+        nz: usize,
+        /// Configured x extent.
+        nx: usize,
+        /// Configured y extent.
+        ny: usize,
+        /// Minimum cells per axis ([`MIN_GRID_CELLS`]).
+        min: usize,
+    },
+    /// `steps = 0`: the shot would propagate nothing and image nothing.
+    ZeroSteps,
+    /// `snap_every = 0`: the imaging loop's snapshot cadence divides by
+    /// this value.
+    ZeroSnapEvery,
+    /// The receiver plane lies at or below the bottom of the grid.
+    ReceiverOutOfRange {
+        /// Configured receiver depth index.
+        receiver_z: usize,
+        /// Grid z extent it must stay inside.
+        nz: usize,
+    },
+    /// The (resolved) source position lies outside the grid.
+    SourceOutOfBounds {
+        /// Resolved source position (`RtmConfig::src_pos`).
+        src: (usize, usize, usize),
+        /// Grid extents it must stay inside.
+        dims: (usize, usize, usize),
+    },
+    /// A survey was configured with zero queue shards.
+    ZeroShards,
+    /// A survey was configured with a zero-capacity bounded queue.
+    ZeroQueueCapacity,
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::GridTooSmall { nz, nx, ny, min } => write!(
+                f,
+                "grid {nz}×{nx}×{ny} is smaller than the radius-4 stencil halo \
+                 (need ≥ {min} cells per axis)"
+            ),
+            ConfigError::ZeroSteps => write!(f, "steps must be ≥ 1"),
+            ConfigError::ZeroSnapEvery => {
+                write!(f, "snap_every must be ≥ 1 (the imaging loop divides by it)")
+            }
+            ConfigError::ReceiverOutOfRange { receiver_z, nz } => {
+                write!(f, "receiver_z {receiver_z} is outside the grid (nz = {nz})")
+            }
+            ConfigError::SourceOutOfBounds { src, dims } => write!(
+                f,
+                "source position ({}, {}, {}) is outside the {}×{}×{} grid",
+                src.0, src.1, src.2, dims.0, dims.1, dims.2
+            ),
+            ConfigError::ZeroShards => write!(f, "survey shards must be ≥ 1"),
+            ConfigError::ZeroQueueCapacity => write!(f, "survey queue_capacity must be ≥ 1"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 /// Metrics of one shot.
 #[derive(Clone, Debug)]
@@ -253,180 +368,22 @@ pub fn simulate_step(cfg: &RtmConfig, engine: SimEngine, p: &Platform) -> (f64, 
 }
 
 /// Run one complete RTM shot (forward + backward + imaging).
+///
+/// Compatibility wrapper over the survey service: builds a single
+/// validated [`ShotJob`](service::ShotJob) and runs it through a
+/// one-shot [`SurveyRunner`](service::SurveyRunner) (one shard,
+/// full-state snapshots) — bit-identical to the pre-service shot loop.
+/// Panics on an invalid config; callers that want the error instead use
+/// the builder + [`SurveyRunner::run_one`](service::SurveyRunner::run_one).
 pub fn run_shot(cfg: &RtmConfig, platform: &Platform) -> (Image, RtmReport) {
-    match cfg.medium {
-        Medium::Vti => run_shot_vti(cfg, platform),
-        Medium::Tti => run_shot_tti(cfg, platform),
-    }
-}
-
-fn record_plane(g: &Grid3, z: usize) -> Vec<f32> {
-    g.as_slice()[z * g.nx * g.ny..(z + 1) * g.nx * g.ny].to_vec()
-}
-
-fn inject_plane(g: &mut Grid3, z: usize, plane: &[f32]) {
-    let off = z * g.nx * g.ny;
-    for (d, &s) in g.as_mut_slice()[off..off + plane.len()].iter_mut().zip(plane) {
-        *d += s;
-    }
-}
-
-fn run_shot_vti(cfg: &RtmConfig, platform: &Platform) -> (Image, RtmReport) {
-    let (nz, nx, ny) = (cfg.nz, cfg.nx, cfg.ny);
-    let m: VtiMedia = media::layered_vti(nz, nx, ny, cfg.dx, &media::default_layers());
-    let w2 = second_deriv(4);
-    let eng = cfg.propagation_engine();
-    // per-step sponge + recording clamp the fusable depth to 1 (§III-B)
-    let fuse = cfg.shot_time_block();
-    let sponge = Sponge::new(nz, nx, ny, cfg.sponge_width, 0.0053);
-    let (sz, sx, sy) = cfg.src_pos();
-    let src_series = wavelet::ricker_series(cfg.steps, m.dt, cfg.f0);
-
-    // ---- forward pass: record surface traces + snapshots -----------------
-    let mut st = VtiState::zeros(nz, nx, ny);
-    let mut sc = VtiScratch::new(nz, nx, ny);
-    let mut snaps: Vec<(usize, Grid3)> = Vec::new();
-    let mut traces: Vec<Vec<f32>> = Vec::with_capacity(cfg.steps);
-    let mut energy_trace = Vec::with_capacity(cfg.steps);
-    let t_fwd = Timer::start();
-    for (i, &amp) in src_series.iter().enumerate() {
-        st.inject(sz, sx, sy, amp);
-        vti::step_k_with(&mut st, &m, &w2, &eng, &mut sc, fuse);
-        sponge.apply(&mut st.sh);
-        sponge.apply(&mut st.sv);
-        sponge.apply(&mut st.sh_prev);
-        sponge.apply(&mut st.sv_prev);
-        traces.push(record_plane(&st.sh, cfg.receiver_z));
-        if i % cfg.snap_every == 0 {
-            snaps.push((i, st.sh.clone()));
-        }
-        energy_trace.push(st.energy());
-    }
-    let forward_s = t_fwd.secs();
-    let max_trace = traces
-        .iter()
-        .flat_map(|t| t.iter().map(|v| v.abs()))
-        .fold(0.0f32, f32::max);
-
-    // ---- backward pass: re-inject time-reversed traces, correlate --------
-    let mut rb = VtiState::zeros(nz, nx, ny);
-    let mut image = Image::zeros(nz, nx, ny);
-    let mut snap_iter = snaps.iter().rev().peekable();
-    let t_bwd = Timer::start();
-    for i in (0..cfg.steps).rev() {
-        inject_plane(&mut rb.sh, cfg.receiver_z, &traces[i]);
-        inject_plane(&mut rb.sv, cfg.receiver_z, &traces[i]);
-        vti::step_k_with(&mut rb, &m, &w2, &eng, &mut sc, fuse);
-        sponge.apply(&mut rb.sh);
-        sponge.apply(&mut rb.sv);
-        sponge.apply(&mut rb.sh_prev);
-        sponge.apply(&mut rb.sv_prev);
-        if let Some(&&(si, _)) = snap_iter.peek() {
-            if si == i {
-                let (_, snap) = snap_iter.next().unwrap();
-                image.accumulate(snap, &rb.sh);
-            }
-        }
-    }
-    let backward_s = t_bwd.secs();
-
-    let (sim_step_s, sim_util) = simulate_step(cfg, SimEngine::MMStencil, platform);
-    let (sim_step_simd_s, _) = simulate_step(cfg, SimEngine::Simd, platform);
-    let report = RtmReport {
-        medium: Medium::Vti,
-        steps: cfg.steps,
-        cells: cfg.cells(),
-        forward_s,
-        backward_s,
-        gpoints_per_s: (2.0 * 2.0 * cfg.steps as f64 * cfg.cells() as f64)
-            / (forward_s + backward_s),
-        energy_trace,
-        max_trace,
-        image_energy: image.img.energy(),
-        sim_bandwidth_util: sim_util,
-        sim_step_s,
-        sim_step_simd_s,
-    };
-    (image, report)
-}
-
-fn run_shot_tti(cfg: &RtmConfig, platform: &Platform) -> (Image, RtmReport) {
-    let (nz, nx, ny) = (cfg.nz, cfg.nx, cfg.ny);
-    let m: TtiMedia = media::layered_tti(nz, nx, ny, cfg.dx, &media::default_layers());
-    let trig = TtiTrig::new(&m);
-    let w2 = second_deriv(4);
-    let w1 = first_deriv(4);
-    let eng = cfg.propagation_engine();
-    // per-step sponge + recording clamp the fusable depth to 1 (§III-B)
-    let fuse = cfg.shot_time_block();
-    let sponge = Sponge::new(nz, nx, ny, cfg.sponge_width, 0.0053);
-    let (sz, sx, sy) = cfg.src_pos();
-    let src_series = wavelet::ricker_series(cfg.steps, m.dt, cfg.f0);
-
-    let mut st = TtiState::zeros(nz, nx, ny);
-    let mut sc = TtiScratch::new(nz, nx, ny);
-    let mut snaps: Vec<(usize, Grid3)> = Vec::new();
-    let mut traces: Vec<Vec<f32>> = Vec::with_capacity(cfg.steps);
-    let mut energy_trace = Vec::with_capacity(cfg.steps);
-    let t_fwd = Timer::start();
-    for (i, &amp) in src_series.iter().enumerate() {
-        st.inject(sz, sx, sy, amp);
-        tti::step_k_with(&mut st, &m, &trig, &w2, &w1, &eng, &mut sc, fuse);
-        sponge.apply(&mut st.p);
-        sponge.apply(&mut st.q);
-        sponge.apply(&mut st.p_prev);
-        sponge.apply(&mut st.q_prev);
-        traces.push(record_plane(&st.p, cfg.receiver_z));
-        if i % cfg.snap_every == 0 {
-            snaps.push((i, st.p.clone()));
-        }
-        energy_trace.push(st.energy());
-    }
-    let forward_s = t_fwd.secs();
-    let max_trace = traces
-        .iter()
-        .flat_map(|t| t.iter().map(|v| v.abs()))
-        .fold(0.0f32, f32::max);
-
-    let mut rb = TtiState::zeros(nz, nx, ny);
-    let mut image = Image::zeros(nz, nx, ny);
-    let mut snap_iter = snaps.iter().rev().peekable();
-    let t_bwd = Timer::start();
-    for i in (0..cfg.steps).rev() {
-        inject_plane(&mut rb.p, cfg.receiver_z, &traces[i]);
-        inject_plane(&mut rb.q, cfg.receiver_z, &traces[i]);
-        tti::step_k_with(&mut rb, &m, &trig, &w2, &w1, &eng, &mut sc, fuse);
-        sponge.apply(&mut rb.p);
-        sponge.apply(&mut rb.q);
-        sponge.apply(&mut rb.p_prev);
-        sponge.apply(&mut rb.q_prev);
-        if let Some(&&(si, _)) = snap_iter.peek() {
-            if si == i {
-                let (_, snap) = snap_iter.next().unwrap();
-                image.accumulate(snap, &rb.p);
-            }
-        }
-    }
-    let backward_s = t_bwd.secs();
-
-    let (sim_step_s, sim_util) = simulate_step(cfg, SimEngine::MMStencil, platform);
-    let (sim_step_simd_s, _) = simulate_step(cfg, SimEngine::Simd, platform);
-    let report = RtmReport {
-        medium: Medium::Tti,
-        steps: cfg.steps,
-        cells: cfg.cells(),
-        forward_s,
-        backward_s,
-        gpoints_per_s: (2.0 * 2.0 * cfg.steps as f64 * cfg.cells() as f64)
-            / (forward_s + backward_s),
-        energy_trace,
-        max_trace,
-        image_energy: image.img.energy(),
-        sim_bandwidth_util: sim_util,
-        sim_step_s,
-        sim_step_simd_s,
-    };
-    (image, report)
+    let job = service::ShotJob::builder(cfg.clone())
+        .build()
+        .unwrap_or_else(|e| panic!("run_shot: invalid RtmConfig: {e}"));
+    let mut runner = service::SurveyRunner::new(service::SurveyConfig::one_shot(), platform)
+        .expect("one-shot survey config is statically valid");
+    runner
+        .run_one(job)
+        .expect("a shot without injected faults cannot fail")
 }
 
 #[cfg(test)]
@@ -586,5 +543,55 @@ mod tests {
                 "image energies diverge across engines: {energies:?}"
             );
         }
+    }
+
+    #[test]
+    fn validate_accepts_defaults_and_names_each_bad_field() {
+        for medium in [Medium::Vti, Medium::Tti] {
+            assert_eq!(RtmConfig::small(medium).validate(), Ok(()));
+        }
+        let base = RtmConfig::small(Medium::Vti);
+
+        let mut c = base.clone();
+        c.ny = MIN_GRID_CELLS - 1;
+        assert!(matches!(c.validate(), Err(ConfigError::GridTooSmall { .. })));
+        assert!(c.validate().unwrap_err().to_string().contains("stencil halo"));
+
+        let mut c = base.clone();
+        c.steps = 0;
+        assert_eq!(c.validate(), Err(ConfigError::ZeroSteps));
+
+        let mut c = base.clone();
+        c.snap_every = 0;
+        assert_eq!(c.validate(), Err(ConfigError::ZeroSnapEvery));
+
+        let mut c = base.clone();
+        c.receiver_z = c.nz;
+        assert!(matches!(c.validate(), Err(ConfigError::ReceiverOutOfRange { .. })));
+
+        // an explicit source outside the grid is caught...
+        let mut c = base.clone();
+        c.src = Some((c.nz, 0, 0));
+        assert!(matches!(c.validate(), Err(ConfigError::SourceOutOfBounds { .. })));
+        // ...and so is the *derived* default source when the sponge is
+        // deeper than the grid (the old panic-inside-inject case)
+        let mut c = base.clone();
+        c.nz = MIN_GRID_CELLS;
+        c.nx = MIN_GRID_CELLS;
+        c.ny = MIN_GRID_CELLS;
+        assert!(
+            matches!(c.validate(), Err(ConfigError::SourceOutOfBounds { .. })),
+            "sponge_width {} puts the default source below a {}-cell grid",
+            c.sponge_width,
+            MIN_GRID_CELLS
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid RtmConfig")]
+    fn run_shot_rejects_invalid_configs_at_the_door() {
+        let mut cfg = RtmConfig::small(Medium::Vti);
+        cfg.receiver_z = cfg.nz + 5;
+        run_shot(&cfg, &Platform::paper());
     }
 }

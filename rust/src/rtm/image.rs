@@ -47,6 +47,23 @@ impl Image {
         self.correlations += 1;
     }
 
+    /// Merge another partial image into this one (pointwise sums of
+    /// both accumulators plus the correlation count) — the combine step
+    /// of the survey service's tree reduction
+    /// ([`rtm::service::reduce_images`](crate::rtm::service::reduce_images)).
+    /// Addition of already-accumulated sums, so `merge` is exact where
+    /// interleaved `accumulate` calls would reassociate rounding.
+    pub fn merge(&mut self, other: &Image) {
+        assert_eq!(other.img.shape(), self.img.shape());
+        for (d, &s) in self.img.data.iter_mut().zip(&other.img.data) {
+            *d += s;
+        }
+        for (d, &s) in self.illum.data.iter_mut().zip(&other.illum.data) {
+            *d += s;
+        }
+        self.correlations += other.correlations;
+    }
+
     /// Illumination-normalized image.
     pub fn normalized(&self) -> Grid3 {
         let eps = 1e-12f32.max(self.illum.data.iter().cloned().fold(0.0, f32::max) * 1e-6);

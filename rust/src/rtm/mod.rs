@@ -8,8 +8,12 @@
 //! * [`tti`]      — TTI propagator (six second derivatives incl. mixed,
 //!   composed from 1D first-derivative stencils);
 //! * [`image`]    — zero-lag cross-correlation imaging condition;
-//! * [`driver`]   — shot loop: forward + backward propagation, imaging,
-//!   metrics, and PJRT artifact cross-checks.
+//! * [`driver`]   — one-shot entry point ([`driver::run_shot`]), config
+//!   validation, metrics, and PJRT artifact cross-checks;
+//! * [`service`]  — survey-scale shot scheduler: sharded work-stealing
+//!   queue, pipelined forward/adjoint pumps, strategy-selectable
+//!   wavefield checkpointing, tree-reduced image accumulation
+//!   ([`ShotJob`](service::ShotJob) / [`SurveyRunner`](service::SurveyRunner)).
 //!
 //! Ownership/engine contract (DESIGN.md §10): the propagators own their
 //! wavefield grids and whole-grid scratch (`VtiScratch`/`TtiScratch`);
@@ -27,6 +31,7 @@ pub mod driver;
 pub mod image;
 pub mod media;
 pub mod pjrt_prop;
+pub mod service;
 pub mod tti;
 pub mod vti;
 pub mod wavelet;

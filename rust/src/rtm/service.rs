@@ -1,0 +1,1530 @@
+//! Survey-scale RTM shot service (paper §V-F): the "heavy traffic"
+//! workload — many independent shots over a shared velocity model —
+//! scheduled across simulated NUMA rank shards on a persistent
+//! [`coordinator::runtime`](crate::coordinator::runtime) pool.
+//!
+//! The public surface is a job/session pair:
+//!
+//! * [`ShotJob`] — one shot, built through a validating builder
+//!   ([`ShotJob::builder`] → [`ShotJobBuilder::build`] returns
+//!   `Result`, so a bad field fails at construction, not inside the
+//!   propagators);
+//! * [`SurveyRunner`] — a session owning the worker runtime, the media
+//!   cache, and the scheduler shape ([`SurveyConfig`]); [`run`]
+//!   (`SurveyRunner::run`) drives a whole survey, [`run_one`]
+//!   (`SurveyRunner::run_one`) a single job (the implementation behind
+//!   [`driver::run_shot`](super::driver::run_shot)).
+//!
+//! Scheduler shape (DESIGN.md §12): shots enter a **bounded sharded
+//! queue** ([`ShardedQueue`]) — one FIFO lane per simulated NUMA rank
+//! shard, submission blocks at capacity (backpressure, items are never
+//! dropped).  Each shard runs a two-stage pipeline on two dedicated
+//! pool workers: a *forward pump* pops shots (stealing from other
+//! shards' tails when its own lane is dry) and records traces plus
+//! wavefield snapshots, then hands the product through a one-slot
+//! rendezvous to the shard's *adjoint pump*, which back-propagates and
+//! images.  A shot's adjoint therefore overlaps the next shot's forward
+//! on the same shard, and different shots overlap across shards.
+//!
+//! Per-shot wavefield checkpointing for the adjoint pass is strategy-
+//! selectable ([`CheckpointStrategy`]) behind one trait
+//! ([`SnapshotStore`]): full-state snapshots (the classic
+//! store-everything layout) or boundary-saving sparse keyframes that
+//! re-propagate each segment on demand (Griewank-style recompute —
+//! ~`1/keyframe_every` of the snapshot memory for one extra forward
+//! pass of compute).  Propagation is deterministic, so the two
+//! strategies produce **bitwise identical** images — a contract the
+//! tests diff directly.
+//!
+//! Determinism: per-shot results never depend on which worker ran them
+//! (the engine layer's fixed z-slab partition), per-shot images are
+//! keyed by shot id, and the final image is a **tree reduction**
+//! ([`reduce_images`]) whose shape depends only on the shot count — so
+//! the accumulated survey image is bitwise-stable across worker counts
+//! AND shard counts.
+//!
+//! Failure handling: a shot that errors is retried (once, by default),
+//! then recorded as [`ShotStatus::Failed`] in the report — it never
+//! wedges the queue.  [`ShotJobBuilder::inject_faults`] is the chaos
+//! hook the retry-contract tests use.
+
+use super::boundary::Sponge;
+use super::driver::{self, ConfigError, Medium, RtmConfig, RtmReport};
+use super::image::Image;
+use super::media::{self, TtiMedia, VtiMedia};
+use super::tti::{self, TtiScratch, TtiState, TtiTrig};
+use super::vti::{self, VtiScratch, VtiState};
+use super::wavelet;
+use crate::anyhow;
+use crate::coordinator::runtime::{Runtime, RuntimeConfig};
+use crate::grid::Grid3;
+use crate::simulator::roofline::Engine as SimEngine;
+use crate::simulator::Platform;
+use crate::stencil::coeffs::{first_deriv, second_deriv};
+use crate::stencil::Engine;
+use crate::util::err::Result as ErrResult;
+use crate::util::{ParseKindError, Timer};
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+
+// ---------------------------------------------------------------------------
+// checkpoint strategies
+// ---------------------------------------------------------------------------
+
+/// How the forward pass retains the source wavefield for the adjoint
+/// pass's imaging correlation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CheckpointStrategy {
+    /// Store every snapshot field in full — maximum memory, zero
+    /// recompute (the pre-service driver's behaviour).
+    FullState,
+    /// Store sparse full-state *keyframes* and re-propagate each
+    /// segment on demand during the adjoint pass — ~`1/keyframe_every`
+    /// of the snapshot memory for one extra forward pass of compute.
+    /// Bitwise identical to [`FullState`](Self::FullState) because
+    /// propagation is deterministic.
+    BoundarySaving,
+}
+
+impl CheckpointStrategy {
+    /// Canonical names, aligned with the variants — the allowed list
+    /// [`parse`](Self::parse) reports on a miss.
+    pub const NAMES: [&'static str; 2] = ["full_state", "boundary_saving"];
+
+    /// Runtime selection by canonical name — the third member of the
+    /// crate's `parse` trio (`StencilSpec::parse`, `EngineKind::parse`),
+    /// sharing [`ParseKindError`] so a typo reads identically no matter
+    /// which selector rejected it.
+    pub fn parse(name: &str) -> Result<Self, ParseKindError> {
+        match name {
+            "full_state" => Ok(CheckpointStrategy::FullState),
+            "boundary_saving" => Ok(CheckpointStrategy::BoundarySaving),
+            _ => Err(ParseKindError::new("checkpoint strategy", name, &Self::NAMES)),
+        }
+    }
+
+    /// Canonical name; `parse(strategy.name())` round-trips.
+    pub fn name(self) -> &'static str {
+        match self {
+            CheckpointStrategy::FullState => "full_state",
+            CheckpointStrategy::BoundarySaving => "boundary_saving",
+        }
+    }
+}
+
+/// A full propagator state capture: both fields and both previous-step
+/// fields at one forward step — enough to resume propagation bitwise
+/// (the leapfrog scheme's entire time-dependent state).
+pub struct PropCheckpoint {
+    /// Forward step index the state was captured *after* (the resume
+    /// point is step `step + 1`).
+    pub step: usize,
+    a: Grid3,
+    b: Grid3,
+    a_prev: Grid3,
+    b_prev: Grid3,
+}
+
+impl PropCheckpoint {
+    /// Retained f32 words (4 full grids).
+    pub fn words(&self) -> usize {
+        self.a.data.len() + self.b.data.len() + self.a_prev.data.len() + self.b_prev.data.len()
+    }
+}
+
+/// Strategy-erased snapshot storage: the forward pass [`record`]s
+/// (`SnapshotStore::record`) every step, the adjoint pass [`fetch`]es
+/// (`SnapshotStore::fetch`) snapshot fields back in descending step
+/// order.  One trait so tests can run the same shot through both
+/// strategies and diff the images bitwise.
+pub trait SnapshotStore: Send {
+    /// Which strategy this store implements.
+    fn strategy(&self) -> CheckpointStrategy;
+
+    /// Observe forward step `step`.  `snap_due` marks the imaging
+    /// cadence (`step % snap_every == 0`); `field` is the imaging field
+    /// at this step, and `capture` produces a full propagator
+    /// checkpoint on demand (only called if the store wants one).
+    fn record(
+        &mut self,
+        step: usize,
+        snap_due: bool,
+        field: &Grid3,
+        capture: &mut dyn FnMut() -> PropCheckpoint,
+    );
+
+    /// Return the imaging field of snapshot step `step`.  Called in
+    /// strictly descending step order over exactly the `snap_due`
+    /// steps.  `replay` re-propagates from a checkpoint up to a step,
+    /// returning every snapshot field in `(checkpoint.step, upto]` —
+    /// recompute-based stores use it to fill a segment in one pass.
+    fn fetch(
+        &mut self,
+        step: usize,
+        replay: &mut dyn FnMut(&PropCheckpoint, usize) -> Vec<(usize, Grid3)>,
+    ) -> Grid3;
+
+    /// Currently retained f32 words — the memory half of the
+    /// strategy trade-off (measured by tests between the passes).
+    fn retained_words(&self) -> usize;
+}
+
+/// [`CheckpointStrategy::FullState`]: every snapshot field stored
+/// whole, popped back LIFO (the adjoint walks steps in reverse).
+pub struct FullStateStore {
+    snaps: Vec<(usize, Grid3)>,
+}
+
+impl FullStateStore {
+    /// An empty store.
+    pub fn new() -> Self {
+        Self { snaps: Vec::new() }
+    }
+}
+
+impl Default for FullStateStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SnapshotStore for FullStateStore {
+    fn strategy(&self) -> CheckpointStrategy {
+        CheckpointStrategy::FullState
+    }
+
+    fn record(
+        &mut self,
+        step: usize,
+        snap_due: bool,
+        field: &Grid3,
+        _capture: &mut dyn FnMut() -> PropCheckpoint,
+    ) {
+        if snap_due {
+            self.snaps.push((step, field.clone()));
+        }
+    }
+
+    fn fetch(
+        &mut self,
+        step: usize,
+        _replay: &mut dyn FnMut(&PropCheckpoint, usize) -> Vec<(usize, Grid3)>,
+    ) -> Grid3 {
+        let (s, g) = self.snaps.pop().expect("fetch past the recorded snapshots");
+        assert_eq!(s, step, "snapshots must be fetched in recording order, reversed");
+        g
+    }
+
+    fn retained_words(&self) -> usize {
+        self.snaps.iter().map(|(_, g)| g.data.len()).sum()
+    }
+}
+
+/// Default keyframe cadence of [`BoundarySavingStore`]: one full
+/// checkpoint (4 grids) per 8 snapshot steps → half the footprint of
+/// full-state storage, amortized further as `snap_every` shrinks.
+pub const DEFAULT_KEYFRAME_EVERY: usize = 8;
+
+/// [`CheckpointStrategy::BoundarySaving`]: sparse keyframe checkpoints
+/// plus on-demand segment replay.  Each segment between keyframes is
+/// re-propagated exactly once during the adjoint pass (the transient
+/// replayed fields are handed out as the imaging loop reaches them), so
+/// the total recompute is one extra forward pass.
+pub struct BoundarySavingStore {
+    keyframe_every: usize,
+    snaps_seen: usize,
+    keyframes: Vec<PropCheckpoint>,
+    replayed: Vec<(usize, Grid3)>,
+}
+
+impl BoundarySavingStore {
+    /// A store keeping one keyframe per `keyframe_every` snapshot steps
+    /// (clamped to ≥ 1).
+    pub fn new(keyframe_every: usize) -> Self {
+        Self {
+            keyframe_every: keyframe_every.max(1),
+            snaps_seen: 0,
+            keyframes: Vec::new(),
+            replayed: Vec::new(),
+        }
+    }
+}
+
+impl SnapshotStore for BoundarySavingStore {
+    fn strategy(&self) -> CheckpointStrategy {
+        CheckpointStrategy::BoundarySaving
+    }
+
+    fn record(
+        &mut self,
+        _step: usize,
+        snap_due: bool,
+        _field: &Grid3,
+        capture: &mut dyn FnMut() -> PropCheckpoint,
+    ) {
+        if !snap_due {
+            return;
+        }
+        if self.snaps_seen % self.keyframe_every == 0 {
+            self.keyframes.push(capture());
+        }
+        self.snaps_seen += 1;
+    }
+
+    fn fetch(
+        &mut self,
+        step: usize,
+        replay: &mut dyn FnMut(&PropCheckpoint, usize) -> Vec<(usize, Grid3)>,
+    ) -> Grid3 {
+        if let Some(pos) = self.replayed.iter().position(|(s, _)| *s == step) {
+            return self.replayed.swap_remove(pos).1;
+        }
+        let ki = self
+            .keyframes
+            .iter()
+            .rposition(|k| k.step <= step)
+            .expect("a keyframe precedes every snapshot step");
+        if self.keyframes[ki].step == step {
+            // the keyframe's own imaging field answers directly
+            return self.keyframes[ki].a.clone();
+        }
+        let segment = replay(&self.keyframes[ki], step);
+        let mut wanted = None;
+        for (s, g) in segment {
+            if s == step {
+                wanted = Some(g);
+            } else {
+                // later fetches (lower steps come later; higher steps
+                // never recur) drain these without another replay
+                self.replayed.push((s, g));
+            }
+        }
+        wanted.expect("replay covers the requested step")
+    }
+
+    fn retained_words(&self) -> usize {
+        self.keyframes.iter().map(PropCheckpoint::words).sum::<usize>()
+            + self.replayed.iter().map(|(_, g)| g.data.len()).sum::<usize>()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bounded sharded work-stealing queue
+// ---------------------------------------------------------------------------
+
+/// One dequeued item plus its scheduling provenance.
+pub struct Popped<T> {
+    /// The dequeued item.
+    pub item: T,
+    /// True when the item was stolen from another shard's tail.
+    pub stolen: bool,
+    /// Global dequeue sequence number (1-based) — the FIFO-fairness
+    /// audit trail ([`ShotRecord::dequeue_seq`]).
+    pub seq: u64,
+}
+
+/// `try_push` rejection at capacity: carries the item back to the
+/// caller — a bounded submission is refused, never dropped.
+#[derive(Debug)]
+pub struct QueueFull<T>(
+    /// The refused item, returned intact.
+    pub T,
+);
+
+struct QueueState<T> {
+    lanes: Vec<VecDeque<T>>,
+    closed: bool,
+    pops: u64,
+}
+
+/// Bounded multi-producer multi-consumer queue with one FIFO lane per
+/// shard and tail-stealing between shards.
+///
+/// Contracts (pinned by the queue tests):
+/// * per-shard FIFO — a consumer popping its own lane sees submission
+///   order;
+/// * backpressure — [`push`](Self::push) blocks at `capacity` items per
+///   lane ([`try_push`](Self::try_push) refuses, returning the item);
+///   nothing is ever dropped;
+/// * stealing — an empty lane's consumer takes the *tail* of the
+///   fullest... of the next non-empty lane in ring order, keeping the
+///   victim's own FIFO head intact;
+/// * termination — after [`close`](Self::close), `pop` drains what
+///   remains and then returns `None`.
+pub struct ShardedQueue<T> {
+    state: Mutex<QueueState<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+impl<T> ShardedQueue<T> {
+    /// A queue with `shards` lanes of `capacity_per_shard` items each
+    /// (both clamped to ≥ 1).
+    pub fn new(shards: usize, capacity_per_shard: usize) -> Self {
+        Self {
+            state: Mutex::new(QueueState {
+                lanes: (0..shards.max(1)).map(|_| VecDeque::new()).collect(),
+                closed: false,
+                pops: 0,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity: capacity_per_shard.max(1),
+        }
+    }
+
+    /// Lane count.
+    pub fn shards(&self) -> usize {
+        self.state.lock().unwrap().lanes.len()
+    }
+
+    /// Items currently waiting in `shard`'s lane.
+    pub fn len(&self, shard: usize) -> usize {
+        self.state.lock().unwrap().lanes[shard].len()
+    }
+
+    /// True when `shard`'s lane holds no waiting items.
+    pub fn is_empty(&self, shard: usize) -> bool {
+        self.len(shard) == 0
+    }
+
+    /// Enqueue on `shard`, blocking while the lane is at capacity.
+    /// Panics if the queue was closed (a bug in the submitting driver,
+    /// not a load condition).
+    pub fn push(&self, shard: usize, item: T) {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            assert!(!g.closed, "push on a closed queue");
+            if g.lanes[shard].len() < self.capacity {
+                g.lanes[shard].push_back(item);
+                self.not_empty.notify_all();
+                return;
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking enqueue: at capacity the item is handed back in
+    /// [`QueueFull`] instead of blocking or being dropped.
+    pub fn try_push(&self, shard: usize, item: T) -> Result<(), QueueFull<T>> {
+        let mut g = self.state.lock().unwrap();
+        assert!(!g.closed, "push on a closed queue");
+        if g.lanes[shard].len() < self.capacity {
+            g.lanes[shard].push_back(item);
+            self.not_empty.notify_all();
+            Ok(())
+        } else {
+            Err(QueueFull(item))
+        }
+    }
+
+    /// Dequeue for `shard`: own lane's head first, then steal from the
+    /// tail of the next non-empty lane in ring order.  Blocks while
+    /// everything is empty; returns `None` once the queue is closed and
+    /// fully drained.
+    pub fn pop(&self, shard: usize) -> Option<Popped<T>> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = g.lanes[shard].pop_front() {
+                g.pops += 1;
+                let seq = g.pops;
+                self.not_full.notify_all();
+                return Some(Popped { item, stolen: false, seq });
+            }
+            let n = g.lanes.len();
+            for d in 1..n {
+                let victim = (shard + d) % n;
+                if let Some(item) = g.lanes[victim].pop_back() {
+                    g.pops += 1;
+                    let seq = g.pops;
+                    self.not_full.notify_all();
+                    return Some(Popped { item, stolen: true, seq });
+                }
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Mark the queue closed: no further pushes; consumers drain the
+    /// remaining items and then see `None`.
+    pub fn close(&self) {
+        let mut g = self.state.lock().unwrap();
+        g.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// jobs
+// ---------------------------------------------------------------------------
+
+/// One validated shot: an [`RtmConfig`] that passed
+/// [`RtmConfig::validate`], plus service-level options.  Construct via
+/// [`ShotJob::builder`].
+#[derive(Clone, Debug)]
+pub struct ShotJob {
+    cfg: RtmConfig,
+    faults: usize,
+}
+
+impl ShotJob {
+    /// Start building a job from a shot configuration.
+    pub fn builder(cfg: RtmConfig) -> ShotJobBuilder {
+        ShotJobBuilder { cfg, faults: 0 }
+    }
+
+    /// The validated shot configuration.
+    pub fn config(&self) -> &RtmConfig {
+        &self.cfg
+    }
+
+    /// Injected fault budget (see [`ShotJobBuilder::inject_faults`]).
+    pub fn injected_faults(&self) -> usize {
+        self.faults
+    }
+}
+
+/// Builder for [`ShotJob`]: field setters plus a validating
+/// [`build`](Self::build) — the only way to construct a job, so every
+/// job in the queue is known-good before a worker touches it.
+#[derive(Clone, Debug)]
+pub struct ShotJobBuilder {
+    cfg: RtmConfig,
+    faults: usize,
+}
+
+impl ShotJobBuilder {
+    /// Override the source position (z, x, y).
+    pub fn src(mut self, z: usize, x: usize, y: usize) -> Self {
+        self.cfg.src = Some((z, x, y));
+        self
+    }
+
+    /// Override the propagation engine.
+    pub fn engine(mut self, kind: crate::stencil::EngineKind) -> Self {
+        self.cfg.engine = kind;
+        self
+    }
+
+    /// Override the propagator worker-parallelism.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.cfg.threads = threads;
+        self
+    }
+
+    /// Override the timestep count.
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.cfg.steps = steps;
+        self
+    }
+
+    /// Chaos hook for the retry contract: the shot's first `n` forward
+    /// attempts fail with an injected error before touching the
+    /// propagators.  With the default retry budget (one retry), `n = 1`
+    /// exercises retry-then-succeed and `n = 2` retry-then-fail.
+    pub fn inject_faults(mut self, n: usize) -> Self {
+        self.faults = n;
+        self
+    }
+
+    /// Validate and seal the job ([`RtmConfig::validate`]).
+    pub fn build(self) -> Result<ShotJob, ConfigError> {
+        self.cfg.validate()?;
+        Ok(ShotJob { cfg: self.cfg, faults: self.faults })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// survey session
+// ---------------------------------------------------------------------------
+
+/// Scheduler shape of a [`SurveyRunner`].
+#[derive(Clone, Copy, Debug)]
+pub struct SurveyConfig {
+    /// Simulated NUMA rank shards: queue lanes × forward/adjoint pump
+    /// pairs.
+    pub shards: usize,
+    /// Bounded queue capacity per shard (backpressure threshold).
+    pub queue_capacity: usize,
+    /// Wavefield checkpointing strategy for every shot's adjoint pass.
+    pub checkpoint: CheckpointStrategy,
+    /// Keyframe cadence of the boundary-saving strategy, in snapshot
+    /// steps ([`DEFAULT_KEYFRAME_EVERY`]).
+    pub keyframe_every: usize,
+    /// Pool workers; 0 derives `2 × shards` (one forward + one adjoint
+    /// pump per shard).  Values below `2 × shards` are raised to it —
+    /// every pump must hold a worker for the pipeline to be
+    /// deadlock-free.
+    pub workers: usize,
+    /// Retries granted to a failed shot before it is recorded as
+    /// [`ShotStatus::Failed`].
+    pub max_retries: usize,
+}
+
+impl Default for SurveyConfig {
+    fn default() -> Self {
+        Self {
+            shards: 2,
+            queue_capacity: 4,
+            checkpoint: CheckpointStrategy::FullState,
+            keyframe_every: DEFAULT_KEYFRAME_EVERY,
+            workers: 0,
+            max_retries: 1,
+        }
+    }
+}
+
+impl SurveyConfig {
+    /// The single-shot shape [`driver::run_shot`] wraps: one shard, one
+    /// queue slot, full-state snapshots, no retries.
+    pub fn one_shot() -> Self {
+        Self { shards: 1, queue_capacity: 1, max_retries: 0, ..Self::default() }
+    }
+}
+
+/// Terminal state of one queued shot.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ShotStatus {
+    /// Forward + adjoint completed; the shot contributed to the image.
+    Completed,
+    /// All attempts failed; the error is carried verbatim.
+    Failed(String),
+}
+
+/// Scheduling + outcome record of one shot, indexed by submission id.
+#[derive(Clone, Debug)]
+pub struct ShotRecord {
+    /// Submission index (also the tree-reduction key).
+    pub id: usize,
+    /// Shard whose pipeline processed the shot.
+    pub shard: usize,
+    /// True when the processing shard stole the shot from another
+    /// shard's lane.
+    pub stolen: bool,
+    /// Forward attempts consumed (`> 1` means retried).
+    pub attempts: usize,
+    /// Global dequeue sequence number ([`Popped::seq`]).
+    pub dequeue_seq: u64,
+    /// Terminal state.
+    pub status: ShotStatus,
+    /// Per-shot metrics (completed shots only).
+    pub report: Option<RtmReport>,
+}
+
+/// Result of [`SurveyRunner::run`]: the accumulated image plus the
+/// per-shot audit trail and throughput accounting.
+pub struct SurveyReport {
+    /// Tree-reduced image over every completed shot (`None` if none
+    /// completed).
+    pub image: Option<Image>,
+    /// One record per submitted shot, in submission order.
+    pub records: Vec<ShotRecord>,
+    /// Shards the survey ran on.
+    pub shards: usize,
+    /// Checkpoint strategy every shot used.
+    pub checkpoint: CheckpointStrategy,
+    /// Wall time of the whole survey (submission to last image).
+    pub wall_s: f64,
+}
+
+impl SurveyReport {
+    /// Shots that completed and contributed to the image.
+    pub fn completed(&self) -> usize {
+        self.records
+            .iter()
+            .filter(|r| r.status == ShotStatus::Completed)
+            .count()
+    }
+
+    /// Shots recorded as failed after exhausting their retries.
+    pub fn failed(&self) -> usize {
+        self.records.len() - self.completed()
+    }
+
+    /// Total retry attempts consumed across all shots.
+    pub fn retries(&self) -> usize {
+        self.records.iter().map(|r| r.attempts.saturating_sub(1)).sum()
+    }
+
+    /// Shots that ran on a shard other than their home lane.
+    pub fn stolen(&self) -> usize {
+        self.records.iter().filter(|r| r.stolen).count()
+    }
+
+    /// Completed-shot throughput — the paper-§V-F survey metric
+    /// reported in `BENCH_engines.json`'s `survey_entries`.
+    pub fn shots_per_hour(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.completed() as f64 * 3600.0 / self.wall_s
+    }
+}
+
+type MediaKey = (Medium, usize, usize, usize, u64);
+
+/// Shared, immutable earth model — one per distinct (medium, dims,
+/// spacing), reused across every shot of the survey.
+#[derive(Clone)]
+enum ShotMedia {
+    Vti(Arc<VtiMedia>),
+    Tti(Arc<TtiMedia>),
+}
+
+impl ShotMedia {
+    fn dt(&self) -> f64 {
+        match self {
+            ShotMedia::Vti(m) => m.dt,
+            ShotMedia::Tti(m) => m.dt,
+        }
+    }
+}
+
+/// A survey session: owns the persistent worker runtime the pumps run
+/// on, the media cache, and the scheduler shape.  Reused across
+/// [`run`](Self::run) calls (the runtime spawns once).
+pub struct SurveyRunner {
+    cfg: SurveyConfig,
+    platform: Platform,
+    rt: Runtime,
+    media: HashMap<MediaKey, ShotMedia>,
+}
+
+impl SurveyRunner {
+    /// Build a session, validating the scheduler shape and spawning its
+    /// worker pool (`workers`, raised to at least `2 × shards`).
+    pub fn new(cfg: SurveyConfig, platform: &Platform) -> Result<Self, ConfigError> {
+        if cfg.shards == 0 {
+            return Err(ConfigError::ZeroShards);
+        }
+        if cfg.queue_capacity == 0 {
+            return Err(ConfigError::ZeroQueueCapacity);
+        }
+        let workers = cfg.workers.max(2 * cfg.shards);
+        let rt = Runtime::new(RuntimeConfig {
+            workers,
+            cores_per_numa: workers.div_ceil(cfg.shards),
+            numa_nodes: cfg.shards,
+        });
+        Ok(Self { cfg, platform: platform.clone(), rt, media: HashMap::new() })
+    }
+
+    /// The session's scheduler shape.
+    pub fn config(&self) -> &SurveyConfig {
+        &self.cfg
+    }
+
+    /// Workers in the session's pool (≥ `2 × shards`).
+    pub fn workers(&self) -> usize {
+        self.rt.workers()
+    }
+
+    fn media_for(&mut self, cfg: &RtmConfig) -> ShotMedia {
+        let key: MediaKey = (cfg.medium, cfg.nz, cfg.nx, cfg.ny, cfg.dx.to_bits());
+        self.media
+            .entry(key)
+            .or_insert_with(|| match cfg.medium {
+                Medium::Vti => ShotMedia::Vti(Arc::new(media::layered_vti(
+                    cfg.nz,
+                    cfg.nx,
+                    cfg.ny,
+                    cfg.dx,
+                    &media::default_layers(),
+                ))),
+                Medium::Tti => ShotMedia::Tti(Arc::new(media::layered_tti(
+                    cfg.nz,
+                    cfg.nx,
+                    cfg.ny,
+                    cfg.dx,
+                    &media::default_layers(),
+                ))),
+            })
+            .clone()
+    }
+
+    /// Run a whole survey: enqueue every job (blocking on backpressure),
+    /// pipeline forward/adjoint passes across the shards, and
+    /// tree-reduce the per-shot images into one survey image.
+    pub fn run(&mut self, jobs: Vec<ShotJob>) -> SurveyReport {
+        let t_wall = Timer::start();
+        let shards = self.cfg.shards;
+        let n = jobs.len();
+        // resolve shared media up front (needs &mut self; everything
+        // after this point borrows the session immutably)
+        let queued: Vec<QueuedShot> = jobs
+            .into_iter()
+            .enumerate()
+            .map(|(id, job)| QueuedShot {
+                id,
+                home: id % shards,
+                media: self.media_for(job.config()),
+                job,
+            })
+            .collect();
+
+        let scfg = self.cfg;
+        let platform = &self.platform;
+        let queue: ShardedQueue<QueuedShot> = ShardedQueue::new(shards, scfg.queue_capacity);
+        let handoffs: Vec<Handoff> = (0..shards).map(|_| Handoff::new()).collect();
+        let outcomes: Vec<Mutex<Option<ShotOutcome>>> = (0..n).map(|_| Mutex::new(None)).collect();
+
+        let pump = |p: usize| {
+            if p < shards {
+                forward_pump(p, &scfg, &queue, &handoffs[p], &outcomes);
+            } else {
+                adjoint_pump(p - shards, platform, &handoffs[p - shards], &outcomes);
+            }
+        };
+        {
+            // SAFETY: the handle joins on wait() (and on drop, even
+            // during unwind) before `pump` and its borrows go away
+            let handle = unsafe { self.rt.submit_scoped(2 * shards, &pump) };
+            for qs in queued {
+                let home = qs.home;
+                queue.push(home, qs); // bounded: blocks under backpressure
+            }
+            queue.close();
+            handle.wait();
+        }
+
+        let mut records = Vec::with_capacity(n);
+        let mut images = Vec::new();
+        for slot in outcomes {
+            let o = slot
+                .into_inner()
+                .unwrap()
+                .expect("every queued shot reaches a terminal record");
+            if let Some(img) = o.image {
+                images.push(img);
+            }
+            records.push(o.record);
+        }
+        SurveyReport {
+            image: reduce_images(images),
+            records,
+            shards,
+            checkpoint: scfg.checkpoint,
+            wall_s: t_wall.secs(),
+        }
+    }
+
+    /// Run a single job (the implementation behind
+    /// [`driver::run_shot`]); a failed job surfaces its error.
+    pub fn run_one(&mut self, job: ShotJob) -> ErrResult<(Image, RtmReport)> {
+        let mut report = self.run(vec![job]);
+        let record = report.records.pop().expect("one job in, one record out");
+        match record.status {
+            ShotStatus::Completed => Ok((
+                report.image.expect("completed shot produced an image"),
+                record.report.expect("completed shot carries a report"),
+            )),
+            ShotStatus::Failed(e) => {
+                Err(anyhow!("shot failed after {} attempts: {e}", record.attempts))
+            }
+        }
+    }
+}
+
+/// Tree-reduce per-shot images in id order: adjacent pairs merge at
+/// each level, so the reduction shape — and therefore every f32
+/// rounding decision — depends only on the image *count*, never on
+/// worker or shard scheduling.  `None` for an empty survey.
+pub fn reduce_images(images: Vec<Image>) -> Option<Image> {
+    let mut level = images;
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        let mut it = level.into_iter();
+        while let Some(mut a) = it.next() {
+            if let Some(b) = it.next() {
+                a.merge(&b);
+            }
+            next.push(a);
+        }
+        level = next;
+    }
+    level.pop()
+}
+
+// ---------------------------------------------------------------------------
+// pipeline internals
+// ---------------------------------------------------------------------------
+
+struct QueuedShot {
+    id: usize,
+    home: usize,
+    media: ShotMedia,
+    job: ShotJob,
+}
+
+/// Forward product handed from a shard's forward pump to its adjoint
+/// pump through the one-slot rendezvous.
+struct FwdProduct {
+    id: usize,
+    stolen: bool,
+    attempts: usize,
+    seq: u64,
+    job: ShotJob,
+    media: ShotMedia,
+    store: Box<dyn SnapshotStore>,
+    fwd: FwdTrace,
+}
+
+struct ShotOutcome {
+    image: Option<Image>,
+    record: ShotRecord,
+}
+
+/// One-slot rendezvous between a shard's forward and adjoint pumps:
+/// `put` blocks while the slot is full (the adjoint is the pipeline's
+/// natural backpressure), `take` blocks until a product or the
+/// producer's `finish` mark arrives.
+struct Handoff {
+    state: Mutex<(Option<FwdProduct>, bool)>,
+    ready: Condvar,
+    space: Condvar,
+}
+
+impl Handoff {
+    fn new() -> Self {
+        Self { state: Mutex::new((None, false)), ready: Condvar::new(), space: Condvar::new() }
+    }
+
+    fn put(&self, p: FwdProduct) {
+        let mut g = self.state.lock().unwrap();
+        while g.0.is_some() {
+            g = self.space.wait(g).unwrap();
+        }
+        g.0 = Some(p);
+        self.ready.notify_all();
+    }
+
+    fn finish(&self) {
+        self.state.lock().unwrap().1 = true;
+        self.ready.notify_all();
+    }
+
+    fn take(&self) -> Option<FwdProduct> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if let Some(p) = g.0.take() {
+                self.space.notify_all();
+                return Some(p);
+            }
+            if g.1 {
+                return None;
+            }
+            g = self.ready.wait(g).unwrap();
+        }
+    }
+}
+
+fn make_store(cfg: &SurveyConfig) -> Box<dyn SnapshotStore> {
+    match cfg.checkpoint {
+        CheckpointStrategy::FullState => Box::new(FullStateStore::new()),
+        CheckpointStrategy::BoundarySaving => {
+            Box::new(BoundarySavingStore::new(cfg.keyframe_every))
+        }
+    }
+}
+
+fn forward_pump(
+    shard: usize,
+    scfg: &SurveyConfig,
+    queue: &ShardedQueue<QueuedShot>,
+    handoff: &Handoff,
+    outcomes: &[Mutex<Option<ShotOutcome>>],
+) {
+    while let Some(popped) = queue.pop(shard) {
+        let qs = popped.item;
+        let mut attempts = 0;
+        let result = loop {
+            attempts += 1;
+            if attempts <= qs.job.faults {
+                if attempts > scfg.max_retries {
+                    break Err(format!("injected fault on attempt {attempts}"));
+                }
+                continue; // retry: the next attempt may clear the fault budget
+            }
+            let mut store = make_store(scfg);
+            let fwd = forward_pass(qs.job.config(), &qs.media, store.as_mut());
+            break Ok((store, fwd));
+        };
+        match result {
+            Ok((store, fwd)) => handoff.put(FwdProduct {
+                id: qs.id,
+                stolen: popped.stolen,
+                attempts,
+                seq: popped.seq,
+                job: qs.job,
+                media: qs.media,
+                store,
+                fwd,
+            }),
+            Err(e) => {
+                // record the failure and keep pumping — a dead shot
+                // must never wedge the lane
+                *outcomes[qs.id].lock().unwrap() = Some(ShotOutcome {
+                    image: None,
+                    record: ShotRecord {
+                        id: qs.id,
+                        shard,
+                        stolen: popped.stolen,
+                        attempts,
+                        dequeue_seq: popped.seq,
+                        status: ShotStatus::Failed(e),
+                        report: None,
+                    },
+                });
+            }
+        }
+    }
+    handoff.finish();
+}
+
+fn adjoint_pump(
+    shard: usize,
+    platform: &Platform,
+    handoff: &Handoff,
+    outcomes: &[Mutex<Option<ShotOutcome>>],
+) {
+    while let Some(mut p) = handoff.take() {
+        let cfg = p.job.config();
+        let (image, backward_s) = adjoint_pass(cfg, &p.media, p.store.as_mut(), &p.fwd.traces);
+        let report = assemble_report(cfg, platform, p.fwd, backward_s, image.img.energy());
+        *outcomes[p.id].lock().unwrap() = Some(ShotOutcome {
+            image: Some(image),
+            record: ShotRecord {
+                id: p.id,
+                shard,
+                stolen: p.stolen,
+                attempts: p.attempts,
+                dequeue_seq: p.seq,
+                status: ShotStatus::Completed,
+                report: Some(report),
+            },
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the shot passes (op order preserved bit-for-bit from the pre-service
+// driver: inject → step → sponge ×4 → record/snapshot → energy)
+// ---------------------------------------------------------------------------
+
+fn record_plane(g: &Grid3, z: usize) -> Vec<f32> {
+    g.as_slice()[z * g.nx * g.ny..(z + 1) * g.nx * g.ny].to_vec()
+}
+
+fn inject_plane(g: &mut Grid3, z: usize, plane: &[f32]) {
+    let off = z * g.nx * g.ny;
+    for (d, &s) in g.as_mut_slice()[off..off + plane.len()].iter_mut().zip(plane) {
+        *d += s;
+    }
+}
+
+enum PropKind {
+    Vti { m: Arc<VtiMedia>, w2: Vec<f32>, st: VtiState, sc: VtiScratch },
+    Tti {
+        m: Arc<TtiMedia>,
+        trig: TtiTrig,
+        w2: Vec<f32>,
+        w1: Vec<f32>,
+        st: TtiState,
+        sc: TtiScratch,
+    },
+}
+
+/// Medium-erased propagator: one forward/adjoint step machine holding
+/// the state pair, scratch, engine, and sponge of a shot.
+struct Prop {
+    eng: Engine,
+    fuse: usize,
+    sponge: Sponge,
+    kind: PropKind,
+}
+
+impl Prop {
+    fn new(cfg: &RtmConfig, media: &ShotMedia) -> Self {
+        let (nz, nx, ny) = (cfg.nz, cfg.nx, cfg.ny);
+        let kind = match media {
+            ShotMedia::Vti(m) => PropKind::Vti {
+                m: m.clone(),
+                w2: second_deriv(4),
+                st: VtiState::zeros(nz, nx, ny),
+                sc: VtiScratch::new(nz, nx, ny),
+            },
+            ShotMedia::Tti(m) => PropKind::Tti {
+                trig: TtiTrig::new(m),
+                m: m.clone(),
+                w2: second_deriv(4),
+                w1: first_deriv(4),
+                st: TtiState::zeros(nz, nx, ny),
+                sc: TtiScratch::new(nz, nx, ny),
+            },
+        };
+        Prop {
+            eng: cfg.propagation_engine(),
+            // per-step sponge + recording clamp the depth to 1 (§III-B)
+            fuse: cfg.shot_time_block(),
+            sponge: Sponge::new(nz, nx, ny, cfg.sponge_width, 0.0053),
+            kind,
+        }
+    }
+
+    fn step_and_sponge(&mut self) {
+        match &mut self.kind {
+            PropKind::Vti { m, w2, st, sc } => {
+                vti::step_k_with(st, m, w2, &self.eng, sc, self.fuse);
+                self.sponge.apply(&mut st.sh);
+                self.sponge.apply(&mut st.sv);
+                self.sponge.apply(&mut st.sh_prev);
+                self.sponge.apply(&mut st.sv_prev);
+            }
+            PropKind::Tti { m, trig, w2, w1, st, sc } => {
+                tti::step_k_with(st, m, trig, w2, w1, &self.eng, sc, self.fuse);
+                self.sponge.apply(&mut st.p);
+                self.sponge.apply(&mut st.q);
+                self.sponge.apply(&mut st.p_prev);
+                self.sponge.apply(&mut st.q_prev);
+            }
+        }
+    }
+
+    /// One forward step: point-source injection, propagation, sponge.
+    fn advance_source(&mut self, src: (usize, usize, usize), amp: f32) {
+        match &mut self.kind {
+            PropKind::Vti { st, .. } => st.inject(src.0, src.1, src.2, amp),
+            PropKind::Tti { st, .. } => st.inject(src.0, src.1, src.2, amp),
+        }
+        self.step_and_sponge();
+    }
+
+    /// One adjoint step: receiver-plane trace injection into both
+    /// fields, propagation, sponge.
+    fn advance_traces(&mut self, z: usize, plane: &[f32]) {
+        match &mut self.kind {
+            PropKind::Vti { st, .. } => {
+                inject_plane(&mut st.sh, z, plane);
+                inject_plane(&mut st.sv, z, plane);
+            }
+            PropKind::Tti { st, .. } => {
+                inject_plane(&mut st.p, z, plane);
+                inject_plane(&mut st.q, z, plane);
+            }
+        }
+        self.step_and_sponge();
+    }
+
+    fn imaging_field(&self) -> &Grid3 {
+        match &self.kind {
+            PropKind::Vti { st, .. } => &st.sh,
+            PropKind::Tti { st, .. } => &st.p,
+        }
+    }
+
+    fn record_plane(&self, z: usize) -> Vec<f32> {
+        record_plane(self.imaging_field(), z)
+    }
+
+    fn energy(&self) -> f64 {
+        match &self.kind {
+            PropKind::Vti { st, .. } => st.energy(),
+            PropKind::Tti { st, .. } => st.energy(),
+        }
+    }
+
+    fn checkpoint(&self, step: usize) -> PropCheckpoint {
+        match &self.kind {
+            PropKind::Vti { st, .. } => PropCheckpoint {
+                step,
+                a: st.sh.clone(),
+                b: st.sv.clone(),
+                a_prev: st.sh_prev.clone(),
+                b_prev: st.sv_prev.clone(),
+            },
+            PropKind::Tti { st, .. } => PropCheckpoint {
+                step,
+                a: st.p.clone(),
+                b: st.q.clone(),
+                a_prev: st.p_prev.clone(),
+                b_prev: st.q_prev.clone(),
+            },
+        }
+    }
+
+    fn restore(&mut self, ck: &PropCheckpoint) {
+        match &mut self.kind {
+            PropKind::Vti { st, .. } => {
+                st.sh = ck.a.clone();
+                st.sv = ck.b.clone();
+                st.sh_prev = ck.a_prev.clone();
+                st.sv_prev = ck.b_prev.clone();
+            }
+            PropKind::Tti { st, .. } => {
+                st.p = ck.a.clone();
+                st.q = ck.b.clone();
+                st.p_prev = ck.a_prev.clone();
+                st.q_prev = ck.b_prev.clone();
+            }
+        }
+    }
+}
+
+struct FwdTrace {
+    traces: Vec<Vec<f32>>,
+    energy_trace: Vec<f64>,
+    max_trace: f32,
+    forward_s: f64,
+}
+
+fn forward_pass(cfg: &RtmConfig, media: &ShotMedia, store: &mut dyn SnapshotStore) -> FwdTrace {
+    let mut prop = Prop::new(cfg, media);
+    let src = cfg.src_pos();
+    let src_series = wavelet::ricker_series(cfg.steps, media.dt(), cfg.f0);
+    let mut traces: Vec<Vec<f32>> = Vec::with_capacity(cfg.steps);
+    let mut energy_trace = Vec::with_capacity(cfg.steps);
+    let t_fwd = Timer::start();
+    for (i, &amp) in src_series.iter().enumerate() {
+        prop.advance_source(src, amp);
+        traces.push(prop.record_plane(cfg.receiver_z));
+        let snap_due = i % cfg.snap_every == 0;
+        store.record(i, snap_due, prop.imaging_field(), &mut || prop.checkpoint(i));
+        energy_trace.push(prop.energy());
+    }
+    let forward_s = t_fwd.secs();
+    let max_trace = traces
+        .iter()
+        .flat_map(|t| t.iter().map(|v| v.abs()))
+        .fold(0.0f32, f32::max);
+    FwdTrace { traces, energy_trace, max_trace, forward_s }
+}
+
+fn adjoint_pass(
+    cfg: &RtmConfig,
+    media: &ShotMedia,
+    store: &mut dyn SnapshotStore,
+    traces: &[Vec<f32>],
+) -> (Image, f64) {
+    let mut rb = Prop::new(cfg, media);
+    let mut image = Image::zeros(cfg.nz, cfg.nx, cfg.ny);
+    let src = cfg.src_pos();
+    let src_series = wavelet::ricker_series(cfg.steps, media.dt(), cfg.f0);
+    // segment replay for recompute-based stores: resume from a
+    // checkpoint and collect every snapshot field up to `upto` —
+    // bitwise the original forward pass, because propagation is
+    // deterministic and scratch is fully overwritten each step
+    let mut replay = |ck: &PropCheckpoint, upto: usize| -> Vec<(usize, Grid3)> {
+        let mut p = Prop::new(cfg, media);
+        p.restore(ck);
+        let mut out = Vec::new();
+        for j in ck.step + 1..=upto {
+            p.advance_source(src, src_series[j]);
+            if j % cfg.snap_every == 0 {
+                out.push((j, p.imaging_field().clone()));
+            }
+        }
+        out
+    };
+    let t_bwd = Timer::start();
+    for i in (0..cfg.steps).rev() {
+        rb.advance_traces(cfg.receiver_z, &traces[i]);
+        if i % cfg.snap_every == 0 {
+            let snap = store.fetch(i, &mut replay);
+            image.accumulate(&snap, rb.imaging_field());
+        }
+    }
+    (image, t_bwd.secs())
+}
+
+fn assemble_report(
+    cfg: &RtmConfig,
+    platform: &Platform,
+    fwd: FwdTrace,
+    backward_s: f64,
+    image_energy: f64,
+) -> RtmReport {
+    let (sim_step_s, sim_util) = driver::simulate_step(cfg, SimEngine::MMStencil, platform);
+    let (sim_step_simd_s, _) = driver::simulate_step(cfg, SimEngine::Simd, platform);
+    RtmReport {
+        medium: cfg.medium,
+        steps: cfg.steps,
+        cells: cfg.cells(),
+        forward_s: fwd.forward_s,
+        backward_s,
+        gpoints_per_s: (2.0 * 2.0 * cfg.steps as f64 * cfg.cells() as f64)
+            / (fwd.forward_s + backward_s),
+        energy_trace: fwd.energy_trace,
+        max_trace: fwd.max_trace,
+        image_energy,
+        sim_bandwidth_util: sim_util,
+        sim_step_s,
+        sim_step_simd_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::EngineKind;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn tiny_cfg(medium: Medium) -> RtmConfig {
+        let mut cfg = RtmConfig::small(medium);
+        cfg.nz = 20;
+        cfg.nx = 20;
+        cfg.ny = 20;
+        cfg.steps = 12;
+        cfg.threads = 2;
+        cfg
+    }
+
+    #[test]
+    fn checkpoint_strategy_parses_and_round_trips() {
+        for (name, want) in [
+            ("full_state", CheckpointStrategy::FullState),
+            ("boundary_saving", CheckpointStrategy::BoundarySaving),
+        ] {
+            assert_eq!(CheckpointStrategy::parse(name), Ok(want));
+            assert_eq!(want.name(), name);
+        }
+        let err = CheckpointStrategy::parse("rematerialize").unwrap_err();
+        assert_eq!(err.what, "checkpoint strategy");
+        assert!(err.to_string().contains("full_state | boundary_saving"), "{err}");
+    }
+
+    #[test]
+    fn builder_validates_and_sets_fields() {
+        let job = ShotJob::builder(tiny_cfg(Medium::Vti))
+            .engine(EngineKind::MatrixUnit)
+            .src(10, 9, 8)
+            .steps(7)
+            .build()
+            .unwrap();
+        assert_eq!(job.config().engine, EngineKind::MatrixUnit);
+        assert_eq!(job.config().src, Some((10, 9, 8)));
+        assert_eq!(job.config().steps, 7);
+        // out-of-bounds source rejected by the same builder
+        let err = ShotJob::builder(tiny_cfg(Medium::Vti)).src(99, 0, 0).build().unwrap_err();
+        assert!(matches!(err, ConfigError::SourceOutOfBounds { .. }));
+    }
+
+    // ----- queue contracts -------------------------------------------------
+
+    #[test]
+    fn queue_is_fifo_per_shard_under_saturation() {
+        // capacity 2, 8 items: the producer repeatedly blocks on the
+        // full lane; order must still come out exactly as submitted
+        let q: Arc<ShardedQueue<usize>> = Arc::new(ShardedQueue::new(1, 2));
+        let qc = q.clone();
+        let consumer = std::thread::spawn(move || {
+            let mut seen = Vec::new();
+            while let Some(p) = qc.pop(0) {
+                assert!(!p.stolen);
+                seen.push(p.item);
+                // slow consumer keeps the lane saturated
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            seen
+        });
+        for i in 0..8 {
+            q.push(0, i);
+        }
+        q.close();
+        let seen = consumer.join().unwrap();
+        assert_eq!(seen, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn try_push_refuses_at_capacity_and_returns_the_item() {
+        let q: ShardedQueue<String> = ShardedQueue::new(2, 1);
+        assert!(q.try_push(0, "a".into()).is_ok());
+        // lane 0 is full: refused, item handed back, nothing dropped
+        let QueueFull(back) = q.try_push(0, "b".into()).unwrap_err();
+        assert_eq!(back, "b");
+        assert_eq!(q.len(0), 1);
+        // the other lane still has room
+        assert!(q.try_push(1, "c".into()).is_ok());
+        let drained: Vec<String> = std::iter::from_fn(|| {
+            q.close();
+            q.pop(0).map(|p| p.item)
+        })
+        .collect();
+        assert_eq!(drained, ["a", "c"]);
+    }
+
+    #[test]
+    fn push_blocks_at_capacity_until_a_pop_frees_space() {
+        let q: Arc<ShardedQueue<usize>> = Arc::new(ShardedQueue::new(1, 1));
+        q.push(0, 0);
+        let qc = q.clone();
+        let blocked = Arc::new(AtomicUsize::new(0));
+        let bc = blocked.clone();
+        let producer = std::thread::spawn(move || {
+            qc.push(0, 1); // must block: lane at capacity
+            bc.store(1, Ordering::SeqCst);
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(blocked.load(Ordering::SeqCst), 0, "push returned while full");
+        assert_eq!(q.pop(0).unwrap().item, 0);
+        producer.join().unwrap();
+        assert_eq!(blocked.load(Ordering::SeqCst), 1);
+        assert_eq!(q.pop(0).unwrap().item, 1);
+    }
+
+    #[test]
+    fn empty_shard_steals_from_a_neighbours_tail() {
+        let q: ShardedQueue<usize> = ShardedQueue::new(2, 8);
+        q.push(0, 10);
+        q.push(0, 11);
+        q.push(0, 12);
+        q.close();
+        // shard 1 is empty: it steals shard 0's TAIL (12), leaving the
+        // victim's FIFO head intact
+        let p = q.pop(1).unwrap();
+        assert_eq!((p.item, p.stolen), (12, true));
+        let p = q.pop(0).unwrap();
+        assert_eq!((p.item, p.stolen), (10, false));
+        assert_eq!(q.pop(0).unwrap().item, 11);
+        assert!(q.pop(0).is_none());
+    }
+
+    #[test]
+    fn dequeue_seq_is_a_global_total_order() {
+        let q: ShardedQueue<usize> = ShardedQueue::new(2, 4);
+        q.push(0, 0);
+        q.push(1, 1);
+        q.push(0, 2);
+        q.close();
+        let seqs: Vec<u64> = [q.pop(0), q.pop(1), q.pop(0)]
+            .into_iter()
+            .map(|p| p.unwrap().seq)
+            .collect();
+        assert_eq!(seqs, [1, 2, 3]);
+    }
+
+    // ----- checkpoint stores ----------------------------------------------
+
+    #[test]
+    fn both_strategies_image_bitwise_identically_with_less_memory_retained() {
+        for medium in [Medium::Vti, Medium::Tti] {
+            let mut cfg = tiny_cfg(medium);
+            cfg.snap_every = 2; // 6 snapshot steps over 12 steps
+            let media = match medium {
+                Medium::Vti => ShotMedia::Vti(Arc::new(media::layered_vti(
+                    cfg.nz,
+                    cfg.nx,
+                    cfg.ny,
+                    cfg.dx,
+                    &media::default_layers(),
+                ))),
+                Medium::Tti => ShotMedia::Tti(Arc::new(media::layered_tti(
+                    cfg.nz,
+                    cfg.nx,
+                    cfg.ny,
+                    cfg.dx,
+                    &media::default_layers(),
+                ))),
+            };
+            let mut full = FullStateStore::new();
+            let fwd_full = forward_pass(&cfg, &media, &mut full);
+            // 6 keyframe-spaced snaps → 1 keyframe (4 grids) vs 6 grids
+            let mut sparse = BoundarySavingStore::new(6);
+            let fwd_sparse = forward_pass(&cfg, &media, &mut sparse);
+            assert_eq!(fwd_full.traces, fwd_sparse.traces, "{medium:?}: forward diverged");
+            assert!(
+                sparse.retained_words() < full.retained_words(),
+                "{medium:?}: boundary-saving retains {} words, full-state {}",
+                sparse.retained_words(),
+                full.retained_words()
+            );
+            let (img_full, _) = adjoint_pass(&cfg, &media, &mut full, &fwd_full.traces);
+            let (img_sparse, _) = adjoint_pass(&cfg, &media, &mut sparse, &fwd_sparse.traces);
+            assert_eq!(
+                img_full.img.data, img_sparse.img.data,
+                "{medium:?}: strategies must image bitwise identically"
+            );
+            assert_eq!(img_full.illum.data, img_sparse.illum.data, "{medium:?}");
+            assert_eq!(img_full.correlations, img_sparse.correlations, "{medium:?}");
+        }
+    }
+
+    // ----- reduction -------------------------------------------------------
+
+    #[test]
+    fn tree_reduction_is_deterministic_and_counts_correlations() {
+        let imgs = |seed: u64| -> Vec<Image> {
+            (0..5)
+                .map(|i| {
+                    let mut im = Image::zeros(4, 4, 4);
+                    im.accumulate(
+                        &Grid3::random(4, 4, 4, seed + i),
+                        &Grid3::random(4, 4, 4, seed + 100 + i),
+                    );
+                    im
+                })
+                .collect()
+        };
+        let a = reduce_images(imgs(7)).unwrap();
+        let b = reduce_images(imgs(7)).unwrap();
+        assert_eq!(a.img.data, b.img.data);
+        assert_eq!(a.correlations, 5);
+        assert!(reduce_images(Vec::new()).is_none());
+    }
+
+    // ----- scheduler contracts --------------------------------------------
+
+    #[test]
+    fn failed_shot_is_retried_once_then_surfaced_without_wedging() {
+        let mut runner =
+            SurveyRunner::new(SurveyConfig::default(), &Platform::paper()).unwrap();
+        let jobs = vec![
+            // fails once, succeeds on the retry
+            ShotJob::builder(tiny_cfg(Medium::Vti)).inject_faults(1).build().unwrap(),
+            // exhausts the retry budget → recorded as Failed
+            ShotJob::builder(tiny_cfg(Medium::Vti)).inject_faults(2).build().unwrap(),
+            // healthy shot behind the failures must still complete
+            ShotJob::builder(tiny_cfg(Medium::Vti)).build().unwrap(),
+        ];
+        let report = runner.run(jobs);
+        assert_eq!(report.records.len(), 3);
+        assert_eq!(report.records[0].status, ShotStatus::Completed);
+        assert_eq!(report.records[0].attempts, 2);
+        assert!(matches!(report.records[1].status, ShotStatus::Failed(_)));
+        assert_eq!(report.records[1].attempts, 2);
+        assert_eq!(report.records[2].status, ShotStatus::Completed);
+        assert_eq!((report.completed(), report.failed(), report.retries()), (2, 1, 2));
+        assert!(report.image.is_some(), "completed shots still accumulate");
+        assert!(report.shots_per_hour() > 0.0);
+    }
+
+    #[test]
+    fn run_one_surfaces_a_fault_exhausted_job_as_an_error() {
+        let mut runner =
+            SurveyRunner::new(SurveyConfig::one_shot(), &Platform::paper()).unwrap();
+        let job = ShotJob::builder(tiny_cfg(Medium::Vti)).inject_faults(1).build().unwrap();
+        // one_shot grants no retries: the single injected fault kills it
+        let err = runner.run_one(job).unwrap_err();
+        assert!(err.to_string().contains("injected fault"), "{err}");
+    }
+
+    #[test]
+    fn runner_rejects_degenerate_scheduler_shapes() {
+        let p = Platform::paper();
+        let mut cfg = SurveyConfig::default();
+        cfg.shards = 0;
+        assert_eq!(SurveyRunner::new(cfg, &p).err(), Some(ConfigError::ZeroShards));
+        let mut cfg = SurveyConfig::default();
+        cfg.queue_capacity = 0;
+        assert_eq!(SurveyRunner::new(cfg, &p).err(), Some(ConfigError::ZeroQueueCapacity));
+        // too few workers are raised, not deadlocked
+        let mut cfg = SurveyConfig::default();
+        cfg.shards = 3;
+        cfg.workers = 1;
+        assert_eq!(SurveyRunner::new(cfg, &p).unwrap().workers(), 6);
+    }
+}

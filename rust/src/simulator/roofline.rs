@@ -333,7 +333,7 @@ mod tests {
             ("3DBoxR2", Bound::Compute),
         ];
         for (name, b) in want {
-            let spec = StencilSpec::by_name(name).unwrap();
+            let spec = StencilSpec::parse(name).unwrap();
             assert_eq!(classify(&spec, &plat, MemKind::OnPkg), b, "{name}");
         }
     }
@@ -344,7 +344,7 @@ mod tests {
         let plat = p();
         let cfg = SweepConfig::best(MemKind::OnPkg);
         for name in ["3DStarR4", "3DBoxR2"] {
-            let spec = StencilSpec::by_name(name).unwrap();
+            let spec = StencilSpec::parse(name).unwrap();
             let mm = predict(&spec, N3, Engine::MMStencil, cfg, &plat);
             let simd = predict(&spec, N3, Engine::Simd, cfg, &plat);
             let speedup = simd.time_s / mm.time_s;
@@ -360,7 +360,7 @@ mod tests {
         // SIMD runs at the higher SIMD-mode frequency and the kernel is
         // memory-bound: MMStencil's matrix-mode advantage evaporates and
         // its z-switch overhead costs compute time
-        let spec = StencilSpec::by_name("3DStarR2").unwrap();
+        let spec = StencilSpec::parse("3DStarR2").unwrap();
         let cfg = SweepConfig::best(MemKind::OnPkg);
         let mm = predict(&spec, N3, Engine::MMStencil, cfg, &plat);
         let simd = predict(&spec, N3, Engine::Simd, cfg, &plat);
@@ -372,7 +372,7 @@ mod tests {
     fn compute_bound_3dboxr2_near_85pct_of_peak() {
         // paper §V-C: 3.19 of 3.75 TFLOPS ≈ 85%
         let plat = p();
-        let spec = StencilSpec::by_name("3DBoxR2").unwrap();
+        let spec = StencilSpec::parse("3DBoxR2").unwrap();
         let est = predict(&spec, N3, Engine::MMStencil, SweepConfig::best(MemKind::OnPkg), &plat);
         assert_eq!(est.bound, Bound::Compute);
         let flops = spec.flops_per_point() as f64 * N3 as f64 / est.time_s;
@@ -385,7 +385,7 @@ mod tests {
         // paper: 2D stars sustain >70% on-package utilization
         let plat = p();
         for name in ["2DStarR2", "2DStarR4"] {
-            let spec = StencilSpec::by_name(name).unwrap();
+            let spec = StencilSpec::parse(name).unwrap();
             let est = predict(
                 &spec,
                 N2,
@@ -401,7 +401,7 @@ mod tests {
     fn brick_layout_is_biggest_single_gain_on_onpkg() {
         // Fig. 12 shape: base → +brick is the largest step
         let plat = p();
-        let spec = StencilSpec::by_name("3DStarR4").unwrap();
+        let spec = StencilSpec::parse("3DStarR4").unwrap();
         let base = predict(&spec, N3, Engine::MMStencil, SweepConfig::base(MemKind::OnPkg), &plat);
         let brick = predict(
             &spec,
@@ -421,7 +421,7 @@ mod tests {
     fn snoop_helps_more_on_ddr_than_onpkg_relatively() {
         // paper §V-B: up to 26% on DDR, smaller on on-package
         let plat = p();
-        let spec = StencilSpec::by_name("3DStarR4").unwrap();
+        let spec = StencilSpec::parse("3DStarR4").unwrap();
         let mk = |mem, snoop| {
             predict(
                 &spec,

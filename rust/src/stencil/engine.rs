@@ -1,6 +1,6 @@
 //! First-class engine dispatch: one place that names the compute
-//! engines, selects them at runtime (`by_name`, mirroring
-//! [`StencilSpec::by_name`]), and fans their kernels over the
+//! engines, selects them at runtime (`parse`, mirroring
+//! [`StencilSpec::parse`]), and fans their kernels over the
 //! persistent worker runtime.
 //!
 //! Before this layer existed every call site hardcoded an engine
@@ -28,10 +28,10 @@
 //! use mmstencil::grid::Grid3;
 //! use mmstencil::stencil::{Engine, EngineKind, StencilSpec};
 //!
-//! let spec = StencilSpec::by_name("3DStarR2").unwrap();
+//! let spec = StencilSpec::parse("3DStarR2").unwrap();
 //! let g = Grid3::random(8, 12, 12, 7);
 //! let serial = Engine::new(EngineKind::MatrixUnit).apply3(&spec, &g);
-//! let par = Engine::by_name("matrix_unit").unwrap().with_threads(4).apply3(&spec, &g);
+//! let par = Engine::parse("matrix_unit").unwrap().with_threads(4).apply3(&spec, &g);
 //! assert_eq!(serial.data, par.data); // worker count never changes bits
 //! ```
 
@@ -60,19 +60,32 @@ impl EngineKind {
     /// Every engine kind, in oracle-first order.
     pub const ALL: [EngineKind; 3] = [EngineKind::Naive, EngineKind::Simd, EngineKind::MatrixUnit];
 
+    /// Canonical names, aligned with [`ALL`](Self::ALL) — the allowed
+    /// list [`parse`](Self::parse) reports on a miss.
+    pub const NAMES: [&'static str; 3] = ["naive", "simd", "matrix_unit"];
+
     /// Runtime selection by canonical name (`"naive"`, `"simd"`,
-    /// `"matrix_unit"`) — the `StencilSpec::by_name` analogue used by
-    /// configs, the CLI, and the bench JSON.
-    pub fn by_name(name: &str) -> Option<Self> {
-        Some(match name {
-            "naive" => EngineKind::Naive,
-            "simd" => EngineKind::Simd,
-            "matrix_unit" => EngineKind::MatrixUnit,
-            _ => return None,
-        })
+    /// `"matrix_unit"`) — the `StencilSpec::parse` analogue used by
+    /// configs, the CLI, and the bench JSON.  Unknown names return the
+    /// crate-wide [`ParseKindError`](crate::util::ParseKindError), so a
+    /// typo reads the same no matter which selector rejected it.
+    pub fn parse(name: &str) -> Result<Self, crate::util::ParseKindError> {
+        match name {
+            "naive" => Ok(EngineKind::Naive),
+            "simd" => Ok(EngineKind::Simd),
+            "matrix_unit" => Ok(EngineKind::MatrixUnit),
+            _ => Err(crate::util::ParseKindError::new("engine", name, &Self::NAMES)),
+        }
     }
 
-    /// Canonical name; `by_name(kind.name())` round-trips.
+    /// Deprecated `Option` shim over [`parse`](Self::parse), kept for
+    /// one release.
+    #[deprecated(since = "0.2.0", note = "use `EngineKind::parse`, which names the allowed list")]
+    pub fn by_name(name: &str) -> Option<Self> {
+        Self::parse(name).ok()
+    }
+
+    /// Canonical name; `parse(kind.name())` round-trips.
     pub fn name(self) -> &'static str {
         match self {
             EngineKind::Naive => "naive",
@@ -105,9 +118,16 @@ impl Engine {
     }
 
     /// Runtime selection by canonical kind name (see
-    /// [`EngineKind::by_name`]); `None` for unknown names.
+    /// [`EngineKind::parse`]).
+    pub fn parse(name: &str) -> Result<Self, crate::util::ParseKindError> {
+        EngineKind::parse(name).map(Self::new)
+    }
+
+    /// Deprecated `Option` shim over [`parse`](Self::parse), kept for
+    /// one release.
+    #[deprecated(since = "0.2.0", note = "use `Engine::parse`, which names the allowed list")]
     pub fn by_name(name: &str) -> Option<Self> {
-        EngineKind::by_name(name).map(Self::new)
+        Self::parse(name).ok()
     }
 
     /// The crate-wide default of the `threads`-keyed compatibility
@@ -352,18 +372,36 @@ mod tests {
 
     #[test]
     fn kind_names_round_trip() {
-        for kind in EngineKind::ALL {
-            assert_eq!(EngineKind::by_name(kind.name()), Some(kind), "{kind:?}");
-            assert_eq!(Engine::by_name(kind.name()).unwrap().kind, kind);
+        for (kind, name) in EngineKind::ALL.into_iter().zip(EngineKind::NAMES) {
+            assert_eq!(kind.name(), name, "{kind:?}");
+            assert_eq!(EngineKind::parse(kind.name()), Ok(kind), "{kind:?}");
+            assert_eq!(Engine::parse(kind.name()).unwrap().kind, kind);
         }
     }
 
     #[test]
-    fn unknown_engine_names_are_none() {
+    fn unknown_engine_names_report_the_allowed_list() {
         for bad in ["", "SIMD", "avx512", "matrix-unit", "matrix_unit_par", "naive "] {
-            assert!(EngineKind::by_name(bad).is_none(), "{bad:?}");
-            assert!(Engine::by_name(bad).is_none(), "{bad:?}");
+            let err = EngineKind::parse(bad).unwrap_err();
+            assert_eq!(err.what, "engine", "{bad:?}");
+            assert_eq!(err.name, bad, "{bad:?}");
+            assert!(
+                err.to_string().contains("naive | simd | matrix_unit"),
+                "{bad:?}: {err}"
+            );
+            assert!(Engine::parse(bad).is_err(), "{bad:?}");
         }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_by_name_shims_still_answer() {
+        // one-release compatibility contract: the Option forms mirror
+        // parse() exactly until they are removed
+        assert_eq!(EngineKind::by_name("simd"), Some(EngineKind::Simd));
+        assert_eq!(EngineKind::by_name("avx512"), None);
+        assert_eq!(Engine::by_name("naive").map(|e| e.kind), Some(EngineKind::Naive));
+        assert!(Engine::by_name("").is_none());
     }
 
     #[test]

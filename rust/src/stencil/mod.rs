@@ -12,7 +12,7 @@
 //! * [`box_zeroing`] — the Redundant-Access Zeroing box decomposition.
 //!
 //! [`engine`] is the dispatch layer over them: an [`Engine`] value
-//! selects a kind at runtime ([`EngineKind::by_name`]) and fans sweeps,
+//! selects a kind at runtime ([`EngineKind::parse`]) and fans sweeps,
 //! per-tile region tasks, and the RTM 1-D axis-derivative passes over
 //! the persistent worker runtime with a worker-count-independent
 //! partition (bitwise-stable results for any thread count).
@@ -113,9 +113,19 @@ impl StencilSpec {
         }
     }
 
+    /// The eight Table-I benchmark kernel names, in suite order.
+    pub const NAMES: [&'static str; 8] = [
+        "2DStarR2", "2DStarR4", "2DBoxR2", "2DBoxR3",
+        "3DStarR2", "3DStarR4", "3DBoxR1", "3DBoxR2",
+    ];
+
     /// Benchmark kernel by Table-I name (e.g. "3DStarR4").
-    pub fn by_name(name: &str) -> Option<Self> {
-        Some(match name {
+    ///
+    /// The error names the rejected string and the full Table-I list,
+    /// matching [`EngineKind::parse`](crate::stencil::engine::EngineKind::parse)
+    /// so config/CLI messages read identically across selectors.
+    pub fn parse(name: &str) -> Result<Self, crate::util::ParseKindError> {
+        Ok(match name {
             "2DStarR2" => Self::star2d(2),
             "2DStarR4" => Self::star2d(4),
             "2DBoxR2" => Self::box2d(2),
@@ -124,19 +134,28 @@ impl StencilSpec {
             "3DStarR4" => Self::star3d(4),
             "3DBoxR1" => Self::box3d(1),
             "3DBoxR2" => Self::box3d(2),
-            _ => return None,
+            _ => {
+                return Err(crate::util::ParseKindError::new(
+                    "stencil kernel",
+                    name,
+                    &Self::NAMES,
+                ))
+            }
         })
+    }
+
+    /// Benchmark kernel by Table-I name.
+    #[deprecated(since = "0.2.0", note = "use `StencilSpec::parse`, which names the allowed list")]
+    pub fn by_name(name: &str) -> Option<Self> {
+        Self::parse(name).ok()
     }
 
     /// All eight Table-I benchmark kernels.
     pub fn benchmark_suite() -> Vec<(&'static str, Self)> {
-        [
-            "2DStarR2", "2DStarR4", "2DBoxR2", "2DBoxR3",
-            "3DStarR2", "3DStarR4", "3DBoxR1", "3DBoxR2",
-        ]
-        .iter()
-        .map(|&n| (n, Self::by_name(n).unwrap()))
-        .collect()
+        Self::NAMES
+            .iter()
+            .map(|&n| (n, Self::parse(n).unwrap()))
+            .collect()
     }
 
     /// Number of stencil points (Table I "Points" column).
@@ -175,22 +194,32 @@ mod tests {
             ("3DBoxR1", 27),
             ("3DBoxR2", 125),
         ] {
-            assert_eq!(StencilSpec::by_name(name).unwrap().points(), pts, "{name}");
+            assert_eq!(StencilSpec::parse(name).unwrap().points(), pts, "{name}");
         }
     }
 
     #[test]
-    fn unknown_name_is_none() {
+    fn unknown_names_report_the_table1_list() {
         for bad in ["4DStarR9", "", "3dstarr4", "3DStarR4 ", "3DStar"] {
-            assert!(StencilSpec::by_name(bad).is_none(), "{bad:?}");
+            let err = StencilSpec::parse(bad).unwrap_err();
+            assert_eq!(err.what, "stencil kernel", "{bad:?}");
+            assert_eq!(err.name, bad, "{bad:?}");
+            assert!(err.to_string().contains("3DStarR4"), "{bad:?}: {err}");
         }
     }
 
     #[test]
-    fn by_name_round_trips_the_benchmark_suite() {
+    #[allow(deprecated)]
+    fn deprecated_by_name_shim_still_answers() {
+        assert!(StencilSpec::by_name("3DBoxR1").is_some());
+        assert!(StencilSpec::by_name("3DBoxR9").is_none());
+    }
+
+    #[test]
+    fn parse_round_trips_the_benchmark_suite() {
         // every suite name resolves to the kernel the suite carries
         for (name, spec) in StencilSpec::benchmark_suite() {
-            let again = StencilSpec::by_name(name).unwrap();
+            let again = StencilSpec::parse(name).unwrap();
             assert_eq!(again.pattern, spec.pattern, "{name}");
             assert_eq!(again.ndim, spec.ndim, "{name}");
             assert_eq!(again.radius, spec.radius, "{name}");

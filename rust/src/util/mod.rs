@@ -13,12 +13,14 @@
 pub mod alloc_count;
 pub mod bench;
 pub mod err;
+pub mod parse;
 pub mod prop;
 pub mod rng;
 pub mod stats;
 pub mod table;
 pub mod timer;
 
+pub use parse::ParseKindError;
 pub use rng::XorShift;
 pub use timer::Timer;
 

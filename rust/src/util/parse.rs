@@ -1,0 +1,65 @@
+//! Shared name-parsing error for the crate's runtime-selection trio
+//! (`StencilSpec::parse`, `EngineKind::parse`,
+//! `CheckpointStrategy::parse`).
+//!
+//! Before this module each `by_name` returned a bare `Option`, so every
+//! config/CLI call site invented its own "unknown X" message and the
+//! three selectors drifted apart.  [`ParseKindError`] carries the
+//! rejected name, what kind of name it was, and the allowed list, so an
+//! error reads identically no matter which selector produced it:
+//!
+//! ```text
+//! unknown engine "avx512" (expected one of: naive | simd | matrix_unit)
+//! ```
+//!
+//! The `Option`-returning `by_name` forms remain as deprecated shims for
+//! one release.
+
+use std::fmt;
+
+/// A name that did not match any known kind.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParseKindError {
+    /// What family of names was being parsed ("engine", "stencil
+    /// kernel", "checkpoint strategy") — the word after "unknown".
+    pub what: &'static str,
+    /// The rejected name, verbatim.
+    pub name: String,
+    /// The canonical names that would have parsed.
+    pub allowed: &'static [&'static str],
+}
+
+impl ParseKindError {
+    /// Build an error for `name` against the `what` family.
+    pub fn new(what: &'static str, name: &str, allowed: &'static [&'static str]) -> Self {
+        Self { what, name: name.to_string(), allowed }
+    }
+}
+
+impl fmt::Display for ParseKindError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "unknown {} {:?} (expected one of: {})",
+            self.what,
+            self.name,
+            self.allowed.join(" | ")
+        )
+    }
+}
+
+impl std::error::Error for ParseKindError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn message_names_the_family_and_the_allowed_list() {
+        let e = ParseKindError::new("engine", "avx512", &["naive", "simd", "matrix_unit"]);
+        assert_eq!(
+            e.to_string(),
+            "unknown engine \"avx512\" (expected one of: naive | simd | matrix_unit)"
+        );
+    }
+}

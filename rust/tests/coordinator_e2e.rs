@@ -8,6 +8,7 @@ use mmstencil::coordinator::exchange::{self, Backend};
 use mmstencil::coordinator::tiles::{self, Strategy};
 use mmstencil::grid::{CartDecomp, Grid3};
 use mmstencil::rtm::driver::{run_shot, Medium, RtmConfig};
+use mmstencil::rtm::service::{ShotJob, SurveyConfig, SurveyRunner};
 use mmstencil::rtm::{media, vti};
 use mmstencil::simulator::Platform;
 use mmstencil::stencil::coeffs::second_deriv;
@@ -218,12 +219,21 @@ fn embed(g: &Grid3, r: usize) -> Grid3 {
 
 #[test]
 fn rtm_shot_through_config_file() {
+    // config file → validated ShotJob → survey session: the config path
+    // feeds the same redesigned service surface the CLI uses
     let cfg = config::from_text(
-        "[rtm]\nmedium = \"vti\"\nnz = 24\nnx = 24\nny = 24\nsteps = 30\nthreads = 2\nsponge_width = 6\n",
+        "[rtm]\nmedium = \"vti\"\nnz = 24\nnx = 24\nny = 24\nsteps = 30\nthreads = 2\nsponge_width = 6\n\
+         [survey]\nshards = 2\nqueue_capacity = 2\n",
     )
     .unwrap();
     let p = Platform::paper();
-    let (image, rep) = run_shot(&cfg.rtm, &p);
+    let job = ShotJob::builder(cfg.rtm.clone()).build().expect("config already validated");
+    let mut scfg = SurveyConfig::default();
+    scfg.shards = cfg.survey.shards;
+    scfg.queue_capacity = cfg.survey.queue_capacity;
+    scfg.checkpoint = cfg.survey.checkpoint;
+    let mut runner = SurveyRunner::new(scfg, &p).unwrap();
+    let (image, rep) = runner.run_one(job).unwrap();
     assert!(rep.energy_trace.iter().all(|e| e.is_finite()));
     assert!(image.correlations > 0);
 }

@@ -120,7 +120,7 @@ fn roofline_time_decomposes_and_scales() {
     let p = Platform::paper();
     prop::forall(25, 0x800F, |rng| {
         let (name, _) = StencilSpec::benchmark_suite()[rng.range(0, 7)].clone();
-        let spec = StencilSpec::by_name(name).unwrap();
+        let spec = StencilSpec::parse(name).unwrap();
         let n = rng.range(1 << 18, 1 << 24);
         for mem in [MemKind::Ddr, MemKind::OnPkg] {
             for engine in [Engine::Compiler, Engine::Simd, Engine::MMStencil] {

@@ -1,0 +1,213 @@
+//! Shot-service contract suite (the PR 6 tentpole's acceptance tests):
+//! the survey scheduler (`rtm::service`) must be **deterministic** —
+//! the accumulated image bitwise-stable across worker counts AND shard
+//! counts — must match the sum of sequential `run_shot` images, must
+//! honor the bounded queue's FIFO/backpressure contracts, and must
+//! retry a failed shot once before surfacing it, without ever wedging
+//! a lane.
+//!
+//! Shots here are tiny (20³ × a dozen steps) — the contracts under
+//! test are scheduling and reduction, not throughput.
+
+use mmstencil::rtm::driver::{run_shot, Medium, RtmConfig};
+use mmstencil::rtm::image::Image;
+use mmstencil::rtm::service::{
+    reduce_images, CheckpointStrategy, ShotJob, ShotStatus, SurveyConfig, SurveyRunner,
+};
+use mmstencil::simulator::Platform;
+use mmstencil::stencil::EngineKind;
+
+fn base_cfg(medium: Medium, engine: EngineKind) -> RtmConfig {
+    let mut cfg = RtmConfig::small(medium);
+    cfg.nz = 20;
+    cfg.nx = 20;
+    cfg.ny = 20;
+    cfg.steps = 12;
+    cfg.threads = 2;
+    cfg.engine = engine;
+    cfg
+}
+
+/// A line of shots whose sources sweep the interior x-axis.
+fn shot_line(cfg: &RtmConfig, shots: usize) -> Vec<ShotJob> {
+    let (sz, _, sy) = cfg.src_pos();
+    let lo = cfg.sponge_width + 1;
+    let hi = (cfg.nx - cfg.sponge_width).saturating_sub(2).max(lo);
+    (0..shots)
+        .map(|s| {
+            let sx = lo + (hi - lo) * s / shots.saturating_sub(1).max(1);
+            ShotJob::builder(cfg.clone()).src(sz, sx, sy).build().unwrap()
+        })
+        .collect()
+}
+
+fn run_survey(cfg: &RtmConfig, shots: usize, scfg: SurveyConfig) -> (Image, usize) {
+    let mut runner = SurveyRunner::new(scfg, &Platform::paper()).unwrap();
+    let report = runner.run(shot_line(cfg, shots));
+    assert_eq!(report.completed(), shots, "all shots must complete");
+    (report.image.unwrap(), report.stolen())
+}
+
+/// Acceptance: a mini-survey (8 shots, 2 ranks, matrix-unit engine)
+/// produces an image bitwise-stable across worker counts and shard
+/// counts, whose energy matches the merged sequential `run_shot`
+/// images within 1e-4 relative.
+#[test]
+fn survey_image_is_deterministic_and_matches_sequential_shots() {
+    let cfg = base_cfg(Medium::Vti, EngineKind::MatrixUnit);
+    let shots = 8;
+
+    // sequential oracle: run_shot per job, merged by the same tree
+    let p = Platform::paper();
+    let seq_images: Vec<Image> = shot_line(&cfg, shots)
+        .into_iter()
+        .map(|job| run_shot(job.config(), &p).0)
+        .collect();
+    let oracle = reduce_images(seq_images).unwrap();
+
+    let mut reference: Option<Image> = None;
+    for shards in [1usize, 2, 4] {
+        for workers in [0usize, 2 * shards + 3] {
+            let mut scfg = SurveyConfig::default();
+            scfg.shards = shards;
+            scfg.workers = workers;
+            scfg.queue_capacity = 2; // keep the producer blocking under way
+            let (image, _) = run_survey(&cfg, shots, scfg);
+            match &reference {
+                None => {
+                    // the tree reduction's shape depends only on shot
+                    // count, so the survey equals the oracle EXACTLY
+                    assert_eq!(image.img.data, oracle.img.data, "survey vs sequential oracle");
+                    assert_eq!(image.correlations, oracle.correlations);
+                    // the headline acceptance bound, stated as energy:
+                    // survey image energy vs the summed sequential
+                    // images, ≤ 1e-4 relative (bitwise here)
+                    let rel = (image.img.energy() / oracle.img.energy() - 1.0).abs();
+                    assert!(rel < 1e-4, "energy diverges from sequential sum: rel {rel:.2e}");
+                    reference = Some(image);
+                }
+                Some(r) => {
+                    assert_eq!(
+                        image.img.data, r.img.data,
+                        "shards={shards} workers={workers}: image not bitwise-stable"
+                    );
+                    assert_eq!(image.illum.data, r.illum.data);
+                    assert_eq!(image.correlations, r.correlations);
+                }
+            }
+        }
+    }
+}
+
+/// Cross-shard energy agreement: reducing per-shard partial images and
+/// then merging across shards must agree with the flat reduction over
+/// all shots (< 1e-4 relative on energy; exact here because the
+/// per-shot images are identical inputs either way).
+#[test]
+fn cross_shard_partial_reductions_agree_with_the_flat_reduction() {
+    let cfg = base_cfg(Medium::Vti, EngineKind::Simd);
+    let shots = 8;
+    let shards = 2;
+    let p = Platform::paper();
+    let images: Vec<Image> = shot_line(&cfg, shots)
+        .into_iter()
+        .map(|job| run_shot(job.config(), &p).0)
+        .collect();
+    let flat_energy = reduce_images(
+        shot_line(&cfg, shots)
+            .into_iter()
+            .map(|job| run_shot(job.config(), &p).0)
+            .collect(),
+    )
+    .unwrap()
+    .img
+    .energy();
+
+    // shard-major grouping (id % shards), each shard tree-reduced, then
+    // the partials tree-reduced across shards
+    let mut by_shard: Vec<Vec<Image>> = (0..shards).map(|_| Vec::new()).collect();
+    for (id, im) in images.into_iter().enumerate() {
+        by_shard[id % shards].push(im);
+    }
+    let partials: Vec<Image> =
+        by_shard.into_iter().map(|imgs| reduce_images(imgs).unwrap()).collect();
+    let cross = reduce_images(partials).unwrap();
+    let rel = (cross.img.energy() / flat_energy - 1.0).abs();
+    assert!(rel < 1e-4, "cross-shard energy disagrees: rel {rel:.2e}");
+}
+
+/// Both checkpoint strategies must produce bitwise-identical survey
+/// images — the trait contract, exercised through the whole scheduler.
+#[test]
+fn checkpoint_strategies_agree_bitwise_through_the_scheduler() {
+    let mut cfg = base_cfg(Medium::Tti, EngineKind::Simd);
+    cfg.snap_every = 2;
+    let mut images = Vec::new();
+    for checkpoint in [CheckpointStrategy::FullState, CheckpointStrategy::BoundarySaving] {
+        let mut scfg = SurveyConfig::default();
+        scfg.checkpoint = checkpoint;
+        scfg.keyframe_every = 2;
+        let (image, _) = run_survey(&cfg, 4, scfg);
+        images.push(image);
+    }
+    assert_eq!(
+        images[0].img.data, images[1].img.data,
+        "full-state and boundary-saving imaged differently"
+    );
+    assert_eq!(images[0].illum.data, images[1].illum.data);
+}
+
+/// Failed shots are retried once, then surfaced in the report — and the
+/// shots queued behind them still complete (the lane never wedges).
+#[test]
+fn failed_shots_retry_once_then_surface_without_wedging_the_queue() {
+    let cfg = base_cfg(Medium::Vti, EngineKind::Simd);
+    let mut scfg = SurveyConfig::default();
+    scfg.shards = 1; // one lane: the failing shots sit IN FRONT of healthy ones
+    scfg.queue_capacity = 2;
+    let mut runner = SurveyRunner::new(scfg, &Platform::paper()).unwrap();
+    let mut jobs = Vec::new();
+    // job 0 fails once then succeeds; job 1 exhausts its retry budget
+    jobs.push(ShotJob::builder(cfg.clone()).inject_faults(1).build().unwrap());
+    jobs.push(ShotJob::builder(cfg.clone()).inject_faults(2).build().unwrap());
+    jobs.extend(shot_line(&cfg, 3));
+    let report = runner.run(jobs);
+
+    assert_eq!(report.records.len(), 5);
+    assert_eq!(report.records[0].status, ShotStatus::Completed, "retried shot completes");
+    assert_eq!(report.records[0].attempts, 2);
+    assert!(
+        matches!(report.records[1].status, ShotStatus::Failed(_)),
+        "fault-exhausted shot is surfaced, not retried forever"
+    );
+    assert_eq!(report.records[1].attempts, 2, "exactly one retry before giving up");
+    for r in &report.records[2..] {
+        assert_eq!(r.status, ShotStatus::Completed, "shot {} behind the failures", r.id);
+    }
+    assert_eq!((report.completed(), report.failed(), report.retries()), (4, 1, 2));
+    // per-lane FIFO: the single lane dequeues in submission order
+    let mut seqs: Vec<u64> = report.records.iter().map(|r| r.dequeue_seq).collect();
+    let sorted = {
+        let mut s = seqs.clone();
+        s.sort_unstable();
+        s
+    };
+    assert_eq!(seqs, sorted, "single-lane survey must dequeue FIFO");
+    seqs.dedup();
+    assert_eq!(seqs.len(), 5, "each shot dequeued exactly once");
+    // failures never leak into the image: 4 completed shots accumulated
+    assert_eq!(report.image.unwrap().correlations, 4 * (cfg.steps / cfg.snap_every.max(1)));
+}
+
+/// `run_shot` is now a thin wrapper over the service — its output must
+/// be bitwise the single-job survey path.
+#[test]
+fn run_shot_wrapper_is_bitwise_the_service_path() {
+    let cfg = base_cfg(Medium::Vti, EngineKind::Simd);
+    let p = Platform::paper();
+    let (wrapped, _) = run_shot(&cfg, &p);
+    let mut runner = SurveyRunner::new(SurveyConfig::one_shot(), &p).unwrap();
+    let (direct, _) = runner.run_one(ShotJob::builder(cfg).build().unwrap()).unwrap();
+    assert_eq!(wrapped.img.data, direct.img.data);
+    assert_eq!(wrapped.illum.data, direct.illum.data);
+}

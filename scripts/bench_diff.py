@@ -1,9 +1,13 @@
 #!/usr/bin/env python3
-"""Diff two BENCH_engines.json files (schema mmstencil.bench_engines.v3).
+"""Diff two BENCH_engines.json files (schema mmstencil.bench_engines.v4).
 
 Rows are matched by identity key — sweep rows on (engine, pattern,
-radius, n, time_block), RTM rows on (engine, medium, n, time_block) —
-and the per-row throughput delta is printed as a percentage.  `threads`
+radius, n, time_block), RTM rows on (engine, medium, n, time_block),
+survey rows on (engine, medium, n, shots, shards, checkpoint) — and the
+per-row throughput delta (Mcell/s, or shots/hour for survey rows) is
+printed as a percentage.  v3 baselines simply have no `survey_entries`
+array and stay diffable: the survey section prints every current row as
+new.  `threads`
 is deliberately NOT part of the key: the probe derives it from the
 host's core count, so keying on it would silently stop matching rows
 whenever the runner shape changes (engine labels already distinguish
@@ -26,6 +30,7 @@ import sys
 
 SWEEP_KEY = ("engine", "pattern", "radius", "n", "time_block")
 RTM_KEY = ("engine", "medium", "n", "time_block")
+SURVEY_KEY = ("engine", "medium", "n", "shots", "shards", "checkpoint")
 
 
 def load(path):
@@ -51,7 +56,7 @@ def fmt_key(key, key_fields):
     return " ".join(f"{k}={v}" for k, v in zip(key_fields, key))
 
 
-def diff_section(name, base_rows, cur_rows, key_fields):
+def diff_section(name, base_rows, cur_rows, key_fields, value_field="mcells_per_s", unit="Mcell/s"):
     base = index(base_rows, key_fields)
     cur = index(cur_rows, key_fields)
     worst = None
@@ -59,16 +64,16 @@ def diff_section(name, base_rows, cur_rows, key_fields):
     for key in sorted(cur, key=str):
         b = base.get(key)
         c = cur[key]
-        cv = c.get("mcells_per_s", 0.0)
+        cv = c.get(value_field, 0.0)
         if b is None:
-            print(f"  {fmt_key(key, key_fields):<64} {cv:>10.1f} Mcell/s   (new row)")
+            print(f"  {fmt_key(key, key_fields):<64} {cv:>10.1f} {unit}   (new row)")
             continue
-        bv = b.get("mcells_per_s", 0.0)
+        bv = b.get(value_field, 0.0)
         if bv <= 0.0:
-            print(f"  {fmt_key(key, key_fields):<64} {cv:>10.1f} Mcell/s   (n/a: baseline unmeasured)")
+            print(f"  {fmt_key(key, key_fields):<64} {cv:>10.1f} {unit}   (n/a: baseline unmeasured)")
             continue
         pct = (cv - bv) / bv * 100.0
-        print(f"  {fmt_key(key, key_fields):<64} {cv:>10.1f} Mcell/s   {pct:+7.1f}%")
+        print(f"  {fmt_key(key, key_fields):<64} {cv:>10.1f} {unit}   {pct:+7.1f}%")
         if worst is None or pct < worst:
             worst = pct
     for key in sorted(set(base) - set(cur), key=str):
@@ -97,6 +102,18 @@ def main():
         worst.append(w)
     w = diff_section(
         "rtm entries", base.get("rtm_entries", []), cur.get("rtm_entries", []), RTM_KEY
+    )
+    if w is not None:
+        worst.append(w)
+    # v3 and older baselines have no survey_entries; .get() keeps them
+    # tolerated — every current survey row then prints as new
+    w = diff_section(
+        "survey entries",
+        base.get("survey_entries", []),
+        cur.get("survey_entries", []),
+        SURVEY_KEY,
+        value_field="shots_per_hour",
+        unit="shots/h",
     )
     if w is not None:
         worst.append(w)
