@@ -129,7 +129,7 @@ fn main() {
     println!("ablation 4 — box-stencil Redundant-Access Zeroing (§IV-C.d):");
     let mut t = Table::new(&["kernel", "naive loads/blk", "zeroed loads/blk", "load reduction"]);
     for name in ["2DBoxR2", "2DBoxR3"] {
-        let spec = StencilSpec::by_name(name).unwrap();
+        let spec = StencilSpec::parse(name).unwrap();
         let d = box_zeroing::decompose2(&spec);
         let naive = d.decomposed_traffic(16);
         let zeroed = d.zeroed_traffic(16);

@@ -69,7 +69,7 @@ fn main() {
 
     // ---- the three motivation claims, asserted --------------------------
     let util = |name: &str, e: Engine| {
-        let spec = StencilSpec::by_name(name).unwrap();
+        let spec = StencilSpec::parse(name).unwrap();
         let n = if spec.ndim == 3 { 512usize.pow(3) } else { 8192usize.pow(2) };
         predict(&spec, n, e, engine_cfg(e, MemKind::OnPkg), &p).bandwidth_util
     };

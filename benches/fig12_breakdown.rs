@@ -41,7 +41,7 @@ fn main() {
             "prefetch gain",
         ]);
         for name in KERNELS {
-            let spec = StencilSpec::by_name(name).unwrap();
+            let spec = StencilSpec::parse(name).unwrap();
             let mk = |brick, snoop, prefetch| {
                 let cfg = SweepConfig { mem, brick, snoop, prefetch };
                 predict(&spec, N, Engine::MMStencil, cfg, &p).gstencils_per_s
@@ -85,7 +85,7 @@ fn main() {
     // snoop traffic reduction (paper: 22.12/21.81/26.17/26.17%)
     println!("cache-snoop traffic reduction (paper: 22.1%, 21.8%, 26.2%, 26.2%):");
     for name in KERNELS {
-        let spec = StencilSpec::by_name(name).unwrap();
+        let spec = StencilSpec::parse(name).unwrap();
         let b = BrickDims::default();
         let (_tx, _ty, plain, snoop) = directory::best_tiles(p.l2_bytes, 4, b.bz, b.bx, b.by);
         let red = (1.0 / plain - 1.0 / snoop) / (1.0 / plain + 1.0); // of read+write traffic

@@ -4,8 +4,10 @@
 //! `cargo run --release --example perf_probe`
 //!
 //! Every engine is exercised through the dispatch layer
-//! (`stencil::Engine` + `EngineKind::parse`) — no per-engine closures
-//! — and emits `BENCH_engines.json` (schema `metrics::bench_json` v4):
+//! (`stencil::Engine`, configured via `Engine::from_plan`) — no
+//! per-engine closures — and emits `BENCH_engines.json` (schema
+//! `metrics::bench_json` v5, every sweep/RTM row carrying the active
+//! `TunePlan` string):
 //! per-engine sweep throughput for star/box r ∈ {1, 4}, the headline
 //! 256³ star-r4 sweep at temporal-blocking depths k ∈ {1, 2, 4}
 //! (`Engine::apply3_fused` — the fused rows are the perf-trajectory
@@ -14,7 +16,7 @@
 //! fused `step_k_with` at depth 2), each with per-sweep/per-step
 //! heap-allocation counts (counting global allocator below) and
 //! scratch-arena growth.  A mini-survey through the shot service
-//! (`rtm::service`) emits the v4 `survey_entries` rows — shots/hour
+//! (`rtm::service`) emits the v5 `survey_entries` rows — shots/hour
 //! plus retry/failure accounting, with one injected-fault shot proving
 //! the retry path end to end.  CI runs a shrunken probe (env below),
 //! validates the schema, diffs against the committed baseline
@@ -29,9 +31,9 @@
 //! * `PERF_PROBE_BUDGET_S` — per-bench time budget (default 1.0)
 //! * `BENCH_ENGINES_OUT` — output path (default `BENCH_engines.json`)
 //! * `MMSTENCIL_PROBE_ENGINES` — comma-separated row filter over the
-//!   engine labels (`naive,simd,matrix_unit,matrix_unit_par`); unset
-//!   runs everything.  Filtered probes are for local iteration — CI
-//!   needs the full set.
+//!   engine labels (`naive,simd,matrix_unit,matrix_gemm,
+//!   matrix_unit_par,matrix_gemm_par`); unset runs everything.
+//!   Filtered probes are for local iteration — CI needs the full set.
 
 use mmstencil::coordinator::scratch;
 use mmstencil::grid::Grid3;
@@ -41,7 +43,7 @@ use mmstencil::rtm::service::{ShotJob, SurveyConfig, SurveyRunner};
 use mmstencil::rtm::{media, tti, vti};
 use mmstencil::simulator::Platform;
 use mmstencil::stencil::coeffs::{first_deriv, second_deriv};
-use mmstencil::stencil::{Engine, EngineKind, StencilSpec};
+use mmstencil::stencil::{Engine, EngineKind, StencilSpec, TunePlan};
 use mmstencil::util::alloc_count::CountingAlloc;
 use mmstencil::util::bench::{bench_auto, report};
 
@@ -78,6 +80,13 @@ fn wants(filter: &Option<Vec<String>>, label: &str) -> bool {
     filter.as_ref().map_or(true, |f| f.iter().any(|e| e == label))
 }
 
+/// Plan for `kind` at a parallelism/depth — every probed engine is
+/// configured through this, and its `Display` form is the v5 `plan`
+/// column.
+fn plan_for(kind: EngineKind, threads: usize, time_block: usize) -> TunePlan {
+    TunePlan { engine: kind, threads, time_block, ..TunePlan::simd(1) }
+}
+
 /// Time `f`, then run one extra post-warm-up call under the allocation
 /// counters; returns (mcells/s, allocs, arena grows) for `work` cells.
 fn timed(label: &str, work: f64, budget_s: f64, mut f: impl FnMut()) -> (f64, u64, u64) {
@@ -97,14 +106,15 @@ fn timed(label: &str, work: f64, budget_s: f64, mut f: impl FnMut()) -> (f64, u6
 fn probe_sweep(
     entries: &mut Vec<EngineBench>,
     label: &str,
-    eng: &Engine,
+    plan: &TunePlan,
     spec: &StencilSpec,
     pattern: &str,
     g: &Grid3,
-    time_block: usize,
     budget_s: f64,
 ) {
     let n = g.nz;
+    let eng = Engine::from_plan(plan);
+    let time_block = plan.time_block.max(1);
     let (mcells, allocs, grows) = timed(
         &format!("{label:<16} {pattern}3d r{} {n}^3 k{time_block}", spec.radius),
         (time_block * n * n * n) as f64,
@@ -123,6 +133,7 @@ fn probe_sweep(
         mcells_per_s: mcells,
         allocs_per_sweep: allocs,
         arena_grows_per_sweep: grows,
+        plan: plan.to_string(),
     });
 }
 
@@ -147,12 +158,15 @@ fn main() {
             if !wants(&filter, kind.name()) {
                 continue;
             }
-            let eng = Engine::new(kind);
-            probe_sweep(&mut entries, kind.name(), &eng, &spec, pattern, &g, 1, budget);
+            probe_sweep(&mut entries, kind.name(), &plan_for(kind, 1, 1), &spec, pattern, &g, budget);
         }
-        if wants(&filter, "matrix_unit_par") {
-            let par = Engine::new(EngineKind::MatrixUnit).with_threads(threads);
-            probe_sweep(&mut entries, "matrix_unit_par", &par, &spec, pattern, &g, 1, budget);
+        for (label, kind) in [
+            ("matrix_unit_par", EngineKind::MatrixUnit),
+            ("matrix_gemm_par", EngineKind::MatrixGemm),
+        ] {
+            if wants(&filter, label) {
+                probe_sweep(&mut entries, label, &plan_for(kind, threads, 1), &spec, pattern, &g, budget);
+            }
         }
     }
 
@@ -164,13 +178,16 @@ fn main() {
         let spec = StencilSpec::star3d(4);
         let gb = Grid3::random(big_n, big_n, big_n, 2);
         if wants(&filter, "simd") {
-            let simd = Engine::new(EngineKind::Simd);
-            probe_sweep(&mut entries, "simd", &simd, &spec, "star", &gb, 1, budget);
+            probe_sweep(&mut entries, "simd", &plan_for(EngineKind::Simd, 1, 1), &spec, "star", &gb, budget);
         }
-        if wants(&filter, "matrix_unit_par") {
-            let par = Engine::new(EngineKind::MatrixUnit).with_threads(threads);
-            for k in [1usize, 2, 4] {
-                probe_sweep(&mut entries, "matrix_unit_par", &par, &spec, "star", &gb, k, budget);
+        for (label, kind) in [
+            ("matrix_unit_par", EngineKind::MatrixUnit),
+            ("matrix_gemm_par", EngineKind::MatrixGemm),
+        ] {
+            if wants(&filter, label) {
+                for k in [1usize, 2, 4] {
+                    probe_sweep(&mut entries, label, &plan_for(kind, threads, k), &spec, "star", &gb, budget);
+                }
             }
         }
     }
@@ -187,11 +204,12 @@ fn main() {
         if !wants(&filter, kind.name()) {
             continue;
         }
-        let eng = Engine::new(kind).with_threads(threads);
         // k = 1 is the classic per-step row; k = 2 measures the fused
         // boundary-free entry (step_k_with) so the RTM trajectory is
         // diffable per depth like the sweep rows
         for k in [1usize, 2] {
+            let plan = plan_for(kind, threads, k);
+            let eng = Engine::from_plan(&plan);
             let kwork = k as f64 * work;
             {
                 let mut st = vti::VtiState::zeros(n, n, n);
@@ -212,6 +230,7 @@ fn main() {
                     mcells_per_s: mcells,
                     allocs_per_step: allocs,
                     arena_grows_per_step: grows,
+                    plan: plan.to_string(),
                 });
             }
             {
@@ -233,6 +252,7 @@ fn main() {
                     mcells_per_s: mcells,
                     allocs_per_step: allocs,
                     arena_grows_per_step: grows,
+                    plan: plan.to_string(),
                 });
             }
         }

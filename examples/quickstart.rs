@@ -14,7 +14,7 @@ use mmstencil::coordinator::tiles::Strategy;
 use mmstencil::grid::Grid3;
 use mmstencil::runtime::{Runtime, Tensor};
 use mmstencil::simulator::Platform;
-use mmstencil::stencil::{naive, Engine, StencilSpec};
+use mmstencil::stencil::{naive, tune, Engine, StencilSpec};
 use mmstencil::util::err::Result;
 
 fn main() -> Result<()> {
@@ -56,10 +56,13 @@ fn main() -> Result<()> {
     let g = Grid3::random(64, 64, 64, 2);
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     let (out, stats) = driver::sweep(&spec, &g, threads, Strategy::SnoopAware, &platform);
-    // cross-check through the engine dispatch layer, selected by name
-    let check = Engine::by_name("simd").expect("known engine").apply3(&spec, &g);
+    // cross-check through the plan-driven dispatch layer: the startup
+    // autotuner picks (engine, geometry, depth, fan-out) for this shape
+    let plan = tune::tune_default(&spec, 64, threads);
+    println!("tuned plan for {}: {plan}", tune::shape_key(&spec, 64));
+    let check = Engine::from_plan(&plan).apply3(&spec, &g);
     println!(
-        "coordinator sweep 64³ ({} threads): {:.3} Gcell/s host, max|Δ| vs simd = {:.2e}",
+        "coordinator sweep 64³ ({} threads): {:.3} Gcell/s host, max|Δ| vs tuned plan = {:.2e}",
         threads,
         stats.gcells_per_s,
         out.max_abs_diff(&check)

@@ -10,7 +10,7 @@ pub mod toml;
 
 use crate::coordinator::tiles::Strategy;
 use crate::rtm::driver::{Medium, RtmConfig};
-use crate::stencil::StencilSpec;
+use crate::stencil::{StencilSpec, TunePlan};
 
 /// A stencil-sweep experiment description.
 #[derive(Clone, Debug)]
@@ -125,8 +125,18 @@ impl RuntimeSpec {
     }
 }
 
-/// Full config file: a sweep and/or an RTM run, plus the runtime and
-/// survey tables.
+/// Tuned-plan configuration (`[tune]` table): an explicit
+/// [`TunePlan`] string pinning engine + block geometry + fused-sweep
+/// depth in one value (`plan = "engine=matrix_gemm vl=16 vz=4 tb=2
+/// threads=8"`).  Absent, the drivers fall back to the legacy per-knob
+/// keys or run the startup autotuner themselves.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TuneSpec {
+    pub plan: Option<TunePlan>,
+}
+
+/// Full config file: a sweep and/or an RTM run, plus the runtime,
+/// survey, and tune tables.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
     pub title: String,
@@ -134,6 +144,7 @@ pub struct ExperimentConfig {
     pub rtm: RtmConfig,
     pub runtime: RuntimeSpec,
     pub survey: SurveySpec,
+    pub tune: TuneSpec,
 }
 
 impl Default for ExperimentConfig {
@@ -144,6 +155,7 @@ impl Default for ExperimentConfig {
             rtm: RtmConfig::small(Medium::Vti),
             runtime: RuntimeSpec::default(),
             survey: SurveySpec::default(),
+            tune: TuneSpec::default(),
         }
     }
 }
@@ -204,6 +216,13 @@ pub fn from_text(text: &str) -> Result<ExperimentConfig, toml::ParseError> {
     rt.time_block = doc.usize_or("runtime", "time_block", rt.time_block).max(1);
     // the propagators' fused entries read the same knob
     cfg.rtm.time_block = rt.time_block;
+
+    if let Some(plan) = doc.get("tune", "plan").and_then(toml::Value::as_str) {
+        cfg.tune.plan = Some(
+            TunePlan::parse(plan)
+                .map_err(|e| toml::ParseError { line: 0, msg: format!("[tune] plan: {e}") })?,
+        );
+    }
 
     let sv = &mut cfg.survey;
     sv.shots = doc.usize_or("survey", "shots", sv.shots).max(1);
@@ -315,6 +334,24 @@ dx = 12.5
         // ...and the message now names the allowed list (shared
         // ParseKindError across the selector trio)
         assert!(err.to_string().contains("naive | simd | matrix_unit"), "{err}");
+    }
+
+    #[test]
+    fn tune_plan_key_parses_and_rejects() {
+        use crate::stencil::EngineKind;
+        // absent table → no plan, legacy knobs drive the drivers
+        assert_eq!(from_text("").unwrap().tune.plan, None);
+        let cfg = from_text(
+            "[tune]\nplan = \"engine=matrix_gemm vl=32 vz=8 tb=2 threads=8\"\n",
+        )
+        .unwrap();
+        let plan = cfg.tune.plan.expect("plan");
+        assert_eq!(plan.engine, EngineKind::MatrixGemm);
+        assert_eq!((plan.dims.vl, plan.dims.vz), (32, 8));
+        assert_eq!((plan.time_block, plan.threads), (2, 8));
+        // a malformed plan is a parse error naming the table key
+        let err = from_text("[tune]\nplan = \"engine=warp vl=16\"\n").unwrap_err();
+        assert!(err.to_string().contains("[tune] plan"), "{err}");
     }
 
     #[test]

@@ -31,7 +31,7 @@ use crate::grid::shell;
 use crate::grid::Grid3;
 use crate::simulator::roofline::{self, Engine as SimEngine, MemKind, SweepConfig};
 use crate::simulator::Platform;
-use crate::stencil::{Engine, StencilSpec};
+use crate::stencil::{Engine, StencilSpec, TunePlan};
 use crate::util::Timer;
 
 use super::exchange::{self, Backend};
@@ -120,21 +120,38 @@ impl Driver {
             rt: Runtime::new(cfg),
             platform,
             threads,
-            engine: Engine::default_simd(1),
+            engine: Engine::from_plan(&TunePlan::simd(1)),
             time_block: 1,
         }
     }
 
-    /// Build from an experiment config (`[runtime]` + `[sweep]` tables).
+    /// Build from an experiment config (`[runtime]` + `[sweep]` +
+    /// optional `[tune]` tables).  A `[tune] plan` string wins over the
+    /// legacy per-knob keys: it selects the engine, block geometry, and
+    /// fused-sweep depth in one value.
     pub fn from_config(cfg: &crate::config::ExperimentConfig) -> Self {
         let rc = cfg.runtime.to_runtime_config(cfg.sweep.threads);
+        let plan = cfg.tune.plan.unwrap_or_else(|| {
+            TunePlan { time_block: cfg.runtime.time_block.max(1), ..TunePlan::simd(1) }
+        });
         Self {
             rt: Runtime::new(rc),
             platform: Platform::paper(),
             threads: cfg.sweep.threads.max(1),
-            engine: Engine::default_simd(1),
-            time_block: cfg.runtime.time_block.max(1),
+            engine: Engine::from_plan(&TunePlan { threads: 1, ..plan }),
+            time_block: plan.time_block.max(1),
         }
+    }
+
+    /// Configure this driver from a tuned plan: region tasks dispatch
+    /// through the plan's engine/geometry and stepped runs fuse the
+    /// plan's `time_block` sub-steps per halo exchange.  The plan's
+    /// `threads` field is ignored here — the driver's own runtime is
+    /// the parallelism.
+    pub fn with_plan(mut self, plan: &TunePlan) -> Self {
+        self.engine = Engine::from_plan(&TunePlan { threads: 1, ..*plan });
+        self.time_block = plan.time_block.max(1);
+        self
     }
 
     /// Route this driver's region tasks through `engine` (tasks run
@@ -245,7 +262,7 @@ pub fn sweep(
     strategy: Strategy,
     platform: &Platform,
 ) -> (Grid3, SweepStats) {
-    sweep_with(spec, g, threads, strategy, platform, &Engine::default_simd(1))
+    sweep_with(spec, g, threads, strategy, platform, &Engine::from_plan(&TunePlan::simd(1)))
 }
 
 /// [`sweep`] with an explicit engine: every tile task dispatches its
@@ -386,7 +403,7 @@ pub fn multirank_sweep(
         steps,
         threads,
         platform,
-        &Engine::default_simd(1),
+        &Engine::from_plan(&TunePlan::simd(1)),
     )
 }
 
@@ -622,7 +639,7 @@ pub fn multirank_sweep_fused(
         steps,
         threads,
         platform,
-        &Engine::default_simd(1),
+        &Engine::from_plan(&TunePlan::simd(1)),
         time_block,
     )
 }
@@ -884,6 +901,31 @@ mod tests {
         let g = Grid3::random(8, 20, 20, 33);
         let want = naive::apply3(&spec, &g);
         let (got, _) = d.sweep(&spec, &g, Strategy::Square);
+        assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
+    }
+
+    #[test]
+    fn driver_consumes_tuned_plans() {
+        // a plan carries engine + geometry + fused depth in one value,
+        // whether it arrives via the builder or the config file
+        let plan = TunePlan::parse("engine=matrix_gemm vl=16 vz=4 tb=2 threads=8").unwrap();
+        let d = Driver::new(2, Platform::paper()).with_plan(&plan);
+        assert_eq!(d.engine().kind, crate::stencil::EngineKind::MatrixGemm);
+        assert_eq!(d.time_block(), 2);
+        // the driver's runtime is the parallelism; the engine stays serial
+        assert_eq!(d.engine().threads, 1);
+        let cfg = crate::config::from_text(
+            "[tune]\nplan = \"engine=matrix_gemm vl=16 vz=4 tb=2 threads=8\"\n",
+        )
+        .unwrap();
+        let d = Driver::from_config(&cfg);
+        assert_eq!(d.engine().kind, crate::stencil::EngineKind::MatrixGemm);
+        assert_eq!(d.time_block(), 2);
+        // and the planned engine sweeps to the oracle through the tile path
+        let spec = StencilSpec::star3d(1);
+        let g = Grid3::random(8, 20, 20, 41);
+        let want = naive::apply3(&spec, &g);
+        let (got, _) = d.sweep(&spec, &g, Strategy::SnoopAware);
         assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
     }
 

@@ -15,9 +15,9 @@
 //! The L3 data flow (README has the full walkthrough):
 //!
 //! ```text
-//! Grid3 ──ParGrid3 views──▶ engines (naive | simd | matrix_unit)
-//!            │                  ▲ selected via stencil::Engine
-//!            ▼                  │
+//! Grid3 ──ParGrid3 views──▶ engines (naive | simd | matrix_unit | matrix_gemm)
+//!            │                  ▲ stencil::Engine, configured by a
+//!            ▼                  │ stencil::TunePlan (stencil::tune)
 //!   persistent runtime ◀──coordinator tiles / z-slabs
 //!            │
 //!            ▼

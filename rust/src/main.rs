@@ -4,6 +4,7 @@
 //!
 //! * `info`                    — platform model, artifact inventory
 //! * `sweep`                   — one parallel stencil sweep (single NUMA)
+//! * `tune`                    — autotune a (kernel, n) shape to a `TunePlan`
 //! * `rtm`                     — one RTM shot (VTI/TTI)
 //! * `survey`                  — multi-shot RTM survey on the shot service
 //! * `exchange`                — halo-exchange bandwidth test (Table II)
@@ -11,7 +12,12 @@
 //! * `artifacts`               — verify PJRT artifacts against rust kernels
 //! * `run --config file.toml`  — full experiment from a config file
 //!
-//! Arguments use `--key value`; run `mmstencil help` for a summary.
+//! `sweep`, `rtm`, and `survey` all accept `--plan "engine=… vl=… vz=…
+//! tb=… threads=…"` — a [`TunePlan`](mmstencil::stencil::TunePlan)
+//! string (as printed by `tune`) that pins engine, block geometry,
+//! fused depth, and fan-out in one value, overriding the per-knob
+//! flags.  Arguments use `--key value`; run `mmstencil help` for a
+//! summary.
 
 use std::collections::HashMap;
 use std::process::ExitCode;
@@ -26,7 +32,7 @@ use mmstencil::rtm::driver::{Medium, RtmConfig};
 use mmstencil::rtm::service::{CheckpointStrategy, ShotJob, SurveyConfig, SurveyRunner};
 use mmstencil::runtime::{Runtime, Tensor};
 use mmstencil::simulator::Platform;
-use mmstencil::stencil::{naive, StencilSpec};
+use mmstencil::stencil::{naive, tune, StencilSpec, TunePlan};
 use mmstencil::util::table::{f, Table};
 
 fn main() -> ExitCode {
@@ -39,6 +45,7 @@ fn main() -> ExitCode {
     let result = match cmd.as_str() {
         "info" => cmd_info(&opts),
         "sweep" => cmd_sweep(&opts),
+        "tune" => cmd_tune(&opts),
         "rtm" => cmd_rtm(&opts),
         "survey" => cmd_survey(&opts),
         "exchange" => cmd_exchange(&opts),
@@ -69,11 +76,17 @@ USAGE: mmstencil <subcommand> [--key value ...]
   info                                platform + artifact inventory
   sweep      --kernel 3DStarR4 --n 64 --threads 8 --strategy snoop|square
              --time_block k         fuse k sweeps per pass (arena double buffer)
-  rtm        --medium vti|tti --n 48 --steps 120 --threads 8 --engine simd|naive|matrix_unit
+             --plan \"engine=… vl=… vz=… tb=… threads=…\"  tuned plan (wins)
+  tune       --kernel 3DStarR4 --n 256 --threads 8 [--cache plans.txt]
+             autotune the shape against the roofline model; print (and
+             optionally cache) the winning TunePlan
+  rtm        --medium vti|tti --n 48 --steps 120 --threads 8
+             --engine naive|simd|matrix_unit|matrix_gemm
              --time_block k         requested fuse depth (shots clamp to 1, §III-B)
+             --plan \"…\"             tuned plan overlay (wins over knobs)
   survey     --shots 8 --shards 2 --medium vti|tti --n 32 --steps 60
              --engine matrix_unit --checkpoint full_state|boundary_saving
-             --queue_capacity 4     multi-shot survey on the shot service
+             --queue_capacity 4 --plan \"…\"  multi-shot survey on the shot service
   exchange   --n 128 --radius 4             Table II halo bandwidth test
   scaling    --mode strong|weak --kernel 3DStarR4 --n 64
              --steps 4 --time_block k   one halo exchange per k fused steps
@@ -105,6 +118,14 @@ fn opt_usize(o: &Opts, k: &str, d: usize) -> usize {
 
 fn opt_str<'a>(o: &'a Opts, k: &str, d: &'a str) -> &'a str {
     o.get(k).map(String::as_str).unwrap_or(d)
+}
+
+/// `--plan "engine=… vl=… vz=… tb=… threads=…"`: a parsed [`TunePlan`],
+/// or `None` when the flag is absent.
+fn opt_plan(o: &Opts) -> Result<Option<TunePlan>, String> {
+    o.get("plan")
+        .map(|s| TunePlan::parse(s).map_err(|e| format!("--plan: {e}")))
+        .transpose()
 }
 
 fn default_threads() -> usize {
@@ -161,18 +182,27 @@ fn cmd_sweep(opts: &Opts) -> Result<(), String> {
         opt_usize(opts, "nx", n),
         opt_usize(opts, "ny", n),
     );
-    let threads = opt_usize(opts, "threads", default_threads());
+    let plan = opt_plan(opts)?;
+    let threads = plan
+        .map(|p| p.threads.max(1))
+        .unwrap_or_else(|| opt_usize(opts, "threads", default_threads()));
     let strategy = match opt_str(opts, "strategy", "snoop") {
         "square" => Strategy::Square,
         _ => Strategy::SnoopAware,
     };
-    let time_block = opt_usize(opts, "time_block", 1).max(1);
+    let time_block = plan
+        .map(|p| p.time_block.max(1))
+        .unwrap_or_else(|| opt_usize(opts, "time_block", 1).max(1));
     let platform = Platform::paper();
     let g = Grid3::random(nz, nx, ny, 42);
     println!(
         "sweep {name} on {nz}×{nx}×{ny}, {threads} threads, {strategy:?}, time_block {time_block}"
     );
-    let driver = sweep_driver::Driver::new(threads, platform).with_time_block(time_block);
+    let mut driver = sweep_driver::Driver::new(threads, platform).with_time_block(time_block);
+    if let Some(p) = &plan {
+        println!("  plan: {p}");
+        driver = driver.with_plan(p);
+    }
     let (out, stats) = driver.sweep(&spec, &g, strategy);
     let mut check = naive::apply3(&spec, &g);
     for _ in 1..time_block {
@@ -205,6 +235,31 @@ fn cmd_sweep(opts: &Opts) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_tune(opts: &Opts) -> Result<(), String> {
+    let name = opt_str(opts, "kernel", "3DStarR4");
+    let spec = StencilSpec::parse(name).map_err(|e| e.to_string())?;
+    if spec.ndim != 3 {
+        return Err("tune drives 3D kernels; 2D kernels are bench-only".into());
+    }
+    let n = opt_usize(opts, "n", 256);
+    let threads = opt_usize(opts, "threads", default_threads());
+    let key = tune::shape_key(&spec, n);
+    let (plan, note) = match opts.get("cache") {
+        Some(path) => {
+            let mut cache = mmstencil::runtime::PlanCache::load(path)
+                .map_err(|e| e.to_string())?;
+            let hit = cache.get(&key).is_some();
+            let plan = cache.get_or_insert_with(&key, || tune::tune_default(&spec, n, threads));
+            cache.store(path).map_err(|e| e.to_string())?;
+            (plan, if hit { "cache hit" } else { "tuned, cached" })
+        }
+        None => (tune::tune_default(&spec, n, threads), "tuned"),
+    };
+    println!("{key}|{plan}  ({note})");
+    println!("  replay with: mmstencil sweep --kernel {name} --n {n} --plan \"{plan}\"");
+    Ok(())
+}
+
 fn cmd_rtm(opts: &Opts) -> Result<(), String> {
     let medium = match opt_str(opts, "medium", "vti") {
         "tti" => Medium::Tti,
@@ -221,6 +276,9 @@ fn cmd_rtm(opts: &Opts) -> Result<(), String> {
     cfg.engine =
         mmstencil::stencil::EngineKind::parse(engine_name).map_err(|e| format!("--engine: {e}"))?;
     cfg.time_block = opt_usize(opts, "time_block", 1).max(1);
+    if let Some(p) = opt_plan(opts)? {
+        cfg = cfg.with_plan(&p);
+    }
     if cfg.time_block > cfg.shot_time_block() {
         println!(
             "  note: time_block {} clamped to {} — imaging shots apply the sponge and \
@@ -277,6 +335,9 @@ fn cmd_survey(opts: &Opts) -> Result<(), String> {
     let engine_name = opt_str(opts, "engine", "matrix_unit");
     cfg.engine =
         mmstencil::stencil::EngineKind::parse(engine_name).map_err(|e| format!("--engine: {e}"))?;
+    if let Some(p) = opt_plan(opts)? {
+        cfg = cfg.with_plan(&p);
+    }
     let shots = opt_usize(opts, "shots", 8).max(1);
     let mut scfg = SurveyConfig::default();
     scfg.shards = opt_usize(opts, "shards", scfg.shards).max(1);
@@ -508,6 +569,10 @@ fn cmd_run(opts: &Opts) -> Result<(), String> {
         if cfg.sweep.strategy == Strategy::Square { "square" } else { "snoop" }.to_string(),
     );
     o.insert("time_block".into(), cfg.runtime.time_block.to_string());
+    // the [tune] plan (if any) rides along and wins over the knobs above
+    if let Some(p) = cfg.tune.plan {
+        o.insert("plan".into(), p.to_string());
+    }
     cmd_sweep(&o)?;
     let mut o: Opts = HashMap::new();
     o.insert(
@@ -521,6 +586,9 @@ fn cmd_run(opts: &Opts) -> Result<(), String> {
     o.insert("threads".into(), cfg.rtm.threads.to_string());
     o.insert("engine".into(), cfg.rtm.engine.name().to_string());
     o.insert("time_block".into(), cfg.rtm.time_block.to_string());
+    if let Some(p) = cfg.tune.plan {
+        o.insert("plan".into(), p.to_string());
+    }
     cmd_rtm(&o)?;
     let mut o: Opts = HashMap::new();
     o.insert(
@@ -537,5 +605,8 @@ fn cmd_run(opts: &Opts) -> Result<(), String> {
     o.insert("shards".into(), cfg.survey.shards.to_string());
     o.insert("queue_capacity".into(), cfg.survey.queue_capacity.to_string());
     o.insert("checkpoint".into(), cfg.survey.checkpoint.name().to_string());
+    if let Some(p) = cfg.tune.plan {
+        o.insert("plan".into(), p.to_string());
+    }
     cmd_survey(&o)
 }

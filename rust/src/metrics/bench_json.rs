@@ -12,16 +12,21 @@
 //! just raw sweeps.  v3 added a `time_block` field to every row — the
 //! temporal-blocking depth the workload ran at (1 = classic stepping)
 //! — so the fused-sweep trajectory is diffable per depth
-//! (`scripts/bench_diff.py`).  v4 (this PR) adds `survey_entries`:
-//! multi-shot surveys through [`rtm::service`](crate::rtm::service),
-//! reported as shots/hour with retry/failure accounting and the
-//! checkpoint strategy the shots ran under.
+//! (`scripts/bench_diff.py`).  v4 added `survey_entries`: multi-shot
+//! surveys through [`rtm::service`](crate::rtm::service), reported as
+//! shots/hour with retry/failure accounting and the checkpoint strategy
+//! the shots ran under.  v5 (this PR) adds a `plan` field to every
+//! sweep and RTM row — the active [`TunePlan`](crate::stencil::TunePlan)
+//! in its `Display` form — so each measurement records the exact
+//! (engine, geometry, depth, fan-out) it ran under and a tuner change
+//! shows up as a row diff, not a silent re-baselining.
 
 /// Schema tag carried in the document; bump on breaking field changes.
 /// v1 → v2: added the `rtm_entries` array.
 /// v2 → v3: added `time_block` to every sweep and RTM row.
 /// v3 → v4: added the `survey_entries` array (shot-service surveys).
-pub const SCHEMA: &str = "mmstencil.bench_engines.v4";
+/// v4 → v5: added `plan` (active `TunePlan` string) to sweep/RTM rows.
+pub const SCHEMA: &str = "mmstencil.bench_engines.v5";
 
 /// One engine × sweep-workload measurement.
 #[derive(Clone, Debug)]
@@ -48,6 +53,9 @@ pub struct EngineBench {
     /// Scratch-arena growth events during the same sweep
     /// (`coordinator::scratch::grow_events` delta; 0 in steady state).
     pub arena_grows_per_sweep: u64,
+    /// The active [`TunePlan`](crate::stencil::TunePlan) (its `Display`
+    /// form) the row ran under — round-trippable via `TunePlan::parse`.
+    pub plan: String,
 }
 
 /// One engine × RTM-step measurement (schema v2): a full propagator
@@ -73,9 +81,14 @@ pub struct RtmBench {
     pub allocs_per_step: u64,
     /// Scratch-arena growth events during the same step.
     pub arena_grows_per_step: u64,
+    /// The active [`TunePlan`](crate::stencil::TunePlan) (its `Display`
+    /// form) the step's derivative passes dispatched through.
+    pub plan: String,
 }
 
-/// One survey measurement (schema v4): a multi-shot run through the
+/// One survey measurement (added in schema v4, unchanged in v5 — shots
+/// carry no single plan, each pump configures its own engine): a
+/// multi-shot run through the
 /// shot service ([`rtm::service`](crate::rtm::service)) — throughput in
 /// shots/hour plus the scheduler's retry/failure accounting.
 #[derive(Clone, Debug)]
@@ -129,7 +142,7 @@ pub fn render(
         s.push_str(&format!(
             "    {{\"engine\": \"{}\", \"pattern\": \"{}\", \"radius\": {}, \"n\": {}, \
              \"threads\": {}, \"time_block\": {}, \"mcells_per_s\": {:.3}, \
-             \"allocs_per_sweep\": {}, \"arena_grows_per_sweep\": {}}}{}\n",
+             \"allocs_per_sweep\": {}, \"arena_grows_per_sweep\": {}, \"plan\": \"{}\"}}{}\n",
             esc(&e.engine),
             esc(&e.pattern),
             e.radius,
@@ -139,6 +152,7 @@ pub fn render(
             finite(e.mcells_per_s),
             e.allocs_per_sweep,
             e.arena_grows_per_sweep,
+            esc(&e.plan),
             if i + 1 == entries.len() { "" } else { "," }
         ));
     }
@@ -148,7 +162,7 @@ pub fn render(
         s.push_str(&format!(
             "    {{\"engine\": \"{}\", \"medium\": \"{}\", \"n\": {}, \"threads\": {}, \
              \"time_block\": {}, \"mcells_per_s\": {:.3}, \"allocs_per_step\": {}, \
-             \"arena_grows_per_step\": {}}}{}\n",
+             \"arena_grows_per_step\": {}, \"plan\": \"{}\"}}{}\n",
             esc(&e.engine),
             esc(&e.medium),
             e.n,
@@ -157,6 +171,7 @@ pub fn render(
             finite(e.mcells_per_s),
             e.allocs_per_step,
             e.arena_grows_per_step,
+            esc(&e.plan),
             if i + 1 == rtm_entries.len() { "" } else { "," }
         ));
     }
@@ -246,7 +261,7 @@ pub fn validate(s: &str) -> Result<(usize, usize, usize), String> {
             return Err(format!("key {k} count mismatch (expected {surveys})"));
         }
     }
-    for k in ["\"time_block\":", "\"mcells_per_s\":"] {
+    for k in ["\"time_block\":", "\"mcells_per_s\":", "\"plan\":"] {
         if s.matches(k).count() != sweeps + rtms {
             return Err(format!("key {k} count mismatch (expected {})", sweeps + rtms));
         }
@@ -278,6 +293,7 @@ mod tests {
                 mcells_per_s: 123.456,
                 allocs_per_sweep: 2,
                 arena_grows_per_sweep: 0,
+                plan: "engine=simd vl=16 vz=4 tb=1 threads=1".into(),
             },
             EngineBench {
                 engine: "matrix_unit_par".into(),
@@ -289,6 +305,7 @@ mod tests {
                 mcells_per_s: 77.0,
                 allocs_per_sweep: 31,
                 arena_grows_per_sweep: 0,
+                plan: "engine=matrix_unit vl=16 vz=4 tb=4 threads=8".into(),
             },
         ]
     }
@@ -303,6 +320,7 @@ mod tests {
             mcells_per_s: 450.5,
             allocs_per_step: 12,
             arena_grows_per_step: 0,
+            plan: "engine=matrix_unit vl=16 vz=4 tb=1 threads=8".into(),
         }]
     }
 
@@ -325,13 +343,21 @@ mod tests {
     fn render_validates() {
         let doc = render(&sample(), &rtm_sample(), &survey_sample());
         assert_eq!(validate(&doc), Ok((2, 1, 1)));
-        assert!(doc.contains("\"schema\": \"mmstencil.bench_engines.v4\""));
+        assert!(doc.contains("\"schema\": \"mmstencil.bench_engines.v5\""));
         assert!(doc.contains("\"mcells_per_s\": 123.456"));
         assert!(doc.contains("\"medium\": \"vti\""));
         assert!(doc.contains("\"allocs_per_step\": 12"));
         assert!(doc.contains("\"time_block\": 4"));
         assert!(doc.contains("\"checkpoint\": \"boundary_saving\""));
         assert!(doc.contains("\"shots_per_hour\": 1234.500"));
+        assert!(doc.contains("\"plan\": \"engine=matrix_unit vl=16 vz=4 tb=4 threads=8\""));
+        // every recorded plan string round-trips through the parser
+        use crate::stencil::TunePlan;
+        for row in doc.lines().filter(|l| l.contains("\"plan\":")) {
+            let s = row.split("\"plan\": \"").nth(1).unwrap().split('"').next().unwrap();
+            let plan = TunePlan::parse(s).expect("recorded plan must parse");
+            assert_eq!(plan.to_string(), s);
+        }
     }
 
     #[test]
@@ -342,7 +368,8 @@ mod tests {
     #[test]
     fn tampered_documents_fail() {
         let doc = render(&sample(), &rtm_sample(), &survey_sample());
-        assert!(validate(&doc.replace("bench_engines.v4", "v3")).is_err());
+        assert!(validate(&doc.replace("bench_engines.v5", "v4")).is_err());
+        assert!(validate(&doc.replacen("\"plan\":", "\"p\":", 1)).is_err());
         assert!(validate(&doc.replace("\"radius\":", "\"r\":")).is_err());
         assert!(validate(&doc.replace("\"allocs_per_step\":", "\"a\":")).is_err());
         assert!(validate(&doc.replace("\"rtm_entries\":", "\"rtm\":")).is_err());

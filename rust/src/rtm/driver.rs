@@ -22,7 +22,7 @@ use super::image::Image;
 use super::service;
 use crate::simulator::roofline::{self, Engine as SimEngine, MemKind};
 use crate::simulator::Platform;
-use crate::stencil::{Engine, EngineKind, StencilSpec};
+use crate::stencil::{Engine, EngineKind, StencilSpec, TunePlan};
 use std::fmt;
 
 /// Anisotropy model of the run.
@@ -108,9 +108,27 @@ impl RtmConfig {
         self.nz * self.nx * self.ny
     }
 
-    /// The configured propagation engine, threaded per the config.
+    /// The configured propagation engine, threaded per the config
+    /// (default block geometry — a tuned geometry arrives via
+    /// [`with_plan`](Self::with_plan) selecting the engine kind, and the
+    /// propagators' own blocking).
     pub fn propagation_engine(&self) -> Engine {
-        Engine::new(self.engine).with_threads(self.threads)
+        Engine::from_plan(&TunePlan {
+            engine: self.engine,
+            threads: self.threads.max(1),
+            ..TunePlan::simd(1)
+        })
+    }
+
+    /// Overlay a tuned plan onto this config: the plan selects the
+    /// propagation engine, the worker fan-out, and the requested
+    /// temporal-blocking depth (imaging shots still clamp fusion to 1 —
+    /// [`shot_time_block`](Self::shot_time_block)).
+    pub fn with_plan(mut self, plan: &TunePlan) -> Self {
+        self.engine = plan.engine;
+        self.threads = plan.threads.max(1);
+        self.time_block = plan.time_block.max(1);
+        self
     }
 
     /// The temporal-blocking depth an imaging shot can actually fuse:
@@ -585,6 +603,20 @@ mod tests {
             c.sponge_width,
             MIN_GRID_CELLS
         );
+    }
+
+    #[test]
+    fn plan_overlay_selects_engine_threads_and_depth() {
+        let plan = TunePlan::parse("engine=matrix_gemm vl=16 vz=4 tb=4 threads=8").unwrap();
+        let cfg = RtmConfig::small(Medium::Vti).with_plan(&plan);
+        assert_eq!(cfg.engine, EngineKind::MatrixGemm);
+        assert_eq!(cfg.threads, 8);
+        assert_eq!(cfg.time_block, 4);
+        // imaging shots still clamp the fused depth (§III-B)
+        assert_eq!(cfg.shot_time_block(), 1);
+        let eng = cfg.propagation_engine();
+        assert_eq!(eng.kind, EngineKind::MatrixGemm);
+        assert_eq!(eng.threads, 8);
     }
 
     #[test]

@@ -511,6 +511,13 @@ impl ShotJobBuilder {
         self
     }
 
+    /// Overlay a tuned plan ([`RtmConfig::with_plan`]): engine, worker
+    /// fan-out, and requested temporal-blocking depth in one value.
+    pub fn plan(mut self, plan: &crate::stencil::TunePlan) -> Self {
+        self.cfg = self.cfg.with_plan(plan);
+        self
+    }
+
     /// Override the propagator worker-parallelism.
     pub fn threads(mut self, threads: usize) -> Self {
         self.cfg.threads = threads;
@@ -1308,6 +1315,15 @@ mod tests {
         assert_eq!(job.config().engine, EngineKind::MatrixUnit);
         assert_eq!(job.config().src, Some((10, 9, 8)));
         assert_eq!(job.config().steps, 7);
+        // a tuned plan overlays engine + fan-out + depth in one value
+        let plan = crate::stencil::TunePlan::parse(
+            "engine=matrix_gemm vl=16 vz=4 tb=2 threads=3",
+        )
+        .unwrap();
+        let job = ShotJob::builder(tiny_cfg(Medium::Vti)).plan(&plan).build().unwrap();
+        assert_eq!(job.config().engine, EngineKind::MatrixGemm);
+        assert_eq!(job.config().threads, 3);
+        assert_eq!(job.config().time_block, 2);
         // out-of-bounds source rejected by the same builder
         let err = ShotJob::builder(tiny_cfg(Medium::Vti)).src(99, 0, 0).build().unwrap_err();
         assert!(matches!(err, ConfigError::SourceOutOfBounds { .. }));

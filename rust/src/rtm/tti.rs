@@ -14,7 +14,7 @@ use super::media::TtiMedia;
 use crate::coordinator::pool;
 use crate::grid::Grid3;
 use crate::stencil::engine::AxisPass;
-use crate::stencil::Engine;
+use crate::stencil::{Engine, TunePlan};
 
 /// Leapfrog time levels of the TTI field pair (p, q).
 pub struct TtiState {
@@ -136,7 +136,7 @@ impl Derivs {
     /// Fill all six derivative grids of `f` through the default simd
     /// engine — compatibility wrapper over [`compute_with`](Self::compute_with).
     pub fn compute(&mut self, f: &Grid3, w2: &[f32], w1: &[f32], threads: usize) {
-        self.compute_with(f, w2, w1, &Engine::default_simd(threads));
+        self.compute_with(f, w2, w1, &Engine::from_plan(&TunePlan::simd(threads)));
     }
 
     /// Fill all six derivative grids of `f` (mirror of
@@ -225,7 +225,7 @@ pub fn step(
     threads: usize,
     s: &mut TtiScratch,
 ) {
-    step_with(state, m, trig, w2, w1, &Engine::default_simd(threads), s);
+    step_with(state, m, trig, w2, w1, &Engine::from_plan(&TunePlan::simd(threads)), s);
 }
 
 /// One TTI leapfrog step through an explicit [`Engine`]: 16 axis
@@ -309,6 +309,10 @@ mod tests {
     use crate::stencil::coeffs::{first_deriv, second_deriv};
     use crate::stencil::EngineKind;
     use crate::util::prop::assert_allclose;
+
+    fn planned(kind: EngineKind, workers: usize) -> Engine {
+        Engine::from_plan(&TunePlan { engine: kind, threads: workers, ..TunePlan::simd(1) })
+    }
 
     #[test]
     fn mixed_derivatives_commute() {
@@ -419,7 +423,7 @@ mod tests {
         let trig = TtiTrig::new(&m);
         let w2 = second_deriv(4);
         let w1 = first_deriv(4);
-        let eng = Engine::new(EngineKind::MatrixUnit).with_threads(PAR_WORKERS);
+        let eng = planned(EngineKind::MatrixUnit, PAR_WORKERS);
         for k in [2usize, 3] {
             let mk = || {
                 let mut st = TtiState::zeros(nz, nx, ny);
@@ -456,9 +460,9 @@ mod tests {
             st
         };
         let oracle = run(&Engine::new(EngineKind::Naive));
-        for kind in [EngineKind::Simd, EngineKind::MatrixUnit] {
+        for kind in [EngineKind::Simd, EngineKind::MatrixUnit, EngineKind::MatrixGemm] {
             for &workers in &WORKER_COUNTS {
-                let got = run(&Engine::new(kind).with_threads(workers));
+                let got = run(&planned(kind, workers));
                 assert_allclose(&got.p.data, &oracle.p.data, 1e-4, 1e-6);
                 assert_allclose(&got.q.data, &oracle.q.data, 1e-4, 1e-6);
             }

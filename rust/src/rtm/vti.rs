@@ -24,7 +24,7 @@ use super::media::VtiMedia;
 use crate::coordinator::pool;
 use crate::grid::Grid3;
 use crate::stencil::engine::AxisPass;
-use crate::stencil::Engine;
+use crate::stencil::{Engine, TunePlan};
 
 /// The two leapfrog time levels of both stress components.
 pub struct VtiState {
@@ -73,7 +73,7 @@ pub fn d2_axis(g: &Grid3, w2: &[f32], axis: usize, threads: usize) -> Grid3 {
 
 /// In-place variant of [`d2_axis`]: `out` is fully overwritten.
 pub fn d2_axis_into(g: &Grid3, w2: &[f32], axis: usize, out: &mut Grid3, threads: usize) {
-    Engine::default_simd(threads).d2_axis_into(g, w2, axis, out);
+    Engine::from_plan(&TunePlan::simd(threads)).d2_axis_into(g, w2, axis, out);
 }
 
 /// First derivative along `axis` with periodic wrap (antisymmetric
@@ -86,7 +86,7 @@ pub fn d1_axis(g: &Grid3, w1: &[f32], axis: usize, threads: usize) -> Grid3 {
 
 /// In-place variant of [`d1_axis`]: `out` is fully overwritten.
 pub fn d1_axis_into(g: &Grid3, w1: &[f32], axis: usize, out: &mut Grid3, threads: usize) {
-    Engine::default_simd(threads).d1_axis_into(g, w1, axis, out);
+    Engine::from_plan(&TunePlan::simd(threads)).d1_axis_into(g, w1, axis, out);
 }
 
 /// Scratch buffers reused across steps (avoids per-step allocation of
@@ -111,7 +111,7 @@ impl VtiScratch {
 /// One leapfrog step through the default simd engine; rotates `state`
 /// in place.  Compatibility wrapper over [`step_with`].
 pub fn step(state: &mut VtiState, m: &VtiMedia, w2: &[f32], threads: usize, s: &mut VtiScratch) {
-    step_with(state, m, w2, &Engine::default_simd(threads), s);
+    step_with(state, m, w2, &Engine::from_plan(&TunePlan::simd(threads)), s);
 }
 
 /// One leapfrog step through an explicit [`Engine`]; rotates `state` in
@@ -213,6 +213,10 @@ mod tests {
     use crate::stencil::coeffs::second_deriv;
     use crate::stencil::EngineKind;
     use crate::util::prop::assert_allclose;
+
+    fn planned(kind: EngineKind, workers: usize) -> Engine {
+        Engine::from_plan(&TunePlan { engine: kind, threads: workers, ..TunePlan::simd(1) })
+    }
 
     #[test]
     fn d2_axis_matches_direct_loop() {
@@ -335,9 +339,9 @@ mod tests {
             st
         };
         let oracle = run(&Engine::new(EngineKind::Naive));
-        for kind in [EngineKind::Simd, EngineKind::MatrixUnit] {
+        for kind in [EngineKind::Simd, EngineKind::MatrixUnit, EngineKind::MatrixGemm] {
             for &workers in &WORKER_COUNTS {
-                let got = run(&Engine::new(kind).with_threads(workers));
+                let got = run(&planned(kind, workers));
                 assert_allclose(&got.sh.data, &oracle.sh.data, 1e-4, 1e-6);
                 assert_allclose(&got.sv.data, &oracle.sv.data, 1e-4, 1e-6);
                 let (e, eo) = (got.energy(), oracle.energy());
@@ -358,7 +362,7 @@ mod tests {
         let w2 = second_deriv(4);
         for kind in EngineKind::ALL {
             for &workers in &WORKER_COUNTS {
-                let eng = Engine::new(kind).with_threads(workers);
+                let eng = planned(kind, workers);
                 let mk = || {
                     let mut st = VtiState::zeros(nz, nx, ny);
                     st.inject(7, 8, 9, 1.0);
@@ -389,7 +393,7 @@ mod tests {
             let mut st = VtiState::zeros(nz, nx, ny);
             let mut sc = VtiScratch::new(nz, nx, ny);
             st.inject(8, 9, 10, 1.0);
-            let eng = Engine::new(EngineKind::MatrixUnit).with_threads(workers);
+            let eng = planned(EngineKind::MatrixUnit, workers);
             for _ in 0..4 {
                 step_with(&mut st, &m, &w2, &eng, &mut sc);
             }

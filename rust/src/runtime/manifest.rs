@@ -1,11 +1,16 @@
-//! Parser for `artifacts/manifest.txt` written by `python/compile/aot.py`.
+//! Parser for `artifacts/manifest.txt` written by `python/compile/aot.py`,
+//! plus the [`PlanCache`] the startup autotuner persists tuned
+//! [`TunePlan`]s in.
 //!
-//! Line format:
+//! Line formats:
 //! `name|file.hlo.txt|in=f32[4,16,16];f32[12,24,24]|out=f32[4,16,16]|meta=k:v,...`
+//! (artifacts) and `shape-key|engine=... vl=... vz=... tb=... threads=...`
+//! (plan cache).
 
 use std::collections::HashMap;
 use std::path::Path;
 
+use crate::stencil::TunePlan;
 use crate::util::err::{Context, Result};
 use crate::{anyhow, bail};
 
@@ -119,6 +124,102 @@ fn parse_specs(s: &str) -> Result<Vec<TensorSpec>> {
     s.split(';').map(TensorSpec::parse).collect()
 }
 
+/// Tuned-plan cache keyed by shape (`stencil::tune::shape_key`):
+/// `3DStarR4@n256 → engine=matrix_gemm vl=16 vz=4 tb=1 threads=8`.
+///
+/// Serialization is the manifest idiom — one `key|plan` line per entry,
+/// `#` comments and blank lines skipped — and is **canonical**: entries
+/// serialize sorted by key and every plan through its `Display` form,
+/// so serialize → parse → serialize is byte-stable (the plan-cache
+/// round-trip the acceptance suite pins).  Because the autotuner is
+/// deterministic per (shape, platform), a cached plan replays the exact
+/// sweep configuration of the run that produced it; invalidation is by
+/// key absence only — a key covers everything the search depends on
+/// except the platform, so changing platforms means a different cache
+/// file, not a stale hit.
+#[derive(Clone, Debug, Default)]
+pub struct PlanCache {
+    plans: HashMap<String, TunePlan>,
+}
+
+impl PlanCache {
+    /// Parse the `key|plan` line format.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut plans = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (key, plan) = line
+                .split_once('|')
+                .ok_or_else(|| anyhow!("plan cache line {} has no '|'", lineno + 1))?;
+            let plan = TunePlan::parse(plan.trim())
+                .with_context(|| format!("plan cache line {}", lineno + 1))?;
+            plans.insert(key.trim().to_string(), plan);
+        }
+        Ok(Self { plans })
+    }
+
+    /// Load a cache file; a missing file is an empty cache (cold start),
+    /// any other read or parse failure is an error.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        if !path.exists() {
+            return Ok(Self::default());
+        }
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Canonical serialization: sorted keys, `Display`-form plans.
+    pub fn serialize(&self) -> String {
+        let mut keys: Vec<&String> = self.plans.keys().collect();
+        keys.sort();
+        let mut out = String::from("# tuned plans: shape-key|plan\n");
+        for k in keys {
+            out.push_str(k);
+            out.push('|');
+            out.push_str(&self.plans[k].to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the canonical serialization to `path`.
+    pub fn store(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.serialize())
+            .with_context(|| format!("writing {}", path.as_ref().display()))
+    }
+
+    pub fn get(&self, key: &str) -> Option<TunePlan> {
+        self.plans.get(key).copied()
+    }
+
+    pub fn insert(&mut self, key: impl Into<String>, plan: TunePlan) {
+        self.plans.insert(key.into(), plan);
+    }
+
+    /// Cached plan for `key`, or tune-and-cache on a miss — the
+    /// startup-autotune entry point the drivers use.
+    pub fn get_or_insert_with(
+        &mut self,
+        key: impl Into<String>,
+        tune: impl FnOnce() -> TunePlan,
+    ) -> TunePlan {
+        *self.plans.entry(key.into()).or_insert_with(tune)
+    }
+
+    pub fn len(&self) -> usize {
+        self.plans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.plans.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -170,5 +271,62 @@ mod tests {
     fn skips_comments_and_blanks() {
         let text = format!("# comment\n\n{LINE}\n");
         assert_eq!(Manifest::parse(&text).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn plan_cache_round_trips_canonically() {
+        use crate::stencil::tune::{shape_key, tune_default};
+        use crate::stencil::StencilSpec;
+
+        // tune → cache → serialize → parse → identical plan, byte-stable
+        let spec = StencilSpec::star3d(4);
+        let key = shape_key(&spec, 64);
+        let plan = tune_default(&spec, 64, 4);
+        let mut cache = PlanCache::default();
+        assert!(cache.is_empty());
+        cache.insert(&key, plan);
+        cache.insert("2nd-key", TunePlan::simd(2));
+        let text = cache.serialize();
+        let again = PlanCache::parse(&text).unwrap();
+        assert_eq!(again.len(), 2);
+        assert_eq!(again.get(&key), Some(plan));
+        assert_eq!(again.serialize(), text, "canonical form must be byte-stable");
+        // a cache hit replays without re-tuning
+        let mut hit = again.clone();
+        let got = hit.get_or_insert_with(&key, || panic!("must not re-tune on a hit"));
+        assert_eq!(got, plan);
+    }
+
+    #[test]
+    fn plan_cache_reload_replays_a_bitwise_identical_sweep() {
+        use crate::grid::Grid3;
+        use crate::stencil::tune::{shape_key, tune_default};
+        use crate::stencil::{Engine, StencilSpec};
+
+        // the acceptance pin: a plan that went through the cache file
+        // configures an engine whose sweep is bitwise the original's
+        let spec = StencilSpec::star3d(4);
+        let plan = tune_default(&spec, 64, 4);
+        let mut cache = PlanCache::default();
+        cache.insert(shape_key(&spec, 64), plan);
+        let path = std::env::temp_dir().join(format!("mmstencil_plans_{}.txt", std::process::id()));
+        cache.store(&path).unwrap();
+        let reloaded = PlanCache::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let replay = reloaded.get(&shape_key(&spec, 64)).expect("cached plan");
+        assert_eq!(replay, plan);
+        let g = Grid3::random(12, 24, 24, 99);
+        let a = Engine::from_plan(&plan).apply3(&spec, &g);
+        let b = Engine::from_plan(&replay).apply3(&spec, &g);
+        assert_eq!(a.data, b.data, "round-tripped plan must sweep bitwise-identically");
+    }
+
+    #[test]
+    fn plan_cache_missing_file_is_cold_start_and_bad_lines_error() {
+        let missing = std::env::temp_dir().join("mmstencil_no_such_plan_cache.txt");
+        assert!(PlanCache::load(&missing).unwrap().is_empty());
+        assert!(PlanCache::parse("keyonly-no-pipe\n").is_err());
+        assert!(PlanCache::parse("k|engine=warp vl=16 vz=4 tb=1 threads=1\n").is_err());
+        assert!(PlanCache::parse("# just a comment\n\n").unwrap().is_empty());
     }
 }

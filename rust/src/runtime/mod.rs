@@ -24,7 +24,7 @@ use std::path::{Path, PathBuf};
 use crate::util::err::Result;
 use crate::{anyhow, bail};
 
-pub use manifest::{ArtifactMeta, Manifest, TensorSpec};
+pub use manifest::{ArtifactMeta, Manifest, PlanCache, TensorSpec};
 
 /// A tensor result from an artifact execution.
 #[derive(Clone, Debug)]

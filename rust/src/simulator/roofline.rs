@@ -113,7 +113,10 @@ fn mm_counts_per_point(spec: &StencilSpec) -> matrix_unit::Counts {
     }
 }
 
-fn scale_counts(c: matrix_unit::Counts, pts: f64) -> matrix_unit::Counts {
+/// Normalize whole-sweep counts to fixed-point thousandths per point
+/// (integral, so estimates stay deterministic).  The avoided-instruction
+/// counters are comparison-only and are zeroed — they never cost cycles.
+pub fn scale_counts(c: matrix_unit::Counts, pts: f64) -> matrix_unit::Counts {
     // keep fixed-point thousandths per point to stay integral
     matrix_unit::Counts {
         outer_products: (c.outer_products as f64 / pts * 1000.0) as u64,
@@ -171,10 +174,45 @@ pub fn engine_cfg(engine: Engine, mem: MemKind) -> SweepConfig {
 }
 
 /// Predict one sweep of `n_points` grid points on one NUMA node.
+/// The matrix-unit compute side uses the default-dims emulation counts
+/// of `stencil::matrix_unit` — see [`predict_with_counts`] to model a
+/// different instruction mix or block geometry (the autotuner's path).
 pub fn predict(
     spec: &StencilSpec,
     n_points: usize,
     engine: Engine,
+    cfg: SweepConfig,
+    p: &Platform,
+) -> Estimate {
+    let counts = match engine {
+        Engine::MMStencil => Some(mm_counts_per_point(spec)),
+        _ => None,
+    };
+    predict_inner(spec, n_points, engine, counts, matrix_unit::BlockDims::default(), cfg, p)
+}
+
+/// Predict one matrix-unit-family sweep from an explicit per-point
+/// instruction mix (fixed-point thousandths, see [`scale_counts`]) and
+/// block geometry — the cost model the startup autotuner
+/// (`stencil::tune`) scores candidate (engine, dims) plans against.
+/// `predict` is exactly this with the default-dims emulation counts.
+pub fn predict_with_counts(
+    spec: &StencilSpec,
+    n_points: usize,
+    counts_per_kpoint: matrix_unit::Counts,
+    dims: matrix_unit::BlockDims,
+    cfg: SweepConfig,
+    p: &Platform,
+) -> Estimate {
+    predict_inner(spec, n_points, Engine::MMStencil, Some(counts_per_kpoint), dims, cfg, p)
+}
+
+fn predict_inner(
+    spec: &StencilSpec,
+    n_points: usize,
+    engine: Engine,
+    counts_per_kpoint: Option<matrix_unit::Counts>,
+    dims: matrix_unit::BlockDims,
     cfg: SweepConfig,
     p: &Platform,
 ) -> Estimate {
@@ -184,7 +222,7 @@ pub fn predict(
     // ---- compute time -------------------------------------------------
     let compute_s = match engine {
         Engine::MMStencil => {
-            let c = mm_counts_per_point(spec);
+            let c = counts_per_kpoint.expect("matrix-unit prediction needs counts");
             let op_cycles = c.outer_products as f64 / 1000.0 * p.cpi_matrix;
             // auxiliary instructions (loads/stores/slices) dual-issue with
             // the outer products on the OOE core; charge 50%
@@ -240,10 +278,10 @@ pub fn predict(
     } else if engine != Engine::MMStencil {
         (2048, 3 * (2 * spec.radius + 1))
     } else if cfg.brick {
-        let access = BlockAccess::star3d(16, 16, 4, spec.radius);
+        let access = BlockAccess::star3d(dims.vl, dims.vl, dims.vz, spec.radius);
         (b.bytes(), access.bricked_streams(b))
     } else {
-        let access = BlockAccess::star3d(16, 16, 4, spec.radius);
+        let access = BlockAccess::star3d(dims.vl, dims.vl, dims.vz, spec.radius);
         (64, access.rowmajor_streams())
     };
     let has_prefetch = cfg.prefetch && engine != Engine::Compiler;

@@ -26,17 +26,20 @@
 //!
 //! ```
 //! use mmstencil::grid::Grid3;
-//! use mmstencil::stencil::{Engine, EngineKind, StencilSpec};
+//! use mmstencil::stencil::{Engine, EngineKind, StencilSpec, TunePlan};
 //!
 //! let spec = StencilSpec::parse("3DStarR2").unwrap();
 //! let g = Grid3::random(8, 12, 12, 7);
 //! let serial = Engine::new(EngineKind::MatrixUnit).apply3(&spec, &g);
-//! let par = Engine::parse("matrix_unit").unwrap().with_threads(4).apply3(&spec, &g);
+//! // the plan-based surface: every knob travels in one parseable value
+//! let plan = TunePlan::parse("engine=matrix_unit vl=16 vz=4 tb=1 threads=4").unwrap();
+//! let par = Engine::from_plan(&plan).apply3(&spec, &g);
 //! assert_eq!(serial.data, par.data); // worker count never changes bits
 //! ```
 
 use super::matrix_unit::BlockDims;
-use super::{matrix_unit, naive, simd, StencilSpec};
+use super::tune::TunePlan;
+use super::{gemm, matrix_unit, naive, simd, StencilSpec};
 use crate::coordinator::{runtime, scratch};
 use crate::grid::par::{GridSrc, ParGrid3, TileViewMut};
 use crate::grid::Grid3;
@@ -54,35 +57,40 @@ pub enum EngineKind {
     /// The MMStencil matrix-unit algorithm: blockwise outer-product
     /// accumulation with instruction accounting.
     MatrixUnit,
+    /// The banded-matrix GEMM reformulation of the matrix-unit
+    /// algorithm: a resident (2r+1)-band coefficient operand, strided
+    /// panel swapping, and no intermediate-buffer round-trip
+    /// ([`gemm`](super::gemm)).
+    MatrixGemm,
 }
 
 impl EngineKind {
     /// Every engine kind, in oracle-first order.
-    pub const ALL: [EngineKind; 3] = [EngineKind::Naive, EngineKind::Simd, EngineKind::MatrixUnit];
+    pub const ALL: [EngineKind; 4] = [
+        EngineKind::Naive,
+        EngineKind::Simd,
+        EngineKind::MatrixUnit,
+        EngineKind::MatrixGemm,
+    ];
 
     /// Canonical names, aligned with [`ALL`](Self::ALL) — the allowed
     /// list [`parse`](Self::parse) reports on a miss.
-    pub const NAMES: [&'static str; 3] = ["naive", "simd", "matrix_unit"];
+    pub const NAMES: [&'static str; 4] = ["naive", "simd", "matrix_unit", "matrix_gemm"];
 
     /// Runtime selection by canonical name (`"naive"`, `"simd"`,
-    /// `"matrix_unit"`) — the `StencilSpec::parse` analogue used by
-    /// configs, the CLI, and the bench JSON.  Unknown names return the
-    /// crate-wide [`ParseKindError`](crate::util::ParseKindError), so a
-    /// typo reads the same no matter which selector rejected it.
+    /// `"matrix_unit"`, `"matrix_gemm"`) — the `StencilSpec::parse`
+    /// analogue used by configs, the CLI, and the bench JSON.  Unknown
+    /// names return the crate-wide
+    /// [`ParseKindError`](crate::util::ParseKindError), so a typo reads
+    /// the same no matter which selector rejected it.
     pub fn parse(name: &str) -> Result<Self, crate::util::ParseKindError> {
         match name {
             "naive" => Ok(EngineKind::Naive),
             "simd" => Ok(EngineKind::Simd),
             "matrix_unit" => Ok(EngineKind::MatrixUnit),
+            "matrix_gemm" => Ok(EngineKind::MatrixGemm),
             _ => Err(crate::util::ParseKindError::new("engine", name, &Self::NAMES)),
         }
-    }
-
-    /// Deprecated `Option` shim over [`parse`](Self::parse), kept for
-    /// one release.
-    #[deprecated(since = "0.2.0", note = "use `EngineKind::parse`, which names the allowed list")]
-    pub fn by_name(name: &str) -> Option<Self> {
-        Self::parse(name).ok()
     }
 
     /// Canonical name; `parse(kind.name())` round-trips.
@@ -91,6 +99,7 @@ impl EngineKind {
             EngineKind::Naive => "naive",
             EngineKind::Simd => "simd",
             EngineKind::MatrixUnit => "matrix_unit",
+            EngineKind::MatrixGemm => "matrix_gemm",
         }
     }
 }
@@ -123,29 +132,40 @@ impl Engine {
         EngineKind::parse(name).map(Self::new)
     }
 
-    /// Deprecated `Option` shim over [`parse`](Self::parse), kept for
-    /// one release.
-    #[deprecated(since = "0.2.0", note = "use `Engine::parse`, which names the allowed list")]
-    pub fn by_name(name: &str) -> Option<Self> {
-        Self::parse(name).ok()
+    /// Configure an engine from a [`TunePlan`] — the plan-based surface
+    /// every production caller (`Driver`, the RTM services, the CLI)
+    /// uses instead of chaining raw knobs.  The plan's `time_block` is
+    /// a sweep-scheduling knob consumed by the *caller* (fused-sweep
+    /// depth), not engine state; everything else maps 1:1.
+    pub fn from_plan(plan: &TunePlan) -> Self {
+        Self { kind: plan.engine, threads: plan.threads.max(1), dims: plan.dims }
     }
 
     /// The crate-wide default of the `threads`-keyed compatibility
-    /// entry points (`rtm::vti::step`, `rtm::tti::step`, the
-    /// coordinator's free `sweep` functions): the simd engine with the
-    /// given parallelism hint.  One definition, so the wrappers cannot
-    /// drift onto different defaults.
+    /// entry points: the simd engine with the given parallelism hint.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use `Engine::from_plan(&TunePlan::simd(threads))` — knobs travel in plans now"
+    )]
     pub fn default_simd(threads: usize) -> Self {
-        Self::new(EngineKind::Simd).with_threads(threads)
+        Self::from_plan(&TunePlan::simd(threads))
     }
 
     /// Set the parallelism hint (clamped to ≥ 1).
+    #[deprecated(
+        since = "0.3.0",
+        note = "build a `TunePlan` and use `Engine::from_plan` — knobs travel in plans now"
+    )]
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);
         self
     }
 
     /// Override the matrix-unit block geometry / z-slab granularity.
+    #[deprecated(
+        since = "0.3.0",
+        note = "build a `TunePlan` and use `Engine::from_plan` — knobs travel in plans now"
+    )]
     pub fn with_dims(mut self, dims: BlockDims) -> Self {
         self.dims = dims;
         self
@@ -220,6 +240,9 @@ impl Engine {
             EngineKind::MatrixUnit => {
                 matrix_unit::apply3_region(spec, g, out, self.dims);
             }
+            EngineKind::MatrixGemm => {
+                gemm::apply3_region(spec, g, out, self.dims);
+            }
         }
     }
 
@@ -264,6 +287,9 @@ impl Engine {
             EngineKind::Simd => simd::d_axis_region(band, axis, g, view),
             EngineKind::MatrixUnit => {
                 matrix_unit::d_axis_region(band, axis, g, view, self.dims);
+            }
+            EngineKind::MatrixGemm => {
+                gemm::d_axis_region(band, axis, g, view, self.dims);
             }
         });
     }
@@ -339,6 +365,9 @@ impl Engine {
                 EngineKind::MatrixUnit => {
                     matrix_unit::d_axis_region(j.band, j.axis, j.src, &mut view, self.dims);
                 }
+                EngineKind::MatrixGemm => {
+                    gemm::d_axis_region(j.band, j.axis, j.src, &mut view, self.dims);
+                }
             }
         };
         if self.threads <= 1 || total <= 1 {
@@ -370,6 +399,17 @@ mod tests {
     use crate::stencil::coeffs::{first_deriv, second_deriv};
     use crate::util::prop::assert_allclose;
 
+    /// Plan-built engine of `kind` with a parallelism hint — the
+    /// post-redesign spelling of the old `.with_threads(t)` chain.
+    fn eng(kind: EngineKind, threads: usize) -> Engine {
+        Engine::from_plan(&TunePlan {
+            engine: kind,
+            dims: BlockDims::default(),
+            time_block: 1,
+            threads,
+        })
+    }
+
     #[test]
     fn kind_names_round_trip() {
         for (kind, name) in EngineKind::ALL.into_iter().zip(EngineKind::NAMES) {
@@ -386,7 +426,7 @@ mod tests {
             assert_eq!(err.what, "engine", "{bad:?}");
             assert_eq!(err.name, bad, "{bad:?}");
             assert!(
-                err.to_string().contains("naive | simd | matrix_unit"),
+                err.to_string().contains("naive | simd | matrix_unit | matrix_gemm"),
                 "{bad:?}: {err}"
             );
             assert!(Engine::parse(bad).is_err(), "{bad:?}");
@@ -395,18 +435,23 @@ mod tests {
 
     #[test]
     #[allow(deprecated)]
-    fn deprecated_by_name_shims_still_answer() {
-        // one-release compatibility contract: the Option forms mirror
-        // parse() exactly until they are removed
-        assert_eq!(EngineKind::by_name("simd"), Some(EngineKind::Simd));
-        assert_eq!(EngineKind::by_name("avx512"), None);
-        assert_eq!(Engine::by_name("naive").map(|e| e.kind), Some(EngineKind::Naive));
-        assert!(Engine::by_name("").is_none());
+    fn deprecated_knob_shims_match_the_plan_surface() {
+        // one-release compatibility contract: the knob chain mirrors the
+        // plan-built engine exactly until the shims are removed
+        assert_eq!(Engine::new(EngineKind::Simd).with_threads(0).threads, 1);
+        let shim = Engine::default_simd(3);
+        let plan = Engine::from_plan(&TunePlan::simd(3));
+        assert_eq!(shim.kind, plan.kind);
+        assert_eq!(shim.threads, plan.threads);
+        assert_eq!(shim.dims, plan.dims);
     }
 
     #[test]
-    fn with_threads_clamps_to_one() {
-        assert_eq!(Engine::new(EngineKind::Simd).with_threads(0).threads, 1);
+    fn from_plan_clamps_threads_to_one() {
+        let mut plan = TunePlan::simd(0);
+        assert_eq!(Engine::from_plan(&plan).threads, 1);
+        plan.engine = EngineKind::MatrixGemm;
+        assert_eq!(Engine::from_plan(&plan).kind, EngineKind::MatrixGemm);
     }
 
     #[test]
@@ -432,7 +477,7 @@ mod tests {
         for kind in EngineKind::ALL {
             let want = Engine::new(kind).apply3(&spec, &g);
             for threads in [2, 5] {
-                let got = Engine::new(kind).with_threads(threads).apply3(&spec, &g);
+                let got = eng(kind, threads).apply3(&spec, &g);
                 assert_eq!(got.data, want.data, "{kind:?} threads={threads}");
             }
         }
@@ -447,7 +492,7 @@ mod tests {
         let g = Grid3::random(10, 14, 18, 77);
         for kind in EngineKind::ALL {
             for threads in [1, 3] {
-                let eng = Engine::new(kind).with_threads(threads);
+                let eng = eng(kind, threads);
                 let one = eng.apply3(&spec, &g);
                 assert_eq!(eng.apply3_fused(&spec, &g, 1).data, one.data, "{kind:?} k=1");
                 for k in [2usize, 4] {
@@ -471,7 +516,7 @@ mod tests {
         let w1 = first_deriv(3);
         for kind in EngineKind::ALL {
             for threads in [1, 4] {
-                let eng = Engine::new(kind).with_threads(threads);
+                let eng = eng(kind, threads);
                 let want = [
                     eng.d2_axis(&g1, &w2, 1),
                     eng.d2_axis(&g1, &w2, 2),
@@ -539,7 +584,7 @@ mod tests {
             for axis in 0..3 {
                 let want = Engine::new(kind).d2_axis(&g, &w2, axis);
                 for threads in [2, 6] {
-                    let got = Engine::new(kind).with_threads(threads).d2_axis(&g, &w2, axis);
+                    let got = eng(kind, threads).d2_axis(&g, &w2, axis);
                     assert_eq!(got.data, want.data, "{kind:?} axis={axis} threads={threads}");
                 }
             }
@@ -553,7 +598,7 @@ mod tests {
         let g = Grid3::random(4, 4, 4, 2);
         let w2 = second_deriv(4);
         let want = Engine::new(EngineKind::Naive).d2_axis(&g, &w2, 1);
-        for kind in [EngineKind::Simd, EngineKind::MatrixUnit] {
+        for kind in [EngineKind::Simd, EngineKind::MatrixUnit, EngineKind::MatrixGemm] {
             let got = Engine::new(kind).d2_axis(&g, &w2, 1);
             assert_allclose(&got.data, &want.data, 1e-5, 1e-6);
         }

@@ -83,7 +83,7 @@ impl Counts {
 }
 
 /// Block geometry. Paper defaults: VL = 16 fp32 lanes, VZ = 4 tiles.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct BlockDims {
     /// Vector length: blocks are `vl × vl` in the x/y plane.
     pub vl: usize,
@@ -105,16 +105,17 @@ fn div_up(a: usize, b: usize) -> usize {
 /// Halo-window rows: `row(z, x)` is the y-contiguous `hy`-length row at
 /// window coordinates `(z, x)`.  The two implementations are the
 /// zero-copy / wrap-copy split: [`DirectWin`] for interior blocks,
-/// [`PackedWin`] for boundary blocks.
-trait Win {
+/// [`PackedWin`] for boundary blocks.  Crate-visible so the banded-GEMM
+/// engine (`stencil::gemm`) stages its panels through the same split.
+pub(crate) trait Win {
     fn row(&self, z: usize, x: usize) -> &[f32];
 }
 
 /// Packed window buffer (boundary blocks; wrap-copied into the arena).
-struct PackedWin<'a> {
-    w: &'a [f32],
-    hx: usize,
-    hy: usize,
+pub(crate) struct PackedWin<'a> {
+    pub(crate) w: &'a [f32],
+    pub(crate) hx: usize,
+    pub(crate) hy: usize,
 }
 
 impl Win for PackedWin<'_> {
@@ -127,15 +128,15 @@ impl Win for PackedWin<'_> {
 
 /// Zero-copy window over a fully interior block: rows are strided spans
 /// read straight from the source grid — no copy, no allocation.
-struct DirectWin<'a, S: GridSrc> {
-    g: &'a S,
-    nx: usize,
-    ny: usize,
+pub(crate) struct DirectWin<'a, S: GridSrc> {
+    pub(crate) g: &'a S,
+    pub(crate) nx: usize,
+    pub(crate) ny: usize,
     /// Grid coordinates of window origin (block origin minus radius).
-    z0: usize,
-    x0: usize,
-    y0: usize,
-    hy: usize,
+    pub(crate) z0: usize,
+    pub(crate) x0: usize,
+    pub(crate) y0: usize,
+    pub(crate) hy: usize,
 }
 
 impl<S: GridSrc> Win for DirectWin<'_, S> {
@@ -148,7 +149,8 @@ impl<S: GridSrc> Win for DirectWin<'_, S> {
 
 /// Wrap-copy a halo window into `out` (packed `(z, x, y)` order) — the
 /// boundary-block path; `out` comes from the scratch arena.
-fn fill_window_wrap<S: GridSrc>(
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fill_window_wrap<S: GridSrc>(
     g: &S,
     z0: isize,
     x0: isize,

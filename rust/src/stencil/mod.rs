@@ -9,6 +9,9 @@
 //! * [`matrix_unit`] — the MMStencil algorithm: per-(VX,VY,VZ)-block
 //!   outer-product accumulation into 16×16 tiles, with instruction
 //!   counters feeding the microarchitectural performance model.
+//! * [`gemm`] — the banded-matrix GEMM reformulation of the matrix-unit
+//!   algorithm: a resident (2r+1)-band coefficient operand, strided
+//!   panel swapping, no intermediate round-trip.
 //! * [`box_zeroing`] — the Redundant-Access Zeroing box decomposition.
 //!
 //! [`engine`] is the dispatch layer over them: an [`Engine`] value
@@ -16,6 +19,11 @@
 //! per-tile region tasks, and the RTM 1-D axis-derivative passes over
 //! the persistent worker runtime with a worker-count-independent
 //! partition (bitwise-stable results for any thread count).
+//! [`tune`] sits above the dispatch layer: its startup autotuner scores
+//! (engine, BlockDims, time_block, threads) candidates against the
+//! `simulator::roofline` cost model and emits a [`TunePlan`] — the
+//! single parseable value every production caller configures an
+//! [`Engine`] from ([`Engine::from_plan`]).
 //!
 //! Ownership/aliasing contract: engines **read** through
 //! [`GridSrc`](crate::grid::par::GridSrc) (a quiescent `&Grid3` or a
@@ -26,12 +34,15 @@
 pub mod box_zeroing;
 pub mod coeffs;
 pub mod engine;
+pub mod gemm;
 pub mod matrix_unit;
 pub mod naive;
 pub mod simd;
+pub mod tune;
 
 pub use coeffs::{box_weights, first_deriv, second_deriv, star_weights};
 pub use engine::{Engine, EngineKind};
+pub use tune::TunePlan;
 
 /// Stencil pattern class (paper Fig. 1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -144,12 +155,6 @@ impl StencilSpec {
         })
     }
 
-    /// Benchmark kernel by Table-I name.
-    #[deprecated(since = "0.2.0", note = "use `StencilSpec::parse`, which names the allowed list")]
-    pub fn by_name(name: &str) -> Option<Self> {
-        Self::parse(name).ok()
-    }
-
     /// All eight Table-I benchmark kernels.
     pub fn benchmark_suite() -> Vec<(&'static str, Self)> {
         Self::NAMES
@@ -206,13 +211,6 @@ mod tests {
             assert_eq!(err.name, bad, "{bad:?}");
             assert!(err.to_string().contains("3DStarR4"), "{bad:?}: {err}");
         }
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_by_name_shim_still_answers() {
-        assert!(StencilSpec::by_name("3DBoxR1").is_some());
-        assert!(StencilSpec::by_name("3DBoxR9").is_none());
     }
 
     #[test]

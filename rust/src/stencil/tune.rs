@@ -1,0 +1,416 @@
+//! The startup autotuner and its [`TunePlan`] — the plan-based
+//! configuration surface of the engine stack.
+//!
+//! Before this layer, every call site chained raw knobs
+//! (`Engine::new(kind).with_threads(t).with_dims(d)` plus a separate
+//! `time_block` argument threaded through the drivers).  A [`TunePlan`]
+//! carries all four choices — engine kind, block geometry, fused-sweep
+//! depth, worker fan-out — as **one value** with a `Display`/[`parse`]
+//! round-trip (the same contract as
+//! [`StencilSpec::parse`](super::StencilSpec::parse)), so configs, the
+//! CLI, the runtime manifest, and the RTM services all speak the same
+//! string:
+//!
+//! ```text
+//! engine=matrix_gemm vl=16 vz=4 tb=1 threads=4
+//! ```
+//!
+//! [`tune`] is the startup search: it scores every candidate
+//! (engine, BlockDims, time_block, threads) combination for one
+//! (pattern, radius, n) shape against the `simulator::roofline` cost
+//! model — matrix-family candidates are scored from their **own
+//! measured instruction mix** (one-block emulation at the candidate
+//! geometry, [`roofline::predict_with_counts`]) — and returns the plan
+//! with the lowest modelled wall time.  The search is fully
+//! deterministic (fixed candidate order, integer-derived scores, no
+//! clocks): the same shape always yields the same plan, which is what
+//! lets the runtime manifest cache plans by shape key
+//! (`runtime::manifest::PlanCache`) and replay them bitwise-stably.
+//!
+//! Ties break toward the **later** candidate only when it is strictly
+//! better on modelled compute time: the banded-GEMM engine spends the
+//! same outer products as the matrix-unit engine but strictly less
+//! auxiliary traffic, so on memory-bound shapes — where both tie on
+//! wall time — the plan still selects `matrix_gemm`, the engine with
+//! headroom.
+
+use super::engine::EngineKind;
+use super::matrix_unit::{self, BlockDims, Counts};
+use super::{gemm, Pattern, StencilSpec};
+use crate::grid::Grid3;
+use crate::simulator::roofline::{self, MemKind};
+use crate::simulator::soc::Platform;
+use crate::util::err::Result;
+use crate::{anyhow, bail};
+
+/// One tuned configuration: everything a caller needs to run a sweep —
+/// engine kind, block geometry, fused-sweep depth, worker fan-out —
+/// as a single copyable, parseable value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TunePlan {
+    /// Engine the kernels dispatch to.
+    pub engine: EngineKind,
+    /// Matrix-unit block geometry / z-slab granularity.
+    pub dims: BlockDims,
+    /// Fused-sweep depth (temporal blocking): how many sweeps/steps the
+    /// caller fuses per halo exchange.  Consumed by the drivers, not by
+    /// `Engine` itself.
+    pub time_block: usize,
+    /// Worker fan-out for the parallel entry points.
+    pub threads: usize,
+}
+
+impl TunePlan {
+    /// The untuned fallback for a shape: the crate's historical default
+    /// (serial simd engine, paper-default block geometry, no fusion).
+    /// Shape-independent today; the signature carries the shape so
+    /// callers don't change when the fallback learns to look at it.
+    pub fn default_for(_spec: &StencilSpec, _n: usize) -> Self {
+        Self::simd(1)
+    }
+
+    /// The simd engine with a parallelism hint and default geometry —
+    /// the plan the old `Engine::default_simd(threads)` shim maps to,
+    /// and what the `threads`-keyed compatibility entry points use.
+    pub fn simd(threads: usize) -> Self {
+        Self {
+            engine: EngineKind::Simd,
+            dims: BlockDims::default(),
+            time_block: 1,
+            threads,
+        }
+    }
+
+    /// Parse the `Display` form back into a plan.  All five
+    /// `key=value` fields are required, in any order, exactly once:
+    /// `engine=<kind> vl=<n> vz=<n> tb=<n> threads=<n>`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let (mut engine, mut vl, mut vz, mut tb, mut threads) = (None, None, None, None, None);
+        for tok in s.split_whitespace() {
+            let (key, val) = tok
+                .split_once('=')
+                .ok_or_else(|| anyhow!("tune plan: token {tok:?} is not key=value"))?;
+            let num = || -> Result<usize> {
+                val.parse::<usize>()
+                    .map_err(|_| anyhow!("tune plan: {key}={val:?} is not a number"))
+            };
+            let slot: &mut Option<usize> = match key {
+                "engine" => {
+                    let kind = EngineKind::parse(val).map_err(|e| anyhow!("tune plan: {e}"))?;
+                    if engine.replace(kind).is_some() {
+                        bail!("tune plan: duplicate key {key:?}");
+                    }
+                    continue;
+                }
+                "vl" => &mut vl,
+                "vz" => &mut vz,
+                "tb" => &mut tb,
+                "threads" => &mut threads,
+                _ => bail!("tune plan: unknown key {key:?} (engine | vl | vz | tb | threads)"),
+            };
+            if slot.replace(num()?).is_some() {
+                bail!("tune plan: duplicate key {key:?}");
+            }
+        }
+        let need = |v: Option<usize>, key: &str| {
+            v.ok_or_else(|| anyhow!("tune plan: missing key {key:?}"))
+        };
+        Ok(Self {
+            engine: engine.ok_or_else(|| anyhow!("tune plan: missing key \"engine\""))?,
+            dims: BlockDims { vl: need(vl, "vl")?, vz: need(vz, "vz")? },
+            time_block: need(tb, "tb")?,
+            threads: need(threads, "threads")?,
+        })
+    }
+}
+
+impl std::fmt::Display for TunePlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "engine={} vl={} vz={} tb={} threads={}",
+            self.engine.name(),
+            self.dims.vl,
+            self.dims.vz,
+            self.time_block,
+            self.threads
+        )
+    }
+}
+
+/// Manifest cache key of one tuned shape: pattern, radius, and cubic
+/// grid extent — everything the deterministic search depends on besides
+/// the platform.  E.g. `3DStarR4@n256`.
+pub fn shape_key(spec: &StencilSpec, n: usize) -> String {
+    let pat = match spec.pattern {
+        Pattern::Star => "Star",
+        Pattern::Box => "Box",
+    };
+    format!("{}D{}R{}@n{}", spec.ndim, pat, spec.radius, n)
+}
+
+/// Candidate block geometries the search sweeps for the matrix-family
+/// engines (the scalar engines only use `vz` as slab granularity, so
+/// they are scored at the paper default).
+const CAND_VL: [usize; 3] = [8, 16, 32];
+const CAND_VZ: [usize; 3] = [2, 4, 8];
+/// Candidate fused-sweep depths.
+const CAND_TB: [usize; 3] = [1, 2, 4];
+
+/// Modelled cost of spawning one worker task on the persistent runtime.
+const SPAWN_S: f64 = 2e-6;
+/// Parallel-efficiency erosion per extra active core (synchronization +
+/// shared-cache pressure on one NUMA node).
+const CORE_PENALTY: f64 = 0.03;
+
+/// Parallel speedup of `t` workers on `cores` physical cores.
+fn fanout_eff(t: usize, cores: usize) -> f64 {
+    let active = t.min(cores).max(1) as f64;
+    active / (1.0 + CORE_PENALTY * (active - 1.0))
+}
+
+/// Modelled wall time of one sweep-step under `plan`, given the
+/// roofline single-node estimate `(time_s, compute_s)` of the sweep:
+/// serialize the node estimate to one core, re-apply the plan's
+/// fan-out, amortize the halo-exchange cost over the fused depth, and
+/// charge the deep-halo growth the extra fused steps compute.
+fn step_time(sweep: (f64, f64), plan: &TunePlan, spec: &StencilSpec, n: usize, p: &Platform) -> f64 {
+    let cores = p.cores_per_numa.max(1);
+    let t1 = sweep.0 * cores as f64; // single-core serialization
+    let fan = t1 / fanout_eff(plan.threads, cores) + plan.threads as f64 * SPAWN_S;
+    // halo exchange: the six faces of the cube, r deep, amortized over
+    // the fused depth (deep-halo temporal blocking)
+    let exch_s = (6 * n * n * spec.radius * 4) as f64 / p.onpkg_bw_per_numa;
+    let k = plan.time_block.max(1) as f64;
+    // each extra fused step recomputes an r-deep halo shell
+    let growth = (k - 1.0) * (spec.radius as f64 / n.max(1) as f64) * fan;
+    fan + exch_s / k + growth
+}
+
+/// Roofline estimate of one sweep for a candidate: matrix-family
+/// engines are scored from their own measured per-point instruction mix
+/// at the candidate geometry; scalar engines from the calibrated
+/// efficiency model.  Returns `(time_s, compute_s)`.
+fn sweep_estimate(
+    spec: &StencilSpec,
+    n_points: usize,
+    engine: EngineKind,
+    dims: BlockDims,
+    p: &Platform,
+) -> (f64, f64) {
+    let est = match engine {
+        EngineKind::Naive => roofline::predict(
+            spec,
+            n_points,
+            roofline::Engine::Compiler,
+            roofline::engine_cfg(roofline::Engine::Compiler, MemKind::OnPkg),
+            p,
+        ),
+        EngineKind::Simd => roofline::predict(
+            spec,
+            n_points,
+            roofline::Engine::Simd,
+            roofline::engine_cfg(roofline::Engine::Simd, MemKind::OnPkg),
+            p,
+        ),
+        EngineKind::MatrixUnit | EngineKind::MatrixGemm => {
+            // measure the candidate's own instruction mix: one block at
+            // exactly the candidate geometry
+            let g = Grid3::zeros(dims.vz, dims.vl, dims.vl);
+            let (_, c) = match engine {
+                EngineKind::MatrixUnit => matrix_unit::apply3(spec, &g, dims),
+                _ => gemm::apply3(spec, &g, dims),
+            };
+            let per_kpoint: Counts =
+                roofline::scale_counts(c, (dims.vz * dims.vl * dims.vl) as f64);
+            roofline::predict_with_counts(
+                spec,
+                n_points,
+                per_kpoint,
+                dims,
+                roofline::engine_cfg(roofline::Engine::MMStencil, MemKind::OnPkg),
+                p,
+            )
+        }
+    };
+    (est.time_s, est.compute_s)
+}
+
+/// Deterministic startup search over (engine, BlockDims, time_block,
+/// threads) for one cubic shape: every candidate is scored against the
+/// roofline cost model and the lowest modelled step time wins; exact
+/// wall-time ties break toward strictly lower modelled compute time
+/// (the candidate with compute headroom).  `max_threads` caps the
+/// fan-out candidates (powers of two).  Same inputs always produce the
+/// same plan — the property the manifest plan cache relies on.
+pub fn tune(spec: &StencilSpec, n: usize, max_threads: usize, p: &Platform) -> TunePlan {
+    assert_eq!(spec.ndim, 3, "tune searches cubic 3D shapes");
+    let n_points = n * n * n;
+    let mut threads_cands = vec![1usize];
+    while threads_cands.last().unwrap() * 2 <= max_threads.max(1) {
+        threads_cands.push(threads_cands.last().unwrap() * 2);
+    }
+    let mut best: Option<(f64, f64, TunePlan)> = None;
+    for engine in EngineKind::ALL {
+        let matrix = matches!(engine, EngineKind::MatrixUnit | EngineKind::MatrixGemm);
+        let dims_cands: Vec<BlockDims> = if matrix {
+            CAND_VL
+                .iter()
+                .flat_map(|&vl| CAND_VZ.iter().map(move |&vz| BlockDims { vl, vz }))
+                .collect()
+        } else {
+            vec![BlockDims::default()]
+        };
+        for dims in dims_cands {
+            let sweep = sweep_estimate(spec, n_points, engine, dims, p);
+            for &threads in &threads_cands {
+                for tb in CAND_TB {
+                    let plan = TunePlan { engine, dims, time_block: tb, threads };
+                    let t = step_time(sweep, &plan, spec, n, p);
+                    let better = match &best {
+                        None => true,
+                        Some((bt, bc, _)) => t < *bt || (t == *bt && sweep.1 < *bc),
+                    };
+                    if better {
+                        best = Some((t, sweep.1, plan));
+                    }
+                }
+            }
+        }
+    }
+    best.expect("candidate set is never empty").2
+}
+
+/// [`tune`] on the paper platform — the convenience entry the drivers
+/// and the CLI use.
+pub fn tune_default(spec: &StencilSpec, n: usize, max_threads: usize) -> TunePlan {
+    tune(spec, n, max_threads, &Platform::paper())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_parse_round_trips() {
+        for engine in EngineKind::ALL {
+            for (vl, vz, tb, threads) in [(16, 4, 1, 1), (8, 2, 4, 16), (32, 8, 2, 3)] {
+                let plan = TunePlan { engine, dims: BlockDims { vl, vz }, time_block: tb, threads };
+                let again = TunePlan::parse(&plan.to_string()).unwrap();
+                assert_eq!(again, plan, "{plan}");
+                // and the string form itself is stable
+                assert_eq!(again.to_string(), plan.to_string());
+            }
+        }
+    }
+
+    #[test]
+    fn parse_accepts_any_key_order() {
+        let plan = TunePlan::parse("threads=2 tb=1 vz=4 vl=16 engine=matrix_gemm").unwrap();
+        assert_eq!(plan.engine, EngineKind::MatrixGemm);
+        assert_eq!(plan.dims, BlockDims { vl: 16, vz: 4 });
+        assert_eq!(plan.threads, 2);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_plans() {
+        for (bad, what) in [
+            ("engine=simd vl=16 vz=4 tb=1", "missing key \"threads\""),
+            ("engine=simd vl=16 vz=4 tb=1 threads=2 vl=8", "duplicate key \"vl\""),
+            ("engine=simd vl=sixteen vz=4 tb=1 threads=2", "not a number"),
+            ("engine=simd vl=16 vz=4 tb=1 threads=2 cores=9", "unknown key \"cores\""),
+            ("engine=simd vl=16 vz=4 tb=1 threads", "not key=value"),
+            ("vl=16 vz=4 tb=1 threads=2", "missing key \"engine\""),
+        ] {
+            let err = TunePlan::parse(bad).unwrap_err().to_string();
+            assert!(err.contains(what), "{bad:?}: {err}");
+        }
+        // a bad engine name reports the engine allowed-list
+        let err = TunePlan::parse("engine=avx512 vl=16 vz=4 tb=1 threads=2")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("naive | simd | matrix_unit | matrix_gemm"), "{err}");
+    }
+
+    #[test]
+    fn shape_keys_are_distinct_per_shape() {
+        let a = shape_key(&StencilSpec::star3d(4), 256);
+        assert_eq!(a, "3DStarR4@n256");
+        assert_ne!(a, shape_key(&StencilSpec::star3d(2), 256));
+        assert_ne!(a, shape_key(&StencilSpec::star3d(4), 128));
+        assert_ne!(a, shape_key(&StencilSpec::box3d(4), 256));
+    }
+
+    #[test]
+    fn headline_shape_selects_the_gemm_engine() {
+        // the acceptance pin: the 256³ star-r4 headline plan must select
+        // matrix_gemm — equal outer products to matrix_unit, strictly
+        // lower auxiliary traffic — and beat the untuned default plan
+        // under the same cost model
+        let spec = StencilSpec::star3d(4);
+        let p = Platform::paper();
+        let plan = tune(&spec, 256, 8, &p);
+        assert_eq!(plan.engine, EngineKind::MatrixGemm, "{plan}");
+        let n_points = 256 * 256 * 256;
+        let tuned = step_time(
+            sweep_estimate(&spec, n_points, plan.engine, plan.dims, &p),
+            &plan,
+            &spec,
+            256,
+            &p,
+        );
+        let default = TunePlan::default_for(&spec, 256);
+        let untuned = step_time(
+            sweep_estimate(&spec, n_points, default.engine, default.dims, &p),
+            &default,
+            &spec,
+            256,
+            &p,
+        );
+        assert!(tuned <= untuned, "tuned {tuned:e} vs default {untuned:e}");
+    }
+
+    #[test]
+    fn tune_is_deterministic() {
+        let spec = StencilSpec::star3d(4);
+        let p = Platform::paper();
+        let a = tune(&spec, 128, 4, &p);
+        let b = tune(&spec, 128, 4, &p);
+        assert_eq!(a, b);
+        assert_eq!(a.to_string(), b.to_string());
+    }
+
+    #[test]
+    fn gemm_never_loses_to_matrix_unit_at_equal_geometry() {
+        // the tie-break precondition: at every candidate geometry the
+        // gemm mix has equal outer products and strictly lower aux, so
+        // its modelled (time, compute) is lexicographically <= the
+        // matrix-unit engine's
+        let p = Platform::paper();
+        for spec in [StencilSpec::star3d(2), StencilSpec::star3d(4)] {
+            for vl in CAND_VL {
+                for vz in CAND_VZ {
+                    let dims = BlockDims { vl, vz };
+                    let n_points = 128 * 128 * 128;
+                    let mu = sweep_estimate(&spec, n_points, EngineKind::MatrixUnit, dims, &p);
+                    let mg = sweep_estimate(&spec, n_points, EngineKind::MatrixGemm, dims, &p);
+                    assert!(
+                        mg.0 < mu.0 || (mg.0 == mu.0 && mg.1 < mu.1),
+                        "vl={vl} vz={vz}: gemm ({:?}) vs matrix_unit ({:?})",
+                        mg,
+                        mu
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn default_plan_is_the_historical_default() {
+        let plan = TunePlan::default_for(&StencilSpec::star3d(2), 64);
+        assert_eq!(plan.engine, EngineKind::Simd);
+        assert_eq!(plan.dims, BlockDims::default());
+        assert_eq!(plan.time_block, 1);
+        assert_eq!(plan.threads, 1);
+    }
+}

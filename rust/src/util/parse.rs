@@ -2,18 +2,19 @@
 //! (`StencilSpec::parse`, `EngineKind::parse`,
 //! `CheckpointStrategy::parse`).
 //!
-//! Before this module each `by_name` returned a bare `Option`, so every
-//! config/CLI call site invented its own "unknown X" message and the
-//! three selectors drifted apart.  [`ParseKindError`] carries the
-//! rejected name, what kind of name it was, and the allowed list, so an
-//! error reads identically no matter which selector produced it:
+//! Before this module each selector returned a bare `Option` from a
+//! `by_name` method, so every config/CLI call site invented its own
+//! "unknown X" message and the three selectors drifted apart.
+//! [`ParseKindError`] carries the rejected name, what kind of name it
+//! was, and the allowed list, so an error reads identically no matter
+//! which selector produced it:
 //!
 //! ```text
-//! unknown engine "avx512" (expected one of: naive | simd | matrix_unit)
+//! unknown engine "avx512" (expected one of: naive | simd | matrix_unit | matrix_gemm)
 //! ```
 //!
-//! The `Option`-returning `by_name` forms remain as deprecated shims for
-//! one release.
+//! The `Option`-returning `by_name` shims have been removed after their
+//! one-release deprecation window; `parse` is the only spelling.
 
 use std::fmt;
 

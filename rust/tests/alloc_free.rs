@@ -19,7 +19,7 @@ use mmstencil::grid::Grid3;
 use mmstencil::rtm::{media, vti};
 use mmstencil::stencil::coeffs::second_deriv;
 use mmstencil::stencil::matrix_unit::{self, BlockDims};
-use mmstencil::stencil::{Engine, EngineKind, StencilSpec};
+use mmstencil::stencil::{gemm, Engine, EngineKind, StencilSpec, TunePlan};
 use mmstencil::util::alloc_count::CountingAlloc;
 
 #[global_allocator]
@@ -74,6 +74,30 @@ fn matrix_unit_hot_path_allocation_contract() {
         assert_eq!(scratch::local_grow_events(), grows, "arena grew after warm-up");
     }
 
+    // ---- gemm engine: the banded-GEMM reformulation inherits the ----
+    // same steady-state contract — the band operand and x-panels are
+    // scratch-arena checkouts, never per-sweep heap allocations
+    for spec in [StencilSpec::star3d(4), StencilSpec::box3d(2)] {
+        gemm::apply3(&spec, &big, dims);
+        gemm::apply3(&spec, &small, dims);
+
+        let a_small = min_events_during(3, || {
+            gemm::apply3(&spec, &small, dims);
+        });
+        let a_big = min_events_during(3, || {
+            gemm::apply3(&spec, &big, dims);
+        });
+        assert_eq!(
+            a_small, a_big,
+            "gemm allocation count scales with block count ({a_small} vs {a_big})"
+        );
+        assert!(a_big <= 8, "steady-state gemm sweep allocated {a_big} times");
+
+        let grows = scratch::local_grow_events();
+        gemm::apply3(&spec, &big, dims);
+        assert_eq!(scratch::local_grow_events(), grows, "gemm arena grew after warm-up");
+    }
+
     // all-interior sweep on a fresh, larger grid: interior blocks are
     // zero-copy, so even the *first* big-grid sweep stays at the
     // per-sweep constant — its r=1 boundary windows are no bigger than
@@ -97,7 +121,11 @@ fn matrix_unit_hot_path_allocation_contract() {
     // each costing a constant handful of events (job Arc, chunk-bounds
     // vec, debug claim ledger) — never per block or per cell, so 8×
     // the cells must not move the count beyond ledger-growth noise.
-    let eng = Engine::new(EngineKind::MatrixUnit).with_threads(2);
+    let eng = Engine::from_plan(&TunePlan {
+        engine: EngineKind::MatrixUnit,
+        threads: 2,
+        ..TunePlan::simd(1)
+    });
     let w2 = second_deriv(4);
     let shot = |n: usize| {
         let m = media::layered_vti(n, n, n, 10.0, &media::default_layers());

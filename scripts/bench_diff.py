@@ -1,13 +1,15 @@
 #!/usr/bin/env python3
-"""Diff two BENCH_engines.json files (schema mmstencil.bench_engines.v4).
+"""Diff two BENCH_engines.json files (schema mmstencil.bench_engines.v5).
 
 Rows are matched by identity key — sweep rows on (engine, pattern,
 radius, n, time_block), RTM rows on (engine, medium, n, time_block),
 survey rows on (engine, medium, n, shots, shards, checkpoint) — and the
 per-row throughput delta (Mcell/s, or shots/hour for survey rows) is
-printed as a percentage.  v3 baselines simply have no `survey_entries`
-array and stay diffable: the survey section prints every current row as
-new.  `threads`
+printed as a percentage.  Older baselines stay diffable: v3 documents
+simply have no `survey_entries` array (the survey section prints every
+current row as new), and v4 rows lack the v5 `plan` string, which is
+ignored here — plans describe *how* a row ran, not *which* row it is,
+so they are deliberately not part of any identity key.  `threads`
 is deliberately NOT part of the key: the probe derives it from the
 host's core count, so keying on it would silently stop matching rows
 whenever the runner shape changes (engine labels already distinguish
