@@ -6,17 +6,20 @@
 //! Every engine is exercised through the dispatch layer
 //! (`stencil::Engine`, configured via `Engine::from_plan`) — no
 //! per-engine closures — and emits `BENCH_engines.json` (schema
-//! `metrics::bench_json` v5, every sweep/RTM row carrying the active
-//! `TunePlan` string):
+//! `metrics::bench_json` v6, every sweep/RTM row carrying the active
+//! `TunePlan` string and every sweep row its wavefront tile geometry):
 //! per-engine sweep throughput for star/box r ∈ {1, 4}, the headline
 //! 256³ star-r4 sweep at temporal-blocking depths k ∈ {1, 2, 4}
 //! (`Engine::apply3_fused` — the fused rows are the perf-trajectory
-//! evidence for the deep-halo tentpole), and per-engine RTM step
+//! evidence for the deep-halo tentpole), the same headline workload
+//! stepped through the in-rank (z, t) wavefront at fixed `(tile, wf)`
+//! geometries (`coordinator::wavefront` via `Driver::with_wavefront` —
+//! the PR 8 rows), and per-engine RTM step
 //! throughput (VTI and TTI, classic `step_with` at depth 1 and the
 //! fused `step_k_with` at depth 2), each with per-sweep/per-step
 //! heap-allocation counts (counting global allocator below) and
 //! scratch-arena growth.  A mini-survey through the shot service
-//! (`rtm::service`) emits the v5 `survey_entries` rows — shots/hour
+//! (`rtm::service`) emits the v4 `survey_entries` rows — shots/hour
 //! plus retry/failure accounting, with one injected-fault shot proving
 //! the retry path end to end.  CI runs a shrunken probe (env below),
 //! validates the schema, diffs against the committed baseline
@@ -34,6 +37,9 @@
 //!   engine labels (`naive,simd,matrix_unit,matrix_gemm,
 //!   matrix_unit_par,matrix_gemm_par`); unset runs everything.
 //!   Filtered probes are for local iteration — CI needs the full set.
+//! * `MMSTENCIL_PROBE_WAVEFRONTS` — comma-separated `tile:wf` pairs
+//!   for the headline wavefront rows (e.g. `16:2,32:1`); unset runs
+//!   the default fixed set, an empty value skips the rows.
 
 use mmstencil::coordinator::scratch;
 use mmstencil::grid::Grid3;
@@ -78,6 +84,24 @@ fn engine_filter() -> Option<Vec<String>> {
 
 fn wants(filter: &Option<Vec<String>>, label: &str) -> bool {
     filter.as_ref().map_or(true, |f| f.iter().any(|e| e == label))
+}
+
+/// `MMSTENCIL_PROBE_WAVEFRONTS` geometry list (`tile:wf` pairs) for the
+/// headline wavefront rows; unset = the default fixed set, an empty or
+/// unparsable value skips the rows.  Mirrors the engine filter above:
+/// env-selectable for local iteration, defaults for CI.
+fn wavefront_geometries() -> Vec<(usize, usize)> {
+    match std::env::var("MMSTENCIL_PROBE_WAVEFRONTS") {
+        Err(_) => vec![(16, 2), (32, 1)],
+        Ok(v) => v
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .filter_map(|s| {
+                let (t, w) = s.trim().split_once(':')?;
+                Some((t.trim().parse().ok()?, w.trim().parse::<usize>().ok()?.max(1)))
+            })
+            .collect(),
+    }
 }
 
 /// Plan for `kind` at a parallelism/depth — every probed engine is
@@ -130,6 +154,8 @@ fn probe_sweep(
         n,
         threads: eng.threads,
         time_block,
+        tile: plan.tile,
+        wf: plan.wf.max(1),
         mcells_per_s: mcells,
         allocs_per_sweep: allocs,
         arena_grows_per_sweep: grows,
@@ -187,6 +213,61 @@ fn main() {
             if wants(&filter, label) {
                 for k in [1usize, 2, 4] {
                     probe_sweep(&mut entries, label, &plan_for(kind, threads, k), &spec, "star", &gb, budget);
+                }
+            }
+        }
+
+        // ---- headline wavefront rows (schema v6): the same star-r4
+        // workload stepped as in-rank (z, t) wavefront tiles through
+        // the dependency ledger (`coordinator::wavefront`) at fixed,
+        // env-selectable geometries — k = 4 fused sub-steps per
+        // exchange round; the tile=0 fused rows above are the classic
+        // baseline these diff against ----
+        let wavefronts = wavefront_geometries();
+        if !wavefronts.is_empty() {
+            use mmstencil::coordinator::driver::Driver;
+            use mmstencil::coordinator::exchange::Backend;
+            use mmstencil::grid::CartDecomp;
+            let k = 4usize;
+            let dec = CartDecomp::new(1, 1, 2);
+            for (label, kind) in [
+                ("matrix_unit_par", EngineKind::MatrixUnit),
+                ("matrix_gemm_par", EngineKind::MatrixGemm),
+            ] {
+                if !wants(&filter, label) {
+                    continue;
+                }
+                for &(tile, wf) in &wavefronts {
+                    let plan = TunePlan { tile, wf, ..plan_for(kind, threads, k) };
+                    let drv = Driver::new(threads, Platform::paper()).with_plan(&plan);
+                    let (mcells, allocs, grows) = timed(
+                        &format!("{label:<16} star3d r4 {big_n}^3 k{k} tile{tile} wf{wf}"),
+                        (k * big_n * big_n * big_n) as f64,
+                        budget,
+                        || {
+                            std::hint::black_box(drv.multirank_sweep(
+                                &spec,
+                                &gb,
+                                &dec,
+                                &Backend::sdma(),
+                                k,
+                            ));
+                        },
+                    );
+                    entries.push(EngineBench {
+                        engine: label.into(),
+                        pattern: "star".into(),
+                        radius: spec.radius,
+                        n: big_n,
+                        threads,
+                        time_block: k,
+                        tile,
+                        wf,
+                        mcells_per_s: mcells,
+                        allocs_per_sweep: allocs,
+                        arena_grows_per_sweep: grows,
+                        plan: plan.to_string(),
+                    });
                 }
             }
         }

@@ -1,0 +1,95 @@
+"""Unit tests for scripts/bench_diff.py's pure comparison core.
+
+The CI bench diff is advisory, but its row-matching logic is contract:
+older-schema baselines must keep matching (missing time_block → 1,
+missing tile/wf → 0/1), zero-throughput baseline rows must report as
+unmeasured rather than produce bogus percentages, and the worst matched
+delta must be exactly what --fail-on-regression gates on.  No third-
+party deps — the script is stdlib-only by design.
+"""
+
+import importlib.util
+import os
+
+_SCRIPT = os.path.join(
+    os.path.dirname(__file__), os.pardir, os.pardir, "scripts", "bench_diff.py"
+)
+_spec = importlib.util.spec_from_file_location("bench_diff", _SCRIPT)
+bench_diff = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bench_diff)
+
+
+def sweep_row(engine="simd", tile=0, wf=1, mcells=100.0, **over):
+    row = {
+        "engine": engine,
+        "pattern": "star",
+        "radius": 4,
+        "n": 48,
+        "time_block": 4,
+        "tile": tile,
+        "wf": wf,
+        "mcells_per_s": mcells,
+    }
+    row.update(over)
+    return row
+
+
+def by_status(results):
+    out = {}
+    for key, status, cv, pct in results:
+        out.setdefault(status, []).append((key, cv, pct))
+    return out
+
+
+def test_matched_rows_report_percentage_delta():
+    base = [sweep_row(mcells=100.0), sweep_row(tile=16, wf=2, mcells=200.0)]
+    cur = [sweep_row(mcells=90.0), sweep_row(tile=16, wf=2, mcells=260.0)]
+    res = bench_diff.compare(base, cur, bench_diff.SWEEP_KEY)
+    got = by_status(res)
+    assert len(got["matched"]) == 2 and set(got) == {"matched"}
+    pcts = sorted(pct for _, _, pct in got["matched"])
+    assert abs(pcts[0] - (-10.0)) < 1e-9
+    assert abs(pcts[1] - 30.0) < 1e-9
+    assert abs(bench_diff.worst_pct(res) - (-10.0)) < 1e-9
+
+
+def test_tile_geometry_is_part_of_the_sweep_identity():
+    # same engine/depth at a different wavefront geometry is a NEW row,
+    # never a silent re-baselining of the untiled row
+    base = [sweep_row(tile=0, wf=1, mcells=100.0)]
+    cur = [sweep_row(tile=16, wf=2, mcells=50.0)]
+    got = by_status(bench_diff.compare(base, cur, bench_diff.SWEEP_KEY))
+    assert len(got["new"]) == 1
+    assert len(got["dropped"]) == 1
+    assert "matched" not in got
+
+
+def test_v5_rows_without_tile_keys_match_untiled_v6_rows():
+    # a pre-wavefront baseline row (no tile/wf keys) must keep matching
+    # the v6 row that records tile=0 wf=1 explicitly
+    old = sweep_row(mcells=100.0)
+    del old["tile"], old["wf"]
+    cur = [sweep_row(tile=0, wf=1, mcells=120.0)]
+    got = by_status(bench_diff.compare([old], cur, bench_diff.SWEEP_KEY))
+    assert len(got["matched"]) == 1 and set(got) == {"matched"}
+    assert abs(got["matched"][0][2] - 20.0) < 1e-9
+
+
+def test_zero_seeded_baseline_rows_are_unmeasured_not_matched():
+    base = [sweep_row(mcells=0.0)]
+    cur = [sweep_row(mcells=123.0)]
+    res = bench_diff.compare(base, cur, bench_diff.SWEEP_KEY)
+    got = by_status(res)
+    assert set(got) == {"unmeasured"}
+    assert bench_diff.worst_pct(res) is None
+
+
+def test_worst_pct_feeds_the_fail_on_regression_gate():
+    base = [sweep_row(mcells=100.0), sweep_row(engine="matrix_gemm", mcells=100.0)]
+    cur = [sweep_row(mcells=97.0), sweep_row(engine="matrix_gemm", mcells=60.0)]
+    res = bench_diff.compare(base, cur, bench_diff.SWEEP_KEY)
+    worst = bench_diff.worst_pct(res)
+    assert abs(worst - (-40.0)) < 1e-9
+    # the CLI gate fires exactly when worst < -PCT
+    assert worst < -30.0
+    assert not worst < -50.0

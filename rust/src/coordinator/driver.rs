@@ -40,6 +40,7 @@ use super::runtime::{self, Runtime, RuntimeConfig, RuntimeStats};
 use super::scratch;
 use super::temporal;
 use super::tiles::{self, Strategy};
+use super::wavefront;
 
 /// Pool activity attributable to one sweep / stepped run.
 #[derive(Clone, Copy, Debug, Default)]
@@ -104,6 +105,8 @@ pub struct Driver {
     threads: usize,
     engine: Engine,
     time_block: usize,
+    tile: usize,
+    wf: usize,
 }
 
 impl Driver {
@@ -122,6 +125,8 @@ impl Driver {
             threads,
             engine: Engine::from_plan(&TunePlan::simd(1)),
             time_block: 1,
+            tile: 0,
+            wf: 1,
         }
     }
 
@@ -140,6 +145,8 @@ impl Driver {
             threads: cfg.sweep.threads.max(1),
             engine: Engine::from_plan(&TunePlan { threads: 1, ..plan }),
             time_block: plan.time_block.max(1),
+            tile: plan.tile,
+            wf: plan.wf.max(1),
         }
     }
 
@@ -151,7 +158,26 @@ impl Driver {
     pub fn with_plan(mut self, plan: &TunePlan) -> Self {
         self.engine = Engine::from_plan(&TunePlan { threads: 1, ..*plan });
         self.time_block = plan.time_block.max(1);
+        self.tile = plan.tile;
+        self.wf = plan.wf.max(1);
         self
+    }
+
+    /// Tile the fused sub-steps into `tile`-deep z-slabs advanced as a
+    /// dependency-driven (z, t) wavefront
+    /// ([`coordinator::wavefront`](super::wavefront)), `wf` sub-step
+    /// levels per dispatch barrier.  `tile = 0` (the default) keeps the
+    /// classic level-at-a-time fused path; results are bitwise
+    /// identical for any geometry (`rust/tests/wavefront.rs`).
+    pub fn with_wavefront(mut self, tile: usize, wf: usize) -> Self {
+        self.tile = tile;
+        self.wf = wf.max(1);
+        self
+    }
+
+    /// Wavefront `(tile, wf)` geometry (`tile = 0` ⇒ classic stepping).
+    pub fn wavefront(&self) -> (usize, usize) {
+        (self.tile, self.wf)
     }
 
     /// Route this driver's region tasks through `engine` (tasks run
@@ -235,6 +261,8 @@ impl Driver {
                 &self.platform,
                 &self.engine,
                 self.time_block,
+                self.tile,
+                self.wf,
             )
         } else {
             multirank_sweep_on(
@@ -361,6 +389,13 @@ pub struct StepStats {
     /// (NOT averaged): `steps` on the classic path, `⌈steps / k⌉` under
     /// temporal blocking — the 1/k reduction the fused path exists for.
     pub comm_rounds: u64,
+    /// Global dispatch barriers spent on the fused sub-steps past the
+    /// exchange-overlapped first one, across the whole run (NOT
+    /// averaged): `k − 1` per round on the classic fused path,
+    /// `⌈(k − 1) / wf⌉` per round under wavefront tiling — the barrier
+    /// reduction `coordinator::wavefront` exists for.  0 when `k = 1`
+    /// (and on the unfused path, which has no sub-steps).
+    pub substep_barriers: u64,
     /// runtime activity across all steps
     pub pool: PoolSnapshot,
 }
@@ -431,6 +466,7 @@ fn multirank_sweep_on(
         sim_step_pipelined_s: 0.0,
         exchanged_bytes: 0,
         comm_rounds: 0,
+        substep_barriers: 0,
         pool: PoolSnapshot::default(),
     };
     let before = rt.stats();
@@ -641,6 +677,45 @@ pub fn multirank_sweep_fused(
         platform,
         &Engine::from_plan(&TunePlan::simd(1)),
         time_block,
+        0,
+        1,
+    )
+}
+
+/// [`multirank_sweep_fused`] with in-rank wavefront tiling of the fused
+/// sub-steps (`coordinator::wavefront`, default simd engine): the
+/// levels `1..k` are cut into `tile`-deep z-slabs and advanced through
+/// the dependency ledger, `wf` levels per dispatch barrier.  `tile = 0`
+/// is exactly [`multirank_sweep_fused`]; any `tile > 0` is bitwise
+/// identical to it (`rust/tests/wavefront.rs`) while
+/// `StepStats::substep_barriers` drops from `k − 1` to `⌈(k − 1)/wf⌉`
+/// per exchange round.
+#[allow(clippy::too_many_arguments)]
+pub fn multirank_sweep_wavefront(
+    spec: &StencilSpec,
+    global: &Grid3,
+    decomp: &CartDecomp,
+    backend: &Backend,
+    steps: usize,
+    threads: usize,
+    platform: &Platform,
+    time_block: usize,
+    tile: usize,
+    wf: usize,
+) -> (Grid3, StepStats) {
+    multirank_sweep_fused_on(
+        runtime::global(),
+        spec,
+        global,
+        decomp,
+        backend,
+        steps,
+        threads,
+        platform,
+        &Engine::from_plan(&TunePlan::simd(1)),
+        time_block,
+        tile,
+        wf,
     )
 }
 
@@ -656,6 +731,8 @@ fn multirank_sweep_fused_on(
     platform: &Platform,
     engine: &Engine,
     time_block: usize,
+    tile: usize,
+    wf: usize,
 ) -> (Grid3, StepStats) {
     let r = spec.radius;
     let threads = threads.max(1);
@@ -670,6 +747,7 @@ fn multirank_sweep_fused_on(
         sim_step_pipelined_s: 0.0,
         exchanged_bytes: 0,
         comm_rounds: 0,
+        substep_barriers: 0,
         pool: PoolSnapshot::default(),
     };
     let before = rt.stats();
@@ -754,34 +832,76 @@ fn multirank_sweep_fused_on(
         // sub-steps 1..kk: ping-pong between the scattered slabs and the
         // arena buffers over the shrinking trapezoid boxes — no halo
         // traffic, every read is data the previous sub-step wrote
-        for s in 1..kk {
-            let mut tasks: Vec<RegionTask> = Vec::new();
-            for (rk, hg) in grids.iter().enumerate() {
-                let b = temporal::substep_box(hg.nz, hg.nx, hg.ny, r, kk, s);
-                push_zslabs(&mut tasks, rk, b, threads, decomp.ranks());
+        if tile > 0 && kk > 1 {
+            // wavefront path (`coordinator::wavefront`): both buffer
+            // families stay wrapped for the whole band — levels
+            // alternate write targets, reads go through `&ParGrid3`
+            // (its shared `GridSrc` cell access), writes through
+            // transient per-tile claims — and each band of `wf` levels
+            // is ONE dispatch whose tiles unlock through the dependency
+            // ledger, not a barrier per level
+            let rank_dims: Vec<(usize, usize, usize)> =
+                grids.iter().map(|hg| (hg.nz, hg.nx, hg.ny)).collect();
+            let grid_pgs: Vec<ParGrid3<'_>> =
+                grids.iter_mut().map(|hg| ParGrid3::new(&mut hg.grid)).collect();
+            let buf_pgs: Vec<ParGrid3<'_>> =
+                bufs.iter_mut().map(|b| ParGrid3::new(&mut **b)).collect();
+            let mut s0 = 1usize;
+            while s0 < kk {
+                let depth = wf.max(1).min(kk - s0);
+                let plan = wavefront::plan_band(decomp.ranks(), depth, tile, r, &|lvl, rk| {
+                    let (nz, nx, ny) = rank_dims[rk];
+                    let b = temporal::substep_box(nz, nx, ny, r, kk, s0 + lvl);
+                    (b[0], b[1])
+                });
+                wavefront::run_band(rt, threads, &plan, &|t| {
+                    let s = s0 + t.level;
+                    let (nz, nx, ny) = rank_dims[t.rank];
+                    let b = temporal::substep_box(nz, nx, ny, r, kk, s);
+                    // sub-step t's result lives in `bufs` iff t is
+                    // even, so level s reads `bufs` iff s is odd
+                    let (src, dst) = if s % 2 == 1 {
+                        (&buf_pgs[t.rank], &grid_pgs[t.rank])
+                    } else {
+                        (&grid_pgs[t.rank], &buf_pgs[t.rank])
+                    };
+                    let mut view = dst.view(t.z0, t.z1, b[2], b[3], b[4], b[5]);
+                    engine.apply3_region(spec, src, &mut view);
+                });
+                acc.substep_barriers += 1;
+                s0 += depth;
             }
-            // sub-step t's result lives in `bufs` iff t is even, so
-            // sub-step s reads `bufs` iff s is odd
-            let src_is_buf = s % 2 == 1;
-            let (srcs, dsts): (Vec<&Grid3>, Vec<ParGrid3<'_>>) = if src_is_buf {
-                (
-                    bufs.iter().map(|b| &**b).collect(),
-                    grids.iter_mut().map(|hg| ParGrid3::new(&mut hg.grid)).collect(),
-                )
-            } else {
-                (
-                    grids.iter().map(|hg| &hg.grid).collect(),
-                    bufs.iter_mut().map(|b| ParGrid3::new(&mut **b)).collect(),
-                )
-            };
-            let srcs = &srcs;
-            let dsts = &dsts;
-            rt.run(threads, tasks.len(), &|i| {
-                let task = &tasks[i];
-                let mut view =
-                    dsts[task.rank].view(task.z0, task.z1, task.x0, task.x1, task.y0, task.y1);
-                engine.apply3_region(spec, srcs[task.rank], &mut view);
-            });
+        } else {
+            for s in 1..kk {
+                let mut tasks: Vec<RegionTask> = Vec::new();
+                for (rk, hg) in grids.iter().enumerate() {
+                    let b = temporal::substep_box(hg.nz, hg.nx, hg.ny, r, kk, s);
+                    push_zslabs(&mut tasks, rk, b, threads, decomp.ranks());
+                }
+                // sub-step t's result lives in `bufs` iff t is even, so
+                // sub-step s reads `bufs` iff s is odd
+                let src_is_buf = s % 2 == 1;
+                let (srcs, dsts): (Vec<&Grid3>, Vec<ParGrid3<'_>>) = if src_is_buf {
+                    (
+                        bufs.iter().map(|b| &**b).collect(),
+                        grids.iter_mut().map(|hg| ParGrid3::new(&mut hg.grid)).collect(),
+                    )
+                } else {
+                    (
+                        grids.iter().map(|hg| &hg.grid).collect(),
+                        bufs.iter_mut().map(|b| ParGrid3::new(&mut **b)).collect(),
+                    )
+                };
+                let srcs = &srcs;
+                let dsts = &dsts;
+                rt.run(threads, tasks.len(), &|i| {
+                    let task = &tasks[i];
+                    let mut view =
+                        dsts[task.rank].view(task.z0, task.z1, task.x0, task.x1, task.y0, task.y1);
+                    engine.apply3_region(spec, srcs[task.rank], &mut view);
+                });
+                acc.substep_barriers += 1;
+            }
         }
 
         // gather: the final sub-step wrote exactly the interiors
@@ -912,6 +1032,12 @@ mod tests {
         let d = Driver::new(2, Platform::paper()).with_plan(&plan);
         assert_eq!(d.engine().kind, crate::stencil::EngineKind::MatrixGemm);
         assert_eq!(d.time_block(), 2);
+        // a v7-era plan (no tile=/wf= keys) selects classic stepping
+        assert_eq!(d.wavefront(), (0, 1));
+        let wf_plan =
+            TunePlan::parse("engine=simd vl=16 vz=4 tb=4 threads=2 tile=3 wf=2").unwrap();
+        let d2 = Driver::new(2, Platform::paper()).with_plan(&wf_plan);
+        assert_eq!(d2.wavefront(), (3, 2));
         // the driver's runtime is the parallelism; the engine stays serial
         assert_eq!(d.engine().threads, 1);
         let cfg = crate::config::from_text(
@@ -969,6 +1095,22 @@ mod tests {
         // MPI gains nothing from pipelining and its comm is far slower
         assert_eq!(mpi.sim_step_pipelined_s, mpi.sim_step_s);
         assert!(mpi.sim_comm_s > sdma.sim_comm_s);
+    }
+
+    #[test]
+    fn wavefront_driver_steps_are_bitwise_the_classic_fused_path() {
+        // the full matrix lives in rust/tests/wavefront.rs; this pins
+        // the Driver plumbing end to end (with_wavefront → fused arm)
+        let spec = StencilSpec::star3d(2);
+        let g = Grid3::random(20, 20, 20, 17);
+        let p = Platform::paper();
+        let dec = CartDecomp::new(1, 1, 2);
+        let classic = Driver::new(3, p.clone()).with_time_block(2);
+        let (want, ws) = classic.multirank_sweep(&spec, &g, &dec, &Backend::sdma(), 4);
+        let tiled = Driver::new(3, p).with_time_block(2).with_wavefront(4, 1);
+        let (got, ts) = tiled.multirank_sweep(&spec, &g, &dec, &Backend::sdma(), 4);
+        assert_eq!(got.data, want.data, "wavefront tiling must be bitwise");
+        assert_eq!(ts.comm_rounds, ws.comm_rounds, "tiling must not add exchanges");
     }
 
     #[test]

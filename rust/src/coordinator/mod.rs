@@ -17,6 +17,10 @@
 //! * [`temporal`] — deep-halo temporal blocking: `k·r` halo frames,
 //!   one exchange per `k` fused sub-steps, trapezoid sub-step boxes
 //!   (paper §III-B's "depth of temporal blocking", made tunable);
+//! * [`wavefront`] — in-rank diamond/wavefront tiling of the fused
+//!   sub-steps: cache-resident (z, t) tiles advanced through a CSR
+//!   dependency ledger with one dispatch per band — no global barrier
+//!   between sub-step levels (DESIGN.md §14);
 //! * [`driver`]   — whole-sweep orchestration: grid → bricks → tiles →
 //!   runtime batches → engine (selected through `stencil::Engine`) →
 //!   metrics.
@@ -37,3 +41,4 @@ pub mod runtime;
 pub mod scratch;
 pub mod temporal;
 pub mod tiles;
+pub mod wavefront;

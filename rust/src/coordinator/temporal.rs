@@ -148,6 +148,49 @@ mod tests {
     }
 
     #[test]
+    fn substep_boxes_survive_degenerate_geometries() {
+        // The wavefront planner slices these boxes into (z, t) tiles,
+        // so the algebra must hold on pathologically thin ranks too:
+        // zero-extent axes, single-cell ranks, every (r, k, s).
+        for (nz, nx, ny) in [(0usize, 5, 5), (1, 1, 1), (2, 0, 7), (5, 5, 5)] {
+            let dims = [nz, nx, ny];
+            for r in [1usize, 2, 4] {
+                for k in [1usize, 2, 4] {
+                    let h = k * r;
+                    for s in 0..k {
+                        let b = substep_box(nz, nx, ny, r, k, s);
+                        // nesting: growing box s by r gives box s-1
+                        if s > 0 {
+                            let prev = substep_box(nz, nx, ny, r, k, s - 1);
+                            for a in 0..3 {
+                                assert_eq!(b[2 * a] - r, prev[2 * a], "s={s} axis={a}");
+                                assert_eq!(b[2 * a + 1] + r, prev[2 * a + 1], "s={s} axis={a}");
+                            }
+                        }
+                        for a in 0..3 {
+                            // sub-steps past the first keep a ≥ 2r
+                            // margin from the storage faces — the
+                            // wrap-free-interior guarantee the engines
+                            // (and the wavefront tiles) rely on
+                            let margin = if s == 0 { r } else { 2 * r };
+                            assert!(b[2 * a] >= margin, "s={s} axis={a}: {b:?}");
+                            assert!(
+                                b[2 * a + 1] + margin <= dims[a] + 2 * h,
+                                "s={s} axis={a}: {b:?}"
+                            );
+                            // extent is the axis plus the trapezoid
+                            // growth: a zero-extent axis leaves an
+                            // empty final box, a halo-only slab before
+                            let e = (k - 1 - s) * r;
+                            assert_eq!(b[2 * a + 1] - b[2 * a], dims[a] + 2 * e);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn deep_and_frame_partition_substep0() {
         for (nz, nx, ny, r, k) in [(10, 12, 14, 2, 3), (6, 6, 6, 1, 4), (3, 8, 8, 2, 2)] {
             let b0 = substep_box(nz, nx, ny, r, k, 0);

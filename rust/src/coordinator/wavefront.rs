@@ -1,0 +1,344 @@
+//! In-rank diamond/wavefront temporal tiling of the fused sub-steps
+//! (PR 8 tentpole, DESIGN.md §14): inside one rank's fused `k`-step
+//! window the sub-step levels `1..k` are decomposed into z-slab tiles
+//! whose `(z-extent × x × y)` working set fits the simulated cache
+//! hierarchy, and a per-level **dependency ledger** advances workers
+//! along the (z, t) wavefront — a tile at time level `t+1` becomes
+//! claimable as soon as its r-halo dependencies at level `t` complete,
+//! with **no global barrier between sub-steps** inside a band.
+//!
+//! Geometry: level `s`'s box is `temporal::substep_box(s)` — each level
+//! shrinks by `r` per side, so a fixed z-tile traced through the levels
+//! is a trapezoid in (z, t) and the skewed ready-order is the classic
+//! diamond wavefront (Malas & Hager, arxiv 1510.04995).  Tiles clamp at
+//! the rank's sub-step range: the inter-rank halo was prepaid by the
+//! deep `k·r` exchange, so no diamond ever crosses a rank boundary.
+//!
+//! The one dependency rule (and why it is sufficient): tile `(B, s)` is
+//! ready when every level `s−1` tile whose z-range intersects
+//! `[B.z0 − r, B.z1 + r)` has completed.  That covers
+//!
+//! * the **true dependency** — those are exactly the cells `(B, s)`
+//!   reads;
+//! * the **anti-dependency** — level `s` and level `s−2` write the same
+//!   buffer (the ping-pong has period 2), and a level-`s` write racing a
+//!   level-`s−1` read of that buffer intersects the reader's grown
+//!   range, i.e. is already an edge;
+//! * **write–write ordering** — a level-`s` tile is transitively
+//!   ordered after every level-`s−2` tile its write-box overlaps
+//!   (grow twice by `r` ⊇ identity);
+//!
+//! so for any tile extent, worker count, and band depth the execution
+//! order is a linear extension of the data-dependency DAG, and because
+//! every engine's per-point accumulation order is fixed and
+//! block-independent the result is **bitwise** the level-at-a-time
+//! classic path (`rust/tests/wavefront.rs`).
+
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use super::runtime::Runtime;
+
+/// One wavefront tile: a z-slab of one rank's sub-step level.  `level`
+/// is band-relative (0 = the band's first sub-step); `z0..z1` is the
+/// slab in halo-storage coordinates.  The x/y extent is the level's
+/// full `substep_box` — the caller derives it per tile.
+#[derive(Clone, Copy, Debug)]
+pub struct Tile {
+    pub rank: usize,
+    pub level: usize,
+    pub z0: usize,
+    pub z1: usize,
+}
+
+/// A band's tiles plus the dependency ledger in CSR form: per tile its
+/// in-degree and the successor list to decrement on completion.  Built
+/// with a constant number of allocations (counted passes +
+/// `with_capacity`), so the fused hot path keeps its O(1)-allocs
+/// contract (`rust/tests/alloc_free.rs`).
+pub struct BandPlan {
+    /// Level-major, then rank-major, then ascending z — a deterministic
+    /// order the CSR indices are computed against arithmetically.
+    pub tiles: Vec<Tile>,
+    /// `starts[level * ranks + rank]` = index of that cell's first tile.
+    starts: Vec<u32>,
+    /// Unsatisfied-predecessor count per tile (0 ⇒ initially ready).
+    indegree: Vec<u32>,
+    /// CSR successor lists: `succ_data[succ_offsets[i]..succ_offsets[i+1]]`.
+    succ_offsets: Vec<u32>,
+    succ_data: Vec<u32>,
+    ranks: usize,
+    tile: usize,
+}
+
+impl BandPlan {
+    /// Number of tiles across the band.
+    pub fn len(&self) -> usize {
+        self.tiles.len()
+    }
+
+    /// True when the band has no tiles (empty level ranges).
+    pub fn is_empty(&self) -> bool {
+        self.tiles.is_empty()
+    }
+
+    /// Index range of the tiles covering one `(level, rank)` cell.
+    pub fn cell(&self, level: usize, rank: usize) -> (usize, usize) {
+        let c = level * self.ranks + rank;
+        (self.starts[c] as usize, self.starts[c + 1] as usize)
+    }
+
+    /// The z-extent the band was tiled with.
+    pub fn tile_extent(&self) -> usize {
+        self.tile
+    }
+}
+
+/// Plan one wavefront band of `depth` consecutive sub-step levels over
+/// `ranks` ranks.  `range(level, rank)` returns that cell's z-range
+/// `[z0, z1)` in storage coordinates (level is band-relative); `tile`
+/// is the z-extent per tile and `r` the stencil radius the dependency
+/// halo grows by.  Level 0 tiles have no in-band predecessors — their
+/// inputs were completed by the previous band (or sub-step 0), which
+/// the caller sequences before this one.
+pub fn plan_band(
+    ranks: usize,
+    depth: usize,
+    tile: usize,
+    r: usize,
+    range: &dyn Fn(usize, usize) -> (usize, usize),
+) -> BandPlan {
+    assert!(tile > 0, "wavefront tile extent must be positive");
+    assert!(depth > 0 && ranks > 0);
+    let cells = depth * ranks;
+    let mut starts: Vec<u32> = Vec::with_capacity(cells + 1);
+    starts.push(0);
+    let mut total = 0usize;
+    for level in 0..depth {
+        for rank in 0..ranks {
+            let (z0, z1) = range(level, rank);
+            total += (z1 - z0).div_ceil(tile);
+            starts.push(total as u32);
+        }
+    }
+
+    let mut tiles: Vec<Tile> = Vec::with_capacity(total);
+    for level in 0..depth {
+        for rank in 0..ranks {
+            let (z0, z1) = range(level, rank);
+            let mut z = z0;
+            while z < z1 {
+                let ze = (z + tile).min(z1);
+                tiles.push(Tile { rank, level, z0: z, z1: ze });
+                z = ze;
+            }
+        }
+    }
+
+    // Parent-index range of tile `t` at `level > 0`: the level-1 tiles
+    // of the same rank whose z-range intersects [t.z0 − r, t.z1 + r),
+    // clamped to the parent range (the diamond's rank-boundary clamp).
+    // Parent slabs are `tile`-aligned to their own z0, so the range is
+    // arithmetic — no search.
+    let plan_parents = |starts: &[u32], t: &Tile| -> (usize, usize) {
+        let c = (t.level - 1) * ranks + t.rank;
+        let (p0, p1) = (starts[c] as usize, starts[c + 1] as usize);
+        debug_assert!(p1 > p0, "parent level range cannot be empty");
+        let pa = tiles[p0].z0;
+        let pb = tiles[p1 - 1].z1;
+        let lo = t.z0.saturating_sub(r).max(pa);
+        let hi = (t.z1 + r).min(pb) - 1;
+        (p0 + (lo - pa) / tile, p0 + (hi - pa) / tile)
+    };
+
+    let mut indegree: Vec<u32> = Vec::with_capacity(total);
+    let mut succ_offsets: Vec<u32> = vec![0; total + 1];
+    for t in &tiles {
+        if t.level == 0 {
+            indegree.push(0);
+            continue;
+        }
+        let (lo, hi) = plan_parents(&starts, t);
+        indegree.push((hi - lo + 1) as u32);
+        for p in lo..=hi {
+            succ_offsets[p + 1] += 1;
+        }
+    }
+    for i in 0..total {
+        succ_offsets[i + 1] += succ_offsets[i];
+    }
+    let mut succ_data: Vec<u32> = vec![0; succ_offsets[total] as usize];
+    let mut cursor: Vec<u32> = succ_offsets[..total].to_vec();
+    for (i, t) in tiles.iter().enumerate() {
+        if t.level == 0 {
+            continue;
+        }
+        let (lo, hi) = plan_parents(&starts, t);
+        for p in lo..=hi {
+            succ_data[cursor[p] as usize] = i as u32;
+            cursor[p] += 1;
+        }
+    }
+
+    BandPlan { tiles, starts, indegree, succ_offsets, succ_data, ranks, tile }
+}
+
+/// Execute one band on the persistent runtime with **one dispatch**
+/// (one global barrier for the whole band, however many levels it
+/// spans): up to `threads` draining workers pop ready tiles from a
+/// shared queue, run `exec`, and unlock successors by decrementing
+/// their ledger counters — a tile starts the moment its r-halo
+/// dependencies complete, never at a level boundary.
+///
+/// Deadlock-free by the DAG's minimal element: while `done < total`
+/// some tile is either in the queue or mid-execution, so at least one
+/// worker always makes progress; workers that find the queue empty spin
+/// with `yield_now` and exit once the count drains.  Queue and counters
+/// are pre-sized — no allocation after this function's fixed handful of
+/// `with_capacity` events.
+pub fn run_band(rt: &Runtime, threads: usize, plan: &BandPlan, exec: &(dyn Fn(&Tile) + Sync)) {
+    let total = plan.tiles.len();
+    if total == 0 {
+        return;
+    }
+    let remaining: Vec<AtomicU32> = plan.indegree.iter().map(|&d| AtomicU32::new(d)).collect();
+    let mut q = Vec::with_capacity(total);
+    q.extend(
+        plan.indegree
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d == 0)
+            .map(|(i, _)| i as u32),
+    );
+    let ready = Mutex::new(q);
+    let done = AtomicUsize::new(0);
+    let workers = threads.min(total).max(1);
+    rt.run(workers, workers, &|_| loop {
+        let next = ready.lock().unwrap().pop();
+        match next {
+            Some(t) => {
+                exec(&plan.tiles[t as usize]);
+                let (lo, hi) = (
+                    plan.succ_offsets[t as usize] as usize,
+                    plan.succ_offsets[t as usize + 1] as usize,
+                );
+                for &s in &plan.succ_data[lo..hi] {
+                    if remaining[s as usize].fetch_sub(1, Ordering::AcqRel) == 1 {
+                        ready.lock().unwrap().push(s);
+                    }
+                }
+                done.fetch_add(1, Ordering::AcqRel);
+            }
+            None => {
+                if done.load(Ordering::Acquire) >= total {
+                    return;
+                }
+                std::thread::yield_now();
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::runtime::RuntimeConfig;
+
+    /// Two ranks, three levels shrinking by r per side — the fused
+    /// sub-step shape the driver feeds this module.
+    fn shrinking(level: usize, _rank: usize) -> (usize, usize) {
+        let r = 2;
+        (8 + level * r, 40 - level * r)
+    }
+
+    #[test]
+    fn tiles_partition_every_level_range() {
+        for tile in [1, 3, 5, 64] {
+            let plan = plan_band(2, 3, tile, 2, &shrinking);
+            for level in 0..3 {
+                for rank in 0..2 {
+                    let (lo, hi) = plan.cell(level, rank);
+                    let (z0, z1) = shrinking(level, rank);
+                    assert!(hi > lo);
+                    assert_eq!(plan.tiles[lo].z0, z0);
+                    assert_eq!(plan.tiles[hi - 1].z1, z1);
+                    for w in plan.tiles[lo..hi].windows(2) {
+                        assert_eq!(w[0].z1, w[1].z0, "tiles must abut");
+                        assert!(w[0].z1 - w[0].z0 == tile.min(z1 - z0));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ledger_edges_are_exactly_the_r_halo_intersections() {
+        let r = 2;
+        let plan = plan_band(2, 3, 3, r, &shrinking);
+        // recompute every edge by brute force and compare with the CSR
+        let n = plan.tiles.len();
+        let mut want = vec![0u32; n];
+        for (i, t) in plan.tiles.iter().enumerate() {
+            if t.level == 0 {
+                continue;
+            }
+            for p in &plan.tiles {
+                let same_cell = p.level + 1 == t.level && p.rank == t.rank;
+                if same_cell && p.z1 + r > t.z0 && p.z0 < t.z1 + r {
+                    want[i] += 1;
+                }
+            }
+        }
+        assert_eq!(plan.indegree, want);
+        // successor lists mirror the in-degrees
+        let edges: usize = want.iter().map(|&d| d as usize).sum();
+        assert_eq!(plan.succ_data.len(), edges);
+        for (p, &i) in plan.succ_offsets[..n].iter().zip(plan.succ_offsets[1..].iter()) {
+            assert!(p <= &i);
+        }
+        for (p_idx, w) in plan.succ_offsets.windows(2).enumerate() {
+            for &c in &plan.succ_data[w[0] as usize..w[1] as usize] {
+                let (p, c) = (&plan.tiles[p_idx], &plan.tiles[c as usize]);
+                assert_eq!(p.level + 1, c.level);
+                assert_eq!(p.rank, c.rank);
+                assert!(p.z1 + r > c.z0 && p.z0 < c.z1 + r, "edge without halo overlap");
+            }
+        }
+    }
+
+    #[test]
+    fn executor_runs_each_tile_once_in_dependency_order() {
+        let rt = Runtime::new(RuntimeConfig { workers: 4, cores_per_numa: 4, numa_nodes: 1 });
+        for threads in [1usize, 2, 4] {
+            for tile in [2, 5] {
+                let plan = plan_band(2, 4, tile, 2, &|l, _| (8 + l * 2, 48 - l * 2));
+                let order: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+                let key = |t: &Tile| ((t.level * 2 + t.rank) << 16) | t.z0;
+                run_band(&rt, threads, &plan, &|t| {
+                    order.lock().unwrap().push(key(t));
+                });
+                let order = order.into_inner().unwrap();
+                assert_eq!(order.len(), plan.len(), "every tile exactly once");
+                let pos = |k: usize| order.iter().position(|&o| o == k).unwrap();
+                // every ledger edge is respected: parents run first
+                for (p_idx, w) in plan.succ_offsets.windows(2).enumerate() {
+                    for &c in &plan.succ_data[w[0] as usize..w[1] as usize] {
+                        let (p, c) = (&plan.tiles[p_idx], &plan.tiles[c as usize]);
+                        assert!(
+                            pos(key(p)) < pos(key(c)),
+                            "tile {c:?} ran before its dependency {p:?} (threads {threads})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_level_band_is_a_plain_parallel_dispatch() {
+        let plan = plan_band(3, 1, 4, 4, &|_, rk| (0, 10 + rk));
+        assert!(plan.indegree.iter().all(|&d| d == 0));
+        assert!(plan.succ_data.is_empty());
+        assert_eq!(plan.tile, 4);
+    }
+}

@@ -383,6 +383,61 @@ mod tests {
     }
 
     #[test]
+    fn difference_boxes_handle_degenerate_inners() {
+        // The wavefront planner leans on this algebra with inner boxes
+        // that touch, exceed, collapse against, or invert inside the
+        // outer box.  Sweep a coordinate grid of inners — including
+        // zero-thickness slabs (lo == hi) and inverted ranges
+        // (lo > hi) — and require cover-exactly-once every time.
+        let outer = [1usize, 5, 0, 4, 2, 6];
+        let (oz, ox, oy) = (outer[1], outer[3], outer[5]);
+        let cands = [0usize, 1, 3, 5, 7];
+        for &z0 in &cands {
+            for &z1 in &cands {
+                for &x0 in &cands {
+                    for &x1 in &cands {
+                        for &y0 in &cands {
+                            for &y1 in &cands {
+                                let inner = Some([z0, z1, x0, x1, y0, y1]);
+                                let clipped = inner.and_then(|i| intersect(outer, i));
+                                let mut hits = vec![0u8; oz * ox * oy];
+                                for b in difference_boxes(outer, inner) {
+                                    for z in b[0]..b[1] {
+                                        for x in b[2]..b[3] {
+                                            for y in b[4]..b[5] {
+                                                hits[(z * ox + x) * oy + y] += 1;
+                                            }
+                                        }
+                                    }
+                                }
+                                for z in 0..oz {
+                                    for x in 0..ox {
+                                        for y in 0..oy {
+                                            let in_outer = (outer[0]..outer[1]).contains(&z)
+                                                && (outer[2]..outer[3]).contains(&x)
+                                                && (outer[4]..outer[5]).contains(&y);
+                                            let in_inner = clipped.is_some_and(|c| {
+                                                (c[0]..c[1]).contains(&z)
+                                                    && (c[2]..c[3]).contains(&x)
+                                                    && (c[4]..c[5]).contains(&y)
+                                            });
+                                            assert_eq!(
+                                                hits[(z * ox + x) * oy + y],
+                                                u8::from(in_outer && !in_inner),
+                                                "inner={inner:?} at ({z},{x},{y})"
+                                            );
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn difference_boxes_generalize_boundary_boxes() {
         // boundary_boxes is exactly the full-grid difference against the
         // interior box — same slabs, same order

@@ -76,7 +76,7 @@ USAGE: mmstencil <subcommand> [--key value ...]
   info                                platform + artifact inventory
   sweep      --kernel 3DStarR4 --n 64 --threads 8 --strategy snoop|square
              --time_block k         fuse k sweeps per pass (arena double buffer)
-             --plan \"engine=… vl=… vz=… tb=… threads=…\"  tuned plan (wins)
+             --plan \"engine=… vl=… vz=… tb=… threads=… tile=… wf=…\"  tuned plan (wins)
   tune       --kernel 3DStarR4 --n 256 --threads 8 [--cache plans.txt]
              autotune the shape against the roofline model; print (and
              optionally cache) the winning TunePlan
@@ -90,6 +90,9 @@ USAGE: mmstencil <subcommand> [--key value ...]
   exchange   --n 128 --radius 4             Table II halo bandwidth test
   scaling    --mode strong|weak --kernel 3DStarR4 --n 64
              --steps 4 --time_block k   one halo exchange per k fused steps
+             --tile z --wf b        in-rank (z, t) wavefront tiling of the
+                                    fused sub-steps: z-extent per tile (0 =
+                                    classic) and levels per dispatch barrier
   artifacts  [--dir artifacts]              verify PJRT vs rust kernels
   run        --config configs/example.toml  full experiment from a file"
     );
@@ -458,6 +461,11 @@ fn cmd_scaling(opts: &Opts) -> Result<(), String> {
     let steps = opt_usize(opts, "steps", 2);
     let mode = opt_str(opts, "mode", "strong");
     let time_block = opt_usize(opts, "time_block", 1).max(1);
+    // in-rank wavefront tiling of the fused sub-steps (PR 8): --tile 0
+    // keeps classic level-at-a-time stepping, --wf is the band depth
+    // (sub-step levels per dispatch barrier)
+    let tile = opt_usize(opts, "tile", 0);
+    let wf = opt_usize(opts, "wf", 1).max(1);
     let platform = Platform::paper();
     let mut t = Table::new(&[
         "ranks",
@@ -467,6 +475,7 @@ fn cmd_scaling(opts: &Opts) -> Result<(), String> {
         "sim step ms",
         "pipelined ms",
         "exchanges",
+        "barriers",
     ]);
     for ranks in [(1, 1, 1), (1, 1, 2), (1, 2, 2), (2, 2, 2)] {
         let d = CartDecomp::new(ranks.0, ranks.1, ranks.2);
@@ -477,7 +486,11 @@ fn cmd_scaling(opts: &Opts) -> Result<(), String> {
         };
         let g = Grid3::random(gn_z, gn_x, gn_y, 3);
         for backend in [Backend::mpi(), Backend::sdma()] {
-            let (_, stats) = if time_block > 1 {
+            let (_, stats) = if time_block > 1 && tile > 0 {
+                sweep_driver::multirank_sweep_wavefront(
+                    &spec, &g, &d, &backend, steps, threads, &platform, time_block, tile, wf,
+                )
+            } else if time_block > 1 {
                 sweep_driver::multirank_sweep_fused(
                     &spec, &g, &d, &backend, steps, threads, &platform, time_block,
                 )
@@ -492,12 +505,14 @@ fn cmd_scaling(opts: &Opts) -> Result<(), String> {
                 f(stats.sim_step_s * 1e3, 2),
                 f(stats.sim_step_pipelined_s * 1e3, 2),
                 format!("{}/{steps}", stats.comm_rounds),
+                format!("{}", stats.substep_barriers),
             ]);
         }
     }
     println!(
-        "{mode} scaling of {name} (grid {n}³{}, time_block {time_block})",
-        if mode == "weak" { " per rank" } else { " total" }
+        "{mode} scaling of {name} (grid {n}³{}, time_block {time_block}{})",
+        if mode == "weak" { " per rank" } else { " total" },
+        if tile > 0 { format!(", wavefront tile {tile} wf {wf}") } else { String::new() }
     );
     t.print();
     Ok(())

@@ -15,18 +15,24 @@
 //! (`scripts/bench_diff.py`).  v4 added `survey_entries`: multi-shot
 //! surveys through [`rtm::service`](crate::rtm::service), reported as
 //! shots/hour with retry/failure accounting and the checkpoint strategy
-//! the shots ran under.  v5 (this PR) adds a `plan` field to every
+//! the shots ran under.  v5 added a `plan` field to every
 //! sweep and RTM row — the active [`TunePlan`](crate::stencil::TunePlan)
 //! in its `Display` form — so each measurement records the exact
 //! (engine, geometry, depth, fan-out) it ran under and a tuner change
-//! shows up as a row diff, not a silent re-baselining.
+//! shows up as a row diff, not a silent re-baselining.  v6 (this PR)
+//! adds `tile`/`wf` to every sweep row — the wavefront (z, t) tile
+//! geometry ([`coordinator::wavefront`](crate::coordinator::wavefront))
+//! the row stepped under, `0`/`1` for classic level-at-a-time stepping
+//! — so the temporal-tiling trajectory is diffable per geometry
+//! (`scripts/bench_diff.py` keys sweep rows on them).
 
 /// Schema tag carried in the document; bump on breaking field changes.
 /// v1 → v2: added the `rtm_entries` array.
 /// v2 → v3: added `time_block` to every sweep and RTM row.
 /// v3 → v4: added the `survey_entries` array (shot-service surveys).
 /// v4 → v5: added `plan` (active `TunePlan` string) to sweep/RTM rows.
-pub const SCHEMA: &str = "mmstencil.bench_engines.v5";
+/// v5 → v6: added `tile`/`wf` (wavefront tile geometry) to sweep rows.
+pub const SCHEMA: &str = "mmstencil.bench_engines.v6";
 
 /// One engine × sweep-workload measurement.
 #[derive(Clone, Debug)]
@@ -45,6 +51,13 @@ pub struct EngineBench {
     /// (`Engine::apply3_fused`); 1 = one classic sweep.  Throughput
     /// counts all `time_block · n³` updates.
     pub time_block: usize,
+    /// Wavefront z-tile extent the fused sub-steps were cut into
+    /// ([`coordinator::wavefront`](crate::coordinator::wavefront));
+    /// 0 = classic level-at-a-time stepping.  Added in schema v6.
+    pub tile: usize,
+    /// Wavefront band depth: sub-step levels advanced per dispatch
+    /// barrier (1 when untiled).  Added in schema v6.
+    pub wf: usize,
     /// Median throughput in million stencil outputs per second.
     pub mcells_per_s: f64,
     /// Heap allocations observed during one post-warm-up sweep
@@ -141,7 +154,8 @@ pub fn render(
     for (i, e) in entries.iter().enumerate() {
         s.push_str(&format!(
             "    {{\"engine\": \"{}\", \"pattern\": \"{}\", \"radius\": {}, \"n\": {}, \
-             \"threads\": {}, \"time_block\": {}, \"mcells_per_s\": {:.3}, \
+             \"threads\": {}, \"time_block\": {}, \"tile\": {}, \"wf\": {}, \
+             \"mcells_per_s\": {:.3}, \
              \"allocs_per_sweep\": {}, \"arena_grows_per_sweep\": {}, \"plan\": \"{}\"}}{}\n",
             esc(&e.engine),
             esc(&e.pattern),
@@ -149,6 +163,8 @@ pub fn render(
             e.n,
             e.threads,
             e.time_block,
+            e.tile,
+            e.wf,
             finite(e.mcells_per_s),
             e.allocs_per_sweep,
             e.arena_grows_per_sweep,
@@ -240,7 +256,13 @@ pub fn validate(s: &str) -> Result<(usize, usize, usize), String> {
         .count()
         .checked_sub(surveys)
         .ok_or("more checkpoint keys than medium keys")?;
-    for k in ["\"radius\":", "\"allocs_per_sweep\":", "\"arena_grows_per_sweep\":"] {
+    for k in [
+        "\"radius\":",
+        "\"tile\":",
+        "\"wf\":",
+        "\"allocs_per_sweep\":",
+        "\"arena_grows_per_sweep\":",
+    ] {
         if s.matches(k).count() != sweeps {
             return Err(format!("key {k} count mismatch (expected {sweeps})"));
         }
@@ -290,10 +312,12 @@ mod tests {
                 n: 96,
                 threads: 1,
                 time_block: 1,
+                tile: 0,
+                wf: 1,
                 mcells_per_s: 123.456,
                 allocs_per_sweep: 2,
                 arena_grows_per_sweep: 0,
-                plan: "engine=simd vl=16 vz=4 tb=1 threads=1".into(),
+                plan: "engine=simd vl=16 vz=4 tb=1 threads=1 tile=0 wf=1".into(),
             },
             EngineBench {
                 engine: "matrix_unit_par".into(),
@@ -302,10 +326,12 @@ mod tests {
                 n: 96,
                 threads: 8,
                 time_block: 4,
+                tile: 16,
+                wf: 2,
                 mcells_per_s: 77.0,
                 allocs_per_sweep: 31,
                 arena_grows_per_sweep: 0,
-                plan: "engine=matrix_unit vl=16 vz=4 tb=4 threads=8".into(),
+                plan: "engine=matrix_unit vl=16 vz=4 tb=4 threads=8 tile=16 wf=2".into(),
             },
         ]
     }
@@ -320,7 +346,7 @@ mod tests {
             mcells_per_s: 450.5,
             allocs_per_step: 12,
             arena_grows_per_step: 0,
-            plan: "engine=matrix_unit vl=16 vz=4 tb=1 threads=8".into(),
+            plan: "engine=matrix_unit vl=16 vz=4 tb=1 threads=8 tile=0 wf=1".into(),
         }]
     }
 
@@ -343,14 +369,18 @@ mod tests {
     fn render_validates() {
         let doc = render(&sample(), &rtm_sample(), &survey_sample());
         assert_eq!(validate(&doc), Ok((2, 1, 1)));
-        assert!(doc.contains("\"schema\": \"mmstencil.bench_engines.v5\""));
+        assert!(doc.contains("\"schema\": \"mmstencil.bench_engines.v6\""));
         assert!(doc.contains("\"mcells_per_s\": 123.456"));
         assert!(doc.contains("\"medium\": \"vti\""));
         assert!(doc.contains("\"allocs_per_step\": 12"));
         assert!(doc.contains("\"time_block\": 4"));
+        // v6: sweep rows carry the wavefront tile geometry
+        assert!(doc.contains("\"tile\": 0, \"wf\": 1"));
+        assert!(doc.contains("\"tile\": 16, \"wf\": 2"));
         assert!(doc.contains("\"checkpoint\": \"boundary_saving\""));
         assert!(doc.contains("\"shots_per_hour\": 1234.500"));
-        assert!(doc.contains("\"plan\": \"engine=matrix_unit vl=16 vz=4 tb=4 threads=8\""));
+        assert!(doc
+            .contains("\"plan\": \"engine=matrix_unit vl=16 vz=4 tb=4 threads=8 tile=16 wf=2\""));
         // every recorded plan string round-trips through the parser
         use crate::stencil::TunePlan;
         for row in doc.lines().filter(|l| l.contains("\"plan\":")) {
@@ -368,9 +398,11 @@ mod tests {
     #[test]
     fn tampered_documents_fail() {
         let doc = render(&sample(), &rtm_sample(), &survey_sample());
-        assert!(validate(&doc.replace("bench_engines.v5", "v4")).is_err());
+        assert!(validate(&doc.replace("bench_engines.v6", "v5")).is_err());
         assert!(validate(&doc.replacen("\"plan\":", "\"p\":", 1)).is_err());
         assert!(validate(&doc.replace("\"radius\":", "\"r\":")).is_err());
+        assert!(validate(&doc.replace("\"tile\":", "\"t\":")).is_err());
+        assert!(validate(&doc.replacen("\"wf\":", "\"w\":", 1)).is_err());
         assert!(validate(&doc.replace("\"allocs_per_step\":", "\"a\":")).is_err());
         assert!(validate(&doc.replace("\"rtm_entries\":", "\"rtm\":")).is_err());
         assert!(validate(&doc.replace("\"survey_entries\":", "\"surveys\":")).is_err());

@@ -322,6 +322,29 @@ mod tests {
     }
 
     #[test]
+    fn plan_cache_survives_v7_era_manifests() {
+        // fixture: a cache file exactly as PR 7 serialized it — before
+        // the tile=/wf= wavefront keys existed.  It must still parse
+        // (defaulting to the classic flat path) and re-serialize in the
+        // new canonical form without losing entries.
+        let v7 = "# tuned plans: shape-key|plan\n\
+                  3DStarR2@n128|engine=simd vl=16 vz=4 tb=2 threads=4\n\
+                  3DStarR4@n256|engine=matrix_gemm vl=16 vz=4 tb=1 threads=8\n";
+        let cache = PlanCache::parse(v7).unwrap();
+        assert_eq!(cache.len(), 2);
+        let plan = cache.get("3DStarR4@n256").unwrap();
+        assert_eq!((plan.tile, plan.wf), (0, 1), "v7 plans land on the flat path");
+        assert_eq!(plan.threads, 8);
+        let text = cache.serialize();
+        assert!(
+            text.contains("3DStarR4@n256|engine=matrix_gemm vl=16 vz=4 tb=1 threads=8 tile=0 wf=1"),
+            "re-serialized form carries the new keys: {text}"
+        );
+        // and the upgraded form is itself canonical
+        assert_eq!(PlanCache::parse(&text).unwrap().serialize(), text);
+    }
+
+    #[test]
     fn plan_cache_missing_file_is_cold_start_and_bad_lines_error() {
         let missing = std::env::temp_dir().join("mmstencil_no_such_plan_cache.txt");
         assert!(PlanCache::load(&missing).unwrap().is_empty());

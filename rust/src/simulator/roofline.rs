@@ -98,6 +98,65 @@ pub fn classify(spec: &StencilSpec, p: &Platform, mem: MemKind) -> Bound {
     }
 }
 
+/// Where a wavefront-tiled fused sweep streams its re-used operands
+/// from (`coordinator::wavefront`'s in-rank (z, t) tiling).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Residency {
+    /// The tile working set exceeds the node's aggregate L2: every
+    /// fused sub-step re-streams the grid from memory — the classic
+    /// flat path, and any over-large tile geometry.
+    Dram,
+    /// The `(tile + 2·r·wf)`-layer working set fits the node's
+    /// aggregate L2: sub-steps past the first are served at cache
+    /// bandwidth instead of DRAM bandwidth.
+    Cache,
+}
+
+impl std::fmt::Display for Residency {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Residency::Dram => write!(f, "DRAM-resident"),
+            Residency::Cache => write!(f, "cache-resident"),
+        }
+    }
+}
+
+/// Effective bandwidth advantage of cache-resident streaming over the
+/// on-package memory system: one NUMA node's aggregate L2 sustains
+/// roughly this multiple of the on-package bandwidth, so a fused
+/// sub-step whose working set stays resident costs `1/CACHE_BW_RATIO`
+/// of its flat-path streaming time.
+pub const CACHE_BW_RATIO: f64 = 4.0;
+
+/// Bytes one wavefront tile column keeps live across `wf` fused
+/// sub-step levels: `tile + 2·r·wf` z-layers of `n×n` f32 cells
+/// (the tile core plus the r-halo each of the `wf` levels grows),
+/// double buffered — the temporal ping-pong's src and dst slabs.
+pub fn wavefront_working_set_bytes(spec: &StencilSpec, n: usize, tile: usize, wf: usize) -> u64 {
+    let layers = (tile + 2 * spec.radius * wf.max(1)) as u64;
+    layers * (n as u64 * n as u64) * 4 * 2
+}
+
+/// Classify a wavefront tile geometry against the simulated cache
+/// hierarchy: `tile = 0` (classic level-at-a-time stepping) and
+/// over-large working sets are [`Residency::Dram`]; a working set that
+/// fits one NUMA node's aggregate L2 is [`Residency::Cache`] — the
+/// score `stencil::tune` uses to pick the headline tile geometry.
+pub fn wavefront_residency(
+    p: &Platform,
+    spec: &StencilSpec,
+    n: usize,
+    tile: usize,
+    wf: usize,
+) -> Residency {
+    let cache = (p.l2_bytes * p.cores_per_numa) as u64;
+    if tile == 0 || wavefront_working_set_bytes(spec, n, tile, wf) > cache {
+        Residency::Dram
+    } else {
+        Residency::Cache
+    }
+}
+
 /// Per-point matrix-unit instruction counts, measured by running the
 /// emulation engine on exactly one block.
 fn mm_counts_per_point(spec: &StencilSpec) -> matrix_unit::Counts {
@@ -374,6 +433,27 @@ mod tests {
             let spec = StencilSpec::parse(name).unwrap();
             assert_eq!(classify(&spec, &plat, MemKind::OnPkg), b, "{name}");
         }
+    }
+
+    #[test]
+    fn wavefront_residency_matches_the_cache_capacity() {
+        let plat = p();
+        let spec = StencilSpec::parse("3DStarR4").unwrap();
+        // the flat path is DRAM-resident by definition
+        assert_eq!(wavefront_residency(&plat, &spec, 256, 0, 1), Residency::Dram);
+        // the headline-sized geometry fits the 38-core aggregate L2
+        assert_eq!(wavefront_residency(&plat, &spec, 256, 16, 2), Residency::Cache);
+        // growing the tile past the aggregate L2 tips it back to DRAM
+        assert_eq!(wavefront_residency(&plat, &spec, 256, 32, 1), Residency::Dram);
+        // the working set is monotone in each knob and exactly the
+        // documented (tile + 2·r·wf)-layer double-buffered slab
+        let ws = |tile, wf| wavefront_working_set_bytes(&spec, 256, tile, wf);
+        assert!(ws(16, 1) < ws(16, 2));
+        assert!(ws(16, 2) < ws(32, 2));
+        assert_eq!(ws(16, 2), (16 + 2 * 4 * 2) * 256 * 256 * 4 * 2);
+        // display strings are part of the CLI/probe surface
+        assert_eq!(Residency::Dram.to_string(), "DRAM-resident");
+        assert_eq!(Residency::Cache.to_string(), "cache-resident");
     }
 
     #[test]

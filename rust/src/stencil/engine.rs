@@ -402,12 +402,7 @@ mod tests {
     /// Plan-built engine of `kind` with a parallelism hint — the
     /// post-redesign spelling of the old `.with_threads(t)` chain.
     fn eng(kind: EngineKind, threads: usize) -> Engine {
-        Engine::from_plan(&TunePlan {
-            engine: kind,
-            dims: BlockDims::default(),
-            time_block: 1,
-            threads,
-        })
+        Engine::from_plan(&TunePlan { engine: kind, threads, ..TunePlan::simd(threads) })
     }
 
     #[test]

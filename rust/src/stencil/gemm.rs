@@ -93,11 +93,24 @@ fn build_star_operand(spec: &StencilSpec, out: &mut [f32]) {
     }
 }
 
+/// Register-tile width of the star GEMM core: accumulator chunks this
+/// wide live in a local array (registers, after unrolling) across all
+/// three band passes, so the output row round-trips memory once per
+/// chunk instead of once per tap.
+const RT: usize = 8;
+
 /// Star block as three banded GEMMs sharing one resident accumulator
 /// tile.  Per-point accumulation order (fixed, block-independent):
 /// y taps ascending (centre folded at index r), x taps ascending
 /// (skipping the zero centre), z taps ascending (skipping the zero
 /// centre).
+///
+/// Register tiling (the wavefront tile core): the y extent is walked
+/// in [`RT`]-wide chunks whose accumulator is a local `[f32; RT]` —
+/// every tap of all three bands lands in registers, and the chunk is
+/// stored to the output row once at the end.  Each element's tap
+/// order is exactly the scalar remainder path's, so the tiled path is
+/// bitwise identical for any `by`.
 #[allow(clippy::too_many_arguments)]
 fn star3_gemm_block<W: Win>(
     r: usize,
@@ -126,35 +139,70 @@ fn star3_gemm_block<W: Win>(
         for x in 0..bx {
             let o = out.row_mut(z0 + z, x0 + x, y0, by);
             let c = w.row(z + r, x + r);
-            // y-band GEMM: the folded centre means tap 0 initializes the
-            // accumulator tile
-            for y in 0..by {
-                o[y] = wy[0] * c[y];
+            let mut y = 0;
+            while y + RT <= by {
+                // y-band GEMM: the folded centre means tap 0
+                // initializes the register accumulator
+                let mut acc = [0.0f32; RT];
+                for j in 0..RT {
+                    acc[j] = wy[0] * c[y + j];
+                }
+                for (i, &wv) in wy.iter().enumerate().skip(1) {
+                    for j in 0..RT {
+                        acc[j] += wv * c[y + j + i];
+                    }
+                }
+                // x-band GEMM over the staged (strided-swapped) panel
+                for (i, &wv) in wx.iter().enumerate() {
+                    if i == r {
+                        continue;
+                    }
+                    let row = &panel[(x + i) * by..(x + i + 1) * by];
+                    for j in 0..RT {
+                        acc[j] += wv * row[y + j];
+                    }
+                }
+                // z-band GEMM: the accumulator stays resident — no
+                // intermediate-buffer round-trip
+                for (i, &wv) in wz.iter().enumerate() {
+                    if i == r {
+                        continue;
+                    }
+                    let s = w.row(z + i, x + r);
+                    for j in 0..RT {
+                        acc[j] += wv * s[y + j + r];
+                    }
+                }
+                o[y..y + RT].copy_from_slice(&acc);
+                y += RT;
             }
-            for (i, &wv) in wy.iter().enumerate().skip(1) {
-                for y in 0..by {
-                    o[y] += wv * c[y + i];
+            if y < by {
+                // scalar remainder: the original untiled band passes
+                for yy in y..by {
+                    o[yy] = wy[0] * c[yy];
                 }
-            }
-            // x-band GEMM over the staged (strided-swapped) panel
-            for (i, &wv) in wx.iter().enumerate() {
-                if i == r {
-                    continue;
+                for (i, &wv) in wy.iter().enumerate().skip(1) {
+                    for yy in y..by {
+                        o[yy] += wv * c[yy + i];
+                    }
                 }
-                let row = &panel[(x + i) * by..(x + i + 1) * by];
-                for y in 0..by {
-                    o[y] += wv * row[y];
+                for (i, &wv) in wx.iter().enumerate() {
+                    if i == r {
+                        continue;
+                    }
+                    let row = &panel[(x + i) * by..(x + i + 1) * by];
+                    for yy in y..by {
+                        o[yy] += wv * row[yy];
+                    }
                 }
-            }
-            // z-band GEMM: the accumulator stays resident — no
-            // intermediate-buffer round-trip
-            for (i, &wv) in wz.iter().enumerate() {
-                if i == r {
-                    continue;
-                }
-                let s = w.row(z + i, x + r);
-                for y in 0..by {
-                    o[y] += wv * s[y + r];
+                for (i, &wv) in wz.iter().enumerate() {
+                    if i == r {
+                        continue;
+                    }
+                    let s = w.row(z + i, x + r);
+                    for yy in y..by {
+                        o[yy] += wv * s[yy + r];
+                    }
                 }
             }
         }

@@ -134,8 +134,52 @@ pub(crate) fn point3_wrap<S: GridSrc>(
     }
 }
 
+/// Centre + y-axis taps of one (z, x) row of the wrap-free star:
+/// `o[i] = c·row[r+i]`, then the 2r y-taps in ascending k order, as
+/// shifted y-contiguous slice passes.  Shared by the coarsened
+/// row-pair path and the single-row remainder of [`star3_block`] so
+/// both keep the exact same per-element operation order.
+#[inline(always)]
+fn star3_y_phase<S: GridSrc>(
+    spec: &StencilSpec,
+    g: &S,
+    out: &mut TileViewMut<'_>,
+    z: usize,
+    x: usize,
+    y0: usize,
+    ny: usize,
+) {
+    let (_, gnx, gny) = g.shape();
+    let r = spec.radius;
+    let wy = &spec.star_axes[2];
+    let cb = (z * gnx + x) * gny + y0;
+    let row = g.span(cb - r, ny + 2 * r);
+    let o = out.row_mut(z, x, y0, ny);
+    for i in 0..ny {
+        o[i] = spec.star_center * row[r + i];
+    }
+    for k in 0..2 * r + 1 {
+        if k == r {
+            continue;
+        }
+        let w = wy[k];
+        for i in 0..ny {
+            o[i] += w * row[k + i];
+        }
+    }
+}
+
 /// Wrap-free star on one tile: per (z,x) row, accumulate the 2·ndim·r+1
 /// contributions as shifted y-contiguous slices (auto-vectorizes).
+///
+/// Thread coarsening (the wavefront tile core): adjacent x-row pairs
+/// share one pass over the z/x tap loop — each tap's weights, index
+/// arithmetic, and loop control amortize over two live accumulator
+/// rows, and the pair's independent FMA chains double the
+/// register-level ILP.  The two rows never feed each other, and every
+/// element keeps the single-row accumulation order (centre, y-taps
+/// ascending, then fused z+x taps ascending), so the coarsened path
+/// is bitwise identical to the remainder path.
 #[inline]
 fn star3_block<S: GridSrc>(
     spec: &StencilSpec,
@@ -151,35 +195,50 @@ fn star3_block<S: GridSrc>(
     let (_, gnx, gny) = g.shape();
     let r = spec.radius;
     let ny = y1 - y0;
-    let (wz, wx, wy) = (&spec.star_axes[0], &spec.star_axes[1], &spec.star_axes[2]);
-    // x/z accumulator row from the worker-local arena: one checkout per
-    // block, reused across every (z, x) row — removes the old fixed
-    // `[f32; 512]` stack buffer and its `ty > 512` panic cliff
-    scratch::with(ny, |acc| {
+    let (wz, wx) = (&spec.star_axes[0], &spec.star_axes[1]);
+    // x/z accumulator rows from the worker-local arena: one checkout
+    // per block (two rows for the coarsened pair), reused across every
+    // (z, x) row — removes the old fixed `[f32; 512]` stack buffer and
+    // its `ty > 512` panic cliff
+    scratch::with(2 * ny, |scr| {
+        let (acc0, acc1) = scr.split_at_mut(ny);
         for z in z0..z1 {
-            for x in x0..x1 {
-                let cb = (z * gnx + x) * gny + y0;
-                // centre + y-axis from the same row
-                {
-                    let row = g.span(cb - r, ny + 2 * r);
-                    let o = out.row_mut(z, x, y0, ny);
-                    for i in 0..ny {
-                        o[i] = spec.star_center * row[r + i];
+            let mut x = x0;
+            while x + 2 <= x1 {
+                star3_y_phase(spec, g, out, z, x, y0, ny);
+                star3_y_phase(spec, g, out, z, x + 1, y0, ny);
+                acc0.fill(0.0);
+                acc1.fill(0.0);
+                for k in 0..2 * r + 1 {
+                    if k == r {
+                        continue;
                     }
-                    for k in 0..2 * r + 1 {
-                        if k == r {
-                            continue;
-                        }
-                        let w = wy[k];
-                        for i in 0..ny {
-                            o[i] += w * row[k + i];
-                        }
+                    // row x+1's z/x taps sit exactly one y-row (gny)
+                    // past row x's
+                    let zb = ((z + k - r) * gnx + x) * gny + y0;
+                    let xb = (z * gnx + (x + k - r)) * gny + y0;
+                    let (wzk, wxk) = (wz[k], wx[k]);
+                    let (zr, xr) = (g.span(zb, ny), g.span(xb, ny));
+                    for ((a, &zv), &xv) in acc0.iter_mut().zip(zr).zip(xr) {
+                        *a += wzk * zv + wxk * xv;
+                    }
+                    let (zr, xr) = (g.span(zb + gny, ny), g.span(xb + gny, ny));
+                    for ((a, &zv), &xv) in acc1.iter_mut().zip(zr).zip(xr) {
+                        *a += wzk * zv + wxk * xv;
                     }
                 }
-                // x- and z-axis rows: accumulate into the arena row so
-                // the compiler keeps the accumulator hot across rows
-                // (repeated output round-trips defeat vectorization)
-                acc.fill(0.0);
+                for (o, &a) in out.row_mut(z, x, y0, ny).iter_mut().zip(acc0.iter()) {
+                    *o += a;
+                }
+                for (o, &a) in out.row_mut(z, x + 1, y0, ny).iter_mut().zip(acc1.iter()) {
+                    *o += a;
+                }
+                x += 2;
+            }
+            if x < x1 {
+                // single-row remainder: the original uncoarsened path
+                star3_y_phase(spec, g, out, z, x, y0, ny);
+                acc0.fill(0.0);
                 for k in 0..2 * r + 1 {
                     if k == r {
                         continue;
@@ -188,11 +247,11 @@ fn star3_block<S: GridSrc>(
                     let xb = (z * gnx + (x + k - r)) * gny + y0;
                     let (wzk, wxk) = (wz[k], wx[k]);
                     let (zr, xr) = (g.span(zb, ny), g.span(xb, ny));
-                    for ((a, &zv), &xv) in acc.iter_mut().zip(zr).zip(xr) {
+                    for ((a, &zv), &xv) in acc0.iter_mut().zip(zr).zip(xr) {
                         *a += wzk * zv + wxk * xv;
                     }
                 }
-                for (o, &a) in out.row_mut(z, x, y0, ny).iter_mut().zip(acc.iter()) {
+                for (o, &a) in out.row_mut(z, x, y0, ny).iter_mut().zip(acc0.iter()) {
                     *o += a;
                 }
             }

@@ -4,16 +4,23 @@
 //! Before this layer, every call site chained raw knobs
 //! (`Engine::new(kind).with_threads(t).with_dims(d)` plus a separate
 //! `time_block` argument threaded through the drivers).  A [`TunePlan`]
-//! carries all four choices — engine kind, block geometry, fused-sweep
-//! depth, worker fan-out — as **one value** with a `Display`/[`parse`]
+//! carries all the choices — engine kind, block geometry, fused-sweep
+//! depth, worker fan-out, wavefront tile geometry — as **one value**
+//! with a `Display`/[`parse`]
 //! round-trip (the same contract as
 //! [`StencilSpec::parse`](super::StencilSpec::parse)), so configs, the
 //! CLI, the runtime manifest, and the RTM services all speak the same
 //! string:
 //!
 //! ```text
-//! engine=matrix_gemm vl=16 vz=4 tb=1 threads=4
+//! engine=matrix_gemm vl=16 vz=4 tb=1 threads=4 tile=16 wf=2
 //! ```
+//!
+//! The `tile=`/`wf=` keys (PR 8) select the in-rank (z, t) wavefront
+//! geometry of the fused sub-steps (`coordinator::wavefront`); they are
+//! **optional on parse** — plans serialized before they existed still
+//! parse, defaulting to the classic flat path (`tile=0 wf=1`) — and
+//! always present in the `Display` form.
 //!
 //! [`tune`] is the startup search: it scores every candidate
 //! (engine, BlockDims, time_block, threads) combination for one
@@ -58,6 +65,15 @@ pub struct TunePlan {
     pub time_block: usize,
     /// Worker fan-out for the parallel entry points.
     pub threads: usize,
+    /// Wavefront z-tile extent for in-rank (z, t) tiling of the fused
+    /// sub-steps (`coordinator::wavefront`); 0 = classic
+    /// level-at-a-time stepping.  Optional in the string form
+    /// (defaults to 0), so v7-era plans still parse.
+    pub tile: usize,
+    /// Wavefront band depth: sub-step levels advanced per dispatch
+    /// barrier when `tile > 0`.  Optional in the string form (defaults
+    /// to 1).
+    pub wf: usize,
 }
 
 impl TunePlan {
@@ -78,14 +94,20 @@ impl TunePlan {
             dims: BlockDims::default(),
             time_block: 1,
             threads,
+            tile: 0,
+            wf: 1,
         }
     }
 
-    /// Parse the `Display` form back into a plan.  All five
+    /// Parse the `Display` form back into a plan.  The five original
     /// `key=value` fields are required, in any order, exactly once:
-    /// `engine=<kind> vl=<n> vz=<n> tb=<n> threads=<n>`.
+    /// `engine=<kind> vl=<n> vz=<n> tb=<n> threads=<n>`.  The wavefront
+    /// keys `tile=<n> wf=<n>` are **optional** (defaulting to `0` and
+    /// `1`) so plans serialized before PR 8 — including cached
+    /// `runtime::PlanCache` manifests — still parse.
     pub fn parse(s: &str) -> Result<Self> {
         let (mut engine, mut vl, mut vz, mut tb, mut threads) = (None, None, None, None, None);
+        let (mut tile, mut wf) = (None, None);
         for tok in s.split_whitespace() {
             let (key, val) = tok
                 .split_once('=')
@@ -106,7 +128,11 @@ impl TunePlan {
                 "vz" => &mut vz,
                 "tb" => &mut tb,
                 "threads" => &mut threads,
-                _ => bail!("tune plan: unknown key {key:?} (engine | vl | vz | tb | threads)"),
+                "tile" => &mut tile,
+                "wf" => &mut wf,
+                _ => bail!(
+                    "tune plan: unknown key {key:?} (engine | vl | vz | tb | threads | tile | wf)"
+                ),
             };
             if slot.replace(num()?).is_some() {
                 bail!("tune plan: duplicate key {key:?}");
@@ -120,6 +146,8 @@ impl TunePlan {
             dims: BlockDims { vl: need(vl, "vl")?, vz: need(vz, "vz")? },
             time_block: need(tb, "tb")?,
             threads: need(threads, "threads")?,
+            tile: tile.unwrap_or(0),
+            wf: wf.unwrap_or(1).max(1),
         })
     }
 }
@@ -128,12 +156,14 @@ impl std::fmt::Display for TunePlan {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "engine={} vl={} vz={} tb={} threads={}",
+            "engine={} vl={} vz={} tb={} threads={} tile={} wf={}",
             self.engine.name(),
             self.dims.vl,
             self.dims.vz,
             self.time_block,
-            self.threads
+            self.threads,
+            self.tile,
+            self.wf
         )
     }
 }
@@ -156,6 +186,11 @@ const CAND_VL: [usize; 3] = [8, 16, 32];
 const CAND_VZ: [usize; 3] = [2, 4, 8];
 /// Candidate fused-sweep depths.
 const CAND_TB: [usize; 3] = [1, 2, 4];
+/// Candidate in-rank wavefront geometries `(tile, wf)` —
+/// `(0, 1)` is the classic flat path; the rest are z-tile extents ×
+/// band depths scored for cache residency by the roofline model.
+const CAND_WAVE: [(usize, usize); 7] =
+    [(0, 1), (8, 1), (8, 2), (16, 1), (16, 2), (32, 1), (32, 2)];
 
 /// Modelled cost of spawning one worker task on the persistent runtime.
 const SPAWN_S: f64 = 2e-6;
@@ -184,7 +219,24 @@ fn step_time(sweep: (f64, f64), plan: &TunePlan, spec: &StencilSpec, n: usize, p
     let k = plan.time_block.max(1) as f64;
     // each extra fused step recomputes an r-deep halo shell
     let growth = (k - 1.0) * (spec.radius as f64 / n.max(1) as f64) * fan;
-    fan + exch_s / k + growth
+    let mut t = fan + exch_s / k + growth;
+    if plan.tile > 0 && plan.time_block > 1 {
+        // In-rank (z, t) wavefront tiling: when the tile working set is
+        // cache-resident, the k-1 fused sub-steps past the first stream
+        // their operands from aggregate L2 instead of re-walking DRAM.
+        // The discount is a constant factor on `fan`, so the
+        // cross-engine ordering at any fixed geometry is unchanged.
+        if roofline::wavefront_residency(p, spec, n, plan.tile, plan.wf)
+            == roofline::Residency::Cache
+        {
+            t -= (k - 1.0) / k * fan * (1.0 - 1.0 / roofline::CACHE_BW_RATIO);
+        }
+        // Ledger dispatch cost: one task per tile per band, so tiny
+        // tiles (and shallow bands) pay for their scheduling.
+        let bands = ((k - 1.0) / plan.wf.max(1) as f64).ceil();
+        t += bands * (n as f64 / plan.tile as f64).ceil() * SPAWN_S;
+    }
+    t
 }
 
 /// Roofline estimate of one sweep for a candidate: matrix-family
@@ -237,7 +289,8 @@ fn sweep_estimate(
 }
 
 /// Deterministic startup search over (engine, BlockDims, time_block,
-/// threads) for one cubic shape: every candidate is scored against the
+/// threads, wavefront tile geometry) for one cubic shape: every
+/// candidate is scored against the
 /// roofline cost model and the lowest modelled step time wins; exact
 /// wall-time ties break toward strictly lower modelled compute time
 /// (the candidate with compute headroom).  `max_threads` caps the
@@ -265,14 +318,16 @@ pub fn tune(spec: &StencilSpec, n: usize, max_threads: usize, p: &Platform) -> T
             let sweep = sweep_estimate(spec, n_points, engine, dims, p);
             for &threads in &threads_cands {
                 for tb in CAND_TB {
-                    let plan = TunePlan { engine, dims, time_block: tb, threads };
-                    let t = step_time(sweep, &plan, spec, n, p);
-                    let better = match &best {
-                        None => true,
-                        Some((bt, bc, _)) => t < *bt || (t == *bt && sweep.1 < *bc),
-                    };
-                    if better {
-                        best = Some((t, sweep.1, plan));
+                    for (tile, wf) in CAND_WAVE {
+                        let plan = TunePlan { engine, dims, time_block: tb, threads, tile, wf };
+                        let t = step_time(sweep, &plan, spec, n, p);
+                        let better = match &best {
+                            None => true,
+                            Some((bt, bc, _)) => t < *bt || (t == *bt && sweep.1 < *bc),
+                        };
+                        if better {
+                            best = Some((t, sweep.1, plan));
+                        }
                     }
                 }
             }
@@ -294,8 +349,17 @@ mod tests {
     #[test]
     fn display_parse_round_trips() {
         for engine in EngineKind::ALL {
-            for (vl, vz, tb, threads) in [(16, 4, 1, 1), (8, 2, 4, 16), (32, 8, 2, 3)] {
-                let plan = TunePlan { engine, dims: BlockDims { vl, vz }, time_block: tb, threads };
+            for (vl, vz, tb, threads, tile, wf) in
+                [(16, 4, 1, 1, 0, 1), (8, 2, 4, 16, 16, 2), (32, 8, 2, 3, 8, 1)]
+            {
+                let plan = TunePlan {
+                    engine,
+                    dims: BlockDims { vl, vz },
+                    time_block: tb,
+                    threads,
+                    tile,
+                    wf,
+                };
                 let again = TunePlan::parse(&plan.to_string()).unwrap();
                 assert_eq!(again, plan, "{plan}");
                 // and the string form itself is stable
@@ -310,6 +374,26 @@ mod tests {
         assert_eq!(plan.engine, EngineKind::MatrixGemm);
         assert_eq!(plan.dims, BlockDims { vl: 16, vz: 4 });
         assert_eq!(plan.threads, 2);
+        let plan = TunePlan::parse("wf=2 tile=8 threads=2 tb=1 vz=4 vl=16 engine=simd").unwrap();
+        assert_eq!((plan.tile, plan.wf), (8, 2));
+    }
+
+    #[test]
+    fn parse_defaults_wavefront_keys_for_v7_plans() {
+        // plans serialized before the tile=/wf= keys existed (PR 7 and
+        // earlier manifests) must keep parsing, landing on the classic
+        // flat path; the re-serialized form carries the new keys
+        let v7 = "engine=matrix_gemm vl=16 vz=4 tb=1 threads=8";
+        let plan = TunePlan::parse(v7).unwrap();
+        assert_eq!((plan.tile, plan.wf), (0, 1));
+        assert_eq!(
+            plan.to_string(),
+            "engine=matrix_gemm vl=16 vz=4 tb=1 threads=8 tile=0 wf=1"
+        );
+        // a degenerate wf=0 clamps to 1 rather than dividing by zero
+        // somewhere downstream
+        let plan = TunePlan::parse("engine=simd vl=16 vz=4 tb=2 threads=1 tile=4 wf=0").unwrap();
+        assert_eq!(plan.wf, 1);
     }
 
     #[test]
@@ -351,6 +435,18 @@ mod tests {
         let p = Platform::paper();
         let plan = tune(&spec, 256, 8, &p);
         assert_eq!(plan.engine, EngineKind::MatrixGemm, "{plan}");
+        // PR 8 pin: the headline plan is wavefront-tiled and its
+        // (tile, wf) working set scores cache-resident in the roofline
+        // model — cache-bandwidth-bound, not DRAM-bound
+        assert!(
+            plan.tile > 0 && plan.time_block > 1,
+            "headline plan must be wavefront-tiled: {plan}"
+        );
+        assert_eq!(
+            roofline::wavefront_residency(&p, &spec, 256, plan.tile, plan.wf),
+            roofline::Residency::Cache,
+            "{plan}"
+        );
         let n_points = 256 * 256 * 256;
         let tuned = step_time(
             sweep_estimate(&spec, n_points, plan.engine, plan.dims, &p),

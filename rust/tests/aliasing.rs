@@ -123,6 +123,34 @@ fn fused_multirank_sweep_is_bitwise_the_classic_path() {
 }
 
 #[test]
+fn wavefront_tiled_fused_sweep_is_bitwise_the_classic_path() {
+    // the PR 8 wavefront path under the aliasing model: both ping-pong
+    // storages held open as ParGrid3 for a whole band while ledger
+    // tasks claim disjoint (z, t) tile views and read the other storage
+    // as GridSrc — the read-vs-claim concurrency Miri must accept
+    #[cfg(miri)]
+    let (n, steps, decomp, threads) = (6, 2, CartDecomp::new(1, 1, 2), 2);
+    #[cfg(not(miri))]
+    let (n, steps, decomp, threads) = (12, 4, CartDecomp::new(1, 2, 2), 4);
+    let spec = StencilSpec::star3d(1);
+    let g = Grid3::random(n, n, n, 0xFADE);
+    let classic = Driver::new(threads, Platform::paper());
+    let (want, _) = classic.multirank_sweep(&spec, &g, &decomp, &Backend::sdma(), steps);
+    for (tile, wf) in [(2usize, 1usize), (3, 2)] {
+        let drv = Driver::new(threads, Platform::paper())
+            .with_time_block(2)
+            .with_wavefront(tile, wf);
+        let (got, stats) = drv.multirank_sweep(&spec, &g, &decomp, &Backend::sdma(), steps);
+        assert_eq!(
+            got.as_slice(),
+            want.as_slice(),
+            "tile={tile} wf={wf} diverged from the classic path"
+        );
+        assert!(stats.comm_rounds <= steps as u64);
+    }
+}
+
+#[test]
 fn parallel_matrix_unit_sweep_is_bitwise_serial_with_exact_counts() {
     // the PR 3 parallel matrix-unit sweep: z-slab TileViewMut claims on
     // the persistent runtime, per-task Counts merged by reduction.

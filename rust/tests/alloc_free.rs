@@ -171,4 +171,32 @@ fn matrix_unit_hot_path_allocation_contract() {
         fused <= k as u64 * single + 24,
         "fused step (k={k}) allocated {fused}, single step {single}"
     );
+
+    // ---- wavefront-tiled fused stepping: O(1) allocation events ----
+    // The band planner builds its CSR dependency ledger with counted
+    // passes + with_capacity and the executor pre-sizes its ready
+    // queue, so a bigger grid means *longer* vectors (bigger single
+    // events), never *more* events — 8× the cells must not move the
+    // per-sweep event count beyond harness noise.
+    use mmstencil::coordinator::driver::multirank_sweep_wavefront;
+    use mmstencil::coordinator::exchange::Backend;
+    use mmstencil::grid::CartDecomp;
+    use mmstencil::simulator::Platform;
+    let p = Platform::paper();
+    let spec = StencilSpec::star3d(1);
+    let d = CartDecomp::new(1, 1, 2);
+    let wave = |n: usize| {
+        let g = Grid3::random(n, n, n, 0xA110C);
+        // warm-up sizes arenas, runtime queues, and ledger capacity
+        multirank_sweep_wavefront(&spec, &g, &d, &Backend::sdma(), 2, 2, &p, 2, 2, 1);
+        min_events_during(3, || {
+            multirank_sweep_wavefront(&spec, &g, &d, &Backend::sdma(), 2, 2, &p, 2, 2, 1);
+        })
+    };
+    let small_wave = wave(8);
+    let big_wave = wave(16);
+    assert!(
+        big_wave <= small_wave + 24,
+        "wavefront sweep allocations scale with grid size ({small_wave} vs {big_wave})"
+    );
 }

@@ -1,0 +1,111 @@
+//! Wavefront temporal-tiling contract suite (the PR 8 tentpole's
+//! acceptance tests): in-rank (z, t) diamond tiles advanced through the
+//! dependency ledger must be **bitwise** the classic fused path for any
+//! tile geometry, engine, worker count, and rank decomposition — with
+//! exactly the same transport rounds (intra-rank tiling must never add
+//! exchanges) and strictly fewer sub-step barriers at `wf > 1`.
+//!
+//! The transport-round assertions read the process-global counter
+//! (`exchange::transport_rounds`), so every exchange-touching check
+//! lives in ONE test fn (test binaries are separate processes, but
+//! tests inside a binary run concurrently — a second exchange-touching
+//! test here would race the counter; same pattern as
+//! `rust/tests/temporal.rs`).
+
+use mmstencil::coordinator::driver::{
+    multirank_sweep, multirank_sweep_fused, multirank_sweep_wavefront, Driver,
+};
+use mmstencil::coordinator::exchange::{self, Backend};
+use mmstencil::coordinator::temporal;
+use mmstencil::grid::{CartDecomp, Grid3};
+use mmstencil::simulator::Platform;
+use mmstencil::stencil::{Engine, EngineKind, StencilSpec};
+
+#[test]
+fn wavefront_stepping_is_bitwise_classic_for_every_engine_geometry_and_worker_count() {
+    let p = Platform::paper();
+    let spec = StencilSpec::star3d(2);
+    let g = Grid3::random(12, 12, 12, 0x5EED);
+    let d = CartDecomp::new(1, 2, 2);
+    let steps = 4usize;
+    assert_eq!(temporal::max_depth(&d, 12, 12, 12, 2), 3);
+
+    for kind in EngineKind::ALL {
+        let eng = Engine::new(kind);
+        let classic = Driver::new(4, p.clone()).with_engine(eng);
+        let (want, base) = classic.multirank_sweep(&spec, &g, &d, &Backend::sdma(), steps);
+        assert_eq!(base.substep_barriers, 0, "{kind:?}: unfused path has no sub-step barriers");
+        for k in [1usize, 2, 4] {
+            let k_eff = temporal::effective_depth(k, &d, 12, 12, 12, 2);
+            // plain fused reference: same result, and the stats baseline
+            // the wavefront runs are compared against
+            let fused = Driver::new(4, p.clone()).with_engine(eng).with_time_block(k);
+            let (fwant, fstats) = fused.multirank_sweep(&spec, &g, &d, &Backend::sdma(), steps);
+            assert_eq!(fwant.data, want.data, "{kind:?} k={k}: fused reference diverged");
+            assert_eq!(fstats.substep_barriers, fstats.comm_rounds * (k_eff as u64 - 1));
+            // tile geometries: narrow, mid-with-band-depth, and one tile
+            // wider than any rank's z extent (clamps to one tile/level)
+            for (tile, wf) in [(2usize, 1usize), (3, 2), (64, 1)] {
+                for threads in [1usize, 2, 4] {
+                    let drv = Driver::new(threads, p.clone())
+                        .with_engine(eng)
+                        .with_time_block(k)
+                        .with_wavefront(tile, wf);
+                    assert_eq!(drv.wavefront(), (tile, wf));
+                    let before = exchange::transport_rounds();
+                    let (got, stats) = drv.multirank_sweep(&spec, &g, &d, &Backend::sdma(), steps);
+                    let rounds = exchange::transport_rounds() - before;
+                    assert_eq!(
+                        got.data, want.data,
+                        "{kind:?} k={k} tile={tile} wf={wf} threads={threads} diverged"
+                    );
+                    // intra-rank tiling must not change the exchange
+                    // schedule in any way
+                    assert_eq!(stats.comm_rounds, fstats.comm_rounds, "{kind:?} k={k}");
+                    assert_eq!(rounds, fstats.comm_rounds, "transport counter, {kind:?} k={k}");
+                    assert_eq!(stats.exchanged_bytes, fstats.exchanged_bytes);
+                    // one dispatch barrier per wf-deep band instead of
+                    // one per sub-step level
+                    let per_round = if k_eff > 1 { (k_eff - 1).div_ceil(wf) as u64 } else { 0 };
+                    assert_eq!(
+                        stats.substep_barriers,
+                        stats.comm_rounds * per_round,
+                        "{kind:?} k={k} tile={tile} wf={wf}"
+                    );
+                    assert!(stats.substep_barriers <= fstats.substep_barriers);
+                    if wf > 1 && k_eff > 2 {
+                        assert!(
+                            stats.substep_barriers < fstats.substep_barriers,
+                            "{kind:?} k={k} wf={wf}: barrier count must drop"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    // uneven decomposition at full depth: prime-sized grid, lopsided
+    // 1×1×3 layout, k = 4 fused steps in one exchange round — the
+    // barrier count drops from k−1 to ⌈(k−1)/wf⌉ while the result and
+    // the transport schedule stay pinned, on both backends
+    let spec1 = StencilSpec::star3d(1);
+    let g2 = Grid3::random(7, 11, 13, 0xF00D);
+    let d3 = CartDecomp::new(1, 1, 3);
+    assert_eq!(temporal::max_depth(&d3, 7, 11, 13, 1), 4);
+    let (want2, _) = multirank_sweep(&spec1, &g2, &d3, &Backend::sdma(), 4, 3, &p);
+    let (flat, flat_stats) = multirank_sweep_fused(&spec1, &g2, &d3, &Backend::sdma(), 4, 3, &p, 4);
+    assert_eq!(flat.data, want2.data);
+    assert_eq!(flat_stats.comm_rounds, 1);
+    assert_eq!(flat_stats.substep_barriers, 3, "flat fused: one barrier per sub-step level");
+    for (wf, want_barriers) in [(1usize, 3u64), (2, 2), (4, 1)] {
+        for backend in [Backend::sdma(), Backend::mpi()] {
+            let before = exchange::transport_rounds();
+            let (got, stats) =
+                multirank_sweep_wavefront(&spec1, &g2, &d3, &backend, 4, 3, &p, 4, 3, wf);
+            assert_eq!(got.data, want2.data, "wf={wf} {} diverged", backend.name());
+            assert_eq!(stats.comm_rounds, 1, "wf={wf}");
+            assert_eq!(exchange::transport_rounds() - before, 1, "wf={wf}");
+            assert_eq!(stats.substep_barriers, want_barriers, "wf={wf}");
+        }
+    }
+}

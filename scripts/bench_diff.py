@@ -1,38 +1,48 @@
 #!/usr/bin/env python3
-"""Diff two BENCH_engines.json files (schema mmstencil.bench_engines.v5).
+"""Diff two BENCH_engines.json files (schema mmstencil.bench_engines.v6).
 
 Rows are matched by identity key — sweep rows on (engine, pattern,
-radius, n, time_block), RTM rows on (engine, medium, n, time_block),
-survey rows on (engine, medium, n, shots, shards, checkpoint) — and the
-per-row throughput delta (Mcell/s, or shots/hour for survey rows) is
-printed as a percentage.  Older baselines stay diffable: v3 documents
-simply have no `survey_entries` array (the survey section prints every
-current row as new), and v4 rows lack the v5 `plan` string, which is
-ignored here — plans describe *how* a row ran, not *which* row it is,
-so they are deliberately not part of any identity key.  `threads`
-is deliberately NOT part of the key: the probe derives it from the
-host's core count, so keying on it would silently stop matching rows
-whenever the runner shape changes (engine labels already distinguish
-serial from parallel rows).  Baseline rows with zero throughput (the
-committed zero-seeded baseline, before any CI run has populated real
-numbers) print as "n/a" instead of a bogus percentage, as do rows
-present on only one side.
+radius, n, time_block, tile, wf), RTM rows on (engine, medium, n,
+time_block), survey rows on (engine, medium, n, shots, shards,
+checkpoint) — and the per-row throughput delta (Mcell/s, or shots/hour
+for survey rows) is printed as a percentage.  Older baselines stay
+diffable: v3 documents simply have no `survey_entries` array (the
+survey section prints every current row as new), v4 rows lack the v5
+`plan` string, which is ignored here — plans describe *how* a row ran,
+not *which* row it is, so they are deliberately not part of any
+identity key — and v5 rows lack the v6 `tile`/`wf` geometry fields,
+which default to 0/1 (classic stepping) so pre-wavefront baselines
+keep matching their untiled successors.  `threads` is deliberately NOT
+part of the key: the probe derives it from the host's core count, so
+keying on it would silently stop matching rows whenever the runner
+shape changes (engine labels already distinguish serial from parallel
+rows).  Baseline rows with zero throughput (the committed zero-seeded
+baseline, before any CI run has populated real numbers) print as "n/a"
+instead of a bogus percentage, as do rows present on only one side.
 
 Advisory by default: always exits 0, because throughput on shared
-runners is noise-prone.  Pass --fail-below PCT to turn any regression
-worse than -PCT% into exit 1 (for local, quiet-machine use).
+runners is noise-prone.  Pass --fail-on-regression PCT to turn any
+matched row regressing worse than -PCT% into exit 1 (for local,
+quiet-machine use; --fail-below is the deprecated spelling of the
+same flag).
 
 Usage:
-    python3 scripts/bench_diff.py BASELINE.json CURRENT.json [--fail-below PCT]
+    python3 scripts/bench_diff.py BASELINE.json CURRENT.json \
+        [--fail-on-regression PCT]
 """
 
 import argparse
 import json
 import sys
 
-SWEEP_KEY = ("engine", "pattern", "radius", "n", "time_block")
+SWEEP_KEY = ("engine", "pattern", "radius", "n", "time_block", "tile", "wf")
 RTM_KEY = ("engine", "medium", "n", "time_block")
 SURVEY_KEY = ("engine", "medium", "n", "shots", "shards", "checkpoint")
+
+# Keys absent from older-schema rows take these defaults, so old
+# baselines keep matching: v2 rows lack time_block (classic stepping),
+# v5 rows lack tile/wf (untiled).
+KEY_DEFAULTS = {"time_block": 1, "tile": 0, "wf": 1}
 
 
 def load(path):
@@ -47,9 +57,7 @@ def load(path):
 def index(rows, key_fields):
     out = {}
     for row in rows:
-        # v2 documents lack time_block; treat them as depth-1 rows so
-        # old baselines stay diffable against v3 output
-        key = tuple(row.get(k, 1 if k == "time_block" else None) for k in key_fields)
+        key = tuple(row.get(k, KEY_DEFAULTS.get(k)) for k in key_fields)
         out[key] = row
     return out
 
@@ -58,29 +66,53 @@ def fmt_key(key, key_fields):
     return " ".join(f"{k}={v}" for k, v in zip(key_fields, key))
 
 
-def diff_section(name, base_rows, cur_rows, key_fields, value_field="mcells_per_s", unit="Mcell/s"):
+def compare(base_rows, cur_rows, key_fields, value_field="mcells_per_s"):
+    """Pure row comparison (the unit-testable core): returns a list of
+    (key, status, current_value, pct) tuples sorted by key, where status
+    is "new" | "unmeasured" | "matched" | "dropped" and pct is the
+    percentage delta for matched rows (None otherwise)."""
     base = index(base_rows, key_fields)
     cur = index(cur_rows, key_fields)
-    worst = None
-    print(f"== {name} ({len(cur)} rows, baseline {len(base)}) ==")
+    out = []
     for key in sorted(cur, key=str):
         b = base.get(key)
-        c = cur[key]
-        cv = c.get(value_field, 0.0)
+        cv = cur[key].get(value_field, 0.0)
         if b is None:
-            print(f"  {fmt_key(key, key_fields):<64} {cv:>10.1f} {unit}   (new row)")
+            out.append((key, "new", cv, None))
             continue
         bv = b.get(value_field, 0.0)
         if bv <= 0.0:
-            print(f"  {fmt_key(key, key_fields):<64} {cv:>10.1f} {unit}   (n/a: baseline unmeasured)")
+            out.append((key, "unmeasured", cv, None))
             continue
-        pct = (cv - bv) / bv * 100.0
-        print(f"  {fmt_key(key, key_fields):<64} {cv:>10.1f} {unit}   {pct:+7.1f}%")
-        if worst is None or pct < worst:
-            worst = pct
+        out.append((key, "matched", cv, (cv - bv) / bv * 100.0))
     for key in sorted(set(base) - set(cur), key=str):
-        print(f"  {fmt_key(key, key_fields):<64} {'—':>10}           (row dropped)")
-    return worst
+        out.append((key, "dropped", None, None))
+    return out
+
+
+def worst_pct(results):
+    """Most negative matched-row delta across compare() outputs, or
+    None when nothing matched."""
+    pcts = [pct for _, status, _, pct in results if status == "matched"]
+    return min(pcts) if pcts else None
+
+
+def diff_section(name, base_rows, cur_rows, key_fields, value_field="mcells_per_s", unit="Mcell/s"):
+    results = compare(base_rows, cur_rows, key_fields, value_field)
+    n_cur = sum(1 for _, status, _, _ in results if status != "dropped")
+    n_base = sum(1 for _, status, _, _ in results if status in ("matched", "unmeasured", "dropped"))
+    print(f"== {name} ({n_cur} rows, baseline {n_base}) ==")
+    for key, status, cv, pct in results:
+        label = fmt_key(key, key_fields)
+        if status == "new":
+            print(f"  {label:<64} {cv:>10.1f} {unit}   (new row)")
+        elif status == "unmeasured":
+            print(f"  {label:<64} {cv:>10.1f} {unit}   (n/a: baseline unmeasured)")
+        elif status == "matched":
+            print(f"  {label:<64} {cv:>10.1f} {unit}   {pct:+7.1f}%")
+        else:
+            print(f"  {label:<64} {'—':>10}           (row dropped)")
+    return worst_pct(results)
 
 
 def main():
@@ -88,11 +120,13 @@ def main():
     ap.add_argument("baseline")
     ap.add_argument("current")
     ap.add_argument(
+        "--fail-on-regression",
         "--fail-below",
         type=float,
         default=None,
         metavar="PCT",
-        help="exit 1 if any matched row regresses more than PCT percent",
+        help="exit 1 if any matched row regresses more than PCT percent "
+        "(default: off — purely advisory)",
     )
     args = ap.parse_args()
 
@@ -124,7 +158,7 @@ def main():
         print(f"worst matched delta: {min(worst):+.1f}%")
     else:
         print("no measured baseline rows to compare (advisory diff only)")
-    if args.fail_below is not None and worst and min(worst) < -abs(args.fail_below):
+    if args.fail_on_regression is not None and worst and min(worst) < -abs(args.fail_on_regression):
         sys.exit(1)
 
 
