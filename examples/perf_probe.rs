@@ -6,8 +6,9 @@
 //! Every engine is exercised through the dispatch layer
 //! (`stencil::Engine`, configured via `Engine::from_plan`) — no
 //! per-engine closures — and emits `BENCH_engines.json` (schema
-//! `metrics::bench_json` v6, every sweep/RTM row carrying the active
-//! `TunePlan` string and every sweep row its wavefront tile geometry):
+//! `metrics::bench_json` v7, every sweep/RTM row carrying the active
+//! `TunePlan` string, its halo wire codec + transport byte count, and
+//! every sweep row its wavefront tile geometry):
 //! per-engine sweep throughput for star/box r ∈ {1, 4}, the headline
 //! 256³ star-r4 sweep at temporal-blocking depths k ∈ {1, 2, 4}
 //! (`Engine::apply3_fused` — the fused rows are the perf-trajectory
@@ -156,6 +157,9 @@ fn probe_sweep(
         time_block,
         tile: plan.tile,
         wf: plan.wf.max(1),
+        // periodic single-rank sweeps never touch the wire
+        halo_codec: plan.halo.name().into(),
+        transport_bytes: 0,
         mcells_per_s: mcells,
         allocs_per_sweep: allocs,
         arena_grows_per_sweep: grows,
@@ -240,18 +244,16 @@ fn main() {
                 for &(tile, wf) in &wavefronts {
                     let plan = TunePlan { tile, wf, ..plan_for(kind, threads, k) };
                     let drv = Driver::new(threads, Platform::paper()).with_plan(&plan);
+                    let mut wire_bytes = 0u64;
                     let (mcells, allocs, grows) = timed(
                         &format!("{label:<16} star3d r4 {big_n}^3 k{k} tile{tile} wf{wf}"),
                         (k * big_n * big_n * big_n) as f64,
                         budget,
                         || {
-                            std::hint::black_box(drv.multirank_sweep(
-                                &spec,
-                                &gb,
-                                &dec,
-                                &Backend::sdma(),
-                                k,
-                            ));
+                            let (out, stats) =
+                                drv.multirank_sweep(&spec, &gb, &dec, &Backend::sdma(), k);
+                            wire_bytes = stats.exchanged_bytes;
+                            std::hint::black_box(out);
                         },
                     );
                     entries.push(EngineBench {
@@ -263,6 +265,8 @@ fn main() {
                         time_block: k,
                         tile,
                         wf,
+                        halo_codec: plan.halo.name().into(),
+                        transport_bytes: wire_bytes,
                         mcells_per_s: mcells,
                         allocs_per_sweep: allocs,
                         arena_grows_per_sweep: grows,
@@ -308,6 +312,9 @@ fn main() {
                     n,
                     threads,
                     time_block: k,
+                    // single-rank steps: lossless codec, nothing on the wire
+                    halo_codec: plan.halo.name().into(),
+                    transport_bytes: 0,
                     mcells_per_s: mcells,
                     allocs_per_step: allocs,
                     arena_grows_per_step: grows,
@@ -330,6 +337,8 @@ fn main() {
                     n,
                     threads,
                     time_block: k,
+                    halo_codec: plan.halo.name().into(),
+                    transport_bytes: 0,
                     mcells_per_s: mcells,
                     allocs_per_step: allocs,
                     arena_grows_per_step: grows,

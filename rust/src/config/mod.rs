@@ -9,6 +9,7 @@
 pub mod toml;
 
 use crate::coordinator::tiles::Strategy;
+use crate::grid::halo::HaloCodec;
 use crate::rtm::driver::{Medium, RtmConfig};
 use crate::stencil::{StencilSpec, TunePlan};
 
@@ -94,6 +95,11 @@ pub struct RuntimeSpec {
     /// pipeline, bitwise unchanged; imaging RTM shots always clamp to 1
     /// (`RtmConfig::shot_time_block`).
     pub time_block: usize,
+    /// Halo wire codec of the multirank exchanges (`halo_codec =
+    /// "f32" | "bf16" | "f16"`).  `f32` (the default) is the bitwise
+    /// classic transport; the 16-bit codecs halve exchange bytes at a
+    /// bounded relative error (`rust/tests/precision.rs`).
+    pub halo_codec: HaloCodec,
 }
 
 impl Default for RuntimeSpec {
@@ -106,6 +112,7 @@ impl Default for RuntimeSpec {
             numa_nodes: p.total_numa(),
             cores_per_numa: p.cores_per_numa,
             time_block: 1,
+            halo_codec: HaloCodec::F32,
         }
     }
 }
@@ -214,8 +221,12 @@ pub fn from_text(text: &str) -> Result<ExperimentConfig, toml::ParseError> {
     rt.numa_nodes = doc.usize_or("runtime", "numa_nodes", rt.numa_nodes);
     rt.cores_per_numa = doc.usize_or("runtime", "cores_per_numa", rt.cores_per_numa);
     rt.time_block = doc.usize_or("runtime", "time_block", rt.time_block).max(1);
-    // the propagators' fused entries read the same knob
+    let codec_name = doc.str_or("runtime", "halo_codec", rt.halo_codec.name());
+    rt.halo_codec = HaloCodec::parse(codec_name)
+        .map_err(|e| toml::ParseError { line: 0, msg: format!("[runtime] halo_codec: {e}") })?;
+    // the propagators' fused entries read the same knobs
     cfg.rtm.time_block = rt.time_block;
+    cfg.rtm.halo_codec = rt.halo_codec;
 
     if let Some(plan) = doc.get("tune", "plan").and_then(toml::Value::as_str) {
         cfg.tune.plan = Some(
@@ -297,6 +308,20 @@ dx = 12.5
         assert_eq!(cfg.rtm.time_block, 4);
         // 0 is clamped to 1, never a divide-by-zero depth
         assert_eq!(from_text("[runtime]\ntime_block = 0\n").unwrap().runtime.time_block, 1);
+    }
+
+    #[test]
+    fn halo_codec_parses_reaches_rtm_and_rejects() {
+        // default is the bitwise f32 transport
+        assert_eq!(from_text("").unwrap().runtime.halo_codec, HaloCodec::F32);
+        let cfg = from_text("[runtime]\nhalo_codec = \"bf16\"\n").unwrap();
+        assert_eq!(cfg.runtime.halo_codec, HaloCodec::Bf16);
+        // the shot services read the same knob
+        assert_eq!(cfg.rtm.halo_codec, HaloCodec::Bf16);
+        // unknown codec names are a parse error naming the allowed list
+        let err = from_text("[runtime]\nhalo_codec = \"fp8\"\n").unwrap_err();
+        assert!(err.to_string().contains("[runtime] halo_codec"), "{err}");
+        assert!(err.to_string().contains("f32 | bf16 | f16"), "{err}");
     }
 
     #[test]

@@ -25,7 +25,7 @@
 use std::sync::Mutex;
 
 use crate::grid::decomp::CartDecomp;
-use crate::grid::halo::HaloView;
+use crate::grid::halo::{HaloCodec, HaloView};
 use crate::grid::par::ParGrid3;
 use crate::grid::shell;
 use crate::grid::Grid3;
@@ -107,6 +107,7 @@ pub struct Driver {
     time_block: usize,
     tile: usize,
     wf: usize,
+    halo: HaloCodec,
 }
 
 impl Driver {
@@ -127,6 +128,7 @@ impl Driver {
             time_block: 1,
             tile: 0,
             wf: 1,
+            halo: HaloCodec::F32,
         }
     }
 
@@ -136,8 +138,10 @@ impl Driver {
     /// fused-sweep depth in one value.
     pub fn from_config(cfg: &crate::config::ExperimentConfig) -> Self {
         let rc = cfg.runtime.to_runtime_config(cfg.sweep.threads);
-        let plan = cfg.tune.plan.unwrap_or_else(|| {
-            TunePlan { time_block: cfg.runtime.time_block.max(1), ..TunePlan::simd(1) }
+        let plan = cfg.tune.plan.unwrap_or_else(|| TunePlan {
+            time_block: cfg.runtime.time_block.max(1),
+            halo: cfg.runtime.halo_codec,
+            ..TunePlan::simd(1)
         });
         Self {
             rt: Runtime::new(rc),
@@ -147,6 +151,7 @@ impl Driver {
             time_block: plan.time_block.max(1),
             tile: plan.tile,
             wf: plan.wf.max(1),
+            halo: plan.halo,
         }
     }
 
@@ -160,6 +165,7 @@ impl Driver {
         self.time_block = plan.time_block.max(1);
         self.tile = plan.tile;
         self.wf = plan.wf.max(1);
+        self.halo = plan.halo;
         self
     }
 
@@ -178,6 +184,23 @@ impl Driver {
     /// Wavefront `(tile, wf)` geometry (`tile = 0` ⇒ classic stepping).
     pub fn wavefront(&self) -> (usize, usize) {
         (self.tile, self.wf)
+    }
+
+    /// Compress halo faces with `codec` during multirank exchanges
+    /// (`[runtime] halo_codec` / plan key `halo=`).  Faces are packed in
+    /// f32, quantized to the codec's wire format, and expanded on
+    /// unpack; [`HaloCodec::F32`] (the default) is the bitwise-identical
+    /// classic transport, while `bf16`/`f16` halve
+    /// [`StepStats::exchanged_bytes`] at a bounded relative error
+    /// (`rust/tests/precision.rs`).
+    pub fn with_halo_codec(mut self, codec: HaloCodec) -> Self {
+        self.halo = codec;
+        self
+    }
+
+    /// The halo wire codec multirank exchanges run through.
+    pub fn halo_codec(&self) -> HaloCodec {
+        self.halo
     }
 
     /// Route this driver's region tasks through `engine` (tasks run
@@ -263,6 +286,7 @@ impl Driver {
                 self.time_block,
                 self.tile,
                 self.wf,
+                self.halo,
             )
         } else {
             multirank_sweep_on(
@@ -275,6 +299,7 @@ impl Driver {
                 self.threads,
                 &self.platform,
                 &self.engine,
+                self.halo,
             )
         }
     }
@@ -439,6 +464,7 @@ pub fn multirank_sweep(
         threads,
         platform,
         &Engine::from_plan(&TunePlan::simd(1)),
+        HaloCodec::F32,
     )
 }
 
@@ -453,6 +479,7 @@ fn multirank_sweep_on(
     threads: usize,
     platform: &Platform,
     engine: &Engine,
+    codec: HaloCodec,
 ) -> (Grid3, StepStats) {
     let r = spec.radius;
     let threads = threads.max(1);
@@ -519,7 +546,7 @@ fn multirank_sweep_on(
 
             let do_comm = || {
                 let ct = Timer::start();
-                let rep = exchange::exchange_views(decomp, hviews, backend);
+                let rep = exchange::exchange_views_codec(decomp, hviews, backend, codec);
                 exchange::fill_halos_from_global_views(&current, decomp, hviews, true);
                 *comm_result.lock().unwrap() = Some((rep, ct.secs()));
             };
@@ -679,6 +706,7 @@ pub fn multirank_sweep_fused(
         time_block,
         0,
         1,
+        HaloCodec::F32,
     )
 }
 
@@ -716,6 +744,7 @@ pub fn multirank_sweep_wavefront(
         time_block,
         tile,
         wf,
+        HaloCodec::F32,
     )
 }
 
@@ -733,6 +762,7 @@ fn multirank_sweep_fused_on(
     time_block: usize,
     tile: usize,
     wf: usize,
+    codec: HaloCodec,
 ) -> (Grid3, StepStats) {
     let r = spec.radius;
     let threads = threads.max(1);
@@ -801,7 +831,7 @@ fn multirank_sweep_fused_on(
 
             let do_comm = || {
                 let ct = Timer::start();
-                let rep = exchange::exchange_views(decomp, hviews, backend);
+                let rep = exchange::exchange_views_codec(decomp, hviews, backend, codec);
                 exchange::fill_halos_from_global_views(&current, decomp, hviews, true);
                 *comm_result.lock().unwrap() = Some((rep, ct.secs()));
             };
@@ -1111,6 +1141,32 @@ mod tests {
         let (got, ts) = tiled.multirank_sweep(&spec, &g, &dec, &Backend::sdma(), 4);
         assert_eq!(got.data, want.data, "wavefront tiling must be bitwise");
         assert_eq!(ts.comm_rounds, ws.comm_rounds, "tiling must not add exchanges");
+    }
+
+    #[test]
+    fn halo_codec_halves_step_bytes_and_f32_stays_bitwise() {
+        // wire-format contracts through the Driver plumbing; the error
+        // budgets proper live in rust/tests/precision.rs
+        let spec = StencilSpec::star3d(2);
+        let g = Grid3::random(16, 16, 16, 23);
+        let p = Platform::paper();
+        let dec = CartDecomp::new(1, 2, 2);
+        let classic = Driver::new(2, p.clone());
+        let (want, ws) = classic.multirank_sweep(&spec, &g, &dec, &Backend::sdma(), 2);
+        let explicit = Driver::new(2, p.clone()).with_halo_codec(HaloCodec::F32);
+        let (got, fs) = explicit.multirank_sweep(&spec, &g, &dec, &Backend::sdma(), 2);
+        assert_eq!(got.data, want.data, "F32 codec must be the bitwise classic transport");
+        assert_eq!(fs.exchanged_bytes, ws.exchanged_bytes);
+        let half = Driver::new(2, p).with_halo_codec(HaloCodec::Bf16);
+        assert_eq!(half.halo_codec(), HaloCodec::Bf16);
+        let (lossy, hs) = half.multirank_sweep(&spec, &g, &dec, &Backend::sdma(), 2);
+        assert_eq!(hs.exchanged_bytes * 2, ws.exchanged_bytes, "bf16 wire must be half of f32");
+        assert_allclose(&lossy.data, &want.data, 5e-2, 5e-2);
+        // plans carry the codec as their optional 8th key
+        let plan =
+            TunePlan::parse("engine=simd vl=16 vz=4 tb=1 threads=2 tile=0 wf=1 halo=f16").unwrap();
+        let d = Driver::new(1, Platform::paper()).with_plan(&plan);
+        assert_eq!(d.halo_codec(), HaloCodec::F16);
     }
 
     #[test]

@@ -24,7 +24,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::scratch;
 use crate::grid::decomp::CartDecomp;
-use crate::grid::halo::{Axis, HaloGrid, HaloView, Side};
+use crate::grid::halo::{Axis, HaloCodec, HaloGrid, HaloView, Side};
 use crate::grid::Grid3;
 use crate::simulator::mpi::MpiModel;
 use crate::simulator::sdma::{CopyDesc, Sdma};
@@ -81,18 +81,20 @@ pub struct ExchangeReport {
 
 /// Contiguous run length (bytes) of a packed face in the (z,x,y) layout:
 /// Z faces are fully contiguous slabs, X faces are (h·ny)-element runs,
-/// Y faces are h-element runs (the strided worst case).
-fn run_bytes(h: usize, nx: usize, ny: usize, axis: Axis) -> u64 {
+/// Y faces are h-element runs (the strided worst case).  `bpv` is the
+/// wire bytes per value ([`HaloCodec::bytes_per_value`]): a compressed
+/// face shrinks its runs along with its totals.
+fn run_bytes(h: usize, nx: usize, ny: usize, axis: Axis, bpv: usize) -> u64 {
     match axis {
-        Axis::Z => (h * nx * ny * 4) as u64,
-        Axis::X => (h * ny * 4) as u64,
-        Axis::Y => (h * 4) as u64,
+        Axis::Z => (h * nx * ny * bpv) as u64,
+        Axis::X => (h * ny * bpv) as u64,
+        Axis::Y => (h * bpv) as u64,
     }
 }
 
-/// `run_bytes` for an owned halo grid.
+/// `run_bytes` for an owned halo grid at full (f32) precision.
 pub fn face_run_bytes(g: &HaloGrid, axis: Axis) -> u64 {
-    run_bytes(g.h, g.nx, g.ny, axis)
+    run_bytes(g.h, g.nx, g.ny, axis, 4)
 }
 
 /// Exchange all interior faces of `grids` (one per rank) for one field.
@@ -102,12 +104,31 @@ pub fn exchange(decomp: &CartDecomp, grids: &mut [HaloGrid], backend: &Backend) 
     exchange_views(decomp, &views, backend)
 }
 
-/// View-based interior-face exchange — the form the overlapped step
-/// submits as a pool task while compute proceeds on the same views.
+/// View-based interior-face exchange at full precision — the form the
+/// overlapped step submits as a pool task while compute proceeds on the
+/// same views.  Exactly [`exchange_views_codec`] with
+/// [`HaloCodec::F32`]: same code path, no quantization, bitwise the
+/// pre-codec exchange.
 pub fn exchange_views(
     decomp: &CartDecomp,
     grids: &[HaloView<'_>],
     backend: &Backend,
+) -> ExchangeReport {
+    exchange_views_codec(decomp, grids, backend, HaloCodec::F32)
+}
+
+/// [`exchange_views`] under a face-transport codec: each packed face is
+/// quantized to what `codec`'s wire format would deliver
+/// (`HaloView::pack_face_into_codec`) before the neighbour unpacks it,
+/// and the byte/run accounting charges the codec's wire width — so a
+/// 16-bit codec moves exactly half the f32 bytes on the same geometry.
+/// [`HaloCodec::F32`] quantizes nothing and charges 4 bytes/value:
+/// bitwise and byte-identical to the classic exchange.
+pub fn exchange_views_codec(
+    decomp: &CartDecomp,
+    grids: &[HaloView<'_>],
+    backend: &Backend,
+    codec: HaloCodec,
 ) -> ExchangeReport {
     assert_eq!(grids.len(), decomp.ranks());
     TRANSPORT_ROUNDS.fetch_add(1, Ordering::Relaxed);
@@ -137,13 +158,14 @@ pub fn exchange_views(
         let nb_len = grids[rank].face_len(axis);
         let rank_len = grids[nb].face_len(axis);
         scratch::with(nb_len.max(rank_len), |buf| {
-            grids[rank].pack_face_into(axis, Side::High, &mut buf[..nb_len]);
+            grids[rank].pack_face_into_codec(axis, Side::High, &mut buf[..nb_len], codec);
             grids[nb].unpack_halo(axis, Side::Low, &buf[..nb_len]);
-            grids[nb].pack_face_into(axis, Side::Low, &mut buf[..rank_len]);
+            grids[nb].pack_face_into_codec(axis, Side::Low, &mut buf[..rank_len], codec);
             grids[rank].unpack_halo(axis, Side::High, &buf[..rank_len]);
         });
-        let bytes = (nb_len + rank_len) as u64 * 4;
-        let run = run_bytes(grids[rank].h, grids[rank].nx, grids[rank].ny, axis);
+        let bpv = codec.bytes_per_value();
+        let bytes = (nb_len + rank_len) as u64 * bpv as u64;
+        let run = run_bytes(grids[rank].h, grids[rank].nx, grids[rank].ny, axis, bpv);
         report.bytes += bytes;
         report.faces += 2;
         match backend {
@@ -342,6 +364,63 @@ mod tests {
         assert_eq!(face_run_bytes(&g, Axis::Z), 4 * 32 * 64 * 4);
         assert_eq!(face_run_bytes(&g, Axis::X), 4 * 64 * 4);
         assert_eq!(face_run_bytes(&g, Axis::Y), 16);
+    }
+
+    #[test]
+    fn codec_exchange_halves_bytes_and_quantizes_only_halos() {
+        let g = Grid3::random(8, 10, 12, 9);
+        let d = CartDecomp::new(1, 2, 2);
+        let mut full = scatter(&g, &d, 2);
+        let full_rep = exchange(&d, &mut full, &Backend::sdma());
+        for codec in [HaloCodec::Bf16, HaloCodec::F16] {
+            let mut low = scatter(&g, &d, 2);
+            let views: Vec<HaloView<'_>> = low.iter_mut().map(|hg| hg.par_view()).collect();
+            let rep = exchange_views_codec(&d, &views, &Backend::sdma(), codec);
+            drop(views);
+            // exactly half the f32 bytes on the same geometry, same faces
+            assert_eq!(rep.bytes * 2, full_rep.bytes, "{codec:?}");
+            assert_eq!(rep.faces, full_rep.faces, "{codec:?}");
+            for r in 0..d.ranks() {
+                // interiors are untouched; received halo-frame cells are
+                // exactly the quantized image of the f32-exchanged halos
+                // (quantization is idempotent, so multi-hop corner
+                // propagation lands on the same bits)
+                assert_eq!(low[r].interior(), full[r].interior(), "{codec:?} rank {r}");
+                let mut want = full[r].grid.data.clone();
+                codec.quantize(&mut want);
+                let (hw, nz, nx, ny) = (low[r].h, low[r].nz, low[r].nx, low[r].ny);
+                let (sx, sy) = (nx + 2 * hw, ny + 2 * hw);
+                for z in 0..nz + 2 * hw {
+                    for x in 0..sx {
+                        for y in 0..sy {
+                            let interior = (hw..hw + nz).contains(&z)
+                                && (hw..hw + nx).contains(&x)
+                                && (hw..hw + ny).contains(&y);
+                            if interior {
+                                continue;
+                            }
+                            let i = (z * sx + x) * sy + y;
+                            assert_eq!(
+                                low[r].grid.data[i].to_bits(),
+                                want[i].to_bits(),
+                                "{codec:?} rank {r} frame cell ({z},{x},{y})"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        // the F32 codec is bitwise the classic exchange
+        let mut again = scatter(&g, &d, 2);
+        let views: Vec<HaloView<'_>> = again.iter_mut().map(|hg| hg.par_view()).collect();
+        let rep = exchange_views_codec(&d, &views, &Backend::sdma(), HaloCodec::F32);
+        drop(views);
+        assert_eq!(rep.bytes, full_rep.bytes);
+        for r in 0..d.ranks() {
+            for (got, want) in again[r].grid.data.iter().zip(&full[r].grid.data) {
+                assert_eq!(got.to_bits(), want.to_bits(), "rank {r}");
+            }
+        }
     }
 
     #[test]

@@ -14,6 +14,79 @@
 
 use super::par::{ParGrid3, TileViewMut};
 use super::Grid3;
+use crate::util::{lowp, ParseKindError};
+
+/// Face-transport precision codec: what scalar format halo values cross
+/// a simulated NUMA link in (paper §VI: inter-NUMA transport is the
+/// scaling limiter, so halving face bytes is the next lever after the
+/// 1/k exchange rounds of temporal blocking).
+///
+/// The exchange stages faces through f32 scratch either way; a non-f32
+/// codec **quantizes the staged values** through `util::lowp`'s
+/// round-to-nearest-even conversions at pack time — exactly the value a
+/// 16-bit wire format would deliver — and the byte accounting charges
+/// [`bytes_per_value`](Self::bytes_per_value) per element.  `F32` is a
+/// no-op on both counts, so the classic exchange stays bitwise
+/// identical (pinned by `tests/temporal.rs` / `tests/wavefront.rs`);
+/// the error the lossy codecs inject is budgeted by
+/// `tests/precision.rs` and DESIGN.md §15.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum HaloCodec {
+    /// Full-precision transport — bitwise the pre-codec exchange.
+    #[default]
+    F32,
+    /// bfloat16 transport: 2 bytes/value, relative error ≤ 2⁻⁸.
+    Bf16,
+    /// IEEE binary16 transport: 2 bytes/value, relative error ≤ 2⁻¹¹
+    /// (plus a 2⁻²⁵ absolute floor near zero).
+    F16,
+}
+
+impl HaloCodec {
+    /// Canonical names, in [`parse`](Self::parse)'s allowed order.
+    pub const NAMES: [&'static str; 3] = ["f32", "bf16", "f16"];
+
+    /// Runtime selection by canonical name (`"f32"`, `"bf16"`,
+    /// `"f16"`) — configs (`[runtime] halo_codec`), the CLI
+    /// (`--halo_codec`), and the `TunePlan` `halo=` key all route
+    /// through here, so a typo reads identically everywhere
+    /// (crate-wide [`ParseKindError`] contract).
+    pub fn parse(name: &str) -> Result<Self, ParseKindError> {
+        match name {
+            "f32" => Ok(HaloCodec::F32),
+            "bf16" => Ok(HaloCodec::Bf16),
+            "f16" => Ok(HaloCodec::F16),
+            _ => Err(ParseKindError::new("halo codec", name, &Self::NAMES)),
+        }
+    }
+
+    /// Canonical name; `parse(codec.name())` round-trips.
+    pub fn name(self) -> &'static str {
+        match self {
+            HaloCodec::F32 => "f32",
+            HaloCodec::Bf16 => "bf16",
+            HaloCodec::F16 => "f16",
+        }
+    }
+
+    /// Wire bytes one face value occupies under this codec.
+    pub fn bytes_per_value(self) -> usize {
+        match self {
+            HaloCodec::F32 => 4,
+            HaloCodec::Bf16 | HaloCodec::F16 => 2,
+        }
+    }
+
+    /// Round every staged value to what the wire format would deliver
+    /// (encode + decode through `util::lowp`); no-op for [`F32`](Self::F32).
+    pub fn quantize(self, buf: &mut [f32]) {
+        match self {
+            HaloCodec::F32 => {}
+            HaloCodec::Bf16 => lowp::quantize_bf16(buf),
+            HaloCodec::F16 => lowp::quantize_f16(buf),
+        }
+    }
+}
 
 /// Axis of a halo face.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -178,7 +251,13 @@ impl HaloGrid {
 
     /// Bytes moved by one exchange of this face (both pack directions).
     pub fn face_bytes(&self, axis: Axis) -> usize {
-        self.face_len(axis) * 4
+        self.face_bytes_with(axis, HaloCodec::F32)
+    }
+
+    /// [`face_bytes`](Self::face_bytes) under a transport codec:
+    /// [`HaloCodec::bytes_per_value`] per element.
+    pub fn face_bytes_with(&self, axis: Axis, codec: HaloCodec) -> usize {
+        self.face_len(axis) * codec.bytes_per_value()
     }
 }
 
@@ -226,6 +305,23 @@ impl HaloView<'_> {
                 }
             }
         }
+    }
+
+    /// [`pack_face_into`](Self::pack_face_into) followed by a
+    /// [`HaloCodec::quantize`] of the staged values — the face exactly
+    /// as `codec`'s wire format would deliver it.  With
+    /// [`HaloCodec::F32`] this is bitwise
+    /// [`pack_face_into`](Self::pack_face_into); the unpack side is
+    /// codec-agnostic (it always consumes decoded f32 values).
+    pub fn pack_face_into_codec(
+        &self,
+        axis: Axis,
+        side: Side,
+        out: &mut [f32],
+        codec: HaloCodec,
+    ) {
+        self.pack_face_into(axis, side, out);
+        codec.quantize(out);
     }
 
     /// See [`HaloGrid::unpack_halo`] — the halo-frame slab is claimed as
@@ -395,6 +491,53 @@ mod tests {
             .flat_map(|a| [v.pack_face(a, Side::Low), v.pack_face(a, Side::High)])
             .collect();
         assert_eq!(owned, viewed);
+    }
+
+    #[test]
+    fn codec_names_round_trip_and_reject_unknowns() {
+        for (codec, name) in
+            [(HaloCodec::F32, "f32"), (HaloCodec::Bf16, "bf16"), (HaloCodec::F16, "f16")]
+        {
+            assert_eq!(codec.name(), name);
+            assert_eq!(HaloCodec::parse(name), Ok(codec));
+        }
+        assert_eq!(HaloCodec::default(), HaloCodec::F32);
+        for bad in ["", "F32", "fp16", "bf16 ", "half"] {
+            let err = HaloCodec::parse(bad).unwrap_err();
+            assert_eq!(err.what, "halo codec", "{bad:?}");
+            assert_eq!(err.name, bad, "{bad:?}");
+            assert!(err.to_string().contains("f32 | bf16 | f16"), "{bad:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn codec_pack_quantizes_and_f32_is_bitwise() {
+        let mut g = HaloGrid::zeros(3, 4, 5, 2);
+        for z in 0..3 {
+            for x in 0..4 {
+                for y in 0..5 {
+                    // values that are NOT bf16/f16-representable
+                    g.set(z, x, y, 1.0 + (z * 100 + x * 10 + y) as f32 * 1e-3);
+                }
+            }
+        }
+        let v = g.par_view();
+        let plain = v.pack_face(Axis::Y, Side::Low);
+        let mut f32_packed = vec![0.0; v.face_len(Axis::Y)];
+        v.pack_face_into_codec(Axis::Y, Side::Low, &mut f32_packed, HaloCodec::F32);
+        let bits = |xs: &[f32]| xs.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&f32_packed), bits(&plain), "F32 codec must be bitwise the plain pack");
+        for codec in [HaloCodec::Bf16, HaloCodec::F16] {
+            let mut q = vec![0.0; v.face_len(Axis::Y)];
+            v.pack_face_into_codec(Axis::Y, Side::Low, &mut q, codec);
+            let mut want = plain.clone();
+            codec.quantize(&mut want);
+            assert_eq!(bits(&q), bits(&want), "{codec:?}");
+            assert_ne!(bits(&q), bits(&plain), "{codec:?} must actually quantize these values");
+            // 2 bytes per value on the wire
+            assert_eq!(codec.bytes_per_value(), 2);
+        }
+        assert_eq!(g.face_bytes_with(Axis::Y, HaloCodec::Bf16) * 2, g.face_bytes(Axis::Y));
     }
 
     #[test]

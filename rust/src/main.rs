@@ -26,6 +26,7 @@ use mmstencil::config;
 use mmstencil::coordinator::driver as sweep_driver;
 use mmstencil::coordinator::exchange::Backend;
 use mmstencil::coordinator::tiles::Strategy;
+use mmstencil::grid::halo::HaloCodec;
 use mmstencil::grid::{CartDecomp, Grid3};
 use mmstencil::metrics;
 use mmstencil::rtm::driver::{Medium, RtmConfig};
@@ -76,23 +77,27 @@ USAGE: mmstencil <subcommand> [--key value ...]
   info                                platform + artifact inventory
   sweep      --kernel 3DStarR4 --n 64 --threads 8 --strategy snoop|square
              --time_block k         fuse k sweeps per pass (arena double buffer)
-             --plan \"engine=… vl=… vz=… tb=… threads=… tile=… wf=…\"  tuned plan (wins)
+             --halo_codec f32|bf16|f16   halo wire codec (f32 = bitwise classic)
+             --plan \"engine=… vl=… vz=… tb=… threads=… tile=… wf=… halo=…\"  tuned plan (wins)
   tune       --kernel 3DStarR4 --n 256 --threads 8 [--cache plans.txt]
              autotune the shape against the roofline model; print (and
              optionally cache) the winning TunePlan
   rtm        --medium vti|tti --n 48 --steps 120 --threads 8
              --engine naive|simd|matrix_unit|matrix_gemm
              --time_block k         requested fuse depth (shots clamp to 1, §III-B)
+             --halo_codec f32|bf16|f16   subdomain-shell wire codec
              --plan \"…\"             tuned plan overlay (wins over knobs)
   survey     --shots 8 --shards 2 --medium vti|tti --n 32 --steps 60
              --engine matrix_unit --checkpoint full_state|boundary_saving
-             --queue_capacity 4 --plan \"…\"  multi-shot survey on the shot service
+             --halo_codec f32|bf16|f16 --queue_capacity 4 --plan \"…\"
+             multi-shot survey on the shot service
   exchange   --n 128 --radius 4             Table II halo bandwidth test
   scaling    --mode strong|weak --kernel 3DStarR4 --n 64
              --steps 4 --time_block k   one halo exchange per k fused steps
              --tile z --wf b        in-rank (z, t) wavefront tiling of the
                                     fused sub-steps: z-extent per tile (0 =
                                     classic) and levels per dispatch barrier
+             --halo_codec f32|bf16|f16   compress exchanged faces on the wire
   artifacts  [--dir artifacts]              verify PJRT vs rust kernels
   run        --config configs/example.toml  full experiment from a file"
     );
@@ -129,6 +134,16 @@ fn opt_plan(o: &Opts) -> Result<Option<TunePlan>, String> {
     o.get("plan")
         .map(|s| TunePlan::parse(s).map_err(|e| format!("--plan: {e}")))
         .transpose()
+}
+
+/// `--halo_codec f32|bf16|f16`: the halo wire codec (default `f32`,
+/// the bitwise classic transport).  A `--plan` carrying a `halo=` key
+/// wins over this knob, mirroring `--time_block`.
+fn opt_codec(o: &Opts) -> Result<HaloCodec, String> {
+    o.get("halo_codec")
+        .map(|s| HaloCodec::parse(s).map_err(|e| format!("--halo_codec: {e}")))
+        .transpose()
+        .map(|c| c.unwrap_or(HaloCodec::F32))
 }
 
 fn default_threads() -> usize {
@@ -196,12 +211,18 @@ fn cmd_sweep(opts: &Opts) -> Result<(), String> {
     let time_block = plan
         .map(|p| p.time_block.max(1))
         .unwrap_or_else(|| opt_usize(opts, "time_block", 1).max(1));
+    let halo_codec = match plan {
+        Some(p) => p.halo,
+        None => opt_codec(opts)?,
+    };
     let platform = Platform::paper();
     let g = Grid3::random(nz, nx, ny, 42);
     println!(
         "sweep {name} on {nz}×{nx}×{ny}, {threads} threads, {strategy:?}, time_block {time_block}"
     );
-    let mut driver = sweep_driver::Driver::new(threads, platform).with_time_block(time_block);
+    let mut driver = sweep_driver::Driver::new(threads, platform)
+        .with_time_block(time_block)
+        .with_halo_codec(halo_codec);
     if let Some(p) = &plan {
         println!("  plan: {p}");
         driver = driver.with_plan(p);
@@ -279,6 +300,7 @@ fn cmd_rtm(opts: &Opts) -> Result<(), String> {
     cfg.engine =
         mmstencil::stencil::EngineKind::parse(engine_name).map_err(|e| format!("--engine: {e}"))?;
     cfg.time_block = opt_usize(opts, "time_block", 1).max(1);
+    cfg.halo_codec = opt_codec(opts)?;
     if let Some(p) = opt_plan(opts)? {
         cfg = cfg.with_plan(&p);
     }
@@ -338,6 +360,7 @@ fn cmd_survey(opts: &Opts) -> Result<(), String> {
     let engine_name = opt_str(opts, "engine", "matrix_unit");
     cfg.engine =
         mmstencil::stencil::EngineKind::parse(engine_name).map_err(|e| format!("--engine: {e}"))?;
+    cfg.halo_codec = opt_codec(opts)?;
     if let Some(p) = opt_plan(opts)? {
         cfg = cfg.with_plan(&p);
     }
@@ -466,7 +489,15 @@ fn cmd_scaling(opts: &Opts) -> Result<(), String> {
     // (sub-step levels per dispatch barrier)
     let tile = opt_usize(opts, "tile", 0);
     let wf = opt_usize(opts, "wf", 1).max(1);
+    let halo_codec = opt_codec(opts)?;
     let platform = Platform::paper();
+    // one driver covers all three stepping paths: time_block = 1 is the
+    // classic exchange-per-step loop, > 1 fuses (with wavefront tiling
+    // when tile > 0), and the codec rides on whichever path runs
+    let driver = sweep_driver::Driver::new(threads, platform)
+        .with_time_block(time_block)
+        .with_wavefront(tile, wf)
+        .with_halo_codec(halo_codec);
     let mut t = Table::new(&[
         "ranks",
         "backend",
@@ -486,17 +517,7 @@ fn cmd_scaling(opts: &Opts) -> Result<(), String> {
         };
         let g = Grid3::random(gn_z, gn_x, gn_y, 3);
         for backend in [Backend::mpi(), Backend::sdma()] {
-            let (_, stats) = if time_block > 1 && tile > 0 {
-                sweep_driver::multirank_sweep_wavefront(
-                    &spec, &g, &d, &backend, steps, threads, &platform, time_block, tile, wf,
-                )
-            } else if time_block > 1 {
-                sweep_driver::multirank_sweep_fused(
-                    &spec, &g, &d, &backend, steps, threads, &platform, time_block,
-                )
-            } else {
-                sweep_driver::multirank_sweep(&spec, &g, &d, &backend, steps, threads, &platform)
-            };
+            let (_, stats) = driver.multirank_sweep(&spec, &g, &d, &backend, steps);
             t.row(&[
                 format!("{}×{}×{}", ranks.0, ranks.1, ranks.2),
                 backend.name().to_string(),
@@ -510,9 +531,10 @@ fn cmd_scaling(opts: &Opts) -> Result<(), String> {
         }
     }
     println!(
-        "{mode} scaling of {name} (grid {n}³{}, time_block {time_block}{})",
+        "{mode} scaling of {name} (grid {n}³{}, time_block {time_block}{}, halo {})",
         if mode == "weak" { " per rank" } else { " total" },
-        if tile > 0 { format!(", wavefront tile {tile} wf {wf}") } else { String::new() }
+        if tile > 0 { format!(", wavefront tile {tile} wf {wf}") } else { String::new() },
+        halo_codec.name()
     );
     t.print();
     Ok(())
@@ -584,6 +606,7 @@ fn cmd_run(opts: &Opts) -> Result<(), String> {
         if cfg.sweep.strategy == Strategy::Square { "square" } else { "snoop" }.to_string(),
     );
     o.insert("time_block".into(), cfg.runtime.time_block.to_string());
+    o.insert("halo_codec".into(), cfg.runtime.halo_codec.name().to_string());
     // the [tune] plan (if any) rides along and wins over the knobs above
     if let Some(p) = cfg.tune.plan {
         o.insert("plan".into(), p.to_string());
@@ -601,6 +624,7 @@ fn cmd_run(opts: &Opts) -> Result<(), String> {
     o.insert("threads".into(), cfg.rtm.threads.to_string());
     o.insert("engine".into(), cfg.rtm.engine.name().to_string());
     o.insert("time_block".into(), cfg.rtm.time_block.to_string());
+    o.insert("halo_codec".into(), cfg.rtm.halo_codec.name().to_string());
     if let Some(p) = cfg.tune.plan {
         o.insert("plan".into(), p.to_string());
     }
@@ -616,6 +640,7 @@ fn cmd_run(opts: &Opts) -> Result<(), String> {
     o.insert("steps".into(), cfg.rtm.steps.to_string());
     o.insert("threads".into(), cfg.rtm.threads.to_string());
     o.insert("engine".into(), cfg.rtm.engine.name().to_string());
+    o.insert("halo_codec".into(), cfg.rtm.halo_codec.name().to_string());
     o.insert("shots".into(), cfg.survey.shots.to_string());
     o.insert("shards".into(), cfg.survey.shards.to_string());
     o.insert("queue_capacity".into(), cfg.survey.queue_capacity.to_string());

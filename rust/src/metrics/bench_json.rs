@@ -19,12 +19,17 @@
 //! sweep and RTM row — the active [`TunePlan`](crate::stencil::TunePlan)
 //! in its `Display` form — so each measurement records the exact
 //! (engine, geometry, depth, fan-out) it ran under and a tuner change
-//! shows up as a row diff, not a silent re-baselining.  v6 (this PR)
-//! adds `tile`/`wf` to every sweep row — the wavefront (z, t) tile
+//! shows up as a row diff, not a silent re-baselining.  v6 added
+//! `tile`/`wf` to every sweep row — the wavefront (z, t) tile
 //! geometry ([`coordinator::wavefront`](crate::coordinator::wavefront))
 //! the row stepped under, `0`/`1` for classic level-at-a-time stepping
 //! — so the temporal-tiling trajectory is diffable per geometry
-//! (`scripts/bench_diff.py` keys sweep rows on them).
+//! (`scripts/bench_diff.py` keys sweep rows on them).  v7 (this PR)
+//! adds `halo_codec`/`transport_bytes` to every sweep and RTM row —
+//! the halo wire codec ([`HaloCodec`](crate::grid::halo::HaloCodec))
+//! the row exchanged under and the bytes it put on the simulated wire
+//! (0 for single-rank/periodic workloads that never exchange) — so a
+//! compression-ratio change is a visible row diff.
 
 /// Schema tag carried in the document; bump on breaking field changes.
 /// v1 → v2: added the `rtm_entries` array.
@@ -32,7 +37,8 @@
 /// v3 → v4: added the `survey_entries` array (shot-service surveys).
 /// v4 → v5: added `plan` (active `TunePlan` string) to sweep/RTM rows.
 /// v5 → v6: added `tile`/`wf` (wavefront tile geometry) to sweep rows.
-pub const SCHEMA: &str = "mmstencil.bench_engines.v6";
+/// v6 → v7: added `halo_codec`/`transport_bytes` to sweep/RTM rows.
+pub const SCHEMA: &str = "mmstencil.bench_engines.v7";
 
 /// One engine × sweep-workload measurement.
 #[derive(Clone, Debug)]
@@ -58,6 +64,12 @@ pub struct EngineBench {
     /// Wavefront band depth: sub-step levels advanced per dispatch
     /// barrier (1 when untiled).  Added in schema v6.
     pub wf: usize,
+    /// Halo wire codec name (`HaloCodec::name`): "f32" | "bf16" |
+    /// "f16".  Added in schema v7.
+    pub halo_codec: String,
+    /// Bytes the workload put on the simulated wire (halo exchanges);
+    /// 0 for periodic/single-rank rows.  Added in schema v7.
+    pub transport_bytes: u64,
     /// Median throughput in million stencil outputs per second.
     pub mcells_per_s: f64,
     /// Heap allocations observed during one post-warm-up sweep
@@ -88,6 +100,12 @@ pub struct RtmBench {
     /// `step_with`, > 1 = a `step_k_with` fused call (throughput counts
     /// all `time_block · n³` updates).
     pub time_block: usize,
+    /// Halo wire codec name the shot's subdomain shells were squeezed
+    /// through ("f32" = lossless no-op).  Added in schema v7.
+    pub halo_codec: String,
+    /// Bytes on the simulated wire; 0 for single-rank shots.  Added in
+    /// schema v7.
+    pub transport_bytes: u64,
     /// Median cell-update throughput of one step, in millions/s.
     pub mcells_per_s: f64,
     /// Heap allocations during one post-warm-up step.
@@ -155,6 +173,7 @@ pub fn render(
         s.push_str(&format!(
             "    {{\"engine\": \"{}\", \"pattern\": \"{}\", \"radius\": {}, \"n\": {}, \
              \"threads\": {}, \"time_block\": {}, \"tile\": {}, \"wf\": {}, \
+             \"halo_codec\": \"{}\", \"transport_bytes\": {}, \
              \"mcells_per_s\": {:.3}, \
              \"allocs_per_sweep\": {}, \"arena_grows_per_sweep\": {}, \"plan\": \"{}\"}}{}\n",
             esc(&e.engine),
@@ -165,6 +184,8 @@ pub fn render(
             e.time_block,
             e.tile,
             e.wf,
+            esc(&e.halo_codec),
+            e.transport_bytes,
             finite(e.mcells_per_s),
             e.allocs_per_sweep,
             e.arena_grows_per_sweep,
@@ -177,13 +198,16 @@ pub fn render(
     for (i, e) in rtm_entries.iter().enumerate() {
         s.push_str(&format!(
             "    {{\"engine\": \"{}\", \"medium\": \"{}\", \"n\": {}, \"threads\": {}, \
-             \"time_block\": {}, \"mcells_per_s\": {:.3}, \"allocs_per_step\": {}, \
+             \"time_block\": {}, \"halo_codec\": \"{}\", \"transport_bytes\": {}, \
+             \"mcells_per_s\": {:.3}, \"allocs_per_step\": {}, \
              \"arena_grows_per_step\": {}, \"plan\": \"{}\"}}{}\n",
             esc(&e.engine),
             esc(&e.medium),
             e.n,
             e.threads,
             e.time_block,
+            esc(&e.halo_codec),
+            e.transport_bytes,
             finite(e.mcells_per_s),
             e.allocs_per_step,
             e.arena_grows_per_step,
@@ -283,7 +307,13 @@ pub fn validate(s: &str) -> Result<(usize, usize, usize), String> {
             return Err(format!("key {k} count mismatch (expected {surveys})"));
         }
     }
-    for k in ["\"time_block\":", "\"mcells_per_s\":", "\"plan\":"] {
+    for k in [
+        "\"time_block\":",
+        "\"halo_codec\":",
+        "\"transport_bytes\":",
+        "\"mcells_per_s\":",
+        "\"plan\":",
+    ] {
         if s.matches(k).count() != sweeps + rtms {
             return Err(format!("key {k} count mismatch (expected {})", sweeps + rtms));
         }
@@ -314,10 +344,12 @@ mod tests {
                 time_block: 1,
                 tile: 0,
                 wf: 1,
+                halo_codec: "f32".into(),
+                transport_bytes: 0,
                 mcells_per_s: 123.456,
                 allocs_per_sweep: 2,
                 arena_grows_per_sweep: 0,
-                plan: "engine=simd vl=16 vz=4 tb=1 threads=1 tile=0 wf=1".into(),
+                plan: "engine=simd vl=16 vz=4 tb=1 threads=1 tile=0 wf=1 halo=f32".into(),
             },
             EngineBench {
                 engine: "matrix_unit_par".into(),
@@ -328,10 +360,13 @@ mod tests {
                 time_block: 4,
                 tile: 16,
                 wf: 2,
+                halo_codec: "bf16".into(),
+                transport_bytes: 1_048_576,
                 mcells_per_s: 77.0,
                 allocs_per_sweep: 31,
                 arena_grows_per_sweep: 0,
-                plan: "engine=matrix_unit vl=16 vz=4 tb=4 threads=8 tile=16 wf=2".into(),
+                plan: "engine=matrix_unit vl=16 vz=4 tb=4 threads=8 tile=16 wf=2 halo=bf16"
+                    .into(),
             },
         ]
     }
@@ -343,10 +378,12 @@ mod tests {
             n: 96,
             threads: 8,
             time_block: 1,
+            halo_codec: "f32".into(),
+            transport_bytes: 0,
             mcells_per_s: 450.5,
             allocs_per_step: 12,
             arena_grows_per_step: 0,
-            plan: "engine=matrix_unit vl=16 vz=4 tb=1 threads=8 tile=0 wf=1".into(),
+            plan: "engine=matrix_unit vl=16 vz=4 tb=1 threads=8 tile=0 wf=1 halo=f32".into(),
         }]
     }
 
@@ -369,7 +406,7 @@ mod tests {
     fn render_validates() {
         let doc = render(&sample(), &rtm_sample(), &survey_sample());
         assert_eq!(validate(&doc), Ok((2, 1, 1)));
-        assert!(doc.contains("\"schema\": \"mmstencil.bench_engines.v6\""));
+        assert!(doc.contains("\"schema\": \"mmstencil.bench_engines.v7\""));
         assert!(doc.contains("\"mcells_per_s\": 123.456"));
         assert!(doc.contains("\"medium\": \"vti\""));
         assert!(doc.contains("\"allocs_per_step\": 12"));
@@ -377,10 +414,14 @@ mod tests {
         // v6: sweep rows carry the wavefront tile geometry
         assert!(doc.contains("\"tile\": 0, \"wf\": 1"));
         assert!(doc.contains("\"tile\": 16, \"wf\": 2"));
+        // v7: sweep + RTM rows carry the wire codec and its byte count
+        assert!(doc.contains("\"halo_codec\": \"bf16\", \"transport_bytes\": 1048576"));
+        assert!(doc.contains("\"halo_codec\": \"f32\", \"transport_bytes\": 0"));
         assert!(doc.contains("\"checkpoint\": \"boundary_saving\""));
         assert!(doc.contains("\"shots_per_hour\": 1234.500"));
-        assert!(doc
-            .contains("\"plan\": \"engine=matrix_unit vl=16 vz=4 tb=4 threads=8 tile=16 wf=2\""));
+        assert!(doc.contains(
+            "\"plan\": \"engine=matrix_unit vl=16 vz=4 tb=4 threads=8 tile=16 wf=2 halo=bf16\""
+        ));
         // every recorded plan string round-trips through the parser
         use crate::stencil::TunePlan;
         for row in doc.lines().filter(|l| l.contains("\"plan\":")) {
@@ -398,10 +439,12 @@ mod tests {
     #[test]
     fn tampered_documents_fail() {
         let doc = render(&sample(), &rtm_sample(), &survey_sample());
-        assert!(validate(&doc.replace("bench_engines.v6", "v5")).is_err());
+        assert!(validate(&doc.replace("bench_engines.v7", "v6")).is_err());
         assert!(validate(&doc.replacen("\"plan\":", "\"p\":", 1)).is_err());
         assert!(validate(&doc.replace("\"radius\":", "\"r\":")).is_err());
         assert!(validate(&doc.replace("\"tile\":", "\"t\":")).is_err());
+        assert!(validate(&doc.replacen("\"halo_codec\":", "\"codec\":", 1)).is_err());
+        assert!(validate(&doc.replacen("\"transport_bytes\":", "\"bytes\":", 1)).is_err());
         assert!(validate(&doc.replacen("\"wf\":", "\"w\":", 1)).is_err());
         assert!(validate(&doc.replace("\"allocs_per_step\":", "\"a\":")).is_err());
         assert!(validate(&doc.replace("\"rtm_entries\":", "\"rtm\":")).is_err());

@@ -20,6 +20,7 @@
 
 use super::image::Image;
 use super::service;
+use crate::grid::halo::HaloCodec;
 use crate::simulator::roofline::{self, Engine as SimEngine, MemKind};
 use crate::simulator::Platform;
 use crate::stencil::{Engine, EngineKind, StencilSpec, TunePlan};
@@ -74,6 +75,14 @@ pub struct RtmConfig {
     /// blocking" (DESIGN.md §11).  Boundary-free callers pass the full
     /// value to [`vti::step_k_with`]/[`tti::step_k_with`] instead.
     pub time_block: usize,
+    /// Wire codec the shot services apply to the radius-4 boundary
+    /// shells of the propagating wavefields each step (`[runtime]
+    /// halo_codec`, CLI `--halo_codec`) — the single-rank analogue of
+    /// the multirank halo compression: the shell is what a decomposed
+    /// run would put on the wire.  [`HaloCodec::F32`] (the default) is
+    /// a no-op, keeping shots bitwise; the 16-bit codecs bound the
+    /// injected error per `rust/tests/precision.rs`.
+    pub halo_codec: HaloCodec,
 }
 
 impl RtmConfig {
@@ -94,6 +103,7 @@ impl RtmConfig {
             receiver_z: 2,
             engine: EngineKind::Simd,
             time_block: 1,
+            halo_codec: HaloCodec::F32,
         }
     }
 
@@ -128,6 +138,7 @@ impl RtmConfig {
         self.engine = plan.engine;
         self.threads = plan.threads.max(1);
         self.time_block = plan.time_block.max(1);
+        self.halo_codec = plan.halo;
         self
     }
 
@@ -607,11 +618,13 @@ mod tests {
 
     #[test]
     fn plan_overlay_selects_engine_threads_and_depth() {
-        let plan = TunePlan::parse("engine=matrix_gemm vl=16 vz=4 tb=4 threads=8").unwrap();
+        let plan =
+            TunePlan::parse("engine=matrix_gemm vl=16 vz=4 tb=4 threads=8 halo=bf16").unwrap();
         let cfg = RtmConfig::small(Medium::Vti).with_plan(&plan);
         assert_eq!(cfg.engine, EngineKind::MatrixGemm);
         assert_eq!(cfg.threads, 8);
         assert_eq!(cfg.time_block, 4);
+        assert_eq!(cfg.halo_codec, HaloCodec::Bf16);
         // imaging shots still clamp the fused depth (§III-B)
         assert_eq!(cfg.shot_time_block(), 1);
         let eng = cfg.propagation_engine();

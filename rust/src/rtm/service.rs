@@ -57,6 +57,8 @@ use super::vti::{self, VtiScratch, VtiState};
 use super::wavelet;
 use crate::anyhow;
 use crate::coordinator::runtime::{Runtime, RuntimeConfig};
+use crate::grid::halo::HaloCodec;
+use crate::grid::shell;
 use crate::grid::Grid3;
 use crate::simulator::roofline::Engine as SimEngine;
 use crate::simulator::Platform;
@@ -1034,6 +1036,25 @@ fn inject_plane(g: &mut Grid3, z: usize, plane: &[f32]) {
     }
 }
 
+/// Quantize the `r`-deep boundary shell of `g` through `codec` — the
+/// single-rank image of the multirank halo compression: the shell is
+/// exactly what a decomposed run would put on the wire each step.
+/// [`HaloCodec::F32`] is a no-op, so default shots stay bitwise.
+fn quantize_shell(g: &mut Grid3, r: usize, codec: HaloCodec) {
+    if codec == HaloCodec::F32 {
+        return;
+    }
+    let (nz, nx, ny) = g.shape();
+    for [z0, z1, x0, x1, y0, y1] in shell::boundary_boxes(nz, nx, ny, r) {
+        for z in z0..z1 {
+            for x in x0..x1 {
+                let i = g.idx(z, x, y0);
+                codec.quantize(&mut g.as_mut_slice()[i..i + (y1 - y0)]);
+            }
+        }
+    }
+}
+
 enum PropKind {
     Vti { m: Arc<VtiMedia>, w2: Vec<f32>, st: VtiState, sc: VtiScratch },
     Tti {
@@ -1052,6 +1073,7 @@ struct Prop {
     eng: Engine,
     fuse: usize,
     sponge: Sponge,
+    codec: HaloCodec,
     kind: PropKind,
 }
 
@@ -1079,11 +1101,16 @@ impl Prop {
             // per-step sponge + recording clamp the depth to 1 (§III-B)
             fuse: cfg.shot_time_block(),
             sponge: Sponge::new(nz, nx, ny, cfg.sponge_width, 0.0053),
+            codec: cfg.halo_codec,
             kind,
         }
     }
 
     fn step_and_sponge(&mut self) {
+        // after the sponge, run the propagating fields' radius-4
+        // boundary shells through the wire codec — what a decomposed
+        // run would have exchanged this step (replay uses the same
+        // Prop, so recompute-based checkpointing stays bitwise)
         match &mut self.kind {
             PropKind::Vti { m, w2, st, sc } => {
                 vti::step_k_with(st, m, w2, &self.eng, sc, self.fuse);
@@ -1091,6 +1118,8 @@ impl Prop {
                 self.sponge.apply(&mut st.sv);
                 self.sponge.apply(&mut st.sh_prev);
                 self.sponge.apply(&mut st.sv_prev);
+                quantize_shell(&mut st.sh, 4, self.codec);
+                quantize_shell(&mut st.sv, 4, self.codec);
             }
             PropKind::Tti { m, trig, w2, w1, st, sc } => {
                 tti::step_k_with(st, m, trig, w2, w1, &self.eng, sc, self.fuse);
@@ -1098,6 +1127,8 @@ impl Prop {
                 self.sponge.apply(&mut st.q);
                 self.sponge.apply(&mut st.p_prev);
                 self.sponge.apply(&mut st.q_prev);
+                quantize_shell(&mut st.p, 4, self.codec);
+                quantize_shell(&mut st.q, 4, self.codec);
             }
         }
     }
@@ -1393,6 +1424,34 @@ mod tests {
     }
 
     #[test]
+    fn close_wakes_a_blocked_push_with_a_panic_not_a_deadlock() {
+        // a submitter blocked on a full lane must not sleep forever
+        // when the queue shuts down: close() notifies not_full too, the
+        // waiter re-checks the closed flag and surfaces the driver bug
+        // as the same "push on a closed queue" panic an un-blocked push
+        // would have hit — never a deadlock, never a silent enqueue
+        let q: Arc<ShardedQueue<usize>> = Arc::new(ShardedQueue::new(1, 1));
+        q.push(0, 0);
+        let qc = q.clone();
+        let producer = std::thread::spawn(move || {
+            qc.push(0, 1); // must block: lane at capacity
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        let payload = producer.join().unwrap_err();
+        let msg = payload
+            .downcast_ref::<&'static str>()
+            .map(|s| s.to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("push on a closed queue"), "{msg:?}");
+        // the blocked item was never enqueued: the lane drains exactly
+        // its pre-close contents
+        assert_eq!(q.pop(0).unwrap().item, 0);
+        assert!(q.pop(0).is_none());
+    }
+
+    #[test]
     fn empty_shard_steals_from_a_neighbours_tail() {
         let q: ShardedQueue<usize> = ShardedQueue::new(2, 8);
         q.push(0, 10);
@@ -1467,6 +1526,27 @@ mod tests {
             assert_eq!(img_full.illum.data, img_sparse.illum.data, "{medium:?}");
             assert_eq!(img_full.correlations, img_sparse.correlations, "{medium:?}");
         }
+    }
+
+    #[test]
+    fn halo_codec_shots_stay_stable_and_f32_is_a_no_op() {
+        // the error budgets proper live in rust/tests/precision.rs;
+        // this pins the Prop plumbing: explicit F32 is bitwise the
+        // default, and a 16-bit codec genuinely perturbs the shell
+        let p = Platform::paper();
+        let base = tiny_cfg(Medium::Vti);
+        let (img_def, rep_def) = driver::run_shot(&base, &p);
+        let mut c = base.clone();
+        c.halo_codec = HaloCodec::F32;
+        let (img_f32, rep_f32) = driver::run_shot(&c, &p);
+        assert_eq!(rep_def.energy_trace, rep_f32.energy_trace);
+        assert_eq!(img_def.img.data, img_f32.img.data);
+        let mut c = base;
+        c.halo_codec = HaloCodec::Bf16;
+        let (img_bf, rep_bf) = driver::run_shot(&c, &p);
+        assert!(rep_bf.energy_trace.iter().all(|e| e.is_finite()));
+        assert!(rep_bf.image_energy > 0.0);
+        assert_ne!(img_bf.img.data, img_def.img.data, "bf16 shells must touch the shot");
     }
 
     // ----- reduction -------------------------------------------------------

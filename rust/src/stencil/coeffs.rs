@@ -1,6 +1,126 @@
 //! Finite-difference coefficient tables — exact mirror of
 //! `python/compile/coeffs.py` (cross-checked through the AOT artifacts in
-//! `rust/tests/runtime_artifacts.rs`).
+//! `rust/tests/runtime_artifacts.rs`) — plus [`CoeffTable`], the
+//! user-supplied table behind `custom:` stencil specs.
+
+use super::Pattern;
+
+/// A user-supplied stencil coefficient table: one `(2r+1)` band reused
+/// on every axis (star) or a dense `(2r+1)^ndim` row-major tensor
+/// (box), for any radius ≥ 1.
+///
+/// Built either directly ([`CoeffTable::star`] / [`CoeffTable::boxed`])
+/// or from the CLI/config grammar
+/// `custom:<star|box>[:<2d|3d>]:r<radius>:<w0,w1,…|file=path>`
+/// ([`CoeffTable::parse`], routed through
+/// [`StencilSpec::parse`](super::StencilSpec::parse)).  Errors are
+/// plain strings naming the rejected segment; the spec layer wraps
+/// them into the crate-wide
+/// [`ParseKindError`](crate::util::ParseKindError) shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CoeffTable {
+    /// Star (per-axis band) or Box (dense tensor).
+    pub pattern: Pattern,
+    /// Grid dimensionality: 2 or 3.
+    pub ndim: usize,
+    /// Stencil radius (halo width per axis).
+    pub radius: usize,
+    /// Star: the `2r+1` band, centre included at index `r`.
+    /// Box: `(2r+1)^ndim` dense taps, row-major over `(x,y)` / `(z,x,y)`.
+    pub taps: Vec<f32>,
+}
+
+impl CoeffTable {
+    /// A star table: `band` (len `2r+1`, centre at index `radius`) is
+    /// applied along every axis; the centre tap is counted once per
+    /// axis, exactly like [`star_weights`].
+    pub fn star(ndim: usize, radius: usize, band: Vec<f32>) -> Result<Self, String> {
+        check_shape(ndim, radius)?;
+        let want = 2 * radius + 1;
+        if band.len() != want {
+            return Err(format!("star band needs {want} taps, got {}", band.len()));
+        }
+        check_finite(&band)?;
+        Ok(Self { pattern: Pattern::Star, ndim, radius, taps: band })
+    }
+
+    /// A dense box table: `taps` is the full `(2r+1)^ndim` row-major
+    /// weight tensor.
+    pub fn boxed(ndim: usize, radius: usize, taps: Vec<f32>) -> Result<Self, String> {
+        check_shape(ndim, radius)?;
+        let want = (2 * radius + 1).pow(ndim as u32);
+        if taps.len() != want {
+            return Err(format!("box tensor needs {want} taps, got {}", taps.len()));
+        }
+        check_finite(&taps)?;
+        Ok(Self { pattern: Pattern::Box, ndim, radius, taps })
+    }
+
+    /// Parse the grammar *after* the `custom:` prefix:
+    /// `<star|box>[:<2d|3d>]:r<radius>:<w0,w1,…|file=path>` (ndim
+    /// defaults to 3d).  Inline taps are comma-separated; a
+    /// `file=path` tail reads whitespace/comma-separated floats from
+    /// the file.  The error string names the segment that failed.
+    pub fn parse(table: &str) -> Result<Self, String> {
+        let mut parts = table.split(':');
+        let pattern = match parts.next().unwrap_or("") {
+            "star" => Pattern::Star,
+            "box" => Pattern::Box,
+            other => return Err(format!("pattern must be star or box, got {other:?}")),
+        };
+        let mut seg = parts.next().ok_or("missing r<radius> segment")?;
+        let ndim = match seg {
+            "2d" | "3d" => {
+                let nd = if seg == "2d" { 2 } else { 3 };
+                seg = parts.next().ok_or("missing r<radius> segment")?;
+                nd
+            }
+            _ => 3,
+        };
+        let radius: usize = seg
+            .strip_prefix('r')
+            .and_then(|d| d.parse().ok())
+            .filter(|&r| r >= 1)
+            .ok_or_else(|| format!("bad radius segment {seg:?} (want r1, r2, …)"))?;
+        // the tail is everything after the radius — re-joined so that
+        // file paths containing ':' survive
+        let tail = parts.collect::<Vec<_>>().join(":");
+        if tail.is_empty() {
+            return Err("missing taps segment (w0,w1,… or file=path)".into());
+        }
+        let text = match tail.strip_prefix("file=") {
+            Some(path) => std::fs::read_to_string(path)
+                .map_err(|e| format!("coefficient file {path:?}: {e}"))?,
+            None => tail,
+        };
+        let taps = text
+            .split([',', ' ', '\t', '\n', '\r'])
+            .filter(|t| !t.is_empty())
+            .map(|t| t.parse::<f32>().map_err(|_| format!("bad coefficient {t:?}")))
+            .collect::<Result<Vec<f32>, String>>()?;
+        match pattern {
+            Pattern::Star => Self::star(ndim, radius, taps),
+            Pattern::Box => Self::boxed(ndim, radius, taps),
+        }
+    }
+}
+
+fn check_shape(ndim: usize, radius: usize) -> Result<(), String> {
+    if ndim != 2 && ndim != 3 {
+        return Err(format!("ndim must be 2 or 3, got {ndim}"));
+    }
+    if radius == 0 {
+        return Err("radius must be ≥ 1".into());
+    }
+    Ok(())
+}
+
+fn check_finite(taps: &[f32]) -> Result<(), String> {
+    match taps.iter().find(|v| !v.is_finite()) {
+        Some(v) => Err(format!("non-finite coefficient {v}")),
+        None => Ok(()),
+    }
+}
 
 /// Second-derivative central coefficients (order 2r), index k+r.
 pub fn second_deriv(radius: usize) -> Vec<f32> {
@@ -131,5 +251,55 @@ mod tests {
         assert!((c - 3.0 * second_deriv(4)[4]).abs() < 1e-6);
         assert_eq!(axes.len(), 3);
         assert_eq!(axes[0][4], 0.0);
+    }
+
+    #[test]
+    fn coeff_table_grammar_parses_inline_star_and_box() {
+        let t = CoeffTable::parse("star:r1:1,-2,1").unwrap();
+        assert_eq!(
+            t,
+            CoeffTable {
+                pattern: Pattern::Star,
+                ndim: 3,
+                radius: 1,
+                taps: vec![1.0, -2.0, 1.0]
+            }
+        );
+        // explicit 2d, r1 box: 9 taps
+        let t = CoeffTable::parse("box:2d:r1:1,2,1,2,4,2,1,2,1").unwrap();
+        assert_eq!(t.pattern, Pattern::Box);
+        assert_eq!((t.ndim, t.radius), (2, 1));
+        assert_eq!(t.taps.len(), 9);
+    }
+
+    #[test]
+    fn coeff_table_reads_whitespace_separated_files() {
+        let dir = std::env::temp_dir().join("mmstencil_coeff_table_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("band.txt");
+        std::fs::write(&path, "0.1 -0.2\n0.0\t-0.2 0.1\n").unwrap();
+        let t = CoeffTable::parse(&format!("star:r2:file={}", path.display())).unwrap();
+        assert_eq!(t.taps, vec![0.1, -0.2, 0.0, -0.2, 0.1]);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn coeff_table_rejects_malformed_specs_with_the_failing_segment() {
+        for (bad, needle) in [
+            ("ring:r2:1,2,3,4,5", "star or box"),
+            ("star:1,-2,1", "radius"),
+            ("star:r0:1", "radius"),
+            ("star:rx:1", "radius"),
+            ("star:4d:r1:1,-2,1", "radius"), // unknown dim token reads as a bad radius
+            ("star:r1", "missing taps"),
+            ("star:r2:1,-2,1", "5 taps, got 3"),
+            ("box:2d:r1:1,2,3", "9 taps, got 3"),
+            ("star:r1:1,two,1", "bad coefficient \"two\""),
+            ("star:r1:1,inf,1", "non-finite"),
+            ("star:r1:file=/definitely/not/here.txt", "coefficient file"),
+        ] {
+            let err = CoeffTable::parse(bad).unwrap_err();
+            assert!(err.contains(needle), "{bad:?}: {err}");
+        }
     }
 }

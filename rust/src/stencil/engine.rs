@@ -141,36 +141,6 @@ impl Engine {
         Self { kind: plan.engine, threads: plan.threads.max(1), dims: plan.dims }
     }
 
-    /// The crate-wide default of the `threads`-keyed compatibility
-    /// entry points: the simd engine with the given parallelism hint.
-    #[deprecated(
-        since = "0.3.0",
-        note = "use `Engine::from_plan(&TunePlan::simd(threads))` — knobs travel in plans now"
-    )]
-    pub fn default_simd(threads: usize) -> Self {
-        Self::from_plan(&TunePlan::simd(threads))
-    }
-
-    /// Set the parallelism hint (clamped to ≥ 1).
-    #[deprecated(
-        since = "0.3.0",
-        note = "build a `TunePlan` and use `Engine::from_plan` — knobs travel in plans now"
-    )]
-    pub fn with_threads(mut self, threads: usize) -> Self {
-        self.threads = threads.max(1);
-        self
-    }
-
-    /// Override the matrix-unit block geometry / z-slab granularity.
-    #[deprecated(
-        since = "0.3.0",
-        note = "build a `TunePlan` and use `Engine::from_plan` — knobs travel in plans now"
-    )]
-    pub fn with_dims(mut self, dims: BlockDims) -> Self {
-        self.dims = dims;
-        self
-    }
-
     /// Fan `f` over fixed-size z-slab views of `out` (serial when
     /// `threads <= 1`; same partition either way).
     fn fan_zslabs<F>(&self, out: &mut Grid3, f: F)
@@ -429,16 +399,21 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_knob_shims_match_the_plan_surface() {
-        // one-release compatibility contract: the knob chain mirrors the
-        // plan-built engine exactly until the shims are removed
-        assert_eq!(Engine::new(EngineKind::Simd).with_threads(0).threads, 1);
-        let shim = Engine::default_simd(3);
+    fn plan_surface_covers_the_removed_knob_chain() {
+        // the 0.3.0 knob shims (default_simd / with_threads / with_dims)
+        // are gone after their one-release deprecation window; the plan
+        // surface carries every knob they covered
         let plan = Engine::from_plan(&TunePlan::simd(3));
-        assert_eq!(shim.kind, plan.kind);
-        assert_eq!(shim.threads, plan.threads);
-        assert_eq!(shim.dims, plan.dims);
+        assert_eq!(plan.kind, EngineKind::Simd);
+        assert_eq!(plan.threads, 3);
+        assert_eq!(plan.dims, TunePlan::simd(3).dims);
+        let custom = Engine::from_plan(&TunePlan {
+            engine: EngineKind::MatrixUnit,
+            threads: 0, // clamps, like with_threads(0) did
+            ..TunePlan::simd(1)
+        });
+        assert_eq!(custom.kind, EngineKind::MatrixUnit);
+        assert_eq!(custom.threads, 1);
     }
 
     #[test]

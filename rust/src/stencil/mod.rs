@@ -40,7 +40,7 @@ pub mod naive;
 pub mod simd;
 pub mod tune;
 
-pub use coeffs::{box_weights, first_deriv, second_deriv, star_weights};
+pub use coeffs::{box_weights, first_deriv, second_deriv, star_weights, CoeffTable};
 pub use engine::{Engine, EngineKind};
 pub use tune::TunePlan;
 
@@ -124,18 +124,72 @@ impl StencilSpec {
         }
     }
 
+    /// A kernel from a user-supplied [`CoeffTable`] (the `custom:`
+    /// spec family).  Star tables reuse the band on every axis with
+    /// the centre counted once per axis — the same convention as
+    /// [`star_weights`]; box tables are the dense tensor verbatim.
+    /// Engines treat the result exactly like a Table-I kernel: same
+    /// `coeffs` plumbing, same oracle, same bitwise-stability
+    /// contract.
+    pub fn from_table(table: &CoeffTable) -> Self {
+        match table.pattern {
+            Pattern::Star => {
+                let mut axis = table.taps.clone();
+                let center = table.ndim as f32 * axis[table.radius];
+                axis[table.radius] = 0.0;
+                Self {
+                    pattern: Pattern::Star,
+                    ndim: table.ndim,
+                    radius: table.radius,
+                    star_center: center,
+                    star_axes: vec![axis; table.ndim],
+                    box_w: Vec::new(),
+                }
+            }
+            Pattern::Box => Self {
+                pattern: Pattern::Box,
+                ndim: table.ndim,
+                radius: table.radius,
+                star_center: 0.0,
+                star_axes: Vec::new(),
+                box_w: table.taps.clone(),
+            },
+        }
+    }
+
     /// The eight Table-I benchmark kernel names, in suite order.
     pub const NAMES: [&'static str; 8] = [
         "2DStarR2", "2DStarR4", "2DBoxR2", "2DBoxR3",
         "3DStarR2", "3DStarR4", "3DBoxR1", "3DBoxR2",
     ];
 
-    /// Benchmark kernel by Table-I name (e.g. "3DStarR4").
+    /// The `custom:` table grammar, as shown in parse errors.
+    pub const CUSTOM_GRAMMAR: [&'static str; 1] =
+        ["custom:<star|box>[:<2d|3d>]:r<radius>:<w0,w1,…|file=path>"];
+
+    /// Kernel by Table-I name (e.g. "3DStarR4") or by a `custom:`
+    /// coefficient-table spec (e.g. `custom:star:r3:file=coeffs.txt`
+    /// or `custom:box:2d:r1:1,2,1,2,4,2,1,2,1` — see
+    /// [`CoeffTable::parse`] for the grammar).
     ///
     /// The error names the rejected string and the full Table-I list,
     /// matching [`EngineKind::parse`](crate::stencil::engine::EngineKind::parse)
-    /// so config/CLI messages read identically across selectors.
+    /// so config/CLI messages read identically across selectors; a
+    /// malformed `custom:` spec instead reports the failing segment
+    /// and the grammar.
     pub fn parse(name: &str) -> Result<Self, crate::util::ParseKindError> {
+        if let Some(table) = name.strip_prefix("custom:") {
+            return CoeffTable::parse(table)
+                .map(|t| Self::from_table(&t))
+                .map_err(|detail| {
+                    crate::util::ParseKindError::new(
+                        "custom stencil table",
+                        name,
+                        &Self::CUSTOM_GRAMMAR,
+                    )
+                    .with_detail(detail)
+                });
+        }
         Ok(match name {
             "2DStarR2" => Self::star2d(2),
             "2DStarR4" => Self::star2d(4),
@@ -230,5 +284,44 @@ mod tests {
     #[test]
     fn suite_has_eight_kernels() {
         assert_eq!(StencilSpec::benchmark_suite().len(), 8);
+    }
+
+    #[test]
+    fn custom_star_matches_the_star_weights_convention() {
+        // the benchmark band fed back through custom: reproduces 3DStarR2
+        let band: Vec<String> =
+            coeffs::second_deriv(2).iter().map(|v| format!("{v:.9}")).collect();
+        let spec = StencilSpec::parse(&format!("custom:star:r2:{}", band.join(","))).unwrap();
+        let want = StencilSpec::star3d(2);
+        assert_eq!(spec.pattern, Pattern::Star);
+        assert_eq!((spec.ndim, spec.radius, spec.points()), (3, 2, 13));
+        assert!((spec.star_center - want.star_center).abs() < 1e-6);
+        assert_eq!(spec.star_axes.len(), 3);
+        assert_eq!(spec.star_axes[0][2], 0.0);
+        for (a, b) in spec.star_axes[0].iter().zip(&want.star_axes[0]) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn custom_box_is_the_dense_tensor_verbatim() {
+        let spec = StencilSpec::parse("custom:box:2d:r1:1,2,1,2,4,2,1,2,1").unwrap();
+        assert_eq!(spec.pattern, Pattern::Box);
+        assert_eq!((spec.ndim, spec.radius, spec.points()), (2, 1, 9));
+        assert_eq!(spec.box_w, vec![1.0, 2.0, 1.0, 2.0, 4.0, 2.0, 1.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn malformed_custom_specs_report_segment_and_grammar() {
+        let err = StencilSpec::parse("custom:star:r2:1,-2,1").unwrap_err();
+        assert_eq!(err.what, "custom stencil table");
+        assert_eq!(err.name, "custom:star:r2:1,-2,1");
+        let msg = err.to_string();
+        assert!(msg.contains("5 taps, got 3"), "{msg}");
+        assert!(msg.contains("custom:<star|box>"), "{msg}");
+        // a bare "custom:" is a grammar error, not an unknown kernel
+        let err = StencilSpec::parse("custom:").unwrap_err();
+        assert_eq!(err.what, "custom stencil table");
+        assert!(err.detail.is_some());
     }
 }

@@ -13,14 +13,18 @@
 //! string:
 //!
 //! ```text
-//! engine=matrix_gemm vl=16 vz=4 tb=1 threads=4 tile=16 wf=2
+//! engine=matrix_gemm vl=16 vz=4 tb=1 threads=4 tile=16 wf=2 halo=f32
 //! ```
 //!
 //! The `tile=`/`wf=` keys (PR 8) select the in-rank (z, t) wavefront
 //! geometry of the fused sub-steps (`coordinator::wavefront`); they are
 //! **optional on parse** — plans serialized before they existed still
 //! parse, defaulting to the classic flat path (`tile=0 wf=1`) — and
-//! always present in the `Display` form.
+//! always present in the `Display` form.  The `halo=` key (PR 9)
+//! selects the halo wire codec
+//! ([`HaloCodec`](crate::grid::halo::HaloCodec)) of the multirank
+//! exchanges; it is likewise optional on parse (defaulting to the
+//! bitwise `f32` transport) and always serialized.
 //!
 //! [`tune`] is the startup search: it scores every candidate
 //! (engine, BlockDims, time_block, threads) combination for one
@@ -44,6 +48,7 @@
 use super::engine::EngineKind;
 use super::matrix_unit::{self, BlockDims, Counts};
 use super::{gemm, Pattern, StencilSpec};
+use crate::grid::halo::HaloCodec;
 use crate::grid::Grid3;
 use crate::simulator::roofline::{self, MemKind};
 use crate::simulator::soc::Platform;
@@ -74,6 +79,11 @@ pub struct TunePlan {
     /// barrier when `tile > 0`.  Optional in the string form (defaults
     /// to 1).
     pub wf: usize,
+    /// Halo wire codec of the multirank exchanges (`f32` | `bf16` |
+    /// `f16`).  Consumed by the drivers, not by `Engine` itself.
+    /// Optional in the string form (defaults to the bitwise `f32`
+    /// transport), so plans serialized before PR 9 still parse.
+    pub halo: HaloCodec,
 }
 
 impl TunePlan {
@@ -96,6 +106,7 @@ impl TunePlan {
             threads,
             tile: 0,
             wf: 1,
+            halo: HaloCodec::F32,
         }
     }
 
@@ -104,10 +115,13 @@ impl TunePlan {
     /// `engine=<kind> vl=<n> vz=<n> tb=<n> threads=<n>`.  The wavefront
     /// keys `tile=<n> wf=<n>` are **optional** (defaulting to `0` and
     /// `1`) so plans serialized before PR 8 — including cached
-    /// `runtime::PlanCache` manifests — still parse.
+    /// `runtime::PlanCache` manifests — still parse, and the halo-codec
+    /// key `halo=<codec>` is likewise optional (defaulting to the
+    /// bitwise `f32` transport) for pre-PR-9 plans.
     pub fn parse(s: &str) -> Result<Self> {
         let (mut engine, mut vl, mut vz, mut tb, mut threads) = (None, None, None, None, None);
         let (mut tile, mut wf) = (None, None);
+        let mut halo: Option<HaloCodec> = None;
         for tok in s.split_whitespace() {
             let (key, val) = tok
                 .split_once('=')
@@ -124,6 +138,13 @@ impl TunePlan {
                     }
                     continue;
                 }
+                "halo" => {
+                    let codec = HaloCodec::parse(val).map_err(|e| anyhow!("tune plan: {e}"))?;
+                    if halo.replace(codec).is_some() {
+                        bail!("tune plan: duplicate key {key:?}");
+                    }
+                    continue;
+                }
                 "vl" => &mut vl,
                 "vz" => &mut vz,
                 "tb" => &mut tb,
@@ -131,7 +152,8 @@ impl TunePlan {
                 "tile" => &mut tile,
                 "wf" => &mut wf,
                 _ => bail!(
-                    "tune plan: unknown key {key:?} (engine | vl | vz | tb | threads | tile | wf)"
+                    "tune plan: unknown key {key:?} \
+                     (engine | vl | vz | tb | threads | tile | wf | halo)"
                 ),
             };
             if slot.replace(num()?).is_some() {
@@ -148,6 +170,7 @@ impl TunePlan {
             threads: need(threads, "threads")?,
             tile: tile.unwrap_or(0),
             wf: wf.unwrap_or(1).max(1),
+            halo: halo.unwrap_or(HaloCodec::F32),
         })
     }
 }
@@ -156,14 +179,15 @@ impl std::fmt::Display for TunePlan {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "engine={} vl={} vz={} tb={} threads={} tile={} wf={}",
+            "engine={} vl={} vz={} tb={} threads={} tile={} wf={} halo={}",
             self.engine.name(),
             self.dims.vl,
             self.dims.vz,
             self.time_block,
             self.threads,
             self.tile,
-            self.wf
+            self.wf,
+            self.halo.name()
         )
     }
 }
@@ -319,7 +343,18 @@ pub fn tune(spec: &StencilSpec, n: usize, max_threads: usize, p: &Platform) -> T
             for &threads in &threads_cands {
                 for tb in CAND_TB {
                     for (tile, wf) in CAND_WAVE {
-                        let plan = TunePlan { engine, dims, time_block: tb, threads, tile, wf };
+                        // the codec is an accuracy choice, not a speed
+                        // knob: the search never trades error for time,
+                        // so every candidate stays on the bitwise wire
+                        let plan = TunePlan {
+                            engine,
+                            dims,
+                            time_block: tb,
+                            threads,
+                            tile,
+                            wf,
+                            halo: HaloCodec::F32,
+                        };
                         let t = step_time(sweep, &plan, spec, n, p);
                         let better = match &best {
                             None => true,
@@ -349,9 +384,11 @@ mod tests {
     #[test]
     fn display_parse_round_trips() {
         for engine in EngineKind::ALL {
-            for (vl, vz, tb, threads, tile, wf) in
-                [(16, 4, 1, 1, 0, 1), (8, 2, 4, 16, 16, 2), (32, 8, 2, 3, 8, 1)]
-            {
+            for (vl, vz, tb, threads, tile, wf, halo) in [
+                (16, 4, 1, 1, 0, 1, HaloCodec::F32),
+                (8, 2, 4, 16, 16, 2, HaloCodec::Bf16),
+                (32, 8, 2, 3, 8, 1, HaloCodec::F16),
+            ] {
                 let plan = TunePlan {
                     engine,
                     dims: BlockDims { vl, vz },
@@ -359,6 +396,7 @@ mod tests {
                     threads,
                     tile,
                     wf,
+                    halo,
                 };
                 let again = TunePlan::parse(&plan.to_string()).unwrap();
                 assert_eq!(again, plan, "{plan}");
@@ -376,19 +414,25 @@ mod tests {
         assert_eq!(plan.threads, 2);
         let plan = TunePlan::parse("wf=2 tile=8 threads=2 tb=1 vz=4 vl=16 engine=simd").unwrap();
         assert_eq!((plan.tile, plan.wf), (8, 2));
+        let plan =
+            TunePlan::parse("halo=bf16 threads=2 tb=1 vz=4 vl=16 engine=simd").unwrap();
+        assert_eq!(plan.halo, HaloCodec::Bf16);
     }
 
     #[test]
     fn parse_defaults_wavefront_keys_for_v7_plans() {
         // plans serialized before the tile=/wf= keys existed (PR 7 and
         // earlier manifests) must keep parsing, landing on the classic
-        // flat path; the re-serialized form carries the new keys
+        // flat path — and before the halo= key (PR 8 and earlier),
+        // landing on the bitwise f32 wire; the re-serialized form
+        // carries all the new keys
         let v7 = "engine=matrix_gemm vl=16 vz=4 tb=1 threads=8";
         let plan = TunePlan::parse(v7).unwrap();
         assert_eq!((plan.tile, plan.wf), (0, 1));
+        assert_eq!(plan.halo, HaloCodec::F32);
         assert_eq!(
             plan.to_string(),
-            "engine=matrix_gemm vl=16 vz=4 tb=1 threads=8 tile=0 wf=1"
+            "engine=matrix_gemm vl=16 vz=4 tb=1 threads=8 tile=0 wf=1 halo=f32"
         );
         // a degenerate wf=0 clamps to 1 rather than dividing by zero
         // somewhere downstream
@@ -414,6 +458,15 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("naive | simd | matrix_unit | matrix_gemm"), "{err}");
+        // and a bad halo codec reports the codec allowed-list
+        let err = TunePlan::parse("engine=simd vl=16 vz=4 tb=1 threads=2 halo=fp8")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("f32 | bf16 | f16"), "{err}");
+        let err = TunePlan::parse("engine=simd vl=16 vz=4 tb=1 threads=2 halo=f32 halo=bf16")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate key \"halo\""), "{err}");
     }
 
     #[test]

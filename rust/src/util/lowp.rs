@@ -1,0 +1,291 @@
+//! Software reduced-precision scalar codecs: `bf16` (bfloat16) and
+//! `f16` (IEEE 754 binary16) conversions, zero-dep and deterministic.
+//!
+//! The halo-compression path (`grid::halo::HaloCodec`,
+//! `coordinator::exchange::exchange_views_codec`) quantizes face values
+//! through these conversions before they cross a simulated NUMA link —
+//! halving transport bytes per value.  `half`/`num` crates are
+//! unavailable in the offline vendor set (DESIGN.md §7), so the
+//! conversions are hand-rolled here with the standard round-to-nearest-
+//! even (RNE) semantics the hardware formats use:
+//!
+//! * `bf16` is the top 16 bits of an f32 (same 8-bit exponent, 7-bit
+//!   mantissa): encode rounds the dropped 16 mantissa bits RNE, decode
+//!   is a lossless shift.  Relative error of a round-trip is ≤ 2⁻⁸ for
+//!   any finite normal value.
+//! * `f16` is IEEE binary16 (5-bit exponent, 10-bit mantissa), with
+//!   gradual underflow: subnormals, ±inf, and NaN payloads are encoded
+//!   per the standard; overflow rounds to ±inf.  Relative error of a
+//!   round-trip is ≤ 2⁻¹¹ in the normal range, with an absolute floor
+//!   of 2⁻²⁵ (half the smallest subnormal) near zero.
+//!
+//! Contract (pinned by the property suite below, Miri-clean): decode ∘
+//! encode is the identity on every representable 16-bit pattern —
+//! including NaNs — and encode is monotone on ordered finite inputs.
+
+/// Encode an `f32` as bfloat16 bits, rounding to nearest-even.
+///
+/// NaNs keep their sign and top mantissa bits; if truncation would
+/// silence the NaN (payload only in the dropped low bits) the quiet bit
+/// is forced so the result is still a NaN.
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        let top = (bits >> 16) as u16;
+        return if top & 0x007F != 0 { top } else { top | 0x0040 };
+    }
+    // RNE: add half of the dropped ulp, plus one more when the kept lsb
+    // is odd (tie goes to even); a mantissa carry into the exponent is
+    // the correct round-up (to the next binade, or to ±inf at the top)
+    let round = 0x7FFF + ((bits >> 16) & 1);
+    (bits.wrapping_add(round) >> 16) as u16
+}
+
+/// Decode bfloat16 bits to the `f32` they exactly represent (lossless).
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Encode an `f32` as IEEE binary16 bits, rounding to nearest-even.
+///
+/// Handles the full format: gradual underflow to subnormals, underflow
+/// to signed zero below half the smallest subnormal, overflow to ±inf,
+/// and NaN payload preservation (top 10 payload bits; the quiet bit is
+/// forced if the payload would vanish).
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // inf / NaN
+        if man == 0 {
+            return sign | 0x7C00;
+        }
+        let payload = (man >> 13) as u16 & 0x03FF;
+        return sign | 0x7C00 | if payload != 0 { payload } else { 0x0200 };
+    }
+    let unbiased = exp - 127;
+    if unbiased >= 16 {
+        return sign | 0x7C00; // above the half range: ±inf
+    }
+    if unbiased >= -14 {
+        // normal half: drop 13 mantissa bits with RNE
+        let e16 = (unbiased + 15) as u32;
+        let mut out = (e16 << 10) | (man >> 13);
+        let dropped = man & 0x1FFF;
+        if dropped > 0x1000 || (dropped == 0x1000 && out & 1 == 1) {
+            out += 1; // carry into the exponent is the correct round-up
+        }
+        return sign | out as u16;
+    }
+    if unbiased >= -25 {
+        // subnormal half: value = m·2^(unbiased-23) with the implicit
+        // bit restored, re-scaled to units of 2⁻²⁴
+        let m = man | 0x0080_0000;
+        let shift = (-1 - unbiased) as u32; // 13..=24 dropped bits
+        let mut out = m >> shift;
+        let dropped = m & ((1 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        if dropped > half || (dropped == half && out & 1 == 1) {
+            out += 1;
+        }
+        return sign | out as u16;
+    }
+    sign // below half the smallest subnormal: signed zero
+}
+
+/// Decode IEEE binary16 bits to the `f32` they exactly represent
+/// (lossless: every half value — normal, subnormal, inf, NaN — has an
+/// exact f32 image).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = (h >> 10) & 0x1F;
+    let man = (h & 0x03FF) as u32;
+    let bits = match (exp, man) {
+        (0, 0) => sign,
+        (0, m) => {
+            // subnormal: normalize m·2⁻²⁴ into an f32 normal
+            let k = 31 - m.leading_zeros(); // msb position, 0..=9
+            let e32 = k + 103; // k - 24 + 127
+            sign | (e32 << 23) | ((m << (23 - k)) & 0x007F_FFFF)
+        }
+        (0x1F, 0) => sign | 0x7F80_0000,
+        (0x1F, m) => sign | 0x7F80_0000 | (m << 13),
+        (e, m) => sign | ((e as u32 + 112) << 23) | (m << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// Round every value to the nearest bfloat16 in place (encode + decode).
+pub fn quantize_bf16(xs: &mut [f32]) {
+    for x in xs {
+        *x = bf16_to_f32(f32_to_bf16(*x));
+    }
+}
+
+/// Round every value to the nearest binary16 in place (encode + decode).
+pub fn quantize_f16(xs: &mut [f32]) {
+    for x in xs {
+        *x = f16_to_f32(f32_to_f16(*x));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bf16_round_trips_every_bit_pattern() {
+        // decode ∘ encode is the identity on all 2^16 patterns —
+        // normals, subnormals, ±0, ±inf, and every NaN payload
+        for b in 0..=u16::MAX {
+            let x = bf16_to_f32(b);
+            let again = f32_to_bf16(x);
+            assert_eq!(again, b, "bf16 pattern {b:#06x} decoded to {x}, re-encoded {again:#06x}");
+        }
+    }
+
+    #[test]
+    fn f16_round_trips_every_bit_pattern() {
+        for h in 0..=u16::MAX {
+            let x = f16_to_f32(h);
+            let again = f32_to_f16(x);
+            assert_eq!(again, h, "f16 pattern {h:#06x} decoded to {x}, re-encoded {again:#06x}");
+        }
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even() {
+        // exactly halfway between two bf16 values: tie goes to the even
+        // mantissa.  1.0 = 0x3F80_0000; the next bf16 up is 0x3F81_0000.
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8000)), 0x3F80); // tie → even (down)
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F81_8000)), 0x3F82); // tie → even (up)
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8001)), 0x3F81); // above tie → up
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_7FFF)), 0x3F80); // below tie → down
+        // mantissa carry rides into the exponent: just below 2.0 rounds up
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3FFF_FFFF)), 0x4000);
+        // the top of the f32 range rounds to +inf
+        assert_eq!(f32_to_bf16(f32::MAX), 0x7F80);
+        assert_eq!(f32_to_bf16(f32::MIN), 0xFF80);
+    }
+
+    #[test]
+    fn f16_rne_edge_cases() {
+        // ties between adjacent halves resolve to the even mantissa:
+        // 1.0 = 0x3C00; half ulp at 1.0 is 2⁻¹¹
+        let ulp = f32::exp2(-10.0);
+        assert_eq!(f32_to_f16(1.0 + 0.5 * ulp), 0x3C00); // tie → even (down)
+        assert_eq!(f32_to_f16(1.0 + 1.5 * ulp), 0x3C02); // tie → even (up)
+        assert_eq!(f32_to_f16(1.0 + 0.5 * ulp + f32::EPSILON), 0x3C01);
+        // overflow: max half is 65504; halfway to the next step (65520)
+        // ties to even = inf, anything above goes to inf
+        assert_eq!(f32_to_f16(65504.0), 0x7BFF);
+        assert_eq!(f32_to_f16(65520.0), 0x7C00);
+        assert_eq!(f32_to_f16(1e9), 0x7C00);
+        assert_eq!(f32_to_f16(-1e9), 0xFC00);
+        // underflow: half the smallest subnormal (2⁻²⁵) ties to zero,
+        // anything above it rounds to the smallest subnormal 0x0001
+        assert_eq!(f32_to_f16(f32::exp2(-25.0)), 0x0000);
+        assert_eq!(f32_to_f16(f32::exp2(-25.0) * 1.0001), 0x0001);
+        assert_eq!(f32_to_f16(f32::exp2(-24.0)), 0x0001);
+        assert_eq!(f32_to_f16(-f32::exp2(-24.0)), 0x8001);
+        // normal/subnormal boundary: 2⁻¹⁴ is the smallest normal
+        assert_eq!(f32_to_f16(f32::exp2(-14.0)), 0x0400);
+        assert_eq!(f32_to_f16(f32::exp2(-14.0) * 0.9999), 0x0400); // rounds back up
+        assert_eq!(f32_to_f16(f32::exp2(-15.0)), 0x0200); // subnormal
+        // inf and NaN payloads
+        assert_eq!(f32_to_f16(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16(f32::NEG_INFINITY), 0xFC00);
+        let nan = f32_to_f16(f32::NAN);
+        assert_eq!(nan & 0x7C00, 0x7C00);
+        assert_ne!(nan & 0x03FF, 0, "NaN must stay NaN");
+        // a payload living only in the dropped low bits still yields NaN
+        let low_payload_nan = f32::from_bits(0x7F80_0001);
+        let h = f32_to_f16(low_payload_nan);
+        assert!(f16_to_f32(h).is_nan());
+    }
+
+    #[test]
+    fn signed_zeros_and_sign_preservation() {
+        assert_eq!(f32_to_bf16(-0.0), 0x8000);
+        assert_eq!(f32_to_bf16(0.0), 0x0000);
+        assert_eq!(f32_to_f16(-0.0), 0x8000);
+        assert_eq!(f32_to_f16(0.0), 0x0000);
+        assert!(bf16_to_f32(0x8000).is_sign_negative());
+        assert!(f16_to_f32(0x8000).is_sign_negative());
+    }
+
+    #[test]
+    fn encodings_are_monotone_on_finite_inputs() {
+        // walk an ordered sample of finite f32s; the encodings, compared
+        // as sign-magnitude integers, must never invert the order
+        let key = |b: u16| -> i32 {
+            if b & 0x8000 != 0 { -((b & 0x7FFF) as i32) } else { (b & 0x7FFF) as i32 }
+        };
+        let mut xs: Vec<f32> = Vec::new();
+        let mut v = -3.5e38f32;
+        while v < 3.5e38 {
+            xs.push(v);
+            v = if v.abs() < 1e-30 { 1e-30 } else { v * 0.97 + f32::MIN_POSITIVE };
+            if v == *xs.last().unwrap() {
+                break;
+            }
+        }
+        xs.extend([-1e4, -2.5, -1.0, -1e-3, -1e-30, 0.0, 1e-30, 1e-3, 1.0, 2.5, 1e4]);
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for w in xs.windows(2) {
+            assert!(
+                key(f32_to_bf16(w[0])) <= key(f32_to_bf16(w[1])),
+                "bf16 not monotone at {} < {}",
+                w[0],
+                w[1]
+            );
+            assert!(
+                key(f32_to_f16(w[0])) <= key(f32_to_f16(w[1])),
+                "f16 not monotone at {} < {}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+
+    #[test]
+    fn round_trip_error_is_within_the_documented_budgets()  {
+        // the analytic bounds DESIGN.md §15 derives and tests/precision.rs
+        // builds on: rel ≤ 2⁻⁸ (bf16) / 2⁻¹¹ (f16) in the normal range
+        let mut rng = crate::util::XorShift::new(0x1b0f);
+        for _ in 0..20_000 {
+            let x = (rng.next_f32() - 0.5) * 2.0e4;
+            let db = bf16_to_f32(f32_to_bf16(x));
+            let dh = f16_to_f32(f32_to_f16(x));
+            let scale = x.abs().max(f32::MIN_POSITIVE);
+            assert!((db - x).abs() / scale <= f32::exp2(-8.0), "bf16 {x} -> {db}");
+            assert!(
+                (dh - x).abs() <= f32::exp2(-11.0) * scale + f32::exp2(-25.0),
+                "f16 {x} -> {dh}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantize_helpers_match_the_scalar_paths() {
+        let src = [1.5f32, -0.003, 7.0e4, -2.0e-26, 0.0, 1.0e-8];
+        let mut b = src;
+        quantize_bf16(&mut b);
+        let mut h = src;
+        quantize_f16(&mut h);
+        for (i, &x) in src.iter().enumerate() {
+            assert_eq!(b[i].to_bits(), bf16_to_f32(f32_to_bf16(x)).to_bits());
+            assert_eq!(h[i].to_bits(), f16_to_f32(f32_to_f16(x)).to_bits());
+        }
+        // quantization is idempotent: a second pass changes nothing
+        let (b2, h2) = (b, h);
+        let mut b3 = b2;
+        quantize_bf16(&mut b3);
+        let mut h3 = h2;
+        quantize_f16(&mut h3);
+        assert_eq!(b3.map(f32::to_bits), b2.map(f32::to_bits));
+        assert_eq!(h3.map(f32::to_bits), h2.map(f32::to_bits));
+    }
+}

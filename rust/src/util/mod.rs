@@ -13,6 +13,7 @@
 pub mod alloc_count;
 pub mod bench;
 pub mod err;
+pub mod lowp;
 pub mod parse;
 pub mod prop;
 pub mod rng;

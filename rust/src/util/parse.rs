@@ -28,24 +28,45 @@ pub struct ParseKindError {
     pub name: String,
     /// The canonical names that would have parsed.
     pub allowed: &'static [&'static str],
+    /// For grammar-bearing families (`custom:` stencil tables): why the
+    /// value was rejected, not just that it was.  `None` for the plain
+    /// fixed-menu selectors.
+    pub detail: Option<String>,
 }
 
 impl ParseKindError {
     /// Build an error for `name` against the `what` family.
     pub fn new(what: &'static str, name: &str, allowed: &'static [&'static str]) -> Self {
-        Self { what, name: name.to_string(), allowed }
+        Self { what, name: name.to_string(), allowed, detail: None }
+    }
+
+    /// Attach the reason a grammar-bearing value failed (tap-count
+    /// mismatch, bad float, unreadable file …); switches the message
+    /// from the "unknown X" menu form to an "invalid X: why" form.
+    pub fn with_detail(mut self, detail: impl Into<String>) -> Self {
+        self.detail = Some(detail.into());
+        self
     }
 }
 
 impl fmt::Display for ParseKindError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(
-            f,
-            "unknown {} {:?} (expected one of: {})",
-            self.what,
-            self.name,
-            self.allowed.join(" | ")
-        )
+        match &self.detail {
+            None => write!(
+                f,
+                "unknown {} {:?} (expected one of: {})",
+                self.what,
+                self.name,
+                self.allowed.join(" | ")
+            ),
+            Some(d) => write!(
+                f,
+                "invalid {} {:?}: {d} (expected {})",
+                self.what,
+                self.name,
+                self.allowed.join(" | ")
+            ),
+        }
     }
 }
 
@@ -61,6 +82,17 @@ mod tests {
         assert_eq!(
             e.to_string(),
             "unknown engine \"avx512\" (expected one of: naive | simd | matrix_unit)"
+        );
+    }
+
+    #[test]
+    fn detail_switches_to_the_invalid_form() {
+        let e = ParseKindError::new("custom stencil table", "custom:star:r2:1", &["custom:…"])
+            .with_detail("star band needs 5 taps, got 1");
+        assert_eq!(
+            e.to_string(),
+            "invalid custom stencil table \"custom:star:r2:1\": \
+             star band needs 5 taps, got 1 (expected custom:…)"
         );
     }
 }

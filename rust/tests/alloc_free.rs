@@ -19,7 +19,7 @@ use mmstencil::grid::Grid3;
 use mmstencil::rtm::{media, vti};
 use mmstencil::stencil::coeffs::second_deriv;
 use mmstencil::stencil::matrix_unit::{self, BlockDims};
-use mmstencil::stencil::{gemm, Engine, EngineKind, StencilSpec, TunePlan};
+use mmstencil::stencil::{gemm, CoeffTable, Engine, EngineKind, StencilSpec, TunePlan};
 use mmstencil::util::alloc_count::CountingAlloc;
 
 #[global_allocator]
@@ -49,7 +49,15 @@ fn matrix_unit_hot_path_allocation_contract() {
     // the big one 4·4·4 = 64
     let small = Grid3::random(8, 32, 32, 1);
     let big = Grid3::random(16, 64, 64, 2);
-    for spec in [StencilSpec::star3d(4), StencilSpec::box3d(2)] {
+    // user-defined coefficient tables ride the exact same scratch-arena
+    // plumbing as the Table-I kernels, so a custom radius (r = 3, a
+    // band no benchmark kernel uses) must keep the O(1) contract too
+    let custom_star =
+        StencilSpec::parse("custom:star:r3:0.02,-0.05,0.4,-0.7,0.4,-0.05,0.02").unwrap();
+    let custom_box = StencilSpec::from_table(&CoeffTable::boxed(3, 1, vec![0.01; 27]).unwrap());
+    for spec in
+        [StencilSpec::star3d(4), StencilSpec::box3d(2), custom_star.clone(), custom_box.clone()]
+    {
         // warm-up: sizes the thread-local arena for every buffer shape
         matrix_unit::apply3(&spec, &big, dims);
         matrix_unit::apply3(&spec, &small, dims);
@@ -77,7 +85,7 @@ fn matrix_unit_hot_path_allocation_contract() {
     // ---- gemm engine: the banded-GEMM reformulation inherits the ----
     // same steady-state contract — the band operand and x-panels are
     // scratch-arena checkouts, never per-sweep heap allocations
-    for spec in [StencilSpec::star3d(4), StencilSpec::box3d(2)] {
+    for spec in [StencilSpec::star3d(4), StencilSpec::box3d(2), custom_star, custom_box] {
         gemm::apply3(&spec, &big, dims);
         gemm::apply3(&spec, &small, dims);
 

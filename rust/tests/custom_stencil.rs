@@ -1,0 +1,238 @@
+//! Oracle-equivalence suite for user-defined coefficient tables (the
+//! `custom:` spec family): seeded random [`CoeffTable`]s — star and box,
+//! radii 1..4 — must produce the same field through every engine, every
+//! worker count, and the fused/wavefront coordinator paths as an
+//! *independent* dense convolution written directly from the table
+//! (not through the engines' shared weight plumbing, so a
+//! `StencilSpec::from_table` conversion bug cannot cancel itself out).
+//!
+//! The CI matrix lane pins `MMSTENCIL_WORKERS` / `MMSTENCIL_HALO_CODEC`
+//! to one cell; unset, each test sweeps its own in-test matrix.  Tables
+//! are normalized to unit L∞ gain (Σ|w| = 1) so chained applications
+//! stay O(1) in magnitude and the codec-composition budget is tight.
+
+use mmstencil::coordinator::driver::Driver;
+use mmstencil::coordinator::exchange::Backend;
+use mmstencil::grid::halo::HaloCodec;
+use mmstencil::grid::{CartDecomp, Grid3};
+use mmstencil::simulator::Platform;
+use mmstencil::stencil::{naive, CoeffTable, Engine, EngineKind, Pattern, StencilSpec, TunePlan};
+use mmstencil::util::prop::assert_allclose;
+use mmstencil::util::XorShift;
+
+fn max_diff(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).fold(0f32, |m, (x, y)| m.max((x - y).abs())) as f64
+}
+
+fn env_workers() -> Vec<usize> {
+    match std::env::var("MMSTENCIL_WORKERS") {
+        Ok(s) => vec![s.parse().expect("MMSTENCIL_WORKERS must be a worker count")],
+        Err(_) => vec![1, 2, 4],
+    }
+}
+
+fn env_codecs() -> Vec<HaloCodec> {
+    match std::env::var("MMSTENCIL_HALO_CODEC") {
+        Ok(s) => vec![HaloCodec::parse(&s).expect("MMSTENCIL_HALO_CODEC must name a codec")],
+        Err(_) => vec![HaloCodec::F32, HaloCodec::Bf16, HaloCodec::F16],
+    }
+}
+
+/// Random star band, normalized so the applied stencil's Σ|w| = 1
+/// (the centre is counted once per axis, so the full gain is
+/// 3·Σ|band| for a 3D table).
+fn random_star(rng: &mut XorShift, radius: usize) -> CoeffTable {
+    let n = 2 * radius + 1;
+    let mut band: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+    let total: f32 = 3.0 * band.iter().map(|w| w.abs()).sum::<f32>();
+    for w in &mut band {
+        *w /= total;
+    }
+    CoeffTable::star(3, radius, band).expect("generated band is well-formed")
+}
+
+/// Random dense box tensor, normalized to Σ|w| = 1.
+fn random_box(rng: &mut XorShift, radius: usize) -> CoeffTable {
+    let n = 2 * radius + 1;
+    let mut taps: Vec<f32> = (0..n * n * n).map(|_| rng.next_f32() - 0.5).collect();
+    let total: f32 = taps.iter().map(|w| w.abs()).sum();
+    for w in &mut taps {
+        *w /= total;
+    }
+    CoeffTable::boxed(3, radius, taps).expect("generated tensor is well-formed")
+}
+
+/// Independent periodic convolution straight from the table — the
+/// star arm sums the full band along each axis (which equals the
+/// engines' once-counted-centre convention: 3·band[r] at the centre).
+fn oracle(table: &CoeffTable, g: &Grid3) -> Grid3 {
+    assert_eq!(table.ndim, 3);
+    let r = table.radius as isize;
+    let n = 2 * table.radius + 1;
+    let mut out = Grid3::zeros(g.nz, g.nx, g.ny);
+    for z in 0..g.nz as isize {
+        for x in 0..g.nx as isize {
+            for y in 0..g.ny as isize {
+                let mut acc = 0f32;
+                match table.pattern {
+                    Pattern::Star => {
+                        for (j, &w) in table.taps.iter().enumerate() {
+                            let o = j as isize - r;
+                            acc += w * g.get_wrap(z + o, x, y);
+                            acc += w * g.get_wrap(z, x + o, y);
+                            acc += w * g.get_wrap(z, x, y + o);
+                        }
+                    }
+                    Pattern::Box => {
+                        for dz in 0..n {
+                            for dx in 0..n {
+                                for dy in 0..n {
+                                    let w = table.taps[(dz * n + dx) * n + dy];
+                                    acc += w
+                                        * g.get_wrap(
+                                            z + dz as isize - r,
+                                            x + dx as isize - r,
+                                            y + dy as isize - r,
+                                        );
+                                }
+                            }
+                        }
+                    }
+                }
+                out.set(z as usize, x as usize, y as usize, acc);
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn random_tables_match_an_independent_oracle_on_every_engine() {
+    let mut rng = XorShift::new(0xC0FFEE);
+    let g = Grid3::random(10, 12, 14, 0x7AB);
+    let mut tables: Vec<CoeffTable> = (1..=4).map(|r| random_star(&mut rng, r)).collect();
+    tables.extend((1..=2).map(|r| random_box(&mut rng, r)));
+    for table in &tables {
+        let spec = StencilSpec::from_table(table);
+        let want = oracle(table, &g);
+        // the shared-plumbing oracle agrees with the independent one
+        assert_allclose(&naive::apply3(&spec, &g).data, &want.data, 1e-4, 1e-5);
+        for kind in EngineKind::ALL {
+            let mut per_worker: Vec<Vec<f32>> = Vec::new();
+            for &threads in &env_workers() {
+                let eng = Engine::from_plan(&TunePlan {
+                    engine: kind,
+                    threads,
+                    ..TunePlan::simd(1)
+                });
+                let got = eng.apply3(&spec, &g);
+                assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
+                per_worker.push(got.data);
+            }
+            // worker-count independence stays bitwise for custom taps
+            for d in &per_worker[1..] {
+                assert_eq!(
+                    d, &per_worker[0],
+                    "{kind:?} {:?} r={}: result depends on worker count",
+                    table.pattern, table.radius
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn custom_tables_ride_the_fused_and_wavefront_paths() {
+    let p = Platform::paper();
+    let mut rng = XorShift::new(0x5EED5);
+    let table = random_star(&mut rng, 3);
+    let spec = StencilSpec::from_table(&table);
+    let g = Grid3::random(12, 12, 12, 0xF0);
+    // fused == chained, bitwise, for every engine (the single-grid arm)
+    for kind in EngineKind::ALL {
+        let eng = Engine::from_plan(&TunePlan { engine: kind, threads: 2, ..TunePlan::simd(1) });
+        let once = eng.apply3(&spec, &g);
+        let twice = eng.apply3(&spec, &once);
+        let fused = eng.apply3_fused(&spec, &g, 2);
+        assert_eq!(fused.data, twice.data, "{kind:?}: fused custom sweep diverged");
+    }
+    // multirank + wavefront vs four chained oracle steps: the deep-halo
+    // exchange, the (z, t) tiles, and the custom radius-3 band compose
+    let d = CartDecomp::new(1, 2, 2);
+    let mut want = g.clone();
+    for _ in 0..4 {
+        want = oracle(&table, &want);
+    }
+    for threads in env_workers() {
+        let drv = Driver::new(threads, p.clone()).with_time_block(2).with_wavefront(3, 2);
+        let (got, stats) = drv.multirank_sweep(&spec, &g, &d, &Backend::sdma(), 4);
+        assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
+        assert!(stats.exchanged_bytes > 0, "threads={threads}: no halo traffic recorded");
+    }
+}
+
+#[test]
+fn custom_tables_compose_with_the_wire_codecs() {
+    let p = Platform::paper();
+    let mut rng = XorShift::new(0xABCD);
+    let table = random_star(&mut rng, 2);
+    let spec = StencilSpec::from_table(&table);
+    let g = Grid3::random(12, 12, 12, 0x11);
+    let d = CartDecomp::new(1, 2, 2);
+    let steps = 3usize;
+    // unit gain ⇒ every level stays ≤ the initial magnitude, and the
+    // lossy drift bound is simply rounds · (rel·M + abs)
+    let m = g.data.iter().fold(0f32, |a, &x| a.max(x.abs())) as f64;
+    for threads in env_workers() {
+        let base = Driver::new(threads, p.clone());
+        let (want, ws) = base.multirank_sweep(&spec, &g, &d, &Backend::sdma(), steps);
+        for codec in env_codecs() {
+            let drv = Driver::new(threads, p.clone()).with_halo_codec(codec);
+            let (got, stats) = drv.multirank_sweep(&spec, &g, &d, &Backend::sdma(), steps);
+            match codec {
+                HaloCodec::F32 => {
+                    assert_eq!(got.data, want.data, "f32 codec diverged on a custom table");
+                    assert_eq!(stats.exchanged_bytes, ws.exchanged_bytes);
+                }
+                HaloCodec::Bf16 | HaloCodec::F16 => {
+                    assert_eq!(stats.exchanged_bytes * 2, ws.exchanged_bytes);
+                    let (rel, abs) = match codec {
+                        HaloCodec::Bf16 => (0.00390625, 0.0), // 2⁻⁸
+                        _ => (0.00048828125, 2.9802322387695313e-8), // 2⁻¹¹, 2⁻²⁵
+                    };
+                    let budget = steps as f64 * (rel * m + abs);
+                    let diff = max_diff(&got.data, &want.data);
+                    assert!(
+                        diff <= budget,
+                        "{} threads={threads}: drift {diff:e} over unit-gain budget {budget:e}",
+                        codec.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn malformed_custom_specs_are_rejected_with_segment_and_grammar() {
+    for bad in [
+        "custom:star:r2:1,2",                          // wrong star tap count
+        "custom:blob:r2:1,2,1,2,1",                    // unknown pattern
+        "custom:star:r0:1",                            // zero radius
+        "custom:star:rX:1,2,1",                        // unparsable radius
+        "custom:box:2d:r1:1,2,3",                      // wrong box tensor size
+        "custom:star:r1:1,inf,1",                      // non-finite coefficient
+        "custom:star:r1:1,two,1",                      // non-numeric token
+        "custom:star:r1:file=/nonexistent/coeffs.txt", // unreadable file
+        "custom:star:r1",                              // missing taps
+        "custom:",                                     // empty grammar
+    ] {
+        let err = StencilSpec::parse(bad).expect_err(bad);
+        assert_eq!(err.what, "custom stencil table", "{bad}");
+        assert!(err.detail.is_some(), "{bad}: reject must carry the failing segment");
+        assert!(err.to_string().contains("custom:<star|box>"), "{bad}: grammar not shown");
+    }
+    // and the CLI-visible inline grammar still round-trips a good spec
+    let spec = StencilSpec::parse("custom:star:r1:0.25,0.5,0.25").unwrap();
+    assert_eq!((spec.pattern, spec.ndim, spec.radius), (Pattern::Star, 3, 1));
+}

@@ -1,0 +1,271 @@
+//! Error-budget suite for the mixed-precision halo codecs (the PR 9
+//! tentpole's acceptance tests): every budget asserted here is the
+//! analytic bound DESIGN.md §15 derives, not an empirical tolerance —
+//! a codec or exchange change that leaks more error than the wire
+//! format mathematically permits fails these tests.
+//!
+//! Three layers, matching where the error enters and how it travels:
+//!
+//! 1. **Per-face ulp bounds** — `HaloCodec::quantize` on staged face
+//!    values must stay inside the format's round-to-nearest-even
+//!    budget: rel ≤ 2⁻⁸ (bf16), rel ≤ 2⁻¹¹ + 2⁻²⁵ absolute floor
+//!    (f16), bitwise identity (f32).
+//! 2. **Propagation** — error injected at each exchange round is
+//!    amplified per step by at most the stencil's L∞ gain Σ|w|, so a
+//!    multirank run under a lossy codec stays within
+//!    `rounds · (rel·M + abs) · max(1, G)^steps` of its f32 twin.
+//! 3. **Whole-shot energy drift** — full VTI/TTI imaging shots under
+//!    the 16-bit codecs must track the f32 energy trace within the
+//!    documented drift budget, and `F32` must stay bitwise.
+//!
+//! The CI matrix lane pins cells via `MMSTENCIL_WORKERS` /
+//! `MMSTENCIL_HALO_CODEC`; unset, each test sweeps its own matrix.
+//! No test here reads `exchange::transport_rounds()` (that process-
+//! global counter belongs to `tests/temporal.rs` / `wavefront.rs`);
+//! all byte accounting uses the per-run `StepStats::exchanged_bytes`.
+
+use mmstencil::coordinator::driver::Driver;
+use mmstencil::coordinator::exchange::Backend;
+use mmstencil::grid::halo::HaloCodec;
+use mmstencil::grid::{CartDecomp, Grid3};
+use mmstencil::rtm::driver::{run_shot, Medium, RtmConfig};
+use mmstencil::simulator::Platform;
+use mmstencil::stencil::{naive, CoeffTable, StencilSpec};
+use mmstencil::util::XorShift;
+
+/// bf16 keeps 8 significand bits: relative round-trip error ≤ 2⁻⁸ for
+/// any value in the f32 normal range (DESIGN.md §15).
+const BF16_REL: f64 = 0.00390625; // 2⁻⁸
+
+/// f16 keeps 11 significand bits: relative error ≤ 2⁻¹¹ in the half
+/// normal range, with gradual underflow bounded by half the smallest
+/// subnormal (2⁻²⁵) near zero.
+const F16_REL: f64 = 0.00048828125; // 2⁻¹¹
+const F16_ABS: f64 = 2.9802322387695313e-8; // 2⁻²⁵
+
+/// Documented whole-shot energy-drift budgets: the radius-4 boundary
+/// shell is quantized once per step, deep inside the absorbing sponge,
+/// so per-step energy perturbation is ≤ 2·rel · (shell energy share);
+/// linear accumulation over a full shot stays well under these caps
+/// (derivation in DESIGN.md §15).
+const BF16_SHOT_DRIFT: f64 = 0.10;
+const F16_SHOT_DRIFT: f64 = 0.02;
+
+/// (relative, absolute) per-value quantization budget of a codec.
+fn codec_budget(codec: HaloCodec) -> (f64, f64) {
+    match codec {
+        HaloCodec::F32 => (0.0, 0.0),
+        HaloCodec::Bf16 => (BF16_REL, 0.0),
+        HaloCodec::F16 => (F16_REL, F16_ABS),
+    }
+}
+
+/// Worker counts to sweep: `MMSTENCIL_WORKERS` pins one cell (the CI
+/// matrix lane), unset sweeps the in-test default.
+fn env_workers() -> Vec<usize> {
+    match std::env::var("MMSTENCIL_WORKERS") {
+        Ok(s) => vec![s.parse().expect("MMSTENCIL_WORKERS must be a worker count")],
+        Err(_) => vec![1, 2, 4],
+    }
+}
+
+/// Codecs to sweep: `MMSTENCIL_HALO_CODEC` pins one cell, unset sweeps
+/// all three.
+fn env_codecs() -> Vec<HaloCodec> {
+    match std::env::var("MMSTENCIL_HALO_CODEC") {
+        Ok(s) => vec![HaloCodec::parse(&s).expect("MMSTENCIL_HALO_CODEC must name a codec")],
+        Err(_) => vec![HaloCodec::F32, HaloCodec::Bf16, HaloCodec::F16],
+    }
+}
+
+/// L∞ amplification of one stencil application: Σ|w| over every tap
+/// the kernel touches, clamped to ≥ 1 because the *last* exchange
+/// round's injection is never attenuated below itself.
+fn linf_gain(spec: &StencilSpec) -> f64 {
+    let mut g = spec.star_center.abs() as f64;
+    for axis in &spec.star_axes {
+        g += axis.iter().map(|w| w.abs() as f64).sum::<f64>();
+    }
+    g += spec.box_w.iter().map(|w| w.abs() as f64).sum::<f64>();
+    g.max(1.0)
+}
+
+fn maxabs(xs: &[f32]) -> f64 {
+    xs.iter().fold(0f32, |a, &x| a.max(x.abs())) as f64
+}
+
+fn max_diff(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).fold(0f32, |m, (x, y)| m.max((x - y).abs())) as f64
+}
+
+/// A unit-gain custom star table (Σ|w| = 1 over the applied stencil):
+/// under it the propagation bound collapses to `rounds · (rel·M + abs)`
+/// — tight enough to catch a codec off by even one extra rounding.
+fn unit_gain_star(radius: usize, seed: u64) -> StencilSpec {
+    let mut rng = XorShift::new(seed);
+    let n = 2 * radius + 1;
+    let mut band: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+    let total: f32 = 3.0 * band.iter().map(|w| w.abs()).sum::<f32>();
+    for w in &mut band {
+        *w /= total;
+    }
+    StencilSpec::from_table(&CoeffTable::star(3, radius, band).expect("band is well-formed"))
+}
+
+#[test]
+fn face_quantization_stays_inside_the_analytic_ulp_budgets() {
+    // magnitudes spanning 2⁻²⁰..2¹⁰ — through the f16 subnormal range
+    // (abs floor territory) up to mid-range normals, plus exact zeros
+    let mut rng = XorShift::new(0x9E37);
+    let mut vals: Vec<f32> = (0..4096)
+        .map(|_| {
+            let m = rng.next_f32() - 0.5;
+            let e = (rng.next_f32() * 30.0 - 20.0).round();
+            m * f32::exp2(e)
+        })
+        .collect();
+    vals.extend([0.0, -0.0, 1.0, -1.0]);
+    for codec in env_codecs() {
+        let mut q = vals.clone();
+        codec.quantize(&mut q);
+        let (rel, abs) = codec_budget(codec);
+        for (&x, &y) in vals.iter().zip(&q) {
+            if codec == HaloCodec::F32 {
+                assert_eq!(y.to_bits(), x.to_bits(), "f32 codec must be bitwise");
+                continue;
+            }
+            let err = (y - x).abs() as f64;
+            assert!(
+                err <= rel * x.abs() as f64 + abs,
+                "{}: {x} -> {y} (err {err:e} over budget)",
+                codec.name()
+            );
+        }
+        // idempotence: a value already on the wire grid stays put, so
+        // re-packing an unpacked halo injects nothing new
+        let mut q2 = q.clone();
+        codec.quantize(&mut q2);
+        let (a, b): (Vec<u32>, Vec<u32>) =
+            (q.iter().map(|v| v.to_bits()).collect(), q2.iter().map(|v| v.to_bits()).collect());
+        assert_eq!(a, b, "{}: quantization must be idempotent", codec.name());
+    }
+}
+
+#[test]
+fn injected_face_error_amplifies_no_faster_than_the_linf_gain() {
+    let p = Platform::paper();
+    let g = Grid3::random(12, 12, 12, 0xEC0);
+    let d = CartDecomp::new(1, 2, 2);
+    let steps = 3usize;
+    // one Table-I kernel (gain ≫ 1: the bound is the analytic envelope)
+    // and one unit-gain custom table (gain = 1: the bound is tight)
+    for spec in [StencilSpec::star3d(2), unit_gain_star(2, 0x1D5)] {
+        let gain = linf_gain(&spec);
+        // M: max |field| over every time level of the f32 evolution
+        let mut m = maxabs(&g.data);
+        let mut cur = g.clone();
+        for _ in 0..steps {
+            cur = naive::apply3(&spec, &cur);
+            m = m.max(maxabs(&cur.data));
+        }
+        for threads in env_workers() {
+            for k in [1usize, 2] {
+                let oracle = Driver::new(threads, p.clone()).with_time_block(k);
+                let (want, ws) = oracle.multirank_sweep(&spec, &g, &d, &Backend::sdma(), steps);
+                for codec in env_codecs() {
+                    let drv =
+                        Driver::new(threads, p.clone()).with_time_block(k).with_halo_codec(codec);
+                    let (got, stats) = drv.multirank_sweep(&spec, &g, &d, &Backend::sdma(), steps);
+                    if codec == HaloCodec::F32 {
+                        // the lossless contract: bitwise, same wire
+                        assert_eq!(got.data, want.data, "f32 codec diverged (k={k})");
+                        assert_eq!(stats.exchanged_bytes, ws.exchanged_bytes);
+                        continue;
+                    }
+                    // 16-bit wire: exactly half the bytes...
+                    assert_eq!(
+                        stats.exchanged_bytes * 2,
+                        ws.exchanged_bytes,
+                        "{} must halve the wire (k={k})",
+                        codec.name()
+                    );
+                    // ...and error inside the propagation envelope:
+                    // ≤ steps rounds inject ≤ rel·M + abs each, each
+                    // amplified ≤ gain^steps before the run ends
+                    let (rel, abs) = codec_budget(codec);
+                    let budget = steps as f64 * (rel * m + abs) * gain.powi(steps as i32);
+                    let diff = max_diff(&got.data, &want.data);
+                    assert!(
+                        diff <= budget,
+                        "{} k={k} threads={threads}: drift {diff:e} over budget {budget:e} \
+                         (gain {gain}, M {m:e})",
+                        codec.name()
+                    );
+                    assert!(
+                        diff > 0.0,
+                        "{} k={k}: no error injected — the lossy path is not being exercised",
+                        codec.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn shot_energy_drift_stays_inside_the_documented_budget() {
+    let p = Platform::paper();
+    for (medium, n, steps) in [(Medium::Vti, 24usize, 30usize), (Medium::Tti, 20, 24)] {
+        let mut cfg = RtmConfig::small(medium);
+        cfg.nz = n;
+        cfg.nx = n;
+        cfg.ny = n;
+        cfg.steps = steps;
+        cfg.threads = 2;
+        let (img_f32, rep_f32) = run_shot(&cfg, &p);
+        // the default config IS the f32 codec: stating it explicitly
+        // must change nothing, bitwise
+        let mut explicit = cfg.clone();
+        explicit.halo_codec = HaloCodec::F32;
+        let (img_exp, rep_exp) = run_shot(&explicit, &p);
+        assert_eq!(rep_exp.energy_trace, rep_f32.energy_trace, "{medium:?}: f32 trace drifted");
+        assert_eq!(img_exp.img.data, img_f32.img.data, "{medium:?}: f32 image drifted");
+
+        let e_scale = rep_f32.energy_trace.iter().cloned().fold(0f64, f64::max);
+        assert!(e_scale > 0.0, "{medium:?}: dead f32 shot");
+        for codec in env_codecs() {
+            let drift_budget = match codec {
+                HaloCodec::F32 => continue, // the bitwise arm above
+                HaloCodec::Bf16 => BF16_SHOT_DRIFT,
+                HaloCodec::F16 => F16_SHOT_DRIFT,
+            };
+            let mut lossy = cfg.clone();
+            lossy.halo_codec = codec;
+            let (img_c, rep_c) = run_shot(&lossy, &p);
+            assert!(
+                rep_c.energy_trace.iter().all(|e| e.is_finite()),
+                "{medium:?} {}: non-finite energy",
+                codec.name()
+            );
+            // per-step energy drift: relative where the f32 energy is
+            // meaningful, absolute (scaled) where it is still near zero
+            for (i, (ef, ec)) in rep_f32.energy_trace.iter().zip(&rep_c.energy_trace).enumerate() {
+                assert!(
+                    (ec - ef).abs() <= drift_budget * ef + 1e-6 * e_scale,
+                    "{medium:?} {} step {i}: energy {ec} vs f32 {ef} (budget {drift_budget})",
+                    codec.name()
+                );
+            }
+            // the image the shot exists to produce survives compression
+            assert!(rep_c.image_energy > 0.0, "{medium:?} {}: empty image", codec.name());
+            assert!(
+                (rep_c.image_energy / rep_f32.image_energy - 1.0).abs() <= drift_budget,
+                "{medium:?} {}: image energy {} vs f32 {} over budget",
+                codec.name(),
+                rep_c.image_energy,
+                rep_f32.image_energy
+            );
+            assert!(img_c.correlations > 0);
+        }
+    }
+}

@@ -15,6 +15,7 @@ use mmstencil::coordinator::driver::{multirank_sweep, multirank_sweep_fused, Dri
 use mmstencil::coordinator::exchange::{self, Backend};
 use mmstencil::coordinator::temporal;
 use mmstencil::coordinator::tiles::Strategy;
+use mmstencil::grid::halo::HaloCodec;
 use mmstencil::grid::{CartDecomp, Grid3};
 use mmstencil::simulator::Platform;
 use mmstencil::stencil::{Engine, EngineKind, StencilSpec};
@@ -90,6 +91,25 @@ fn fused_multirank_is_bitwise_the_classic_path_with_one_exchange_per_k() {
     assert_eq!(got2.data, want2.data, "uneven-decomp fused path diverged");
     assert_eq!(st2.comm_rounds, 1);
     assert_eq!(exchange::transport_rounds() - before, 1);
+
+    // halo-codec contract (PR 9): an explicit f32 codec is the same
+    // code path — bitwise result, same wire bytes, same transport
+    // schedule; bf16 exactly halves the simulated wire (2 vs 4 bytes
+    // per value) without changing the exchange count
+    let plain = Driver::new(2, p.clone());
+    let (w0, s0) = plain.multirank_sweep(&spec, &g, &d, &Backend::sdma(), steps);
+    let before = exchange::transport_rounds();
+    let explicit = Driver::new(2, p.clone()).with_halo_codec(HaloCodec::F32);
+    let (w1, s1) = explicit.multirank_sweep(&spec, &g, &d, &Backend::sdma(), steps);
+    assert_eq!(w1.data, w0.data, "explicit f32 codec must stay bitwise");
+    assert_eq!(s1.exchanged_bytes, s0.exchanged_bytes);
+    assert_eq!(exchange::transport_rounds() - before, steps as u64);
+    let squeezed = Driver::new(2, p.clone()).with_halo_codec(HaloCodec::Bf16);
+    let before = exchange::transport_rounds();
+    let (_, sb) = squeezed.multirank_sweep(&spec, &g, &d, &Backend::sdma(), steps);
+    assert_eq!(sb.exchanged_bytes * 2, s0.exchanged_bytes, "bf16 wire must be half of f32");
+    assert_eq!(sb.comm_rounds, s0.comm_rounds, "codec must not change the schedule");
+    assert_eq!(exchange::transport_rounds() - before, steps as u64);
 }
 
 #[test]

@@ -17,6 +17,7 @@ use mmstencil::coordinator::driver::{
 };
 use mmstencil::coordinator::exchange::{self, Backend};
 use mmstencil::coordinator::temporal;
+use mmstencil::grid::halo::HaloCodec;
 use mmstencil::grid::{CartDecomp, Grid3};
 use mmstencil::simulator::Platform;
 use mmstencil::stencil::{Engine, EngineKind, StencilSpec};
@@ -108,4 +109,28 @@ fn wavefront_stepping_is_bitwise_classic_for_every_engine_geometry_and_worker_co
             assert_eq!(stats.substep_barriers, want_barriers, "wf={wf}");
         }
     }
+
+    // halo-codec contract (PR 9) on the wavefront path: an explicit
+    // f32 codec stays bitwise with identical wire bytes, and bf16
+    // halves the simulated wire without touching the transport
+    // schedule or the barrier ledger
+    let drv_f32 = Driver::new(3, p.clone())
+        .with_time_block(4)
+        .with_wavefront(3, 2)
+        .with_halo_codec(HaloCodec::F32);
+    let before = exchange::transport_rounds();
+    let (got_f32, s_f32) = drv_f32.multirank_sweep(&spec1, &g2, &d3, &Backend::sdma(), 4);
+    assert_eq!(got_f32.data, want2.data, "explicit f32 codec must stay bitwise");
+    assert_eq!(s_f32.exchanged_bytes, flat_stats.exchanged_bytes);
+    assert_eq!(exchange::transport_rounds() - before, 1);
+    let drv_bf = Driver::new(3, p.clone())
+        .with_time_block(4)
+        .with_wavefront(3, 2)
+        .with_halo_codec(HaloCodec::Bf16);
+    let before = exchange::transport_rounds();
+    let (_, s_bf) = drv_bf.multirank_sweep(&spec1, &g2, &d3, &Backend::sdma(), 4);
+    assert_eq!(s_bf.exchanged_bytes * 2, flat_stats.exchanged_bytes, "bf16 wire must be half");
+    assert_eq!(s_bf.comm_rounds, 1, "codec must not change the exchange schedule");
+    assert_eq!(s_bf.substep_barriers, 2, "codec must not change the barrier ledger");
+    assert_eq!(exchange::transport_rounds() - before, 1);
 }

@@ -1,18 +1,21 @@
 #!/usr/bin/env python3
-"""Diff two BENCH_engines.json files (schema mmstencil.bench_engines.v6).
+"""Diff two BENCH_engines.json files (schema mmstencil.bench_engines.v7).
 
 Rows are matched by identity key — sweep rows on (engine, pattern,
-radius, n, time_block, tile, wf), RTM rows on (engine, medium, n,
-time_block), survey rows on (engine, medium, n, shots, shards,
-checkpoint) — and the per-row throughput delta (Mcell/s, or shots/hour
-for survey rows) is printed as a percentage.  Older baselines stay
-diffable: v3 documents simply have no `survey_entries` array (the
-survey section prints every current row as new), v4 rows lack the v5
-`plan` string, which is ignored here — plans describe *how* a row ran,
-not *which* row it is, so they are deliberately not part of any
-identity key — and v5 rows lack the v6 `tile`/`wf` geometry fields,
-which default to 0/1 (classic stepping) so pre-wavefront baselines
-keep matching their untiled successors.  `threads` is deliberately NOT
+radius, n, time_block, tile, wf, halo_codec), RTM rows on (engine,
+medium, n, time_block, halo_codec), survey rows on (engine, medium, n,
+shots, shards, checkpoint) — and the per-row throughput delta
+(Mcell/s, or shots/hour for survey rows) is printed as a percentage.
+Older baselines stay diffable: v3 documents simply have no
+`survey_entries` array (the survey section prints every current row as
+new), v4 rows lack the v5 `plan` string, which is ignored here — plans
+describe *how* a row ran, not *which* row it is, so they are
+deliberately not part of any identity key — v5 rows lack the v6
+`tile`/`wf` geometry fields, which default to 0/1 (classic stepping)
+so pre-wavefront baselines keep matching their untiled successors, and
+v6 rows lack the v7 `halo_codec` wire-codec field, which defaults to
+"f32" (the lossless classic transport; `transport_bytes` is a
+measurement, not identity).  `threads` is deliberately NOT
 part of the key: the probe derives it from the host's core count, so
 keying on it would silently stop matching rows whenever the runner
 shape changes (engine labels already distinguish serial from parallel
@@ -35,14 +38,14 @@ import argparse
 import json
 import sys
 
-SWEEP_KEY = ("engine", "pattern", "radius", "n", "time_block", "tile", "wf")
-RTM_KEY = ("engine", "medium", "n", "time_block")
+SWEEP_KEY = ("engine", "pattern", "radius", "n", "time_block", "tile", "wf", "halo_codec")
+RTM_KEY = ("engine", "medium", "n", "time_block", "halo_codec")
 SURVEY_KEY = ("engine", "medium", "n", "shots", "shards", "checkpoint")
 
 # Keys absent from older-schema rows take these defaults, so old
 # baselines keep matching: v2 rows lack time_block (classic stepping),
-# v5 rows lack tile/wf (untiled).
-KEY_DEFAULTS = {"time_block": 1, "tile": 0, "wf": 1}
+# v5 rows lack tile/wf (untiled), v6 rows lack halo_codec (lossless).
+KEY_DEFAULTS = {"time_block": 1, "tile": 0, "wf": 1, "halo_codec": "f32"}
 
 
 def load(path):
