@@ -398,6 +398,8 @@ fn main() {
                 checkpoint: rep.checkpoint.name().into(),
                 retries: rep.retries() as u64,
                 failed: rep.failed() as u64,
+                faults_injected: rep.faults_injected(),
+                resumed_shots: rep.resumed_shots() as u64,
                 shots_per_hour: rep.shots_per_hour(),
             });
         }

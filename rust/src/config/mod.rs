@@ -65,6 +65,13 @@ pub struct SurveySpec {
     pub queue_capacity: usize,
     /// Adjoint-pass wavefield checkpointing strategy.
     pub checkpoint: crate::rtm::service::CheckpointStrategy,
+    /// Seeded deterministic fault plan applied to every shot (`faults =
+    /// "seed=7 kernel=0.05 transport=1@shot3"`; empty = no chaos) —
+    /// `rtm::resilience::FaultPlan`.
+    pub faults: crate::rtm::resilience::FaultPlan,
+    /// Wavefield-health policy (`health = "abort_shot" | "retry" |
+    /// "fallback_f32_codec"`).
+    pub health: crate::rtm::resilience::HealthPolicy,
 }
 
 impl Default for SurveySpec {
@@ -74,6 +81,8 @@ impl Default for SurveySpec {
             shards: 2,
             queue_capacity: 4,
             checkpoint: crate::rtm::service::CheckpointStrategy::FullState,
+            faults: crate::rtm::resilience::FaultPlan::default(),
+            health: crate::rtm::resilience::HealthPolicy::Retry,
         }
     }
 }
@@ -242,6 +251,13 @@ pub fn from_text(text: &str) -> Result<ExperimentConfig, toml::ParseError> {
     let ck_name = doc.str_or("survey", "checkpoint", sv.checkpoint.name());
     sv.checkpoint = crate::rtm::service::CheckpointStrategy::parse(ck_name)
         .map_err(|e| toml::ParseError { line: 0, msg: format!("[survey] checkpoint: {e}") })?;
+    if let Some(spec) = doc.get("survey", "faults").and_then(toml::Value::as_str) {
+        sv.faults = crate::rtm::resilience::FaultPlan::parse(spec)
+            .map_err(|e| toml::ParseError { line: 0, msg: format!("[survey] faults: {e}") })?;
+    }
+    let health_name = doc.str_or("survey", "health", sv.health.name());
+    sv.health = crate::rtm::resilience::HealthPolicy::parse(health_name)
+        .map_err(|e| toml::ParseError { line: 0, msg: format!("[survey] health: {e}") })?;
 
     // a config that would panic deep inside the propagators is a parse
     // error here, where the file/line context still exists
@@ -399,6 +415,31 @@ dx = 12.5
         let err = from_text("[survey]\ncheckpoint = \"rematerialize\"\n").unwrap_err();
         assert!(err.to_string().contains("unknown checkpoint strategy"), "{err}");
         assert!(err.to_string().contains("full_state | boundary_saving"), "{err}");
+    }
+
+    #[test]
+    fn survey_faults_and_health_keys_parse_and_reject() {
+        use crate::rtm::resilience::{FaultLayer, FaultRule, HealthPolicy};
+        // defaults: no chaos, retry policy
+        let cfg = from_text("").unwrap();
+        assert!(cfg.survey.faults.is_empty());
+        assert_eq!(cfg.survey.health, HealthPolicy::Retry);
+        let cfg = from_text(
+            "[survey]\nfaults = \"seed=7 kernel=1@shot3\"\nhealth = \"fallback_f32_codec\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.survey.faults.seed(), 7);
+        assert_eq!(
+            cfg.survey.faults.rule(FaultLayer::Kernel),
+            Some(FaultRule::Count { n: 1, shot: Some(3) })
+        );
+        assert_eq!(cfg.survey.health, HealthPolicy::FallbackF32Codec);
+        // malformed specs are parse errors naming the table key
+        let err = from_text("[survey]\nfaults = \"kernel=oops\"\n").unwrap_err();
+        assert!(err.to_string().contains("[survey] faults"), "{err}");
+        let err = from_text("[survey]\nhealth = \"panic\"\n").unwrap_err();
+        assert!(err.to_string().contains("[survey] health"), "{err}");
+        assert!(err.to_string().contains("abort_shot | retry | fallback_f32_codec"), "{err}");
     }
 
     #[test]

@@ -86,17 +86,61 @@ struct RawTask(*const (dyn Fn(usize) + Sync));
 unsafe impl Send for RawTask {}
 unsafe impl Sync for RawTask {}
 
+/// A task panic surfaced to the dispatching caller: carries the first
+/// panic payload's message, so "which assertion fired" survives the
+/// worker boundary instead of collapsing into a bare flag.
+#[derive(Clone, Debug)]
+pub struct WorkerPanic {
+    /// The first panicking task's payload, rendered to a string
+    /// (`"<non-string panic payload>"` when the payload is neither
+    /// `&str` nor `String`).
+    pub msg: String,
+}
+
+impl std::fmt::Display for WorkerPanic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // the "worker panicked" prefix is load-bearing: callers that
+        // repanic with this Display keep the historical panic text
+        write!(f, "worker panicked: {}", self.msg)
+    }
+}
+
+impl std::error::Error for WorkerPanic {}
+
+/// Render a caught panic payload to a message string.
+pub(crate) fn panic_payload_msg(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<&'static str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "<non-string panic payload>".to_string())
+}
+
 struct JobInner {
     task: RawTask,
     /// Items not yet finished; guarded so completion can signal `cv`.
     remaining: Mutex<usize>,
     cv: Condvar,
     panicked: AtomicBool,
+    /// First panic payload's message (first writer wins); the flag
+    /// above stays the fast-path check.
+    panic_msg: Mutex<Option<String>>,
 }
 
 impl JobInner {
-    /// Run items `[lo, hi)`, absorbing panics into the `panicked` flag so
-    /// the submitter (not the worker) reports them.
+    fn new(task: RawTask, remaining: usize) -> Self {
+        Self {
+            task,
+            remaining: Mutex::new(remaining),
+            cv: Condvar::new(),
+            panicked: AtomicBool::new(false),
+            panic_msg: Mutex::new(None),
+        }
+    }
+
+    /// Run items `[lo, hi)`, absorbing panics into the `panicked` flag
+    /// (plus the first payload's message) so the submitter — not the
+    /// worker — reports them.
     fn execute(&self, lo: usize, hi: usize) {
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             let task = unsafe { &*self.task.0 };
@@ -104,7 +148,11 @@ impl JobInner {
                 task(i);
             }
         }));
-        if result.is_err() {
+        if let Err(payload) = result {
+            let mut slot = self.panic_msg.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(panic_payload_msg(payload.as_ref()));
+            }
             self.panicked.store(true, Ordering::Relaxed);
         }
         let mut rem = self.remaining.lock().unwrap();
@@ -112,6 +160,20 @@ impl JobInner {
         if *rem == 0 {
             self.cv.notify_all();
         }
+    }
+
+    /// The job's panic outcome, for a caller that has already joined.
+    fn panic_result(&self) -> Result<(), WorkerPanic> {
+        if !self.panicked.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        let msg = self
+            .panic_msg
+            .lock()
+            .unwrap()
+            .clone()
+            .unwrap_or_else(|| "<panic message unavailable>".to_string());
+        Err(WorkerPanic { msg })
     }
 
     fn is_done(&self) -> bool {
@@ -365,27 +427,41 @@ impl Runtime {
         &self.config
     }
 
-    /// Run `task(i)` for every `i in 0..n` on the pool and wait.
-    /// `concurrency` is the caller's parallelism hint (tile/thread count
-    /// from the sweep config); it bounds chunk granularity, not worker
-    /// count.  The submitting thread helps execute queued chunks.
+    /// Run `task(i)` for every `i in 0..n` on the pool and wait,
+    /// repanicking (with the first payload's message) if any task
+    /// panicked.  `concurrency` is the caller's parallelism hint
+    /// (tile/thread count from the sweep config); it bounds chunk
+    /// granularity, not worker count.  The submitting thread helps
+    /// execute queued chunks.
     pub fn run(&self, concurrency: usize, n: usize, task: &(dyn Fn(usize) + Sync)) {
+        if let Err(e) = self.try_run(concurrency, n, task) {
+            panic!("{e}");
+        }
+    }
+
+    /// [`run`](Self::run) that reports a task panic as an `Err` (with
+    /// the first panic payload's message) instead of repanicking — the
+    /// dispatching caller can distinguish "task panicked" from success
+    /// and contain it.  `n <= 1` runs inline, so a panic there unwinds
+    /// through the caller directly (nothing to contain: no worker was
+    /// involved).
+    pub fn try_run(
+        &self,
+        concurrency: usize,
+        n: usize,
+        task: &(dyn Fn(usize) + Sync),
+    ) -> Result<(), WorkerPanic> {
         if n == 0 {
-            return;
+            return Ok(());
         }
         if n == 1 {
             task(0);
-            return;
+            return Ok(());
         }
-        // erase the borrow; run() joins the job before returning, so the
-        // pointee outlives every dereference (see RawTask)
+        // erase the borrow; try_run() joins the job before returning, so
+        // the pointee outlives every dereference (see RawTask)
         let raw: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(task) };
-        let job = Arc::new(JobInner {
-            task: RawTask(raw as *const _),
-            remaining: Mutex::new(n),
-            cv: Condvar::new(),
-            panicked: AtomicBool::new(false),
-        });
+        let job = Arc::new(JobInner::new(RawTask(raw as *const _), n));
         let w = self.workers();
         // contiguous chunks; ~2 per hinted thread for steal slack, but
         // never more chunks than items
@@ -408,7 +484,8 @@ impl Runtime {
         self.shared.jobs.fetch_add(1, Ordering::Relaxed);
         self.shared.items.fetch_add(n as u64, Ordering::Relaxed);
         self.shared.wake_all();
-        self.wait(&job);
+        self.join_job(&job);
+        job.panic_result()
     }
 
     /// Submit a job without waiting.  The returned handle joins the job
@@ -421,12 +498,7 @@ impl Runtime {
     /// after it dies.
     pub unsafe fn submit_scoped(&self, n: usize, task: &(dyn Fn(usize) + Sync)) -> JobHandle<'_> {
         let raw: &'static (dyn Fn(usize) + Sync) = std::mem::transmute(task);
-        let job = Arc::new(JobInner {
-            task: RawTask(raw as *const _),
-            remaining: Mutex::new(n.max(1)),
-            cv: Condvar::new(),
-            panicked: AtomicBool::new(false),
-        });
+        let job = Arc::new(JobInner::new(RawTask(raw as *const _), n.max(1)));
         if n == 0 {
             *job.remaining.lock().unwrap() = 0;
             return JobHandle { job, rt: self };
@@ -444,17 +516,10 @@ impl Runtime {
         JobHandle { job, rt: self }
     }
 
-    fn wait(&self, job: &Arc<JobInner>) {
-        self.join_job(job);
-        if job.panicked.load(Ordering::Relaxed) {
-            panic!("worker panicked");
-        }
-    }
-
     /// Block (helping with queued work) until every item of `job` has
-    /// finished.  Does NOT propagate task panics — callers that want the
-    /// "worker panicked" repanic use [`wait`](Self::wait); `JobHandle`'s
-    /// drop uses this directly so joining during unwind cannot abort.
+    /// finished.  Does NOT propagate task panics — callers surface them
+    /// through `JobInner::panic_result` afterwards; `JobHandle`'s drop
+    /// uses this directly so joining during unwind cannot abort.
     fn join_job(&self, job: &Arc<JobInner>) {
         // the helping thread executes task bodies too: hold the same
         // FTZ/DAZ policy the pool workers set at startup — but restore
@@ -543,22 +608,38 @@ pub struct JobHandle<'rt> {
 
 impl JobHandle<'_> {
     /// Block (helping with queued work) until the job finishes,
-    /// repanicking if any task panicked.
+    /// repanicking (with the first payload's message) if any task
+    /// panicked.
     pub fn wait(self) {
-        self.rt.join_job(&self.job);
-        let panicked = self.job.panicked.load(Ordering::Relaxed);
-        drop(self); // re-join in Drop is a no-op: the job is done
-        if panicked {
-            panic!("worker panicked");
+        if let Err(e) = self.join() {
+            panic!("{e}");
         }
+    }
+
+    /// [`wait`](Self::wait) that reports a task panic as an `Err`
+    /// carrying the first payload's message instead of repanicking —
+    /// the dispatcher-facing form of the panic contract.
+    pub fn join(self) -> Result<(), WorkerPanic> {
+        self.rt.join_job(&self.job);
+        let result = self.job.panic_result();
+        drop(self); // re-join in Drop is a no-op: the job is done
+        result
     }
 }
 
 impl Drop for JobHandle<'_> {
     fn drop(&mut self) {
-        // join-on-drop, even during unwind (panics are swallowed here —
-        // propagation happens only through wait())
+        // join-on-drop, even during unwind (a panic cannot propagate
+        // out of a Drop) — but never *silently*: a panicked job that
+        // was only ever dropped aborts the process via the repanic
+        // below unless we are already unwinding, in which case the
+        // original panic is the one in flight and reporting is its job.
         self.rt.join_job(&self.job);
+        if !std::thread::panicking() {
+            if let Err(e) = self.job.panic_result() {
+                panic!("{e} (job handle dropped without wait/join)");
+            }
+        }
     }
 }
 
@@ -637,6 +718,35 @@ mod tests {
                 panic!("boom");
             }
         });
+    }
+
+    #[test]
+    fn try_run_surfaces_the_first_panic_payload_message() {
+        let rt = Runtime::with_workers(2);
+        let err = rt
+            .try_run(2, 16, &|i| {
+                if i == 7 {
+                    panic!("halo buffer poisoned at lane {i}");
+                }
+            })
+            .unwrap_err();
+        assert_eq!(err.msg, "halo buffer poisoned at lane 7");
+        assert_eq!(err.to_string(), "worker panicked: halo buffer poisoned at lane 7");
+        // the pool survives containment: the next job runs clean
+        rt.try_run(2, 8, &|_| {}).unwrap();
+    }
+
+    #[test]
+    fn scoped_join_reports_panic_as_error_without_aborting() {
+        let rt = Runtime::with_workers(2);
+        let task = |i: usize| {
+            if i == 1 {
+                panic!("boom in scoped task");
+            }
+        };
+        let h = unsafe { rt.submit_scoped(3, &task) };
+        let err = h.join().unwrap_err();
+        assert!(err.msg.contains("boom in scoped task"), "{err}");
     }
 
     #[test]

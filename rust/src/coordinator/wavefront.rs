@@ -34,8 +34,9 @@
 //! block-independent the result is **bitwise** the level-at-a-time
 //! classic path (`rust/tests/wavefront.rs`).
 
-use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use super::runtime::Runtime;
 
@@ -197,10 +198,55 @@ pub fn plan_band(
 /// are pre-sized — no allocation after this function's fixed handful of
 /// `with_capacity` events.
 pub fn run_band(rt: &Runtime, threads: usize, plan: &BandPlan, exec: &(dyn Fn(&Tile) + Sync)) {
+    run_band_with_deadline(rt, threads, plan, exec, None)
+        .expect("a band without a deadline always drains");
+}
+
+/// An expired [`run_band_with_deadline`] deadline: the band was
+/// abandoned with `completed` of `total` tiles executed.  Tiles already
+/// popped finish (a mid-flight stencil sweep is never torn); the rest
+/// are left unexecuted, so the band's output is incomplete and the
+/// caller must treat the step as failed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BandTimeout {
+    /// Tiles that finished before the workers gave up.
+    pub completed: usize,
+    /// Tiles the plan held.
+    pub total: usize,
+}
+
+impl std::fmt::Display for BandTimeout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "wavefront band deadline expired with {}/{} tiles completed",
+            self.completed, self.total
+        )
+    }
+}
+
+impl std::error::Error for BandTimeout {}
+
+/// [`run_band`] with an optional wall-clock deadline: when it expires,
+/// workers stop claiming tiles (in-flight tiles finish) and the band
+/// surfaces [`BandTimeout`] instead of spinning forever on a wedged or
+/// pathologically slow `exec` — the containment half of the resilience
+/// contract (DESIGN.md §16).  `None` is byte-for-byte the classic
+/// [`run_band`] schedule: the deadline check is a branch on an `Option`
+/// and touches no arithmetic, so the bitwise contract is untouched.
+pub fn run_band_with_deadline(
+    rt: &Runtime,
+    threads: usize,
+    plan: &BandPlan,
+    exec: &(dyn Fn(&Tile) + Sync),
+    deadline: Option<Duration>,
+) -> Result<(), BandTimeout> {
     let total = plan.tiles.len();
     if total == 0 {
-        return;
+        return Ok(());
     }
+    let expires_at = deadline.map(|d| Instant::now() + d);
+    let expired = AtomicBool::new(false);
     let remaining: Vec<AtomicU32> = plan.indegree.iter().map(|&d| AtomicU32::new(d)).collect();
     let mut q = Vec::with_capacity(total);
     q.extend(
@@ -214,6 +260,12 @@ pub fn run_band(rt: &Runtime, threads: usize, plan: &BandPlan, exec: &(dyn Fn(&T
     let done = AtomicUsize::new(0);
     let workers = threads.min(total).max(1);
     rt.run(workers, workers, &|_| loop {
+        if let Some(at) = expires_at {
+            if expired.load(Ordering::Relaxed) || Instant::now() >= at {
+                expired.store(true, Ordering::Relaxed);
+                return;
+            }
+        }
         let next = ready.lock().unwrap().pop();
         match next {
             Some(t) => {
@@ -237,6 +289,11 @@ pub fn run_band(rt: &Runtime, threads: usize, plan: &BandPlan, exec: &(dyn Fn(&T
             }
         }
     });
+    let completed = done.load(Ordering::Acquire);
+    if completed < total {
+        return Err(BandTimeout { completed, total });
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -332,6 +389,38 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn deadline_surfaces_a_timeout_instead_of_hanging() {
+        let rt = Runtime::new(RuntimeConfig { workers: 2, cores_per_numa: 2, numa_nodes: 1 });
+        let plan = plan_band(1, 2, 2, 2, &|l, _| (4 + l * 2, 24 - l * 2));
+        // every tile outlives the deadline: the band must give up with
+        // a Timeout, not spin on the wedged exec forever
+        let err = run_band_with_deadline(
+            &rt,
+            2,
+            &plan,
+            &|_| std::thread::sleep(Duration::from_millis(20)),
+            Some(Duration::from_millis(5)),
+        )
+        .unwrap_err();
+        assert!(err.completed < err.total, "{err}");
+        assert_eq!(err.total, plan.len());
+        assert!(err.to_string().contains("deadline expired"), "{err}");
+        // a generous deadline drains the whole band like the classic path
+        let hits = AtomicUsize::new(0);
+        run_band_with_deadline(
+            &rt,
+            2,
+            &plan,
+            &|_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            },
+            Some(Duration::from_secs(30)),
+        )
+        .unwrap();
+        assert_eq!(hits.load(Ordering::Relaxed), plan.len());
     }
 
     #[test]

@@ -77,6 +77,15 @@ impl HaloCodec {
         }
     }
 
+    /// True for the quantizing 16-bit codecs.  An [`F32`](Self::F32)
+    /// wire round-trips bitwise, so transport-corruption chaos
+    /// (`rtm::resilience`) has nothing to perturb there — the fault
+    /// injector and the `fallback_f32_codec` health policy both key off
+    /// this.
+    pub fn is_lossy(self) -> bool {
+        self != HaloCodec::F32
+    }
+
     /// Round every staged value to what the wire format would deliver
     /// (encode + decode through `util::lowp`); no-op for [`F32`](Self::F32).
     pub fn quantize(self, buf: &mut [f32]) {

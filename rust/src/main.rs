@@ -30,6 +30,7 @@ use mmstencil::grid::halo::HaloCodec;
 use mmstencil::grid::{CartDecomp, Grid3};
 use mmstencil::metrics;
 use mmstencil::rtm::driver::{Medium, RtmConfig};
+use mmstencil::rtm::resilience::{FaultPlan, HealthPolicy};
 use mmstencil::rtm::service::{CheckpointStrategy, ShotJob, SurveyConfig, SurveyRunner};
 use mmstencil::runtime::{Runtime, Tensor};
 use mmstencil::simulator::Platform;
@@ -91,6 +92,12 @@ USAGE: mmstencil <subcommand> [--key value ...]
              --engine matrix_unit --checkpoint full_state|boundary_saving
              --halo_codec f32|bf16|f16 --queue_capacity 4 --plan \"…\"
              multi-shot survey on the shot service
+             --faults \"seed=7 kernel=1@shot3\"   seeded chaos plan (DESIGN §16);
+                                    failed shots under an active plan exit 0
+             --health abort_shot|retry|fallback_f32_codec   wavefield monitor policy
+             --submit_timeout_ms k  submission deadline per shot (0 = block)
+             --journal shots.journal   write-ahead journal (crash-consistent)
+             --resume  shots.journal   skip journaled shots, bitwise-identical image
   exchange   --n 128 --radius 4             Table II halo bandwidth test
   scaling    --mode strong|weak --kernel 3DStarR4 --n 64
              --steps 4 --time_block k   one halo exchange per k fused steps
@@ -365,12 +372,19 @@ fn cmd_survey(opts: &Opts) -> Result<(), String> {
         cfg = cfg.with_plan(&p);
     }
     let shots = opt_usize(opts, "shots", 8).max(1);
+    let faults = match opts.get("faults") {
+        Some(s) => FaultPlan::parse(s).map_err(|e| format!("--faults: {e}"))?,
+        None => FaultPlan::default(),
+    };
     let mut scfg = SurveyConfig::default();
     scfg.shards = opt_usize(opts, "shards", scfg.shards).max(1);
     scfg.queue_capacity = opt_usize(opts, "queue_capacity", scfg.queue_capacity).max(1);
     scfg.checkpoint = CheckpointStrategy::parse(opt_str(opts, "checkpoint", "full_state"))
         .map_err(|e| format!("--checkpoint: {e}"))?;
-    let jobs = survey_jobs(&cfg, shots).map_err(|e| e.to_string())?;
+    scfg.health = HealthPolicy::parse(opt_str(opts, "health", scfg.health.name()))
+        .map_err(|e| format!("--health: {e}"))?;
+    scfg.submit_timeout_ms = opt_usize(opts, "submit_timeout_ms", 0) as u64;
+    let jobs = survey_jobs(&cfg, shots, faults).map_err(|e| e.to_string())?;
     println!(
         "RTM {medium:?} survey: {} shots on {} shard(s), {}×{}×{} grid, {} steps, \
          {} engine, {} checkpointing",
@@ -385,13 +399,25 @@ fn cmd_survey(opts: &Opts) -> Result<(), String> {
     );
     let p = Platform::paper();
     let mut runner = SurveyRunner::new(scfg, &p).map_err(|e| e.to_string())?;
-    let report = runner.run(jobs);
-    let mut t =
-        Table::new(&["shot", "shard", "stolen", "attempts", "deq seq", "status", "Gpoint/s"]);
+    let report = if let Some(path) = opts.get("resume") {
+        println!("  resuming from journal {path}");
+        runner.resume(jobs, path).map_err(|e| e.to_string())?
+    } else if let Some(path) = opts.get("journal") {
+        println!("  journaling to {path}");
+        runner.run_journaled(jobs, path.as_str()).map_err(|e| e.to_string())?
+    } else {
+        runner.run(jobs)
+    };
+    let mut t = Table::new(&[
+        "shot", "shard", "stolen", "attempts", "deq seq", "faults", "status", "Gpoint/s",
+    ]);
     for r in &report.records {
         let (status, gpps) = match (&r.status, &r.report) {
             (mmstencil::rtm::service::ShotStatus::Completed, Some(rep)) => {
                 ("ok".to_string(), f(rep.gpoints_per_s / 1e9, 3))
+            }
+            (mmstencil::rtm::service::ShotStatus::Completed, None) if r.resumed => {
+                ("ok (resumed)".to_string(), "-".to_string())
             }
             (mmstencil::rtm::service::ShotStatus::Failed(e), _) => {
                 (format!("FAILED: {e}"), "-".to_string())
@@ -404,17 +430,21 @@ fn cmd_survey(opts: &Opts) -> Result<(), String> {
             if r.stolen { "yes" } else { "" }.to_string(),
             r.attempts.to_string(),
             r.dequeue_seq.to_string(),
+            r.faults_injected.to_string(),
             status,
             gpps,
         ]);
     }
     t.print();
     println!(
-        "  {} completed, {} failed, {} retried, {} stolen in {:.2}s  →  {:.0} shots/hour",
+        "  {} completed, {} failed, {} retried, {} stolen, {} fault(s) injected, \
+         {} resumed in {:.2}s  →  {:.0} shots/hour",
         report.completed(),
         report.failed(),
         report.retries(),
         report.stolen(),
+        report.faults_injected(),
+        report.resumed_shots(),
         report.wall_s,
         report.shots_per_hour()
     );
@@ -426,7 +456,15 @@ fn cmd_survey(opts: &Opts) -> Result<(), String> {
         );
     }
     if report.failed() > 0 {
-        return Err(format!("{} shot(s) failed", report.failed()));
+        if faults.is_empty() {
+            return Err(format!("{} shot(s) failed", report.failed()));
+        }
+        // contained chaos: an active fault plan expects casualties — the
+        // survey kept going and the survivors imaged, so exit clean
+        println!(
+            "  {} shot(s) failed under the active fault plan — contained, exiting 0",
+            report.failed()
+        );
     }
     Ok(())
 }
@@ -436,6 +474,7 @@ fn cmd_survey(opts: &Opts) -> Result<(), String> {
 fn survey_jobs(
     cfg: &RtmConfig,
     shots: usize,
+    faults: FaultPlan,
 ) -> Result<Vec<ShotJob>, mmstencil::rtm::driver::ConfigError> {
     let (sz, _, sy) = cfg.src_pos();
     let lo = cfg.sponge_width + 1;
@@ -443,7 +482,7 @@ fn survey_jobs(
     (0..shots)
         .map(|s| {
             let sx = lo + (hi - lo) * s / shots.saturating_sub(1).max(1);
-            ShotJob::builder(cfg.clone()).src(sz, sx, sy).build()
+            ShotJob::builder(cfg.clone()).src(sz, sx, sy).fault_plan(faults).build()
         })
         .collect()
 }
@@ -645,6 +684,10 @@ fn cmd_run(opts: &Opts) -> Result<(), String> {
     o.insert("shards".into(), cfg.survey.shards.to_string());
     o.insert("queue_capacity".into(), cfg.survey.queue_capacity.to_string());
     o.insert("checkpoint".into(), cfg.survey.checkpoint.name().to_string());
+    if !cfg.survey.faults.is_empty() {
+        o.insert("faults".into(), cfg.survey.faults.to_string());
+    }
+    o.insert("health".into(), cfg.survey.health.name().to_string());
     if let Some(p) = cfg.tune.plan {
         o.insert("plan".into(), p.to_string());
     }

@@ -29,7 +29,13 @@
 //! the halo wire codec ([`HaloCodec`](crate::grid::halo::HaloCodec))
 //! the row exchanged under and the bytes it put on the simulated wire
 //! (0 for single-rank/periodic workloads that never exchange) — so a
-//! compression-ratio change is a visible row diff.
+//! compression-ratio change is a visible row diff.  v8 (this PR) adds
+//! `faults_injected`/`resumed_shots` to every survey row — the chaos
+//! accounting of the resilience subsystem
+//! ([`rtm::resilience`](crate::rtm::resilience)).  In the probe's
+//! baseline rows `faults_injected` equals `retries` (one deliberate
+//! kernel fault proves the retry path) and `resumed_shots` is 0, so
+//! any other value in the artifact flags an unexpected fault plan.
 
 /// Schema tag carried in the document; bump on breaking field changes.
 /// v1 → v2: added the `rtm_entries` array.
@@ -38,7 +44,8 @@
 /// v4 → v5: added `plan` (active `TunePlan` string) to sweep/RTM rows.
 /// v5 → v6: added `tile`/`wf` (wavefront tile geometry) to sweep rows.
 /// v6 → v7: added `halo_codec`/`transport_bytes` to sweep/RTM rows.
-pub const SCHEMA: &str = "mmstencil.bench_engines.v7";
+/// v7 → v8: added `faults_injected`/`resumed_shots` to survey rows.
+pub const SCHEMA: &str = "mmstencil.bench_engines.v8";
 
 /// One engine × sweep-workload measurement.
 #[derive(Clone, Debug)]
@@ -142,6 +149,16 @@ pub struct SurveyBench {
     pub retries: u64,
     /// Shots recorded as failed after exhausting their retries.
     pub failed: u64,
+    /// Faults the resilience subsystem injected across all attempts
+    /// ([`SurveyReport::faults_injected`]
+    /// (crate::rtm::service::SurveyReport::faults_injected)); 0 for the
+    /// fault-free baseline.  Added in schema v8.
+    pub faults_injected: u64,
+    /// Shots adopted from a survey journal instead of re-run
+    /// ([`SurveyReport::resumed_shots`]
+    /// (crate::rtm::service::SurveyReport::resumed_shots)); 0 for a
+    /// from-scratch run.  Added in schema v8.
+    pub resumed_shots: u64,
     /// Completed-shot throughput.
     pub shots_per_hour: f64,
 }
@@ -221,7 +238,8 @@ pub fn render(
         s.push_str(&format!(
             "    {{\"engine\": \"{}\", \"medium\": \"{}\", \"n\": {}, \"shots\": {}, \
              \"shards\": {}, \"threads\": {}, \"checkpoint\": \"{}\", \"retries\": {}, \
-             \"failed\": {}, \"shots_per_hour\": {:.3}}}{}\n",
+             \"failed\": {}, \"faults_injected\": {}, \"resumed_shots\": {}, \
+             \"shots_per_hour\": {:.3}}}{}\n",
             esc(&e.engine),
             esc(&e.medium),
             e.n,
@@ -231,6 +249,8 @@ pub fn render(
             esc(&e.checkpoint),
             e.retries,
             e.failed,
+            e.faults_injected,
+            e.resumed_shots,
             finite(e.shots_per_hour),
             if i + 1 == survey_entries.len() { "" } else { "," }
         ));
@@ -301,6 +321,8 @@ pub fn validate(s: &str) -> Result<(usize, usize, usize), String> {
         "\"shards\":",
         "\"retries\":",
         "\"failed\":",
+        "\"faults_injected\":",
+        "\"resumed_shots\":",
         "\"shots_per_hour\":",
     ] {
         if s.matches(k).count() != surveys {
@@ -398,6 +420,8 @@ mod tests {
             checkpoint: "boundary_saving".into(),
             retries: 1,
             failed: 0,
+            faults_injected: 0,
+            resumed_shots: 0,
             shots_per_hour: 1234.5,
         }]
     }
@@ -406,7 +430,7 @@ mod tests {
     fn render_validates() {
         let doc = render(&sample(), &rtm_sample(), &survey_sample());
         assert_eq!(validate(&doc), Ok((2, 1, 1)));
-        assert!(doc.contains("\"schema\": \"mmstencil.bench_engines.v7\""));
+        assert!(doc.contains("\"schema\": \"mmstencil.bench_engines.v8\""));
         assert!(doc.contains("\"mcells_per_s\": 123.456"));
         assert!(doc.contains("\"medium\": \"vti\""));
         assert!(doc.contains("\"allocs_per_step\": 12"));
@@ -419,6 +443,8 @@ mod tests {
         assert!(doc.contains("\"halo_codec\": \"f32\", \"transport_bytes\": 0"));
         assert!(doc.contains("\"checkpoint\": \"boundary_saving\""));
         assert!(doc.contains("\"shots_per_hour\": 1234.500"));
+        // v8: survey rows carry the chaos accounting, zero at baseline
+        assert!(doc.contains("\"faults_injected\": 0, \"resumed_shots\": 0"));
         assert!(doc.contains(
             "\"plan\": \"engine=matrix_unit vl=16 vz=4 tb=4 threads=8 tile=16 wf=2 halo=bf16\""
         ));
@@ -439,7 +465,9 @@ mod tests {
     #[test]
     fn tampered_documents_fail() {
         let doc = render(&sample(), &rtm_sample(), &survey_sample());
-        assert!(validate(&doc.replace("bench_engines.v7", "v6")).is_err());
+        assert!(validate(&doc.replace("bench_engines.v8", "v7")).is_err());
+        assert!(validate(&doc.replacen("\"faults_injected\":", "\"faults\":", 1)).is_err());
+        assert!(validate(&doc.replacen("\"resumed_shots\":", "\"resumed\":", 1)).is_err());
         assert!(validate(&doc.replacen("\"plan\":", "\"p\":", 1)).is_err());
         assert!(validate(&doc.replace("\"radius\":", "\"r\":")).is_err());
         assert!(validate(&doc.replace("\"tile\":", "\"t\":")).is_err());

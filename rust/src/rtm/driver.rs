@@ -142,6 +142,15 @@ impl RtmConfig {
         self
     }
 
+    /// Builder-style halo-codec override.  The resilience layer leans
+    /// on this: the `fallback_f32_codec` health policy re-runs a sick
+    /// attempt with [`HaloCodec::F32`] forced (lossless wire — nothing
+    /// left to corrupt), and the chaos tests flip codecs per shot.
+    pub fn with_halo_codec(mut self, codec: HaloCodec) -> Self {
+        self.halo_codec = codec;
+        self
+    }
+
     /// The temporal-blocking depth an imaging shot can actually fuse:
     /// [`time_block`](Self::time_block) **clamped to 1**.  Every
     /// `run_shot` step applies the absorbing sponge and records the

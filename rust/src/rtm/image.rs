@@ -9,7 +9,10 @@
 
 use crate::grid::Grid3;
 
-/// Accumulating RTM image.
+/// Accumulating RTM image.  `Clone` so the survey journal
+/// ([`rtm::resilience`](crate::rtm::resilience)) can hand a resumed
+/// shot's bit-exact slot back out while retaining its own copy.
+#[derive(Clone)]
 pub struct Image {
     /// Zero-lag cross-correlation sum Σ_t S·R.
     pub img: Grid3,

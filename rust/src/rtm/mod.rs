@@ -13,7 +13,12 @@
 //! * [`service`]  — survey-scale shot scheduler: sharded work-stealing
 //!   queue, pipelined forward/adjoint pumps, strategy-selectable
 //!   wavefield checkpointing, tree-reduced image accumulation
-//!   ([`ShotJob`](service::ShotJob) / [`SurveyRunner`](service::SurveyRunner)).
+//!   ([`ShotJob`](service::ShotJob) / [`SurveyRunner`](service::SurveyRunner));
+//! * [`resilience`] — seeded deterministic fault injection
+//!   ([`FaultPlan`](resilience::FaultPlan)), the crash-consistent
+//!   survey journal ([`SurveyJournal`](resilience::SurveyJournal)),
+//!   and the wavefield health policy
+//!   ([`HealthPolicy`](resilience::HealthPolicy)) — DESIGN.md §16.
 //!
 //! Ownership/engine contract (DESIGN.md §10): the propagators own their
 //! wavefield grids and whole-grid scratch (`VtiScratch`/`TtiScratch`);
@@ -31,6 +36,7 @@ pub mod driver;
 pub mod image;
 pub mod media;
 pub mod pjrt_prop;
+pub mod resilience;
 pub mod service;
 pub mod tti;
 pub mod vti;

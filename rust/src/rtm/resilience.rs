@@ -1,0 +1,848 @@
+//! Layered survey resilience (DESIGN.md §16): deterministic fault
+//! injection, the crash-consistent survey journal, and the wavefield
+//! health policy.
+//!
+//! Three cooperating pieces, all deterministic:
+//!
+//! * [`FaultPlan`] — a **seeded, reproducible** fault schedule parsed
+//!   from a compact spec string (`"seed=7 kernel=0.05
+//!   transport=1@shot3"`), replacing the old ad-hoc
+//!   `inject_faults(n)` counter.  Faults target four layers
+//!   ([`FaultLayer`]): a forward-step **kernel** panic, **transport**
+//!   corruption of a quantized halo shell, a **checkpoint**-store
+//!   read-back failure, and a worker **stall**.  Every injection
+//!   decision is a pure function of `(seed, layer, shot, attempt)` —
+//!   never of wall clock or scheduling — so a chaos run replays
+//!   bit-for-bit regardless of worker or shard interleaving.
+//! * [`SurveyJournal`] — a write-ahead, shot-indexed journal in the
+//!   crate's manifest idiom (`key|value` lines, canonical sorted
+//!   serialization, same family as `runtime::PlanCache`).  Every
+//!   terminal shot record — and, for completed shots, the **bit-exact**
+//!   image slot (`f32::to_bits` hex) — is published by writing a
+//!   sibling temp file and `fs::rename`-ing it over the journal, so a
+//!   kill at any instant leaves either the previous or the next
+//!   consistent journal, never a torn one.  Because the survey image is
+//!   a tree reduction over shot-indexed slots, a resumed survey that
+//!   replays only the missing shots reproduces the fault-free image
+//!   **bitwise** (pinned in `rust/tests/resilience.rs`).
+//! * [`HealthPolicy`] — what the per-step wavefield health monitor (an
+//!   O(1)-alloc finite/ceiling check on the energy reduction the
+//!   forward pass already computes) does when a shot goes non-finite or
+//!   blows past [`HEALTH_ENERGY_CEILING`]: abort the shot, retry the
+//!   attempt, or retry with the halo wire codec forced back to lossless
+//!   f32 ([`HealthPolicy::FallbackF32Codec`]) so bf16/f16 compression
+//!   degrades gracefully instead of corrupting the image.
+//!
+//! The service integration lives in [`rtm::service`](super::service);
+//! the CLI exposes the spec string as `--faults`, the policy as
+//! `--health`, and the journal as `--journal` / `--resume`.
+
+use super::image::Image;
+use crate::grid::Grid3;
+use crate::util::err::{Context, Result as ErrResult};
+use crate::util::{ParseKindError, XorShift};
+use crate::{anyhow, bail};
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Wavefield-health energy ceiling: a per-step field energy above this
+/// (or any non-finite energy) marks the attempt unhealthy.  Orders of
+/// magnitude above any legitimate shot (tiny fixtures peak around 1e6;
+/// f32 fields cap total energy near 1e38) and far below `f64::MAX`, so
+/// healthy runs never trip it and genuine blow-ups always do.
+pub const HEALTH_ENERGY_CEILING: f64 = 1e30;
+
+/// Injected worker-stall duration, milliseconds.  Long enough to
+/// genuinely perturb pump scheduling in a chaos run, short enough to
+/// keep CI-sized fault matrices cheap.
+pub const STALL_MS: u64 = 10;
+
+// ---------------------------------------------------------------------------
+// fault taxonomy
+// ---------------------------------------------------------------------------
+
+/// The four layers a [`FaultPlan`] can inject at (DESIGN.md §16 fault
+/// taxonomy).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FaultLayer {
+    /// Forward-step kernel panic: the attempt panics before touching
+    /// the propagators; the pump's containment turns it into a failed
+    /// attempt routed through the retry path.
+    Kernel,
+    /// Halo-transport corruption: a NaN lands in the quantized boundary
+    /// shell (only meaningful under a lossy wire codec — a lossless f32
+    /// wire is bitwise and cannot corrupt).  Detected by the health
+    /// monitor, handled per [`HealthPolicy`].
+    Transport,
+    /// Checkpoint-store read-back failure: the snapshot store reports
+    /// an unreadable snapshot at record time; the attempt fails with an
+    /// ordinary error and retries.
+    Checkpoint,
+    /// Worker stall: the attempt sleeps [`STALL_MS`] before running.
+    /// Perturbs scheduling without failing anything — the determinism
+    /// contracts must hold through it.
+    Stall,
+}
+
+impl FaultLayer {
+    /// Every layer, in spec/display order.
+    pub const ALL: [FaultLayer; 4] =
+        [FaultLayer::Kernel, FaultLayer::Transport, FaultLayer::Checkpoint, FaultLayer::Stall];
+
+    /// Canonical spec keys, aligned with [`ALL`](Self::ALL).
+    pub const NAMES: [&'static str; 4] = ["kernel", "transport", "checkpoint", "stall"];
+
+    /// Canonical spec key of this layer.
+    pub fn name(self) -> &'static str {
+        Self::NAMES[self.index()]
+    }
+
+    fn index(self) -> usize {
+        match self {
+            FaultLayer::Kernel => 0,
+            FaultLayer::Transport => 1,
+            FaultLayer::Checkpoint => 2,
+            FaultLayer::Stall => 3,
+        }
+    }
+}
+
+/// One layer's injection rule inside a [`FaultPlan`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultRule {
+    /// Inject on the first `n` attempts — of shot `shot` when present
+    /// (`"1@shot3"`), of every shot otherwise (`"2"`, the old
+    /// `inject_faults(n)` counter semantics).
+    Count {
+        /// Attempts 1..=`n` inject.
+        n: u32,
+        /// Restrict to one shot id; `None` applies to every shot.
+        shot: Option<u32>,
+    },
+    /// Inject each attempt independently with probability `ppm / 1e6`
+    /// (`"0.05"`; probabilities are quantized to parts-per-million so
+    /// the plan stays `Eq` and round-trips exactly).
+    Prob {
+        /// Injection probability in parts-per-million.
+        ppm: u32,
+    },
+}
+
+impl fmt::Display for FaultRule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultRule::Count { n, shot: None } => write!(f, "{n}"),
+            FaultRule::Count { n, shot: Some(s) } => write!(f, "{n}@shot{s}"),
+            // Debug float formatting keeps the decimal point ("1.0",
+            // "0.05"), which is what disambiguates Prob from Count on
+            // re-parse
+            FaultRule::Prob { ppm } => write!(f, "{:?}", *ppm as f64 / 1e6),
+        }
+    }
+}
+
+/// A seeded, deterministic fault schedule: at most one [`FaultRule`]
+/// per [`FaultLayer`], plus the seed that keys probabilistic rules.
+///
+/// Parsed from a whitespace-separated `key=value` spec
+/// ([`parse`](Self::parse)), re-emitted canonically by `Display`
+/// (`parse(plan.to_string()) == plan`).  `Copy + Eq`, so it threads
+/// through `ShotJob` and config structs without breaking their
+/// by-value idioms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct FaultPlan {
+    seed: u64,
+    rules: [Option<FaultRule>; 4],
+}
+
+impl FaultPlan {
+    /// Every key the spec grammar accepts (`seed` plus the four
+    /// layers) — the allowed list parse errors report.
+    pub const SPEC_KEYS: [&'static str; 5] =
+        ["seed", "kernel", "transport", "checkpoint", "stall"];
+
+    /// Parse a compact spec string: whitespace-separated `key=value`
+    /// tokens where `key` is `seed` or a layer name and a layer's value
+    /// is `<count>`, `<count>@shot<id>`, or a probability containing a
+    /// decimal point.  The empty string parses to the empty plan.
+    ///
+    /// ```
+    /// use mmstencil::rtm::resilience::FaultPlan;
+    /// let plan = FaultPlan::parse("seed=7 kernel=0.05 transport=1@shot3").unwrap();
+    /// assert_eq!(FaultPlan::parse(&plan.to_string()).unwrap(), plan);
+    /// ```
+    pub fn parse(spec: &str) -> Result<Self, ParseKindError> {
+        let mut plan = FaultPlan::default();
+        for tok in spec.split_whitespace() {
+            let Some((key, val)) = tok.split_once('=') else {
+                return Err(ParseKindError::new("fault spec", tok, &Self::SPEC_KEYS)
+                    .with_detail("token is not a key=value pair"));
+            };
+            if key == "seed" {
+                plan.seed = val.parse().map_err(|_| {
+                    ParseKindError::new("fault spec", tok, &Self::SPEC_KEYS)
+                        .with_detail(format!("seed must be an unsigned integer, got {val:?}"))
+                })?;
+                continue;
+            }
+            let Some(layer) = FaultLayer::ALL
+                .into_iter()
+                .find(|l| l.name() == key)
+            else {
+                return Err(ParseKindError::new("fault layer", key, &Self::SPEC_KEYS));
+            };
+            plan.rules[layer.index()] = Some(Self::parse_rule(tok, val)?);
+        }
+        Ok(plan)
+    }
+
+    fn parse_rule(tok: &str, val: &str) -> Result<FaultRule, ParseKindError> {
+        let bad = |detail: String| {
+            ParseKindError::new("fault rule", tok, &Self::SPEC_KEYS).with_detail(detail)
+        };
+        if let Some((n, rest)) = val.split_once('@') {
+            let shot = rest
+                .strip_prefix("shot")
+                .ok_or_else(|| bad(format!("expected <count>@shot<id>, got {val:?}")))?;
+            let n = n
+                .parse()
+                .map_err(|_| bad(format!("count must be an unsigned integer, got {n:?}")))?;
+            let shot = shot
+                .parse()
+                .map_err(|_| bad(format!("shot id must be an unsigned integer, got {shot:?}")))?;
+            Ok(FaultRule::Count { n, shot: Some(shot) })
+        } else if val.contains('.') {
+            let p: f64 = val
+                .parse()
+                .map_err(|_| bad(format!("probability must be a float in [0, 1], got {val:?}")))?;
+            if !(0.0..=1.0).contains(&p) {
+                return Err(bad(format!("probability {p} outside [0, 1]")));
+            }
+            Ok(FaultRule::Prob { ppm: (p * 1e6).round() as u32 })
+        } else {
+            let n = val
+                .parse()
+                .map_err(|_| bad(format!("count must be an unsigned integer, got {val:?}")))?;
+            Ok(FaultRule::Count { n, shot: None })
+        }
+    }
+
+    /// The legacy `inject_faults(n)` counter as a plan: the first `n`
+    /// attempts of every shot fail at the kernel layer.
+    pub fn counter(n: usize) -> Self {
+        let mut plan = Self::default();
+        if n > 0 {
+            plan.rules[FaultLayer::Kernel.index()] =
+                Some(FaultRule::Count { n: n as u32, shot: None });
+        }
+        plan
+    }
+
+    /// The every-shot kernel fault budget (the `inject_faults(n)`
+    /// compatibility view); 0 when the kernel rule is absent, shot-
+    /// scoped, or probabilistic.
+    pub fn counter_budget(&self) -> usize {
+        match self.rules[FaultLayer::Kernel.index()] {
+            Some(FaultRule::Count { n, shot: None }) => n as usize,
+            _ => 0,
+        }
+    }
+
+    /// Replace the seed, keeping the rules.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// The seed keying probabilistic rules.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The rule installed for `layer`, if any.
+    pub fn rule(&self, layer: FaultLayer) -> Option<FaultRule> {
+        self.rules[layer.index()]
+    }
+
+    /// True when no layer has a rule — the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.rules.iter().all(Option::is_none)
+    }
+
+    /// The injection decision for `layer` on 1-based `attempt` of
+    /// `shot` — a pure function of `(seed, layer, shot, attempt)`, so
+    /// chaos runs replay identically under any scheduling.
+    pub fn injects(&self, layer: FaultLayer, shot: usize, attempt: usize) -> bool {
+        match self.rules[layer.index()] {
+            None => false,
+            Some(FaultRule::Count { n, shot: scope }) => {
+                scope.map_or(true, |s| s as usize == shot) && attempt <= n as usize
+            }
+            Some(FaultRule::Prob { ppm }) => {
+                let mut key = self.seed ^ 0x6A09_E667_F3BC_C909;
+                key = key.wrapping_add(
+                    (layer.index() as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                );
+                key = key.wrapping_add((shot as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9));
+                key = key.wrapping_add((attempt as u64).wrapping_mul(0x94D0_49BB_1331_11EB));
+                XorShift::new(key).next_f64() < ppm as f64 / 1e6
+            }
+        }
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "seed={}", self.seed)?;
+        for layer in FaultLayer::ALL {
+            if let Some(rule) = self.rules[layer.index()] {
+                write!(f, " {}={}", layer.name(), rule)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One `(plan, shot, attempt)` evaluation point — the view of a
+/// [`FaultPlan`] the forward pass consults.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultSite {
+    plan: FaultPlan,
+    /// Shot id the attempt belongs to.
+    pub shot: usize,
+    /// 1-based attempt number.
+    pub attempt: usize,
+}
+
+impl FaultSite {
+    /// The evaluation point for `attempt` (1-based) of `shot`.
+    pub fn new(plan: FaultPlan, shot: usize, attempt: usize) -> Self {
+        Self { plan, shot, attempt }
+    }
+
+    /// A site that injects nothing (replay and single-shot paths).
+    pub fn none() -> Self {
+        Self { plan: FaultPlan::default(), shot: 0, attempt: 1 }
+    }
+
+    /// Whether `layer` injects at this site.
+    pub fn injects(&self, layer: FaultLayer) -> bool {
+        self.plan.injects(layer, self.shot, self.attempt)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// wavefield health policy
+// ---------------------------------------------------------------------------
+
+/// What the wavefield health monitor does when a forward attempt goes
+/// non-finite or blows past [`HEALTH_ENERGY_CEILING`].  Policies only
+/// act on *unhealthy* attempts — a healthy survey images bitwise
+/// identically under every policy (pinned in
+/// `rust/tests/resilience.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum HealthPolicy {
+    /// Fail the shot immediately — no retries, the error surfaces in
+    /// the report.
+    AbortShot,
+    /// Fail the attempt and route it through the ordinary retry budget
+    /// (the default: matches the service's retry-once philosophy).
+    #[default]
+    Retry,
+    /// Retry with the halo wire codec forced back to lossless f32 for
+    /// the remaining attempts — graceful degradation for bf16/f16
+    /// compression (trades the bandwidth win for a finite image, so the
+    /// recovered shot is *not* bitwise the lossy-codec shot).
+    FallbackF32Codec,
+}
+
+impl HealthPolicy {
+    /// Canonical names, aligned with the variants.
+    pub const NAMES: [&'static str; 3] = ["abort_shot", "retry", "fallback_f32_codec"];
+
+    /// Runtime selection by canonical name — same [`ParseKindError`]
+    /// contract as the crate's other `parse` selectors.
+    pub fn parse(name: &str) -> Result<Self, ParseKindError> {
+        match name {
+            "abort_shot" => Ok(HealthPolicy::AbortShot),
+            "retry" => Ok(HealthPolicy::Retry),
+            "fallback_f32_codec" => Ok(HealthPolicy::FallbackF32Codec),
+            _ => Err(ParseKindError::new("health policy", name, &Self::NAMES)),
+        }
+    }
+
+    /// Canonical name; `parse(policy.name())` round-trips.
+    pub fn name(self) -> &'static str {
+        match self {
+            HealthPolicy::AbortShot => "abort_shot",
+            HealthPolicy::Retry => "retry",
+            HealthPolicy::FallbackF32Codec => "fallback_f32_codec",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// crash-consistent survey journal
+// ---------------------------------------------------------------------------
+
+/// One journaled shot: the terminal scheduling record plus, for
+/// completed shots, the bit-exact image slot.
+#[derive(Clone, Debug)]
+pub struct JournalEntry {
+    /// Shot id (the tree-reduction slot index).
+    pub id: usize,
+    /// Shard whose pipeline processed the shot.
+    pub shard: usize,
+    /// Whether the shot was stolen from another shard's lane.
+    pub stolen: bool,
+    /// Forward attempts consumed.
+    pub attempts: usize,
+    /// Global dequeue sequence number.
+    pub dequeue_seq: u64,
+    /// Faults the plan injected into this shot, across all attempts.
+    pub faults_injected: u64,
+    /// `None` for a completed shot; the terminal error otherwise
+    /// (resume re-runs failed shots).
+    pub error: Option<String>,
+    /// Completed shots carry their image slot (serialized via
+    /// `f32::to_bits`, so the round trip is bitwise).
+    pub image: Option<Image>,
+}
+
+impl JournalEntry {
+    /// True when the shot completed and its image slot is present.
+    pub fn completed(&self) -> bool {
+        self.error.is_none() && self.image.is_some()
+    }
+}
+
+/// Write-ahead, shot-indexed survey journal in the crate's manifest
+/// idiom: `key|value` lines, `#` comments and blanks skipped, canonical
+/// id-sorted serialization (byte-stable round trip).
+///
+/// **Atomic-rename invariant**: [`commit`](Self::commit) serializes the
+/// whole journal to a sibling `*.tmp` file and `fs::rename`s it over
+/// the journal path.  Rename within a directory is atomic, so a crash
+/// at any instant leaves either the pre-commit or post-commit journal
+/// intact — never a torn file.  A survey killed between shots resumes
+/// from exactly the shots the journal holds.
+pub struct SurveyJournal {
+    path: PathBuf,
+    shots: usize,
+    entries: BTreeMap<usize, JournalEntry>,
+}
+
+impl SurveyJournal {
+    const HEADER: &'static str = "# mmstencil survey journal v1: shot|id|meta, err|id|…, img/illum|id|dims|hex\n";
+
+    /// Start a fresh journal for a `shots`-shot survey at `path`,
+    /// publishing the empty header immediately (so a kill before the
+    /// first shot still leaves a loadable journal).
+    pub fn create(path: impl Into<PathBuf>, shots: usize) -> ErrResult<Self> {
+        let j = Self { path: path.into(), shots, entries: BTreeMap::new() };
+        j.store()?;
+        Ok(j)
+    }
+
+    /// Load an existing journal from `path`.
+    pub fn load(path: impl AsRef<Path>) -> ErrResult<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading survey journal {}", path.display()))?;
+        let mut j = Self::parse(&text)
+            .with_context(|| format!("parsing survey journal {}", path.display()))?;
+        j.path = path.to_path_buf();
+        Ok(j)
+    }
+
+    /// Load `path` if it exists (resuming a prior run), else create a
+    /// fresh journal.  A journal recorded for a different shot count is
+    /// rejected — resuming must re-present the same survey.
+    pub fn open(path: impl Into<PathBuf>, shots: usize) -> ErrResult<Self> {
+        let path = path.into();
+        if path.exists() {
+            let j = Self::load(&path)?;
+            if j.shots != shots {
+                bail!(
+                    "survey journal {} records {} shots, survey has {shots}",
+                    path.display(),
+                    j.shots
+                );
+            }
+            Ok(j)
+        } else {
+            Self::create(path, shots)
+        }
+    }
+
+    /// Parse the manifest text (path is set by the loader).
+    pub fn parse(text: &str) -> ErrResult<Self> {
+        let mut shots = None;
+        let mut entries: BTreeMap<usize, JournalEntry> = BTreeMap::new();
+        let mut grids: BTreeMap<usize, (Option<Grid3>, Option<Grid3>, usize)> = BTreeMap::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let at = |msg: &str| anyhow!("line {}: {msg}", ln + 1);
+            let mut fields = line.splitn(3, '|');
+            let kind = fields.next().unwrap_or_default();
+            match kind {
+                "shots" => {
+                    let n = fields.next().ok_or_else(|| at("shots needs a count"))?;
+                    shots = Some(n.parse().map_err(|_| at("shots count is not an integer"))?);
+                }
+                "shot" => {
+                    let id: usize = fields
+                        .next()
+                        .and_then(|s| s.parse().ok())
+                        .ok_or_else(|| at("shot needs an integer id"))?;
+                    let meta = fields.next().ok_or_else(|| at("shot needs metadata"))?;
+                    let mut e = JournalEntry {
+                        id,
+                        shard: 0,
+                        stolen: false,
+                        attempts: 0,
+                        dequeue_seq: 0,
+                        faults_injected: 0,
+                        error: None,
+                        image: None,
+                    };
+                    for kv in meta.split_whitespace() {
+                        let (k, v) =
+                            kv.split_once('=').ok_or_else(|| at("metadata must be key=value"))?;
+                        let n = || v.parse::<u64>().map_err(|_| at("metadata value not integer"));
+                        match k {
+                            "shard" => e.shard = n()? as usize,
+                            "stolen" => e.stolen = n()? != 0,
+                            "attempts" => e.attempts = n()? as usize,
+                            "seq" => e.dequeue_seq = n()?,
+                            "faults" => e.faults_injected = n()?,
+                            "corr" => grids.entry(id).or_default().2 = n()? as usize,
+                            _ => return Err(at(&format!("unknown shot metadata key {k:?}"))),
+                        }
+                    }
+                    entries.insert(id, e);
+                }
+                "err" => {
+                    let id: usize = fields
+                        .next()
+                        .and_then(|s| s.parse().ok())
+                        .ok_or_else(|| at("err needs an integer id"))?;
+                    let msg = fields.next().unwrap_or_default().to_string();
+                    entries
+                        .get_mut(&id)
+                        .ok_or_else(|| at("err precedes its shot line"))?
+                        .error = Some(msg);
+                }
+                "img" | "illum" => {
+                    let id: usize = fields
+                        .next()
+                        .and_then(|s| s.parse().ok())
+                        .ok_or_else(|| at("grid line needs an integer id"))?;
+                    let rest = fields.next().ok_or_else(|| at("grid line needs dims|hex"))?;
+                    let (dims, hex) =
+                        rest.split_once('|').ok_or_else(|| at("grid line needs dims|hex"))?;
+                    let g = decode_grid(dims, hex).map_err(|e| at(&e.to_string()))?;
+                    let slot = grids.entry(id).or_default();
+                    if kind == "img" {
+                        slot.0 = Some(g);
+                    } else {
+                        slot.1 = Some(g);
+                    }
+                }
+                other => return Err(at(&format!("unknown record kind {other:?}"))),
+            }
+        }
+        for (id, (img, illum, corr)) in grids {
+            let e = entries
+                .get_mut(&id)
+                .ok_or_else(|| anyhow!("image slot for unknown shot {id}"))?;
+            match (img, illum) {
+                (Some(img), Some(illum)) => {
+                    e.image = Some(Image { img, illum, correlations: corr })
+                }
+                _ => bail!("shot {id} has a partial image slot (img/illum pair incomplete)"),
+            }
+        }
+        Ok(Self {
+            path: PathBuf::new(),
+            shots: shots.ok_or_else(|| anyhow!("journal has no shots header"))?,
+            entries,
+        })
+    }
+
+    /// Canonical serialization: header, shot count, then entries in
+    /// ascending id order — byte-stable (`parse(serialize()) `
+    /// re-serializes identically).
+    pub fn serialize(&self) -> String {
+        use fmt::Write;
+        let mut out = String::from(Self::HEADER);
+        let _ = writeln!(out, "shots|{}", self.shots);
+        for e in self.entries.values() {
+            let _ = write!(
+                out,
+                "shot|{}|shard={} stolen={} attempts={} seq={} faults={}",
+                e.id, e.shard, e.stolen as u8, e.attempts, e.dequeue_seq, e.faults_injected
+            );
+            if let Some(im) = &e.image {
+                let _ = write!(out, " corr={}", im.correlations);
+            }
+            out.push('\n');
+            if let Some(err) = &e.error {
+                // the error is the line's final field: kept verbatim
+                // (newlines squashed so one entry stays one line)
+                let _ = writeln!(out, "err|{}|{}", e.id, err.replace('\n', " "));
+            }
+            if let Some(im) = &e.image {
+                encode_grid("img", e.id, &im.img, &mut out);
+                encode_grid("illum", e.id, &im.illum, &mut out);
+            }
+        }
+        out
+    }
+
+    /// Write-ahead publish: serialize to `<path>.tmp`, then atomically
+    /// rename over the journal path.
+    pub fn store(&self) -> ErrResult<()> {
+        let tmp = self.path.with_extension("journal.tmp");
+        std::fs::write(&tmp, self.serialize())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &self.path)
+            .with_context(|| format!("publishing {}", self.path.display()))
+    }
+
+    /// Record one terminal shot and publish the journal atomically —
+    /// the write-ahead step the survey pumps call per shot.
+    pub fn commit(&mut self, entry: JournalEntry) -> ErrResult<()> {
+        self.entries.insert(entry.id, entry);
+        self.store()
+    }
+
+    /// The shot count the journal was created for.
+    pub fn shots(&self) -> usize {
+        self.shots
+    }
+
+    /// Journaled entries so far (terminal records, completed or
+    /// failed).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing has been journaled yet.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The journal's entry for shot `id`, if recorded.
+    pub fn get(&self, id: usize) -> Option<&JournalEntry> {
+        self.entries.get(&id)
+    }
+
+    /// Entries in ascending shot-id order.
+    pub fn entries(&self) -> impl Iterator<Item = &JournalEntry> {
+        self.entries.values()
+    }
+
+    /// The journal file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+fn encode_grid(kind: &str, id: usize, g: &Grid3, out: &mut String) {
+    use fmt::Write;
+    let _ = write!(out, "{kind}|{id}|{}x{}x{}|", g.nz, g.nx, g.ny);
+    out.reserve(g.data.len() * 8 + 1);
+    for v in &g.data {
+        let _ = write!(out, "{:08x}", v.to_bits());
+    }
+    out.push('\n');
+}
+
+fn decode_grid(dims: &str, hex: &str) -> ErrResult<Grid3> {
+    let mut it = dims.split('x').map(|d| d.parse::<usize>());
+    let (nz, nx, ny) = match (it.next(), it.next(), it.next(), it.next()) {
+        (Some(Ok(nz)), Some(Ok(nx)), Some(Ok(ny)), None) => (nz, nx, ny),
+        _ => bail!("grid dims must be <nz>x<nx>x<ny>, got {dims:?}"),
+    };
+    let cells = nz * nx * ny;
+    if hex.len() != cells * 8 {
+        bail!("grid payload holds {} hex chars, dims {dims} need {}", hex.len(), cells * 8);
+    }
+    let mut g = Grid3::zeros(nz, nx, ny);
+    for (i, slot) in g.data.iter_mut().enumerate() {
+        let word = u32::from_str_radix(&hex[i * 8..i * 8 + 8], 16)
+            .with_context(|| format!("grid cell {i} is not hex"))?;
+        *slot = f32::from_bits(word);
+    }
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_plan_parses_and_round_trips_canonically() {
+        let plan = FaultPlan::parse("seed=7 kernel=0.05 transport=1@shot3 stall=2").unwrap();
+        assert_eq!(plan.seed(), 7);
+        assert_eq!(plan.rule(FaultLayer::Kernel), Some(FaultRule::Prob { ppm: 50_000 }));
+        assert_eq!(
+            plan.rule(FaultLayer::Transport),
+            Some(FaultRule::Count { n: 1, shot: Some(3) })
+        );
+        assert_eq!(plan.rule(FaultLayer::Checkpoint), None);
+        assert_eq!(plan.rule(FaultLayer::Stall), Some(FaultRule::Count { n: 2, shot: None }));
+        let text = plan.to_string();
+        assert_eq!(text, "seed=7 kernel=0.05 transport=1@shot3 stall=2");
+        assert_eq!(FaultPlan::parse(&text).unwrap(), plan, "canonical form must round-trip");
+        // whole-probability rules keep their decimal point so re-parse
+        // stays Prob, not Count
+        let p = FaultPlan::parse("kernel=1.0").unwrap();
+        assert_eq!(p.rule(FaultLayer::Kernel), Some(FaultRule::Prob { ppm: 1_000_000 }));
+        assert_eq!(p.to_string(), "seed=0 kernel=1.0");
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn fault_plan_rejects_malformed_specs_with_the_crate_error_shape() {
+        let err = FaultPlan::parse("kerel=1").unwrap_err();
+        assert_eq!(err.what, "fault layer");
+        assert!(err.to_string().contains("kernel | transport | checkpoint | stall"), "{err}");
+        let err = FaultPlan::parse("kernel").unwrap_err();
+        assert!(err.to_string().contains("key=value"), "{err}");
+        let err = FaultPlan::parse("kernel=1@step3").unwrap_err();
+        assert!(err.to_string().contains("@shot"), "{err}");
+        let err = FaultPlan::parse("transport=1.5").unwrap_err();
+        assert!(err.to_string().contains("outside [0, 1]"), "{err}");
+        let err = FaultPlan::parse("seed=minus").unwrap_err();
+        assert!(err.to_string().contains("unsigned integer"), "{err}");
+    }
+
+    #[test]
+    fn injection_decisions_are_deterministic_and_seed_keyed() {
+        let plan = FaultPlan::parse("seed=7 kernel=0.5").unwrap();
+        // pure function of (seed, layer, shot, attempt): same inputs,
+        // same answer, every time
+        for shot in 0..64 {
+            for attempt in 1..4 {
+                let a = plan.injects(FaultLayer::Kernel, shot, attempt);
+                let b = plan.injects(FaultLayer::Kernel, shot, attempt);
+                assert_eq!(a, b);
+            }
+        }
+        // p=0.5 over 64 shots lands strictly between the degenerate
+        // extremes, and a different seed reshuffles the pattern
+        let hits = |p: &FaultPlan| {
+            (0..64).filter(|&s| p.injects(FaultLayer::Kernel, s, 1)).collect::<Vec<_>>()
+        };
+        let h7 = hits(&plan);
+        assert!(!h7.is_empty() && h7.len() < 64, "degenerate fault pattern: {}", h7.len());
+        let h8 = hits(&FaultPlan::parse("seed=8 kernel=0.5").unwrap());
+        assert_ne!(h7, h8, "seed must rekey the schedule");
+        // count rules are exact: first n attempts, scoped shot only
+        let plan = FaultPlan::parse("transport=2@shot3").unwrap();
+        assert!(plan.injects(FaultLayer::Transport, 3, 1));
+        assert!(plan.injects(FaultLayer::Transport, 3, 2));
+        assert!(!plan.injects(FaultLayer::Transport, 3, 3));
+        assert!(!plan.injects(FaultLayer::Transport, 2, 1));
+        // the legacy counter shim reproduces inject_faults(n)
+        let c = FaultPlan::counter(2);
+        assert_eq!(c.counter_budget(), 2);
+        assert!(c.injects(FaultLayer::Kernel, 11, 2));
+        assert!(!c.injects(FaultLayer::Kernel, 11, 3));
+    }
+
+    #[test]
+    fn health_policy_parses_and_round_trips() {
+        for (name, want) in [
+            ("abort_shot", HealthPolicy::AbortShot),
+            ("retry", HealthPolicy::Retry),
+            ("fallback_f32_codec", HealthPolicy::FallbackF32Codec),
+        ] {
+            assert_eq!(HealthPolicy::parse(name), Ok(want));
+            assert_eq!(want.name(), name);
+        }
+        assert_eq!(HealthPolicy::default(), HealthPolicy::Retry);
+        let err = HealthPolicy::parse("panic").unwrap_err();
+        assert_eq!(err.what, "health policy");
+        assert!(err.to_string().contains("abort_shot | retry | fallback_f32_codec"), "{err}");
+    }
+
+    fn tiny_image(seed: u64) -> Image {
+        let mut im = Image::zeros(3, 4, 5);
+        im.accumulate(&Grid3::random(3, 4, 5, seed), &Grid3::random(3, 4, 5, seed + 9));
+        im
+    }
+
+    #[test]
+    fn journal_round_trips_bitwise_and_byte_stable() {
+        let dir = std::env::temp_dir().join(format!("mmstencil-journal-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("round_trip.journal");
+        let mut j = SurveyJournal::create(&path, 3).unwrap();
+        let im = tiny_image(5);
+        j.commit(JournalEntry {
+            id: 0,
+            shard: 1,
+            stolen: true,
+            attempts: 2,
+            dequeue_seq: 4,
+            faults_injected: 1,
+            error: None,
+            image: Some(im.clone()),
+        })
+        .unwrap();
+        j.commit(JournalEntry {
+            id: 2,
+            shard: 0,
+            stolen: false,
+            attempts: 2,
+            dequeue_seq: 5,
+            faults_injected: 2,
+            error: Some("injected fault (kernel) on attempt 2".into()),
+            image: None,
+        })
+        .unwrap();
+
+        let back = SurveyJournal::load(&path).unwrap();
+        assert_eq!(back.shots(), 3);
+        assert_eq!(back.len(), 2);
+        let e0 = back.get(0).unwrap();
+        assert!(e0.completed());
+        assert_eq!((e0.shard, e0.stolen, e0.attempts, e0.dequeue_seq), (1, true, 2, 4));
+        let got = e0.image.as_ref().unwrap();
+        assert_eq!(got.img.data, im.img.data, "image slot must round-trip bitwise");
+        assert_eq!(got.illum.data, im.illum.data);
+        assert_eq!(got.correlations, im.correlations);
+        let e2 = back.get(2).unwrap();
+        assert!(!e2.completed());
+        assert_eq!(e2.error.as_deref(), Some("injected fault (kernel) on attempt 2"));
+        // canonical serialization is byte-stable through a round trip
+        assert_eq!(back.serialize(), j.serialize());
+        // the atomic publish leaves no temp file behind
+        assert!(!path.with_extension("journal.tmp").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn journal_rejects_torn_or_mismatched_state() {
+        assert!(SurveyJournal::parse("shot|0|attempts=1").is_err(), "missing shots header");
+        assert!(SurveyJournal::parse("shots|2\nbogus|1|x").is_err(), "unknown record kind");
+        // a partial image slot (img without illum) is torn state
+        let torn = "shots|2\nshot|0|shard=0 stolen=0 attempts=1 seq=1 faults=0 corr=1\n\
+                    img|0|1x1x1|3f800000\n";
+        assert!(SurveyJournal::parse(torn).is_err(), "partial image slot must be rejected");
+        let dir = std::env::temp_dir().join(format!("mmstencil-journal2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mismatch.journal");
+        SurveyJournal::create(&path, 4).unwrap();
+        let err = SurveyJournal::open(&path, 8).unwrap_err();
+        assert!(err.to_string().contains("records 4 shots"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -43,15 +43,43 @@
 //! the accumulated survey image is bitwise-stable across worker counts
 //! AND shard counts.
 //!
-//! Failure handling: a shot that errors is retried (once, by default),
-//! then recorded as [`ShotStatus::Failed`] in the report — it never
-//! wedges the queue.  [`ShotJobBuilder::inject_faults`] is the chaos
-//! hook the retry-contract tests use.
+//! Failure handling (DESIGN.md §16): a shot that errors is retried
+//! (once, by default), then recorded as [`ShotStatus::Failed`] in the
+//! report — it never wedges the queue.  Containment is layered:
+//!
+//! * a **panic** inside a forward or adjoint pass is caught at the pump
+//!   and becomes a failed *attempt* (forward) or a failed shot
+//!   (adjoint) — the survey keeps going and the process exits cleanly;
+//! * every forward step runs the **wavefield health monitor** — an
+//!   O(1)-alloc non-finite/energy-blowup check piggybacked on the
+//!   existing per-step energy reduction — whose verdicts are routed by
+//!   [`SurveyConfig::health`] ([`HealthPolicy`]): abort the shot, spend
+//!   a retry, or retry with the halo codec forced to lossless
+//!   [`HaloCodec::F32`];
+//! * submission can carry a deadline ([`SurveyConfig::submit_timeout_ms`],
+//!   [`ShardedQueue::push_deadline`]) so a wedged consumer surfaces a
+//!   [`SubmitError::Timeout`] instead of blocking the driver forever;
+//! * with [`run_journaled`](SurveyRunner::run_journaled) every terminal
+//!   shot is committed write-ahead to a crash-consistent
+//!   [`SurveyJournal`], and [`resume`](SurveyRunner::resume) adopts the
+//!   completed slots bitwise instead of re-running them (the
+//!   tree reduction is keyed by shot id, so the resumed final image is
+//!   bit-for-bit the uninterrupted one).
+//!
+//! Chaos hooks: [`ShotJobBuilder::fault_plan`] attaches a seeded
+//! deterministic [`FaultPlan`] (four injectable layers — kernel panic,
+//! halo-transport corruption, checkpoint-store read failure, worker
+//! stall); [`ShotJobBuilder::inject_faults`] is the legacy counter shim
+//! the retry-contract tests use.
 
 use super::boundary::Sponge;
 use super::driver::{self, ConfigError, Medium, RtmConfig, RtmReport};
 use super::image::Image;
 use super::media::{self, TtiMedia, VtiMedia};
+use super::resilience::{
+    FaultLayer, FaultPlan, FaultSite, HealthPolicy, JournalEntry, SurveyJournal,
+    HEALTH_ENERGY_CEILING, STALL_MS,
+};
 use super::tti::{self, TtiScratch, TtiState, TtiTrig};
 use super::vti::{self, VtiScratch, VtiState};
 use super::wavelet;
@@ -64,10 +92,13 @@ use crate::simulator::roofline::Engine as SimEngine;
 use crate::simulator::Platform;
 use crate::stencil::coeffs::{first_deriv, second_deriv};
 use crate::stencil::Engine;
+use crate::bail;
 use crate::util::err::Result as ErrResult;
 use crate::util::{ParseKindError, Timer};
 use std::collections::{HashMap, VecDeque};
+use std::path::{Path, PathBuf};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 // ---------------------------------------------------------------------------
 // checkpoint strategies
@@ -333,6 +364,27 @@ pub struct QueueFull<T>(
     pub T,
 );
 
+/// [`push_deadline`](ShardedQueue::push_deadline) refusal: either way
+/// the item is handed back intact — a deadline-aware submission is
+/// refused, never dropped.
+#[derive(Debug)]
+pub enum SubmitError<T> {
+    /// The lane stayed at capacity for the whole deadline (a wedged or
+    /// fatally slow consumer).
+    Timeout(
+        /// The refused item, returned intact.
+        T,
+    ),
+    /// The queue was closed while the submitter waited.  `push` treats
+    /// this as a driver bug and panics; a deadline-aware submitter is
+    /// exactly the kind that must survive a shut-down consumer, so it
+    /// gets an error instead.
+    Closed(
+        /// The refused item, returned intact.
+        T,
+    ),
+}
+
 struct QueueState<T> {
     lanes: Vec<VecDeque<T>>,
     closed: bool,
@@ -421,6 +473,36 @@ impl<T> ShardedQueue<T> {
         }
     }
 
+    /// Deadline-aware [`push`](Self::push): blocks while the lane is at
+    /// capacity, but at most `timeout` — then the item comes back as
+    /// [`SubmitError::Timeout`] instead of the submitter hanging on a
+    /// wedged consumer forever.  A concurrent [`close`](Self::close)
+    /// surfaces as [`SubmitError::Closed`] (not the `push` panic).
+    pub fn push_deadline(
+        &self,
+        shard: usize,
+        item: T,
+        timeout: Duration,
+    ) -> Result<(), SubmitError<T>> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(SubmitError::Closed(item));
+            }
+            if g.lanes[shard].len() < self.capacity {
+                g.lanes[shard].push_back(item);
+                self.not_empty.notify_all();
+                return Ok(());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(SubmitError::Timeout(item));
+            }
+            g = self.not_full.wait_timeout(g, deadline - now).unwrap().0;
+        }
+    }
+
     /// Dequeue for `shard`: own lane's head first, then steal from the
     /// tail of the next non-empty lane in ring order.  Blocks while
     /// everything is empty; returns `None` once the queue is closed and
@@ -471,13 +553,13 @@ impl<T> ShardedQueue<T> {
 #[derive(Clone, Debug)]
 pub struct ShotJob {
     cfg: RtmConfig,
-    faults: usize,
+    faults: FaultPlan,
 }
 
 impl ShotJob {
     /// Start building a job from a shot configuration.
     pub fn builder(cfg: RtmConfig) -> ShotJobBuilder {
-        ShotJobBuilder { cfg, faults: 0 }
+        ShotJobBuilder { cfg, faults: FaultPlan::default() }
     }
 
     /// The validated shot configuration.
@@ -485,9 +567,16 @@ impl ShotJob {
         &self.cfg
     }
 
-    /// Injected fault budget (see [`ShotJobBuilder::inject_faults`]).
-    pub fn injected_faults(&self) -> usize {
+    /// The job's deterministic fault plan (empty by default — see
+    /// [`ShotJobBuilder::fault_plan`]).
+    pub fn fault_plan(&self) -> FaultPlan {
         self.faults
+    }
+
+    /// Legacy injected-fault budget: the kernel-layer counter the plan
+    /// carries (see [`ShotJobBuilder::inject_faults`]).
+    pub fn injected_faults(&self) -> usize {
+        self.faults.counter_budget()
     }
 }
 
@@ -497,7 +586,7 @@ impl ShotJob {
 #[derive(Clone, Debug)]
 pub struct ShotJobBuilder {
     cfg: RtmConfig,
-    faults: usize,
+    faults: FaultPlan,
 }
 
 impl ShotJobBuilder {
@@ -535,9 +624,21 @@ impl ShotJobBuilder {
     /// Chaos hook for the retry contract: the shot's first `n` forward
     /// attempts fail with an injected error before touching the
     /// propagators.  With the default retry budget (one retry), `n = 1`
-    /// exercises retry-then-succeed and `n = 2` retry-then-fail.
+    /// exercises retry-then-succeed and `n = 2` retry-then-fail.  A
+    /// shorthand for [`fault_plan`](Self::fault_plan) with
+    /// [`FaultPlan::counter`].
     pub fn inject_faults(mut self, n: usize) -> Self {
-        self.faults = n;
+        self.faults = FaultPlan::counter(n);
+        self
+    }
+
+    /// Attach a seeded deterministic fault plan (kernel / transport /
+    /// checkpoint / stall layers — see
+    /// [`FaultPlan::parse`](FaultPlan::parse) for the spec grammar).
+    /// Every injection decision is a pure function of (plan, shot id,
+    /// attempt), so chaos runs are reproducible bit-for-bit.
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.faults = plan;
         self
     }
 
@@ -573,6 +674,15 @@ pub struct SurveyConfig {
     /// Retries granted to a failed shot before it is recorded as
     /// [`ShotStatus::Failed`].
     pub max_retries: usize,
+    /// Routing for wavefield-health violations (non-finite or blown-up
+    /// per-step energy): abort the shot, spend a retry (default), or
+    /// retry with the halo codec forced to lossless f32.
+    pub health: HealthPolicy,
+    /// Deadline in milliseconds for enqueueing each shot (`0` = block
+    /// indefinitely, the classic backpressure behaviour).  On expiry
+    /// the shot is recorded as [`ShotStatus::Failed`] with a submit
+    /// timeout — the driver is never wedged by a stuck consumer.
+    pub submit_timeout_ms: u64,
 }
 
 impl Default for SurveyConfig {
@@ -584,6 +694,8 @@ impl Default for SurveyConfig {
             keyframe_every: DEFAULT_KEYFRAME_EVERY,
             workers: 0,
             max_retries: 1,
+            health: HealthPolicy::Retry,
+            submit_timeout_ms: 0,
         }
     }
 }
@@ -617,8 +729,15 @@ pub struct ShotRecord {
     pub stolen: bool,
     /// Forward attempts consumed (`> 1` means retried).
     pub attempts: usize,
-    /// Global dequeue sequence number ([`Popped::seq`]).
+    /// Global dequeue sequence number ([`Popped::seq`]); `0` for a shot
+    /// adopted from a journal or refused at submission.
     pub dequeue_seq: u64,
+    /// Faults the shot's [`FaultPlan`] actually injected, summed over
+    /// its attempts.
+    pub faults_injected: u64,
+    /// True when the shot was adopted bitwise from a resume journal
+    /// instead of being re-run ([`SurveyRunner::resume`]).
+    pub resumed: bool,
     /// Terminal state.
     pub status: ShotStatus,
     /// Per-shot metrics (completed shots only).
@@ -663,6 +782,18 @@ impl SurveyReport {
     /// Shots that ran on a shard other than their home lane.
     pub fn stolen(&self) -> usize {
         self.records.iter().filter(|r| r.stolen).count()
+    }
+
+    /// Faults the survey's fault plans actually injected, summed over
+    /// every shot and attempt (`0` for a fault-free run — the bench
+    /// baseline contract).
+    pub fn faults_injected(&self) -> u64 {
+        self.records.iter().map(|r| r.faults_injected).sum()
+    }
+
+    /// Shots adopted bitwise from a resume journal instead of re-run.
+    pub fn resumed_shots(&self) -> usize {
+        self.records.iter().filter(|r| r.resumed).count()
     }
 
     /// Completed-shot throughput — the paper-§V-F survey metric
@@ -760,45 +891,153 @@ impl SurveyRunner {
     /// pipeline forward/adjoint passes across the shards, and
     /// tree-reduce the per-shot images into one survey image.
     pub fn run(&mut self, jobs: Vec<ShotJob>) -> SurveyReport {
+        self.run_inner(jobs, None)
+            .expect("an unjournaled survey has no fallible I/O")
+    }
+
+    /// [`run`](Self::run) with a crash-consistent journal at `path`:
+    /// every terminal shot (record + image slot) is committed
+    /// write-ahead with an atomic rename before the survey moves on.
+    /// If `path` already holds a journal for this shot count, the run
+    /// *resumes* it — completed shots are adopted bitwise instead of
+    /// re-run — so a killed survey restarts with the identical call.
+    pub fn run_journaled(
+        &mut self,
+        jobs: Vec<ShotJob>,
+        path: impl Into<PathBuf>,
+    ) -> ErrResult<SurveyReport> {
+        let journal = SurveyJournal::open(path, jobs.len())?;
+        self.run_inner(jobs, Some(journal))
+    }
+
+    /// Resume a killed journaled survey: `jobs` must re-present the
+    /// same survey (the journal pins the shot count; shot ids key the
+    /// adoption).  Completed shots are adopted bitwise from the journal
+    /// — `attempts` untouched, no recompute — and only the remainder
+    /// runs, so the final image is bit-for-bit the uninterrupted run's
+    /// (the tree reduction depends only on shot-indexed slots).  Unlike
+    /// [`run_journaled`](Self::run_journaled) the journal must already
+    /// exist.
+    pub fn resume(&mut self, jobs: Vec<ShotJob>, path: impl AsRef<Path>) -> ErrResult<SurveyReport> {
+        let journal = SurveyJournal::load(path.as_ref())?;
+        if journal.shots() != jobs.len() {
+            bail!(
+                "survey journal {} records {} shots, resume presented {}",
+                path.as_ref().display(),
+                journal.shots(),
+                jobs.len()
+            );
+        }
+        self.run_inner(jobs, Some(journal))
+    }
+
+    fn run_inner(
+        &mut self,
+        jobs: Vec<ShotJob>,
+        journal: Option<SurveyJournal>,
+    ) -> ErrResult<SurveyReport> {
         let t_wall = Timer::start();
         let shards = self.cfg.shards;
         let n = jobs.len();
-        // resolve shared media up front (needs &mut self; everything
-        // after this point borrows the session immutably)
-        let queued: Vec<QueuedShot> = jobs
-            .into_iter()
-            .enumerate()
-            .map(|(id, job)| QueuedShot {
-                id,
-                home: id % shards,
-                media: self.media_for(job.config()),
-                job,
-            })
-            .collect();
+        let outcomes: Vec<Mutex<Option<ShotOutcome>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        // adopt completed journal slots bitwise; resolve shared media
+        // for the rest up front (needs &mut self; everything after this
+        // point borrows the session immutably)
+        let mut queued: Vec<QueuedShot> = Vec::with_capacity(n);
+        for (id, job) in jobs.into_iter().enumerate() {
+            let adopted = journal
+                .as_ref()
+                .and_then(|j| j.get(id))
+                .filter(|e| e.completed())
+                .cloned();
+            if let Some(e) = adopted {
+                *outcomes[id].lock().unwrap() = Some(ShotOutcome {
+                    image: e.image,
+                    record: ShotRecord {
+                        id,
+                        shard: e.shard,
+                        stolen: e.stolen,
+                        attempts: e.attempts,
+                        dequeue_seq: e.dequeue_seq,
+                        faults_injected: e.faults_injected,
+                        resumed: true,
+                        status: ShotStatus::Completed,
+                        report: None,
+                    },
+                });
+            } else {
+                queued.push(QueuedShot {
+                    id,
+                    home: id % shards,
+                    media: self.media_for(job.config()),
+                    job,
+                });
+            }
+        }
 
         let scfg = self.cfg;
         let platform = &self.platform;
         let queue: ShardedQueue<QueuedShot> = ShardedQueue::new(shards, scfg.queue_capacity);
         let handoffs: Vec<Handoff> = (0..shards).map(|_| Handoff::new()).collect();
-        let outcomes: Vec<Mutex<Option<ShotOutcome>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let journal = journal.map(Mutex::new);
+        let journal_err: Mutex<Option<String>> = Mutex::new(None);
+        let sink = JournalSink { journal: journal.as_ref(), err: &journal_err };
 
         let pump = |p: usize| {
             if p < shards {
-                forward_pump(p, &scfg, &queue, &handoffs[p], &outcomes);
+                forward_pump(p, &scfg, &queue, &handoffs[p], &outcomes, sink);
             } else {
-                adjoint_pump(p - shards, platform, &handoffs[p - shards], &outcomes);
+                adjoint_pump(p - shards, platform, &handoffs[p - shards], &outcomes, sink);
             }
         };
         {
             // SAFETY: the handle joins on wait() (and on drop, even
             // during unwind) before `pump` and its borrows go away
             let handle = unsafe { self.rt.submit_scoped(2 * shards, &pump) };
+            let deadline = (scfg.submit_timeout_ms > 0)
+                .then(|| Duration::from_millis(scfg.submit_timeout_ms));
             for qs in queued {
                 let home = qs.home;
-                queue.push(home, qs); // bounded: blocks under backpressure
+                match deadline {
+                    // bounded: blocks under backpressure
+                    None => queue.push(home, qs),
+                    Some(d) => {
+                        if let Err(e) = queue.push_deadline(home, qs, d) {
+                            let (qs, why) = match e {
+                                SubmitError::Timeout(qs) => (
+                                    qs,
+                                    format!(
+                                        "submit timeout after {}ms",
+                                        scfg.submit_timeout_ms
+                                    ),
+                                ),
+                                SubmitError::Closed(qs) => {
+                                    (qs, "queue closed during submission".to_string())
+                                }
+                            };
+                            let record = ShotRecord {
+                                id: qs.id,
+                                shard: qs.home,
+                                stolen: false,
+                                attempts: 0,
+                                dequeue_seq: 0,
+                                faults_injected: 0,
+                                resumed: false,
+                                status: ShotStatus::Failed(why),
+                                report: None,
+                            };
+                            sink.commit(&record, None);
+                            *outcomes[qs.id].lock().unwrap() =
+                                Some(ShotOutcome { image: None, record });
+                        }
+                    }
+                }
             }
             queue.close();
             handle.wait();
+        }
+        if let Some(e) = journal_err.into_inner().unwrap() {
+            bail!("survey journal write failed: {e}");
         }
 
         let mut records = Vec::with_capacity(n);
@@ -813,13 +1052,13 @@ impl SurveyRunner {
             }
             records.push(o.record);
         }
-        SurveyReport {
+        Ok(SurveyReport {
             image: reduce_images(images),
             records,
             shards,
             checkpoint: scfg.checkpoint,
             wall_s: t_wall.secs(),
-        }
+        })
     }
 
     /// Run a single job (the implementation behind
@@ -876,6 +1115,7 @@ struct FwdProduct {
     id: usize,
     stolen: bool,
     attempts: usize,
+    faults_injected: u64,
     seq: u64,
     job: ShotJob,
     media: ShotMedia,
@@ -886,6 +1126,65 @@ struct FwdProduct {
 struct ShotOutcome {
     image: Option<Image>,
     record: ShotRecord,
+}
+
+/// Shared write-ahead sink the pumps commit terminal shots through.
+/// Journal I/O failures are latched (first error wins) instead of
+/// panicking a pump — the survey finishes in memory and the driver
+/// surfaces the stale-journal error afterwards.
+#[derive(Clone, Copy)]
+struct JournalSink<'a> {
+    journal: Option<&'a Mutex<SurveyJournal>>,
+    err: &'a Mutex<Option<String>>,
+}
+
+impl JournalSink<'_> {
+    fn commit(&self, record: &ShotRecord, image: Option<&Image>) {
+        let Some(j) = self.journal else { return };
+        let entry = JournalEntry {
+            id: record.id,
+            shard: record.shard,
+            stolen: record.stolen,
+            attempts: record.attempts,
+            dequeue_seq: record.dequeue_seq,
+            faults_injected: record.faults_injected,
+            error: match &record.status {
+                ShotStatus::Failed(e) => Some(e.clone()),
+                ShotStatus::Completed => None,
+            },
+            image: image.cloned(),
+        };
+        if let Err(e) = j.lock().unwrap().commit(entry) {
+            let mut slot = self.err.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(e.to_string());
+            }
+        }
+    }
+}
+
+/// Render a panic payload caught by a pump to a message string.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    payload
+        .downcast_ref::<&'static str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "<non-string panic payload>".to_string())
+}
+
+/// Faults the plan will actually execute at this site, respecting the
+/// layer precedence of [`forward_pass`]: a stall always runs first; a
+/// kernel panic preempts the step loop (so transport/checkpoint never
+/// fire); transport corruption only exists on a lossy wire codec
+/// (an f32 shell round-trips bitwise — there is nothing to corrupt).
+fn count_injections(site: &FaultSite, codec: HaloCodec) -> u64 {
+    let stall = u64::from(site.injects(FaultLayer::Stall));
+    if site.injects(FaultLayer::Kernel) {
+        return stall + 1;
+    }
+    stall
+        + u64::from(site.injects(FaultLayer::Transport) && codec.is_lossy())
+        + u64::from(site.injects(FaultLayer::Checkpoint))
 }
 
 /// One-slot rendezvous between a shard's forward and adjoint pumps:
@@ -947,27 +1246,69 @@ fn forward_pump(
     queue: &ShardedQueue<QueuedShot>,
     handoff: &Handoff,
     outcomes: &[Mutex<Option<ShotOutcome>>],
+    sink: JournalSink<'_>,
 ) {
     while let Some(popped) = queue.pop(shard) {
         let qs = popped.item;
+        let plan = qs.job.fault_plan();
         let mut attempts = 0;
+        let mut faults_injected: u64 = 0;
+        let mut force_f32 = false;
         let result = loop {
             attempts += 1;
-            if attempts <= qs.job.faults {
-                if attempts > scfg.max_retries {
-                    break Err(format!("injected fault on attempt {attempts}"));
-                }
-                continue; // retry: the next attempt may clear the fault budget
+            let site = FaultSite::new(plan, qs.id, attempts);
+            let mut cfg = qs.job.config().clone();
+            if force_f32 {
+                // fallback_f32_codec verdict from a previous attempt:
+                // lossless wire, so transport corruption cannot recur
+                cfg.halo_codec = HaloCodec::F32;
             }
+            faults_injected += count_injections(&site, cfg.halo_codec);
             let mut store = make_store(scfg);
-            let fwd = forward_pass(qs.job.config(), &qs.media, store.as_mut());
-            break Ok((store, fwd));
+            // containment boundary: a panic anywhere in the forward
+            // pass (injected or genuine) becomes a failed *attempt*,
+            // never a dead pump
+            let attempt = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                forward_pass(&cfg, &qs.media, store.as_mut(), &site)
+            }));
+            let err = match attempt {
+                Ok(Ok(fwd)) => break Ok((store, fwd)),
+                Ok(Err(e)) => e,
+                Err(payload) => {
+                    let msg = panic_message(payload);
+                    let msg = if msg.contains("injected fault") {
+                        msg
+                    } else {
+                        format!("forward pass panicked: {msg}")
+                    };
+                    AttemptError::Other(msg)
+                }
+            };
+            match (err, scfg.health) {
+                (AttemptError::Health(msg), HealthPolicy::AbortShot) => {
+                    break Err(format!("health policy abort_shot: {msg}"));
+                }
+                (AttemptError::Health(msg), policy) => {
+                    if policy == HealthPolicy::FallbackF32Codec {
+                        force_f32 = true;
+                    }
+                    if attempts > scfg.max_retries {
+                        break Err(msg);
+                    }
+                }
+                (AttemptError::Other(msg), _) => {
+                    if attempts > scfg.max_retries {
+                        break Err(msg);
+                    }
+                }
+            }
         };
         match result {
             Ok((store, fwd)) => handoff.put(FwdProduct {
                 id: qs.id,
                 stolen: popped.stolen,
                 attempts,
+                faults_injected,
                 seq: popped.seq,
                 job: qs.job,
                 media: qs.media,
@@ -977,18 +1318,20 @@ fn forward_pump(
             Err(e) => {
                 // record the failure and keep pumping — a dead shot
                 // must never wedge the lane
-                *outcomes[qs.id].lock().unwrap() = Some(ShotOutcome {
-                    image: None,
-                    record: ShotRecord {
-                        id: qs.id,
-                        shard,
-                        stolen: popped.stolen,
-                        attempts,
-                        dequeue_seq: popped.seq,
-                        status: ShotStatus::Failed(e),
-                        report: None,
-                    },
-                });
+                let record = ShotRecord {
+                    id: qs.id,
+                    shard,
+                    stolen: popped.stolen,
+                    attempts,
+                    dequeue_seq: popped.seq,
+                    faults_injected,
+                    resumed: false,
+                    status: ShotStatus::Failed(e),
+                    report: None,
+                };
+                sink.commit(&record, None);
+                *outcomes[qs.id].lock().unwrap() =
+                    Some(ShotOutcome { image: None, record });
             }
         }
     }
@@ -1000,23 +1343,58 @@ fn adjoint_pump(
     platform: &Platform,
     handoff: &Handoff,
     outcomes: &[Mutex<Option<ShotOutcome>>],
+    sink: JournalSink<'_>,
 ) {
     while let Some(mut p) = handoff.take() {
-        let cfg = p.job.config();
-        let (image, backward_s) = adjoint_pass(cfg, &p.media, p.store.as_mut(), &p.fwd.traces);
-        let report = assemble_report(cfg, platform, p.fwd, backward_s, image.img.energy());
-        *outcomes[p.id].lock().unwrap() = Some(ShotOutcome {
-            image: Some(image),
-            record: ShotRecord {
-                id: p.id,
-                shard,
-                stolen: p.stolen,
-                attempts: p.attempts,
-                dequeue_seq: p.seq,
-                status: ShotStatus::Completed,
-                report: Some(report),
+        // containment boundary: an adjoint panic fails the shot (the
+        // forward product is spent — there is no adjoint retry path,
+        // DESIGN.md §16) but never the pump or the process
+        let computed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let cfg = p.job.config();
+            let (image, backward_s) =
+                adjoint_pass(cfg, &p.media, p.store.as_mut(), &p.fwd.traces);
+            let energy = image.img.energy();
+            (image, backward_s, energy)
+        }));
+        let outcome = match computed {
+            Ok((image, backward_s, energy)) => {
+                let report =
+                    assemble_report(p.job.config(), platform, p.fwd, backward_s, energy);
+                ShotOutcome {
+                    image: Some(image),
+                    record: ShotRecord {
+                        id: p.id,
+                        shard,
+                        stolen: p.stolen,
+                        attempts: p.attempts,
+                        dequeue_seq: p.seq,
+                        faults_injected: p.faults_injected,
+                        resumed: false,
+                        status: ShotStatus::Completed,
+                        report: Some(report),
+                    },
+                }
+            }
+            Err(payload) => ShotOutcome {
+                image: None,
+                record: ShotRecord {
+                    id: p.id,
+                    shard,
+                    stolen: p.stolen,
+                    attempts: p.attempts,
+                    dequeue_seq: p.seq,
+                    faults_injected: p.faults_injected,
+                    resumed: false,
+                    status: ShotStatus::Failed(format!(
+                        "adjoint pass panicked: {}",
+                        panic_message(payload)
+                    )),
+                    report: None,
+                },
             },
-        });
+        };
+        sink.commit(&outcome.record, outcome.image.as_ref());
+        *outcomes[p.id].lock().unwrap() = Some(outcome);
     }
 }
 
@@ -1165,6 +1543,17 @@ impl Prop {
         }
     }
 
+    /// Chaos hook (transport layer): overwrite one boundary-shell value
+    /// of the propagating field with NaN — the footprint of a corrupted
+    /// halo exchange.  The health monitor's energy scan flags it on the
+    /// same step.
+    fn corrupt_wire(&mut self) {
+        match &mut self.kind {
+            PropKind::Vti { st, .. } => st.sh.as_mut_slice()[0] = f32::NAN,
+            PropKind::Tti { st, .. } => st.p.as_mut_slice()[0] = f32::NAN,
+        }
+    }
+
     fn record_plane(&self, z: usize) -> Vec<f32> {
         record_plane(self.imaging_field(), z)
     }
@@ -1220,7 +1609,41 @@ struct FwdTrace {
     forward_s: f64,
 }
 
-fn forward_pass(cfg: &RtmConfig, media: &ShotMedia, store: &mut dyn SnapshotStore) -> FwdTrace {
+/// Why a forward attempt failed — routed differently by the pump: a
+/// health verdict answers to [`SurveyConfig::health`], anything else to
+/// the plain retry budget.
+enum AttemptError {
+    /// The wavefield health monitor tripped (non-finite or blown-up
+    /// per-step energy).
+    Health(String),
+    /// Any other attempt failure (injected checkpoint fault, …); caught
+    /// panics are converted by the pump, not here.
+    Other(String),
+}
+
+/// One forward pass.  `site` is the shot/attempt-resolved fault plan:
+/// a stall sleeps first, a kernel fault panics before the propagators
+/// (the pump's `catch_unwind` contains it), transport corruption
+/// poisons the wire shell after step 0 (lossy codecs only — an f32
+/// shell is bitwise, there is nothing to corrupt), and a checkpoint
+/// fault fails the first snapshot store.  Every step ends with the
+/// health monitor: an O(1)-alloc scan of the per-step energy the pass
+/// already computes — no extra reduction, no allocation.
+fn forward_pass(
+    cfg: &RtmConfig,
+    media: &ShotMedia,
+    store: &mut dyn SnapshotStore,
+    site: &FaultSite,
+) -> Result<FwdTrace, AttemptError> {
+    if site.injects(FaultLayer::Stall) {
+        // slowdown, not failure: the attempt proceeds (and must stay
+        // bitwise) once the stall elapses
+        std::thread::sleep(Duration::from_millis(STALL_MS));
+    }
+    if site.injects(FaultLayer::Kernel) {
+        panic!("injected fault (kernel) on attempt {}", site.attempt);
+    }
+    let corrupt_wire = site.injects(FaultLayer::Transport) && cfg.halo_codec.is_lossy();
     let mut prop = Prop::new(cfg, media);
     let src = cfg.src_pos();
     let src_series = wavelet::ricker_series(cfg.steps, media.dt(), cfg.f0);
@@ -1229,17 +1652,32 @@ fn forward_pass(cfg: &RtmConfig, media: &ShotMedia, store: &mut dyn SnapshotStor
     let t_fwd = Timer::start();
     for (i, &amp) in src_series.iter().enumerate() {
         prop.advance_source(src, amp);
+        if corrupt_wire && i == 0 {
+            prop.corrupt_wire();
+        }
         traces.push(prop.record_plane(cfg.receiver_z));
         let snap_due = i % cfg.snap_every == 0;
+        if snap_due && i == 0 && site.injects(FaultLayer::Checkpoint) {
+            return Err(AttemptError::Other(format!(
+                "injected fault (checkpoint): snapshot store failed at step {i} on attempt {}",
+                site.attempt
+            )));
+        }
         store.record(i, snap_due, prop.imaging_field(), &mut || prop.checkpoint(i));
-        energy_trace.push(prop.energy());
+        let e = prop.energy();
+        energy_trace.push(e);
+        if !e.is_finite() || e > HEALTH_ENERGY_CEILING {
+            return Err(AttemptError::Health(format!(
+                "wavefield energy {e:e} at step {i} is non-finite or above {HEALTH_ENERGY_CEILING:e}"
+            )));
+        }
     }
     let forward_s = t_fwd.secs();
     let max_trace = traces
         .iter()
         .flat_map(|t| t.iter().map(|v| v.abs()))
         .fold(0.0f32, f32::max);
-    FwdTrace { traces, energy_trace, max_trace, forward_s }
+    Ok(FwdTrace { traces, energy_trace, max_trace, forward_s })
 }
 
 fn adjoint_pass(
@@ -1452,6 +1890,30 @@ mod tests {
     }
 
     #[test]
+    fn push_deadline_times_out_on_a_wedged_consumer() {
+        let q: ShardedQueue<usize> = ShardedQueue::new(1, 1);
+        q.push(0, 0); // lane full; nobody will ever pop
+        let t = Instant::now();
+        match q.push_deadline(0, 1, Duration::from_millis(30)) {
+            Err(SubmitError::Timeout(item)) => assert_eq!(item, 1),
+            other => panic!("expected a timeout, got {other:?}"),
+        }
+        assert!(t.elapsed() >= Duration::from_millis(30), "returned before the deadline");
+        // the refused item was never enqueued...
+        assert_eq!(q.len(0), 1);
+        // ...and with room the deadline path enqueues normally
+        assert_eq!(q.pop(0).unwrap().item, 0);
+        q.push_deadline(0, 2, Duration::from_millis(30)).unwrap();
+        assert_eq!(q.pop(0).unwrap().item, 2);
+        // a closed queue surfaces as an error here, not the push panic
+        q.close();
+        assert!(matches!(
+            q.push_deadline(0, 3, Duration::from_millis(5)),
+            Err(SubmitError::Closed(3))
+        ));
+    }
+
+    #[test]
     fn empty_shard_steals_from_a_neighbours_tail() {
         let q: ShardedQueue<usize> = ShardedQueue::new(2, 8);
         q.push(0, 10);
@@ -1506,10 +1968,11 @@ mod tests {
                 ))),
             };
             let mut full = FullStateStore::new();
-            let fwd_full = forward_pass(&cfg, &media, &mut full);
+            let site = FaultSite::none();
+            let fwd_full = forward_pass(&cfg, &media, &mut full, &site).unwrap();
             // 6 keyframe-spaced snaps → 1 keyframe (4 grids) vs 6 grids
             let mut sparse = BoundarySavingStore::new(6);
-            let fwd_sparse = forward_pass(&cfg, &media, &mut sparse);
+            let fwd_sparse = forward_pass(&cfg, &media, &mut sparse, &site).unwrap();
             assert_eq!(fwd_full.traces, fwd_sparse.traces, "{medium:?}: forward diverged");
             assert!(
                 sparse.retained_words() < full.retained_words(),

@@ -1,0 +1,260 @@
+//! Chaos contract suite (the PR 10 tentpole's acceptance tests): the
+//! layered resilience subsystem (`rtm::resilience` + the shot service)
+//! must **contain** every injected fault class — kernel panic, halo
+//! transport corruption, checkpoint-store failure, worker stall — and
+//! still produce a final image **bitwise-identical** to a fault-free
+//! run; a journaled survey killed mid-flight must resume without
+//! re-running completed shots and image bitwise-identically; a worker
+//! panic must fail only its own shot, never the process.
+//!
+//! Shots are tiny (20³ × a dozen steps) — the contracts under test are
+//! containment and determinism, not throughput.  The CI chaos lane
+//! additionally pins one env-selected (fault plan × health policy)
+//! cell per run via `MMSTENCIL_FAULTS` / `MMSTENCIL_HEALTH`.
+
+use mmstencil::grid::halo::HaloCodec;
+use mmstencil::rtm::driver::{Medium, RtmConfig};
+use mmstencil::rtm::resilience::{FaultPlan, HealthPolicy};
+use mmstencil::rtm::service::{ShotJob, ShotStatus, SurveyConfig, SurveyRunner};
+use mmstencil::simulator::Platform;
+use mmstencil::stencil::EngineKind;
+
+fn base_cfg() -> RtmConfig {
+    let mut cfg = RtmConfig::small(Medium::Vti);
+    cfg.nz = 20;
+    cfg.nx = 20;
+    cfg.ny = 20;
+    cfg.steps = 12;
+    cfg.threads = 2;
+    cfg.engine = EngineKind::Simd;
+    // a lossy wire codec, so the transport-corruption fault layer has
+    // real bytes to flip (the f32 wire is bitwise and injects nothing)
+    cfg.halo_codec = HaloCodec::Bf16;
+    cfg
+}
+
+/// A line of shots sweeping the interior x-axis, every shot carrying
+/// the same fault plan (`FaultPlan::default()` = fault-free).
+fn shot_line(cfg: &RtmConfig, shots: usize, plan: FaultPlan) -> Vec<ShotJob> {
+    let (sz, _, sy) = cfg.src_pos();
+    let lo = cfg.sponge_width + 1;
+    let hi = (cfg.nx - cfg.sponge_width).saturating_sub(2).max(lo);
+    (0..shots)
+        .map(|s| {
+            let sx = lo + (hi - lo) * s / shots.saturating_sub(1).max(1);
+            ShotJob::builder(cfg.clone()).src(sz, sx, sy).fault_plan(plan).build().unwrap()
+        })
+        .collect()
+}
+
+fn run(cfg: &RtmConfig, shots: usize, plan: FaultPlan, scfg: SurveyConfig) -> mmstencil::rtm::service::SurveyReport {
+    let mut runner = SurveyRunner::new(scfg, &Platform::paper()).unwrap();
+    runner.run(shot_line(cfg, shots, plan))
+}
+
+/// Acceptance: a seeded plan landing one retryable fault in **each** of
+/// the four layers across an 8-shot survey recovers every shot, and the
+/// final image is bitwise-identical to a fault-free run — twice, to pin
+/// that injection decisions reproduce bit-for-bit.
+#[test]
+fn one_retryable_fault_per_layer_recovers_bitwise() {
+    let cfg = base_cfg();
+    let plan =
+        FaultPlan::parse("seed=7 kernel=1@shot1 transport=1@shot2 checkpoint=1@shot3 stall=1@shot4")
+            .unwrap();
+    let clean = run(&cfg, 8, FaultPlan::default(), SurveyConfig::default());
+    assert_eq!(clean.completed(), 8);
+    assert_eq!(clean.faults_injected(), 0);
+    let oracle = clean.image.unwrap();
+
+    let mut previous: Option<Vec<f32>> = None;
+    for _ in 0..2 {
+        let rep = run(&cfg, 8, plan, SurveyConfig::default());
+        assert_eq!(
+            (rep.completed(), rep.failed()),
+            (8, 0),
+            "every injected fault must be contained and retried"
+        );
+        // kernel panic, wire corruption (caught by the health monitor),
+        // and checkpoint failure each spend exactly one retry; the
+        // stall only delays its attempt
+        for (id, attempts) in [(1usize, 2usize), (2, 2), (3, 2), (4, 1), (0, 1)] {
+            assert_eq!(rep.records[id].attempts, attempts, "shot {id}");
+        }
+        assert_eq!(rep.retries(), 3);
+        assert_eq!(rep.faults_injected(), 4, "one injection per layer");
+        let image = rep.image.unwrap();
+        assert_eq!(image.img.data, oracle.img.data, "chaos survey vs fault-free image");
+        assert_eq!(image.illum.data, oracle.illum.data);
+        assert_eq!(image.correlations, oracle.correlations);
+        if let Some(prev) = &previous {
+            assert_eq!(&image.img.data, prev, "fault injection must reproduce bit-for-bit");
+        }
+        previous = Some(image.img.data);
+    }
+}
+
+/// A worker panic (the kernel fault layer fires `panic!` inside the
+/// forward pass) is contained to its own shot: with no retry budget the
+/// shot fails, every other shot completes, and the process — this test
+/// runner — survives to assert it.
+#[test]
+fn a_worker_panic_fails_only_its_shot() {
+    let cfg = base_cfg();
+    let mut scfg = SurveyConfig::default();
+    scfg.max_retries = 0;
+    let rep = run(&cfg, 5, FaultPlan::parse("kernel=1@shot2").unwrap(), scfg);
+    assert_eq!((rep.completed(), rep.failed()), (4, 1));
+    let r = &rep.records[2];
+    assert_eq!(r.attempts, 1);
+    match &r.status {
+        ShotStatus::Failed(e) => {
+            assert!(e.contains("injected fault (kernel)"), "panic payload lost: {e}")
+        }
+        s => panic!("shot 2 should have failed, got {s:?}"),
+    }
+    for id in [0usize, 1, 3, 4] {
+        assert_eq!(rep.records[id].status, ShotStatus::Completed, "shot {id}");
+    }
+    assert!(rep.image.is_some(), "survivors must still accumulate an image");
+}
+
+/// Kill/resume: a journaled survey whose second half fails (simulating
+/// a crash after four shots landed) resumes from the journal — the
+/// completed shots are adopted bitwise with their attempt counts
+/// untouched, only the missing shots re-run, and the final image is
+/// bitwise-identical to an uninterrupted fault-free survey.
+#[test]
+fn killed_survey_resumes_bitwise_without_rerunning_completed_shots() {
+    let cfg = base_cfg();
+    let path = std::env::temp_dir()
+        .join(format!("mmstencil_resilience_resume_{}.journal", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+
+    // uninterrupted oracle
+    let clean = run(&cfg, 8, FaultPlan::default(), SurveyConfig::default());
+    let oracle = clean.image.as_ref().unwrap();
+
+    // phase A: shots 4..7 carry an inexhaustible kernel fault, so only
+    // the first half lands in the journal as completed
+    let jobs: Vec<ShotJob> = shot_line(&cfg, 8, FaultPlan::default())
+        .into_iter()
+        .take(4)
+        .chain(
+            shot_line(&cfg, 8, FaultPlan::parse("kernel=9").unwrap()).into_iter().skip(4),
+        )
+        .collect();
+    let mut runner = SurveyRunner::new(SurveyConfig::default(), &Platform::paper()).unwrap();
+    let partial = runner.run_journaled(jobs, &path).unwrap();
+    assert_eq!((partial.completed(), partial.failed()), (4, 4));
+    let first_half_attempts: Vec<usize> =
+        partial.records[..4].iter().map(|r| r.attempts).collect();
+
+    // phase B: a fresh runner resumes the journal with healthy jobs
+    // (the "hardware fault" cleared with the restart)
+    let mut runner = SurveyRunner::new(SurveyConfig::default(), &Platform::paper()).unwrap();
+    let resumed = runner.resume(shot_line(&cfg, 8, FaultPlan::default()), &path).unwrap();
+    assert_eq!((resumed.completed(), resumed.failed()), (8, 0));
+    assert_eq!(resumed.resumed_shots(), 4);
+    for (id, r) in resumed.records.iter().enumerate() {
+        if id < 4 {
+            assert!(r.resumed, "journaled shot {id} must be adopted, not re-run");
+            assert_eq!(r.attempts, first_half_attempts[id], "shot {id} attempts changed");
+            assert!(r.report.is_none(), "adopted shots carry no fresh perf report");
+        } else {
+            assert!(!r.resumed, "failed shot {id} must re-run");
+        }
+    }
+    let image = resumed.image.unwrap();
+    assert_eq!(image.img.data, oracle.img.data, "resumed survey vs uninterrupted image");
+    assert_eq!(image.illum.data, oracle.illum.data);
+    assert_eq!(image.correlations, oracle.correlations);
+
+    // a mismatched shot count is a refused resume, not silent corruption
+    let mut runner = SurveyRunner::new(SurveyConfig::default(), &Platform::paper()).unwrap();
+    let err = runner.resume(shot_line(&cfg, 5, FaultPlan::default()), &path).unwrap_err();
+    assert!(err.to_string().contains("records 8 shots"), "{err}");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The wavefield health monitor catches wire corruption (NaN smuggled
+/// through a lossy halo exchange) and routes it per policy: `abort_shot`
+/// fails the shot terminally, `retry` recovers bitwise, and
+/// `fallback_f32_codec` recovers on a lossless re-attempt.
+#[test]
+fn health_policies_route_wire_corruption_as_documented() {
+    let cfg = base_cfg();
+    let plan = FaultPlan::parse("transport=1@shot1").unwrap();
+    let clean = run(&cfg, 3, FaultPlan::default(), SurveyConfig::default());
+    let oracle = clean.image.unwrap();
+
+    for policy in [HealthPolicy::AbortShot, HealthPolicy::Retry, HealthPolicy::FallbackF32Codec] {
+        let mut scfg = SurveyConfig::default();
+        scfg.health = policy;
+        let rep = run(&cfg, 3, plan, scfg);
+        let r = &rep.records[1];
+        match policy {
+            HealthPolicy::AbortShot => {
+                assert_eq!((rep.completed(), rep.failed()), (2, 1));
+                assert_eq!(r.attempts, 1, "abort_shot must not spend retries");
+                match &r.status {
+                    ShotStatus::Failed(e) => {
+                        assert!(e.contains("health policy abort_shot"), "{e}");
+                        assert!(e.contains("wavefield energy"), "{e}");
+                    }
+                    s => panic!("expected abort, got {s:?}"),
+                }
+            }
+            HealthPolicy::Retry => {
+                assert_eq!((rep.completed(), rep.failed()), (3, 0));
+                assert_eq!(r.attempts, 2);
+                let image = rep.image.unwrap();
+                assert_eq!(image.img.data, oracle.img.data, "retry must recover bitwise");
+            }
+            HealthPolicy::FallbackF32Codec => {
+                // the re-attempt runs on the lossless f32 wire, so the
+                // shot completes but is NOT bitwise the bf16 oracle —
+                // that trade is the policy's contract
+                assert_eq!((rep.completed(), rep.failed()), (3, 0));
+                assert_eq!(r.attempts, 2);
+                assert!(rep.image.is_some());
+            }
+        }
+    }
+}
+
+/// CI matrix cell: when the chaos lane pins a fault plan and health
+/// policy via the environment, drive them through a 4-shot survey and
+/// hold the policy-specific containment contract.  Without the env
+/// vars (a plain `cargo test`) this is a no-op.
+#[test]
+fn env_pinned_chaos_cell_is_contained() {
+    let Ok(spec) = std::env::var("MMSTENCIL_FAULTS") else { return };
+    let plan = FaultPlan::parse(&spec).expect("MMSTENCIL_FAULTS must parse");
+    let policy = HealthPolicy::parse(
+        &std::env::var("MMSTENCIL_HEALTH").unwrap_or_else(|_| "retry".into()),
+    )
+    .expect("MMSTENCIL_HEALTH must parse");
+
+    let cfg = base_cfg();
+    let shots = 4;
+    let mut scfg = SurveyConfig::default();
+    scfg.health = policy;
+    let rep = run(&cfg, shots, plan, scfg);
+    // containment: every shot reaches a terminal state (the survey
+    // never wedges) and the survivors image
+    assert_eq!(rep.records.len(), shots);
+    assert!(rep.completed() + rep.failed() == shots);
+    assert!(rep.completed() > 0, "the whole survey died under {spec:?}");
+    assert!(rep.image.is_some());
+    match policy {
+        // abort_shot may fail health-tripped shots; nothing else may fail
+        HealthPolicy::AbortShot => {}
+        _ => assert_eq!(
+            rep.failed(),
+            0,
+            "retryable single faults must recover under {policy:?}: {:?}",
+            rep.records.iter().map(|r| &r.status).collect::<Vec<_>>()
+        ),
+    }
+}

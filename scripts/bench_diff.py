@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Diff two BENCH_engines.json files (schema mmstencil.bench_engines.v7).
+"""Diff two BENCH_engines.json files (schema mmstencil.bench_engines.v8).
 
 Rows are matched by identity key — sweep rows on (engine, pattern,
 radius, n, time_block, tile, wf, halo_codec), RTM rows on (engine,
@@ -15,7 +15,11 @@ deliberately not part of any identity key — v5 rows lack the v6
 so pre-wavefront baselines keep matching their untiled successors, and
 v6 rows lack the v7 `halo_codec` wire-codec field, which defaults to
 "f32" (the lossless classic transport; `transport_bytes` is a
-measurement, not identity).  `threads` is deliberately NOT
+measurement, not identity), and v7 survey rows lack the v8
+`faults_injected`/`resumed_shots` chaos accounting, which — like
+`retries` and `failed` — is a measurement, not identity, so the
+identity keys are unchanged and v7 baselines keep matching their v8
+successors.  `threads` is deliberately NOT
 part of the key: the probe derives it from the host's core count, so
 keying on it would silently stop matching rows whenever the runner
 shape changes (engine labels already distinguish serial from parallel
